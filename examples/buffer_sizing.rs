@@ -1,0 +1,74 @@
+//! Conditional-Buffer sizing study (paper Fig. 7): sweep the buffer
+//! depth of a chosen design and watch throughput, stalls, and the
+//! deadlock boundary; then sweep the q mismatch to see how the
+//! robustness margin earns its BRAM (Table II's overhead).
+//!
+//!     cargo run --release --example buffer_sizing
+
+use atheena::coordinator::toolflow::{run_toolflow, synthetic_hard_flags, ToolflowOptions};
+use atheena::ir::Network;
+use atheena::resources::Board;
+use atheena::sdf::buffering;
+use atheena::sim::{simulate_ee, SimMetrics};
+
+fn main() -> anyhow::Result<()> {
+    let net = Network::from_file(std::path::Path::new(
+        "artifacts/networks/blenet.json",
+    ))?;
+    let opts = ToolflowOptions::new(Board::zc706());
+    let result = run_toolflow(&net, &opts, None)?;
+    let best = result
+        .best_design()
+        .ok_or_else(|| anyhow::anyhow!("no design"))?;
+
+    let min_depth = buffering::min_depth_samples(&best.mapping);
+    println!(
+        "decision delay {} cycles / stage-1 II {} cycles -> min depth {} samples (sized: {})",
+        buffering::decision_delay_cycles(&best.mapping),
+        best.timing.s1_ii,
+        min_depth,
+        best.cond_buffer_depth
+    );
+
+    // ---- depth sweep at q = p ----
+    let p = result.p;
+    let flags = synthetic_hard_flags(p, 1024, 0xB1F);
+    println!("\ndepth sweep at q = p = {p:.2} (batch 1024):");
+    println!("{:>7} {:>16} {:>12} {:>9}", "depth", "thr(samples/s)", "stalls", "status");
+    let mut timing = best.timing;
+    for depth in [0, 1, 2, 4, 8, min_depth, min_depth * 2, min_depth * 4] {
+        timing.cond_buffer_depth = depth;
+        let m = SimMetrics::from_result(&simulate_ee(&timing, &opts.sim, &flags), opts.sim.clock_hz);
+        println!(
+            "{:>7} {:>16.0} {:>12} {:>9}",
+            depth,
+            m.throughput_sps,
+            m.stall_cycles,
+            if m.deadlock.is_some() { "DEADLOCK" } else { "ok" }
+        );
+    }
+
+    // ---- robustness: margin vs q-burst tolerance ----
+    println!("\nq-mismatch tolerance by margin (throughput relative to q=p):");
+    println!("{:>8} {:>11} {:>11} {:>11}", "margin", "q=p", "q=p+10%", "q=p+20%");
+    for margin in [0usize, 8, 24, 48, 96] {
+        timing.cond_buffer_depth = min_depth + margin;
+        let base = SimMetrics::from_result(
+            &simulate_ee(&timing, &opts.sim, &flags),
+            opts.sim.clock_hz,
+        )
+        .throughput_sps;
+        let mut row = format!("{margin:>8} {base:>11.0}");
+        for dq in [0.10, 0.20] {
+            let f = synthetic_hard_flags((p + dq).min(1.0), 1024, 0xB1F2);
+            let m = SimMetrics::from_result(
+                &simulate_ee(&timing, &opts.sim, &f),
+                opts.sim.clock_hz,
+            );
+            row += &format!(" {:>11.0}", m.throughput_sps);
+        }
+        println!("{row}");
+    }
+    println!("\nbuffer_sizing OK");
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! End-to-end validation driver (DESIGN.md §6): proves all three layers
+//! compose on a real workload.
+//!
+//!     make artifacts && cargo run --release --example ee_serving
+//!
+//! 1. Loads the trained B-LeNet artifacts (L2 JAX graphs with the L1
+//!    Pallas exit-decision kernel baked in) through the PJRT runtime.
+//! 2. Runs the toolflow to pick the board design (L3).
+//! 3. Batch-infers 1024 real test samples: PJRT numerics decide each
+//!    sample's exit on-"chip"; the dataflow simulator replays the same
+//!    decisions for board timing — accuracy and throughput from one run.
+//! 4. Spins up the threaded serving front end (dynamic batcher + two-
+//!    stage router) and pushes the same samples through it.
+//!
+//! Output is recorded in EXPERIMENTS.md §End-to-end.
+
+use atheena::coordinator::batch::BatchHost;
+use atheena::coordinator::toolflow::{run_toolflow, ToolflowOptions};
+use atheena::coordinator::{Server, ServerConfig};
+use atheena::data::TestSet;
+use atheena::resources::Board;
+use atheena::runtime::ArtifactStore;
+use atheena::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::Path::new("artifacts");
+    let store = ArtifactStore::open(artifacts)?;
+    let net = store.network("blenet")?.clone();
+    let ts = TestSet::load(artifacts, "blenet")?;
+    println!(
+        "loaded '{}': {} test samples, exported hard fraction {:.3}",
+        net.name,
+        ts.n,
+        ts.hard_fraction()
+    );
+
+    // ---- toolflow: pick the design ----
+    let opts = ToolflowOptions::new(Board::zc706());
+    let result = run_toolflow(&net, &opts, None)?;
+    let best = result
+        .best_design()
+        .ok_or_else(|| anyhow::anyhow!("no design"))?;
+    println!(
+        "design: {:.0}% budget, buffer depth {}, predicted {:.0} samples/s at p",
+        best.budget_fraction * 100.0,
+        best.cond_buffer_depth,
+        best.combined.throughput_at_p
+    );
+
+    // ---- batched inference: PJRT numerics + simulated board timing ----
+    let s1 = store.stage1("blenet")?;
+    let s2 = store.stage2("blenet")?;
+    let host = BatchHost {
+        stage1: &s1,
+        stage2: &s2,
+        timing: best.timing,
+        sim: opts.sim.clone(),
+    };
+    let batch = ts.batch_with_q(result.p, 1024, 0xE2E);
+    let rep = host.run(&ts, &batch)?;
+    println!("\nbatched inference (1024 samples, q = p = {:.2}):", result.p);
+    println!("  accuracy           = {:.4}", rep.accuracy);
+    println!("  measured q         = {:.4}", rep.measured_q);
+    println!("  decision agreement = {:.4}", rep.flag_agreement);
+    println!(
+        "  PJRT numerics      = {:.0} samples/s host-side",
+        rep.samples as f64 / rep.host_seconds
+    );
+    println!(
+        "  simulated board    = {:.0} samples/s ({} stall cycles, {} ooo completions)",
+        rep.board.throughput_sps, rep.board.stall_cycles, rep.board.out_of_order
+    );
+    println!(
+        "  latency early/hard = {:.0} / {:.0} cycles",
+        rep.board.latency_mean_early, rep.board.latency_mean_hard
+    );
+    anyhow::ensure!(rep.accuracy > 0.8, "accuracy collapsed");
+    anyhow::ensure!(rep.flag_agreement > 0.99, "kernel/flag mismatch");
+
+    // ---- serving front end ----
+    println!("\nserving 512 requests through the threaded router…");
+    let server = Server::start(ServerConfig::new(artifacts, "blenet"))?;
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::new(0xE2E2);
+    let mut pending = Vec::new();
+    let mut labels = Vec::new();
+    for _ in 0..512 {
+        let idx = rng.below(ts.n);
+        labels.push(ts.labels[idx] as usize);
+        pending.push(server.submit(ts.image(idx).to_vec()));
+    }
+    let mut correct = 0;
+    let mut early = 0;
+    for (rx, label) in pending.into_iter().zip(labels) {
+        let r = rx.recv()?;
+        if r.pred == label {
+            correct += 1;
+        }
+        if r.exited_early {
+            early += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "  {:.0} req/s, accuracy {:.4}, early-exit rate {:.3}, {} batches",
+        512.0 / wall,
+        correct as f64 / 512.0,
+        early as f64 / 512.0,
+        server
+            .stats
+            .batches
+            .load(std::sync::atomic::Ordering::Relaxed)
+    );
+    server.shutdown();
+    anyhow::ensure!(correct as f64 / 512.0 > 0.8, "serving accuracy collapsed");
+
+    println!("\nee_serving end-to-end OK");
+    Ok(())
+}

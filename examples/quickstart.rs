@@ -1,0 +1,77 @@
+//! Quickstart: run the complete ATHEENA toolflow on the exported B-LeNet
+//! and print the chosen design.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This exercises: network JSON parsing -> CDFG lowering -> per-stage
+//! simulated-annealing DSE -> TAP combination (Eq. 1) -> Conditional
+//! Buffer sizing (Fig. 7) -> design manifest + stitch checks -> simulated
+//! board measurement at q = 20/25/30%.
+
+use atheena::coordinator::toolflow::{run_toolflow, ToolflowOptions};
+use atheena::ir::Network;
+use atheena::resources::Board;
+
+fn main() -> anyhow::Result<()> {
+    let net = Network::from_file(std::path::Path::new(
+        "artifacts/networks/blenet.json",
+    ))?;
+    println!(
+        "network '{}': input {}, {} classes, profiled p = {:.3}, C_thr = {:.4}",
+        net.name, net.input_shape, net.classes, net.p_profile, net.c_thr
+    );
+    println!(
+        "  deployed accuracy (build-time profile): {:.3} (baseline {:.3})",
+        net.accuracy.deployed_acc, net.baseline_acc
+    );
+
+    let board = Board::zc706();
+    let opts = ToolflowOptions::new(board.clone());
+    let result = run_toolflow(&net, &opts, None)?;
+
+    println!(
+        "\nTAP curves: baseline {} pts / stage1 {} pts / stage2 {} pts",
+        result.baseline_curve.points.len(),
+        result.stage1_curve.points.len(),
+        result.stage2_curve.points.len()
+    );
+
+    let best = result
+        .best_design()
+        .ok_or_else(|| anyhow::anyhow!("no feasible design"))?;
+    println!("\nchosen ATHEENA design (budget {:.0}% of {}):", best.budget_fraction * 100.0, board.name);
+    println!("  resources: {}", best.total_resources);
+    println!(
+        "  stage-1 II {} cyc / stage-2 II {} cyc / buffer depth {}",
+        best.timing.s1_ii, best.timing.s2_ii, best.cond_buffer_depth
+    );
+    println!(
+        "  predicted {:.0} samples/s at p = {:.2}",
+        best.combined.throughput_at_p, result.p
+    );
+    for (q, m) in &best.measured {
+        println!(
+            "  simulated board @ q={:.0}%: {:.0} samples/s (stalls {}, peak buffer {})",
+            q * 100.0,
+            m.throughput_sps,
+            m.stall_cycles,
+            m.peak_buffer_occupancy
+        );
+    }
+
+    let base = result
+        .best_baseline()
+        .ok_or_else(|| anyhow::anyhow!("no baseline"))?;
+    println!(
+        "\nbaseline best: {:.0} samples/s measured -> ATHEENA gain {:.2}x",
+        base.measured.throughput_sps,
+        best.measured
+            .iter()
+            .min_by(|(a, _), (b, _)| (a - result.p).abs().total_cmp(&(b - result.p).abs()))
+            .map(|(_, m)| m.throughput_sps)
+            .unwrap_or(0.0)
+            / base.measured.throughput_sps
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}

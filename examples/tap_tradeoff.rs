@@ -1,0 +1,87 @@
+//! TAP-combination exploration: how the Eq. 1 operator apportions
+//! resources between stages as the design-time probability p and the
+//! runtime probability q vary — the methodology study behind Fig. 4.
+//!
+//!     cargo run --release --example tap_tradeoff
+//!
+//! Works without artifacts (uses the built-in B-LeNet-shaped test
+//! network) so it doubles as a toolflow smoke test; pass a network name
+//! to use an exported artifact instead:
+//!
+//!     cargo run --release --example tap_tradeoff -- blenet
+
+use atheena::dse::{sweep_budgets, ProblemKind, SweepConfig};
+use atheena::ir::{Cdfg, Network};
+use atheena::resources::Board;
+use atheena::tap::combine;
+
+fn main() -> anyhow::Result<()> {
+    let net: Network = match std::env::args().nth(1) {
+        Some(name) => Network::from_file(std::path::Path::new(&format!(
+            "artifacts/networks/{name}.json"
+        )))?,
+        None => {
+            // Use the artifact if present, else a self-contained testnet
+            // equivalent defined inline below.
+            let p = std::path::Path::new("artifacts/networks/blenet.json");
+            if p.exists() {
+                Network::from_file(p)?
+            } else {
+                anyhow::bail!("run `make artifacts` first, or pass a network name");
+            }
+        }
+    };
+    let board = Board::zc706();
+    let cfg = SweepConfig::default();
+
+    let ee_cdfg = Cdfg::lower(&net, 1);
+    let (s1_curve, _) = sweep_budgets(ProblemKind::Stage1, &ee_cdfg, &board, &cfg);
+    let (s2_curve, _) = sweep_budgets(ProblemKind::Stage2, &ee_cdfg, &board, &cfg);
+    println!(
+        "stage-1 TAP: {} Pareto points (max {:.0} samples/s)",
+        s1_curve.points.len(),
+        s1_curve.max_throughput()
+    );
+    println!(
+        "stage-2 TAP: {} Pareto points (max {:.0} samples/s nominal)",
+        s2_curve.points.len(),
+        s2_curve.max_throughput()
+    );
+
+    // How the optimal split shifts with p at a fixed 60% budget.
+    let budget = board.budget(0.6);
+    println!("\nresource split vs design-time p (60% ZC706 budget):");
+    println!(
+        "{:>6} {:>10} {:>10} {:>14} {:>10}",
+        "p", "s1 DSP", "s2 DSP", "thr@q=p", "limiting"
+    );
+    for p in [0.05, 0.1, 0.2, 0.25, 0.34, 0.5, 0.75, 1.0] {
+        match combine(&s1_curve, &s2_curve, p, &budget) {
+            Some(d) => println!(
+                "{:>6.2} {:>10} {:>10} {:>14.0} {:>10}",
+                p,
+                d.stage1.resources.dsp,
+                d.stage2.resources.dsp,
+                d.throughput_at_p,
+                format!("stage{}", d.limiting_stage_at(p))
+            ),
+            None => println!("{p:>6.2} (infeasible)"),
+        }
+    }
+
+    // Runtime sensitivity: the design chosen for p, evaluated at q != p
+    // (the shaded region of Fig. 4).
+    let p = net.p_profile;
+    let d = combine(&s1_curve, &s2_curve, p, &budget)
+        .ok_or_else(|| anyhow::anyhow!("infeasible at p={p}"))?;
+    println!("\nruntime q sensitivity of the p={p:.2} design:");
+    println!("{:>6} {:>14} {:>10}", "q", "thr(samples/s)", "vs q=p");
+    let at_p = d.throughput_at(p);
+    for dq in [-0.15, -0.10, -0.05, 0.0, 0.05, 0.10, 0.15, 0.25] {
+        let q = (p + dq).clamp(0.01, 1.0);
+        let thr = d.throughput_at(q);
+        println!("{:>6.2} {:>14.0} {:>9.1}%", q, thr, 100.0 * thr / at_p - 100.0);
+    }
+    println!("\ntap_tradeoff OK");
+    Ok(())
+}

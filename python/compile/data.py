@@ -1,0 +1,134 @@
+"""Synthetic structured datasets with controllable per-sample difficulty.
+
+The paper's experiments run on MNIST (B-LeNet, Triple-Wins) and CIFAR-10
+(B-AlexNet). What the Early-Exit methodology actually needs from a dataset
+is (a) a learnable classification task and (b) *varying per-sample
+difficulty*, so that a confidence threshold separates "easy" samples (exit
+at stage 1) from "hard" ones (continue to stage 2). We synthesize exactly
+that — see DESIGN.md §2 for the substitution argument.
+
+Construction
+------------
+Each class c gets a fixed, seeded, smoothed random template T_c. A sample
+with label y and difficulty d ∈ [0, 1] is
+
+    x = (1 - 0.5 d) * T_y + 0.5 d * T_{y'} + (0.15 + 1.1 d) * noise
+
+i.e. harder samples are blended toward a distractor class and carry more
+noise. Difficulty is drawn uniformly, giving a smooth spectrum — the exit
+threshold C_thr then *selects* the easy fraction, exactly as in the paper
+(§III-B.1: the profiler measures p for a trained network + threshold).
+
+Everything is deterministic given the seed; the test split is exported to
+``artifacts/data/`` for the Rust side.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Dataset:
+    """A fully-materialized split: images (N,C,H,W) f32, labels (N,) i32."""
+
+    images: np.ndarray
+    labels: np.ndarray
+    difficulty: np.ndarray  # (N,) f32 in [0,1], generator-side ground truth
+
+    def __len__(self) -> int:
+        return self.images.shape[0]
+
+
+def _smooth(field: np.ndarray, passes: int = 3) -> np.ndarray:
+    """Cheap separable box blur — turns white noise into blobby templates."""
+    for _ in range(passes):
+        field = (
+            field
+            + np.roll(field, 1, -1)
+            + np.roll(field, -1, -1)
+            + np.roll(field, 1, -2)
+            + np.roll(field, -1, -2)
+        ) / 5.0
+    return field
+
+
+def class_templates(
+    seed: int, classes: int, shape: tuple[int, int, int]
+) -> np.ndarray:
+    """(classes, C, H, W) fixed smoothed-noise templates, unit-normalized."""
+    rng = np.random.default_rng(seed)
+    t = rng.standard_normal((classes, *shape)).astype(np.float32)
+    t = _smooth(t)
+    t /= np.linalg.norm(t.reshape(classes, -1), axis=1).reshape(
+        classes, 1, 1, 1
+    )
+    t *= np.sqrt(np.prod(shape))  # unit RMS per pixel
+    return t.astype(np.float32)
+
+
+def make_split(
+    seed: int,
+    n: int,
+    classes: int,
+    shape: tuple[int, int, int],
+    template_seed: int | None = None,
+) -> Dataset:
+    """Generate one split of n samples (uniform labels, uniform difficulty)."""
+    templates = class_templates(
+        template_seed if template_seed is not None else 1234, classes, shape
+    )
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, classes, size=n).astype(np.int32)
+    distract = (labels + rng.integers(1, classes, size=n)) % classes
+    d = rng.uniform(0.0, 1.0, size=n).astype(np.float32)
+
+    base = templates[labels]
+    other = templates[distract]
+    noise = rng.standard_normal((n, *shape)).astype(np.float32)
+    a = (1.0 - 0.5 * d).reshape(n, 1, 1, 1)
+    mix = (0.5 * d).reshape(n, 1, 1, 1)
+    sig = (0.15 + 1.1 * d).reshape(n, 1, 1, 1)
+    images = a * base + mix * other + sig * noise
+    return Dataset(images.astype(np.float32), labels, d)
+
+
+def batches(ds: Dataset, batch: int, seed: int):
+    """Yield (images, labels) jnp minibatches, reshuffled each epoch."""
+    rng = np.random.default_rng(seed)
+    while True:
+        order = rng.permutation(len(ds))
+        for i in range(0, len(ds) - batch + 1, batch):
+            idx = order[i : i + batch]
+            yield jnp.asarray(ds.images[idx]), jnp.asarray(ds.labels[idx])
+
+
+def resample_for_q(
+    images: np.ndarray,
+    labels: np.ndarray,
+    hard_flags: np.ndarray,
+    q: float,
+    batch: int,
+    seed: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Build a batch with an *exact* hard-sample fraction q (paper §IV-A).
+
+    The paper's board experiments sample test batches with q = 20/25/30%
+    hard samples "distributed randomly within the batch of 1024". Same
+    here: we draw round(q*batch) hard and the rest easy, then shuffle.
+    """
+    rng = np.random.default_rng(seed)
+    hard_idx = np.flatnonzero(hard_flags != 0)
+    easy_idx = np.flatnonzero(hard_flags == 0)
+    n_hard = int(round(q * batch))
+    pick_h = rng.choice(hard_idx, size=n_hard, replace=len(hard_idx) < n_hard)
+    pick_e = rng.choice(
+        easy_idx, size=batch - n_hard, replace=len(easy_idx) < batch - n_hard
+    )
+    idx = np.concatenate([pick_h, pick_e])
+    rng.shuffle(idx)
+    return images[idx], labels[idx], hard_flags[idx]

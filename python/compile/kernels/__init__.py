@@ -1,0 +1,18 @@
+"""L1 Pallas kernels (interpret mode) + pure-jnp references.
+
+Public surface:
+  conv2d, linear, maxpool2, exit_decision  — Pallas kernels
+  ref                                      — reference oracles module
+"""
+
+from . import ref
+from .conv import conv2d
+from .exit_decision import exit_decision
+from .linear import linear
+from .pool import maxpool2
+
+__all__ = ["conv2d", "linear", "maxpool2", "exit_decision", "ref"]
+
+from .fused import conv_relu_pool  # noqa: E402
+
+__all__.append("conv_relu_pool")

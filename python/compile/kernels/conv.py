@@ -1,0 +1,89 @@
+"""Pallas direct-convolution kernel (L1 hot path).
+
+The paper's convolution hardware is a streaming pipeline: a sliding-window
+line buffer feeds ``coarse_in x coarse_out`` parallel dot-product units,
+each unrolled ``fine``-way over the K*K taps (fpgaConvNet folding). The TPU
+analogue implemented here:
+
+* grid over output-channel tiles  == coarse-grain (output) folding,
+* the K*K tap loop is a static python loop over shifted VMEM slices
+  (fully unrolled into vector ops)  == fine-grain folding,
+* the whole (padded) input map is staged once into VMEM and re-read for
+  every output tile == the line-buffer HBM->VMEM schedule, expressed with
+  a BlockSpec instead of BRAM line buffers.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel lowers to plain HLO (see DESIGN.md
+§Hardware-Adaptation). Real-TPU VMEM/MXU estimates live in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output channels computed per grid step. 8 keeps the per-step VMEM block
+# (tile * H * W * 4B) comfortably under the ~16 MiB VMEM budget for every
+# network in this repo while still giving the vector unit wide rows.
+COUT_TILE = 8
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, k: int, h_out: int, w_out: int):
+    """One grid step: compute a COUT_TILE-channel slab of the output map.
+
+    x_ref: (C_in, H, W) padded input, fully VMEM-resident.
+    w_ref: (COUT_TILE, C_in, K, K) weight tile for this grid step.
+    b_ref: (COUT_TILE,) bias tile.
+    o_ref: (COUT_TILE, H_out, W_out) output tile.
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = jnp.zeros(o_ref.shape, dtype=jnp.float32)
+    # Fine folding: unrolled K*K tap loop over shifted slices. Each tap is a
+    # (tile, C_in) x (C_in, H_out*W_out) contraction -> MXU-shaped matmul.
+    for kh in range(k):
+        for kw in range(w.shape[-1]):
+            patch = x[:, kh : kh + h_out, kw : kw + w_out]  # (C_in, Ho, Wo)
+            tap = w[:, :, kh, kw]  # (tile, C_in)
+            acc = acc + jnp.einsum(
+                "oc,chw->ohw", tap, patch, preferred_element_type=jnp.float32
+            )
+    o_ref[...] = acc + b_ref[...][:, None, None]
+
+
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Valid stride-1 conv over (C_in, H, W) with OIHW weights via Pallas.
+
+    C_out is padded up to a COUT_TILE multiple internally; the caller sees
+    the exact (C_out, H-K+1, W-K+1) result.
+    """
+    c_out, c_in, k, k2 = w.shape
+    assert k == k2, "square kernels only"
+    _, h, w_in = x.shape
+    h_out, w_out = h - k + 1, w_in - k + 1
+    assert h_out > 0 and w_out > 0, "input smaller than kernel"
+
+    # Pad output channels to a tile multiple so the grid is uniform.
+    c_out_pad = -(-c_out // COUT_TILE) * COUT_TILE
+    if c_out_pad != c_out:
+        w = jnp.pad(w, ((0, c_out_pad - c_out), (0, 0), (0, 0), (0, 0)))
+        b = jnp.pad(b, (0, c_out_pad - c_out))
+
+    kern = functools.partial(_conv_kernel, k=k, h_out=h_out, w_out=w_out)
+    out = pl.pallas_call(
+        kern,
+        grid=(c_out_pad // COUT_TILE,),
+        in_specs=[
+            # Whole padded input resident per step (line-buffer analogue).
+            pl.BlockSpec((c_in, h, w_in), lambda i: (0, 0, 0)),
+            pl.BlockSpec((COUT_TILE, c_in, k, k), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((COUT_TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((COUT_TILE, h_out, w_out), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c_out_pad, h_out, w_out), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+    return out[:c_out]

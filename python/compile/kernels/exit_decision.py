@@ -1,0 +1,57 @@
+"""Pallas Exit (Softmax) Decision kernel — the paper's §III-C.1 layer.
+
+Hardware context: the paper implements the exit condition in
+single-precision floating point with parallel adder/comparison trees,
+*division-free* (Eq. 4):
+
+    max_i exp(x_i)  >  C_thr * sum_j exp(x_j)
+
+The TPU mapping keeps the entire class-activation vector in VMEM (it is
+tiny) and evaluates the shifted-stable form in one pass; the vector
+reductions are the adder/compare trees. Both sides of Eq. 4 scale by
+exp(-max(x)) so subtracting the max preserves the decision bit exactly
+while keeping exp() in range — this is the numerical contract the
+hypothesis suite checks against `ref.exit_decision_ref`.
+
+Outputs a float32 take/stay flag plus the softmax distribution (the
+distribution feeds the profiler's accuracy accounting; the flag drives the
+Conditional Buffer).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _exit_kernel(x_ref, thr_ref, take_ref, probs_ref):
+    x = x_ref[...]
+    m = jnp.max(x)
+    e = jnp.exp(x - m)  # shifted: max(e) == 1 exactly
+    s = jnp.sum(e)  # adder tree
+    # Division-free Eq. 4 comparison (compare tree), shifted form.
+    take_ref[...] = (jnp.max(e) > thr_ref[...] * s).astype(jnp.float32)
+    probs_ref[...] = e / s
+
+
+def exit_decision(x: jax.Array, c_thr: jax.Array):
+    """Evaluate Eq. (2)/(4) for a 1-D logits vector.
+
+    Args:
+      x: (C,) class activations from the early-exit classifier.
+      c_thr: scalar confidence threshold, shape (1,).
+
+    Returns:
+      (take, probs): (1,) float32 0/1 flag and (C,) softmax probabilities.
+    """
+    c = x.shape[0]
+    take, probs = pl.pallas_call(
+        _exit_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+        ),
+        interpret=True,
+    )(x, jnp.reshape(c_thr, (1,)))
+    return take, probs

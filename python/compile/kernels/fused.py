@@ -1,0 +1,96 @@
+"""Fused conv → ReLU → maxpool Pallas kernel (L1 schedule ablation).
+
+The backbone of every evaluated network repeats the conv/ReLU/pool
+triple (Fig. 8). In the streaming-hardware view these are three pipeline
+modules connected by streams; in the TPU view running them as separate
+kernels writes the full pre-activation map back to HBM twice. This
+kernel fuses the epilogue: each grid step computes a COUT_TILE-channel
+slab of conv output *in VMEM*, applies ReLU, and pools it before the
+write-back — the only HBM traffic is the input map, the weight tile, and
+the 4x-smaller pooled output.
+
+This is the "structural next step" recorded in EXPERIMENTS.md §Perf; the
+export path can switch the whole backbone to it (`model.run_stage(...,
+use_pallas='fused')`), and pytest asserts equivalence with the unfused
+composition over hypothesis-swept shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv import COUT_TILE
+
+
+def _fused_kernel(x_ref, w_ref, b_ref, o_ref, *, k: int, h_out: int, w_out: int):
+    """conv (valid, stride 1) + ReLU + 2x2/2 maxpool, one output tile."""
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = jnp.zeros((w.shape[0], h_out, w_out), dtype=jnp.float32)
+    for kh in range(k):
+        for kw in range(k):
+            patch = x[:, kh : kh + h_out, kw : kw + w_out]
+            tap = w[:, :, kh, kw]
+            acc = acc + jnp.einsum(
+                "oc,chw->ohw", tap, patch, preferred_element_type=jnp.float32
+            )
+    acc = jnp.maximum(acc + b_ref[...][:, None, None], 0.0)  # ReLU epilogue
+    ho, wo = h_out // 2, w_out // 2
+    acc = acc[:, : ho * 2, : wo * 2]
+    o_ref[...] = acc.reshape(acc.shape[0], ho, 2, wo, 2).max(axis=(2, 4))
+
+
+def conv_relu_pool(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Fused conv(valid, stride-1) + ReLU + maxpool2 over (C_in, H, W).
+
+    Returns ``(C_out, (H-K+1)//2, (W-K+1)//2)``.
+    """
+    c_out, c_in, k, k2 = w.shape
+    assert k == k2, "square kernels only"
+    _, h, w_in = x.shape
+    h_out, w_out = h - k + 1, w_in - k + 1
+    assert h_out >= 2 and w_out >= 2, "output too small to pool"
+
+    c_out_pad = -(-c_out // COUT_TILE) * COUT_TILE
+    if c_out_pad != c_out:
+        w = jnp.pad(w, ((0, c_out_pad - c_out), (0, 0), (0, 0), (0, 0)))
+        b = jnp.pad(b, (0, c_out_pad - c_out))
+
+    ho, wo = h_out // 2, w_out // 2
+    kern = functools.partial(_fused_kernel, k=k, h_out=h_out, w_out=w_out)
+    out = pl.pallas_call(
+        kern,
+        grid=(c_out_pad // COUT_TILE,),
+        in_specs=[
+            pl.BlockSpec((c_in, h, w_in), lambda i: (0, 0, 0)),
+            pl.BlockSpec((COUT_TILE, c_in, k, k), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((COUT_TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((COUT_TILE, ho, wo), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c_out_pad, ho, wo), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+    return out[:c_out]
+
+
+def hbm_traffic_words(c_in: int, c_out: int, k: int, h: int, w: int) -> dict:
+    """Analytic HBM word traffic: fused vs unfused conv/ReLU/pool chain.
+
+    Used by the §Perf structural analysis (interpret-mode wallclock is not
+    a TPU proxy, traffic is).
+    """
+    h_out, w_out = h - k + 1, w - k + 1
+    ho, wo = h_out // 2, w_out // 2
+    tiles = -(-c_out // COUT_TILE)
+    weights = c_out * c_in * k * k + c_out
+    unfused = (
+        tiles * c_in * h * w + weights + c_out * h_out * w_out  # conv
+        + 2 * c_out * h_out * w_out  # relu read+write
+        + c_out * h_out * w_out + c_out * ho * wo  # pool read+write
+    )
+    fused = tiles * c_in * h * w + weights + c_out * ho * wo
+    return {"unfused": unfused, "fused": fused, "ratio": unfused / fused}

@@ -1,0 +1,45 @@
+"""Pallas fully-connected (Linear) kernel.
+
+The paper's Linear layer is a folded matrix-vector engine: ``coarse_in``
+input lanes times ``coarse_out`` output lanes of MACs. Here the grid tiles
+the output dimension (coarse-out folding); each step keeps the full input
+vector in VMEM (it is at most a few KiB for the evaluated networks) and does
+one (tile, In) x (In,) contraction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+OUT_TILE = 16
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref):
+    o_ref[...] = (
+        jnp.dot(w_ref[...], x_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """``w @ x + b`` with w (Out, In), x (In,) via a Pallas output-tiled grid."""
+    out_dim, in_dim = w.shape
+    out_pad = -(-out_dim // OUT_TILE) * OUT_TILE
+    if out_pad != out_dim:
+        w = jnp.pad(w, ((0, out_pad - out_dim), (0, 0)))
+        b = jnp.pad(b, (0, out_pad - out_dim))
+    out = pl.pallas_call(
+        _linear_kernel,
+        grid=(out_pad // OUT_TILE,),
+        in_specs=[
+            pl.BlockSpec((in_dim,), lambda i: (0,)),
+            pl.BlockSpec((OUT_TILE, in_dim), lambda i: (i, 0)),
+            pl.BlockSpec((OUT_TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((OUT_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((out_pad,), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+    return out[:out_dim]

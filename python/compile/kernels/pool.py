@@ -1,0 +1,39 @@
+"""Pallas 2x2 stride-2 max-pool kernel.
+
+One grid step per channel tile; the reshape-max trick runs entirely on the
+VMEM-resident block (the hardware analogue is fpgaConvNet's pool module fed
+by the sliding-window line buffer).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+C_TILE = 8
+
+
+def _pool_kernel(x_ref, o_ref, *, ho: int, wo: int):
+    x = x_ref[...][:, : ho * 2, : wo * 2]
+    o_ref[...] = x.reshape(x.shape[0], ho, 2, wo, 2).max(axis=(2, 4))
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    """2x2/stride-2 max pool of a (C, H, W) map (floor output semantics)."""
+    c, h, w = x.shape
+    ho, wo = h // 2, w // 2
+    c_pad = -(-c // C_TILE) * C_TILE
+    if c_pad != c:
+        x = jnp.pad(x, ((0, c_pad - c), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_pool_kernel, ho=ho, wo=wo),
+        grid=(c_pad // C_TILE,),
+        in_specs=[pl.BlockSpec((C_TILE, h, w), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((C_TILE, ho, wo), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c_pad, ho, wo), jnp.float32),
+        interpret=True,
+    )(x)
+    return out[:c]

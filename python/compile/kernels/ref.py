@@ -1,0 +1,98 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` / ``lax`` ops. The pytest + hypothesis
+suite asserts ``assert_allclose(kernel(...), ref(...))`` over swept shapes.
+
+These references are also what the *training* path uses (L2 trains with the
+refs for speed; the AOT export path swaps in the Pallas kernels, mirroring
+the paper's software-trains / hardware-runs split).
+
+Conventions
+-----------
+* Feature maps are ``(C, H, W)`` (single sample — the streaming hardware of
+  the paper processes one sample at a time; batch is handled by the L3
+  coordinator / DMA model).
+* Convolutions are stride-1; striding in the evaluated networks comes from
+  the pooling layers, matching the modified B-LeNet of Fig. 8.
+* Padding is applied by the caller (`pad_hw`) so kernels see "valid" convs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def pad_hw(x: jax.Array, pad: int) -> jax.Array:
+    """Zero-pad the two trailing spatial dims of a (C, H, W) feature map."""
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Valid, stride-1 2-D convolution.
+
+    Args:
+      x: input feature map ``(C_in, H, W)`` (already padded by the caller).
+      w: weights ``(C_out, C_in, K, K)``.
+      b: bias ``(C_out,)``.
+
+    Returns:
+      ``(C_out, H-K+1, W-K+1)`` output feature map.
+    """
+    out = lax.conv_general_dilated(
+        x[None],  # NCHW with N=1
+        w,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    return out + b[:, None, None]
+
+
+def linear_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Fully-connected layer: ``w @ x + b`` with w ``(Out, In)``, x ``(In,)``."""
+    return w @ x + b
+
+
+def maxpool2_ref(x: jax.Array) -> jax.Array:
+    """2x2, stride-2 max pooling over a (C, H, W) map (floor semantics)."""
+    c, h, w = x.shape
+    ho, wo = h // 2, w // 2
+    x = x[:, : ho * 2, : wo * 2]
+    return x.reshape(c, ho, 2, wo, 2).max(axis=(2, 4))
+
+
+def relu_ref(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)
+
+
+def softmax_ref(x: jax.Array) -> jax.Array:
+    """Numerically-stable softmax over a 1-D class-activation vector."""
+    e = jnp.exp(x - jnp.max(x))
+    return e / jnp.sum(e)
+
+
+def exit_decision_ref(x: jax.Array, c_thr):
+    """Reference for the paper's Exit (Softmax) Decision layer.
+
+    Implements the division-free form of Eq. (4):
+
+        max_i exp(x_i) > C_thr * sum_j exp(x_j)
+
+    evaluated in numerically-stable shifted form (both sides of Eq. (4)
+    scale by exp(-max(x)), so shifting preserves the decision exactly).
+
+    Returns:
+      (take, probs): ``take`` is a float32 0/1 flag (1.0 = confident, take
+      the early exit), ``probs`` the softmax distribution (used for
+      accuracy accounting by the profiler).
+    """
+    m = jnp.max(x)
+    e = jnp.exp(x - m)
+    s = jnp.sum(e)
+    take = (jnp.max(e) > c_thr * s).astype(jnp.float32)
+    return take, e / s

@@ -1,0 +1,364 @@
+"""L2 — Early-Exit network definitions in JAX.
+
+Networks are described *declaratively* (a list of layer specs per stage).
+The same description drives three things:
+
+1. the JAX forward functions (training with `ref` ops, export with the
+   Pallas kernels — the paper's software-trains / hardware-runs split),
+2. shape inference (sizing the Linear layers and the Conditional Buffer),
+3. the network JSON emitted for the Rust toolflow's IR — our stand-in for
+   the paper's PyTorch → TorchScript → ONNX conversion (§III-B.3).
+
+Evaluated networks (paper Table IV):
+  * ``blenet``     — modified B-LeNet of Fig. 8 (MNIST-like, 1x28x28)
+  * ``triplewins`` — Triple-Wins-style MNIST EE net (input-adaptive exits)
+  * ``balexnet``   — B-AlexNet-style CIFAR EE net (3x32x32)
+
+Each EE network is split into *stage 1* (backbone prefix + exit branch +
+exit decision) and *stage 2* (backbone suffix + final classifier), the
+two-stage decomposition of §III-A. The single-stage *baseline* is the full
+backbone with the final classifier — exactly the paper's baseline
+("the network layers from the start ... through to the end of the second
+stage").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+
+# --------------------------------------------------------------------------
+# Layer specs
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    out_ch: int
+    k: int
+    pad: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Relu:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Pool:
+    pass  # 2x2 stride-2 max pool
+
+
+@dataclasses.dataclass(frozen=True)
+class Flatten:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Fc:
+    out: int
+
+
+LayerSpec = Any  # Conv | Relu | Pool | Flatten | Fc
+
+
+@dataclasses.dataclass(frozen=True)
+class EENet:
+    """A two-stage Early-Exit network description."""
+
+    name: str
+    input_shape: tuple[int, int, int]
+    classes: int
+    stage1: tuple[LayerSpec, ...]  # backbone prefix
+    exit_branch: tuple[LayerSpec, ...]  # early-exit classifier
+    stage2: tuple[LayerSpec, ...]  # backbone suffix (ends in Fc(classes))
+    p_paper: float  # hard-sample probability from the paper (Table IV)
+
+
+# Modified B-LeNet (Fig. 8): three conv/pool/relu backbone stages + linear,
+# one early exit after the first. Channel counts follow the "hardware
+# friendly" modifications (powers of two; exact Fig. 8 constants are partly
+# illegible in the source so nearby powers of two are used — the toolflow is
+# agnostic to the exact values).
+BLENET = EENet(
+    name="blenet",
+    input_shape=(1, 28, 28),
+    classes=10,
+    stage1=(Conv(8, 5, pad=2), Relu(), Pool()),
+    exit_branch=(Conv(8, 3, pad=1), Relu(), Pool(), Flatten(), Fc(10)),
+    stage2=(
+        Conv(16, 5, pad=2),
+        Relu(),
+        Pool(),
+        Conv(24, 3, pad=1),
+        Relu(),
+        Pool(),
+        Flatten(),
+        Fc(10),
+    ),
+    p_paper=0.25,
+)
+
+# Triple-Wins style: lightweight direct-FC exit off a thin first stage
+# (input-adaptive inference with minimal branch compute). The backbone
+# suffix is wide (64-channel convs) so that, like the paper's RobNet-style
+# backbone, the baseline is DSP-bound even on the VU440 (Table IV).
+TRIPLEWINS = EENet(
+    name="triplewins",
+    input_shape=(1, 28, 28),
+    classes=10,
+    stage1=(Conv(16, 3, pad=1), Relu(), Pool()),
+    exit_branch=(Pool(), Flatten(), Fc(10)),
+    stage2=(
+        Conv(64, 3, pad=1),
+        Relu(),
+        Pool(),
+        Conv(64, 3, pad=1),
+        Relu(),
+        Pool(),
+        Flatten(),
+        Fc(10),
+    ),
+    p_paper=0.25,
+)
+
+# B-AlexNet style on a CIFAR-shaped input: 5 convs total incl. the branch.
+BALEXNET = EENet(
+    name="balexnet",
+    input_shape=(3, 32, 32),
+    classes=10,
+    stage1=(Conv(32, 5, pad=2), Relu(), Pool()),
+    exit_branch=(Conv(16, 3, pad=1), Relu(), Pool(), Flatten(), Fc(10)),
+    stage2=(
+        Conv(64, 5, pad=2),
+        Relu(),
+        Pool(),
+        Conv(96, 3, pad=1),
+        Relu(),
+        Conv(64, 3, pad=1),
+        Relu(),
+        Pool(),
+        Flatten(),
+        Fc(10),
+    ),
+    p_paper=0.34,
+)
+
+NETWORKS: dict[str, EENet] = {
+    n.name: n for n in (BLENET, TRIPLEWINS, BALEXNET)
+}
+
+# --------------------------------------------------------------------------
+# Shape inference
+# --------------------------------------------------------------------------
+
+
+def infer_shapes(
+    specs: tuple[LayerSpec, ...], in_shape: tuple[int, ...]
+) -> list[tuple[int, ...]]:
+    """Output shape after each layer of `specs` starting from `in_shape`."""
+    shapes = []
+    s = in_shape
+    for spec in specs:
+        if isinstance(spec, Conv):
+            c, h, w = s
+            s = (spec.out_ch, h + 2 * spec.pad - spec.k + 1, w + 2 * spec.pad - spec.k + 1)
+        elif isinstance(spec, Pool):
+            c, h, w = s
+            s = (c, h // 2, w // 2)
+        elif isinstance(spec, Flatten):
+            s = (int(jnp.prod(jnp.array(s))),)
+        elif isinstance(spec, Fc):
+            s = (spec.out,)
+        elif isinstance(spec, Relu):
+            pass
+        else:
+            raise TypeError(f"unknown layer spec {spec!r}")
+        shapes.append(s)
+    return shapes
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def init_stage(
+    rng: jax.Array, specs: tuple[LayerSpec, ...], in_shape: tuple[int, ...]
+) -> list[dict[str, jax.Array]]:
+    """He-normal init for every parameterized layer in a stage."""
+    params: list[dict[str, jax.Array]] = []
+    shapes = [in_shape] + infer_shapes(specs, in_shape)
+    for spec, s_in in zip(specs, shapes):
+        if isinstance(spec, Conv):
+            rng, k = jax.random.split(rng)
+            fan_in = s_in[0] * spec.k * spec.k
+            w = jax.random.normal(
+                k, (spec.out_ch, s_in[0], spec.k, spec.k)
+            ) * jnp.sqrt(2.0 / fan_in)
+            params.append({"w": w, "b": jnp.zeros((spec.out_ch,))})
+        elif isinstance(spec, Fc):
+            rng, k = jax.random.split(rng)
+            w = jax.random.normal(k, (spec.out, s_in[0])) * jnp.sqrt(
+                2.0 / s_in[0]
+            )
+            params.append({"w": w, "b": jnp.zeros((spec.out,))})
+        else:
+            params.append({})
+    return params
+
+
+def init_eenet(rng: jax.Array, net: EENet) -> dict[str, Any]:
+    """Parameters for all three stage groups of an EE network."""
+    r1, r2, r3 = jax.random.split(rng, 3)
+    s1_out = infer_shapes(net.stage1, net.input_shape)[-1]
+    return {
+        "stage1": init_stage(r1, net.stage1, net.input_shape),
+        "exit": init_stage(r2, net.exit_branch, s1_out),
+        "stage2": init_stage(r3, net.stage2, s1_out),
+    }
+
+
+def init_baseline(rng: jax.Array, net: EENet) -> dict[str, Any]:
+    """Parameters for the single-stage baseline (backbone = stage1+stage2)."""
+    r1, r2 = jax.random.split(rng)
+    s1_out = infer_shapes(net.stage1, net.input_shape)[-1]
+    return {
+        "stage1": init_stage(r1, net.stage1, net.input_shape),
+        "stage2": init_stage(r2, net.stage2, s1_out),
+    }
+
+
+# --------------------------------------------------------------------------
+# Forward passes (single sample; vmap for batches)
+# --------------------------------------------------------------------------
+
+
+def _ops(use_pallas: bool):
+    """Select the op set: Pallas kernels (export) or jnp refs (training)."""
+    if use_pallas:
+        return kernels.conv2d, kernels.linear, kernels.maxpool2
+    return ref.conv2d_ref, ref.linear_ref, ref.maxpool2_ref
+
+
+def run_stage(
+    params: list[dict[str, jax.Array]],
+    specs: tuple[LayerSpec, ...],
+    x: jax.Array,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Run one stage's layer list over a single (C,H,W) or (F,) sample."""
+    conv2d, linear, maxpool2 = _ops(use_pallas)
+    for spec, p in zip(specs, params):
+        if isinstance(spec, Conv):
+            x = conv2d(ref.pad_hw(x, spec.pad), p["w"], p["b"])
+        elif isinstance(spec, Relu):
+            x = ref.relu_ref(x)
+        elif isinstance(spec, Pool):
+            x = maxpool2(x)
+        elif isinstance(spec, Flatten):
+            x = x.reshape(-1)
+        elif isinstance(spec, Fc):
+            x = linear(x, p["w"], p["b"])
+    return x
+
+
+def ee_forward(
+    params: dict[str, Any], net: EENet, x: jax.Array, use_pallas: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """Full EE forward: (exit_logits, final_logits) for a single sample."""
+    f = run_stage(params["stage1"], net.stage1, x, use_pallas)
+    exit_logits = run_stage(params["exit"], net.exit_branch, f, use_pallas)
+    final_logits = run_stage(params["stage2"], net.stage2, f, use_pallas)
+    return exit_logits, final_logits
+
+
+def baseline_forward(
+    params: dict[str, Any], net: EENet, x: jax.Array, use_pallas: bool = False
+) -> jax.Array:
+    """Single-stage baseline forward (backbone only)."""
+    f = run_stage(params["stage1"], net.stage1, x, use_pallas)
+    return run_stage(params["stage2"], net.stage2, f, use_pallas)
+
+
+# ---- Export-facing entry points (these are what gets lowered to HLO) ----
+
+
+def stage1_apply(
+    params: dict[str, Any], net: EENet, c_thr: float, x: jax.Array
+):
+    """Stage-1 hardware module: backbone prefix + exit branch + Eq.4 decision.
+
+    Returns (take, exit_probs, features):
+      take       (1,)  f32 — 1.0 if the sample exits early
+      exit_probs (C,)  f32 — early-exit softmax distribution
+      features   s1-shape  — intermediate map forwarded to stage 2 when
+                             the Conditional Buffer does not drop it
+    """
+    f = run_stage(params["stage1"], net.stage1, x, use_pallas=True)
+    logits = run_stage(params["exit"], net.exit_branch, f, use_pallas=True)
+    take, probs = kernels.exit_decision(logits, jnp.float32(c_thr))
+    return take, probs, f
+
+
+def stage2_apply(params: dict[str, Any], net: EENet, f: jax.Array):
+    """Stage-2 hardware module: backbone suffix → final class probabilities."""
+    logits = run_stage(params["stage2"], net.stage2, f, use_pallas=True)
+    return (ref.softmax_ref(logits),)
+
+
+def baseline_apply(params: dict[str, Any], net: EENet, x: jax.Array):
+    """Baseline single-stage module: full backbone → class probabilities."""
+    return (ref.softmax_ref(baseline_forward(params, net, x, use_pallas=True)),)
+
+
+# --------------------------------------------------------------------------
+# Losses (BranchyNet joint training)
+# --------------------------------------------------------------------------
+
+
+def _xent(logits: jax.Array, label: jax.Array) -> jax.Array:
+    return -jax.nn.log_softmax(logits)[label]
+
+
+def ee_loss(params: dict[str, Any], net: EENet, xb, yb) -> jax.Array:
+    """BranchyNet joint loss: weighted sum of per-exit cross-entropies."""
+
+    def per_sample(x, y):
+        e, f = ee_forward(params, net, x)
+        return _xent(e, y) + _xent(f, y)
+
+    return jnp.mean(jax.vmap(per_sample)(xb, yb))
+
+
+def baseline_loss(params: dict[str, Any], net: EENet, xb, yb) -> jax.Array:
+    def per_sample(x, y):
+        return _xent(baseline_forward(params, net, x), y)
+
+    return jnp.mean(jax.vmap(per_sample)(xb, yb))
+
+
+# --------------------------------------------------------------------------
+# Fixed-point emulation (paper: 16-bit fixed-point datapath)
+# --------------------------------------------------------------------------
+
+
+def quantize_params(params, bits: int = 16, frac: int = 8):
+    """Round weights to Qm.f fixed point, emulating the paper's datapath.
+
+    The Exit Decision layer stays float (paper §III-C: single-precision to
+    preserve exp()); weight quantization is where fixed point bites.
+    """
+    scale = float(1 << frac)
+    lim = float(1 << (bits - 1)) / scale
+
+    def q(x):
+        return jnp.clip(jnp.round(x * scale) / scale, -lim, lim - 1.0 / scale)
+
+    return jax.tree_util.tree_map(q, params)

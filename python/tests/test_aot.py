@@ -1,0 +1,83 @@
+"""AOT-export tests: HLO text integrity (the large-constant elision
+regression), threshold calibration, JSON IR schema."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, data as D, model as M, train as T
+
+
+def test_hlo_text_prints_large_constants():
+    """Regression: as_hlo_text() default elides big constants as `{...}`,
+    which XLA 0.5.1's text parser reads back as zeros — the weights
+    vanish silently on the Rust side. The export must never contain an
+    elided constant."""
+    net = M.NETWORKS["blenet"]
+    params = M.init_eenet(jax.random.PRNGKey(0), net)
+    import functools
+
+    fn = functools.partial(M.stage1_apply, params, net, 0.9)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct(net.input_shape, jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "constant({...})" not in text, "elided constants in HLO export"
+    assert "parameter(0)" in text
+
+
+def test_threshold_calibration_hits_p():
+    net = M.NETWORKS["blenet"]
+    ds = D.make_split(0, 1024, net.classes, net.input_shape)
+    params = M.init_eenet(jax.random.PRNGKey(1), net)
+    # Train briefly so confidences spread out.
+    params = T.train(
+        lambda p, x, y: M.ee_loss(p, net, x, y),
+        params,
+        ds,
+        steps=30,
+        log_every=0,
+    )
+    cal = D.make_split(1, 512, net.classes, net.input_shape)
+    for p_target in [0.2, 0.3]:
+        thr = T.calibrate_threshold(params, net, cal, p_target)
+        stats = T.evaluate(params, net, cal, thr)
+        assert abs(stats["p_hard"] - p_target) < 0.07
+
+
+def test_network_json_schema():
+    net = M.NETWORKS["triplewins"]
+    stats = {
+        "p_hard": 0.25,
+        "exit_acc": 0.9,
+        "final_acc": 0.95,
+        "deployed_acc": 0.93,
+        "exit_acc_on_taken": 0.97,
+        "final_acc_on_hard": 0.9,
+    }
+    nj = aot.network_json(net, 0.95, stats)
+    text = json.dumps(nj)  # must be JSON-serializable
+    back = json.loads(text)
+    assert back["name"] == "triplewins"
+    assert back["classes"] == 10
+    # Layer chaining: every out_shape equals the next in_shape.
+    for stage in ["stage1", "exit_branch", "stage2"]:
+        layers = back[stage]
+        for a, b in zip(layers, layers[1:]):
+            assert a["out_shape"] == b["in_shape"], (stage, a, b)
+    # Exit branch and stage2 both end in the classifier.
+    assert back["exit_branch"][-1]["out_shape"] == [10]
+    assert back["stage2"][-1]["out_shape"] == [10]
+
+
+def test_evaluate_counts_consistent():
+    net = M.NETWORKS["blenet"]
+    ds = D.make_split(2, 256, net.classes, net.input_shape)
+    params = M.init_eenet(jax.random.PRNGKey(3), net)
+    stats = T.evaluate(params, net, ds, c_thr=0.5)
+    flags = stats["hard_flags"]
+    assert flags.shape == (256,)
+    assert abs(stats["p_hard"] - flags.mean()) < 1e-9
+    assert 0.0 <= stats["deployed_acc"] <= 1.0

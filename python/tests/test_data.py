@@ -1,0 +1,59 @@
+"""Synthetic-dataset tests: determinism, difficulty semantics, q-exact
+resampling."""
+
+import numpy as np
+
+from compile import data as D
+
+
+def test_deterministic_given_seed():
+    a = D.make_split(5, 64, 10, (1, 28, 28))
+    b = D.make_split(5, 64, 10, (1, 28, 28))
+    np.testing.assert_array_equal(a.images, b.images)
+    np.testing.assert_array_equal(a.labels, b.labels)
+
+
+def test_splits_differ_by_seed_but_share_templates():
+    a = D.make_split(1, 64, 10, (1, 28, 28))
+    b = D.make_split(2, 64, 10, (1, 28, 28))
+    assert not np.array_equal(a.images, b.images)
+    # Same class templates: low-difficulty samples of the same class are
+    # highly correlated across splits.
+    t = D.class_templates(1234, 10, (1, 28, 28))
+    easy = a.difficulty < 0.2
+    for img, y in zip(a.images[easy][:5], a.labels[easy][:5]):
+        c = np.corrcoef(img.ravel(), t[y].ravel())[0, 1]
+        assert c > 0.5, f"easy sample decorrelated from its template: {c}"
+
+
+def test_difficulty_increases_noise():
+    ds = D.make_split(3, 512, 10, (1, 28, 28))
+    t = D.class_templates(1234, 10, (1, 28, 28))
+    easy = ds.difficulty < 0.25
+    hard = ds.difficulty > 0.75
+    def mean_corr(mask):
+        cs = [
+            np.corrcoef(img.ravel(), t[y].ravel())[0, 1]
+            for img, y in zip(ds.images[mask], ds.labels[mask])
+        ]
+        return np.mean(cs)
+    assert mean_corr(easy) > mean_corr(hard) + 0.2
+
+
+def test_resample_for_q_exact():
+    ds = D.make_split(4, 1000, 10, (1, 8, 8))
+    hard = (ds.difficulty > 0.5).astype(np.uint8)
+    for q in [0.0, 0.2, 0.25, 0.3, 1.0]:
+        imgs, labels, flags = D.resample_for_q(
+            ds.images, ds.labels, hard, q, 256, seed=7
+        )
+        assert imgs.shape[0] == 256
+        assert flags.sum() == round(q * 256)
+
+
+def test_batches_iterator_shapes():
+    ds = D.make_split(6, 300, 10, (1, 8, 8))
+    it = D.batches(ds, 128, seed=0)
+    xb, yb = next(it)
+    assert xb.shape == (128, 1, 8, 8)
+    assert yb.shape == (128,)

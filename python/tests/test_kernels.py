@@ -1,0 +1,177 @@
+"""L1 correctness: Pallas kernels vs pure-jnp references.
+
+Hypothesis sweeps shapes and value ranges; every kernel must match its
+oracle to float32 tolerance, and the exit-decision kernel must match the
+*decision bit* exactly (it gates the hardware control flow).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import conv2d, exit_decision, linear, maxpool2, ref
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=25, deadline=None
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    c_in=st.integers(1, 6),
+    c_out=st.integers(1, 12),
+    k=st.sampled_from([1, 3, 5]),
+    hw=st.integers(6, 20),
+    seed=st.integers(0, 2**16),
+)
+def test_conv2d_matches_ref(c_in, c_out, k, hw, seed):
+    x = rand(seed, (c_in, hw, hw))
+    w = rand(seed + 1, (c_out, c_in, k, k))
+    b = rand(seed + 2, (c_out,))
+    np.testing.assert_allclose(
+        conv2d(x, w, b), ref.conv2d_ref(x, w, b), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_conv2d_with_padding_wrapper():
+    x = rand(0, (3, 8, 8))
+    w = rand(1, (4, 3, 3, 3))
+    b = rand(2, (4,))
+    out = conv2d(ref.pad_hw(x, 1), w, b)
+    assert out.shape == (4, 8, 8)
+    np.testing.assert_allclose(
+        out, ref.conv2d_ref(ref.pad_hw(x, 1), w, b), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_conv2d_rejects_tiny_input():
+    with pytest.raises(AssertionError):
+        conv2d(rand(0, (1, 2, 2)), rand(1, (1, 1, 5, 5)), jnp.zeros(1))
+
+
+# ---------------------------------------------------------------------------
+# linear
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    n_in=st.integers(1, 300),
+    n_out=st.integers(1, 40),
+    seed=st.integers(0, 2**16),
+)
+def test_linear_matches_ref(n_in, n_out, seed):
+    x = rand(seed, (n_in,))
+    w = rand(seed + 1, (n_out, n_in))
+    b = rand(seed + 2, (n_out,))
+    np.testing.assert_allclose(
+        linear(x, w, b), ref.linear_ref(x, w, b), rtol=2e-4, atol=2e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# maxpool2
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    c=st.integers(1, 20),
+    h=st.integers(2, 30),
+    w=st.integers(2, 30),
+    seed=st.integers(0, 2**16),
+)
+def test_maxpool2_matches_ref(c, h, w, seed):
+    x = rand(seed, (c, h, w))
+    np.testing.assert_allclose(maxpool2(x), ref.maxpool2_ref(x), rtol=1e-6)
+
+
+def test_maxpool2_odd_sizes_floor():
+    x = rand(3, (2, 7, 9))
+    assert maxpool2(x).shape == (2, 3, 4)
+
+
+# ---------------------------------------------------------------------------
+# exit decision (Eq. 4)
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    c=st.integers(2, 32),
+    scale=st.floats(0.1, 30.0),
+    thr=st.floats(0.05, 0.999),
+    seed=st.integers(0, 2**16),
+)
+def test_exit_decision_matches_ref_bitwise(c, scale, thr, seed):
+    x = rand(seed, (c,), scale)
+    take, probs = exit_decision(x, jnp.float32(thr))
+    take_ref, probs_ref = ref.exit_decision_ref(x, thr)
+    # The decision bit must match exactly — it gates hardware control flow.
+    assert float(take[0]) == float(take_ref)
+    np.testing.assert_allclose(probs, probs_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_exit_decision_extreme_logits_stable():
+    x = jnp.array([500.0, -500.0, 0.0, 250.0])
+    take, probs = exit_decision(x, jnp.float32(0.9))
+    assert np.isfinite(np.asarray(probs)).all()
+    assert float(take[0]) == 1.0  # one dominant class -> confident
+
+
+def test_exit_decision_shift_invariance():
+    x = rand(7, (10,), 4.0)
+    for shift in [-100.0, 0.0, 100.0]:
+        take, _ = exit_decision(x + shift, jnp.float32(0.8))
+        take0, _ = ref.exit_decision_ref(x, 0.8)
+        assert float(take[0]) == float(take0)
+
+
+def test_exit_decision_threshold_monotone():
+    x = rand(11, (10,), 3.0)
+    takes = [
+        float(exit_decision(x, jnp.float32(t))[0][0])
+        for t in [0.1, 0.3, 0.5, 0.7, 0.9, 0.99]
+    ]
+    # Once the decision flips to 0 it must stay 0 as thr grows.
+    assert takes == sorted(takes, reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# fused conv+relu+pool
+# ---------------------------------------------------------------------------
+
+from compile.kernels import conv_relu_pool
+from compile.kernels.fused import hbm_traffic_words
+
+
+@hypothesis.given(
+    c_in=st.integers(1, 5),
+    c_out=st.integers(1, 10),
+    k=st.sampled_from([3, 5]),
+    hw=st.integers(8, 18),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_matches_unfused_composition(c_in, c_out, k, hw, seed):
+    x = rand(seed, (c_in, hw, hw))
+    w = rand(seed + 1, (c_out, c_in, k, k))
+    b = rand(seed + 2, (c_out,))
+    fused = conv_relu_pool(x, w, b)
+    unfused = ref.maxpool2_ref(ref.relu_ref(ref.conv2d_ref(x, w, b)))
+    assert fused.shape == unfused.shape
+    np.testing.assert_allclose(fused, unfused, rtol=2e-4, atol=2e-4)
+
+
+def test_fused_hbm_traffic_saves():
+    t = hbm_traffic_words(8, 16, 5, 28, 28)
+    assert t["fused"] < t["unfused"]
+    assert t["ratio"] > 1.5  # epilogue fusion kills >a third of the traffic

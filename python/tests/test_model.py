@@ -1,0 +1,100 @@
+"""L2 tests: shape inference, parameter init, forward passes, losses,
+quantization, and the pallas-vs-ref forward agreement per network.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as M
+
+
+@pytest.fixture(scope="module", params=list(M.NETWORKS))
+def net(request):
+    return M.NETWORKS[request.param]
+
+
+def test_shape_inference_chains(net):
+    s1 = M.infer_shapes(net.stage1, net.input_shape)
+    assert all(len(s) in (1, 3) for s in s1)
+    exit_shapes = M.infer_shapes(net.exit_branch, s1[-1])
+    assert exit_shapes[-1] == (net.classes,)
+    s2 = M.infer_shapes(net.stage2, s1[-1])
+    assert s2[-1] == (net.classes,)
+
+
+def test_forward_shapes_and_finiteness(net):
+    params = M.init_eenet(jax.random.PRNGKey(0), net)
+    x = jnp.zeros(net.input_shape)
+    e, f = M.ee_forward(params, net, x)
+    assert e.shape == (net.classes,) and f.shape == (net.classes,)
+    assert np.isfinite(np.asarray(e)).all() and np.isfinite(np.asarray(f)).all()
+
+
+def test_baseline_forward(net):
+    params = M.init_baseline(jax.random.PRNGKey(1), net)
+    y = M.baseline_forward(params, net, jnp.ones(net.input_shape))
+    assert y.shape == (net.classes,)
+
+
+def test_pallas_and_ref_forwards_agree(net):
+    """The export path (Pallas kernels) must match the training path."""
+    params = M.init_eenet(jax.random.PRNGKey(2), net)
+    x = jax.random.normal(jax.random.PRNGKey(3), net.input_shape)
+    e_ref, f_ref = M.ee_forward(params, net, x, use_pallas=False)
+    e_pal, f_pal = M.ee_forward(params, net, x, use_pallas=True)
+    np.testing.assert_allclose(e_pal, e_ref, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(f_pal, f_ref, rtol=5e-4, atol=5e-4)
+
+
+def test_stage_apply_consistency(net):
+    """stage1_apply + stage2_apply == ee_forward (the two-stage hardware
+    split computes the same function as the monolithic network)."""
+    params = M.init_eenet(jax.random.PRNGKey(4), net)
+    x = jax.random.normal(jax.random.PRNGKey(5), net.input_shape)
+    take, probs, feats = M.stage1_apply(params, net, 0.5, x)
+    (final_probs,) = M.stage2_apply(params, net, feats)
+    e_ref, f_ref = M.ee_forward(params, net, x, use_pallas=False)
+    np.testing.assert_allclose(
+        probs, M.ref.softmax_ref(e_ref), rtol=5e-4, atol=5e-4
+    )
+    np.testing.assert_allclose(
+        final_probs, M.ref.softmax_ref(f_ref), rtol=5e-4, atol=5e-4
+    )
+    assert float(take[0]) in (0.0, 1.0)
+
+
+def test_losses_decrease_with_one_step():
+    net = M.NETWORKS["blenet"]
+    ds = D.make_split(0, 256, net.classes, net.input_shape)
+    params = M.init_eenet(jax.random.PRNGKey(6), net)
+    xb = jnp.asarray(ds.images[:64])
+    yb = jnp.asarray(ds.labels[:64])
+    loss0 = M.ee_loss(params, net, xb, yb)
+    grads = jax.grad(lambda p: M.ee_loss(p, net, xb, yb))(params)
+    params1 = jax.tree_util.tree_map(lambda p, g: p - 0.05 * g, params, grads)
+    loss1 = M.ee_loss(params1, net, xb, yb)
+    assert float(loss1) < float(loss0)
+
+
+def test_quantize_params_grid():
+    net = M.NETWORKS["blenet"]
+    params = M.init_eenet(jax.random.PRNGKey(7), net)
+    q = M.quantize_params(params, bits=16, frac=8)
+    leaves = jax.tree_util.tree_leaves(q)
+    for leaf in leaves:
+        scaled = np.asarray(leaf) * 256.0
+        np.testing.assert_allclose(scaled, np.round(scaled), atol=1e-4)
+
+
+def test_quantization_preserves_accuracy_roughly():
+    """The paper reports 'marginal effect on accuracy' from fixed point —
+    check the forward outputs barely move."""
+    net = M.NETWORKS["blenet"]
+    params = M.init_eenet(jax.random.PRNGKey(8), net)
+    x = jax.random.normal(jax.random.PRNGKey(9), net.input_shape)
+    e0, _ = M.ee_forward(params, net, x)
+    e1, _ = M.ee_forward(M.quantize_params(params), net, x)
+    assert float(jnp.max(jnp.abs(e0 - e1))) < 0.5

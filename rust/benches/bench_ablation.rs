@@ -1,0 +1,125 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. optimizer choice — simulated annealing (fpgaConvNet's) vs greedy
+//!    hill-climb vs random search at equal evaluation budgets,
+//! 2. allocation policy — Eq. 1 probability-aware combination vs the §III
+//!    naive "all stages at highest throughput" strawman,
+//! 3. buffer-margin policy — throughput robustness vs BRAM cost.
+//!
+//!     cargo bench --bench bench_ablation
+
+use atheena::coordinator::toolflow::synthetic_hard_flags;
+use atheena::dse::{
+    anneal, greedy, naive_combine, random_search, sweep_budgets, AnnealConfig,
+    Problem, ProblemKind, SweepConfig,
+};
+use atheena::ir::network::testnet;
+use atheena::ir::Cdfg;
+use atheena::resources::Board;
+use atheena::sdf::buffering;
+use atheena::sim::{simulate_ee, DesignTiming, SimConfig, SimMetrics};
+use atheena::tap::combine;
+use atheena::util::bench::once;
+
+fn main() {
+    let net = testnet::blenet_like();
+    let board = Board::zc706();
+
+    // ---- 1. optimizer ablation ----
+    println!("== optimizer ablation (baseline problem, budget ladder) ==");
+    println!(
+        "{:>8} {:>14} {:>14} {:>14}",
+        "budget%", "SA(thr)", "greedy(thr)", "random(thr)"
+    );
+    for frac in [0.2, 0.4, 0.6, 0.85] {
+        let p = Problem::baseline(
+            Cdfg::lower_baseline(&net),
+            board.budget(frac),
+            board.clock_hz,
+        );
+        let sa = anneal(&p, &AnnealConfig::default());
+        let gr = greedy(&p);
+        let rs = random_search(&p, &AnnealConfig::default());
+        println!(
+            "{:>8.0} {:>14.0} {:>14.0} {:>14.0}",
+            frac * 100.0,
+            sa.throughput,
+            gr.throughput,
+            rs.throughput
+        );
+    }
+    let p = Problem::baseline(
+        Cdfg::lower_baseline(&net),
+        board.budget(0.5),
+        board.clock_hz,
+    );
+    once("ablate/sa-default-schedule", || {
+        anneal(&p, &AnnealConfig::default())
+    });
+    once("ablate/greedy", || greedy(&p));
+    once("ablate/random-equal-evals", || {
+        random_search(&p, &AnnealConfig::default())
+    });
+
+    // ---- 2. allocation-policy ablation ----
+    println!("\n== allocation ablation: Eq.1 vs naive (p = 0.25) ==");
+    let ee_cdfg = Cdfg::lower(&net, 1);
+    let sweep = SweepConfig::default();
+    let (f, s1_results) = sweep_budgets(ProblemKind::Stage1, &ee_cdfg, &board, &sweep);
+    let (g, _) = sweep_budgets(ProblemKind::Stage2, &ee_cdfg, &board, &sweep);
+    let _ = &s1_results;
+    println!(
+        "{:>8} {:>16} {:>16} {:>8}",
+        "budget%", "eq1 thr@q=p", "naive thr@q=p", "gain"
+    );
+    for frac in [0.3, 0.5, 0.7, 1.0] {
+        let budget = board.budget(frac);
+        let eq1 = combine(&f, &g, 0.25, &budget).map(|d| d.throughput_at(0.25));
+        let naive = naive_combine(&f, &g, &budget).map(|d| d.throughput_at(0.25));
+        match (eq1, naive) {
+            (Some(a), Some(b)) => println!(
+                "{:>8.0} {:>16.0} {:>16.0} {:>7.2}x",
+                frac * 100.0,
+                a,
+                b,
+                a / b
+            ),
+            _ => println!("{:>8.0} (infeasible)", frac * 100.0),
+        }
+    }
+
+    // ---- 3. buffer-margin ablation ----
+    println!("\n== buffer-margin ablation (simulated, q = p + 10%) ==");
+    let p1 = Problem::stage1(ee_cdfg.clone(), board.budget(0.85), board.clock_hz);
+    let s1 = anneal(&p1, &AnnealConfig::default());
+    let p2 = Problem::stage2(ee_cdfg.clone(), board.budget(0.3), board.clock_hz);
+    let s2 = anneal(&p2, &AnnealConfig::default());
+    let mut mapping = s1.mapping.clone();
+    for n in &mapping.cdfg.nodes.clone() {
+        if n.stage == atheena::ir::StageId::Stage2 {
+            mapping.foldings[n.id] = s2.mapping.foldings[n.id];
+        }
+    }
+    let min_depth = buffering::min_depth_samples(&mapping);
+    println!(
+        "{:>8} {:>7} {:>7} {:>16} {:>10}",
+        "margin", "depth", "BRAM", "thr(samples/s)", "stalls"
+    );
+    for margin in [0usize, 4, 16, 48, 128] {
+        mapping.set_cond_buffer_depth(min_depth + margin);
+        let timing = DesignTiming::from_ee_mapping(&mapping);
+        let flags = synthetic_hard_flags(0.35, 1024, 0xAB1A);
+        let m = SimMetrics::from_result(
+            &simulate_ee(&timing, &SimConfig::default(), &flags),
+            board.clock_hz,
+        );
+        println!(
+            "{:>8} {:>7} {:>7} {:>16.0} {:>10}",
+            margin,
+            min_depth + margin,
+            mapping.total_resources().bram,
+            m.throughput_sps,
+            m.stall_cycles
+        );
+    }
+}

@@ -1,0 +1,47 @@
+//! DSE benchmarks — the Fig. 9a generator's cost: simulated-annealing
+//! throughput per problem kind and full TAP-sweep wall time.
+//!
+//!     cargo bench --bench bench_dse
+
+use atheena::dse::{anneal, sweep_budgets, AnnealConfig, Problem, ProblemKind, SweepConfig};
+use atheena::ir::network::testnet;
+use atheena::ir::Cdfg;
+use atheena::resources::Board;
+use atheena::util::bench::{bench, once};
+
+fn main() {
+    let net = testnet::blenet_like();
+    let board = Board::zc706();
+
+    // Single-anneal latency per problem kind (fixed schedule).
+    let cfg = AnnealConfig {
+        iterations: 4_000,
+        restarts: 1,
+        ..Default::default()
+    };
+    let base_cdfg = Cdfg::lower_baseline(&net);
+    let ee_cdfg = Cdfg::lower(&net, 8);
+
+    let p = Problem::baseline(base_cdfg.clone(), board.resources, board.clock_hz);
+    let s = bench("anneal/baseline/4k-iters", 1, 10, || anneal(&p, &cfg));
+    println!(
+        "  -> {:.0} anneal-iterations/s",
+        4_000.0 * s.per_second()
+    );
+
+    let p1 = Problem::stage1(ee_cdfg.clone(), board.resources, board.clock_hz);
+    bench("anneal/stage1/4k-iters", 1, 10, || anneal(&p1, &cfg));
+    let p2 = Problem::stage2(ee_cdfg.clone(), board.resources, board.clock_hz);
+    bench("anneal/stage2/4k-iters", 1, 10, || anneal(&p2, &cfg));
+
+    // Full Fig. 9a-style sweep (default fractions ladder).
+    let sweep = SweepConfig::default();
+    once("sweep/fig9a-baseline-curve", || {
+        sweep_budgets(ProblemKind::Baseline, &base_cdfg, &board, &sweep)
+    });
+    once("sweep/fig9a-stage1+stage2-curves", || {
+        let a = sweep_budgets(ProblemKind::Stage1, &ee_cdfg, &board, &sweep);
+        let b = sweep_budgets(ProblemKind::Stage2, &ee_cdfg, &board, &sweep);
+        (a, b)
+    });
+}

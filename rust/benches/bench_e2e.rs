@@ -1,0 +1,53 @@
+//! End-to-end benchmarks — the Table IV generator: full toolflow wall
+//! time per network/board, plus the batched-host run of Table III.
+//!
+//! Uses exported artifacts when present, else the built-in test network.
+//!
+//!     cargo bench --bench bench_e2e
+
+use atheena::coordinator::toolflow::{run_toolflow, ToolflowOptions};
+use atheena::ir::network::testnet;
+use atheena::ir::Network;
+use atheena::resources::Board;
+use atheena::util::bench::once;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::Path::new("artifacts");
+
+    // Toolflow wall time on the built-in network (no artifacts needed):
+    // both the quick (CI) and full (paper-table) schedules.
+    let net = testnet::blenet_like();
+    once("toolflow/testnet/quick-schedule", || {
+        run_toolflow(&net, &ToolflowOptions::quick(Board::zc706()), None).unwrap()
+    });
+    once("toolflow/testnet/full-schedule", || {
+        run_toolflow(&net, &ToolflowOptions::new(Board::zc706()), None).unwrap()
+    });
+
+    if !artifacts.join("networks/blenet.json").exists() {
+        println!("bench_e2e: artifacts missing, exported-network benches skipped");
+        return Ok(());
+    }
+
+    // Table IV regeneration cost: full toolflow per (network, board).
+    for (name, board) in [
+        ("blenet", Board::zc706()),
+        ("triplewins", Board::vu440()),
+        ("balexnet", Board::vu440()),
+    ] {
+        let net = Network::from_file(
+            &artifacts.join("networks").join(format!("{name}.json")),
+        )?;
+        let (r, _) = once(&format!("toolflow/{name}/{}", board.name), || {
+            run_toolflow(&net, &ToolflowOptions::new(board.clone()), None).unwrap()
+        });
+        let best = r.best_design().unwrap();
+        println!(
+            "  -> {} designs, best predicted {:.0} samples/s at p={:.2}",
+            r.designs.len(),
+            best.combined.throughput_at_p,
+            r.p
+        );
+    }
+    Ok(())
+}

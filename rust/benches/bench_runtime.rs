@@ -1,0 +1,58 @@
+//! PJRT runtime benchmarks — per-sample numerics latency on the request
+//! path (Table III's host-side column): stage-1, stage-2, baseline, and
+//! the full easy/hard sample paths.
+//!
+//! Requires `make artifacts`. Skips gracefully when artifacts are absent
+//! so `cargo bench` stays green in a fresh checkout.
+//!
+//!     cargo bench --bench bench_runtime
+
+use atheena::data::TestSet;
+use atheena::runtime::ArtifactStore;
+use atheena::util::bench::bench;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::Path::new("artifacts");
+    if !artifacts.join("networks/blenet.json").exists() {
+        println!("bench_runtime: artifacts missing, skipping (run `make artifacts`)");
+        return Ok(());
+    }
+    let store = ArtifactStore::open(artifacts)?;
+
+    for name in store.network_names() {
+        let ts = TestSet::load(artifacts, &name)?;
+        let s1 = store.stage1(&name)?;
+        let s2 = store.stage2(&name)?;
+        let base = store.baseline(&name)?;
+
+        // A known-easy and known-hard sample for path-specific latency.
+        let easy_idx = (0..ts.n).find(|&i| ts.hard[i] == 0).unwrap_or(0);
+        let hard_idx = (0..ts.n).find(|&i| ts.hard[i] != 0).unwrap_or(0);
+
+        let s = bench(&format!("pjrt/{name}/stage1"), 5, 50, || {
+            s1.run(ts.image(easy_idx)).unwrap()
+        });
+        println!("  -> {:.0} stage1 samples/s", s.per_second());
+
+        let features = s1.run(ts.image(hard_idx))?.features;
+        bench(&format!("pjrt/{name}/stage2"), 5, 50, || {
+            s2.run(&features).unwrap()
+        });
+        bench(&format!("pjrt/{name}/baseline"), 5, 50, || {
+            base.run(ts.image(easy_idx)).unwrap()
+        });
+
+        // Full request paths (what the serving router pays per sample).
+        bench(&format!("pjrt/{name}/path-easy"), 5, 50, || {
+            let o = s1.run(ts.image(easy_idx)).unwrap();
+            assert!(o.take_exit);
+            o.pred()
+        });
+        bench(&format!("pjrt/{name}/path-hard"), 5, 50, || {
+            let o = s1.run(ts.image(hard_idx)).unwrap();
+            assert!(!o.take_exit);
+            s2.run(&o.features).unwrap()
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Simulator benchmarks — the Fig. 9b / Table I measurement engine:
+//! batch-1024 simulation latency across q values and batch-size scaling.
+//!
+//!     cargo bench --bench bench_sim
+
+use atheena::coordinator::toolflow::synthetic_hard_flags;
+use atheena::ir::network::testnet;
+use atheena::ir::Cdfg;
+use atheena::sdf::HwMapping;
+use atheena::sim::{simulate_baseline, simulate_ee, DesignTiming, SimConfig};
+use atheena::util::bench::bench;
+
+fn main() {
+    let net = testnet::blenet_like();
+    let mut m = HwMapping::minimal(Cdfg::lower(&net, 16));
+    // Unroll to a realistic operating point.
+    for i in 0..m.foldings.len() {
+        m.foldings[i] = m.spaces[i].max();
+    }
+    let timing = DesignTiming::from_ee_mapping(&m);
+    let cfg = SimConfig::default();
+
+    // Fig. 9b inner loop: one simulated board measurement per (design, q).
+    for q in [0.20, 0.25, 0.30] {
+        let flags = synthetic_hard_flags(q, 1024, 42);
+        let s = bench(
+            &format!("sim/ee-batch1024/q={q:.2}"),
+            3,
+            30,
+            || simulate_ee(&timing, &cfg, &flags),
+        );
+        println!(
+            "  -> {:.1} M simulated-samples/s",
+            1024.0 * s.per_second() / 1e6
+        );
+    }
+
+    // Baseline measurement (Table I's B rows).
+    bench("sim/baseline-batch1024", 3, 30, || {
+        simulate_baseline(&timing, &cfg, 1024)
+    });
+
+    // Batch scaling (the DMA-to-idle measurement window).
+    for n in [256usize, 1024, 4096, 16384] {
+        let flags = synthetic_hard_flags(0.25, n, 7);
+        bench(&format!("sim/ee-batch{n}"), 2, 15, || {
+            simulate_ee(&timing, &cfg, &flags)
+        });
+    }
+
+    // Stall-heavy regime (undersized buffer) — worst-case engine load.
+    let mut tight = timing;
+    tight.cond_buffer_depth = 1;
+    let flags = synthetic_hard_flags(0.5, 1024, 9);
+    bench("sim/ee-batch1024/depth1-stalls", 3, 30, || {
+        simulate_ee(&tight, &cfg, &flags)
+    });
+}

@@ -1,0 +1,64 @@
+//! TAP machinery benchmarks — Eq. 1 combination cost vs curve size, and
+//! Pareto filtering (the optimizer-side cost of the ATHEENA extension).
+//!
+//!     cargo bench --bench bench_tap
+
+use atheena::resources::ResourceVec;
+use atheena::tap::{combine, TapCurve, TapPoint};
+use atheena::util::bench::bench;
+use atheena::util::Rng;
+
+fn random_curve(n: usize, seed: u64) -> TapCurve {
+    let mut rng = Rng::new(seed);
+    let pts = (0..n)
+        .map(|i| {
+            let dsp = 50 + rng.below(800) as u64;
+            TapPoint {
+                resources: ResourceVec::new(dsp * 90, dsp * 140, dsp, 20 + dsp / 4),
+                throughput: dsp as f64 * (40.0 + 20.0 * rng.f64()),
+                ii: 1 + rng.below(10_000) as u64,
+                budget_fraction: 0.0,
+                source: i,
+            }
+        })
+        .collect();
+    TapCurve::from_points(pts)
+}
+
+fn main() {
+    for n in [10usize, 50, 200, 1000] {
+        let raw: Vec<TapPoint> = {
+            let c = random_curve(n, 1);
+            c.points
+        };
+        bench(&format!("tap/pareto-filter/{n}-points"), 5, 50, || {
+            TapCurve::from_points(raw.clone())
+        });
+    }
+
+    let budget = ResourceVec::new(218_600, 437_200, 900, 1_090);
+    for n in [10usize, 50, 200] {
+        let f = random_curve(n, 2);
+        let g = random_curve(n, 3);
+        let s = bench(&format!("tap/combine-eq1/{n}x{n}-pairs"), 5, 100, || {
+            combine(&f, &g, 0.25, &budget)
+        });
+        println!(
+            "  -> {:.2} M pair-evaluations/s",
+            (f.points.len() * g.points.len()) as f64 * s.per_second() / 1e6
+        );
+    }
+
+    // Eq. 1 across a budget ladder (the combined-curve trace of Fig. 9a).
+    let f = random_curve(60, 4);
+    let g = random_curve(60, 5);
+    let ladder: Vec<ResourceVec> = (1..=10)
+        .map(|i| budget.scaled(i as f64 / 10.0))
+        .collect();
+    bench("tap/combined-curve/10-budgets", 5, 50, || {
+        ladder
+            .iter()
+            .map(|b| combine(&f, &g, 0.25, b))
+            .collect::<Vec<_>>()
+    });
+}

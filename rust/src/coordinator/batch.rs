@@ -1,0 +1,137 @@
+//! Batch-inference host — the role of the paper's auto-generated host
+//! code (§III-B.2): load a batch into "off-chip memory", kick the DMA,
+//! and collect classifications, with the Early-Exit control flow decided
+//! on-"chip" (inside the stage-1 artifact's exit-decision kernel, not by
+//! host logic).
+//!
+//! Numerics run through PJRT; timing comes from the dataflow simulator
+//! fed with the *measured* per-sample exit decisions, so accuracy and
+//! throughput are reported from the same run, like the paper's board
+//! measurements.
+
+use crate::data::{Batch, TestSet};
+use crate::ee::decision::argmax;
+use crate::ee::profiler::{ExitOracle, ExitOutcome};
+use crate::runtime::{BaselineExec, Stage1Exec, Stage2Exec};
+use crate::sim::{simulate_ee, DesignTiming, SimConfig, SimMetrics};
+
+/// PJRT-backed oracle for the Early-Exit profiler: stage 1 always runs;
+/// stage 2 only for samples whose decision said "hard" (matching the
+/// hardware's conditional dataflow).
+pub struct PjrtOracle<'a> {
+    pub stage1: &'a Stage1Exec,
+    pub stage2: &'a Stage2Exec,
+}
+
+impl ExitOracle for PjrtOracle<'_> {
+    fn run(&mut self, images: &[&[f32]]) -> anyhow::Result<Vec<ExitOutcome>> {
+        let mut out = Vec::with_capacity(images.len());
+        for img in images {
+            let s1 = self.stage1.run(img)?;
+            let pred_final = if s1.take_exit {
+                None
+            } else {
+                Some(argmax(&self.stage2.run(&s1.features)?))
+            };
+            out.push(ExitOutcome {
+                take_exit: s1.take_exit,
+                pred_exit: s1.pred(),
+                pred_final,
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// Result of one hosted batch run.
+#[derive(Clone, Debug)]
+pub struct BatchReport {
+    pub samples: usize,
+    /// Fraction of samples the hardware decision sent to stage 2.
+    pub measured_q: f64,
+    pub accuracy: f64,
+    /// Agreement between the artifact's in-graph decision and the
+    /// exported ground-truth flags (sanity: should be ~1.0).
+    pub flag_agreement: f64,
+    /// Wall-clock numerics time on the PJRT host (not board time).
+    pub host_seconds: f64,
+    /// Simulated board timing driven by the measured decisions.
+    pub board: SimMetrics,
+}
+
+/// Batched EE inference host.
+pub struct BatchHost<'a> {
+    pub stage1: &'a Stage1Exec,
+    pub stage2: &'a Stage2Exec,
+    pub timing: DesignTiming,
+    pub sim: SimConfig,
+}
+
+impl BatchHost<'_> {
+    /// Run a batch end to end: PJRT numerics for every sample, simulator
+    /// for board timing with the measured decisions.
+    pub fn run(&self, ts: &TestSet, batch: &Batch) -> anyhow::Result<BatchReport> {
+        let start = std::time::Instant::now();
+        let mut hard_measured = Vec::with_capacity(batch.indices.len());
+        let mut correct = 0usize;
+        let mut agree = 0usize;
+        for (k, &idx) in batch.indices.iter().enumerate() {
+            let s1 = self.stage1.run(ts.image(idx))?;
+            let pred = if s1.take_exit {
+                s1.pred()
+            } else {
+                argmax(&self.stage2.run(&s1.features)?)
+            };
+            if pred == batch.labels[k] as usize {
+                correct += 1;
+            }
+            if s1.take_exit != batch.hard[k] {
+                agree += 1;
+            }
+            hard_measured.push(!s1.take_exit);
+        }
+        let host_seconds = start.elapsed().as_secs_f64();
+        let n = batch.indices.len();
+        let sim = simulate_ee(&self.timing, &self.sim, &hard_measured);
+        Ok(BatchReport {
+            samples: n,
+            measured_q: hard_measured.iter().filter(|&&h| h).count() as f64 / n as f64,
+            accuracy: correct as f64 / n as f64,
+            flag_agreement: agree as f64 / n as f64,
+            host_seconds,
+            board: SimMetrics::from_result(&sim, self.sim.clock_hz),
+        })
+    }
+}
+
+/// Baseline batch host (accuracy + simulated timing for the single-stage
+/// design).
+pub struct BaselineHost<'a> {
+    pub exec: &'a BaselineExec,
+    pub timing: DesignTiming,
+    pub sim: SimConfig,
+}
+
+impl BaselineHost<'_> {
+    pub fn run(&self, ts: &TestSet, batch: &Batch) -> anyhow::Result<BatchReport> {
+        let start = std::time::Instant::now();
+        let mut correct = 0usize;
+        for (k, &idx) in batch.indices.iter().enumerate() {
+            let probs = self.exec.run(ts.image(idx))?;
+            if argmax(&probs) == batch.labels[k] as usize {
+                correct += 1;
+            }
+        }
+        let host_seconds = start.elapsed().as_secs_f64();
+        let n = batch.indices.len();
+        let sim = crate::sim::simulate_baseline(&self.timing, &self.sim, n);
+        Ok(BatchReport {
+            samples: n,
+            measured_q: 0.0,
+            accuracy: correct as f64 / n as f64,
+            flag_agreement: 1.0,
+            host_seconds,
+            board: SimMetrics::from_result(&sim, self.sim.clock_hz),
+        })
+    }
+}

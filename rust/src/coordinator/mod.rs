@@ -1,0 +1,18 @@
+//! L3 coordinator: the end-to-end ATHEENA flow and the inference hosts.
+//!
+//! * [`toolflow`] — network JSON → CDFG → per-stage DSE → TAP combine →
+//!   buffer sizing → design manifest → simulated "board" measurement
+//!   (Fig. 5's pipeline, minus Vivado which the simulator replaces).
+//! * [`batch`]    — the generated host code's batch-inference loop: DMA
+//!   model + PJRT numerics, accuracy + exit-statistics accounting.
+//! * [`server`]   — a threaded streaming-serving front end: a dynamic
+//!   batcher feeding a stage-1 worker pool with hard samples routed to a
+//!   stage-2 pool (Python never on this path).
+
+pub mod batch;
+pub mod server;
+pub mod toolflow;
+
+pub use batch::{BatchHost, BatchReport, PjrtOracle};
+pub use server::{Server, ServerConfig, ServerStats};
+pub use toolflow::{run_toolflow, ChosenDesign, ToolflowOptions, ToolflowResult};

@@ -1,0 +1,223 @@
+//! Streaming serving front end — the deployment shape of the paper's
+//! architecture (throughput-oriented, latency-constrained, no runtime
+//! reconfiguration): requests stream in, a dynamic batcher groups them,
+//! a stage-1 worker classifies and *routes* — easy samples complete
+//! immediately (early exit), hard samples are forwarded to a stage-2
+//! worker, mirroring the Conditional Buffer's dataflow in software.
+//!
+//! Threading note: the vendored crate set has no tokio, and PJRT client
+//! handles are not `Send`; each worker thread therefore owns its own
+//! PJRT client + executables (compiled at startup), communicating over
+//! std mpsc channels. Python is never on this path.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::ee::decision::argmax;
+use crate::runtime::ArtifactStore;
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub artifacts_dir: PathBuf,
+    pub network: String,
+    /// Dynamic batcher: flush when this many requests are pending...
+    pub max_batch: usize,
+    /// ...or when the oldest pending request has waited this long.
+    pub batch_timeout: Duration,
+}
+
+impl ServerConfig {
+    pub fn new(artifacts_dir: impl Into<PathBuf>, network: &str) -> ServerConfig {
+        ServerConfig {
+            artifacts_dir: artifacts_dir.into(),
+            network: network.to_string(),
+            max_batch: 32,
+            batch_timeout: Duration::from_millis(2),
+        }
+    }
+}
+
+/// A classification response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub pred: usize,
+    pub exited_early: bool,
+    pub latency: Duration,
+}
+
+struct Request {
+    id: u64,
+    image: Vec<f32>,
+    submitted: Instant,
+    resp: mpsc::Sender<Response>,
+}
+
+struct HardSample {
+    id: u64,
+    features: Vec<f32>,
+    submitted: Instant,
+    resp: mpsc::Sender<Response>,
+}
+
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub served: AtomicU64,
+    pub exited_early: AtomicU64,
+    pub stage2: AtomicU64,
+    pub batches: AtomicU64,
+    pub errors: AtomicU64,
+}
+
+impl ServerStats {
+    pub fn exit_rate(&self) -> f64 {
+        let served = self.served.load(Ordering::Relaxed);
+        if served == 0 {
+            return 0.0;
+        }
+        self.exited_early.load(Ordering::Relaxed) as f64 / served as f64
+    }
+}
+
+/// Handle for submitting requests; dropping it shuts the server down.
+pub struct Server {
+    tx: mpsc::Sender<Request>,
+    next_id: AtomicU64,
+    pub stats: Arc<ServerStats>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the two worker threads (each compiles its own executables on
+    /// its own PJRT client) and return the submission handle.
+    pub fn start(cfg: ServerConfig) -> anyhow::Result<Server> {
+        let stats = Arc::new(ServerStats::default());
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (hard_tx, hard_rx) = mpsc::channel::<HardSample>();
+
+        // Fail fast on bad config before spawning threads.
+        {
+            let probe = ArtifactStore::open(&cfg.artifacts_dir)?;
+            probe.network(&cfg.network)?;
+        }
+
+        // ---- stage-1 worker: dynamic batcher + router ----
+        let s1_stats = stats.clone();
+        let s1_cfg = cfg.clone();
+        let stage1 = std::thread::Builder::new()
+            .name("atheena-stage1".into())
+            .spawn(move || {
+                let store = ArtifactStore::open(&s1_cfg.artifacts_dir)
+                    .expect("stage1 worker: artifacts");
+                let exec = store.stage1(&s1_cfg.network).expect("stage1 compile");
+                let mut pending: Vec<Request> = Vec::new();
+                loop {
+                    // Block for the first request of a batch.
+                    let first = match req_rx.recv() {
+                        Ok(r) => r,
+                        Err(_) => break, // all senders gone: shutdown
+                    };
+                    let deadline = Instant::now() + s1_cfg.batch_timeout;
+                    pending.push(first);
+                    // Dynamic batching: gather until full or timed out.
+                    while pending.len() < s1_cfg.max_batch {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        match req_rx.recv_timeout(deadline - now) {
+                            Ok(r) => pending.push(r),
+                            Err(mpsc::RecvTimeoutError::Timeout) => break,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                        }
+                    }
+                    s1_stats.batches.fetch_add(1, Ordering::Relaxed);
+                    for req in pending.drain(..) {
+                        match exec.run(&req.image) {
+                            Ok(out) if out.take_exit => {
+                                s1_stats.served.fetch_add(1, Ordering::Relaxed);
+                                s1_stats.exited_early.fetch_add(1, Ordering::Relaxed);
+                                let _ = req.resp.send(Response {
+                                    id: req.id,
+                                    pred: argmax(&out.exit_probs),
+                                    exited_early: true,
+                                    latency: req.submitted.elapsed(),
+                                });
+                            }
+                            Ok(out) => {
+                                // Route hard sample to stage 2.
+                                let _ = hard_tx.send(HardSample {
+                                    id: req.id,
+                                    features: out.features,
+                                    submitted: req.submitted,
+                                    resp: req.resp,
+                                });
+                            }
+                            Err(_) => {
+                                s1_stats.errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }
+                drop(hard_tx); // propagate shutdown to stage 2
+            })?;
+
+        // ---- stage-2 worker ----
+        let s2_stats = stats.clone();
+        let s2_cfg = cfg.clone();
+        let stage2 = std::thread::Builder::new()
+            .name("atheena-stage2".into())
+            .spawn(move || {
+                let store = ArtifactStore::open(&s2_cfg.artifacts_dir)
+                    .expect("stage2 worker: artifacts");
+                let exec = store.stage2(&s2_cfg.network).expect("stage2 compile");
+                while let Ok(h) = hard_rx.recv() {
+                    match exec.run(&h.features) {
+                        Ok(probs) => {
+                            s2_stats.served.fetch_add(1, Ordering::Relaxed);
+                            s2_stats.stage2.fetch_add(1, Ordering::Relaxed);
+                            let _ = h.resp.send(Response {
+                                id: h.id,
+                                pred: argmax(&probs),
+                                exited_early: false,
+                                latency: h.submitted.elapsed(),
+                            });
+                        }
+                        Err(_) => {
+                            s2_stats.errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            })?;
+
+        Ok(Server {
+            tx: req_tx,
+            next_id: AtomicU64::new(0),
+            stats,
+            workers: vec![stage1, stage2],
+        })
+    }
+
+    /// Submit one image; returns the receiver for its response.
+    pub fn submit(&self, image: Vec<f32>) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let _ = self.tx.send(Request {
+            id,
+            image,
+            submitted: Instant::now(),
+            resp: tx,
+        });
+        rx
+    }
+
+    /// Shut down: close the intake and join the workers.
+    pub fn shutdown(self) {
+        drop(self.tx);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Test-set loading + q-controlled batch construction.
+//!
+//! The build-time Python side exports each network's synthetic test split
+//! as raw binaries (`artifacts/data/<net>_test_*.{f32,u8}` + a JSON
+//! descriptor). The paper's board experiments sample batches with an
+//! exact hard-sample fraction q "distributed randomly within the batch of
+//! 1024 samples" (§IV-A); [`TestSet::batch_with_q`] reproduces that
+//! sampling.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::{json, Rng};
+
+/// A loaded test split: images are flattened row-major `(N, C*H*W)` f32.
+#[derive(Clone, Debug)]
+pub struct TestSet {
+    pub name: String,
+    pub n: usize,
+    pub shape: Vec<usize>,
+    pub images: Vec<f32>,
+    pub labels: Vec<u8>,
+    /// Ground-truth hard flags under the calibrated C_thr (1 = needs
+    /// stage 2), exported by the build-time profiler.
+    pub hard: Vec<u8>,
+}
+
+/// One assembled inference batch.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// Indices into the owning `TestSet`.
+    pub indices: Vec<usize>,
+    pub hard: Vec<bool>,
+    pub labels: Vec<u8>,
+}
+
+impl TestSet {
+    pub fn sample_words(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn image(&self, idx: usize) -> &[f32] {
+        let w = self.sample_words();
+        &self.images[idx * w..(idx + 1) * w]
+    }
+
+    /// Measured hard fraction of the whole split.
+    pub fn hard_fraction(&self) -> f64 {
+        self.hard.iter().filter(|&&h| h != 0).count() as f64 / self.n as f64
+    }
+
+    /// Load `artifacts/data/<net>_test.json` + its binaries.
+    pub fn load(artifacts: &Path, net: &str) -> anyhow::Result<TestSet> {
+        let dir = artifacts.join("data");
+        let desc_path = dir.join(format!("{net}_test.json"));
+        let desc = json::parse(&std::fs::read_to_string(&desc_path).map_err(|e| {
+            anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", desc_path.display())
+        })?)
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", desc_path.display()))?;
+
+        let n = desc
+            .req("n")?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("'n' must be a number"))?;
+        let shape: Vec<usize> = desc
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'shape' must be an array"))?
+            .iter()
+            .filter_map(|d| d.as_usize())
+            .collect();
+        let file = |key: &str| -> anyhow::Result<PathBuf> {
+            Ok(dir.join(
+                desc.req(key)?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("'{key}' must be a string"))?,
+            ))
+        };
+
+        let raw = std::fs::read(file("images")?)?;
+        let words: usize = shape.iter().product();
+        anyhow::ensure!(
+            raw.len() == n * words * 4,
+            "image file size mismatch: {} != {}",
+            raw.len(),
+            n * words * 4
+        );
+        let images: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let labels = std::fs::read(file("labels")?)?;
+        let hard = std::fs::read(file("hard")?)?;
+        anyhow::ensure!(labels.len() == n && hard.len() == n, "label/flag size mismatch");
+        Ok(TestSet {
+            name: net.to_string(),
+            n,
+            shape,
+            images,
+            labels,
+            hard,
+        })
+    }
+
+    /// Assemble a batch with an exact hard fraction q, randomly placed —
+    /// the paper's q = 20/25/30% test batches.
+    pub fn batch_with_q(&self, q: f64, batch: usize, seed: u64) -> Batch {
+        assert!((0.0..=1.0).contains(&q));
+        let mut rng = Rng::new(seed);
+        let hard_idx: Vec<usize> =
+            (0..self.n).filter(|&i| self.hard[i] != 0).collect();
+        let easy_idx: Vec<usize> =
+            (0..self.n).filter(|&i| self.hard[i] == 0).collect();
+        let n_hard = ((q * batch as f64).round() as usize).min(batch);
+        let mut indices = Vec::with_capacity(batch);
+        for k in 0..batch {
+            let pool = if k < n_hard { &hard_idx } else { &easy_idx };
+            // Sample with replacement if the pool is small (matches the
+            // paper's resampling of a fixed test split).
+            indices.push(*rng.choose(pool));
+        }
+        rng.shuffle(&mut indices);
+        Batch {
+            hard: indices.iter().map(|&i| self.hard[i] != 0).collect(),
+            labels: indices.iter().map(|&i| self.labels[i]).collect(),
+            indices,
+        }
+    }
+
+    /// First-n batch in natural order (profiling splits).
+    pub fn batch_head(&self, batch: usize) -> Batch {
+        let indices: Vec<usize> = (0..batch.min(self.n)).collect();
+        Batch {
+            hard: indices.iter().map(|&i| self.hard[i] != 0).collect(),
+            labels: indices.iter().map(|&i| self.labels[i]).collect(),
+            indices,
+        }
+    }
+}
+
+/// In-memory synthetic test set for tests/benches (no artifacts needed).
+pub fn synthetic_testset(n: usize, words: usize, hard_frac: f64, seed: u64) -> TestSet {
+    let mut rng = Rng::new(seed);
+    let mut hard = vec![0u8; n];
+    for h in hard.iter_mut() {
+        if rng.chance(hard_frac) {
+            *h = 1;
+        }
+    }
+    TestSet {
+        name: "synthetic".into(),
+        n,
+        shape: vec![words],
+        images: (0..n * words).map(|i| (i % 97) as f32 * 0.01).collect(),
+        labels: (0..n).map(|i| (i % 10) as u8).collect(),
+        hard,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_with_exact_q() {
+        let ts = synthetic_testset(1000, 4, 0.5, 1);
+        for q in [0.0, 0.2, 0.25, 0.3, 1.0] {
+            let b = ts.batch_with_q(q, 1024, 7);
+            let got = b.hard.iter().filter(|&&h| h).count();
+            assert_eq!(got, (q * 1024.0).round() as usize, "q={q}");
+            assert_eq!(b.indices.len(), 1024);
+        }
+    }
+
+    #[test]
+    fn batch_hard_positions_are_shuffled() {
+        let ts = synthetic_testset(1000, 4, 0.5, 2);
+        let b = ts.batch_with_q(0.5, 512, 3);
+        // Not all hard samples in the front half (they started there
+        // before the shuffle).
+        let front_hard = b.hard[..256].iter().filter(|&&h| h).count();
+        assert!(front_hard > 64 && front_hard < 192, "got {front_hard}");
+    }
+
+    #[test]
+    fn image_slicing() {
+        let ts = synthetic_testset(10, 8, 0.0, 4);
+        assert_eq!(ts.image(3).len(), 8);
+        assert_eq!(ts.image(3)[0], ((3 * 8) % 97) as f32 * 0.01);
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let p = Path::new("artifacts");
+        if p.join("data/blenet_test.json").exists() {
+            let ts = TestSet::load(p, "blenet").unwrap();
+            assert_eq!(ts.n, 2048);
+            assert_eq!(ts.sample_words(), 784);
+            // Build-time calibration targeted p = 0.25.
+            let f = ts.hard_fraction();
+            assert!((0.15..0.40).contains(&f), "hard fraction {f}");
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! Alternative search / allocation strategies — ablation baselines.
+//!
+//! The paper motivates both of its choices implicitly:
+//!
+//! * §III: "A naive implementation would have all stages of the network
+//!   optimized for the highest possible throughput. However, in the
+//!   presence of any resource constraints this is clearly a sub-optimal
+//!   strategy" — the **naive allocator** here implements exactly that
+//!   strawman (optimize both stages at the full budget, then scale both
+//!   down uniformly until the pair fits), so the report can quantify what
+//!   Eq. 1 buys.
+//! * fpgaConvNet chose simulated annealing for the folding search; the
+//!   **greedy** and **random-search** optimizers here provide the
+//!   comparison points for that choice (`atheena report` ablation +
+//!   `benches/bench_ablation.rs`).
+
+use super::annealer::{AnnealConfig, AnnealResult};
+use super::problem::Problem;
+use crate::resources::ResourceVec;
+use crate::sdf::folding::FoldingSpace;
+use crate::tap::{CombinedDesign, TapCurve};
+use crate::util::Rng;
+
+/// Greedy hill-climb: repeatedly take the single folding step (over all
+/// nodes and axes) with the best II improvement per additional limiting
+/// resource, until nothing fits. Deterministic.
+pub fn greedy(problem: &Problem) -> AnnealResult {
+    let mut mapping = problem.mapping.clone();
+    let mut iterations = 0usize;
+    loop {
+        iterations += 1;
+        let cur_ii = problem.ii(&mapping);
+        let mut best: Option<(f64, usize, crate::sdf::Folding)> = None;
+        for &id in &problem.active {
+            let space = &mapping.spaces[id];
+            let cur = mapping.foldings[id];
+            let candidates = [
+                FoldingSpace::step(&space.coarse_in, cur.coarse_in, true)
+                    .map(|v| crate::sdf::Folding { coarse_in: v, ..cur }),
+                FoldingSpace::step(&space.coarse_out, cur.coarse_out, true)
+                    .map(|v| crate::sdf::Folding { coarse_out: v, ..cur }),
+                FoldingSpace::step(&space.fine, cur.fine, true)
+                    .map(|v| crate::sdf::Folding { fine: v, ..cur }),
+            ];
+            for cand in candidates.into_iter().flatten() {
+                let prev = mapping.foldings[id];
+                mapping.foldings[id] = cand;
+                let ii = problem.ii(&mapping);
+                let feasible = problem.feasible(&mapping);
+                let res = problem.resources(&mapping);
+                mapping.foldings[id] = prev;
+                if !feasible || ii >= cur_ii {
+                    continue;
+                }
+                // Improvement density: II gain per marginal utilisation.
+                let util = res.max_utilisation(&problem.budget).max(1e-9);
+                let score = (cur_ii - ii) as f64 / util;
+                if best.as_ref().map(|(s, _, _)| score > *s).unwrap_or(true) {
+                    best = Some((score, id, cand));
+                }
+            }
+        }
+        match best {
+            Some((_, id, f)) => mapping.foldings[id] = f,
+            None => break,
+        }
+    }
+    let ii = problem.ii(&mapping);
+    AnnealResult {
+        throughput: problem.clock_hz / ii as f64,
+        resources: problem.resources(&mapping),
+        feasible: problem.feasible(&mapping),
+        ii,
+        mapping,
+        iterations_run: iterations,
+    }
+}
+
+/// Pure random search with the same evaluation budget as the annealer:
+/// sample random feasible folding assignments, keep the best.
+pub fn random_search(problem: &Problem, cfg: &AnnealConfig) -> AnnealResult {
+    let mut rng = Rng::new(cfg.seed);
+    let evals = cfg.iterations * cfg.restarts;
+    let mut best: Option<(u64, crate::sdf::HwMapping)> = None;
+    let mut mapping = problem.mapping.clone();
+    for _ in 0..evals {
+        for &id in &problem.active {
+            let space = &mapping.spaces[id];
+            mapping.foldings[id] = crate::sdf::Folding {
+                coarse_in: *rng.choose(&space.coarse_in),
+                coarse_out: *rng.choose(&space.coarse_out),
+                fine: *rng.choose(&space.fine),
+            };
+        }
+        if !problem.feasible(&mapping) {
+            continue;
+        }
+        let ii = problem.ii(&mapping);
+        if best.as_ref().map(|(b, _)| ii < *b).unwrap_or(true) {
+            best = Some((ii, mapping.clone()));
+        }
+    }
+    let (ii, mapping) = best.unwrap_or_else(|| {
+        let m = problem.mapping.clone();
+        (problem.ii(&m), m)
+    });
+    AnnealResult {
+        throughput: problem.clock_hz / ii as f64,
+        resources: problem.resources(&mapping),
+        feasible: problem.feasible(&mapping),
+        ii,
+        mapping,
+        iterations_run: evals,
+    }
+}
+
+/// The §III strawman: allocate *both* stages their individually-best
+/// design at the full budget (highest possible throughput each), then
+/// walk both down the Pareto curves in lockstep until the pair fits the
+/// combined budget. No probability-aware 1/p scaling.
+pub fn naive_combine(
+    f: &TapCurve,
+    g: &TapCurve,
+    budget: &ResourceVec,
+) -> Option<CombinedDesign> {
+    let mut i = f.points.len();
+    let mut j = g.points.len();
+    while i > 0 && j > 0 {
+        let s1 = &f.points[i - 1];
+        let s2 = &g.points[j - 1];
+        if (s1.resources + s2.resources).fits_in(budget) {
+            return Some(CombinedDesign {
+                stage1: *s1,
+                stage2: *s2,
+                p: 1.0, // the naive strategy ignores p
+                throughput_at_p: s1.throughput.min(s2.throughput),
+            });
+        }
+        // Step down whichever stage currently spends more of the budget's
+        // scarcest resource.
+        let u1 = s1.resources.max_utilisation(budget);
+        let u2 = s2.resources.max_utilisation(budget);
+        if u1 >= u2 {
+            i -= 1;
+        } else {
+            j -= 1;
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::annealer::anneal;
+    use crate::dse::problem::Problem;
+    use crate::ir::network::testnet;
+    use crate::ir::Cdfg;
+    use crate::resources::Board;
+    use crate::tap::{combine, TapPoint};
+
+    fn problem(frac: f64) -> Problem {
+        let net = testnet::blenet_like();
+        let board = Board::zc706();
+        Problem::baseline(
+            Cdfg::lower_baseline(&net),
+            board.budget(frac),
+            board.clock_hz,
+        )
+    }
+
+    #[test]
+    fn greedy_finds_feasible_fast_design() {
+        let p = problem(0.5);
+        let r = greedy(&p);
+        assert!(r.feasible);
+        assert!(r.throughput > p.throughput(&p.mapping) * 5.0);
+    }
+
+    #[test]
+    fn annealer_at_least_matches_greedy_and_random() {
+        let p = problem(0.4);
+        let cfg = AnnealConfig::default();
+        let sa = anneal(&p, &cfg);
+        let gr = greedy(&p);
+        let rs = random_search(&p, &AnnealConfig::quick());
+        assert!(
+            sa.throughput >= gr.throughput * 0.95,
+            "SA {} vs greedy {}",
+            sa.throughput,
+            gr.throughput
+        );
+        assert!(
+            sa.throughput >= rs.throughput,
+            "SA {} vs random {}",
+            sa.throughput,
+            rs.throughput
+        );
+    }
+
+    #[test]
+    fn naive_combine_ignores_p_and_loses() {
+        // Construct curves where probability-aware allocation wins: the
+        // second stage can be 4x under-provisioned at p=0.25.
+        let pt = |thr: f64, dsp: u64| TapPoint {
+            resources: ResourceVec::new(dsp * 10, dsp * 10, dsp, 10),
+            throughput: thr,
+            ii: 1,
+            budget_fraction: 0.0,
+            source: 0,
+        };
+        // Stage 1 has an expensive fast point that only pairs with the
+        // small stage-2 point; the naive lockstep walk (blind to 1/p)
+        // steps stage 1 down instead of exploiting that pairing.
+        let f = TapCurve::from_points(vec![pt(100.0, 100), pt(390.0, 650)]);
+        let g = TapCurve::from_points(vec![pt(90.0, 90), pt(400.0, 650)]);
+        let budget = ResourceVec::new(10_000, 10_000, 740, 1_000);
+        let naive = naive_combine(&f, &g, &budget).unwrap();
+        let eq1 = combine(&f, &g, 0.25, &budget).unwrap();
+        assert!(
+            eq1.throughput_at(0.25) > naive.throughput_at(0.25),
+            "Eq.1 {} should beat naive {}",
+            eq1.throughput_at(0.25),
+            naive.throughput_at(0.25)
+        );
+    }
+}

@@ -1,0 +1,18 @@
+//! Design-space exploration — fpgaConvNet's simulated-annealing optimizer,
+//! extended with ATHEENA's per-stage problems (§III-B: "Modifications to
+//! the parser and optimizer are made to ... encompass the control-flow").
+//!
+//! * [`problem`]  — what is being optimized: a node subset of a CDFG with
+//!                  an II objective and a resource budget,
+//! * [`annealer`] — the simulated-annealing search over foldings,
+//! * [`sweep`]    — budget sweeps producing Throughput-Area Pareto points.
+
+pub mod annealer;
+pub mod baselines;
+pub mod problem;
+pub mod sweep;
+
+pub use annealer::{anneal, AnnealConfig, AnnealResult};
+pub use baselines::{greedy, naive_combine, random_search};
+pub use problem::{Problem, ProblemKind};
+pub use sweep::{sweep_budgets, SweepConfig};

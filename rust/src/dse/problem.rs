@@ -1,0 +1,167 @@
+//! DSE problem definition: which CDFG nodes are being folded, what counts
+//! against the budget, and what II is being minimized.
+//!
+//! The paper generates *separate* TAP functions for each stage of the EE
+//! network (§III-A) by giving the optimizer "limited fractions of the
+//! board resource constraints". A `Problem` captures one such sub-design:
+//! the baseline backbone, the full-rate first stage (backbone prefix +
+//! split + exit classifier + decision + merge), or the hard-sample second
+//! stage (conditional buffer + backbone suffix).
+
+use crate::ir::{Cdfg, StageId};
+use crate::resources::{model, ResourceVec};
+use crate::sdf::HwMapping;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProblemKind {
+    /// Single-stage baseline network (whole backbone, full rate).
+    Baseline,
+    /// EE stage 1: everything running at the input sample rate.
+    Stage1,
+    /// EE stage 2: the section behind the Conditional Buffer.
+    Stage2,
+}
+
+/// One DSE instance over a node subset of a mapping.
+#[derive(Clone, Debug)]
+pub struct Problem {
+    pub kind: ProblemKind,
+    pub mapping: HwMapping,
+    /// Node ids whose folding the search mutates and whose resources are
+    /// charged against the budget.
+    pub active: Vec<usize>,
+    pub budget: ResourceVec,
+    pub clock_hz: f64,
+}
+
+impl Problem {
+    pub fn baseline(cdfg: Cdfg, budget: ResourceVec, clock_hz: f64) -> Problem {
+        let mapping = HwMapping::minimal(cdfg);
+        let active = (0..mapping.cdfg.nodes.len()).collect();
+        Problem {
+            kind: ProblemKind::Baseline,
+            mapping,
+            active,
+            budget,
+            clock_hz,
+        }
+    }
+
+    pub fn stage1(cdfg: Cdfg, budget: ResourceVec, clock_hz: f64) -> Problem {
+        let mapping = HwMapping::minimal(cdfg);
+        let active = mapping
+            .cdfg
+            .nodes
+            .iter()
+            .filter(|n| {
+                matches!(
+                    n.stage,
+                    StageId::Stage1 | StageId::ExitBranch | StageId::Egress
+                )
+            })
+            .map(|n| n.id)
+            .collect();
+        Problem {
+            kind: ProblemKind::Stage1,
+            mapping,
+            active,
+            budget,
+            clock_hz,
+        }
+    }
+
+    pub fn stage2(cdfg: Cdfg, budget: ResourceVec, clock_hz: f64) -> Problem {
+        let mapping = HwMapping::minimal(cdfg);
+        let active = mapping
+            .cdfg
+            .nodes
+            .iter()
+            .filter(|n| n.stage == StageId::Stage2)
+            .map(|n| n.id)
+            .collect();
+        Problem {
+            kind: ProblemKind::Stage2,
+            mapping,
+            active,
+            budget,
+            clock_hz,
+        }
+    }
+
+    /// II being minimized: max over the active nodes.
+    pub fn ii(&self, mapping: &HwMapping) -> u64 {
+        self.active
+            .iter()
+            .map(|&id| mapping.node_ii(id))
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Resources charged to this problem. Infrastructure (DMA etc.) is
+    /// charged to Baseline and Stage1 (which host the I/O path); Stage2's
+    /// share arrives via the TAP combination's shared-budget form.
+    pub fn resources(&self, mapping: &HwMapping) -> ResourceVec {
+        let mut total = match self.kind {
+            ProblemKind::Baseline | ProblemKind::Stage1 => model::infrastructure(),
+            ProblemKind::Stage2 => ResourceVec::ZERO,
+        };
+        for &id in &self.active {
+            total += mapping.node_resources(id);
+        }
+        total
+    }
+
+    pub fn feasible(&self, mapping: &HwMapping) -> bool {
+        self.resources(mapping).fits_in(&self.budget)
+    }
+
+    /// Throughput at the nominal (unscaled) rate for a mapping.
+    pub fn throughput(&self, mapping: &HwMapping) -> f64 {
+        self.clock_hz / self.ii(mapping) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::network::testnet;
+    use crate::resources::Board;
+
+    #[test]
+    fn stage_problems_partition_std_nodes() {
+        let net = testnet::blenet_like();
+        let board = Board::zc706();
+        let cdfg = Cdfg::lower(&net, 8);
+        let p1 = Problem::stage1(cdfg.clone(), board.resources, board.clock_hz);
+        let p2 = Problem::stage2(cdfg.clone(), board.resources, board.clock_hz);
+        // Disjoint and jointly exhaustive over the CDFG.
+        for id in &p1.active {
+            assert!(!p2.active.contains(id));
+        }
+        assert_eq!(p1.active.len() + p2.active.len(), cdfg.nodes.len());
+    }
+
+    #[test]
+    fn minimal_mapping_feasible_on_board() {
+        let net = testnet::blenet_like();
+        let board = Board::zc706();
+        let p = Problem::baseline(
+            Cdfg::lower_baseline(&net),
+            board.resources,
+            board.clock_hz,
+        );
+        assert!(p.feasible(&p.mapping));
+        assert!(p.throughput(&p.mapping) > 0.0);
+    }
+
+    #[test]
+    fn tiny_budget_infeasible() {
+        let net = testnet::blenet_like();
+        let p = Problem::baseline(
+            Cdfg::lower_baseline(&net),
+            ResourceVec::new(100, 100, 1, 1),
+            125e6,
+        );
+        assert!(!p.feasible(&p.mapping));
+    }
+}

@@ -1,0 +1,107 @@
+//! Budget sweeps: run the annealer at a ladder of resource fractions to
+//! trace a stage's Throughput-Area Pareto set (§IV-A: "Both the ATHEENA
+//! optimizer and baseline optimizer are provided the board resources
+//! constrained at different percentages in order to generate a
+//! Throughput-Area Pareto curve ... they are run ten times and the best
+//! points are chosen").
+
+use super::annealer::{anneal, AnnealConfig, AnnealResult};
+use super::problem::{Problem, ProblemKind};
+use crate::ir::Cdfg;
+use crate::resources::Board;
+use crate::tap::{TapCurve, TapPoint};
+
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// Board-resource fractions to constrain the optimizer at.
+    pub fractions: Vec<f64>,
+    pub anneal: AnnealConfig,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            fractions: vec![0.15, 0.2, 0.25, 0.3, 0.4, 0.5, 0.6, 0.7, 0.85, 1.0],
+            anneal: AnnealConfig::default(),
+        }
+    }
+}
+
+impl SweepConfig {
+    pub fn quick() -> SweepConfig {
+        SweepConfig {
+            fractions: vec![0.25, 0.5, 1.0],
+            anneal: AnnealConfig::quick(),
+        }
+    }
+}
+
+/// Sweep one problem kind over the budget ladder, returning the TAP curve
+/// (feasible points only) plus every raw annealer result for reporting.
+pub fn sweep_budgets(
+    kind: ProblemKind,
+    cdfg: &Cdfg,
+    board: &Board,
+    cfg: &SweepConfig,
+) -> (TapCurve, Vec<AnnealResult>) {
+    let mut results = Vec::new();
+    let mut points = Vec::new();
+    for (i, &frac) in cfg.fractions.iter().enumerate() {
+        let budget = board.budget(frac);
+        let problem = match kind {
+            ProblemKind::Baseline => Problem::baseline(cdfg.clone(), budget, board.clock_hz),
+            ProblemKind::Stage1 => Problem::stage1(cdfg.clone(), budget, board.clock_hz),
+            ProblemKind::Stage2 => Problem::stage2(cdfg.clone(), budget, board.clock_hz),
+        };
+        let mut acfg = cfg.anneal.clone();
+        acfg.seed = cfg.anneal.seed.wrapping_add(i as u64 * 7919);
+        let r = anneal(&problem, &acfg);
+        if r.feasible {
+            points.push(TapPoint {
+                resources: r.resources,
+                throughput: r.throughput,
+                ii: r.ii,
+                budget_fraction: frac,
+                source: results.len(),
+            });
+        }
+        results.push(r);
+    }
+    (TapCurve::from_points(points), results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::network::testnet;
+
+    #[test]
+    fn sweep_produces_monotone_pareto() {
+        let net = testnet::blenet_like();
+        let board = Board::zc706();
+        let cdfg = Cdfg::lower_baseline(&net);
+        let (curve, raw) = sweep_budgets(
+            ProblemKind::Baseline,
+            &cdfg,
+            &board,
+            &SweepConfig::quick(),
+        );
+        assert!(!curve.points.is_empty());
+        assert_eq!(raw.len(), 3);
+        // Pareto: throughput non-decreasing when sorted by DSP usage.
+        let pts = &curve.points;
+        for w in pts.windows(2) {
+            assert!(w[1].throughput >= w[0].throughput);
+        }
+    }
+
+    #[test]
+    fn stage2_sweep_runs() {
+        let net = testnet::blenet_like();
+        let board = Board::zc706();
+        let cdfg = Cdfg::lower(&net, 8);
+        let (curve, _) =
+            sweep_budgets(ProblemKind::Stage2, &cdfg, &board, &SweepConfig::quick());
+        assert!(!curve.points.is_empty());
+    }
+}

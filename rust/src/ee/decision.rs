@@ -1,0 +1,131 @@
+//! Exit-decision arithmetic (paper Eq. 2–4), host-side reference.
+//!
+//! The authoritative on-"hardware" implementation is the Pallas kernel
+//! baked into the stage-1 HLO artifact (python/compile/kernels/
+//! exit_decision.py). The coordinator still needs the same math on the
+//! host: to re-derive decisions from logits, to sweep thresholds, and to
+//! cross-check the artifact's flag (integration tests assert the two
+//! agree bit-for-bit on the decision).
+
+/// Numerically-stable softmax (Eq. 3).
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&x| (x - m).exp()).collect();
+    let s: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / s).collect()
+}
+
+/// Eq. 4 in division-free shifted form:
+/// `max_i exp(x_i - m) > C_thr * sum_j exp(x_j - m)`.
+/// Both sides of the paper's Eq. 4 scale by `exp(-m)` so the shift
+/// preserves the decision exactly while keeping `exp` in range.
+pub fn exit_decision(logits: &[f32], c_thr: f64) -> bool {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f64;
+    let mut max_e = 0.0f64;
+    for &x in logits {
+        let e = ((x - m) as f64).exp();
+        sum += e;
+        max_e = max_e.max(e);
+    }
+    max_e > c_thr * sum
+}
+
+/// Max-softmax confidence (the quantity C_thr thresholds, Eq. 2).
+pub fn confidence(logits: &[f32]) -> f64 {
+    softmax(logits).iter().copied().fold(0.0f32, f32::max) as f64
+}
+
+/// Pick the threshold whose exit rate leaves a fraction `p_target` of
+/// samples hard, given per-sample confidences (the calibration step the
+/// build-time profiler performs; exposed here so the Rust profiler can
+/// re-calibrate against runtime-measured confidences).
+pub fn threshold_for_p(confidences: &mut [f64], p_target: f64) -> f64 {
+    assert!(!confidences.is_empty());
+    confidences.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((p_target * confidences.len() as f64) as usize)
+        .min(confidences.len() - 1);
+    confidences[idx]
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, close, gen_vec, prop_assert};
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn decision_consistent_with_eq2() {
+        // Eq. 4 (division-free) must agree with Eq. 2 (max softmax > thr).
+        check(300, |r| {
+            let n = 2 + r.below(30);
+            let logits = gen_vec(r, n, |r| (r.f64() as f32 - 0.5) * 20.0);
+            let thr = 0.05 + 0.9 * r.f64();
+            let eq4 = exit_decision(&logits, thr);
+            let eq2 = confidence(&logits) > thr;
+            prop_assert(eq4 == eq2, "Eq.4 and Eq.2 disagree")
+        });
+    }
+
+    #[test]
+    fn decision_shift_invariant() {
+        // Adding a constant to all logits must not change the decision
+        // (softmax invariance — the stability property the kernel needs).
+        check(300, |r| {
+            let n = 2 + r.below(10);
+            let logits = gen_vec(r, n, |r| (r.f64() as f32 - 0.5) * 8.0);
+            let shift = (r.f64() as f32 - 0.5) * 60.0;
+            let shifted: Vec<f32> = logits.iter().map(|&x| x + shift).collect();
+            let thr = 0.05 + 0.9 * r.f64();
+            prop_assert(
+                exit_decision(&logits, thr) == exit_decision(&shifted, thr),
+                "decision not shift-invariant",
+            )
+        });
+    }
+
+    #[test]
+    fn extreme_logits_stay_finite() {
+        assert!(exit_decision(&[500.0, -500.0], 0.9));
+        assert!(!exit_decision(&[300.0, 300.0], 0.9));
+        let p = softmax(&[400.0, -400.0, 0.0]);
+        assert!(p.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn threshold_calibration_hits_target_p() {
+        check(50, |r| {
+            let n = 200 + r.below(400);
+            let mut conf = gen_vec(r, n, |r| 0.1 + 0.9 * r.f64());
+            let p = 0.1 + 0.5 * r.f64();
+            let thr = threshold_for_p(&mut conf.clone(), p);
+            // Hard = conf <= thr; fraction should be close to p.
+            let hard = conf.iter().filter(|&&c| c <= thr).count() as f64 / n as f64;
+            conf.sort_by(|a, b| a.total_cmp(b));
+            prop_assert(
+                close(hard, p, 0.0, 2.0 / n as f64 + 0.02),
+                &format!("calibrated hard fraction {hard} vs target {p}"),
+            )
+        });
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Early-Exit specifics: the exit-decision math (Eq. 2–4) and the
+//! Early-Exit profiler (§III-B.1).
+
+pub mod decision;
+pub mod profiler;
+
+pub use decision::{exit_decision, softmax, threshold_for_p};
+pub use profiler::{ExitOracle, ProfileReport, Profiler};

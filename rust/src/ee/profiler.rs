@@ -1,0 +1,198 @@
+//! The Early-Exit profiler (§III-B.1).
+//!
+//! "We introduce the Early-Exit profiler which takes a profiling data set
+//! and the high-level Early-Exit ConvNet description and apportions the
+//! set so that multiple distinct tests can be run which will have a
+//! similar probability of hard samples on average but variation
+//! individually. Batched inference is performed over the sets followed by
+//! collection of the exit probabilities, exit accuracy, and cumulative
+//! accuracy. The average probability of hard samples is fed into the
+//! optimizer as p."
+//!
+//! The inference backend is abstracted as [`ExitOracle`] so the profiler
+//! is testable without artifacts; the production implementation runs the
+//! stage-1/stage-2 HLO executables over PJRT (`coordinator::batch`).
+
+use crate::data::TestSet;
+
+/// Per-sample inference outcome needed by the profiler.
+#[derive(Clone, Copy, Debug)]
+pub struct ExitOutcome {
+    /// Did the exit decision fire (sample exits early)?
+    pub take_exit: bool,
+    /// Early-exit classifier prediction.
+    pub pred_exit: usize,
+    /// Final classifier prediction (None if the backend short-circuits
+    /// stage 2 for exited samples — the profiler then uses pred_exit).
+    pub pred_final: Option<usize>,
+}
+
+/// Inference backend over which profiling runs.
+pub trait ExitOracle {
+    fn run(&mut self, images: &[&[f32]]) -> anyhow::Result<Vec<ExitOutcome>>;
+}
+
+/// One profiling split's statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SplitStats {
+    pub n: usize,
+    pub p_hard: f64,
+    pub exit_acc_on_taken: f64,
+    pub deployed_acc: f64,
+}
+
+/// Aggregated profiler output: the p fed to the optimizer + accuracies.
+#[derive(Clone, Debug, Default)]
+pub struct ProfileReport {
+    pub splits: Vec<SplitStats>,
+    /// Average hard-sample probability across splits (the optimizer's p).
+    pub p_hard: f64,
+    /// Standard deviation of p across splits (the q-variation the design
+    /// must be robust to — drives the buffer margin).
+    pub p_std: f64,
+    pub exit_acc_on_taken: f64,
+    pub deployed_acc: f64,
+}
+
+pub struct Profiler {
+    /// Number of distinct splits ("multiple distinct tests ... similar
+    /// probability on average but variation individually").
+    pub splits: usize,
+}
+
+impl Default for Profiler {
+    fn default() -> Self {
+        Profiler { splits: 4 }
+    }
+}
+
+impl Profiler {
+    /// Profile a test set through an oracle.
+    pub fn profile(
+        &self,
+        oracle: &mut dyn ExitOracle,
+        ts: &TestSet,
+        samples: usize,
+    ) -> anyhow::Result<ProfileReport> {
+        let n = samples.min(ts.n);
+        anyhow::ensure!(n >= self.splits, "need at least one sample per split");
+        let per = n / self.splits;
+        let mut report = ProfileReport::default();
+        for split in 0..self.splits {
+            let lo = split * per;
+            let hi = if split + 1 == self.splits { n } else { lo + per };
+            let images: Vec<&[f32]> = (lo..hi).map(|i| ts.image(i)).collect();
+            let outcomes = oracle.run(&images)?;
+            anyhow::ensure!(outcomes.len() == hi - lo, "oracle returned wrong count");
+            let mut hard = 0usize;
+            let mut taken_correct = 0usize;
+            let mut taken = 0usize;
+            let mut deployed_correct = 0usize;
+            for (k, o) in outcomes.iter().enumerate() {
+                let label = ts.labels[lo + k] as usize;
+                if o.take_exit {
+                    taken += 1;
+                    if o.pred_exit == label {
+                        taken_correct += 1;
+                        deployed_correct += 1;
+                    }
+                } else {
+                    hard += 1;
+                    let pred = o.pred_final.unwrap_or(o.pred_exit);
+                    if pred == label {
+                        deployed_correct += 1;
+                    }
+                }
+            }
+            let m = hi - lo;
+            report.splits.push(SplitStats {
+                n: m,
+                p_hard: hard as f64 / m as f64,
+                exit_acc_on_taken: if taken > 0 {
+                    taken_correct as f64 / taken as f64
+                } else {
+                    0.0
+                },
+                deployed_acc: deployed_correct as f64 / m as f64,
+            });
+        }
+        let ps: Vec<f64> = report.splits.iter().map(|s| s.p_hard).collect();
+        report.p_hard = ps.iter().sum::<f64>() / ps.len() as f64;
+        report.p_std = (ps
+            .iter()
+            .map(|p| (p - report.p_hard).powi(2))
+            .sum::<f64>()
+            / ps.len() as f64)
+            .sqrt();
+        report.exit_acc_on_taken = report
+            .splits
+            .iter()
+            .map(|s| s.exit_acc_on_taken * s.n as f64)
+            .sum::<f64>()
+            / n as f64;
+        report.deployed_acc = report
+            .splits
+            .iter()
+            .map(|s| s.deployed_acc * s.n as f64)
+            .sum::<f64>()
+            / n as f64;
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic_testset;
+
+    /// Mock oracle: uses the set's ground-truth flags and is always right
+    /// on easy samples, 80% right on hard ones.
+    struct MockOracle<'a> {
+        ts: &'a TestSet,
+        cursor: usize,
+    }
+
+    impl ExitOracle for MockOracle<'_> {
+        fn run(&mut self, images: &[&[f32]]) -> anyhow::Result<Vec<ExitOutcome>> {
+            let mut out = Vec::new();
+            for _ in images {
+                let i = self.cursor;
+                self.cursor += 1;
+                let label = self.ts.labels[i] as usize;
+                let hard = self.ts.hard[i] != 0;
+                out.push(ExitOutcome {
+                    take_exit: !hard,
+                    pred_exit: label,
+                    pred_final: Some(if i % 5 == 0 { (label + 1) % 10 } else { label }),
+                });
+            }
+            Ok(out)
+        }
+    }
+
+    #[test]
+    fn profiler_recovers_p_and_accuracy() {
+        let ts = synthetic_testset(2000, 4, 0.25, 9);
+        let mut oracle = MockOracle { ts: &ts, cursor: 0 };
+        let report = Profiler::default()
+            .profile(&mut oracle, &ts, 2000)
+            .unwrap();
+        assert_eq!(report.splits.len(), 4);
+        assert!(
+            (report.p_hard - ts.hard_fraction()).abs() < 0.01,
+            "p {} vs {}",
+            report.p_hard,
+            ts.hard_fraction()
+        );
+        assert!((report.exit_acc_on_taken - 1.0).abs() < 1e-9);
+        assert!(report.deployed_acc > 0.9);
+        assert!(report.p_std < 0.1, "splits should be similar");
+    }
+
+    #[test]
+    fn too_few_samples_rejected() {
+        let ts = synthetic_testset(3, 4, 0.5, 1);
+        let mut oracle = MockOracle { ts: &ts, cursor: 0 };
+        assert!(Profiler::default().profile(&mut oracle, &ts, 3).is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! Design-manifest generation: the toolflow's artifact for one chosen
+//! design point (one "parallel HLS compilation" unit per CDFG node).
+
+use crate::resources::ResourceVec;
+use crate::sdf::HwMapping;
+use crate::sim::DesignTiming;
+use crate::util::Json;
+
+/// One layer core, as the parallel-HLS flow would emit it.
+#[derive(Clone, Debug)]
+pub struct LayerCore {
+    pub name: String,
+    pub op: String,
+    pub coarse_in: usize,
+    pub coarse_out: usize,
+    pub fine: usize,
+    pub ii: u64,
+    pub latency: u64,
+    pub resources: ResourceVec,
+    pub in_words: usize,
+    pub out_words: usize,
+    /// Needs a CPU start signal (every HLS core does, §III-B.2).
+    pub needs_start: bool,
+}
+
+/// A complete design bundle: cores + stitching edges + host config.
+#[derive(Clone, Debug)]
+pub struct DesignManifest {
+    pub network: String,
+    pub cores: Vec<LayerCore>,
+    /// (producer core idx, consumer core idx) stream connections.
+    pub streams: Vec<(usize, usize)>,
+    pub total_resources: ResourceVec,
+    pub timing: DesignTiming,
+}
+
+/// Lower a chosen design point into its manifest.
+pub fn generate_design(m: &HwMapping, is_baseline: bool) -> DesignManifest {
+    let cores = m
+        .cdfg
+        .nodes
+        .iter()
+        .map(|n| {
+            let f = &m.foldings[n.id];
+            LayerCore {
+                name: n.name.clone(),
+                op: n.op.name().to_string(),
+                coarse_in: f.coarse_in,
+                coarse_out: f.coarse_out,
+                fine: f.fine,
+                ii: m.node_ii(n.id),
+                latency: m.node_latency(n.id),
+                resources: m.node_resources(n.id),
+                in_words: n.in_shape.words(),
+                out_words: n.out_shape.words(),
+                needs_start: true,
+            }
+        })
+        .collect();
+    DesignManifest {
+        network: m.cdfg.network.clone(),
+        cores,
+        streams: m.cdfg.edges.clone(),
+        total_resources: m.total_resources(),
+        timing: if is_baseline {
+            DesignTiming::from_baseline_mapping(m)
+        } else {
+            DesignTiming::from_ee_mapping(m)
+        },
+    }
+}
+
+impl DesignManifest {
+    /// Serialize to the JSON bundle format (`atheena toolflow --emit`).
+    pub fn to_json(&self) -> Json {
+        let cores = self
+            .cores
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("name", Json::str(c.name.clone())),
+                    ("op", Json::str(c.op.clone())),
+                    ("coarse_in", Json::num(c.coarse_in as f64)),
+                    ("coarse_out", Json::num(c.coarse_out as f64)),
+                    ("fine", Json::num(c.fine as f64)),
+                    ("ii", Json::num(c.ii as f64)),
+                    ("latency", Json::num(c.latency as f64)),
+                    ("in_words", Json::num(c.in_words as f64)),
+                    ("out_words", Json::num(c.out_words as f64)),
+                    ("needs_start", Json::Bool(c.needs_start)),
+                    (
+                        "resources",
+                        Json::obj(vec![
+                            ("lut", Json::num(c.resources.lut as f64)),
+                            ("ff", Json::num(c.resources.ff as f64)),
+                            ("dsp", Json::num(c.resources.dsp as f64)),
+                            ("bram", Json::num(c.resources.bram as f64)),
+                        ]),
+                    ),
+                ])
+            })
+            .collect::<Vec<_>>();
+        let streams = self
+            .streams
+            .iter()
+            .map(|(a, b)| Json::arr(vec![Json::num(*a as f64), Json::num(*b as f64)]))
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("network", Json::str(self.network.clone())),
+            ("cores", Json::Arr(cores)),
+            ("streams", Json::Arr(streams)),
+            (
+                "total_resources",
+                Json::obj(vec![
+                    ("lut", Json::num(self.total_resources.lut as f64)),
+                    ("ff", Json::num(self.total_resources.ff as f64)),
+                    ("dsp", Json::num(self.total_resources.dsp as f64)),
+                    ("bram", Json::num(self.total_resources.bram as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::network::testnet;
+    use crate::ir::Cdfg;
+    use crate::util::json;
+
+    #[test]
+    fn manifest_covers_every_node() {
+        let net = testnet::blenet_like();
+        let m = HwMapping::minimal(Cdfg::lower(&net, 8));
+        let d = generate_design(&m, false);
+        assert_eq!(d.cores.len(), m.cdfg.nodes.len());
+        assert_eq!(d.streams.len(), m.cdfg.edges.len());
+        assert!(d.cores.iter().all(|c| c.needs_start));
+    }
+
+    #[test]
+    fn manifest_json_roundtrips() {
+        let net = testnet::blenet_like();
+        let m = HwMapping::minimal(Cdfg::lower(&net, 8));
+        let j = generate_design(&m, false).to_json();
+        let text = j.to_string_pretty();
+        let back = json::parse(&text).unwrap();
+        assert_eq!(back, j);
+        assert_eq!(
+            back.get("network").unwrap().as_str().unwrap(),
+            "blenet-test"
+        );
+    }
+}

@@ -1,0 +1,18 @@
+//! HLS backend stand-in: per-layer design manifests + stitching netlist.
+//!
+//! §III-B.2: ATHEENA "automatically split[s] the network into the
+//! individual layers, generating top-level HLS files for each ... The
+//! layers are then automatically stitched together at the board design
+//! stage in Vivado IP Integrator". Without Vivado, the observable output
+//! of that flow is (a) one synthesizable core description per layer,
+//! (b) the stitching netlist (stream connections + control/start fan-out),
+//! and (c) the host-side DMA/batch configuration. This module emits all
+//! three as a JSON design bundle — the "bitstream" our simulator loads —
+//! and verifies the stitch (every stream connected, widths match, every
+//! core reachable from the DMA).
+
+pub mod codegen;
+pub mod stitch;
+
+pub use codegen::{generate_design, DesignManifest};
+pub use stitch::{stitch, StitchReport};

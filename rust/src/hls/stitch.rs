@@ -1,0 +1,158 @@
+//! Stitch verification — the IP-Integrator step's correctness checks.
+//!
+//! After parallel per-layer compilation, the paper's flow stitches the
+//! cores in Vivado IP Integrator; a mis-stitched design fails in
+//! synthesis or (worse) on the board. We verify the properties the
+//! board design must satisfy *before* handing the bundle to the
+//! simulator:
+//!
+//! 1. every stream connects an existing producer to an existing consumer,
+//! 2. stream word-widths match across each connection,
+//! 3. every core is reachable from the input DMA,
+//! 4. exactly one sink (the output DMA attachment point),
+//! 5. every core has its start signal accounted for.
+
+use super::codegen::DesignManifest;
+
+#[derive(Clone, Debug, Default)]
+pub struct StitchReport {
+    pub cores: usize,
+    pub streams: usize,
+    pub start_signals: usize,
+    pub errors: Vec<String>,
+}
+
+impl StitchReport {
+    pub fn ok(&self) -> bool {
+        self.errors.is_empty()
+    }
+}
+
+/// Verify the bundle's stitching; returns the report (errors collected,
+/// not short-circuited, so a broken design surfaces every problem at
+/// once — the behaviour you want from a build step).
+pub fn stitch(d: &DesignManifest) -> StitchReport {
+    let n = d.cores.len();
+    let mut report = StitchReport {
+        cores: n,
+        streams: d.streams.len(),
+        start_signals: d.cores.iter().filter(|c| c.needs_start).count(),
+        errors: Vec::new(),
+    };
+
+    // 1-2. connection validity + width matching.
+    for &(p, c) in &d.streams {
+        if p >= n || c >= n {
+            report
+                .errors
+                .push(format!("stream {p}->{c} references missing core"));
+            continue;
+        }
+        let prod = &d.cores[p];
+        let cons = &d.cores[c];
+        // Control edges (decision -> buffer / merge) carry a token, not
+        // the data stream; data edges must width-match.
+        let is_control = prod.op == "exit_decision";
+        if !is_control && prod.out_words != cons.in_words {
+            report.errors.push(format!(
+                "width mismatch {} ({} words) -> {} ({} words)",
+                prod.name, prod.out_words, cons.name, cons.in_words
+            ));
+        }
+    }
+
+    // 3. reachability from core 0 (the DMA-in attachment).
+    let mut reach = vec![false; n];
+    if n > 0 {
+        reach[0] = true;
+        let mut frontier = vec![0usize];
+        while let Some(x) = frontier.pop() {
+            for &(p, c) in &d.streams {
+                // Dangling edges were already reported above; skip them.
+                if p == x && c < n && !reach[c] {
+                    reach[c] = true;
+                    frontier.push(c);
+                }
+            }
+        }
+    }
+    for (i, r) in reach.iter().enumerate() {
+        if !r {
+            report
+                .errors
+                .push(format!("core {} ({}) unreachable from DMA", i, d.cores[i].name));
+        }
+    }
+
+    // 4. exactly one sink.
+    let sinks: Vec<usize> = (0..n)
+        .filter(|&i| d.streams.iter().all(|&(p, _)| p != i))
+        .collect();
+    if n > 0 && sinks.len() != 1 {
+        report.errors.push(format!(
+            "expected exactly one output sink, found {:?}",
+            sinks
+                .iter()
+                .map(|&i| d.cores[i].name.clone())
+                .collect::<Vec<_>>()
+        ));
+    }
+
+    // 5. start signals.
+    if report.start_signals != n {
+        report
+            .errors
+            .push(format!("{} cores missing start signals", n - report.start_signals));
+    }
+
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::codegen::generate_design;
+    use crate::ir::network::testnet;
+    use crate::ir::Cdfg;
+    use crate::sdf::HwMapping;
+
+    #[test]
+    fn generated_ee_design_stitches_clean() {
+        let net = testnet::blenet_like();
+        let m = HwMapping::minimal(Cdfg::lower(&net, 8));
+        let r = stitch(&generate_design(&m, false));
+        assert!(r.ok(), "stitch errors: {:?}", r.errors);
+        assert_eq!(r.start_signals, r.cores);
+    }
+
+    #[test]
+    fn generated_baseline_stitches_clean() {
+        let net = testnet::blenet_like();
+        let m = HwMapping::minimal(Cdfg::lower_baseline(&net));
+        let r = stitch(&generate_design(&m, true));
+        assert!(r.ok(), "stitch errors: {:?}", r.errors);
+    }
+
+    #[test]
+    fn detects_broken_stream() {
+        let net = testnet::blenet_like();
+        let m = HwMapping::minimal(Cdfg::lower(&net, 8));
+        let mut d = generate_design(&m, false);
+        d.streams.push((0, 999)); // dangling
+        d.cores[2].in_words += 1; // width mismatch on edge 1->2
+        let r = stitch(&d);
+        assert!(!r.ok());
+        assert!(r.errors.iter().any(|e| e.contains("missing core")));
+        assert!(r.errors.iter().any(|e| e.contains("width mismatch")));
+    }
+
+    #[test]
+    fn detects_unreachable_core() {
+        let net = testnet::blenet_like();
+        let m = HwMapping::minimal(Cdfg::lower(&net, 8));
+        let mut d = generate_design(&m, false);
+        d.streams.retain(|&(p, _)| p != 0); // cut the front
+        let r = stitch(&d);
+        assert!(r.errors.iter().any(|e| e.contains("unreachable")));
+    }
+}

@@ -1,0 +1,326 @@
+//! Control+dataflow graph (CDFG) lowering — §III-B.
+//!
+//! fpgaConvNet models a CNN as a synchronous dataflow graph; ATHEENA
+//! extends it with pipelined control flow. This module lowers a validated
+//! [`Network`] into the hardware graph of Fig. 3: the stage-1 backbone
+//! feeds a Split layer which duplicates the stream toward (a) the
+//! early-exit classifier + Exit Decision and (b) the Conditional Buffer
+//! guarding stage 2; both exits meet at the Exit Merge in front of the
+//! output DMA.
+
+use super::layer::{Layer, Op};
+use super::network::Network;
+use super::shape::Shape;
+
+/// Hardware op set: the software ops plus the Early-Exit hardware-only
+/// layers of §III-C.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HwOp {
+    /// A standard fpgaConvNet layer.
+    Std(Op),
+    /// Stream duplication at a branch point (§III-C.3).
+    Split { ways: usize },
+    /// Exit (Softmax) Decision layer, Eq. 4 (§III-C.1).
+    ExitDecision { classes: usize, c_thr: f64 },
+    /// Conditional Buffer holding intermediate maps until the decision
+    /// arrives (§III-C.2). `depth_samples` set by buffer sizing (Fig. 7).
+    CondBuffer { depth_samples: usize },
+    /// Exit Merge coherently interleaving completed samples (§III-C.4).
+    ExitMerge { ways: usize },
+}
+
+impl HwOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            HwOp::Std(op) => op.name(),
+            HwOp::Split { .. } => "split",
+            HwOp::ExitDecision { .. } => "exit_decision",
+            HwOp::CondBuffer { .. } => "cond_buffer",
+            HwOp::ExitMerge { .. } => "exit_merge",
+        }
+    }
+
+    pub fn is_ee_overhead(&self) -> bool {
+        !matches!(self, HwOp::Std(_))
+    }
+}
+
+/// Which section of the two-stage partition a node belongs to. Stage-1
+/// rate applies to everything up to and including the Conditional Buffer's
+/// write side; stage-2 nodes only see hard samples (§III-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageId {
+    /// Backbone prefix + Split (full data rate).
+    Stage1,
+    /// Early-exit classifier + Exit Decision (full data rate).
+    ExitBranch,
+    /// Backbone suffix behind the Conditional Buffer (rate scaled by p).
+    Stage2,
+    /// Merge + DMA glue (full result rate, one result per sample).
+    Egress,
+}
+
+#[derive(Clone, Debug)]
+pub struct CdfgNode {
+    pub id: usize,
+    pub name: String,
+    pub op: HwOp,
+    pub in_shape: Shape,
+    pub out_shape: Shape,
+    pub stage: StageId,
+}
+
+/// The lowered hardware graph. Nodes are stored in a valid topological
+/// order by construction; `edges` is (producer, consumer).
+#[derive(Clone, Debug)]
+pub struct Cdfg {
+    pub network: String,
+    pub nodes: Vec<CdfgNode>,
+    pub edges: Vec<(usize, usize)>,
+    /// Node id of the Conditional Buffer (stage boundary).
+    pub cond_buffer: usize,
+    /// Node id of the Exit Decision layer.
+    pub exit_decision: usize,
+    /// Node id of the Exit Merge layer.
+    pub exit_merge: usize,
+}
+
+impl Cdfg {
+    /// Lower a network into the Fig. 3 hardware topology.
+    ///
+    /// `cond_buffer_depth` is a placeholder depth; the toolflow re-sizes
+    /// it after folding is chosen (buffer sizing needs stage-1 IIs, Fig. 7
+    /// — see `sdf::buffering`).
+    pub fn lower(net: &Network, cond_buffer_depth: usize) -> Cdfg {
+        let mut nodes: Vec<CdfgNode> = Vec::new();
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        #[allow(clippy::too_many_arguments)]
+        fn push(
+            nodes: &mut Vec<CdfgNode>,
+            edges: &mut Vec<(usize, usize)>,
+            name: String,
+            op: HwOp,
+            in_shape: Shape,
+            out_shape: Shape,
+            stage: StageId,
+            prev: Option<usize>,
+        ) -> usize {
+            let id = nodes.len();
+            nodes.push(CdfgNode {
+                id,
+                name,
+                op,
+                in_shape,
+                out_shape,
+                stage,
+            });
+            if let Some(p) = prev {
+                edges.push((p, id));
+            }
+            id
+        }
+
+        // Stage-1 backbone.
+        let mut prev: Option<usize> = None;
+        for (i, l) in net.stage1.iter().enumerate() {
+            prev = Some(push(
+                &mut nodes,
+                &mut edges,
+                format!("s1_{}_{}", i, l.op.name()),
+                HwOp::Std(l.op.clone()),
+                l.in_shape.clone(),
+                l.out_shape.clone(),
+                StageId::Stage1,
+                prev,
+            ));
+        }
+        let s1_out = net.stage1_out_shape().clone();
+
+        // Split duplicates the stream toward the exit branch and stage 2.
+        let split = push(
+            &mut nodes,
+            &mut edges,
+            "split".into(),
+            HwOp::Split { ways: 2 },
+            s1_out.clone(),
+            s1_out.clone(),
+            StageId::Stage1,
+            prev,
+        );
+
+        // Early-exit classifier chain.
+        let mut eprev = split;
+        for (i, l) in net.exit_branch.iter().enumerate() {
+            eprev = push(
+                &mut nodes,
+                &mut edges,
+                format!("exit_{}_{}", i, l.op.name()),
+                HwOp::Std(l.op.clone()),
+                l.in_shape.clone(),
+                l.out_shape.clone(),
+                StageId::ExitBranch,
+                Some(eprev),
+            );
+        }
+        let exit_decision = push(
+            &mut nodes,
+            &mut edges,
+            "exit_decision".into(),
+            HwOp::ExitDecision {
+                classes: net.classes,
+                c_thr: net.c_thr,
+            },
+            Shape::flat(net.classes),
+            Shape::flat(net.classes),
+            StageId::ExitBranch,
+            Some(eprev),
+        );
+
+        // Conditional buffer guards stage 2; it consumes the split's other
+        // output and the decision's control signal.
+        let cond_buffer = push(
+            &mut nodes,
+            &mut edges,
+            "cond_buffer".into(),
+            HwOp::CondBuffer {
+                depth_samples: cond_buffer_depth,
+            },
+            s1_out.clone(),
+            s1_out.clone(),
+            StageId::Stage2,
+            Some(split),
+        );
+        edges.push((exit_decision, cond_buffer)); // control edge
+
+        let mut sprev = cond_buffer;
+        for (i, l) in net.stage2.iter().enumerate() {
+            sprev = push(
+                &mut nodes,
+                &mut edges,
+                format!("s2_{}_{}", i, l.op.name()),
+                HwOp::Std(l.op.clone()),
+                l.in_shape.clone(),
+                l.out_shape.clone(),
+                StageId::Stage2,
+                Some(sprev),
+            );
+        }
+
+        // Exit merge joins both classification streams.
+        let exit_merge = push(
+            &mut nodes,
+            &mut edges,
+            "exit_merge".into(),
+            HwOp::ExitMerge { ways: 2 },
+            Shape::flat(net.classes),
+            Shape::flat(net.classes),
+            StageId::Egress,
+            Some(exit_decision),
+        );
+        edges.push((sprev, exit_merge));
+
+        Cdfg {
+            network: net.name.clone(),
+            nodes,
+            edges,
+            cond_buffer,
+            exit_decision,
+            exit_merge,
+        }
+    }
+
+    /// Lower the single-stage baseline (backbone only, no EE layers).
+    pub fn lower_baseline(net: &Network) -> Cdfg {
+        let layers: Vec<Layer> = net.baseline_layers();
+        let mut nodes = Vec::new();
+        let mut edges = Vec::new();
+        for (i, l) in layers.iter().enumerate() {
+            nodes.push(CdfgNode {
+                id: i,
+                name: format!("bb_{}_{}", i, l.op.name()),
+                op: HwOp::Std(l.op.clone()),
+                in_shape: l.in_shape.clone(),
+                out_shape: l.out_shape.clone(),
+                stage: StageId::Stage1,
+            });
+            if i > 0 {
+                edges.push((i - 1, i));
+            }
+        }
+        Cdfg {
+            network: format!("{}-baseline", net.name),
+            nodes,
+            edges,
+            cond_buffer: usize::MAX,
+            exit_decision: usize::MAX,
+            exit_merge: usize::MAX,
+        }
+    }
+
+    pub fn nodes_in_stage(&self, stage: StageId) -> impl Iterator<Item = &CdfgNode> {
+        self.nodes.iter().filter(move |n| n.stage == stage)
+    }
+
+    /// Consumers of a node (follows both data and control edges).
+    pub fn successors(&self, id: usize) -> Vec<usize> {
+        self.edges
+            .iter()
+            .filter(|(p, _)| *p == id)
+            .map(|(_, c)| *c)
+            .collect()
+    }
+
+    /// Total words buffered by the Conditional Buffer per sample.
+    pub fn cond_buffer_words(&self) -> usize {
+        self.nodes[self.cond_buffer].in_shape.words()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::network::testnet;
+
+    #[test]
+    fn lowering_shape_and_structure() {
+        let net = testnet::blenet_like();
+        let g = Cdfg::lower(&net, 8);
+        // 3 stage1 + split + 5 exit + decision + condbuf + 8 stage2 + merge
+        assert_eq!(g.nodes.len(), 3 + 1 + 5 + 1 + 1 + 8 + 1);
+        assert_eq!(g.nodes[g.cond_buffer].op.name(), "cond_buffer");
+        assert_eq!(g.nodes[g.exit_decision].op.name(), "exit_decision");
+        // Decision feeds both the merge and the buffer's control port.
+        let succ = g.successors(g.exit_decision);
+        assert!(succ.contains(&g.cond_buffer));
+        assert!(succ.contains(&g.exit_merge));
+        // Buffer holds the stage-1 output map.
+        assert_eq!(g.cond_buffer_words(), 8 * 14 * 14);
+    }
+
+    #[test]
+    fn edges_are_topological() {
+        let net = testnet::blenet_like();
+        let g = Cdfg::lower(&net, 8);
+        for (p, c) in &g.edges {
+            assert!(p < c, "edge {p}->{c} violates construction order");
+        }
+    }
+
+    #[test]
+    fn baseline_has_no_ee_layers() {
+        let net = testnet::blenet_like();
+        let g = Cdfg::lower_baseline(&net);
+        assert!(g.nodes.iter().all(|n| !n.op.is_ee_overhead()));
+        assert_eq!(g.nodes.len(), net.baseline_layers().len());
+    }
+
+    #[test]
+    fn stage_partition_counts() {
+        let net = testnet::blenet_like();
+        let g = Cdfg::lower(&net, 8);
+        assert_eq!(g.nodes_in_stage(StageId::Stage1).count(), 4); // 3 + split
+        assert_eq!(g.nodes_in_stage(StageId::ExitBranch).count(), 6);
+        assert_eq!(g.nodes_in_stage(StageId::Stage2).count(), 9); // buf + 8
+        assert_eq!(g.nodes_in_stage(StageId::Egress).count(), 1);
+    }
+}

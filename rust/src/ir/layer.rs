@@ -1,0 +1,216 @@
+//! CNN layers supported by the (extended) ONNX parser.
+
+use super::shape::Shape;
+use crate::util::Json;
+
+/// Software-visible ops (the ONNX subset fpgaConvNet + ATHEENA support;
+/// the EE control-flow ops Softmax/ReduceMax/Greater/If are merged into
+/// the hardware Exit Decision layer during CDFG lowering, §III-C).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    Conv {
+        out_ch: usize,
+        k: usize,
+        pad: usize,
+        stride: usize,
+    },
+    Relu,
+    MaxPool {
+        k: usize,
+        stride: usize,
+    },
+    Flatten,
+    Linear {
+        out: usize,
+    },
+}
+
+impl Op {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Conv { .. } => "conv",
+            Op::Relu => "relu",
+            Op::MaxPool { .. } => "maxpool",
+            Op::Flatten => "flatten",
+            Op::Linear { .. } => "linear",
+        }
+    }
+
+    /// Number of stored weights (for ROM sizing). Bias terms included.
+    pub fn weight_count(&self, in_shape: &Shape) -> usize {
+        match self {
+            Op::Conv { out_ch, k, .. } => {
+                let c_in = in_shape.channels();
+                c_in * out_ch * k * k + out_ch
+            }
+            Op::Linear { out } => in_shape.words() * out + out,
+            _ => 0,
+        }
+    }
+
+    /// MAC operations per sample (workload model for roofline numbers).
+    pub fn macs(&self, in_shape: &Shape, out_shape: &Shape) -> usize {
+        match self {
+            Op::Conv { out_ch, k, .. } => {
+                let (_, ho, wo) = out_shape.as_chw().expect("conv output is a map");
+                in_shape.channels() * out_ch * k * k * ho * wo
+            }
+            Op::Linear { out } => in_shape.words() * out,
+            _ => 0,
+        }
+    }
+}
+
+/// One layer instance with its resolved stream shapes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Layer {
+    pub op: Op,
+    pub in_shape: Shape,
+    pub out_shape: Shape,
+}
+
+impl Layer {
+    /// Infer this op's output shape from an input shape (validation of the
+    /// shapes recorded in the network JSON).
+    pub fn infer_out(op: &Op, in_shape: &Shape) -> anyhow::Result<Shape> {
+        Ok(match op {
+            Op::Conv {
+                out_ch,
+                k,
+                pad,
+                stride,
+            } => {
+                let (_, h, w) = in_shape
+                    .as_chw()
+                    .ok_or_else(|| anyhow::anyhow!("conv needs a (C,H,W) input"))?;
+                anyhow::ensure!(*stride == 1, "only stride-1 convs are generated");
+                let ho = h + 2 * pad - k + 1;
+                let wo = w + 2 * pad - k + 1;
+                anyhow::ensure!(ho > 0 && wo > 0, "conv output collapsed");
+                Shape::chw(*out_ch, ho, wo)
+            }
+            Op::MaxPool { k, stride } => {
+                let (c, h, w) = in_shape
+                    .as_chw()
+                    .ok_or_else(|| anyhow::anyhow!("pool needs a (C,H,W) input"))?;
+                anyhow::ensure!(k == stride, "only non-overlapping pooling");
+                Shape::chw(c, h / k, w / k)
+            }
+            Op::Relu => in_shape.clone(),
+            Op::Flatten => Shape::flat(in_shape.words()),
+            Op::Linear { out } => {
+                anyhow::ensure!(
+                    in_shape.rank() == 1,
+                    "linear needs a flattened input"
+                );
+                Shape::flat(*out)
+            }
+        })
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Layer> {
+        let op_name = v
+            .req("op")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("'op' must be a string"))?;
+        let get = |k: &str| -> anyhow::Result<usize> {
+            v.req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("'{k}' must be a number"))
+        };
+        let op = match op_name {
+            "conv" => Op::Conv {
+                out_ch: get("out_ch")?,
+                k: get("k")?,
+                pad: get("pad")?,
+                stride: get("stride")?,
+            },
+            "relu" => Op::Relu,
+            "maxpool" => Op::MaxPool {
+                k: get("k")?,
+                stride: get("stride")?,
+            },
+            "flatten" => Op::Flatten,
+            "linear" => Op::Linear { out: get("out")? },
+            other => anyhow::bail!("unsupported op '{other}'"),
+        };
+        let in_shape = Shape::from_json(v.req("in_shape")?)?;
+        let out_shape = Shape::from_json(v.req("out_shape")?)?;
+        // Cross-check the recorded shapes against our own inference — this
+        // is the parser's defence against skewed exports.
+        let inferred = Layer::infer_out(&op, &in_shape)?;
+        anyhow::ensure!(
+            inferred == out_shape,
+            "shape mismatch for {op_name}: recorded {out_shape} vs inferred {inferred}"
+        );
+        Ok(Layer {
+            op,
+            in_shape,
+            out_shape,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn conv_shape_inference() {
+        let op = Op::Conv {
+            out_ch: 8,
+            k: 5,
+            pad: 2,
+            stride: 1,
+        };
+        let out = Layer::infer_out(&op, &Shape::chw(1, 28, 28)).unwrap();
+        assert_eq!(out, Shape::chw(8, 28, 28));
+    }
+
+    #[test]
+    fn pool_flatten_linear_inference() {
+        let pool = Op::MaxPool { k: 2, stride: 2 };
+        assert_eq!(
+            Layer::infer_out(&pool, &Shape::chw(8, 7, 7)).unwrap(),
+            Shape::chw(8, 3, 3)
+        );
+        assert_eq!(
+            Layer::infer_out(&Op::Flatten, &Shape::chw(8, 3, 3)).unwrap(),
+            Shape::flat(72)
+        );
+        assert_eq!(
+            Layer::infer_out(&Op::Linear { out: 10 }, &Shape::flat(72)).unwrap(),
+            Shape::flat(10)
+        );
+        assert!(
+            Layer::infer_out(&Op::Linear { out: 10 }, &Shape::chw(1, 2, 3)).is_err()
+        );
+    }
+
+    #[test]
+    fn parses_layer_json_and_validates_shapes() {
+        let good = r#"{"op":"conv","out_ch":8,"k":5,"pad":2,"stride":1,
+                       "in_shape":[1,28,28],"out_shape":[8,28,28]}"#;
+        let l = Layer::from_json(&json::parse(good).unwrap()).unwrap();
+        assert_eq!(l.op.name(), "conv");
+        // Wrong recorded out_shape must be rejected.
+        let bad = good.replace("[8,28,28]", "[8,24,24]");
+        assert!(Layer::from_json(&json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn weights_and_macs() {
+        let conv = Op::Conv {
+            out_ch: 16,
+            k: 5,
+            pad: 2,
+            stride: 1,
+        };
+        let in_s = Shape::chw(8, 14, 14);
+        let out_s = Layer::infer_out(&conv, &in_s).unwrap();
+        assert_eq!(conv.weight_count(&in_s), 8 * 16 * 25 + 16);
+        assert_eq!(conv.macs(&in_s, &out_s), 8 * 16 * 25 * 14 * 14);
+        assert_eq!(Op::Relu.weight_count(&in_s), 0);
+    }
+}

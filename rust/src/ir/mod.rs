@@ -1,0 +1,21 @@
+//! Network intermediate representation — the fpgaConvNet front-end
+//! stand-in.
+//!
+//! The paper converts PyTorch Early-Exit models to ONNX (§III-B.3) and
+//! parses them into a control+dataflow graph. Here the build-time Python
+//! side emits an equivalent network JSON (`artifacts/networks/*.json`)
+//! capturing exactly what the parser extracts from ONNX — ops, shapes,
+//! attributes, branch structure — and this module parses and validates it,
+//! then lowers it to the CDFG with the hardware-only Early-Exit layers
+//! inserted (Fig. 8: Split, Exit Decision, Conditional Buffer, Exit
+//! Merge).
+
+pub mod cdfg;
+pub mod layer;
+pub mod network;
+pub mod shape;
+
+pub use cdfg::{Cdfg, CdfgNode, HwOp, StageId};
+pub use layer::{Layer, Op};
+pub use network::Network;
+pub use shape::Shape;

@@ -1,0 +1,285 @@
+//! Early-Exit network description parsed from `artifacts/networks/*.json`.
+
+use std::path::Path;
+
+use super::layer::Layer;
+use super::shape::Shape;
+use crate::util::{json, Json};
+
+/// Accuracy statistics recorded by the build-time profiler (and
+/// re-measured at runtime by the Rust Early-Exit profiler over PJRT).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Accuracy {
+    pub exit_acc: f64,
+    pub final_acc: f64,
+    pub deployed_acc: f64,
+    pub exit_acc_on_taken: f64,
+    pub final_acc_on_hard: f64,
+}
+
+/// A two-stage Early-Exit network (§III-A's presentation form; the
+/// methodology extends to multi-stage but all three evaluated networks are
+/// two-stage).
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub input_shape: Shape,
+    pub classes: usize,
+    /// Exit confidence threshold C_thr (Eq. 2), fixed after training.
+    pub c_thr: f64,
+    /// Profiled hard-sample probability p (fraction needing stage 2).
+    pub p_profile: f64,
+    /// The probability the paper evaluated this network at (Table IV).
+    pub p_paper: f64,
+    pub stage1: Vec<Layer>,
+    pub exit_branch: Vec<Layer>,
+    pub stage2: Vec<Layer>,
+    pub accuracy: Accuracy,
+    pub baseline_acc: f64,
+}
+
+impl Network {
+    pub fn from_json(v: &Json) -> anyhow::Result<Network> {
+        let name = v
+            .req("name")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("'name' must be a string"))?
+            .to_string();
+        let parse_stage = |key: &str| -> anyhow::Result<Vec<Layer>> {
+            v.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'{key}' must be an array"))?
+                .iter()
+                .map(Layer::from_json)
+                .collect()
+        };
+        let num = |key: &str| -> anyhow::Result<f64> {
+            v.req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("'{key}' must be a number"))
+        };
+        let acc = v.req("accuracy")?;
+        let acc_num = |key: &str| -> anyhow::Result<f64> {
+            acc.req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("accuracy.{key} must be a number"))
+        };
+        let net = Network {
+            name,
+            input_shape: Shape::from_json(v.req("input_shape")?)?,
+            classes: num("classes")? as usize,
+            c_thr: num("c_thr")?,
+            p_profile: num("p_profile")?,
+            p_paper: num("p_paper")?,
+            stage1: parse_stage("stage1")?,
+            exit_branch: parse_stage("exit_branch")?,
+            stage2: parse_stage("stage2")?,
+            accuracy: Accuracy {
+                exit_acc: acc_num("exit_acc")?,
+                final_acc: acc_num("final_acc")?,
+                deployed_acc: acc_num("deployed_acc")?,
+                exit_acc_on_taken: acc_num("exit_acc_on_taken")?,
+                final_acc_on_hard: acc_num("final_acc_on_hard")?,
+            },
+            baseline_acc: num("baseline_acc")?,
+        };
+        net.validate()?;
+        Ok(net)
+    }
+
+    pub fn from_file(path: &Path) -> anyhow::Result<Network> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let v = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        Self::from_json(&v)
+    }
+
+    /// Structural validation: stage chaining, exit classifier width,
+    /// probability/threshold ranges.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.stage1.is_empty() && !self.stage2.is_empty() && !self.exit_branch.is_empty(),
+            "all three stage groups must be non-empty"
+        );
+        anyhow::ensure!(
+            self.stage1[0].in_shape == self.input_shape,
+            "stage1 input must match network input"
+        );
+        let s1_out = &self.stage1.last().unwrap().out_shape;
+        anyhow::ensure!(
+            &self.exit_branch[0].in_shape == s1_out,
+            "exit branch must consume stage1 output"
+        );
+        anyhow::ensure!(
+            &self.stage2[0].in_shape == s1_out,
+            "stage2 must consume stage1 output"
+        );
+        for group in [&self.stage1, &self.exit_branch, &self.stage2] {
+            for pair in group.windows(2) {
+                anyhow::ensure!(
+                    pair[0].out_shape == pair[1].in_shape,
+                    "layer chaining broken: {} -> {}",
+                    pair[0].out_shape,
+                    pair[1].in_shape
+                );
+            }
+        }
+        anyhow::ensure!(
+            self.exit_branch.last().unwrap().out_shape == Shape::flat(self.classes),
+            "exit branch must end in a {}-class classifier",
+            self.classes
+        );
+        anyhow::ensure!(
+            self.stage2.last().unwrap().out_shape == Shape::flat(self.classes),
+            "stage2 must end in a {}-class classifier",
+            self.classes
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.p_profile) && (0.0..=1.0).contains(&self.p_paper),
+            "probabilities must be in [0,1]"
+        );
+        anyhow::ensure!(self.c_thr > 0.0, "C_thr must be positive");
+        Ok(())
+    }
+
+    /// The single-stage baseline: "the network layers from the start of
+    /// the Early-Exit network through to the end of the second stage"
+    /// (§IV-A) — i.e. the backbone without the exit branch.
+    pub fn baseline_layers(&self) -> Vec<Layer> {
+        self.stage1
+            .iter()
+            .chain(self.stage2.iter())
+            .cloned()
+            .collect()
+    }
+
+    /// Shape of the intermediate feature map buffered by the Conditional
+    /// Buffer (stage-1 output).
+    pub fn stage1_out_shape(&self) -> &Shape {
+        &self.stage1.last().unwrap().out_shape
+    }
+}
+
+pub mod testnet {
+    //! A self-contained B-LeNet-shaped network for tests and benches that
+    //! must not depend on `artifacts/` being built.
+    use super::*;
+    use crate::ir::layer::Op;
+
+    fn chain(specs: Vec<Op>, mut in_shape: Shape) -> Vec<Layer> {
+        let mut out = Vec::new();
+        for op in specs {
+            let out_shape = Layer::infer_out(&op, &in_shape).unwrap();
+            out.push(Layer {
+                op,
+                in_shape: in_shape.clone(),
+                out_shape: out_shape.clone(),
+            });
+            in_shape = out_shape;
+        }
+        out
+    }
+
+    pub fn blenet_like() -> Network {
+        let input = Shape::chw(1, 28, 28);
+        let stage1 = chain(
+            vec![
+                Op::Conv {
+                    out_ch: 8,
+                    k: 5,
+                    pad: 2,
+                    stride: 1,
+                },
+                Op::Relu,
+                Op::MaxPool { k: 2, stride: 2 },
+            ],
+            input.clone(),
+        );
+        let s1_out = stage1.last().unwrap().out_shape.clone();
+        let exit_branch = chain(
+            vec![
+                Op::Conv {
+                    out_ch: 8,
+                    k: 3,
+                    pad: 1,
+                    stride: 1,
+                },
+                Op::Relu,
+                Op::MaxPool { k: 2, stride: 2 },
+                Op::Flatten,
+                Op::Linear { out: 10 },
+            ],
+            s1_out.clone(),
+        );
+        let stage2 = chain(
+            vec![
+                Op::Conv {
+                    out_ch: 16,
+                    k: 5,
+                    pad: 2,
+                    stride: 1,
+                },
+                Op::Relu,
+                Op::MaxPool { k: 2, stride: 2 },
+                Op::Conv {
+                    out_ch: 24,
+                    k: 3,
+                    pad: 1,
+                    stride: 1,
+                },
+                Op::Relu,
+                Op::MaxPool { k: 2, stride: 2 },
+                Op::Flatten,
+                Op::Linear { out: 10 },
+            ],
+            s1_out,
+        );
+        Network {
+            name: "blenet-test".into(),
+            input_shape: input,
+            classes: 10,
+            c_thr: 0.95,
+            p_profile: 0.25,
+            p_paper: 0.25,
+            stage1,
+            exit_branch,
+            stage2,
+            accuracy: Accuracy::default(),
+            baseline_acc: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn testnet_validates() {
+        let net = testnet::blenet_like();
+        net.validate().unwrap();
+        assert_eq!(net.stage1_out_shape(), &Shape::chw(8, 14, 14));
+        assert_eq!(net.baseline_layers().len(), 11);
+    }
+
+    #[test]
+    fn broken_chaining_rejected() {
+        let mut net = testnet::blenet_like();
+        net.stage2.remove(0); // stage2 now consumes the wrong shape
+        assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn parses_real_artifact_if_present() {
+        // Integration hook: when artifacts are built, the real exported
+        // network must parse and validate.
+        let p = Path::new("artifacts/networks/blenet.json");
+        if p.exists() {
+            let net = Network::from_file(p).unwrap();
+            assert_eq!(net.name, "blenet");
+            assert_eq!(net.classes, 10);
+            assert!(net.accuracy.deployed_acc > 0.5);
+        }
+    }
+}

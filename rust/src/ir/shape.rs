@@ -1,0 +1,104 @@
+//! Feature-map shapes flowing through the streaming pipeline.
+
+use std::fmt;
+
+/// A tensor shape: `(C, H, W)` for feature maps, `(F,)` after Flatten.
+/// Streaming hardware sees a shape as a word count plus channel folding
+/// opportunities, so both views are provided.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn chw(c: usize, h: usize, w: usize) -> Shape {
+        Shape(vec![c, h, w])
+    }
+
+    pub fn flat(f: usize) -> Shape {
+        Shape(vec![f])
+    }
+
+    /// Total word count of one sample's worth of this stream.
+    pub fn words(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    /// `(C, H, W)` view, if this is a 3-D feature map.
+    pub fn as_chw(&self) -> Option<(usize, usize, usize)> {
+        match self.0.as_slice() {
+            [c, h, w] => Some((*c, *h, *w)),
+            _ => None,
+        }
+    }
+
+    /// Channel dimension: C for maps, F for flat vectors. This is the
+    /// dimension coarse folding parallelises over.
+    pub fn channels(&self) -> usize {
+        self.0[0]
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn from_json(v: &crate::util::Json) -> anyhow::Result<Shape> {
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("shape must be an array"))?;
+        let dims = arr
+            .iter()
+            .map(|d| {
+                d.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("shape dim must be a number"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        anyhow::ensure!(
+            !dims.is_empty() && dims.iter().all(|&d| d > 0),
+            "shape dims must be positive"
+        );
+        Ok(Shape(dims))
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "({})",
+            self.0
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join("x")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn words_and_views() {
+        let s = Shape::chw(8, 14, 14);
+        assert_eq!(s.words(), 1568);
+        assert_eq!(s.as_chw(), Some((8, 14, 14)));
+        assert_eq!(s.channels(), 8);
+        let f = Shape::flat(216);
+        assert_eq!(f.words(), 216);
+        assert_eq!(f.as_chw(), None);
+    }
+
+    #[test]
+    fn parses_from_json() {
+        let v = json::parse("[1,28,28]").unwrap();
+        assert_eq!(Shape::from_json(&v).unwrap(), Shape::chw(1, 28, 28));
+        assert!(Shape::from_json(&json::parse("[0]").unwrap()).is_err());
+        assert!(Shape::from_json(&json::parse("\"x\"").unwrap()).is_err());
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Shape::chw(3, 32, 32).to_string(), "(3x32x32)");
+    }
+}

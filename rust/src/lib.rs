@@ -1,0 +1,27 @@
+//! # ATHEENA — A Toolflow for Hardware Early-Exit Network Automation
+//!
+//! Reproduction of Biggs, Bouganis & Constantinides (2023). The library
+//! implements the full toolflow: network IR parsing, CDFG lowering with
+//! the Early-Exit hardware layers, fpgaConvNet-style folding + resource
+//! models, simulated-annealing DSE, TAP combination (Eq. 1), Conditional
+//! Buffer sizing (Fig. 7), an event-driven streaming-dataflow simulator
+//! (the board substitute), an HLS design-manifest generator, a PJRT
+//! runtime executing the JAX/Pallas-AOT network numerics, and the batched
+//! inference / serving coordinator.
+//!
+//! See `DESIGN.md` for the architecture and substitution rationale and
+//! `EXPERIMENTS.md` for the paper-vs-measured record.
+
+pub mod coordinator;
+pub mod data;
+pub mod dse;
+pub mod ee;
+pub mod hls;
+pub mod ir;
+pub mod report;
+pub mod resources;
+pub mod runtime;
+pub mod sdf;
+pub mod sim;
+pub mod tap;
+pub mod util;

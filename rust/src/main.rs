@@ -1,0 +1,275 @@
+//! `atheena` — CLI for the ATHEENA toolflow reproduction.
+//!
+//! Subcommands:
+//!   report   <fig9a|fig9b|fig7|table1|table2|table3|table4|all>
+//!   toolflow --network NAME [--board zc706|vu440] [--emit FILE]
+//!   profile  --network NAME [--samples N]
+//!   infer    --network NAME [--batch N] [--q FRAC]
+//!   serve    --network NAME [--requests N]
+//!
+//! Common flags: --artifacts DIR (default ./artifacts), --quick.
+//! (The vendored offline crate set has no clap; parsing is hand-rolled.)
+
+use std::path::PathBuf;
+
+use atheena::coordinator::batch::{BatchHost, PjrtOracle};
+use atheena::coordinator::toolflow::{run_toolflow, ToolflowOptions};
+use atheena::coordinator::{Server, ServerConfig};
+use atheena::ee::Profiler;
+use atheena::report::{self, ReportContext};
+use atheena::resources::Board;
+use atheena::runtime::ArtifactStore;
+use atheena::util::Rng;
+
+/// Minimal argument cracker: positionals + `--flag [value]` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let takes_value = i + 1 < argv.len() && !argv[i + 1].starts_with("--");
+                if takes_value {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    fn artifacts(&self) -> PathBuf {
+        PathBuf::from(self.get_or("artifacts", "artifacts"))
+    }
+
+    fn board(&self) -> anyhow::Result<Board> {
+        let name = self.get_or("board", "zc706");
+        Board::by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown board '{name}'"))
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: atheena <report|toolflow|profile|infer|serve> [args]\n\
+         \n  report   <fig9a|fig9b|fig7|table1..table4|all> [--artifacts DIR] [--quick]\
+         \n  toolflow --network NAME [--board zc706|vu440] [--emit FILE] [--quick]\
+         \n  profile  --network NAME [--samples N]\
+         \n  infer    --network NAME [--batch N] [--q FRAC]\
+         \n  serve    --network NAME [--requests N]"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..]);
+    match cmd {
+        "report" => cmd_report(&args),
+        "toolflow" => cmd_toolflow(&args),
+        "profile" => cmd_profile(&args),
+        "infer" => cmd_infer(&args),
+        "serve" => cmd_serve(&args),
+        _ => usage(),
+    }
+}
+
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let mut ctx = ReportContext::new(args.artifacts(), args.has("quick"));
+    report::run(what, &mut ctx)
+}
+
+fn cmd_toolflow(args: &Args) -> anyhow::Result<()> {
+    let name = args
+        .get("network")
+        .ok_or_else(|| anyhow::anyhow!("--network required"))?;
+    let board = args.board()?;
+    let net = atheena::ir::Network::from_file(
+        &args.artifacts().join("networks").join(format!("{name}.json")),
+    )?;
+    let opts = if args.has("quick") {
+        ToolflowOptions::quick(board.clone())
+    } else {
+        ToolflowOptions::new(board.clone())
+    };
+    let r = run_toolflow(&net, &opts, None)?;
+    println!(
+        "toolflow for '{name}' on {}: {} baseline pts, {} stage1 pts, {} stage2 pts, {} combined designs (p={:.3})",
+        board.name,
+        r.baseline_curve.points.len(),
+        r.stage1_curve.points.len(),
+        r.stage2_curve.points.len(),
+        r.designs.len(),
+        r.p,
+    );
+    let best = r.best_design().ok_or_else(|| anyhow::anyhow!("no design"))?;
+    println!(
+        "best design: budget {:.0}%, predicted {:.0} samples/s at p, buffer depth {}, {}",
+        best.budget_fraction * 100.0,
+        best.combined.throughput_at_p,
+        best.cond_buffer_depth,
+        best.total_resources
+    );
+    for (q, m) in &best.measured {
+        println!(
+            "  simulated q={:.0}%: {:.0} samples/s, stalls {}, peak buffer {} / {}",
+            q * 100.0,
+            m.throughput_sps,
+            m.stall_cycles,
+            m.peak_buffer_occupancy,
+            best.cond_buffer_depth
+        );
+    }
+    if let Some(path) = args.get("emit") {
+        std::fs::write(path, best.manifest.to_json().to_string_pretty())?;
+        println!("wrote design manifest to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    let name = args
+        .get("network")
+        .ok_or_else(|| anyhow::anyhow!("--network required"))?;
+    let samples: usize = args.get_or("samples", "512").parse()?;
+    let store = ArtifactStore::open(&args.artifacts())?;
+    let ts = atheena::data::TestSet::load(&args.artifacts(), name)?;
+    let s1 = store.stage1(name)?;
+    let s2 = store.stage2(name)?;
+    let mut oracle = PjrtOracle {
+        stage1: &s1,
+        stage2: &s2,
+    };
+    let report = Profiler::default().profile(&mut oracle, &ts, samples)?;
+    println!("Early-Exit profile of '{name}' over {samples} samples (PJRT numerics):");
+    println!("  p (hard-sample probability) = {:.4} ± {:.4}", report.p_hard, report.p_std);
+    println!("  exit accuracy on taken      = {:.4}", report.exit_acc_on_taken);
+    println!("  deployed accuracy           = {:.4}", report.deployed_acc);
+    for (i, s) in report.splits.iter().enumerate() {
+        println!(
+            "  split {i}: n={} p={:.4} deployed_acc={:.4}",
+            s.n, s.p_hard, s.deployed_acc
+        );
+    }
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> anyhow::Result<()> {
+    let name = args
+        .get("network")
+        .ok_or_else(|| anyhow::anyhow!("--network required"))?;
+    let batch_n: usize = args.get_or("batch", "1024").parse()?;
+    let store = ArtifactStore::open(&args.artifacts())?;
+    let net = store.network(name)?.clone();
+    let q: f64 = args
+        .get("q")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(net.p_profile);
+    let ts = atheena::data::TestSet::load(&args.artifacts(), name)?;
+    let board = args.board()?;
+
+    // Build the design for timing.
+    let opts = if args.has("quick") {
+        ToolflowOptions::quick(board)
+    } else {
+        ToolflowOptions::new(board)
+    };
+    let r = run_toolflow(&net, &opts, None)?;
+    let best = r.best_design().ok_or_else(|| anyhow::anyhow!("no design"))?;
+
+    let s1 = store.stage1(name)?;
+    let s2 = store.stage2(name)?;
+    let host = BatchHost {
+        stage1: &s1,
+        stage2: &s2,
+        timing: best.timing,
+        sim: opts.sim.clone(),
+    };
+    let batch = ts.batch_with_q(q, batch_n, 0xBA7C);
+    let rep = host.run(&ts, &batch)?;
+    println!("batched EE inference of '{name}', batch {batch_n}, requested q={q:.3}:");
+    println!("  accuracy            = {:.4}", rep.accuracy);
+    println!("  measured q          = {:.4}", rep.measured_q);
+    println!("  flag agreement      = {:.4}", rep.flag_agreement);
+    println!("  host numerics time  = {:.3}s ({:.0} samples/s PJRT)", rep.host_seconds, rep.samples as f64 / rep.host_seconds);
+    println!("  simulated board     = {:.0} samples/s ({} cycles, {} stalls)", rep.board.throughput_sps, rep.board.total_cycles, rep.board.stall_cycles);
+    println!("  latency mean early/hard = {:.0} / {:.0} cycles", rep.board.latency_mean_early, rep.board.latency_mean_hard);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let name = args
+        .get("network")
+        .ok_or_else(|| anyhow::anyhow!("--network required"))?;
+    let n: usize = args.get_or("requests", "256").parse()?;
+    let ts = atheena::data::TestSet::load(&args.artifacts(), name)?;
+    let server = Server::start(ServerConfig::new(args.artifacts(), name))?;
+
+    let start = std::time::Instant::now();
+    let mut rng = Rng::new(0x5E7E);
+    let mut rxs = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let idx = rng.below(ts.n);
+        labels.push(ts.labels[idx] as usize);
+        rxs.push(server.submit(ts.image(idx).to_vec()));
+    }
+    let mut correct = 0usize;
+    let mut early = 0usize;
+    let mut lat_sum = std::time::Duration::ZERO;
+    for (rx, label) in rxs.into_iter().zip(labels) {
+        let resp = rx.recv()?;
+        if resp.pred == label {
+            correct += 1;
+        }
+        if resp.exited_early {
+            early += 1;
+        }
+        lat_sum += resp.latency;
+    }
+    let wall = start.elapsed().as_secs_f64();
+    println!("served {n} requests in {wall:.3}s ({:.0} req/s)", n as f64 / wall);
+    println!("  accuracy   = {:.4}", correct as f64 / n as f64);
+    println!("  early-exit = {:.4}", early as f64 / n as f64);
+    println!("  mean latency = {:.2}ms", lat_sum.as_secs_f64() * 1e3 / n as f64);
+    println!(
+        "  batches formed = {}",
+        server.stats.batches.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Shared, cached state for report generation: toolflow results are
+//! computed once per (network, board) and reused across tables/figures.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::coordinator::toolflow::{run_toolflow, ToolflowOptions, ToolflowResult};
+use crate::data::TestSet;
+use crate::ir::Network;
+use crate::resources::Board;
+
+pub struct ReportContext {
+    pub artifacts: PathBuf,
+    pub quick: bool,
+    results: HashMap<(String, String), ToolflowResult>,
+    networks: HashMap<String, Network>,
+    testsets: HashMap<String, TestSet>,
+}
+
+impl ReportContext {
+    pub fn new(artifacts: impl Into<PathBuf>, quick: bool) -> ReportContext {
+        ReportContext {
+            artifacts: artifacts.into(),
+            quick,
+            results: HashMap::new(),
+            networks: HashMap::new(),
+            testsets: HashMap::new(),
+        }
+    }
+
+    pub fn network(&mut self, name: &str) -> anyhow::Result<Network> {
+        if let Some(n) = self.networks.get(name) {
+            return Ok(n.clone());
+        }
+        let path = self.artifacts.join("networks").join(format!("{name}.json"));
+        let net = Network::from_file(&path)?;
+        self.networks.insert(name.to_string(), net.clone());
+        Ok(net)
+    }
+
+    pub fn testset(&mut self, name: &str) -> anyhow::Result<&TestSet> {
+        if !self.testsets.contains_key(name) {
+            let ts = TestSet::load(&self.artifacts, name)?;
+            self.testsets.insert(name.to_string(), ts);
+        }
+        Ok(&self.testsets[name])
+    }
+
+    pub fn options(&self, board: Board) -> ToolflowOptions {
+        if self.quick {
+            ToolflowOptions::quick(board)
+        } else {
+            ToolflowOptions::new(board)
+        }
+    }
+
+    /// Toolflow result for (network, board), computed once. Simulated
+    /// measurements use test-set-backed hard flags when the artifacts'
+    /// data files are present, synthetic placement otherwise.
+    pub fn toolflow(&mut self, name: &str, board: Board) -> anyhow::Result<&ToolflowResult> {
+        let key = (name.to_string(), board.name.to_string());
+        if !self.results.contains_key(&key) {
+            let net = self.network(name)?;
+            let opts = self.options(board);
+            let ts = TestSet::load(&self.artifacts, name).ok();
+            let seed = 0x51u64;
+            let mut flags_fn = ts.map(|ts| {
+                move |q: f64, batch: usize| -> Vec<bool> {
+                    ts.batch_with_q(q, batch, seed ^ (q * 1e4) as u64).hard
+                }
+            });
+            let r = run_toolflow(
+                &net,
+                &opts,
+                flags_fn
+                    .as_mut()
+                    .map(|f| f as &mut dyn FnMut(f64, usize) -> Vec<bool>),
+            )?;
+            self.results.insert(key.clone(), r);
+        }
+        Ok(&self.results[&key])
+    }
+}

@@ -1,0 +1,119 @@
+//! CSV export of the figure data series (for external plotting) —
+//! written to `artifacts/reports/` by `atheena report ... --csv`.
+
+use std::path::Path;
+
+use super::context::ReportContext;
+use crate::resources::Board;
+
+fn write_csv(dir: &Path, name: &str, header: &str, rows: &[String]) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    let mut text = String::from(header);
+    text.push('\n');
+    for r in rows {
+        text.push_str(r);
+        text.push('\n');
+    }
+    std::fs::write(&path, text)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Export the Fig. 9a/9b series for a network/board to CSV.
+pub fn export_fig9(ctx: &mut ReportContext, network: &str, board: Board) -> anyhow::Result<()> {
+    let dir = ctx.artifacts.join("reports");
+    let r = ctx.toolflow(network, board)?;
+
+    let mut rows = Vec::new();
+    for p in &r.baseline_curve.points {
+        rows.push(format!(
+            "baseline,{:.2},{},{},{},{},{:.1}",
+            p.budget_fraction, p.resources.lut, p.resources.ff, p.resources.dsp,
+            p.resources.bram, p.throughput
+        ));
+    }
+    let p_hard = r.p;
+    for d in &r.designs {
+        rows.push(format!(
+            "atheena_predicted,{:.2},{},{},{},{},{:.1}",
+            d.budget_fraction,
+            d.total_resources.lut,
+            d.total_resources.ff,
+            d.total_resources.dsp,
+            d.total_resources.bram,
+            d.combined.throughput_at(p_hard)
+        ));
+        for (q, m) in &d.measured {
+            rows.push(format!(
+                "atheena_measured_q{:.2},{:.2},{},{},{},{},{:.1}",
+                q,
+                d.budget_fraction,
+                d.total_resources.lut,
+                d.total_resources.ff,
+                d.total_resources.dsp,
+                d.total_resources.bram,
+                m.throughput_sps
+            ));
+        }
+    }
+    write_csv(
+        &dir,
+        &format!("fig9_{network}.csv"),
+        "series,budget_frac,lut,ff,dsp,bram,throughput_sps",
+        &rows,
+    )
+}
+
+/// Export the Fig. 7 depth-sweep series.
+pub fn export_fig7(ctx: &mut ReportContext, network: &str) -> anyhow::Result<()> {
+    use crate::coordinator::toolflow::synthetic_hard_flags;
+    use crate::sim::{simulate_ee, SimMetrics};
+    let dir = ctx.artifacts.join("reports");
+    let board = Board::zc706();
+    let (mut timing, p, sim_cfg, sized) = {
+        let opts = ctx.options(board.clone());
+        let r = ctx.toolflow(network, board)?;
+        let best = r.best_design().ok_or_else(|| anyhow::anyhow!("no design"))?;
+        (best.timing, r.p, opts.sim, best.cond_buffer_depth)
+    };
+    let flags = synthetic_hard_flags(p, 1024, 0xC5F);
+    let mut rows = Vec::new();
+    for depth in 0..=(sized * 2) {
+        timing.cond_buffer_depth = depth;
+        let m = SimMetrics::from_result(&simulate_ee(&timing, &sim_cfg, &flags), sim_cfg.clock_hz);
+        rows.push(format!(
+            "{depth},{:.1},{},{}",
+            m.throughput_sps,
+            m.stall_cycles,
+            m.deadlock.is_some()
+        ));
+    }
+    write_csv(
+        &dir,
+        &format!("fig7_{network}.csv"),
+        "depth,throughput_sps,stall_cycles,deadlock",
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exports_when_artifacts_present() {
+        if !Path::new("artifacts/networks/blenet.json").exists() {
+            eprintln!("[skip] artifacts not built");
+            return;
+        }
+        let mut ctx = ReportContext::new("artifacts", true);
+        export_fig9(&mut ctx, "blenet", Board::zc706()).unwrap();
+        export_fig7(&mut ctx, "blenet").unwrap();
+        let fig9 = std::fs::read_to_string("artifacts/reports/fig9_blenet.csv").unwrap();
+        assert!(fig9.lines().count() > 5);
+        assert!(fig9.starts_with("series,"));
+        let fig7 = std::fs::read_to_string("artifacts/reports/fig7_blenet.csv").unwrap();
+        assert!(fig7.contains("true"), "deadlock row at depth 0");
+    }
+}

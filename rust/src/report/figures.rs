@@ -1,0 +1,123 @@
+//! Figure regeneration: Fig. 9a (predicted TAP curves), Fig. 9b
+//! (simulated-"board" TAP curves at q = 20/25/30%), and the Fig. 7
+//! buffer-sizing/deadlock ablation.
+
+use super::context::ReportContext;
+use crate::resources::Board;
+use crate::sim::{simulate_ee, SimMetrics};
+
+/// Fig. 9a — optimizer-predicted Throughput-Area curves for the B-LeNet
+/// baseline and the ATHEENA combined design at p = 25%, with the q = p±5%
+/// deviation band (dashed lines in the paper).
+pub fn fig9a(ctx: &mut ReportContext) -> anyhow::Result<()> {
+    let board = Board::zc706();
+    let r = ctx.toolflow("blenet", board.clone())?;
+    println!("== Fig. 9a: predicted TAP, B-LeNet on ZC706, p = {:.0}% ==", r.p * 100.0);
+    println!("-- baseline (fpgaConvNet) --");
+    println!("{:>8} {:>10} {:>8} {:>16} {:>10}", "budget%", "LUT", "DSP", "thr(samples/s)", "limit");
+    for p in &r.baseline_curve.points {
+        let (kind, frac) = p.resources.limiting(&board.resources);
+        println!(
+            "{:>8.0} {:>10} {:>8} {:>16.0} {:>6} {:>3.0}%",
+            p.budget_fraction * 100.0,
+            p.resources.lut,
+            p.resources.dsp,
+            p.throughput,
+            kind.to_string(),
+            frac * 100.0
+        );
+    }
+    println!("-- ATHEENA combined (Eq. 1), q deviations --");
+    println!(
+        "{:>8} {:>8} {:>16} {:>16} {:>16}",
+        "budget%", "DSP", "thr@q=p-5%", "thr@q=p", "thr@q=p+5%"
+    );
+    let p = r.p;
+    for d in &r.designs {
+        println!(
+            "{:>8.0} {:>8} {:>16.0} {:>16.0} {:>16.0}",
+            d.budget_fraction * 100.0,
+            d.total_resources.dsp,
+            d.combined.throughput_at((p - 0.05).max(0.01)),
+            d.combined.throughput_at(p),
+            d.combined.throughput_at(p + 0.05),
+        );
+    }
+    Ok(())
+}
+
+/// Fig. 9b — "board" (simulator) Throughput-Area results with test
+/// batches at q = 30/25/20% hard samples.
+pub fn fig9b(ctx: &mut ReportContext) -> anyhow::Result<()> {
+    let board = Board::zc706();
+    let r = ctx.toolflow("blenet", board.clone())?;
+    println!("== Fig. 9b: measured (simulated board) TAP, B-LeNet on ZC706 ==");
+    println!("-- baseline --");
+    println!("{:>8} {:>8} {:>16}", "budget%", "DSP", "thr(samples/s)");
+    for b in &r.baseline_designs {
+        println!(
+            "{:>8.0} {:>8} {:>16.0}",
+            b.budget_fraction * 100.0,
+            b.total_resources.dsp,
+            b.measured.throughput_sps
+        );
+    }
+    println!("-- ATHEENA (batch 1024, randomly-placed hard samples) --");
+    print!("{:>8} {:>8} {:>6}", "budget%", "DSP", "limit");
+    let qs: Vec<f64> = r.designs[0].measured.iter().map(|(q, _)| *q).collect();
+    for q in &qs {
+        print!(" {:>14}", format!("thr@q={:.0}%", q * 100.0));
+    }
+    println!();
+    for d in &r.designs {
+        let (kind, _) = d.total_resources.limiting(&board.resources);
+        print!(
+            "{:>8.0} {:>8} {:>6}",
+            d.budget_fraction * 100.0,
+            d.total_resources.dsp,
+            kind.to_string()
+        );
+        for (_, m) in &d.measured {
+            print!(" {:>14.0}", m.throughput_sps);
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// Fig. 7 ablation — Conditional Buffer depth sweep: throughput and stall
+/// cycles vs depth, deadlock at depth 0, plateau at the sized minimum.
+pub fn fig7(ctx: &mut ReportContext) -> anyhow::Result<()> {
+    let board = Board::zc706();
+    let q = {
+        let r = ctx.toolflow("blenet", board.clone())?;
+        r.p
+    };
+    let r = ctx.toolflow("blenet", board)?;
+    let best = r
+        .best_design()
+        .ok_or_else(|| anyhow::anyhow!("no design"))?;
+    let sized = best.cond_buffer_depth;
+    println!("== Fig. 7 ablation: Conditional Buffer sizing (B-LeNet best design) ==");
+    println!("sized depth (min + margin) = {sized} samples");
+    println!(
+        "{:>7} {:>16} {:>12} {:>10}",
+        "depth", "thr(samples/s)", "stallcycles", "status"
+    );
+    let mut timing = best.timing;
+    let flags =
+        crate::coordinator::toolflow::synthetic_hard_flags(q, 1024, 0xF16_7);
+    for depth in [0usize, 1, 2, 3, 4, 6, 8, 12, 16, sized, sized * 2] {
+        timing.cond_buffer_depth = depth;
+        let sim = simulate_ee(&timing, &ctx.options(Board::zc706()).sim, &flags);
+        let m = SimMetrics::from_result(&sim, 125e6);
+        println!(
+            "{:>7} {:>16.0} {:>12} {:>10}",
+            depth,
+            m.throughput_sps,
+            m.stall_cycles,
+            if m.deadlock.is_some() { "DEADLOCK" } else { "ok" }
+        );
+    }
+    Ok(())
+}

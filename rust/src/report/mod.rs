@@ -1,0 +1,42 @@
+//! Report harness: regenerates every table and figure of the paper's
+//! evaluation (§IV) from this reproduction's own toolflow + simulator +
+//! PJRT numerics. One function per artifact; `all` runs everything.
+//!
+//! The absolute numbers come from our analytic resource models and the
+//! dataflow simulator, not a ZC706 — per DESIGN.md §5 the comparison
+//! targets are the *shapes*: who wins, by what factor, where the q
+//! deviations land, which resource limits, and where BRAM overhead goes.
+
+pub mod context;
+pub mod export;
+pub mod figures;
+pub mod tables;
+
+pub use context::ReportContext;
+
+/// Run one named report artifact ("fig9a", "table1", ..., "all").
+pub fn run(name: &str, ctx: &mut ReportContext) -> anyhow::Result<()> {
+    match name {
+        "fig9a" => figures::fig9a(ctx),
+        "fig9b" => figures::fig9b(ctx),
+        "fig7" => figures::fig7(ctx),
+        "table1" => tables::table1(ctx),
+        "table2" => tables::table2(ctx),
+        "table3" => tables::table3(ctx),
+        "table4" => tables::table4(ctx),
+        "csv" => {
+            export::export_fig9(ctx, "blenet", crate::resources::Board::zc706())?;
+            export::export_fig7(ctx, "blenet")
+        }
+        "all" => {
+            for r in ["fig9a", "fig9b", "fig7", "table1", "table2", "table3", "table4"] {
+                run(r, ctx)?;
+                println!();
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown report '{other}' (fig9a|fig9b|fig7|table1|table2|table3|table4|csv|all)"
+        ),
+    }
+}

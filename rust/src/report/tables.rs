@@ -1,0 +1,250 @@
+//! Table regeneration: Tables I–IV of §IV.
+
+use super::context::ReportContext;
+use crate::coordinator::batch::{BatchHost, BaselineHost};
+use crate::coordinator::toolflow::{BaselineDesign, ChosenDesign};
+use crate::resources::Board;
+use crate::runtime::ArtifactStore;
+use crate::sim::DesignTiming;
+
+/// Pick three representative design points (low/mid/high budget) from a
+/// list sorted by budget fraction — the paper's B1–B3 / A1–A3.
+fn pick3<T>(xs: &[T]) -> Vec<&T> {
+    match xs.len() {
+        0 => vec![],
+        1 => vec![&xs[0]],
+        2 => vec![&xs[0], &xs[1]],
+        n => vec![&xs[n / 4], &xs[n / 2], &xs[n - 1]],
+    }
+}
+
+/// Table I — resource comparison, implemented baseline vs ATHEENA.
+pub fn table1(ctx: &mut ReportContext) -> anyhow::Result<()> {
+    let board = Board::zc706();
+    let r = ctx.toolflow("blenet", board.clone())?;
+    println!("== Table I: implemented Baseline vs ATHEENA, B-LeNet on ZC706 ==");
+    println!(
+        "{:>4} {:>9} {:>9} {:>6} {:>6} {:>10} {:>16}",
+        "", "LUT", "FF", "DSP", "BRAM", "limit(%)", "thr(samples/s)"
+    );
+    let bases: Vec<&BaselineDesign> = pick3(&r.baseline_designs);
+    let ees: Vec<&ChosenDesign> = pick3(&r.designs);
+    for (i, (b, a)) in bases.iter().zip(ees.iter()).enumerate() {
+        let (bk, bf) = b.total_resources.limiting(&board.resources);
+        println!(
+            "B{:<3} {:>9} {:>9} {:>6} {:>6} {:>5} {:>3.0}% {:>16.0}",
+            i + 1,
+            b.total_resources.lut,
+            b.total_resources.ff,
+            b.total_resources.dsp,
+            b.total_resources.bram,
+            bk.to_string(),
+            bf * 100.0,
+            b.measured.throughput_sps
+        );
+        let (ak, af) = a.total_resources.limiting(&board.resources);
+        // Measured at q = p (the middle q in the default 20/25/30 list).
+        let at_p = a
+            .measured
+            .iter()
+            .min_by(|(qa, _), (qb, _)| {
+                (qa - r.p).abs().total_cmp(&(qb - r.p).abs())
+            })
+            .map(|(_, m)| m.throughput_sps)
+            .unwrap_or(0.0);
+        println!(
+            "A{:<3} {:>9} {:>9} {:>6} {:>6} {:>5} {:>3.0}% {:>16.0}",
+            i + 1,
+            a.total_resources.lut,
+            a.total_resources.ff,
+            a.total_resources.dsp,
+            a.total_resources.bram,
+            ak.to_string(),
+            af * 100.0,
+            at_p
+        );
+    }
+    // Headline ratios (paper: 2.17x, same-throughput at 46% resources).
+    if let (Some(bb), Some(ba)) = (r.best_baseline(), r.best_design()) {
+        let base_thr = bb.measured.throughput_sps;
+        let ee_thr = ba
+            .measured
+            .iter()
+            .min_by(|(qa, _), (qb, _)| (qa - r.p).abs().total_cmp(&(qb - r.p).abs()))
+            .map(|(_, m)| m.throughput_sps)
+            .unwrap_or(0.0);
+        println!("max ATHEENA / max baseline throughput = {:.2}x", ee_thr / base_thr);
+        // Smallest EE design matching the baseline max.
+        if let Some(match_d) = r
+            .designs
+            .iter()
+            .filter(|d| {
+                d.measured
+                    .iter()
+                    .min_by(|(qa, _), (qb, _)| (qa - r.p).abs().total_cmp(&(qb - r.p).abs()))
+                    .map(|(_, m)| m.throughput_sps >= base_thr)
+                    .unwrap_or(false)
+            })
+            .min_by_key(|d| d.total_resources.dsp)
+        {
+            let (kind, _) = bb.total_resources.limiting(&board.resources);
+            let b_lim = bb.total_resources.component(kind) as f64;
+            let a_lim = match_d.total_resources.component(kind) as f64;
+            println!(
+                "ATHEENA matches baseline max throughput with {:.0}% of its limiting resource ({kind})",
+                100.0 * a_lim / b_lim
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Table II — Early-Exit resource overhead as % of the total design.
+pub fn table2(ctx: &mut ReportContext) -> anyhow::Result<()> {
+    let r = ctx.toolflow("blenet", Board::zc706())?;
+    println!("== Table II: Early-Exit overhead (vs network backbone), B-LeNet ==");
+    println!(
+        "{:>4} {:>9} {:>4} {:>9} {:>4} {:>6} {:>4} {:>6} {:>4}",
+        "", "LUT", "%", "FF", "%", "DSP", "%", "BRAM", "%"
+    );
+    for (i, d) in pick3(&r.designs).iter().enumerate() {
+        let ee = d.mapping.ee_overhead_resources();
+        let tot = d.total_resources;
+        let pct = |a: u64, b: u64| if b == 0 { 0.0 } else { 100.0 * a as f64 / b as f64 };
+        println!(
+            "A{:<3} {:>9} {:>4.0} {:>9} {:>4.0} {:>6} {:>4.0} {:>6} {:>4.0}",
+            i + 1,
+            ee.lut,
+            pct(ee.lut, tot.lut),
+            ee.ff,
+            pct(ee.ff, tot.ff),
+            ee.dsp,
+            pct(ee.dsp, tot.dsp),
+            ee.bram,
+            pct(ee.bram, tot.bram),
+        );
+    }
+    println!("(paper: overhead dominated by BRAM — conditional buffering + robustness margin)");
+    Ok(())
+}
+
+/// Table III — comparison against BranchyNet-reported CPU/GPU numbers,
+/// plus our measured baseline/ATHEENA accuracy (PJRT numerics) and
+/// throughput (simulated board).
+pub fn table3(ctx: &mut ReportContext) -> anyhow::Result<()> {
+    println!("== Table III: BranchyNet-reported vs this reproduction ==");
+    println!(
+        "{:>9} {:>9} {:>10} {:>6} {:>16}",
+        "platform", "network", "top1(%)", "p(%)", "thr(samples/s)"
+    );
+    // Quoted from the paper (their Table III, converted from latency).
+    for (plat, net, acc, p, thr) in [
+        ("CPU", "LeNet", "99.20", "-", "297"),
+        ("CPU", "B-LeNet", "99.25", "5.7", "1613"),
+        ("GPU", "LeNet", "99.20", "-", "633"),
+        ("GPU", "B-LeNet", "99.25", "5.7", "2941"),
+    ] {
+        println!("{plat:>9} {net:>9} {acc:>10} {p:>6} {thr:>16}  (paper-quoted)");
+    }
+
+    // Our measured rows: PJRT accuracy over the synthetic test set +
+    // simulated board throughput of the best designs.
+    let board = Board::zc706();
+    let (base_timing, ee_timing, p, base_thr_sim, ee_thr_sim) = {
+        let r = ctx.toolflow("blenet", board.clone())?;
+        let bb = r.best_baseline().ok_or_else(|| anyhow::anyhow!("no baseline"))?;
+        let ba = r.best_design().ok_or_else(|| anyhow::anyhow!("no design"))?;
+        let ee_thr = ba
+            .measured
+            .iter()
+            .min_by(|(qa, _), (qb, _)| (qa - r.p).abs().total_cmp(&(qb - r.p).abs()))
+            .map(|(_, m)| m.throughput_sps)
+            .unwrap_or(0.0);
+        (
+            DesignTiming::from_baseline_mapping(&bb.mapping),
+            ba.timing,
+            r.p,
+            bb.measured.throughput_sps,
+            ee_thr,
+        )
+    };
+
+    let store = ArtifactStore::open(&ctx.artifacts)?;
+    let n = if ctx.quick { 256 } else { 1024 };
+    let opts = ctx.options(board);
+    let ts = ctx.testset("blenet")?;
+    let batch = ts.batch_with_q(p, n, 0x7AB3);
+
+    let baseline_exec = store.baseline("blenet")?;
+    let bh = BaselineHost {
+        exec: &baseline_exec,
+        timing: base_timing,
+        sim: opts.sim.clone(),
+    };
+    let base_rep = bh.run(ts, &batch)?;
+
+    let s1 = store.stage1("blenet")?;
+    let s2 = store.stage2("blenet")?;
+    let eh = BatchHost {
+        stage1: &s1,
+        stage2: &s2,
+        timing: ee_timing,
+        sim: opts.sim.clone(),
+    };
+    let ee_rep = eh.run(ts, &batch)?;
+
+    println!(
+        "{:>9} {:>9} {:>10.2} {:>6} {:>16.0}  (ours, simulated board + PJRT accuracy)",
+        "Baseline", "LeNet", base_rep.accuracy * 100.0, "-", base_thr_sim
+    );
+    println!(
+        "{:>9} {:>9} {:>10.2} {:>6.1} {:>16.0}  (ours, measured q={:.1}%, flag agreement {:.3})",
+        "ATHEENA",
+        "B-LeNet",
+        ee_rep.accuracy * 100.0,
+        p * 100.0,
+        ee_thr_sim,
+        ee_rep.measured_q * 100.0,
+        ee_rep.flag_agreement
+    );
+    Ok(())
+}
+
+/// Table IV — predicted throughput gains for all three networks (B-LeNet
+/// on ZC706; Triple-Wins and B-AlexNet on VU440), from the optimizer
+/// stage, as in the paper.
+pub fn table4(ctx: &mut ReportContext) -> anyhow::Result<()> {
+    println!("== Table IV: two-stage ATHEENA vs fpgaConvNet baseline (predicted) ==");
+    println!(
+        "{:>11} {:>9} {:>9} {:>6} {:>6} {:>16} {:>7}",
+        "network", "toolflow", "limit", "lim%", "p(%)", "thr(samples/s)", "gain"
+    );
+    for (name, board) in [
+        ("blenet", Board::zc706()),
+        ("triplewins", Board::vu440()),
+        ("balexnet", Board::vu440()),
+    ] {
+        let r = ctx.toolflow(name, board.clone())?;
+        let bb = r.best_baseline().ok_or_else(|| anyhow::anyhow!("no baseline"))?;
+        let ba = r.best_design().ok_or_else(|| anyhow::anyhow!("no design"))?;
+        let (bk, bf) = bb.total_resources.limiting(&board.resources);
+        let (ak, af) = ba.total_resources.limiting(&board.resources);
+        let base_thr = bb.throughput_predicted;
+        let ee_thr = ba.combined.throughput_at(r.p);
+        println!(
+            "{:>11} {:>9} {:>9} {:>5.0}% {:>6} {:>16.0} {:>7}",
+            name, "Baseline", bk.to_string(), bf * 100.0, "-", base_thr, "1.00x"
+        );
+        println!(
+            "{:>11} {:>9} {:>9} {:>5.0}% {:>6.0} {:>16.0} {:>6.2}x",
+            name,
+            "ATHEENA",
+            ak.to_string(),
+            af * 100.0,
+            r.p * 100.0,
+            ee_thr,
+            ee_thr / base_thr
+        );
+    }
+    Ok(())
+}

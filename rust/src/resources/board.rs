@@ -1,0 +1,76 @@
+//! Target platform definitions (paper §IV-A / §IV-B).
+//!
+//! The ZC706 numbers are quoted directly from the paper ("218600 LUTs,
+//! 437200 FFs, 900 DSPs, and 1090 18K BRAMs"); the VU440 numbers come from
+//! the Xilinx UltraScale datasheet (BRAM expressed in 18 Kb blocks).
+
+use super::vec::ResourceVec;
+
+/// An FPGA target: total resources + the conservative clock the paper uses
+/// ("each design is conservatively clocked at 125 MHz").
+#[derive(Clone, Debug, PartialEq)]
+pub struct Board {
+    pub name: &'static str,
+    pub resources: ResourceVec,
+    pub clock_hz: f64,
+}
+
+impl Board {
+    /// Xilinx ZC706 (Zynq 7045 SoC) — the board of §IV-A.
+    pub fn zc706() -> Board {
+        Board {
+            name: "zc706",
+            resources: ResourceVec::new(218_600, 437_200, 900, 1_090),
+            clock_hz: 125.0e6,
+        }
+    }
+
+    /// Xilinx VU440 — the larger platform of Table IV (§IV-B).
+    pub fn vu440() -> Board {
+        Board {
+            name: "vu440",
+            resources: ResourceVec::new(2_532_960, 5_065_920, 2_880, 5_040),
+            clock_hz: 125.0e6,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Board> {
+        match name {
+            "zc706" => Some(Board::zc706()),
+            "vu440" => Some(Board::vu440()),
+            _ => None,
+        }
+    }
+
+    /// Budget at a percentage of the board (the paper constrains both
+    /// optimizers "at different percentages" to trace the TAP curve).
+    pub fn budget(&self, frac: f64) -> ResourceVec {
+        self.resources.scaled(frac)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zc706_matches_paper() {
+        let b = Board::zc706();
+        assert_eq!(b.resources, ResourceVec::new(218_600, 437_200, 900, 1_090));
+        assert_eq!(b.clock_hz, 125.0e6);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Board::by_name("zc706").unwrap().name, "zc706");
+        assert_eq!(Board::by_name("vu440").unwrap().name, "vu440");
+        assert!(Board::by_name("vcu128").is_none());
+    }
+
+    #[test]
+    fn budget_scaling() {
+        let b = Board::zc706();
+        assert_eq!(b.budget(0.5).dsp, 450);
+        assert!(b.budget(0.35).fits_in(&b.resources));
+    }
+}

@@ -1,0 +1,10 @@
+//! FPGA resource accounting: resource vectors, board definitions, and the
+//! per-module analytic resource models (the Vivado-report stand-in — see
+//! DESIGN.md §2).
+
+pub mod board;
+pub mod model;
+pub mod vec;
+
+pub use board::Board;
+pub use vec::ResourceVec;

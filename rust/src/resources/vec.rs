@@ -1,0 +1,221 @@
+//! `ResourceVec` — the 4-dimensional FPGA resource vector (LUT, FF, DSP,
+//! BRAM18) the paper's TAP functions are defined over (§III-A: a TAP is
+//! `f: N^4 -> Q`).
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// FPGA resource usage / budget. BRAM is counted in 18 Kb blocks (RAMB18),
+/// matching the ZC706 numbers in §IV-A.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct ResourceVec {
+    pub lut: u64,
+    pub ff: u64,
+    pub dsp: u64,
+    pub bram: u64,
+}
+
+/// Which resource class limits a design (the ×/□/○ markers of Fig. 9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResourceKind {
+    Lut,
+    Ff,
+    Dsp,
+    Bram,
+}
+
+impl fmt::Display for ResourceKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            ResourceKind::Lut => "LUT",
+            ResourceKind::Ff => "FF",
+            ResourceKind::Dsp => "DSP",
+            ResourceKind::Bram => "BRAM",
+        };
+        f.write_str(s)
+    }
+}
+
+impl ResourceVec {
+    pub const ZERO: ResourceVec = ResourceVec {
+        lut: 0,
+        ff: 0,
+        dsp: 0,
+        bram: 0,
+    };
+
+    pub fn new(lut: u64, ff: u64, dsp: u64, bram: u64) -> Self {
+        ResourceVec { lut, ff, dsp, bram }
+    }
+
+    /// Component-wise `self <= other` (fits within a budget).
+    pub fn fits_in(&self, budget: &ResourceVec) -> bool {
+        self.lut <= budget.lut
+            && self.ff <= budget.ff
+            && self.dsp <= budget.dsp
+            && self.bram <= budget.bram
+    }
+
+    /// Scale a budget by a fraction (used to constrain the optimizer to a
+    /// percentage of the board, §IV-A). Floors each component.
+    pub fn scaled(&self, frac: f64) -> ResourceVec {
+        assert!(frac >= 0.0);
+        ResourceVec {
+            lut: (self.lut as f64 * frac) as u64,
+            ff: (self.ff as f64 * frac) as u64,
+            dsp: (self.dsp as f64 * frac) as u64,
+            bram: (self.bram as f64 * frac) as u64,
+        }
+    }
+
+    /// Component-wise saturating subtraction (remaining budget).
+    pub fn saturating_sub(&self, other: &ResourceVec) -> ResourceVec {
+        ResourceVec {
+            lut: self.lut.saturating_sub(other.lut),
+            ff: self.ff.saturating_sub(other.ff),
+            dsp: self.dsp.saturating_sub(other.dsp),
+            bram: self.bram.saturating_sub(other.bram),
+        }
+    }
+
+    /// Utilisation of each component against a budget, as fractions.
+    pub fn utilisation(&self, budget: &ResourceVec) -> [f64; 4] {
+        let d = |a: u64, b: u64| {
+            if b == 0 {
+                if a == 0 {
+                    0.0
+                } else {
+                    f64::INFINITY
+                }
+            } else {
+                a as f64 / b as f64
+            }
+        };
+        [
+            d(self.lut, budget.lut),
+            d(self.ff, budget.ff),
+            d(self.dsp, budget.dsp),
+            d(self.bram, budget.bram),
+        ]
+    }
+
+    /// The limiting resource and its utilisation fraction (Table I's
+    /// "Limiting Resource (%)" column).
+    pub fn limiting(&self, budget: &ResourceVec) -> (ResourceKind, f64) {
+        let u = self.utilisation(budget);
+        let kinds = [
+            ResourceKind::Lut,
+            ResourceKind::Ff,
+            ResourceKind::Dsp,
+            ResourceKind::Bram,
+        ];
+        let mut best = (kinds[0], u[0]);
+        for i in 1..4 {
+            if u[i] > best.1 {
+                best = (kinds[i], u[i]);
+            }
+        }
+        best
+    }
+
+    /// Max utilisation fraction (for penalty terms in the optimizer).
+    pub fn max_utilisation(&self, budget: &ResourceVec) -> f64 {
+        self.limiting(budget).1
+    }
+
+    pub fn component(&self, kind: ResourceKind) -> u64 {
+        match kind {
+            ResourceKind::Lut => self.lut,
+            ResourceKind::Ff => self.ff,
+            ResourceKind::Dsp => self.dsp,
+            ResourceKind::Bram => self.bram,
+        }
+    }
+}
+
+impl Add for ResourceVec {
+    type Output = ResourceVec;
+    fn add(self, o: ResourceVec) -> ResourceVec {
+        ResourceVec {
+            lut: self.lut + o.lut,
+            ff: self.ff + o.ff,
+            dsp: self.dsp + o.dsp,
+            bram: self.bram + o.bram,
+        }
+    }
+}
+
+impl AddAssign for ResourceVec {
+    fn add_assign(&mut self, o: ResourceVec) {
+        *self = *self + o;
+    }
+}
+
+impl Sub for ResourceVec {
+    type Output = ResourceVec;
+    fn sub(self, o: ResourceVec) -> ResourceVec {
+        ResourceVec {
+            lut: self.lut - o.lut,
+            ff: self.ff - o.ff,
+            dsp: self.dsp - o.dsp,
+            bram: self.bram - o.bram,
+        }
+    }
+}
+
+impl fmt::Display for ResourceVec {
+    fmt_display_impl!();
+}
+
+// Small macro keeps Display readable above.
+macro_rules! fmt_display_impl {
+    () => {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(
+                f,
+                "LUT {} / FF {} / DSP {} / BRAM {}",
+                self.lut, self.ff, self.dsp, self.bram
+            )
+        }
+    };
+}
+use fmt_display_impl;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_and_arithmetic() {
+        let a = ResourceVec::new(10, 20, 3, 4);
+        let b = ResourceVec::new(5, 5, 1, 1);
+        assert!(b.fits_in(&a));
+        assert!(!a.fits_in(&b));
+        assert_eq!(a + b, ResourceVec::new(15, 25, 4, 5));
+        assert_eq!(a - b, ResourceVec::new(5, 15, 2, 3));
+        assert_eq!(b.saturating_sub(&a), ResourceVec::ZERO);
+    }
+
+    #[test]
+    fn limiting_resource() {
+        let budget = ResourceVec::new(1000, 1000, 100, 100);
+        let use_ = ResourceVec::new(100, 100, 90, 10);
+        let (kind, frac) = use_.limiting(&budget);
+        assert_eq!(kind, ResourceKind::Dsp);
+        assert!((frac - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaled_floors() {
+        let b = ResourceVec::new(11, 11, 11, 11).scaled(0.5);
+        assert_eq!(b, ResourceVec::new(5, 5, 5, 5));
+    }
+
+    #[test]
+    fn zero_budget_utilisation() {
+        let u = ResourceVec::new(1, 0, 0, 0)
+            .utilisation(&ResourceVec::ZERO);
+        assert!(u[0].is_infinite());
+        assert_eq!(u[1], 0.0);
+    }
+}

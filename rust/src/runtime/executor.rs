@@ -1,0 +1,153 @@
+//! Typed executables around the PJRT loaded modules.
+//!
+//! All three modules were lowered with `return_tuple=True` (see
+//! `python/compile/aot.py`), so every execution returns a tuple literal
+//! that gets decomposed here. Shapes are validated against the network IR
+//! at construction.
+
+use crate::ee::decision::argmax;
+use crate::ir::Network;
+
+/// Stage-1 output: the exit-decision flag computed in-graph by the Pallas
+/// kernel, the early-exit softmax distribution, and the intermediate
+/// feature map the Conditional Buffer would hold.
+#[derive(Clone, Debug)]
+pub struct Stage1Output {
+    pub take_exit: bool,
+    pub exit_probs: Vec<f32>,
+    pub features: Vec<f32>,
+}
+
+impl Stage1Output {
+    pub fn pred(&self) -> usize {
+        argmax(&self.exit_probs)
+    }
+}
+
+fn literal_3d(data: &[f32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+    anyhow::ensure!(
+        data.len() == shape.iter().product::<usize>(),
+        "data/shape mismatch: {} vs {:?}",
+        data.len(),
+        shape
+    );
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape to {shape:?}: {e:?}"))
+}
+
+fn run_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[xla::Literal],
+) -> anyhow::Result<Vec<xla::Literal>> {
+    let result = exe
+        .execute::<xla::Literal>(inputs)
+        .map_err(|e| anyhow::anyhow!("PJRT execute: {e:?}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("PJRT device->host: {e:?}"))?;
+    result
+        .to_tuple()
+        .map_err(|e| anyhow::anyhow!("decomposing result tuple: {e:?}"))
+}
+
+fn to_f32s(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal to f32 vec: {e:?}"))
+}
+
+/// Stage 1: `(C,H,W) image -> (take, exit_probs, features)`.
+pub struct Stage1Exec {
+    exe: xla::PjRtLoadedExecutable,
+    pub net: Network,
+    input_shape: Vec<usize>,
+    pub feature_words: usize,
+}
+
+impl Stage1Exec {
+    pub fn new(exe: xla::PjRtLoadedExecutable, net: Network) -> Stage1Exec {
+        let input_shape = net.input_shape.0.clone();
+        let feature_words = net.stage1_out_shape().words();
+        Stage1Exec {
+            exe,
+            net,
+            input_shape,
+            feature_words,
+        }
+    }
+
+    pub fn run(&self, image: &[f32]) -> anyhow::Result<Stage1Output> {
+        let x = literal_3d(image, &self.input_shape)?;
+        let parts = run_tuple(&self.exe, &[x])?;
+        anyhow::ensure!(parts.len() == 3, "stage1 must return 3 outputs");
+        let take = to_f32s(&parts[0])?;
+        let probs = to_f32s(&parts[1])?;
+        let features = to_f32s(&parts[2])?;
+        anyhow::ensure!(probs.len() == self.net.classes, "bad probs width");
+        anyhow::ensure!(
+            features.len() == self.feature_words,
+            "bad feature width: {} vs {}",
+            features.len(),
+            self.feature_words
+        );
+        Ok(Stage1Output {
+            take_exit: take.first().copied().unwrap_or(0.0) > 0.5,
+            exit_probs: probs,
+            features,
+        })
+    }
+}
+
+/// Stage 2: `features -> class probabilities`.
+pub struct Stage2Exec {
+    exe: xla::PjRtLoadedExecutable,
+    pub net: Network,
+    feature_shape: Vec<usize>,
+}
+
+impl Stage2Exec {
+    pub fn new(exe: xla::PjRtLoadedExecutable, net: Network) -> Stage2Exec {
+        let feature_shape = net.stage1_out_shape().0.clone();
+        Stage2Exec {
+            exe,
+            net,
+            feature_shape,
+        }
+    }
+
+    pub fn run(&self, features: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let x = literal_3d(features, &self.feature_shape)?;
+        let parts = run_tuple(&self.exe, &[x])?;
+        anyhow::ensure!(parts.len() == 1, "stage2 must return 1 output");
+        let probs = to_f32s(&parts[0])?;
+        anyhow::ensure!(probs.len() == self.net.classes, "bad probs width");
+        Ok(probs)
+    }
+}
+
+/// Baseline: `(C,H,W) image -> class probabilities`.
+pub struct BaselineExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub net: Network,
+    input_shape: Vec<usize>,
+}
+
+impl BaselineExec {
+    pub fn new(exe: xla::PjRtLoadedExecutable, net: Network) -> BaselineExec {
+        let input_shape = net.input_shape.0.clone();
+        BaselineExec {
+            exe,
+            net,
+            input_shape,
+        }
+    }
+
+    pub fn run(&self, image: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let x = literal_3d(image, &self.input_shape)?;
+        let parts = run_tuple(&self.exe, &[x])?;
+        anyhow::ensure!(parts.len() == 1, "baseline must return 1 output");
+        let probs = to_f32s(&parts[0])?;
+        anyhow::ensure!(probs.len() == self.net.classes, "bad probs width");
+        Ok(probs)
+    }
+}

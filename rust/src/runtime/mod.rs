@@ -1,0 +1,18 @@
+//! PJRT runtime — loads and executes the AOT-compiled network numerics.
+//!
+//! The build-time Python side (`python/compile/aot.py`) lowers each
+//! network module (stage 1 with its Pallas exit-decision kernel, stage 2,
+//! and the baseline) to HLO *text*; this module loads those artifacts,
+//! compiles them once on the PJRT CPU client, and exposes typed
+//! executables to the coordinator's hot path. Python is never involved at
+//! runtime — the binary is self-contained given `artifacts/`.
+//!
+//! Interchange is HLO text, not serialized protos: jax >= 0.5 emits
+//! protos with 64-bit instruction ids that the crate's XLA (0.5.1)
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README).
+
+pub mod executor;
+pub mod store;
+
+pub use executor::{BaselineExec, Stage1Exec, Stage1Output, Stage2Exec};
+pub use store::ArtifactStore;

@@ -1,0 +1,94 @@
+//! Artifact store: one PJRT client + the compiled executables per network.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::executor::{BaselineExec, Stage1Exec, Stage2Exec};
+use crate::ir::Network;
+
+/// Owns the PJRT client and every compiled executable. Compilation
+/// happens once at load; the request path only executes.
+pub struct ArtifactStore {
+    pub client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+    networks: HashMap<String, Network>,
+}
+
+impl ArtifactStore {
+    /// Create a CPU PJRT client and index the artifacts directory.
+    pub fn open(artifacts_dir: &Path) -> anyhow::Result<ArtifactStore> {
+        anyhow::ensure!(
+            artifacts_dir.is_dir(),
+            "artifacts directory {} missing — run `make artifacts`",
+            artifacts_dir.display()
+        );
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        let mut networks = HashMap::new();
+        let ndir = artifacts_dir.join("networks");
+        if ndir.is_dir() {
+            for entry in std::fs::read_dir(&ndir)? {
+                let path = entry?.path();
+                if path.extension().and_then(|e| e.to_str()) == Some("json") {
+                    let net = Network::from_file(&path)?;
+                    networks.insert(net.name.clone(), net);
+                }
+            }
+        }
+        Ok(ArtifactStore {
+            client,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            networks,
+        })
+    }
+
+    pub fn network(&self, name: &str) -> anyhow::Result<&Network> {
+        self.networks.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "network '{name}' not in artifacts (have: {:?})",
+                self.network_names()
+            )
+        })
+    }
+
+    pub fn network_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.networks.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    fn compile(&self, file: &str) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+        let path = self.artifacts_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))
+    }
+
+    /// Compile the stage-1 module (backbone prefix + exit classifier +
+    /// exit-decision kernel) of a network.
+    pub fn stage1(&self, name: &str) -> anyhow::Result<Stage1Exec> {
+        let net = self.network(name)?.clone();
+        let exe = self.compile(&format!("{name}_stage1.hlo.txt"))?;
+        Ok(Stage1Exec::new(exe, net))
+    }
+
+    /// Compile the stage-2 module (backbone suffix -> class probabilities).
+    pub fn stage2(&self, name: &str) -> anyhow::Result<Stage2Exec> {
+        let net = self.network(name)?.clone();
+        let exe = self.compile(&format!("{name}_stage2.hlo.txt"))?;
+        Ok(Stage2Exec::new(exe, net))
+    }
+
+    /// Compile the single-stage baseline module.
+    pub fn baseline(&self, name: &str) -> anyhow::Result<BaselineExec> {
+        let net = self.network(name)?.clone();
+        let exe = self.compile(&format!("{name}_baseline.hlo.txt"))?;
+        Ok(BaselineExec::new(exe, net))
+    }
+}

@@ -1,0 +1,94 @@
+//! Conditional Buffer sizing (paper Fig. 7).
+//!
+//! "The latency of the additional exit computation and exit decision
+//! layers is used to determine the minimum amount of buffering required by
+//! the conditional buffer to prevent deadlock in the design."
+//!
+//! While a sample's feature map waits in the Conditional Buffer, the exit
+//! branch is still computing its confidence. New samples keep arriving
+//! every `stage1 II` cycles. The buffer must therefore hold at least
+//! `ceil(decision_delay_cycles / stage1_ii) + 1`
+//! samples (the +1 is the sample whose decision is in flight). Below this
+//! depth the buffer fills with undecided samples, backpressure stalls the
+//! Split, the exit branch is starved *mid-sample*, and the decision that
+//! would free the buffer never completes — deadlock. The simulator
+//! reproduces exactly this failure mode (`sim::engine` + the fig7 report).
+
+use super::mapping::HwMapping;
+use crate::ir::StageId;
+
+/// Cycles from a sample entering the exit branch to its decision reaching
+/// the Conditional Buffer's control port.
+pub fn decision_delay_cycles(m: &HwMapping) -> u64 {
+    // Sum of latencies along the exit-branch chain (classifier layers +
+    // the Exit Decision layer itself).
+    m.stage_latency(StageId::ExitBranch)
+}
+
+/// Minimum Conditional Buffer depth (in samples) that avoids deadlock.
+pub fn min_depth_samples(m: &HwMapping) -> usize {
+    let delay = decision_delay_cycles(m);
+    let ii = m.stage1_ii().max(1);
+    (delay.div_ceil(ii) + 1) as usize
+}
+
+/// Recommended depth: the minimum plus a robustness margin for q > p
+/// bursts ("additional BRAM is added to increase robustness to variation
+/// in the hard samples' exit probability", §IV-A). The margin scales with
+/// how bursty the worst case is: a run of hard samples of length L makes
+/// stage 2 the bottleneck for L * stage2_ii cycles during which stage 1
+/// keeps producing.
+pub fn recommended_depth_samples(m: &HwMapping, margin_samples: usize) -> usize {
+    min_depth_samples(m) + margin_samples
+}
+
+/// Size the mapping's Conditional Buffer in place and return the depth.
+pub fn size_cond_buffer(m: &mut HwMapping, margin_samples: usize) -> usize {
+    let depth = recommended_depth_samples(m, margin_samples);
+    m.set_cond_buffer_depth(depth);
+    depth
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::network::testnet;
+    use crate::ir::Cdfg;
+
+    fn mapping() -> HwMapping {
+        HwMapping::minimal(Cdfg::lower(&testnet::blenet_like(), 1))
+    }
+
+    #[test]
+    fn min_depth_positive_and_consistent() {
+        let m = mapping();
+        let d = min_depth_samples(&m);
+        assert!(d >= 1);
+        // Faster stage 1 (smaller II) needs a deeper buffer for the same
+        // decision delay.
+        let mut fast = m.clone();
+        for i in 0..fast.foldings.len() {
+            fast.foldings[i] = fast.spaces[i].max();
+        }
+        assert!(min_depth_samples(&fast) >= 1);
+        let delay_slow = decision_delay_cycles(&m);
+        let delay_fast = decision_delay_cycles(&fast);
+        assert!(delay_fast <= delay_slow);
+    }
+
+    #[test]
+    fn sizing_updates_mapping() {
+        let mut m = mapping();
+        let d = size_cond_buffer(&mut m, 4);
+        assert_eq!(m.cond_buffer_depth(), d);
+        assert_eq!(d, min_depth_samples(&m) + 4);
+    }
+
+    #[test]
+    fn depth_formula() {
+        let m = mapping();
+        let d = min_depth_samples(&m);
+        let expect = decision_delay_cycles(&m).div_ceil(m.stage1_ii()) + 1;
+        assert_eq!(d as u64, expect);
+    }
+}

@@ -1,0 +1,192 @@
+//! Folding parameters — fpgaConvNet's design-space axes.
+//!
+//! * `coarse_in`  — parallel input-channel lanes (must divide C_in),
+//! * `coarse_out` — parallel output-channel lanes (must divide C_out),
+//! * `fine`       — parallel K*K window taps (must divide K*K; convs only).
+//!
+//! Non-conv layers use a single `coarse` factor (stored in `coarse_in`)
+//! over their streamed dimension.
+
+use crate::ir::{HwOp, Op, Shape};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Folding {
+    pub coarse_in: usize,
+    pub coarse_out: usize,
+    pub fine: usize,
+}
+
+impl Folding {
+    pub const UNIT: Folding = Folding {
+        coarse_in: 1,
+        coarse_out: 1,
+        fine: 1,
+    };
+
+    pub fn parallel_units(&self) -> usize {
+        self.coarse_in * self.coarse_out * self.fine
+    }
+}
+
+/// All divisors of n, ascending.
+pub fn divisors(n: usize) -> Vec<usize> {
+    assert!(n > 0);
+    let mut out: Vec<usize> = (1..=n).filter(|d| n % d == 0).collect();
+    out.sort_unstable();
+    out
+}
+
+/// The feasible folding values per axis for a node. DSE mutates within
+/// these lists; the unit folding is always feasible.
+#[derive(Clone, Debug)]
+pub struct FoldingSpace {
+    pub coarse_in: Vec<usize>,
+    pub coarse_out: Vec<usize>,
+    pub fine: Vec<usize>,
+}
+
+impl FoldingSpace {
+    /// Derive the folding space for a hardware op with the given input
+    /// shape.
+    pub fn for_op(op: &HwOp, in_shape: &Shape) -> FoldingSpace {
+        let unit = vec![1usize];
+        match op {
+            HwOp::Std(Op::Conv { out_ch, k, .. }) => FoldingSpace {
+                coarse_in: divisors(in_shape.channels()),
+                coarse_out: divisors(*out_ch),
+                fine: divisors(k * k),
+            },
+            HwOp::Std(Op::Linear { out }) => FoldingSpace {
+                // Linear coarse-in folds the (flattened) input vector; cap
+                // the lane count at 64 to keep ROM banking realistic.
+                coarse_in: divisors(in_shape.words())
+                    .into_iter()
+                    .filter(|&d| d <= 64)
+                    .collect(),
+                coarse_out: divisors(*out),
+                fine: unit,
+            },
+            HwOp::Std(Op::Relu) | HwOp::Std(Op::MaxPool { .. }) | HwOp::Split { .. } => {
+                FoldingSpace {
+                    coarse_in: divisors(in_shape.channels()),
+                    coarse_out: unit.clone(),
+                    fine: unit,
+                }
+            }
+            HwOp::Std(Op::Flatten) => FoldingSpace {
+                coarse_in: divisors(in_shape.channels()),
+                coarse_out: unit.clone(),
+                fine: unit,
+            },
+            // EE control layers have fixed implementations (the decision
+            // layer is already fully parallel over classes; buffers and
+            // merges are not folded).
+            HwOp::ExitDecision { .. } | HwOp::CondBuffer { .. } | HwOp::ExitMerge { .. } => {
+                FoldingSpace {
+                    coarse_in: unit.clone(),
+                    coarse_out: unit.clone(),
+                    fine: unit,
+                }
+            }
+        }
+    }
+
+    pub fn contains(&self, f: &Folding) -> bool {
+        self.coarse_in.contains(&f.coarse_in)
+            && self.coarse_out.contains(&f.coarse_out)
+            && self.fine.contains(&f.fine)
+    }
+
+    /// Minimal (fully folded, slowest, smallest) point.
+    pub fn min(&self) -> Folding {
+        Folding::UNIT
+    }
+
+    /// Maximal (fully unrolled, fastest, largest) point.
+    pub fn max(&self) -> Folding {
+        Folding {
+            coarse_in: *self.coarse_in.last().unwrap(),
+            coarse_out: *self.coarse_out.last().unwrap(),
+            fine: *self.fine.last().unwrap(),
+        }
+    }
+
+    /// Neighbouring value of `v` in `axis` (one divisor step up or down);
+    /// None if already at the boundary.
+    pub fn step(axis: &[usize], v: usize, up: bool) -> Option<usize> {
+        let i = axis.iter().position(|&x| x == v)?;
+        if up {
+            axis.get(i + 1).copied()
+        } else if i > 0 {
+            Some(axis[i - 1])
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Op;
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(25), vec![1, 5, 25]);
+    }
+
+    #[test]
+    fn conv_space() {
+        let op = HwOp::Std(Op::Conv {
+            out_ch: 16,
+            k: 5,
+            pad: 2,
+            stride: 1,
+        });
+        let s = FoldingSpace::for_op(&op, &Shape::chw(8, 14, 14));
+        assert_eq!(s.coarse_in, vec![1, 2, 4, 8]);
+        assert_eq!(s.fine, vec![1, 5, 25]);
+        assert!(s.contains(&Folding {
+            coarse_in: 4,
+            coarse_out: 8,
+            fine: 5
+        }));
+        assert!(!s.contains(&Folding {
+            coarse_in: 3,
+            coarse_out: 8,
+            fine: 5
+        }));
+        assert_eq!(s.max().parallel_units(), 8 * 16 * 25);
+    }
+
+    #[test]
+    fn linear_space_caps_lanes() {
+        let op = HwOp::Std(Op::Linear { out: 10 });
+        let s = FoldingSpace::for_op(&op, &Shape::flat(216));
+        assert!(s.coarse_in.iter().all(|&d| d <= 64 && 216 % d == 0));
+        assert_eq!(s.coarse_out, vec![1, 2, 5, 10]);
+    }
+
+    #[test]
+    fn ee_layers_not_folded() {
+        let s = FoldingSpace::for_op(
+            &HwOp::ExitDecision {
+                classes: 10,
+                c_thr: 0.9,
+            },
+            &Shape::flat(10),
+        );
+        assert_eq!(s.max(), Folding::UNIT);
+    }
+
+    #[test]
+    fn step_walks_divisor_ladder() {
+        let axis = vec![1, 2, 4, 8];
+        assert_eq!(FoldingSpace::step(&axis, 2, true), Some(4));
+        assert_eq!(FoldingSpace::step(&axis, 2, false), Some(1));
+        assert_eq!(FoldingSpace::step(&axis, 8, true), None);
+        assert_eq!(FoldingSpace::step(&axis, 1, false), None);
+    }
+}

@@ -1,0 +1,285 @@
+//! A design point: one folding per CDFG node, with resource/performance
+//! roll-ups. This is the object the DSE mutates and the TAP curves are
+//! built from.
+
+use super::folding::{Folding, FoldingSpace};
+use super::perf;
+use crate::ir::{Cdfg, CdfgNode, HwOp, Op, StageId};
+use crate::resources::{model, ResourceVec};
+
+/// A fully-specified hardware design for one CDFG.
+#[derive(Clone, Debug)]
+pub struct HwMapping {
+    pub cdfg: Cdfg,
+    pub foldings: Vec<Folding>,
+    pub spaces: Vec<FoldingSpace>,
+}
+
+impl HwMapping {
+    /// Fully-folded (minimal) design for a CDFG.
+    pub fn minimal(cdfg: Cdfg) -> HwMapping {
+        let spaces: Vec<FoldingSpace> = cdfg
+            .nodes
+            .iter()
+            .map(|n| FoldingSpace::for_op(&n.op, &n.in_shape))
+            .collect();
+        let foldings = vec![Folding::UNIT; cdfg.nodes.len()];
+        HwMapping {
+            cdfg,
+            foldings,
+            spaces,
+        }
+    }
+
+    /// Resources of a single node at its current folding.
+    pub fn node_resources(&self, id: usize) -> ResourceVec {
+        node_resources(&self.cdfg.nodes[id], &self.foldings[id])
+    }
+
+    /// Total design resources including shared infrastructure.
+    pub fn total_resources(&self) -> ResourceVec {
+        let mut total = model::infrastructure();
+        for id in 0..self.cdfg.nodes.len() {
+            total += self.node_resources(id);
+        }
+        total
+    }
+
+    /// Resources attributable to Early-Exit overhead (Table II): the
+    /// hardware-only EE layers plus the exit-branch classifier.
+    pub fn ee_overhead_resources(&self) -> ResourceVec {
+        let mut total = ResourceVec::ZERO;
+        for node in &self.cdfg.nodes {
+            if node.op.is_ee_overhead() || node.stage == StageId::ExitBranch {
+                total += self.node_resources(node.id);
+            }
+        }
+        total
+    }
+
+    /// II of a node at its current folding.
+    pub fn node_ii(&self, id: usize) -> u64 {
+        perf::ii_cycles(&self.cdfg.nodes[id], &self.foldings[id])
+    }
+
+    pub fn node_latency(&self, id: usize) -> u64 {
+        perf::latency_cycles(&self.cdfg.nodes[id], &self.foldings[id])
+    }
+
+    /// Pipeline II (cycles/sample) of the full-rate section: stage-1
+    /// backbone, split, exit branch, decision, merge. This is the rate
+    /// every input sample must sustain.
+    pub fn stage1_ii(&self) -> u64 {
+        self.cdfg
+            .nodes
+            .iter()
+            .filter(|n| {
+                matches!(
+                    n.stage,
+                    StageId::Stage1 | StageId::ExitBranch | StageId::Egress
+                )
+            })
+            .map(|n| perf::ii_cycles(n, &self.foldings[n.id]))
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Pipeline II of the hard-sample section (stage-2 backbone behind
+    /// the Conditional Buffer). Only a fraction p of samples pass here.
+    pub fn stage2_ii(&self) -> u64 {
+        self.cdfg
+            .nodes
+            .iter()
+            .filter(|n| n.stage == StageId::Stage2)
+            .map(|n| perf::ii_cycles(n, &self.foldings[n.id]))
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Pipeline fill latency (cycles) of a stage's chain.
+    pub fn stage_latency(&self, stage: StageId) -> u64 {
+        self.cdfg
+            .nodes
+            .iter()
+            .filter(|n| n.stage == stage)
+            .map(|n| perf::latency_cycles(n, &self.foldings[n.id]))
+            .sum()
+    }
+
+    /// Predicted throughput (samples/s) for a *single-stage* design
+    /// (the baseline toolflow's objective).
+    pub fn baseline_throughput(&self, clock_hz: f64) -> f64 {
+        clock_hz / self.stage1_ii() as f64
+    }
+
+    /// Predicted throughput (samples/s) of the EE design when a fraction
+    /// `q` of samples are hard (paper Eq. 1's min form): the design
+    /// sustains the slower of the full-rate section and the hard-sample
+    /// section scaled by 1/q.
+    pub fn ee_throughput(&self, clock_hz: f64, q: f64) -> f64 {
+        let s1 = self.stage1_ii() as f64;
+        let s2 = self.stage2_ii() as f64 * q;
+        clock_hz / s1.max(s2)
+    }
+
+    /// Total MAC workload per sample (for efficiency reporting).
+    pub fn macs_per_sample(&self) -> u64 {
+        self.cdfg
+            .nodes
+            .iter()
+            .map(|n| match &n.op {
+                HwOp::Std(op @ (Op::Conv { .. } | Op::Linear { .. })) => {
+                    op.macs(&n.in_shape, &n.out_shape) as u64
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Set the Conditional Buffer depth (re-sizing after folding chosen).
+    pub fn set_cond_buffer_depth(&mut self, depth: usize) {
+        let id = self.cdfg.cond_buffer;
+        if id != usize::MAX {
+            if let HwOp::CondBuffer { depth_samples } = &mut self.cdfg.nodes[id].op {
+                *depth_samples = depth;
+            }
+        }
+    }
+
+    pub fn cond_buffer_depth(&self) -> usize {
+        let id = self.cdfg.cond_buffer;
+        if id == usize::MAX {
+            return 0;
+        }
+        match self.cdfg.nodes[id].op {
+            HwOp::CondBuffer { depth_samples } => depth_samples,
+            _ => unreachable!(),
+        }
+    }
+}
+
+/// Resource model dispatch for a node at a folding.
+pub fn node_resources(node: &CdfgNode, f: &Folding) -> ResourceVec {
+    match &node.op {
+        HwOp::Std(Op::Conv { out_ch: _, k, .. }) => {
+            let (c_in, _, w_in) = node.in_shape.as_chw().expect("conv input map");
+            let (c_out, _, _) = node.out_shape.as_chw().expect("conv output map");
+            model::conv(
+                c_in as u64,
+                c_out as u64,
+                *k as u64,
+                w_in as u64,
+                f.coarse_in as u64,
+                f.coarse_out as u64,
+                f.fine as u64,
+            )
+        }
+        HwOp::Std(Op::MaxPool { k, .. }) => {
+            let (c, _, w_in) = node.in_shape.as_chw().expect("pool input map");
+            model::pool(c as u64, *k as u64, w_in as u64, f.coarse_in as u64)
+        }
+        HwOp::Std(Op::Relu) => model::relu(f.coarse_in as u64),
+        HwOp::Std(Op::Flatten) => model::flatten(f.coarse_in as u64),
+        HwOp::Std(Op::Linear { out }) => model::linear(
+            node.in_shape.words() as u64,
+            *out as u64,
+            f.coarse_in as u64,
+            f.coarse_out as u64,
+        ),
+        HwOp::Split { ways } => model::split(f.coarse_in as u64, *ways as u64),
+        HwOp::ExitDecision { classes, .. } => model::exit_decision(*classes as u64),
+        HwOp::CondBuffer { depth_samples } => model::cond_buffer(
+            node.in_shape.words() as u64,
+            *depth_samples as u64,
+        ),
+        HwOp::ExitMerge { ways } => {
+            model::exit_merge(*ways as u64, node.out_shape.words() as u64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::network::testnet;
+
+    fn ee_mapping() -> HwMapping {
+        let net = testnet::blenet_like();
+        HwMapping::minimal(Cdfg::lower(&net, 8))
+    }
+
+    #[test]
+    fn minimal_design_is_smallest() {
+        let m = ee_mapping();
+        let total = m.total_resources();
+        // Unit folding: DSP = one MAC per conv/linear + decision units.
+        assert!(total.dsp < 120, "minimal design should be tiny: {total}");
+        assert!(total.fits_in(&crate::resources::Board::zc706().resources));
+    }
+
+    #[test]
+    fn unrolling_monotone_resources_and_speed() {
+        let mut m = ee_mapping();
+        let slow_ii = m.stage1_ii();
+        let small = m.total_resources();
+        // Unroll every node to max.
+        for i in 0..m.foldings.len() {
+            m.foldings[i] = m.spaces[i].max();
+        }
+        assert!(m.stage1_ii() < slow_ii);
+        assert!(m.total_resources().dsp > small.dsp);
+    }
+
+    #[test]
+    fn ee_throughput_q_scaling() {
+        let mut m = ee_mapping();
+        for i in 0..m.foldings.len() {
+            m.foldings[i] = m.spaces[i].max();
+        }
+        let clock = 125e6;
+        // With a slow stage 2 (minimal folding there), smaller q helps.
+        for n in m.cdfg.nodes.clone() {
+            if n.stage == StageId::Stage2 {
+                m.foldings[n.id] = Folding::UNIT;
+            }
+        }
+        let t_low_q = m.ee_throughput(clock, 0.1);
+        let t_high_q = m.ee_throughput(clock, 0.9);
+        assert!(t_low_q >= t_high_q);
+        // q -> 0 saturates at the stage-1 rate.
+        let t0 = m.ee_throughput(clock, 1e-9);
+        assert!((t0 - clock / m.stage1_ii() as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ee_overhead_subset_of_total() {
+        let m = ee_mapping();
+        let total = m.total_resources();
+        let ee = m.ee_overhead_resources();
+        assert!(ee.fits_in(&total));
+        assert!(ee.bram >= 1, "cond buffer should contribute BRAM");
+    }
+
+    #[test]
+    fn cond_buffer_depth_resizing() {
+        let mut m = ee_mapping();
+        let before = m.total_resources().bram;
+        m.set_cond_buffer_depth(64);
+        assert_eq!(m.cond_buffer_depth(), 64);
+        assert!(m.total_resources().bram > before);
+    }
+
+    #[test]
+    fn macs_match_layer_sums() {
+        let m = ee_mapping();
+        // B-LeNet-like: conv1 1*8*25*784, exit conv 8*8*9*196, conv2
+        // 8*16*25*196, conv3 16*24*9*49, fcs.
+        let expect = 1 * 8 * 25 * 784
+            + 8 * 8 * 9 * 196
+            + 8 * 16 * 25 * 196
+            + 16 * 24 * 9 * 49
+            + 392 * 10
+            + 216 * 10;
+        assert_eq!(m.macs_per_sample(), expect as u64);
+    }
+}

@@ -1,0 +1,20 @@
+//! Synchronous-dataflow hardware mapping (the fpgaConvNet core model).
+//!
+//! Every CDFG node maps to a streaming hardware block whose throughput is
+//! set by *folding* (time-multiplexing): coarse-grain folding at layer
+//! inputs/outputs and fine-grain folding of the K*K sliding-window dot
+//! product (§II-C). This module owns:
+//!
+//! * [`folding`]   — the folding parameter space per layer,
+//! * [`perf`]      — initiation-interval / latency math per block,
+//! * [`mapping`]   — a full design point: folding per node + resource and
+//!                   throughput roll-ups,
+//! * [`buffering`] — Conditional Buffer sizing against deadlock (Fig. 7).
+
+pub mod buffering;
+pub mod folding;
+pub mod mapping;
+pub mod perf;
+
+pub use folding::Folding;
+pub use mapping::HwMapping;

@@ -1,0 +1,149 @@
+//! Per-block performance model: initiation interval (II) and latency.
+//!
+//! In a deeply pipelined streaming architecture the steady-state sample
+//! rate of a block is `clock / II`, where II is the cycles the block is
+//! busy per sample. For a chain, the pipeline II is the max over blocks;
+//! latency is the sum (fill time). These are the same first-order models
+//! fpgaConvNet's optimizer uses, expressed per CDFG node.
+
+use super::folding::Folding;
+use crate::ir::{CdfgNode, HwOp, Op};
+
+/// Cycles per sample that the block occupies its slowest internal port
+/// (steady-state initiation interval).
+pub fn ii_cycles(node: &CdfgNode, f: &Folding) -> u64 {
+    let in_words = node.in_shape.words() as u64;
+    let out_words = node.out_shape.words() as u64;
+    let ci = f.coarse_in as u64;
+    let co = f.coarse_out as u64;
+    match &node.op {
+        HwOp::Std(Op::Conv { out_ch, k, .. }) => {
+            let (c_in, _, _) = node.in_shape.as_chw().expect("conv input map");
+            let (_, ho, wo) = node.out_shape.as_chw().expect("conv output map");
+            let compute = (ho as u64 * wo as u64)
+                * (c_in as u64 / ci)
+                * (*out_ch as u64 / co)
+                * ((k * k) as u64 / f.fine as u64);
+            // A block can also be bound by streaming its words in/out.
+            compute.max(in_words / ci).max(out_words / co)
+        }
+        HwOp::Std(Op::Linear { out }) => {
+            let compute = (in_words / ci) * (*out as u64 / co);
+            compute.max(in_words / ci)
+        }
+        HwOp::Std(Op::Relu) | HwOp::Std(Op::Flatten) => in_words / ci,
+        HwOp::Std(Op::MaxPool { .. }) => {
+            // Bound by consuming the input stream on `ci` lanes.
+            in_words / ci
+        }
+        HwOp::Split { .. } => in_words / ci,
+        // Decision: streams C activations in, fully parallel after that.
+        HwOp::ExitDecision { classes, .. } => *classes as u64,
+        // Buffer write side consumes the map on one lane per cycle; read
+        // side only activates for hard samples (rate handled by caller).
+        HwOp::CondBuffer { .. } => in_words,
+        // Merge forwards one classification vector per sample.
+        HwOp::ExitMerge { .. } => out_words,
+    }
+}
+
+/// Input-to-output latency in cycles for one sample (pipeline fill).
+pub fn latency_cycles(node: &CdfgNode, f: &Folding) -> u64 {
+    match &node.op {
+        HwOp::Std(Op::Conv { k, .. }) => {
+            // Sliding window must fill (k-1) rows + k pixels before the
+            // first output; then the block streams at its II.
+            let (c_in, _, w_in) = node.in_shape.as_chw().expect("conv input map");
+            let fill = ((k - 1) * w_in + *k) as u64 * (c_in as u64 / f.coarse_in as u64);
+            fill + ii_cycles(node, f)
+        }
+        HwOp::Std(Op::MaxPool { k, .. }) => {
+            let (c, _, w_in) = node.in_shape.as_chw().expect("pool input map");
+            let fill = ((k - 1) * w_in + *k) as u64 * (c as u64 / f.coarse_in as u64);
+            fill + ii_cycles(node, f)
+        }
+        // fp32 exp (≈8 stages) + fp32 adder tree (ceil(log2 C) * ≈10) +
+        // compare (≈3) — the paper's motivation for the adder/compare
+        // trees (§III-C.1).
+        HwOp::ExitDecision { classes, .. } => {
+            let tree = (64 - (classes - 1).leading_zeros() as u64).max(1);
+            8 + 10 * tree + 3 + ii_cycles(node, f)
+        }
+        // Everything else: latency ≈ II + small constant pipeline depth.
+        _ => ii_cycles(node, f) + 4,
+    }
+}
+
+/// MACs/cycle at this folding — used for roofline/efficiency reporting.
+pub fn macs_per_cycle(node: &CdfgNode, f: &Folding) -> f64 {
+    match &node.op {
+        HwOp::Std(op @ Op::Conv { .. }) | HwOp::Std(op @ Op::Linear { .. }) => {
+            let macs = op.macs(&node.in_shape, &node.out_shape) as f64;
+            macs / ii_cycles(node, f) as f64
+        }
+        _ => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Cdfg, StageId};
+    use crate::ir::network::testnet;
+
+    fn node_by_name<'a>(g: &'a Cdfg, name: &str) -> &'a CdfgNode {
+        g.nodes.iter().find(|n| n.name.contains(name)).unwrap()
+    }
+
+    #[test]
+    fn conv_ii_matches_formula() {
+        let net = testnet::blenet_like();
+        let g = Cdfg::lower(&net, 8);
+        let conv1 = node_by_name(&g, "s1_0_conv"); // 1->8, k5, 28x28 out
+        let f = Folding {
+            coarse_in: 1,
+            coarse_out: 4,
+            fine: 5,
+        };
+        // compute = 784 * (1/1) * (8/4) * (25/5) = 7840
+        assert_eq!(ii_cycles(conv1, &f), 7840);
+        // Fully unrolled: bound by streaming 784 input words on 1 lane.
+        let fmax = Folding {
+            coarse_in: 1,
+            coarse_out: 8,
+            fine: 25,
+        };
+        assert_eq!(ii_cycles(conv1, &fmax), 784);
+    }
+
+    #[test]
+    fn unrolling_never_slows_a_block() {
+        let net = testnet::blenet_like();
+        let g = Cdfg::lower(&net, 8);
+        for node in &g.nodes {
+            let space =
+                super::super::folding::FoldingSpace::for_op(&node.op, &node.in_shape);
+            let lo = ii_cycles(node, &space.min());
+            let hi = ii_cycles(node, &space.max());
+            assert!(hi <= lo, "{}: max folding slower than min", node.name);
+        }
+    }
+
+    #[test]
+    fn decision_latency_has_tree_depth() {
+        let net = testnet::blenet_like();
+        let g = Cdfg::lower(&net, 8);
+        let dec = &g.nodes[g.exit_decision];
+        // 10 classes -> ceil(log2(10)) = 4 levels.
+        assert_eq!(latency_cycles(dec, &Folding::UNIT), 8 + 40 + 3 + 10);
+    }
+
+    #[test]
+    fn latency_at_least_ii() {
+        let net = testnet::blenet_like();
+        let g = Cdfg::lower(&net, 8);
+        for node in g.nodes_in_stage(StageId::Stage1) {
+            assert!(latency_cycles(node, &Folding::UNIT) >= ii_cycles(node, &Folding::UNIT));
+        }
+    }
+}

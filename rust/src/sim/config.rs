@@ -1,0 +1,44 @@
+//! Simulator configuration: the parts of the measurement setup that are
+//! properties of the *host interface*, not the design (§III-B.2's DMA
+//! controller with input/output FIFOs).
+
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Streaming words moved per cycle by each DMA direction (64-bit AXI
+    /// at 16-bit words = 4 words/cycle).
+    pub dma_words_per_cycle: u64,
+    /// Board clock (Hz). The paper clocks conservatively at 125 MHz.
+    pub clock_hz: f64,
+    /// Extra sample-slots of FIFO slack between pipeline sections
+    /// (Vivado HLS stream interfaces default to small FIFOs).
+    pub fifo_slack: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            dma_words_per_cycle: 4,
+            clock_hz: 125.0e6,
+            fifo_slack: 2,
+        }
+    }
+}
+
+impl SimConfig {
+    /// DMA-in cycles per sample for a given input word count.
+    pub fn dma_in_cycles(&self, words: usize) -> u64 {
+        (words as u64).div_ceil(self.dma_words_per_cycle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dma_cycles() {
+        let c = SimConfig::default();
+        assert_eq!(c.dma_in_cycles(784), 196);
+        assert_eq!(c.dma_in_cycles(1), 1);
+    }
+}

@@ -1,0 +1,529 @@
+//! The simulation engine: per-sample timed schedules with backpressure.
+//!
+//! Model
+//! -----
+//! The design is compressed into its pipeline sections (the quantities the
+//! SDF schedule is fully determined by):
+//!
+//! * stage-1 chain (backbone prefix + split):        II₁, LAT₁
+//! * exit branch (classifier + Exit Decision):       IIₑ, LATₑ
+//! * stage-2 chain (buffer read → final classifier): II₂, LAT₂
+//! * Exit Merge:                                     IIₘ per result
+//! * DMA in/out:                                     words / bus-width
+//!
+//! Samples advance through timed recurrences with *blocking* semantics:
+//! stage 1 may only emit sample `s` once the Conditional Buffer has a free
+//! slot; a full buffer therefore backpressures the whole front of the
+//! pipeline exactly as a full HLS stream FIFO would (§II-C "Streaming
+//! backpressure is handled by the Vivado HLS streaming interface").
+//!
+//! The Conditional Buffer holds a sample from the moment the split writes
+//! it until its decision arrives (easy → dropped in one cycle via address
+//! invalidation) or stage 2 accepts it (hard). A depth of 0 cannot hold
+//! even the sample whose decision is in flight: the split stalls
+//! mid-feature-map, the exit branch is starved, the decision never fires —
+//! deadlock (Fig. 7). The engine detects and reports this.
+
+use super::config::SimConfig;
+use crate::ir::StageId;
+use crate::sdf::HwMapping;
+
+/// Pipeline-section timing extracted from a design point.
+#[derive(Clone, Copy, Debug)]
+pub struct DesignTiming {
+    pub s1_ii: u64,
+    pub s1_lat: u64,
+    pub exit_ii: u64,
+    pub exit_lat: u64,
+    pub s2_ii: u64,
+    pub s2_lat: u64,
+    pub merge_ii: u64,
+    pub cond_buffer_depth: usize,
+    pub input_words: usize,
+    pub output_words: usize,
+}
+
+impl DesignTiming {
+    /// Extract section timings from an EE hardware mapping.
+    pub fn from_ee_mapping(m: &HwMapping) -> DesignTiming {
+        let stage_ii = |stage: StageId| -> u64 {
+            m.cdfg
+                .nodes
+                .iter()
+                .filter(|n| n.stage == stage)
+                .map(|n| m.node_ii(n.id))
+                .max()
+                .unwrap_or(1)
+        };
+        DesignTiming {
+            s1_ii: stage_ii(StageId::Stage1),
+            s1_lat: m.stage_latency(StageId::Stage1),
+            exit_ii: stage_ii(StageId::ExitBranch),
+            exit_lat: m.stage_latency(StageId::ExitBranch),
+            s2_ii: stage_ii(StageId::Stage2),
+            s2_lat: m.stage_latency(StageId::Stage2),
+            merge_ii: m.node_ii(m.cdfg.exit_merge),
+            cond_buffer_depth: m.cond_buffer_depth(),
+            input_words: m.cdfg.nodes[0].in_shape.words(),
+            output_words: m.cdfg.nodes[m.cdfg.exit_merge].out_shape.words(),
+        }
+    }
+
+    /// Extract timing for a single-stage baseline design.
+    pub fn from_baseline_mapping(m: &HwMapping) -> DesignTiming {
+        let ii = m.stage1_ii();
+        DesignTiming {
+            s1_ii: ii,
+            s1_lat: m.stage_latency(StageId::Stage1),
+            exit_ii: 0,
+            exit_lat: 0,
+            s2_ii: 0,
+            s2_lat: 0,
+            merge_ii: m
+                .cdfg
+                .nodes
+                .last()
+                .map(|n| n.out_shape.words() as u64)
+                .unwrap_or(1),
+            cond_buffer_depth: 0,
+            input_words: m.cdfg.nodes[0].in_shape.words(),
+            output_words: m
+                .cdfg
+                .nodes
+                .last()
+                .map(|n| n.out_shape.words())
+                .unwrap_or(1),
+        }
+    }
+}
+
+/// Per-sample trace entry.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SampleTrace {
+    /// Cycle the sample's DMA-in completed.
+    pub t_in: u64,
+    /// Cycle its classification left the merge.
+    pub t_out: u64,
+    /// Whether it took the early exit.
+    pub exited_early: bool,
+}
+
+/// Outcome of simulating one batch through one design.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub traces: Vec<SampleTrace>,
+    /// Total cycles from first DMA word to output-DMA idle.
+    pub total_cycles: u64,
+    /// Cycles stage 1 spent blocked on a full Conditional Buffer.
+    pub s1_stall_cycles: u64,
+    /// Peak Conditional Buffer occupancy (samples).
+    pub peak_buffer_occupancy: usize,
+    /// Number of samples completing out of batch order.
+    pub out_of_order: usize,
+    /// Deadlock diagnosis, if the design cannot make progress (Fig. 7
+    /// undersized-buffer failure mode). Traces are valid up to the stall.
+    pub deadlock: Option<String>,
+}
+
+impl SimResult {
+    pub fn throughput(&self, clock_hz: f64) -> f64 {
+        if self.total_cycles == 0 || self.deadlock.is_some() {
+            return 0.0;
+        }
+        self.traces.len() as f64 * clock_hz / self.total_cycles as f64
+    }
+}
+
+/// Fault-injection model: perturbations the board would experience that
+/// the analytic schedule does not capture — decision-path jitter (e.g.
+/// fp32 exp unit variability / resource contention on the decision
+/// datapath) and host-side DMA hiccups. Used by the robustness tests to
+/// verify the schedule degrades gracefully rather than deadlocking.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultModel {
+    /// Max extra cycles added (uniformly) to each sample's decision.
+    pub decision_jitter: u64,
+    /// Probability that a sample's DMA-in suffers a stall.
+    pub dma_stall_prob: f64,
+    /// Length of an injected DMA stall (cycles).
+    pub dma_stall_cycles: u64,
+    pub seed: u64,
+}
+
+impl FaultModel {
+    pub const NONE: FaultModel = FaultModel {
+        decision_jitter: 0,
+        dma_stall_prob: 0.0,
+        dma_stall_cycles: 0,
+        seed: 0,
+    };
+}
+
+/// Simulate a batch through an Early-Exit design. `hard[s]` is the
+/// per-sample exit decision input (from ground-truth flags or live PJRT
+/// numerics via the coordinator).
+pub fn simulate_ee(t: &DesignTiming, cfg: &SimConfig, hard: &[bool]) -> SimResult {
+    sim_core(t, cfg, hard, &FaultModel::NONE)
+}
+
+/// Simulate with injected faults (robustness / failure-injection tests).
+pub fn simulate_ee_faults(
+    t: &DesignTiming,
+    cfg: &SimConfig,
+    hard: &[bool],
+    faults: &FaultModel,
+) -> SimResult {
+    sim_core(t, cfg, hard, faults)
+}
+
+fn sim_core(
+    t: &DesignTiming,
+    cfg: &SimConfig,
+    hard: &[bool],
+    faults: &FaultModel,
+) -> SimResult {
+    let n = hard.len();
+    let mut traces = vec![SampleTrace::default(); n];
+    if n == 0 {
+        return SimResult {
+            traces,
+            total_cycles: 0,
+            s1_stall_cycles: 0,
+            peak_buffer_occupancy: 0,
+            out_of_order: 0,
+            deadlock: None,
+        };
+    }
+    if t.cond_buffer_depth == 0 {
+        // Fig. 7: the buffer cannot hold the sample whose decision is in
+        // flight; the split stalls mid-map and the decision never fires.
+        return SimResult {
+            traces,
+            total_cycles: 0,
+            s1_stall_cycles: 0,
+            peak_buffer_occupancy: 0,
+            out_of_order: 0,
+            deadlock: Some(
+                "conditional buffer depth 0: split stalls mid-sample, \
+                 exit decision starved (min depth is 1 + decision-delay/II₁)"
+                    .into(),
+            ),
+        };
+    }
+
+    let dma_in = cfg.dma_in_cycles(t.input_words);
+    let dma_out = cfg.dma_in_cycles(t.output_words).max(1);
+    let depth = t.cond_buffer_depth;
+
+    // Conditional buffer: min-heap of leave times of resident samples.
+    let mut buffer: std::collections::BinaryHeap<std::cmp::Reverse<u64>> =
+        std::collections::BinaryHeap::new();
+    let mut peak_occ = 0usize;
+    let mut stall = 0u64;
+
+    let mut fault_rng = crate::util::Rng::new(faults.seed);
+    let mut dma_skew = 0u64; // cumulative injected DMA stalls
+
+    // Rolling section state.
+    let mut s1_prev_start = 0u64; // last stage-1 issue time
+    let mut dec_prev = 0u64; // exit-branch II tracker
+    let mut s2_prev_start = 0u64; // stage-2 II tracker
+    let mut merge_arrivals: Vec<(u64, usize)> = Vec::with_capacity(n);
+
+    for s in 0..n {
+        // ---- DMA in: batch streams continuously ----
+        if faults.dma_stall_prob > 0.0 && fault_rng.chance(faults.dma_stall_prob) {
+            dma_skew += faults.dma_stall_cycles;
+        }
+        let t_in = (s as u64 + 1) * dma_in + dma_skew;
+        traces[s].t_in = t_in;
+
+        // ---- stage 1 issue: input ready + pipeline II ----
+        let mut start1 = t_in.max(if s == 0 {
+            0
+        } else {
+            s1_prev_start + t.s1_ii
+        });
+
+        // ---- conditional buffer admission (blocking) ----
+        // A slot must be free when the split finishes writing the sample
+        // (entry time = start1 + s1_lat); occupancy windows are
+        // [write, leave). A full buffer stalls the stage-1 issue.
+        loop {
+            let write = start1 + t.s1_lat;
+            while let Some(&std::cmp::Reverse(leave)) = buffer.peek() {
+                if leave <= write {
+                    buffer.pop();
+                } else {
+                    break;
+                }
+            }
+            if buffer.len() < depth {
+                break;
+            }
+            // Stall until the earliest occupant leaves.
+            let std::cmp::Reverse(leave) = buffer.pop().unwrap();
+            stall += leave - write;
+            start1 += leave - write;
+        }
+        s1_prev_start = start1;
+
+        // Sample fully written to buffer + exit branch at:
+        let split_out = start1 + t.s1_lat;
+
+        // ---- exit branch / decision ----
+        let dec_start = split_out.max(if s == 0 { 0 } else { dec_prev + t.exit_ii });
+        dec_prev = dec_start;
+        let jitter = if faults.decision_jitter > 0 {
+            fault_rng.below(faults.decision_jitter as usize + 1) as u64
+        } else {
+            0
+        };
+        let t_dec = dec_start + t.exit_lat + jitter;
+
+        // ---- buffer residency + downstream path ----
+        let (leave, merge_arrival) = if !hard[s] {
+            // Easy: decision drops the buffered map in one cycle; the
+            // exit classification heads to the merge.
+            (t_dec + 1, t_dec)
+        } else {
+            // Hard: forwarded to stage 2 when both the decision has
+            // arrived and stage 2 can accept (its own II).
+            let s2_start = t_dec.max(if s2_prev_start == 0 {
+                0
+            } else {
+                s2_prev_start + t.s2_ii
+            });
+            s2_prev_start = s2_start;
+            (s2_start + 1, s2_start + t.s2_lat)
+        };
+        buffer.push(std::cmp::Reverse(leave));
+        peak_occ = peak_occ.max(buffer.len());
+
+        merge_arrivals.push((merge_arrival, s));
+        traces[s].exited_early = !hard[s];
+    }
+
+    // ---- exit merge + output DMA: serve in *arrival* order ----
+    // The merge arbitrates whichever path has a completed sample — this
+    // is exactly how early exits overtake hard samples in the batch
+    // (§III-C.4: results may return out of order; the merge keeps each
+    // sample's words contiguous, stalling the other path meanwhile).
+    //
+    // §Perf: arrivals on each path are individually monotone (both the
+    // decision chain and stage 2 are FIFO), so instead of sorting the
+    // merged stream (O(n log n)) we two-way merge the easy and hard
+    // sub-sequences (O(n)). Injected decision jitter breaks per-path
+    // monotonicity, so the fault path keeps the sort.
+    if faults.decision_jitter > 0 {
+        merge_arrivals.sort_unstable();
+    } else {
+        let mut easy: Vec<(u64, usize)> = Vec::with_capacity(n);
+        let mut hard_v: Vec<(u64, usize)> = Vec::new();
+        for &(t, s) in &merge_arrivals {
+            if hard[s] {
+                hard_v.push((t, s));
+            } else {
+                easy.push((t, s));
+            }
+        }
+        debug_assert!(easy.windows(2).all(|w| w[0].0 <= w[1].0));
+        debug_assert!(hard_v.windows(2).all(|w| w[0].0 <= w[1].0));
+        merge_arrivals.clear();
+        let (mut i, mut j) = (0, 0);
+        while i < easy.len() || j < hard_v.len() {
+            let take_easy = j >= hard_v.len()
+                || (i < easy.len() && easy[i] <= hard_v[j]);
+            if take_easy {
+                merge_arrivals.push(easy[i]);
+                i += 1;
+            } else {
+                merge_arrivals.push(hard_v[j]);
+                j += 1;
+            }
+        }
+    }
+    let mut merge_free = 0u64;
+    let mut dma_out_free = 0u64;
+    let mut out_of_order = 0usize;
+    for &(arrival, s) in &merge_arrivals {
+        let m_start = arrival.max(merge_free);
+        merge_free = m_start + t.merge_ii;
+        let out_start = merge_free.max(dma_out_free);
+        dma_out_free = out_start + dma_out;
+        traces[s].t_out = dma_out_free;
+    }
+    // Out-of-order count: completions whose batch index goes backwards.
+    let mut max_seen: Option<usize> = None;
+    for &(_, s) in &merge_arrivals {
+        if let Some(m) = max_seen {
+            if s < m {
+                out_of_order += 1;
+                continue;
+            }
+        }
+        max_seen = Some(max_seen.map_or(s, |m| m.max(s)));
+    }
+
+    let total_cycles = traces.iter().map(|t| t.t_out).max().unwrap_or(0);
+    SimResult {
+        traces,
+        total_cycles,
+        s1_stall_cycles: stall,
+        peak_buffer_occupancy: peak_occ,
+        out_of_order,
+        deadlock: None,
+    }
+}
+
+/// Simulate a batch through a single-stage baseline design.
+pub fn simulate_baseline(t: &DesignTiming, cfg: &SimConfig, n: usize) -> SimResult {
+    let mut traces = vec![SampleTrace::default(); n];
+    let dma_in = cfg.dma_in_cycles(t.input_words);
+    let dma_out = cfg.dma_in_cycles(t.output_words).max(1);
+    let mut prev_start = 0u64;
+    let mut dma_out_free = 0u64;
+    for s in 0..n {
+        let t_in = (s as u64 + 1) * dma_in;
+        traces[s].t_in = t_in;
+        let start = t_in.max(if s == 0 { 0 } else { prev_start + t.s1_ii });
+        prev_start = start;
+        let done = start + t.s1_lat;
+        let out_start = done.max(dma_out_free);
+        dma_out_free = out_start + dma_out;
+        traces[s].t_out = dma_out_free;
+    }
+    SimResult {
+        total_cycles: traces.iter().map(|t| t.t_out).max().unwrap_or(0),
+        traces,
+        s1_stall_cycles: 0,
+        peak_buffer_occupancy: 0,
+        out_of_order: 0,
+        deadlock: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A hand-sized timing for arithmetic-checkable tests.
+    fn toy() -> DesignTiming {
+        DesignTiming {
+            s1_ii: 100,
+            s1_lat: 150,
+            exit_ii: 80,
+            exit_lat: 120,
+            s2_ii: 300,
+            s2_lat: 400,
+            merge_ii: 10,
+            cond_buffer_depth: 4,
+            input_words: 400, // dma_in = 100 cycles at 4 w/c
+            output_words: 10,
+        }
+    }
+
+    fn mixed(n: usize, q: f64) -> Vec<bool> {
+        // Deterministic interleaving with hard fraction ~q.
+        let mut acc = 0.0;
+        (0..n)
+            .map(|_| {
+                acc += q;
+                if acc >= 1.0 {
+                    acc -= 1.0;
+                    true
+                } else {
+                    false
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_easy_runs_at_stage1_rate() {
+        let t = toy();
+        let cfg = SimConfig::default();
+        let n = 256;
+        let r = simulate_ee(&t, &cfg, &vec![false; n]);
+        assert!(r.deadlock.is_none());
+        // Steady state: one sample per max(s1_ii, dma_in)=100 cycles.
+        let cycles_per_sample = r.total_cycles as f64 / n as f64;
+        assert!(
+            (cycles_per_sample - 100.0).abs() < 10.0,
+            "got {cycles_per_sample}"
+        );
+        assert_eq!(r.out_of_order, 0);
+    }
+
+    #[test]
+    fn hard_fraction_throttles_throughput() {
+        let t = toy();
+        let cfg = SimConfig::default();
+        let n = 512;
+        // q=0.5: stage-2 effective II = 300*0.5 = 150 > s1_ii -> limited.
+        let r_half = simulate_ee(&t, &cfg, &mixed(n, 0.5));
+        let per = r_half.total_cycles as f64 / n as f64;
+        assert!((per - 150.0).abs() < 15.0, "got {per}");
+        // q=0.25: stage-2 effective II = 75 < 100 -> stage-1 limited.
+        let r_q = simulate_ee(&t, &cfg, &mixed(n, 0.25));
+        let per_q = r_q.total_cycles as f64 / n as f64;
+        assert!((per_q - 100.0).abs() < 10.0, "got {per_q}");
+        assert!(r_q.total_cycles < r_half.total_cycles);
+    }
+
+    #[test]
+    fn zero_depth_deadlocks() {
+        let mut t = toy();
+        t.cond_buffer_depth = 0;
+        let r = simulate_ee(&t, &SimConfig::default(), &[false, true]);
+        assert!(r.deadlock.is_some());
+        assert_eq!(r.throughput(125e6), 0.0);
+    }
+
+    #[test]
+    fn shallow_buffer_stalls_but_progresses() {
+        let mut t = toy();
+        t.cond_buffer_depth = 1;
+        let n = 256;
+        let deep = simulate_ee(&toy(), &SimConfig::default(), &mixed(n, 0.5));
+        let shallow = simulate_ee(&t, &SimConfig::default(), &mixed(n, 0.5));
+        assert!(shallow.deadlock.is_none());
+        assert!(shallow.s1_stall_cycles > 0, "depth-1 buffer must stall");
+        assert!(shallow.total_cycles >= deep.total_cycles);
+    }
+
+    #[test]
+    fn hard_samples_complete_out_of_order() {
+        let t = toy();
+        // A hard sample surrounded by easies: its result overtakes
+        // nothing, but the following easies overtake IT.
+        let mut hard = vec![false; 16];
+        hard[4] = true;
+        let r = simulate_ee(&t, &SimConfig::default(), &hard);
+        assert!(r.out_of_order > 0, "later easies should finish first");
+        let t4 = r.traces[4].t_out;
+        assert!(r.traces[5].t_out < t4);
+    }
+
+    #[test]
+    fn baseline_rate_is_ii_bound() {
+        let t = toy();
+        let n = 128;
+        let r = simulate_baseline(&t, &SimConfig::default(), n);
+        let per = r.total_cycles as f64 / n as f64;
+        assert!((per - 100.0).abs() < 10.0);
+    }
+
+    #[test]
+    fn peak_occupancy_bounded_by_depth() {
+        let t = toy();
+        let r = simulate_ee(&t, &SimConfig::default(), &mixed(512, 0.6));
+        assert!(r.peak_buffer_occupancy <= t.cond_buffer_depth);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let r = simulate_ee(&toy(), &SimConfig::default(), &[]);
+        assert_eq!(r.total_cycles, 0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Derived measurement statistics from a simulation run — the numbers the
+//! paper's host code reports (throughput from DMA-start to DMA-idle) plus
+//! the latency distribution the streaming architecture argument rests on
+//! ("the improved throughput of batch computation due to the average of
+//! the reduced latency of early exits and similar latency of later
+//! exits", §II-A).
+
+use super::engine::SimResult;
+
+#[derive(Clone, Debug)]
+pub struct SimMetrics {
+    pub samples: usize,
+    pub throughput_sps: f64,
+    pub total_cycles: u64,
+    /// Per-sample latency (cycles, DMA-in-complete to DMA-out-complete).
+    pub latency_mean: f64,
+    pub latency_p50: u64,
+    pub latency_p99: u64,
+    pub latency_max: u64,
+    /// Mean latency split by path.
+    pub latency_mean_early: f64,
+    pub latency_mean_hard: f64,
+    pub early_exit_rate: f64,
+    pub stall_cycles: u64,
+    pub peak_buffer_occupancy: usize,
+    pub out_of_order: usize,
+    pub deadlock: Option<String>,
+}
+
+impl SimMetrics {
+    pub fn from_result(r: &SimResult, clock_hz: f64) -> SimMetrics {
+        let n = r.traces.len();
+        let mut lats: Vec<u64> = r
+            .traces
+            .iter()
+            .map(|t| t.t_out.saturating_sub(t.t_in))
+            .collect();
+        lats.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            if lats.is_empty() {
+                0
+            } else {
+                lats[((lats.len() - 1) as f64 * p) as usize]
+            }
+        };
+        let mean = |xs: &[u64]| -> f64 {
+            if xs.is_empty() {
+                0.0
+            } else {
+                xs.iter().sum::<u64>() as f64 / xs.len() as f64
+            }
+        };
+        let early: Vec<u64> = r
+            .traces
+            .iter()
+            .filter(|t| t.exited_early)
+            .map(|t| t.t_out.saturating_sub(t.t_in))
+            .collect();
+        let hard: Vec<u64> = r
+            .traces
+            .iter()
+            .filter(|t| !t.exited_early)
+            .map(|t| t.t_out.saturating_sub(t.t_in))
+            .collect();
+        SimMetrics {
+            samples: n,
+            throughput_sps: r.throughput(clock_hz),
+            total_cycles: r.total_cycles,
+            latency_mean: mean(&lats),
+            latency_p50: pct(0.5),
+            latency_p99: pct(0.99),
+            latency_max: lats.last().copied().unwrap_or(0),
+            latency_mean_early: mean(&early),
+            latency_mean_hard: mean(&hard),
+            early_exit_rate: if n == 0 {
+                0.0
+            } else {
+                early.len() as f64 / n as f64
+            },
+            stall_cycles: r.s1_stall_cycles,
+            peak_buffer_occupancy: r.peak_buffer_occupancy,
+            out_of_order: r.out_of_order,
+            deadlock: r.deadlock.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::{simulate_ee, DesignTiming};
+    use crate::sim::SimConfig;
+
+    fn toy() -> DesignTiming {
+        DesignTiming {
+            s1_ii: 100,
+            s1_lat: 150,
+            exit_ii: 80,
+            exit_lat: 120,
+            s2_ii: 300,
+            s2_lat: 400,
+            merge_ii: 10,
+            cond_buffer_depth: 4,
+            input_words: 400,
+            output_words: 10,
+        }
+    }
+
+    #[test]
+    fn early_samples_have_lower_latency() {
+        let mut hard = vec![false; 64];
+        for i in (0..64).step_by(4) {
+            hard[i] = true;
+        }
+        let r = simulate_ee(&toy(), &SimConfig::default(), &hard);
+        let m = SimMetrics::from_result(&r, 125e6);
+        assert!((m.early_exit_rate - 0.75).abs() < 1e-9);
+        assert!(
+            m.latency_mean_hard > m.latency_mean_early,
+            "hard path must be slower ({} vs {})",
+            m.latency_mean_hard,
+            m.latency_mean_early
+        );
+        assert!(m.latency_p50 <= m.latency_p99);
+        assert!(m.latency_p99 <= m.latency_max);
+    }
+
+    #[test]
+    fn empty_metrics_are_finite() {
+        let r = simulate_ee(&toy(), &SimConfig::default(), &[]);
+        let m = SimMetrics::from_result(&r, 125e6);
+        assert_eq!(m.samples, 0);
+        assert_eq!(m.latency_mean, 0.0);
+    }
+}

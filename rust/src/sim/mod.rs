@@ -1,0 +1,28 @@
+//! Cycle-approximate streaming-dataflow simulator — the board substitute.
+//!
+//! The paper measures its designs on a ZC706: a batch of 1024 samples is
+//! DMA'd in, streamed through the deeply-pipelined design, and timed until
+//! the output DMA goes idle (§IV-A). This module reproduces that
+//! measurement loop in simulation. Every quantity the paper reports from
+//! the board — throughput vs. q, robustness of the p/q mismatch, stalls
+//! from under-provisioned stages, Conditional-Buffer-driven stalls and the
+//! deadlock boundary (Fig. 7), out-of-order completion — is a property of
+//! the dataflow *schedule*, which the simulator derives from the same
+//! II/latency model the design was built with, plus the dynamic per-sample
+//! exit decisions.
+//!
+//! Granularity: samples, with the Conditional Buffer's word-level
+//! semantics folded into per-sample write/drop/forward times (§III-C.2's
+//! single-cycle address-invalidation drop is modelled as a 1-cycle
+//! release).
+
+pub mod config;
+pub mod engine;
+pub mod metrics;
+
+pub use config::SimConfig;
+pub use engine::{
+    simulate_baseline, simulate_ee, simulate_ee_faults, DesignTiming, FaultModel,
+    SimResult,
+};
+pub use metrics::SimMetrics;

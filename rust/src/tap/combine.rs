@@ -1,0 +1,185 @@
+//! The TAP combination operator ⊕ — Eq. (1) of the paper:
+//!
+//! ```text
+//! f ⊕_{p,q} g : x ↦ min(f(x1), g(x2)/q)
+//!   where (x1, x2) = argmax_{x1+x2 ≤ x} min(f(x1), g(x2)/p)
+//! ```
+//!
+//! Given the stage-1 TAP `f`, the stage-2 TAP `g`, the *design-time* hard
+//! sample probability `p`, and a total budget `x`, pick the resource split
+//! (x1, x2) maximizing the throughput of the limiting stage — stage 2's
+//! nominal throughput counts 1/p because only a fraction p of samples
+//! reach it. At *runtime* the encountered probability `q` may differ from
+//! `p`; evaluating the chosen split at `q` yields the shaded region of
+//! Fig. 4.
+
+use super::curve::{TapCurve, TapPoint};
+use crate::resources::ResourceVec;
+
+/// The chosen two-stage design for a budget: the argmax pair of Eq. 1.
+#[derive(Clone, Debug)]
+pub struct CombinedDesign {
+    pub stage1: TapPoint,
+    pub stage2: TapPoint,
+    /// Design-time probability the split was optimized for.
+    pub p: f64,
+    /// Predicted throughput at q = p (the solid purple line of Fig. 9).
+    pub throughput_at_p: f64,
+}
+
+impl CombinedDesign {
+    /// Total resources of the combined design (stage-1 points already
+    /// carry the shared infrastructure — see `Problem::resources`).
+    pub fn total_resources(&self) -> ResourceVec {
+        self.stage1.resources + self.stage2.resources
+    }
+
+    /// Throughput when the encountered hard-sample probability is `q`
+    /// (Eq. 1's outer min) — the runtime-deviation model of Fig. 4.
+    pub fn throughput_at(&self, q: f64) -> f64 {
+        let s2_effective = if q <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.stage2.throughput / q
+        };
+        self.stage1.throughput.min(s2_effective)
+    }
+
+    /// Which stage limits the design at probability `q`.
+    pub fn limiting_stage_at(&self, q: f64) -> usize {
+        if self.stage1.throughput <= self.stage2.throughput / q.max(1e-12) {
+            1
+        } else {
+            2
+        }
+    }
+}
+
+/// Eq. 1: enumerate all Pareto pairs fitting the budget and keep the
+/// argmax of `min(f(x1), g(x2)/p)`. The curves are discrete (typically
+/// tens of points each) so exhaustive pairing is exact and cheap — no
+/// need for the heuristic splits a continuous formulation would require.
+pub fn combine(
+    f: &TapCurve,
+    g: &TapCurve,
+    p: f64,
+    budget: &ResourceVec,
+) -> Option<CombinedDesign> {
+    assert!((0.0..=1.0).contains(&p) && p > 0.0, "p must be in (0, 1]");
+    let mut best: Option<CombinedDesign> = None;
+    for s1 in &f.points {
+        for s2 in &g.points {
+            let total = s1.resources + s2.resources;
+            if !total.fits_in(budget) {
+                continue;
+            }
+            let thr = s1.throughput.min(s2.throughput / p);
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    thr > b.throughput_at_p
+                        // Tie-break: prefer over-provisioned stage 2 ("if
+                        // the resulting combined design point
+                        // over-provisions the second stage then the design
+                        // will be more robust", §IV-A).
+                        || (thr == b.throughput_at_p
+                            && s2.throughput > b.stage2.throughput)
+                }
+            };
+            if better {
+                best = Some(CombinedDesign {
+                    stage1: *s1,
+                    stage2: *s2,
+                    p,
+                    throughput_at_p: thr,
+                });
+            }
+        }
+    }
+    best
+}
+
+/// Evaluate the combined TAP over a ladder of budgets (traces the
+/// "Combined" curve of Fig. 4 / the ATHEENA curve of Fig. 9a).
+pub fn combined_curve(
+    f: &TapCurve,
+    g: &TapCurve,
+    p: f64,
+    budgets: &[(f64, ResourceVec)],
+) -> Vec<(f64, Option<CombinedDesign>)> {
+    budgets
+        .iter()
+        .map(|(frac, b)| (*frac, combine(f, g, p, b)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(thr: f64, dsp: u64) -> TapPoint {
+        TapPoint {
+            resources: ResourceVec::new(dsp * 10, dsp * 20, dsp, dsp / 8),
+            throughput: thr,
+            ii: 1,
+            budget_fraction: 0.0,
+            source: 0,
+        }
+    }
+
+    fn curve(pts: Vec<TapPoint>) -> TapCurve {
+        TapCurve::from_points(pts)
+    }
+
+    #[test]
+    fn combine_picks_balanced_split() {
+        // Stage 1 options: 100 sm/s @ 100 DSP, 200 @ 300.
+        // Stage 2 options: 30 @ 50, 60 @ 150, 120 @ 400.
+        let f = curve(vec![pt(100.0, 100), pt(200.0, 300)]);
+        let g = curve(vec![pt(30.0, 50), pt(60.0, 150), pt(120.0, 400)]);
+        // p = 0.25: stage-2 effective = 4x nominal.
+        // budget 500 DSP: best is s1=200@300 with s2=60@150 -> min(200,240)=200.
+        let budget = ResourceVec::new(100_000, 200_000, 500, 1_000);
+        let d = combine(&f, &g, 0.25, &budget).unwrap();
+        assert_eq!(d.stage1.throughput, 200.0);
+        assert_eq!(d.stage2.throughput, 60.0);
+        assert_eq!(d.throughput_at_p, 200.0);
+    }
+
+    #[test]
+    fn q_deviation_shifts_throughput() {
+        let f = curve(vec![pt(100.0, 100)]);
+        let g = curve(vec![pt(30.0, 50)]);
+        let budget = ResourceVec::new(10_000, 20_000, 200, 100);
+        let d = combine(&f, &g, 0.3, &budget).unwrap();
+        // At p: min(100, 30/0.3=100) = 100 — perfectly matched.
+        assert_eq!(d.throughput_at_p, 100.0);
+        // q < p: stage 2 under-used -> stage 1 limits (same throughput).
+        assert_eq!(d.throughput_at(0.2), 100.0);
+        // q > p: stage 2 becomes the bottleneck.
+        assert!(d.throughput_at(0.4) < 100.0);
+        assert_eq!(d.limiting_stage_at(0.4), 2);
+    }
+
+    #[test]
+    fn infeasible_budget_returns_none() {
+        let f = curve(vec![pt(100.0, 100)]);
+        let g = curve(vec![pt(30.0, 50)]);
+        assert!(combine(&f, &g, 0.25, &ResourceVec::new(10, 10, 10, 10)).is_none());
+    }
+
+    #[test]
+    fn more_budget_never_hurts() {
+        let f = curve(vec![pt(50.0, 80), pt(100.0, 160), pt(150.0, 320)]);
+        let g = curve(vec![pt(20.0, 40), pt(40.0, 100), pt(80.0, 240)]);
+        let mut last = 0.0;
+        for dsp in [100u64, 200, 300, 400, 600, 800] {
+            let b = ResourceVec::new(1_000_000, 2_000_000, dsp, 10_000);
+            let thr = combine(&f, &g, 0.25, &b)
+                .map(|d| d.throughput_at_p)
+                .unwrap_or(0.0);
+            assert!(thr >= last, "throughput dropped when budget grew");
+            last = thr;
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! TAP curves: discrete Throughput-Area Pareto sets per network stage.
+//!
+//! §III-A defines a TAP function `f: N^4 -> Q` — maximum achievable
+//! throughput for a constrained (BRAM, DSP, FF, LUT) budget, monotonically
+//! non-decreasing in each argument. The DSE produces *discrete* design
+//! points ("The design points represented by the TAP function for the
+//! first and second stages are discrete"), so the curve is a Pareto set
+//! plus a lookup that realizes the monotone function.
+
+use crate::resources::ResourceVec;
+
+/// One optimized design point on a stage's TAP curve.
+#[derive(Clone, Copy, Debug)]
+pub struct TapPoint {
+    /// Resources actually used by the optimized design.
+    pub resources: ResourceVec,
+    /// Nominal throughput (samples/s) at the stage's own rate.
+    pub throughput: f64,
+    /// Pipeline initiation interval backing `throughput`.
+    pub ii: u64,
+    /// Board fraction the optimizer was constrained to when this point
+    /// was found (provenance for Fig. 9 reporting).
+    pub budget_fraction: f64,
+    /// Index into the originating sweep's raw results (links the point
+    /// back to its full `HwMapping` for simulation / manifest emission).
+    pub source: usize,
+}
+
+/// A discrete TAP function: Pareto-filtered design points.
+#[derive(Clone, Debug, Default)]
+pub struct TapCurve {
+    /// Sorted by throughput ascending; mutually non-dominated.
+    pub points: Vec<TapPoint>,
+}
+
+impl TapCurve {
+    /// Build from raw sweep output: drop dominated points.
+    /// Point a dominates b iff a.throughput >= b.throughput and
+    /// a.resources <= b.resources component-wise (with at least one
+    /// strict). Dominated points can never be optimal in Eq. 1.
+    pub fn from_points(mut raw: Vec<TapPoint>) -> TapCurve {
+        raw.sort_by(|a, b| a.throughput.total_cmp(&b.throughput));
+        let mut keep: Vec<TapPoint> = Vec::new();
+        for p in raw {
+            // Remove existing points dominated by p.
+            keep.retain(|q| {
+                !(p.throughput >= q.throughput && p.resources.fits_in(&q.resources))
+            });
+            // Keep p unless dominated by an existing point.
+            let dominated = keep
+                .iter()
+                .any(|q| q.throughput >= p.throughput && q.resources.fits_in(&p.resources));
+            if !dominated {
+                keep.push(p);
+            }
+        }
+        keep.sort_by(|a, b| a.throughput.total_cmp(&b.throughput));
+        TapCurve { points: keep }
+    }
+
+    /// Evaluate the TAP function: best throughput achievable within
+    /// `budget` (None if even the smallest point does not fit). This is
+    /// the monotone `f(x)` of §III-A.
+    pub fn eval(&self, budget: &ResourceVec) -> Option<&TapPoint> {
+        self.points
+            .iter()
+            .filter(|p| p.resources.fits_in(budget))
+            .max_by(|a, b| a.throughput.total_cmp(&b.throughput))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn max_throughput(&self) -> f64 {
+        self.points.last().map(|p| p.throughput).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(thr: f64, dsp: u64) -> TapPoint {
+        TapPoint {
+            resources: ResourceVec::new(dsp * 100, dsp * 150, dsp, dsp / 4),
+            throughput: thr,
+            ii: (125e6 / thr) as u64,
+            budget_fraction: 0.0,
+            source: 0,
+        }
+    }
+
+    #[test]
+    fn pareto_filter_drops_dominated() {
+        // (thr=10, dsp=100) dominates (thr=5, dsp=200).
+        let c = TapCurve::from_points(vec![pt(5.0, 200), pt(10.0, 100), pt(20.0, 400)]);
+        assert_eq!(c.points.len(), 2);
+        assert_eq!(c.points[0].throughput, 10.0);
+        assert_eq!(c.points[1].throughput, 20.0);
+    }
+
+    #[test]
+    fn eval_is_monotone_in_budget() {
+        let c = TapCurve::from_points(vec![pt(10.0, 100), pt(20.0, 400), pt(30.0, 800)]);
+        let small = c.eval(&ResourceVec::new(50_000, 80_000, 150, 200)).unwrap();
+        let big = c.eval(&ResourceVec::new(100_000, 160_000, 500, 200)).unwrap();
+        assert!(big.throughput >= small.throughput);
+        assert_eq!(small.throughput, 10.0);
+        assert_eq!(big.throughput, 20.0);
+        assert!(c.eval(&ResourceVec::new(10, 10, 10, 10)).is_none());
+    }
+
+    #[test]
+    fn incomparable_points_coexist() {
+        // High throughput + high DSP vs low throughput + low DSP but the
+        // high one uses less BRAM: craft genuine incomparability.
+        let a = TapPoint {
+            resources: ResourceVec::new(100, 100, 50, 90),
+            throughput: 10.0,
+            ii: 100,
+            budget_fraction: 0.0,
+            source: 0,
+        };
+        let b = TapPoint {
+            resources: ResourceVec::new(100, 100, 90, 50),
+            throughput: 12.0,
+            ii: 80,
+            budget_fraction: 0.0,
+            source: 0,
+        };
+        let c = TapCurve::from_points(vec![a, b]);
+        assert_eq!(c.points.len(), 2, "neither dominates the other");
+    }
+}

@@ -1,0 +1,10 @@
+//! Throughput-Area Pareto (TAP) functions and their combination — the
+//! paper's core methodological contribution (§III-A, Eq. 1).
+
+pub mod combine;
+pub mod curve;
+pub mod multi;
+
+pub use combine::{combine, CombinedDesign};
+pub use curve::{TapCurve, TapPoint};
+pub use multi::{combine_multi, MultiStageDesign};

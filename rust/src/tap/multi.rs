@@ -1,0 +1,239 @@
+//! Multi-stage TAP combination — the paper's generalization (§III-A:
+//! "For ease of presentation, we explain the area apportioning process
+//! with reference to a two-stage network, however it is trivial to
+//! extend the presentation to multi-stage networks").
+//!
+//! For an N-exit network, stage i is reached with probability `r_i`
+//! (r_0 = 1 ≥ r_1 ≥ … ≥ r_{N-1}), so its effective throughput at
+//! allocation x_i is `f_i(x_i) / r_i`. The combined design maximizes
+//! `min_i f_i(x_i) / r_i` subject to `Σ x_i ≤ x` — Eq. 1 folded over
+//! stages. The discrete Pareto sets are small (tens of points) so exact
+//! enumeration with budget pruning is practical for the stage counts
+//! real Early-Exit networks use (≤ 4–5 exits).
+
+use super::curve::{TapCurve, TapPoint};
+use crate::resources::ResourceVec;
+
+/// A chosen N-stage design.
+#[derive(Clone, Debug)]
+pub struct MultiStageDesign {
+    pub stages: Vec<TapPoint>,
+    /// Design-time reach probabilities (r_0 = 1).
+    pub reach_probs: Vec<f64>,
+    /// Predicted throughput at the design-time probabilities.
+    pub throughput_at_design: f64,
+}
+
+impl MultiStageDesign {
+    pub fn total_resources(&self) -> ResourceVec {
+        self.stages
+            .iter()
+            .fold(ResourceVec::ZERO, |acc, s| acc + s.resources)
+    }
+
+    /// Throughput when the runtime reach probabilities are `qs`
+    /// (qs[0] is conventionally 1).
+    pub fn throughput_at(&self, qs: &[f64]) -> f64 {
+        assert_eq!(qs.len(), self.stages.len());
+        self.stages
+            .iter()
+            .zip(qs)
+            .map(|(s, &q)| {
+                if q <= 0.0 {
+                    f64::INFINITY
+                } else {
+                    s.throughput / q
+                }
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Index of the limiting stage at runtime probabilities `qs`.
+    pub fn limiting_stage(&self, qs: &[f64]) -> usize {
+        let mut best = (0usize, f64::INFINITY);
+        for (i, (s, &q)) in self.stages.iter().zip(qs).enumerate() {
+            let eff = if q <= 0.0 {
+                f64::INFINITY
+            } else {
+                s.throughput / q
+            };
+            if eff < best.1 {
+                best = (i, eff);
+            }
+        }
+        best.0
+    }
+}
+
+/// Exact multi-stage Eq. 1: exhaustive enumeration over the Pareto sets
+/// with branch-and-bound pruning on both budget and the running min.
+pub fn combine_multi(
+    curves: &[TapCurve],
+    reach_probs: &[f64],
+    budget: &ResourceVec,
+) -> Option<MultiStageDesign> {
+    assert_eq!(curves.len(), reach_probs.len());
+    assert!(!curves.is_empty());
+    assert!(
+        reach_probs.windows(2).all(|w| w[0] >= w[1]) && reach_probs[0] <= 1.0,
+        "reach probabilities must be non-increasing"
+    );
+    assert!(reach_probs.iter().all(|&p| p > 0.0));
+
+    struct Search<'a> {
+        curves: &'a [TapCurve],
+        probs: &'a [f64],
+        budget: ResourceVec,
+        best: Option<(f64, Vec<TapPoint>)>,
+    }
+
+    impl Search<'_> {
+        fn recurse(
+            &mut self,
+            stage: usize,
+            used: ResourceVec,
+            running_min: f64,
+            picked: &mut Vec<TapPoint>,
+        ) {
+            if stage == self.curves.len() {
+                let better = self
+                    .best
+                    .as_ref()
+                    .map(|(b, _)| running_min > *b)
+                    .unwrap_or(true);
+                if better {
+                    self.best = Some((running_min, picked.clone()));
+                }
+                return;
+            }
+            for pt in &self.curves[stage].points {
+                let total = used + pt.resources;
+                if !total.fits_in(&self.budget) {
+                    continue;
+                }
+                let eff = pt.throughput / self.probs[stage];
+                let new_min = running_min.min(eff);
+                // Prune: can't beat the incumbent.
+                if let Some((b, _)) = &self.best {
+                    if new_min <= *b {
+                        continue;
+                    }
+                }
+                picked.push(*pt);
+                self.recurse(stage + 1, total, new_min, picked);
+                picked.pop();
+            }
+        }
+    }
+
+    let mut search = Search {
+        curves,
+        probs: reach_probs,
+        budget: *budget,
+        best: None,
+    };
+    search.recurse(0, ResourceVec::ZERO, f64::INFINITY, &mut Vec::new());
+    search.best.map(|(thr, stages)| MultiStageDesign {
+        stages,
+        reach_probs: reach_probs.to_vec(),
+        throughput_at_design: thr,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tap::combine;
+
+    fn pt(thr: f64, dsp: u64) -> TapPoint {
+        TapPoint {
+            resources: ResourceVec::new(dsp * 10, dsp * 15, dsp, dsp / 8 + 1),
+            throughput: thr,
+            ii: 1,
+            budget_fraction: 0.0,
+            source: 0,
+        }
+    }
+
+    fn curve(pts: Vec<TapPoint>) -> TapCurve {
+        TapCurve::from_points(pts)
+    }
+
+    #[test]
+    fn two_stage_matches_pairwise_combine() {
+        let f = curve(vec![pt(100.0, 100), pt(200.0, 300), pt(400.0, 700)]);
+        let g = curve(vec![pt(30.0, 50), pt(60.0, 150), pt(120.0, 400)]);
+        let budget = ResourceVec::new(100_000, 150_000, 700, 1_000);
+        let p = 0.25;
+        let pairwise = combine(&f, &g, p, &budget).unwrap();
+        let multi =
+            combine_multi(&[f.clone(), g.clone()], &[1.0, p], &budget).unwrap();
+        assert_eq!(multi.stages.len(), 2);
+        assert!(
+            (multi.throughput_at_design - pairwise.throughput_at_p).abs() < 1e-9,
+            "multi {} vs pairwise {}",
+            multi.throughput_at_design,
+            pairwise.throughput_at_p
+        );
+    }
+
+    #[test]
+    fn three_stage_scales_tail_stages_down() {
+        // Reach probabilities 1 / 0.3 / 0.1: the tail stages should get
+        // far smaller allocations than a naive equal split.
+        let mk = || {
+            curve(vec![
+                pt(50.0, 80),
+                pt(100.0, 160),
+                pt(200.0, 320),
+                pt(400.0, 640),
+            ])
+        };
+        let budget = ResourceVec::new(100_000, 150_000, 900, 1_000);
+        let d = combine_multi(&[mk(), mk(), mk()], &[1.0, 0.3, 0.1], &budget)
+            .unwrap();
+        assert_eq!(d.stages.len(), 3);
+        // Stage 0 gets the most DSP, stage 2 the least.
+        assert!(d.stages[0].resources.dsp >= d.stages[1].resources.dsp);
+        assert!(d.stages[1].resources.dsp >= d.stages[2].resources.dsp);
+        // Budget respected.
+        assert!(d.total_resources().fits_in(&budget));
+        // Design-time throughput is the min of effective stage rates.
+        let qs = [1.0, 0.3, 0.1];
+        assert!((d.throughput_at(&qs) - d.throughput_at_design).abs() < 1e-9);
+    }
+
+    #[test]
+    fn runtime_probability_shift() {
+        let mk = || curve(vec![pt(100.0, 100), pt(200.0, 300)]);
+        let budget = ResourceVec::new(100_000, 150_000, 600, 1_000);
+        let d = combine_multi(&[mk(), mk()], &[1.0, 0.5], &budget).unwrap();
+        let at_design = d.throughput_at(&[1.0, 0.5]);
+        // Fewer samples reaching stage 1 can only help.
+        assert!(d.throughput_at(&[1.0, 0.3]) >= at_design);
+        // More samples reaching stage 1 can only hurt.
+        assert!(d.throughput_at(&[1.0, 0.8]) <= at_design);
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        let c = curve(vec![pt(100.0, 500)]);
+        assert!(combine_multi(
+            &[c.clone(), c.clone(), c],
+            &[1.0, 0.5, 0.2],
+            &ResourceVec::new(100, 100, 100, 10)
+        )
+        .is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-increasing")]
+    fn rejects_increasing_probs() {
+        let c = curve(vec![pt(1.0, 1)]);
+        let _ = combine_multi(
+            &[c.clone(), c],
+            &[0.5, 0.9],
+            &ResourceVec::new(100, 100, 100, 10),
+        );
+    }
+}

@@ -1,0 +1,89 @@
+//! Criterion-lite: a minimal benchmarking harness (the offline vendored
+//! crate set has no criterion). Provides warmup, repeated timed runs,
+//! and mean/min/max reporting in a stable, grep-able format used by the
+//! `benches/` targets and EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn per_second(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs. The
+/// closure's return value is black-boxed to keep the optimizer honest.
+pub fn bench<T>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut() -> T,
+) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_nanos() as f64);
+    }
+    let mean = times.iter().sum::<f64>() / iters as f64;
+    let min = times.iter().copied().fold(f64::INFINITY, f64::min);
+    let max = times.iter().copied().fold(0.0f64, f64::max);
+    let stats = BenchStats {
+        iters,
+        mean_ns: mean,
+        min_ns: min,
+        max_ns: max,
+    };
+    println!(
+        "bench {name:<40} mean {:>12.3} ms  min {:>12.3} ms  max {:>12.3} ms  ({:.1}/s)",
+        mean / 1e6,
+        min / 1e6,
+        max / 1e6,
+        stats.per_second()
+    );
+    stats
+}
+
+/// Measure a single long-running operation (e.g. one full toolflow).
+pub fn once<T>(name: &str, f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let secs = t0.elapsed().as_secs_f64();
+    println!("bench {name:<40} once {secs:>12.3} s");
+    (out, secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let s = bench("noop", 2, 10, || 42u64);
+        assert_eq!(s.iters, 10);
+        assert!(s.min_ns <= s.mean_ns && s.mean_ns <= s.max_ns);
+    }
+
+    #[test]
+    fn once_returns_value() {
+        let (v, secs) = once("quick", || 7);
+        assert_eq!(v, 7);
+        assert!(secs >= 0.0);
+    }
+}

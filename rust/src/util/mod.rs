@@ -1,0 +1,9 @@
+//! Offline-build utilities: PRNG, JSON, tiny property-testing harness.
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

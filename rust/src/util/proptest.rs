@@ -1,0 +1,95 @@
+//! Tiny property-testing harness (the vendored crate set has no
+//! `proptest`, so this provides the subset we use: seeded case generation,
+//! configurable case counts, and failure reporting with the seed needed to
+//! reproduce).
+//!
+//! Usage:
+//! ```ignore
+//! check(200, |r| {
+//!     let n = r.below(64) + 1;
+//!     let v = gen_vec(r, n, |r| r.f64());
+//!     prop_assert(v.len() == n, "length preserved")
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Result of a single property case: Ok(()) or a failure description.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper that returns a `PropResult` instead of panicking, so the
+/// harness can attach the failing seed.
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Approximate float equality (relative + absolute tolerance).
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+/// Run `cases` seeded property cases. Panics with the case seed on failure
+/// so the exact case can be re-run under a debugger.
+pub fn check<F: FnMut(&mut Rng) -> PropResult>(cases: u64, mut f: F) {
+    // Base seed can be pinned for reproduction: ATHEENA_PROP_SEED=n.
+    let base = std::env::var("ATHEENA_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA7EE_4A00u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property failed on case {case} (ATHEENA_PROP_SEED={base}, \
+                 case seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generate a vector of `n` items.
+pub fn gen_vec<T, F: FnMut(&mut Rng) -> T>(
+    rng: &mut Rng,
+    n: usize,
+    mut f: F,
+) -> Vec<T> {
+    (0..n).map(|_| f(rng)).collect()
+}
+
+/// Random usize in [lo, hi] inclusive.
+pub fn gen_range(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check(50, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_reports_failure() {
+        check(10, |r| prop_assert(r.f64() < 0.5, "coin flip"));
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, 0.0));
+        assert!(!close(1.0, 1.1, 1e-6, 1e-6));
+        assert!(close(0.0, 1e-9, 0.0, 1e-6));
+    }
+}

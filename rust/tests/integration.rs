@@ -1,0 +1,193 @@
+//! Integration tests over the real exported artifacts.
+//!
+//! Every test skips (with a notice) when `artifacts/` has not been built,
+//! so `cargo test` passes in a fresh checkout; `make test` builds the
+//! artifacts first and exercises everything here.
+
+use std::path::Path;
+
+use atheena::coordinator::batch::{BatchHost, PjrtOracle};
+use atheena::coordinator::toolflow::{run_toolflow, ToolflowOptions};
+use atheena::coordinator::{Server, ServerConfig};
+use atheena::data::TestSet;
+use atheena::ee::Profiler;
+use atheena::hls::stitch;
+use atheena::ir::Network;
+use atheena::resources::Board;
+use atheena::runtime::ArtifactStore;
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("networks/blenet.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("[skip] artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn exported_networks_parse_and_validate() {
+    let Some(dir) = artifacts() else { return };
+    for name in ["blenet", "triplewins", "balexnet"] {
+        let net = Network::from_file(&dir.join("networks").join(format!("{name}.json")))
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(net.name, name);
+        assert!(net.accuracy.deployed_acc > 0.85, "{name} accuracy too low");
+        assert!(net.p_profile > 0.1 && net.p_profile < 0.6);
+    }
+}
+
+#[test]
+fn pjrt_numerics_agree_with_exported_flags() {
+    let Some(dir) = artifacts() else { return };
+    let store = ArtifactStore::open(dir).unwrap();
+    let ts = TestSet::load(dir, "blenet").unwrap();
+    let s1 = store.stage1("blenet").unwrap();
+    let n = 128;
+    let mut agree = 0;
+    for i in 0..n {
+        let out = s1.run(ts.image(i)).unwrap();
+        if out.take_exit == (ts.hard[i] == 0) {
+            agree += 1;
+        }
+        // Probabilities are a distribution.
+        let sum: f32 = out.exit_probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3);
+    }
+    assert!(
+        agree as f64 / n as f64 > 0.99,
+        "in-graph decision disagrees with build-time profiler: {agree}/{n}"
+    );
+}
+
+#[test]
+fn profiler_over_pjrt_matches_build_time_p() {
+    let Some(dir) = artifacts() else { return };
+    let store = ArtifactStore::open(dir).unwrap();
+    let net = store.network("blenet").unwrap().clone();
+    let ts = TestSet::load(dir, "blenet").unwrap();
+    let s1 = store.stage1("blenet").unwrap();
+    let s2 = store.stage2("blenet").unwrap();
+    let mut oracle = PjrtOracle {
+        stage1: &s1,
+        stage2: &s2,
+    };
+    let report = Profiler::default().profile(&mut oracle, &ts, 512).unwrap();
+    assert!(
+        (report.p_hard - net.p_profile).abs() < 0.08,
+        "runtime p {} vs build-time {}",
+        report.p_hard,
+        net.p_profile
+    );
+    assert!(report.deployed_acc > 0.85);
+}
+
+#[test]
+fn full_toolflow_on_exported_blenet() {
+    let Some(dir) = artifacts() else { return };
+    let net = Network::from_file(&dir.join("networks/blenet.json")).unwrap();
+    let opts = ToolflowOptions::quick(Board::zc706());
+    let ts = TestSet::load(dir, "blenet").unwrap();
+    let mut flags = |q: f64, batch: usize| ts.batch_with_q(q, batch, 11).hard;
+    let r = run_toolflow(&net, &opts, Some(&mut flags)).unwrap();
+    let best = r.best_design().unwrap();
+    // Manifest must stitch cleanly and fit the board.
+    assert!(stitch(&best.manifest).ok());
+    assert!(best
+        .total_resources
+        .fits_in(&Board::zc706().resources));
+    // Measured throughput beats the measured baseline at q=p.
+    let base = r.best_baseline().unwrap().measured.throughput_sps;
+    let ee = best
+        .measured
+        .iter()
+        .min_by(|(a, _), (b, _)| (a - r.p).abs().total_cmp(&(b - r.p).abs()))
+        .map(|(_, m)| m.throughput_sps)
+        .unwrap();
+    assert!(ee > base, "EE {ee} <= baseline {base}");
+}
+
+#[test]
+fn batch_host_accuracy_and_agreement() {
+    let Some(dir) = artifacts() else { return };
+    let store = ArtifactStore::open(dir).unwrap();
+    let net = store.network("blenet").unwrap().clone();
+    let ts = TestSet::load(dir, "blenet").unwrap();
+    let opts = ToolflowOptions::quick(Board::zc706());
+    let r = run_toolflow(&net, &opts, None).unwrap();
+    let best = r.best_design().unwrap();
+    let s1 = store.stage1("blenet").unwrap();
+    let s2 = store.stage2("blenet").unwrap();
+    let host = BatchHost {
+        stage1: &s1,
+        stage2: &s2,
+        timing: best.timing,
+        sim: opts.sim.clone(),
+    };
+    let batch = ts.batch_with_q(0.25, 256, 3);
+    let rep = host.run(&ts, &batch).unwrap();
+    assert!(rep.accuracy > 0.85, "accuracy {}", rep.accuracy);
+    assert!(rep.flag_agreement > 0.99);
+    assert!((rep.measured_q - 0.25).abs() < 0.05);
+    assert!(rep.board.throughput_sps > 0.0);
+}
+
+#[test]
+fn server_routes_and_answers() {
+    let Some(dir) = artifacts() else { return };
+    let ts = TestSet::load(dir, "blenet").unwrap();
+    let server = Server::start(ServerConfig::new(dir, "blenet")).unwrap();
+    let n = 64;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        rxs.push((server.submit(ts.image(i).to_vec()), ts.labels[i] as usize));
+    }
+    let mut correct = 0;
+    let mut early = 0;
+    for (rx, label) in rxs {
+        let r = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        if r.pred == label {
+            correct += 1;
+        }
+        if r.exited_early {
+            early += 1;
+        }
+    }
+    assert!(correct as f64 / n as f64 > 0.8);
+    assert!(early > 0, "no sample exited early");
+    assert!(early < n, "no sample reached stage 2");
+    server.shutdown();
+}
+
+#[test]
+fn server_rejects_unknown_network() {
+    let Some(dir) = artifacts() else { return };
+    assert!(Server::start(ServerConfig::new(dir, "nope")).is_err());
+}
+
+#[test]
+fn table4_networks_show_ee_gain_under_constraint() {
+    let Some(dir) = artifacts() else { return };
+    // At a *constrained* budget (DSP-bound regime) every network should
+    // show an EE gain — the paper's central claim.
+    for (name, board) in [
+        ("blenet", Board::zc706()),
+        ("triplewins", Board::vu440()),
+        ("balexnet", Board::vu440()),
+    ] {
+        let net =
+            Network::from_file(&dir.join("networks").join(format!("{name}.json"))).unwrap();
+        let mut opts = ToolflowOptions::quick(board);
+        // A ladder of fractions: Eq. 1 needs sub-budget points on each
+        // stage curve to pair within the combined budget.
+        opts.sweep.fractions = vec![0.1, 0.15, 0.2, 0.3, 0.5];
+        let r = run_toolflow(&net, &opts, None).unwrap();
+        let base = r.best_baseline().unwrap().throughput_predicted;
+        let ee = r.best_design().unwrap().combined.throughput_at_p;
+        assert!(
+            ee > base * 1.1,
+            "{name}: EE {ee:.0} should beat baseline {base:.0} under constraint"
+        );
+    }
+}

@@ -1,0 +1,410 @@
+//! Property-based tests over the toolflow invariants (seeded generative
+//! harness from `util::proptest` — the vendored crate set has no
+//! proptest). Each property runs across hundreds of randomized cases;
+//! failures print the reproducing seed.
+//!
+//! Invariants covered:
+//! * simulator conservation: every submitted sample completes exactly
+//!   once, and is never reordered *within* the easy or hard class,
+//! * simulator monotonicity: more hard samples never increases
+//!   throughput; deeper buffers never reduce it,
+//! * TAP algebra: Pareto filtering is idempotent and dominance-free;
+//!   Eq. 1 combination is monotone in budget and respects feasibility,
+//! * folding/resource monotonicity across random layer shapes,
+//! * routing/batching: the coordinator's q-controlled batch construction
+//!   hits its target exactly for any q,
+//! * JSON round-trip over randomized documents.
+
+use atheena::coordinator::toolflow::synthetic_hard_flags;
+use atheena::ir::network::testnet;
+use atheena::ir::{Cdfg, HwOp, Op, Shape};
+use atheena::resources::ResourceVec;
+use atheena::sdf::folding::{divisors, FoldingSpace};
+use atheena::sdf::perf;
+use atheena::sim::{simulate_ee, DesignTiming, SimConfig};
+use atheena::tap::{combine, TapCurve, TapPoint};
+use atheena::util::json::{self, Json};
+use atheena::util::proptest::{check, gen_range, gen_vec, prop_assert};
+use atheena::util::Rng;
+
+fn random_timing(r: &mut Rng) -> DesignTiming {
+    DesignTiming {
+        s1_ii: 20 + r.below(500) as u64,
+        s1_lat: 50 + r.below(2000) as u64,
+        exit_ii: 10 + r.below(300) as u64,
+        exit_lat: 30 + r.below(1500) as u64,
+        s2_ii: 50 + r.below(2000) as u64,
+        s2_lat: 100 + r.below(4000) as u64,
+        merge_ii: 1 + r.below(20) as u64,
+        cond_buffer_depth: 1 + r.below(32),
+        input_words: 64 + r.below(2048),
+        output_words: 1 + r.below(32),
+    }
+}
+
+fn random_flags(r: &mut Rng, n: usize) -> Vec<bool> {
+    let q = r.f64();
+    (0..n).map(|_| r.chance(q)).collect()
+}
+
+#[test]
+fn prop_sim_every_sample_completes_once() {
+    check(150, |r| {
+        let t = random_timing(r);
+        let n = 1 + r.below(300);
+        let flags = random_flags(r, n);
+        let res = simulate_ee(&t, &SimConfig::default(), &flags);
+        prop_assert(res.deadlock.is_none(), "unexpected deadlock")?;
+        prop_assert(res.traces.len() == n, "trace count mismatch")?;
+        // Each sample has a completion strictly after its arrival, and
+        // completion times are all distinct (one DMA writeback each).
+        let mut outs: Vec<u64> = res.traces.iter().map(|t| t.t_out).collect();
+        outs.sort_unstable();
+        outs.dedup();
+        prop_assert(outs.len() == n, "duplicate/merged completions")?;
+        for tr in &res.traces {
+            prop_assert(tr.t_out > tr.t_in, "completed before arrival")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_class_order_preserved() {
+    // Early exits may overtake hard samples, but within each class the
+    // pipeline is FIFO: easy samples complete in submission order, and
+    // so do hard samples.
+    check(150, |r| {
+        let t = random_timing(r);
+        let n = 2 + r.below(200);
+        let flags = random_flags(r, n);
+        let res = simulate_ee(&t, &SimConfig::default(), &flags);
+        let mut last_easy = 0u64;
+        let mut last_hard = 0u64;
+        for (s, tr) in res.traces.iter().enumerate() {
+            let slot = if flags[s] { &mut last_hard } else { &mut last_easy };
+            prop_assert(tr.t_out > *slot, "intra-class reordering")?;
+            *slot = tr.t_out;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_monotone_in_q() {
+    check(60, |r| {
+        let t = random_timing(r);
+        let n = 256;
+        let q1 = r.f64() * 0.5;
+        let q2 = q1 + r.f64() * (1.0 - q1 - 0.01);
+        let f1 = synthetic_hard_flags(q1, n, 7);
+        let f2 = synthetic_hard_flags(q2, n, 7);
+        let r1 = simulate_ee(&t, &SimConfig::default(), &f1);
+        let r2 = simulate_ee(&t, &SimConfig::default(), &f2);
+        prop_assert(
+            r2.total_cycles as f64 >= r1.total_cycles as f64 * 0.999,
+            &format!(
+                "more hard samples finished faster: q={q1:.2}->{} vs q={q2:.2}->{}",
+                r1.total_cycles, r2.total_cycles
+            ),
+        )
+    });
+}
+
+#[test]
+fn prop_sim_monotone_in_buffer_depth() {
+    check(80, |r| {
+        let mut t = random_timing(r);
+        let n = 200;
+        let flags = random_flags(r, n);
+        t.cond_buffer_depth = 1 + r.below(8);
+        let shallow = simulate_ee(&t, &SimConfig::default(), &flags);
+        t.cond_buffer_depth += 1 + r.below(32);
+        let deep = simulate_ee(&t, &SimConfig::default(), &flags);
+        prop_assert(
+            deep.total_cycles <= shallow.total_cycles,
+            "deeper buffer slowed the design",
+        )?;
+        prop_assert(
+            deep.s1_stall_cycles <= shallow.s1_stall_cycles,
+            "deeper buffer stalled more",
+        )
+    });
+}
+
+fn random_point(r: &mut Rng, idx: usize) -> TapPoint {
+    let dsp = 10 + r.below(900) as u64;
+    TapPoint {
+        resources: ResourceVec::new(
+            dsp * (50 + r.below(100) as u64),
+            dsp * (80 + r.below(150) as u64),
+            dsp,
+            5 + r.below(400) as u64,
+        ),
+        throughput: 1000.0 + 200_000.0 * r.f64(),
+        ii: 1 + r.below(100_000) as u64,
+        budget_fraction: 0.0,
+        source: idx,
+    }
+}
+
+#[test]
+fn prop_pareto_filter_sound_and_idempotent() {
+    check(200, |r| {
+        let n = 1 + r.below(60);
+        let pts: Vec<TapPoint> = (0..n).map(|i| random_point(r, i)).collect();
+        let c = TapCurve::from_points(pts);
+        // No point dominates another.
+        for a in &c.points {
+            for b in &c.points {
+                if (a.source, a.throughput) == (b.source, b.throughput) {
+                    continue;
+                }
+                let dominates =
+                    a.throughput >= b.throughput && a.resources.fits_in(&b.resources);
+                prop_assert(!dominates, "dominated point survived the filter")?;
+            }
+        }
+        // Idempotent.
+        let again = TapCurve::from_points(c.points.clone());
+        prop_assert(again.points.len() == c.points.len(), "filter not idempotent")
+    });
+}
+
+#[test]
+fn prop_combine_monotone_in_budget() {
+    check(100, |r| {
+        let nf = 1 + r.below(30);
+        let ng = 1 + r.below(30);
+        let f = TapCurve::from_points(gen_vec(r, nf, |r| random_point(r, 0)));
+        let g = TapCurve::from_points(gen_vec(r, ng, |r| random_point(r, 0)));
+        let p = 0.05 + 0.9 * r.f64();
+        let base = ResourceVec::new(200_000, 400_000, 900, 1_000);
+        let mut last = -1.0;
+        for frac in [0.2, 0.4, 0.6, 0.8, 1.0, 1.5] {
+            let thr = combine(&f, &g, p, &base.scaled(frac))
+                .map(|d| d.throughput_at_p)
+                .unwrap_or(0.0);
+            prop_assert(thr >= last, "combine lost throughput with more budget")?;
+            last = thr;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_combine_respects_budget_and_min_rule() {
+    check(150, |r| {
+        let nf = 1 + r.below(25);
+        let ng = 1 + r.below(25);
+        let f = TapCurve::from_points(gen_vec(r, nf, |r| random_point(r, 0)));
+        let g = TapCurve::from_points(gen_vec(r, ng, |r| random_point(r, 0)));
+        let p = 0.05 + 0.9 * r.f64();
+        let budget = ResourceVec::new(
+            (50_000 + r.below(500_000)) as u64,
+            (50_000 + r.below(900_000)) as u64,
+            (100 + r.below(2_000)) as u64,
+            (50 + r.below(3_000)) as u64,
+        );
+        if let Some(d) = combine(&f, &g, p, &budget) {
+            prop_assert(
+                d.total_resources().fits_in(&budget),
+                "combined design exceeds budget",
+            )?;
+            let expect = d.stage1.throughput.min(d.stage2.throughput / p);
+            prop_assert(
+                (d.throughput_at_p - expect).abs() < 1e-9,
+                "Eq.1 min rule violated",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_folding_spaces_are_exact_divisor_sets() {
+    check(200, |r| {
+        let c_in = 1 + r.below(64);
+        let c_out = 1 + r.below(64);
+        let k = *r.choose(&[1usize, 3, 5, 7]);
+        let op = HwOp::Std(Op::Conv {
+            out_ch: c_out,
+            k,
+            pad: k / 2,
+            stride: 1,
+        });
+        let hw = k + r.below(20);
+        let space = FoldingSpace::for_op(&op, &Shape::chw(c_in, hw, hw));
+        for &d in &space.coarse_in {
+            prop_assert(c_in % d == 0, "coarse_in not a divisor")?;
+        }
+        for &d in &space.fine {
+            prop_assert((k * k) % d == 0, "fine not a divisor")?;
+        }
+        prop_assert(
+            space.coarse_in.len() == divisors(c_in).len(),
+            "coarse_in space incomplete",
+        )
+    });
+}
+
+#[test]
+fn prop_unrolling_monotone_ii_over_random_nets() {
+    // For every node of the standard testnet CDFG and every random pair
+    // folding<=folding', II(f') <= II(f) and DSP(f') >= DSP(f).
+    let net = testnet::blenet_like();
+    let g = Cdfg::lower(&net, 8);
+    check(300, |r| {
+        let node = &g.nodes[r.below(g.nodes.len())];
+        let space = FoldingSpace::for_op(&node.op, &node.in_shape);
+        let pick = |r: &mut Rng, axis: &[usize]| axis[r.below(axis.len())];
+        let mut a = atheena::sdf::Folding {
+            coarse_in: pick(r, &space.coarse_in),
+            coarse_out: pick(r, &space.coarse_out),
+            fine: pick(r, &space.fine),
+        };
+        let mut b = atheena::sdf::Folding {
+            coarse_in: pick(r, &space.coarse_in),
+            coarse_out: pick(r, &space.coarse_out),
+            fine: pick(r, &space.fine),
+        };
+        // Order them component-wise where possible.
+        if a.coarse_in > b.coarse_in {
+            std::mem::swap(&mut a.coarse_in, &mut b.coarse_in);
+        }
+        if a.coarse_out > b.coarse_out {
+            std::mem::swap(&mut a.coarse_out, &mut b.coarse_out);
+        }
+        if a.fine > b.fine {
+            std::mem::swap(&mut a.fine, &mut b.fine);
+        }
+        prop_assert(
+            perf::ii_cycles(node, &b) <= perf::ii_cycles(node, &a),
+            &format!("more parallel folding slower on {}", node.name),
+        )
+    });
+}
+
+#[test]
+fn prop_q_controlled_batches_exact() {
+    check(150, |r| {
+        let n = 200 + r.below(2000);
+        let words = 1 + r.below(16);
+        let hard_frac = 0.2 + 0.6 * r.f64();
+        let ts = atheena::data::synthetic_testset(n, words, hard_frac, r.next_u64());
+        let q = r.f64();
+        let batch = 16 + r.below(512);
+        let b = ts.batch_with_q(q, batch, r.next_u64());
+        let got = b.hard.iter().filter(|&&h| h).count();
+        prop_assert(
+            got == (q * batch as f64).round() as usize,
+            &format!("batch hard count {got} != target for q={q}"),
+        )?;
+        prop_assert(b.indices.len() == batch, "batch size wrong")?;
+        // Labels must correspond to the drawn indices.
+        for (k, &i) in b.indices.iter().enumerate() {
+            prop_assert(b.labels[k] == ts.labels[i], "label mismatch")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    fn random_json(r: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { r.below(4) } else { r.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.chance(0.5)),
+            2 => Json::Num((r.f64() * 2e6).round() / 8.0 - 1e5),
+            3 => {
+                let len = r.below(12);
+                let s: String = (0..len)
+                    .map(|_| {
+                        *r.choose(&[
+                            'a', 'Z', '0', ' ', '"', '\\', '\n', 'é', '→', '_',
+                        ])
+                    })
+                    .collect();
+                Json::Str(s)
+            }
+            4 => {
+                let len = r.below(5);
+                Json::Arr(gen_vec(r, len, |r| random_json(r, depth - 1)))
+            }
+            _ => {
+                let n = r.below(5);
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..n {
+                    m.insert(format!("k{i}"), random_json(r, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    check(300, |r| {
+        let doc = random_json(r, 3);
+        for text in [doc.to_string_pretty(), doc.to_string_compact()] {
+            let back = json::parse(&text)
+                .map_err(|e| format!("reparse failed: {e} in {text}"))?;
+            prop_assert(back == doc, "json roundtrip changed the document")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_buffer_min_depth_formula_prevents_stall_dominance() {
+    // A buffer sized by the Fig. 7 formula (+small margin) must not
+    // deadlock and must keep stage-1 stalls at zero when stage 2 is
+    // over-provisioned (q << stage-2 headroom).
+    check(80, |r| {
+        let mut t = random_timing(r);
+        // The toolflow's stage-1 rate includes the exit branch (both run
+        // at the full sample rate), so a generated design always has
+        // exit_ii <= s1_ii; over-provision stage 2 relative to arrivals.
+        t.exit_ii = t.exit_ii.min(t.s1_ii);
+        t.s2_ii = t.s1_ii / 2 + 1;
+        let min_depth = (t.exit_lat.div_ceil(t.s1_ii.max(1)) + 1) as usize;
+        t.cond_buffer_depth = min_depth + gen_range(r, 2, 8);
+        let flags = synthetic_hard_flags(0.25, 256, r.next_u64());
+        let res = simulate_ee(&t, &SimConfig::default(), &flags);
+        prop_assert(res.deadlock.is_none(), "deadlock with sized buffer")?;
+        prop_assert(
+            res.s1_stall_cycles == 0,
+            &format!(
+                "sized buffer (depth {}) still stalled {} cycles",
+                t.cond_buffer_depth, res.s1_stall_cycles
+            ),
+        )
+    });
+}
+
+#[test]
+fn prop_fault_injection_degrades_gracefully() {
+    // Injected decision jitter and DMA stalls must never deadlock a
+    // properly-sized design, never lose samples, and never *increase*
+    // throughput relative to the fault-free run.
+    use atheena::sim::engine::{simulate_ee_faults, FaultModel};
+    check(80, |r| {
+        let mut t = random_timing(r);
+        t.exit_ii = t.exit_ii.min(t.s1_ii);
+        t.cond_buffer_depth =
+            (t.exit_lat.div_ceil(t.s1_ii.max(1)) + 3) as usize + r.below(16);
+        let n = 128;
+        let flags = random_flags(r, n);
+        let clean = simulate_ee(&t, &SimConfig::default(), &flags);
+        let faults = FaultModel {
+            decision_jitter: r.below(500) as u64,
+            dma_stall_prob: 0.2 * r.f64(),
+            dma_stall_cycles: r.below(1000) as u64,
+            seed: r.next_u64(),
+        };
+        let faulty = simulate_ee_faults(&t, &SimConfig::default(), &flags, &faults);
+        prop_assert(faulty.deadlock.is_none(), "faults caused deadlock")?;
+        prop_assert(faulty.traces.len() == n, "faults lost samples")?;
+        prop_assert(
+            faulty.total_cycles >= clean.total_cycles,
+            "faults made the design faster",
+        )
+    });
+}
