@@ -5,7 +5,8 @@
 //!
 //!     cargo run --release --example buffer_sizing
 
-use atheena::coordinator::toolflow::{run_toolflow, synthetic_hard_flags, ToolflowOptions};
+use atheena::coordinator::pipeline::Toolflow;
+use atheena::coordinator::toolflow::{synthetic_hard_flags, ToolflowOptions};
 use atheena::ir::Network;
 use atheena::resources::Board;
 use atheena::sdf::buffering;
@@ -16,7 +17,9 @@ fn main() -> anyhow::Result<()> {
         "artifacts/networks/blenet.json",
     ))?;
     let opts = ToolflowOptions::new(Board::zc706());
-    let result = run_toolflow(&net, &opts, None)?;
+    // The study needs the realized designs (mappings + timings), not the
+    // measurements — stop the pipeline at the `Realized` stage.
+    let result = Toolflow::new(&net, &opts)?.sweep()?.combine()?.realize()?;
     let best = result
         .best_design()
         .ok_or_else(|| anyhow::anyhow!("no design"))?;

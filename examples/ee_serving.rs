@@ -15,7 +15,8 @@
 //! Output is recorded in EXPERIMENTS.md §End-to-end.
 
 use atheena::coordinator::batch::BatchHost;
-use atheena::coordinator::toolflow::{run_toolflow, ToolflowOptions};
+use atheena::coordinator::pipeline::Realized;
+use atheena::coordinator::toolflow::ToolflowOptions;
 use atheena::coordinator::{Server, ServerConfig};
 use atheena::data::TestSet;
 use atheena::resources::Board;
@@ -34,14 +35,16 @@ fn main() -> anyhow::Result<()> {
         ts.hard_fraction()
     );
 
-    // ---- toolflow: pick the design ----
+    // ---- toolflow: pick the design (cached across runs) ----
     let opts = ToolflowOptions::new(Board::zc706());
-    let result = run_toolflow(&net, &opts, None)?;
+    let (realized, cached) = Realized::load_or_run(&store.design_cache()?, &net, &opts)?;
+    let result = realized.measure(None)?.into_result();
     let best = result
         .best_design()
         .ok_or_else(|| anyhow::anyhow!("no design"))?;
     println!(
-        "design: {:.0}% budget, buffer depth {}, predicted {:.0} samples/s at p",
+        "design ({}): {:.0}% budget, buffer depth {}, predicted {:.0} samples/s at p",
+        if cached { "design-cache hit, no DSE" } else { "realized fresh" },
         best.budget_fraction * 100.0,
         best.cond_buffer_depth,
         best.combined.throughput_at_p

@@ -1,14 +1,16 @@
 //! Quickstart: run the complete ATHEENA toolflow on the exported B-LeNet
-//! and print the chosen design.
+//! through the staged pipeline API and print the chosen design.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 //!
-//! This exercises: network JSON parsing -> CDFG lowering -> per-stage
-//! simulated-annealing DSE -> TAP combination (Eq. 1) -> Conditional
-//! Buffer sizing (Fig. 7) -> design manifest + stitch checks -> simulated
-//! board measurement at q = 20/25/30%.
+//! This exercises every stage as a typed artifact: network JSON parsing
+//! -> `Lowered` (CDFG lowering) -> `Curves` (parallel per-stage
+//! simulated-annealing DSE) -> `Combined` (TAP combination, Eq. 1) ->
+//! `Realized` (Conditional Buffer sizing + design manifest + stitch
+//! checks) -> `Measured` (simulated board measurement at q = 20/25/30%).
 
-use atheena::coordinator::toolflow::{run_toolflow, ToolflowOptions};
+use atheena::coordinator::pipeline::Toolflow;
+use atheena::coordinator::toolflow::ToolflowOptions;
 use atheena::ir::Network;
 use atheena::resources::Board;
 
@@ -27,19 +29,55 @@ fn main() -> anyhow::Result<()> {
 
     let board = Board::zc706();
     let opts = ToolflowOptions::new(board.clone());
-    let result = run_toolflow(&net, &opts, None)?;
 
+    // ---- stage by stage, timing each artifact ----
+    let t0 = std::time::Instant::now();
+    let lowered = Toolflow::new(&net, &opts)?;
     println!(
-        "\nTAP curves: baseline {} pts / stage1 {} pts / stage2 {} pts",
-        result.baseline_curve.points.len(),
-        result.stage1_curve.points.len(),
-        result.stage2_curve.points.len()
+        "\n[lower]   EE graph {} nodes, baseline {} nodes ({:.1?})",
+        lowered.ee_cdfg.nodes.len(),
+        lowered.base_cdfg.nodes.len(),
+        t0.elapsed()
     );
+
+    let t1 = std::time::Instant::now();
+    let curves = lowered.sweep()?;
+    println!(
+        "[sweep]   TAP curves: baseline {} pts / stage1 {} pts / stage2 {} pts ({:.1?}, parallel)",
+        curves.baseline_curve.points.len(),
+        curves.stage1_curve.points.len(),
+        curves.stage2_curve.points.len(),
+        t1.elapsed()
+    );
+
+    let t2 = std::time::Instant::now();
+    let combined = curves.combine()?;
+    println!(
+        "[combine] {} feasible Eq.1 budget splits ({:.1?})",
+        combined.choices.len(),
+        t2.elapsed()
+    );
+
+    let t3 = std::time::Instant::now();
+    let realized = combined.realize()?;
+    println!(
+        "[realize] {} designs sized + stitched ({:.1?})",
+        realized.designs.len(),
+        t3.elapsed()
+    );
+
+    let t4 = std::time::Instant::now();
+    let result = realized.measure(None)?.into_result();
+    println!("[measure] simulated board sweep done ({:.1?})", t4.elapsed());
 
     let best = result
         .best_design()
         .ok_or_else(|| anyhow::anyhow!("no feasible design"))?;
-    println!("\nchosen ATHEENA design (budget {:.0}% of {}):", best.budget_fraction * 100.0, board.name);
+    println!(
+        "\nchosen ATHEENA design (budget {:.0}% of {}):",
+        best.budget_fraction * 100.0,
+        board.name
+    );
     println!("  resources: {}", best.total_resources);
     println!(
         "  stage-1 II {} cyc / stage-2 II {} cyc / buffer depth {}",

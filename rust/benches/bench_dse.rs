@@ -3,7 +3,10 @@
 //!
 //!     cargo bench --bench bench_dse
 
-use atheena::dse::{anneal, sweep_budgets, AnnealConfig, Problem, ProblemKind, SweepConfig};
+use atheena::dse::{
+    anneal, sweep_budgets, sweep_budgets_parallel, AnnealConfig, Problem, ProblemKind,
+    SweepConfig,
+};
 use atheena::ir::network::testnet;
 use atheena::ir::Cdfg;
 use atheena::resources::Board;
@@ -42,6 +45,17 @@ fn main() {
     once("sweep/fig9a-stage1+stage2-curves", || {
         let a = sweep_budgets(ProblemKind::Stage1, &ee_cdfg, &board, &sweep);
         let b = sweep_budgets(ProblemKind::Stage2, &ee_cdfg, &board, &sweep);
+        (a, b)
+    });
+
+    // Scoped-thread sweep (the pipeline's `Curves` stage): same curves,
+    // one anneal task per budget fraction drained by a worker pool.
+    once("sweep/fig9a-baseline-curve/parallel", || {
+        sweep_budgets_parallel(ProblemKind::Baseline, &base_cdfg, &board, &sweep)
+    });
+    once("sweep/fig9a-stage1+stage2-curves/parallel", || {
+        let a = sweep_budgets_parallel(ProblemKind::Stage1, &ee_cdfg, &board, &sweep);
+        let b = sweep_budgets_parallel(ProblemKind::Stage2, &ee_cdfg, &board, &sweep);
         (a, b)
     });
 }

@@ -1,10 +1,12 @@
 //! End-to-end benchmarks — the Table IV generator: full toolflow wall
-//! time per network/board, plus the batched-host run of Table III.
+//! time per network/board via the staged pipeline (per-stage timings +
+//! parallel-vs-sequential sweep), plus the batched-host run of Table III.
 //!
 //! Uses exported artifacts when present, else the built-in test network.
 //!
 //!     cargo bench --bench bench_e2e
 
+use atheena::coordinator::pipeline::Toolflow;
 use atheena::coordinator::toolflow::{run_toolflow, ToolflowOptions};
 use atheena::ir::network::testnet;
 use atheena::ir::Network;
@@ -23,6 +25,30 @@ fn main() -> anyhow::Result<()> {
     once("toolflow/testnet/full-schedule", || {
         run_toolflow(&net, &ToolflowOptions::new(Board::zc706()), None).unwrap()
     });
+
+    // Staged breakdown: where the wall time goes, and what the scoped-
+    // thread sweep buys over the sequential reference path.
+    let opts = ToolflowOptions::new(Board::zc706());
+    once("pipeline/testnet/sweep-parallel", || {
+        Toolflow::new(&net, &opts).unwrap().sweep().unwrap()
+    });
+    once("pipeline/testnet/sweep-sequential", || {
+        Toolflow::new(&net, &opts)
+            .unwrap()
+            .sweep_sequential()
+            .unwrap()
+    });
+    let (realized, _) = once("pipeline/testnet/combine+realize", || {
+        Toolflow::new(&net, &opts)
+            .unwrap()
+            .sweep()
+            .unwrap()
+            .combine()
+            .unwrap()
+            .realize()
+            .unwrap()
+    });
+    once("pipeline/testnet/measure", || realized.measure(None).unwrap());
 
     if !artifacts.join("networks/blenet.json").exists() {
         println!("bench_e2e: artifacts missing, exported-network benches skipped");

@@ -1,8 +1,12 @@
 //! L3 coordinator: the end-to-end ATHEENA flow and the inference hosts.
 //!
-//! * [`toolflow`] — network JSON → CDFG → per-stage DSE → TAP combine →
-//!   buffer sizing → design manifest → simulated "board" measurement
-//!   (Fig. 5's pipeline, minus Vivado which the simulator replaces).
+//! * [`pipeline`] — the staged toolflow: network JSON → `Lowered` →
+//!   `Curves` (parallel per-stage DSE) → `Combined` (Eq. 1) →
+//!   `Realized` (buffer sizing + manifests, the cacheable artifact) →
+//!   `Measured` (simulated "board" measurement). Fig. 5's flow, minus
+//!   Vivado which the simulator replaces.
+//! * [`toolflow`] — the legacy monolithic entry point, now a thin
+//!   wrapper over the pipeline, plus the shared option/result types.
 //! * [`batch`]    — the generated host code's batch-inference loop: DMA
 //!   model + PJRT numerics, accuracy + exit-statistics accounting.
 //! * [`server`]   — a threaded streaming-serving front end: a dynamic
@@ -10,9 +14,14 @@
 //!   stage-2 pool (Python never on this path).
 
 pub mod batch;
+pub mod pipeline;
 pub mod server;
 pub mod toolflow;
 
 pub use batch::{BatchHost, BatchReport, PjrtOracle};
+pub use pipeline::{
+    fingerprint, Combined, CombinedChoice, Curves, Lowered, Measured, Realized,
+    RealizedBaseline, RealizedDesign, Toolflow,
+};
 pub use server::{Server, ServerConfig, ServerStats};
 pub use toolflow::{run_toolflow, ChosenDesign, ToolflowOptions, ToolflowResult};

@@ -1,0 +1,865 @@
+//! The staged toolflow pipeline (paper Fig. 5) as a typed, resumable
+//! chain of artifacts:
+//!
+//! ```text
+//! Toolflow::new(net, opts)         -> Lowered    (CDFG lowering)
+//!   .sweep()                       -> Curves     (per-stage TAP sweeps, parallel)
+//!   .combine()                     -> Combined   (Eq. 1 budget splits + merged mappings)
+//!   .realize()                     -> Realized   (buffer sizing, manifests, timing)
+//!   .measure(flags)                -> Measured   (simulated board measurement)
+//! ```
+//!
+//! Each stage struct owns exactly the data the next stage needs and is
+//! independently constructible, so tests and partial reruns can enter
+//! the chain anywhere. `Realized` — the expensive artifact, everything
+//! downstream of the simulated-annealing DSE — serializes to and loads
+//! from the [`DesignCache`](crate::runtime::DesignCache): `infer`,
+//! `serve`, and `report` reuse a previously realized design with **zero
+//! anneal calls** instead of re-running the DSE per invocation (the
+//! contract `dse::anneal_call_count` exists to verify).
+//!
+//! Cache keying: `(network, board, fingerprint)` where the fingerprint
+//! hashes every input that influences the realized design — the network
+//! structure and profiled p, the board, and all toolflow options. Any
+//! change to those inputs misses the cache and re-runs the pipeline.
+//!
+//! The sweeps inside [`Lowered::sweep`] are the toolflow's dominant cost
+//! and are embarrassingly parallel (each anneal is seeded per fraction
+//! via the `seed + i * 7919` scheme); they run on scoped threads and are
+//! bit-identical to the sequential path (`sweep_sequential`).
+
+use crate::dse::{
+    assemble_sweep, plan_sweep, run_tasks_parallel, AnnealResult, ProblemKind, SweepTask,
+};
+use crate::hls::{generate_design, stitch, DesignManifest};
+use crate::ir::{Cdfg, Network, StageId};
+use crate::resources::ResourceVec;
+use crate::runtime::DesignCache;
+use crate::sdf::{buffering, Folding, HwMapping};
+use crate::sim::{simulate_ee, DesignTiming, SimMetrics};
+use crate::tap::{combine, CombinedDesign, TapCurve};
+use crate::util::Json;
+
+use super::toolflow::{
+    synthetic_hard_flags, BaselineDesign, ChosenDesign, ToolflowOptions, ToolflowResult,
+};
+
+/// Bump when the serialized `Realized` layout changes; part of the cache
+/// key, so old artifacts simply miss instead of mis-parsing.
+pub const DESIGN_SCHEMA_VERSION: u32 = 1;
+
+/// Entry point of the staged pipeline.
+pub struct Toolflow;
+
+impl Toolflow {
+    /// Validate the inputs and lower the network — the first stage.
+    pub fn new(net: &Network, opts: &ToolflowOptions) -> anyhow::Result<Lowered> {
+        Lowered::new(net, opts)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stage 1: Lowered
+// ---------------------------------------------------------------------
+
+/// CDFG lowering output: the EE hardware graph (Fig. 3) and the
+/// single-stage baseline graph, plus the resolved design-time p.
+pub struct Lowered {
+    pub net: Network,
+    pub opts: ToolflowOptions,
+    /// Design-time hard-sample probability (override or profiled).
+    pub p: f64,
+    /// EE graph; Conditional Buffer depth is a placeholder until
+    /// `realize` sizes it (Fig. 7 needs chosen foldings).
+    pub ee_cdfg: Cdfg,
+    pub base_cdfg: Cdfg,
+}
+
+impl Lowered {
+    pub fn new(net: &Network, opts: &ToolflowOptions) -> anyhow::Result<Lowered> {
+        let p = opts.p_override.unwrap_or(net.p_profile);
+        anyhow::ensure!(p > 0.0 && p <= 1.0, "profiled p out of range: {p}");
+        Ok(Lowered {
+            net: net.clone(),
+            opts: opts.clone(),
+            p,
+            ee_cdfg: Cdfg::lower(net, 1),
+            base_cdfg: Cdfg::lower_baseline(net),
+        })
+    }
+
+    /// Run the three budget sweeps (baseline / stage 1 / stage 2) on
+    /// scoped worker threads — one anneal task per (kind, fraction),
+    /// drained by `available_parallelism` workers.
+    pub fn sweep(self) -> anyhow::Result<Curves> {
+        self.sweep_with(true)
+    }
+
+    /// Sequential reference path; bit-identical to [`Lowered::sweep`].
+    pub fn sweep_sequential(self) -> anyhow::Result<Curves> {
+        self.sweep_with(false)
+    }
+
+    fn sweep_with(self, parallel: bool) -> anyhow::Result<Curves> {
+        let board = &self.opts.board;
+        let cfg = &self.opts.sweep;
+        let mut tasks: Vec<SweepTask> = Vec::new();
+        tasks.extend(plan_sweep(ProblemKind::Baseline, &self.base_cdfg, board, cfg));
+        tasks.extend(plan_sweep(ProblemKind::Stage1, &self.ee_cdfg, board, cfg));
+        tasks.extend(plan_sweep(ProblemKind::Stage2, &self.ee_cdfg, board, cfg));
+
+        let results: Vec<AnnealResult> = if parallel {
+            run_tasks_parallel(&tasks)
+        } else {
+            tasks
+                .iter()
+                .map(|t| crate::dse::anneal(&t.problem, &t.config))
+                .collect()
+        };
+
+        let per_kind = cfg.fractions.len();
+        let mut it = results.into_iter();
+        let base: Vec<AnnealResult> = it.by_ref().take(per_kind).collect();
+        let s1: Vec<AnnealResult> = it.by_ref().take(per_kind).collect();
+        let s2: Vec<AnnealResult> = it.collect();
+
+        let (baseline_curve, base_results) = assemble_sweep(cfg, base);
+        let (stage1_curve, s1_results) = assemble_sweep(cfg, s1);
+        let (stage2_curve, s2_results) = assemble_sweep(cfg, s2);
+        anyhow::ensure!(
+            !stage1_curve.is_empty() && !stage2_curve.is_empty(),
+            "DSE produced no feasible stage designs"
+        );
+        Ok(Curves {
+            net: self.net,
+            opts: self.opts,
+            p: self.p,
+            ee_cdfg: self.ee_cdfg,
+            baseline_curve,
+            stage1_curve,
+            stage2_curve,
+            base_results,
+            s1_results,
+            s2_results,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stage 2: Curves
+// ---------------------------------------------------------------------
+
+/// Per-stage TAP curves plus the raw annealer results each curve point
+/// links back into (`TapPoint::source`).
+pub struct Curves {
+    pub net: Network,
+    pub opts: ToolflowOptions,
+    pub p: f64,
+    pub ee_cdfg: Cdfg,
+    pub baseline_curve: TapCurve,
+    pub stage1_curve: TapCurve,
+    pub stage2_curve: TapCurve,
+    pub base_results: Vec<AnnealResult>,
+    pub s1_results: Vec<AnnealResult>,
+    pub s2_results: Vec<AnnealResult>,
+}
+
+/// One Eq. 1 pick: the combined design for a budget fraction plus the
+/// merged full-CDFG mapping (buffer not yet sized).
+pub struct CombinedChoice {
+    pub budget_fraction: f64,
+    pub combined: CombinedDesign,
+    pub mapping: HwMapping,
+}
+
+impl Curves {
+    /// Apply Eq. 1 at every budget fraction: pick the optimal
+    /// (stage-1, stage-2) split and merge the two annealed foldings into
+    /// one full-CDFG mapping. Fractions with no feasible pair are
+    /// skipped here (matching the monolithic flow).
+    pub fn combine(self) -> anyhow::Result<Combined> {
+        let board = &self.opts.board;
+        let mut choices = Vec::new();
+        for &frac in &self.opts.sweep.fractions {
+            let budget = board.budget(frac);
+            let Some(comb) = combine(&self.stage1_curve, &self.stage2_curve, self.p, &budget)
+            else {
+                continue;
+            };
+            let s1 = &self.s1_results[comb.stage1.source];
+            let s2 = &self.s2_results[comb.stage2.source];
+            let mapping = merge_mappings(&self.ee_cdfg, s1, s2);
+            choices.push(CombinedChoice {
+                budget_fraction: frac,
+                combined: comb,
+                mapping,
+            });
+        }
+        Ok(Combined {
+            net: self.net,
+            opts: self.opts,
+            p: self.p,
+            baseline_curve: self.baseline_curve,
+            stage1_curve: self.stage1_curve,
+            stage2_curve: self.stage2_curve,
+            base_results: self.base_results,
+            choices,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stage 3: Combined
+// ---------------------------------------------------------------------
+
+/// Eq. 1 output: one merged (unsized) mapping per feasible budget
+/// fraction, plus everything needed to realize the baselines.
+pub struct Combined {
+    pub net: Network,
+    pub opts: ToolflowOptions,
+    pub p: f64,
+    pub baseline_curve: TapCurve,
+    pub stage1_curve: TapCurve,
+    pub stage2_curve: TapCurve,
+    pub base_results: Vec<AnnealResult>,
+    pub choices: Vec<CombinedChoice>,
+}
+
+impl Combined {
+    /// Size the Conditional Buffer (Fig. 7 + robustness margin),
+    /// re-check budgets with the sized BRAM, emit + stitch-verify the
+    /// design manifests, and extract section timings. Designs that no
+    /// longer fit even at the deadlock-free minimum margin are dropped.
+    pub fn realize(self) -> anyhow::Result<Realized> {
+        let board = &self.opts.board;
+
+        let baselines: Vec<RealizedBaseline> = self
+            .baseline_curve
+            .points
+            .iter()
+            .map(|pt| {
+                let r = &self.base_results[pt.source];
+                RealizedBaseline {
+                    budget_fraction: pt.budget_fraction,
+                    throughput_predicted: pt.throughput,
+                    timing: DesignTiming::from_baseline_mapping(&r.mapping),
+                    total_resources: pt.resources,
+                    mapping: r.mapping.clone(),
+                }
+            })
+            .collect();
+
+        let mut designs = Vec::new();
+        for choice in self.choices {
+            let mut mapping = choice.mapping;
+            let budget = board.budget(choice.budget_fraction);
+
+            // Buffer sizing (Fig. 7) + robustness margin.
+            let mut depth = buffering::size_cond_buffer(&mut mapping, self.opts.buffer_margin);
+
+            // Re-check the budget with the sized buffer's BRAM; if it no
+            // longer fits, shrink the margin down to the deadlock-free
+            // minimum before giving up (the paper notes BRAM is the cost
+            // of robustness). Record the depth actually sized in, not
+            // the pre-shrink one.
+            let mut total = mapping.total_resources();
+            if !total.fits_in(&budget) {
+                depth = buffering::size_cond_buffer(&mut mapping, 0);
+                total = mapping.total_resources();
+                if !total.fits_in(&budget) {
+                    continue;
+                }
+            }
+
+            let manifest = generate_design(&mapping, false);
+            let stitch_report = stitch(&manifest);
+            anyhow::ensure!(
+                stitch_report.ok(),
+                "generated design failed stitch checks: {:?}",
+                stitch_report.errors
+            );
+            let timing = DesignTiming::from_ee_mapping(&mapping);
+
+            designs.push(RealizedDesign {
+                budget_fraction: choice.budget_fraction,
+                combined: choice.combined,
+                cond_buffer_depth: depth,
+                total_resources: total,
+                manifest,
+                timing,
+                mapping,
+            });
+        }
+        anyhow::ensure!(!designs.is_empty(), "no feasible combined design");
+
+        Ok(Realized {
+            net: self.net,
+            opts: self.opts,
+            p: self.p,
+            baseline_curve: self.baseline_curve,
+            stage1_curve: self.stage1_curve,
+            stage2_curve: self.stage2_curve,
+            baselines,
+            designs,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stage 4: Realized
+// ---------------------------------------------------------------------
+
+/// A realized baseline design point (pre-measurement).
+#[derive(Clone, Debug)]
+pub struct RealizedBaseline {
+    pub budget_fraction: f64,
+    pub throughput_predicted: f64,
+    pub mapping: HwMapping,
+    pub timing: DesignTiming,
+    pub total_resources: ResourceVec,
+}
+
+/// A realized EE design point (pre-measurement): sized, stitched, timed.
+#[derive(Clone, Debug)]
+pub struct RealizedDesign {
+    pub budget_fraction: f64,
+    pub combined: CombinedDesign,
+    /// Merged full-CDFG mapping with the buffer sized in.
+    pub mapping: HwMapping,
+    pub manifest: DesignManifest,
+    pub timing: DesignTiming,
+    pub cond_buffer_depth: usize,
+    pub total_resources: ResourceVec,
+}
+
+/// Everything downstream of the DSE: the cacheable artifact. Saving and
+/// loading this is what makes repeat `infer`/`serve`/`report` runs free
+/// of anneal calls.
+pub struct Realized {
+    pub net: Network,
+    pub opts: ToolflowOptions,
+    pub p: f64,
+    pub baseline_curve: TapCurve,
+    pub stage1_curve: TapCurve,
+    pub stage2_curve: TapCurve,
+    pub baselines: Vec<RealizedBaseline>,
+    pub designs: Vec<RealizedDesign>,
+}
+
+impl Realized {
+    /// Highest predicted-throughput design (same rule as
+    /// `ToolflowResult::best_design`).
+    pub fn best_design(&self) -> Option<&RealizedDesign> {
+        self.designs.iter().max_by(|a, b| {
+            a.combined
+                .throughput_at_p
+                .total_cmp(&b.combined.throughput_at_p)
+        })
+    }
+
+    /// Simulated board measurement (the paper's §IV-A loop): every
+    /// baseline at the configured batch, every EE design at every
+    /// requested q. `hard_flags_for_q` supplies test-set-backed flags;
+    /// `None` falls back to synthetic exact-count placement.
+    pub fn measure(
+        &self,
+        mut hard_flags_for_q: Option<&mut dyn FnMut(f64, usize) -> Vec<bool>>,
+    ) -> anyhow::Result<Measured> {
+        let opts = &self.opts;
+        let baseline_designs: Vec<BaselineDesign> = self
+            .baselines
+            .iter()
+            .map(|b| {
+                let sim = crate::sim::simulate_baseline(&b.timing, &opts.sim, opts.batch);
+                BaselineDesign {
+                    budget_fraction: b.budget_fraction,
+                    throughput_predicted: b.throughput_predicted,
+                    mapping: b.mapping.clone(),
+                    total_resources: b.total_resources,
+                    measured: SimMetrics::from_result(&sim, opts.sim.clock_hz),
+                }
+            })
+            .collect();
+
+        let mut designs = Vec::new();
+        for d in &self.designs {
+            let mut measured = Vec::new();
+            for &q in &opts.q_values {
+                let flags = match hard_flags_for_q.as_mut() {
+                    Some(f) => f(q, opts.batch),
+                    None => synthetic_hard_flags(q, opts.batch, opts.seed ^ (q * 1e4) as u64),
+                };
+                let sim = simulate_ee(&d.timing, &opts.sim, &flags);
+                measured.push((q, SimMetrics::from_result(&sim, opts.sim.clock_hz)));
+            }
+            designs.push(ChosenDesign {
+                budget_fraction: d.budget_fraction,
+                combined: d.combined.clone(),
+                mapping: d.mapping.clone(),
+                manifest: d.manifest.clone(),
+                timing: d.timing,
+                cond_buffer_depth: d.cond_buffer_depth,
+                total_resources: d.total_resources,
+                measured,
+            });
+        }
+        anyhow::ensure!(!designs.is_empty(), "no feasible combined design");
+
+        Ok(Measured {
+            network: self.net.name.clone(),
+            p: self.p,
+            baseline_curve: self.baseline_curve.clone(),
+            stage1_curve: self.stage1_curve.clone(),
+            stage2_curve: self.stage2_curve.clone(),
+            baseline_designs,
+            designs,
+        })
+    }
+
+    // ---- caching -----------------------------------------------------
+
+    /// Serialize to the design-artifact document. Mappings are stored as
+    /// folding vectors — the CDFGs are deterministic re-lowerings of the
+    /// network, so manifests and timings are reconstructed, not stored.
+    pub fn to_json(&self) -> Json {
+        let foldings = |m: &HwMapping| -> Json {
+            Json::arr(m.foldings.iter().map(|f| {
+                Json::arr(vec![
+                    Json::num(f.coarse_in as f64),
+                    Json::num(f.coarse_out as f64),
+                    Json::num(f.fine as f64),
+                ])
+            }))
+        };
+        let baselines = self.baselines.iter().map(|b| {
+            Json::obj(vec![
+                ("budget_fraction", Json::Num(b.budget_fraction)),
+                ("throughput_predicted", Json::Num(b.throughput_predicted)),
+                ("total_resources", b.total_resources.to_json()),
+                ("foldings", foldings(&b.mapping)),
+            ])
+        });
+        let designs = self.designs.iter().map(|d| {
+            Json::obj(vec![
+                ("budget_fraction", Json::Num(d.budget_fraction)),
+                ("combined", d.combined.to_json()),
+                ("cond_buffer_depth", Json::num(d.cond_buffer_depth as f64)),
+                ("total_resources", d.total_resources.to_json()),
+                ("foldings", foldings(&d.mapping)),
+            ])
+        });
+        Json::obj(vec![
+            ("schema", Json::num(DESIGN_SCHEMA_VERSION as f64)),
+            ("network", Json::str(self.net.name.clone())),
+            ("board", Json::str(self.opts.board.name)),
+            ("fingerprint", Json::str(fingerprint(&self.net, &self.opts))),
+            ("p", Json::Num(self.p)),
+            (
+                "curves",
+                Json::obj(vec![
+                    ("baseline", self.baseline_curve.to_json()),
+                    ("stage1", self.stage1_curve.to_json()),
+                    ("stage2", self.stage2_curve.to_json()),
+                ]),
+            ),
+            ("baselines", Json::arr(baselines)),
+            ("designs", Json::arr(designs)),
+        ])
+    }
+
+    /// Rebuild a `Realized` from a design-artifact document. The caller
+    /// supplies the same network and options the artifact was built
+    /// from (enforced via the fingerprint); CDFGs are re-lowered and
+    /// manifests/timings regenerated from the stored foldings.
+    pub fn from_json(net: &Network, opts: &ToolflowOptions, doc: &Json) -> anyhow::Result<Realized> {
+        let num = |v: &Json, k: &str| -> anyhow::Result<f64> {
+            v.req(k)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("design artifact '{k}' must be a number"))
+        };
+        anyhow::ensure!(
+            num(doc, "schema")? as u32 == DESIGN_SCHEMA_VERSION,
+            "design artifact schema mismatch"
+        );
+        let fp = fingerprint(net, opts);
+        anyhow::ensure!(
+            doc.req("fingerprint")?.as_str() == Some(fp.as_str()),
+            "design artifact fingerprint mismatch (stale options or network)"
+        );
+
+        let load_foldings = |v: &Json, cdfg: &Cdfg| -> anyhow::Result<HwMapping> {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'foldings' must be an array"))?;
+            anyhow::ensure!(
+                arr.len() == cdfg.nodes.len(),
+                "folding count {} does not match CDFG ({} nodes)",
+                arr.len(),
+                cdfg.nodes.len()
+            );
+            let mut mapping = HwMapping::minimal(cdfg.clone());
+            for (i, f) in arr.iter().enumerate() {
+                let t = f
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("folding must be a 3-array"))?;
+                anyhow::ensure!(t.len() == 3, "folding must be a 3-array");
+                let g = Folding {
+                    coarse_in: t[0].as_usize().unwrap_or(0),
+                    coarse_out: t[1].as_usize().unwrap_or(0),
+                    fine: t[2].as_usize().unwrap_or(0),
+                };
+                anyhow::ensure!(
+                    mapping.spaces[i].contains(&g),
+                    "folding {g:?} outside node {i}'s space"
+                );
+                mapping.foldings[i] = g;
+            }
+            Ok(mapping)
+        };
+
+        let ee_cdfg = Cdfg::lower(net, 1);
+        let base_cdfg = Cdfg::lower_baseline(net);
+        let curves = doc.req("curves")?;
+
+        let mut baselines = Vec::new();
+        for b in doc
+            .req("baselines")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'baselines' must be an array"))?
+        {
+            let mapping = load_foldings(b.req("foldings")?, &base_cdfg)?;
+            baselines.push(RealizedBaseline {
+                budget_fraction: num(b, "budget_fraction")?,
+                throughput_predicted: num(b, "throughput_predicted")?,
+                timing: DesignTiming::from_baseline_mapping(&mapping),
+                total_resources: ResourceVec::from_json(b.req("total_resources")?)?,
+                mapping,
+            });
+        }
+
+        let mut designs = Vec::new();
+        for d in doc
+            .req("designs")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'designs' must be an array"))?
+        {
+            let mut mapping = load_foldings(d.req("foldings")?, &ee_cdfg)?;
+            let depth = num(d, "cond_buffer_depth")? as usize;
+            mapping.set_cond_buffer_depth(depth);
+            let total = ResourceVec::from_json(d.req("total_resources")?)?;
+            anyhow::ensure!(
+                mapping.total_resources() == total,
+                "design artifact resources diverge from the resource model \
+                 (stale artifact?)"
+            );
+            let manifest = generate_design(&mapping, false);
+            anyhow::ensure!(
+                stitch(&manifest).ok(),
+                "reloaded design failed stitch checks"
+            );
+            designs.push(RealizedDesign {
+                budget_fraction: num(d, "budget_fraction")?,
+                combined: CombinedDesign::from_json(d.req("combined")?)?,
+                timing: DesignTiming::from_ee_mapping(&mapping),
+                cond_buffer_depth: depth,
+                total_resources: total,
+                manifest,
+                mapping,
+            });
+        }
+        anyhow::ensure!(!designs.is_empty(), "design artifact holds no designs");
+
+        Ok(Realized {
+            net: net.clone(),
+            opts: opts.clone(),
+            p: num(doc, "p")?,
+            baseline_curve: TapCurve::from_json(curves.req("baseline")?)?,
+            stage1_curve: TapCurve::from_json(curves.req("stage1")?)?,
+            stage2_curve: TapCurve::from_json(curves.req("stage2")?)?,
+            baselines,
+            designs,
+        })
+    }
+
+    /// Save into a design cache; returns the path written.
+    pub fn save(&self, cache: &DesignCache) -> anyhow::Result<std::path::PathBuf> {
+        cache.store(
+            &self.net.name,
+            self.opts.board.name,
+            &fingerprint(&self.net, &self.opts),
+            &self.to_json(),
+        )
+    }
+
+    /// Load from a design cache; `Ok(None)` on miss. A present-but-
+    /// invalid artifact (schema drift, resource-model divergence) is
+    /// evicted and reported as a miss rather than failing the flow.
+    pub fn load(
+        cache: &DesignCache,
+        net: &Network,
+        opts: &ToolflowOptions,
+    ) -> anyhow::Result<Option<Realized>> {
+        let fp = fingerprint(net, opts);
+        let Some(doc) = cache.load(&net.name, opts.board.name, &fp)? else {
+            return Ok(None);
+        };
+        match Realized::from_json(net, opts, &doc) {
+            Ok(r) => Ok(Some(r)),
+            Err(e) => {
+                eprintln!(
+                    "[design-cache] evicting invalid artifact for '{}' on {}: {e}",
+                    net.name, opts.board.name
+                );
+                cache.evict(&net.name, opts.board.name, &fp)?;
+                Ok(None)
+            }
+        }
+    }
+
+    /// Load from cache or run the full pipeline (sweep → combine →
+    /// realize) and save the result. The workhorse behind `infer`,
+    /// `serve`, and `report`.
+    pub fn load_or_run(
+        cache: &DesignCache,
+        net: &Network,
+        opts: &ToolflowOptions,
+    ) -> anyhow::Result<(Realized, bool)> {
+        if let Some(r) = Realized::load(cache, net, opts)? {
+            return Ok((r, true));
+        }
+        let r = Toolflow::new(net, opts)?.sweep()?.combine()?.realize()?;
+        r.save(cache)?;
+        Ok((r, false))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stage 5: Measured
+// ---------------------------------------------------------------------
+
+/// Simulated board measurements for every realized design — the final
+/// stage, isomorphic to the legacy [`ToolflowResult`].
+pub struct Measured {
+    pub network: String,
+    pub p: f64,
+    pub baseline_curve: TapCurve,
+    pub stage1_curve: TapCurve,
+    pub stage2_curve: TapCurve,
+    pub baseline_designs: Vec<BaselineDesign>,
+    pub designs: Vec<ChosenDesign>,
+}
+
+impl Measured {
+    /// Convert into the legacy result type `run_toolflow` returns.
+    pub fn into_result(self) -> ToolflowResult {
+        ToolflowResult {
+            network: self.network,
+            p: self.p,
+            baseline_curve: self.baseline_curve,
+            stage1_curve: self.stage1_curve,
+            stage2_curve: self.stage2_curve,
+            baseline_designs: self.baseline_designs,
+            designs: self.designs,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared helpers
+// ---------------------------------------------------------------------
+
+/// Merge per-stage annealed foldings into one full-CDFG mapping
+/// (stage-1/exit/egress foldings from the stage-1 optimum, stage-2 from
+/// the stage-2 optimum).
+pub fn merge_mappings(cdfg: &Cdfg, s1: &AnnealResult, s2: &AnnealResult) -> HwMapping {
+    let mut merged = HwMapping::minimal(cdfg.clone());
+    for node in &cdfg.nodes {
+        let from = match node.stage {
+            StageId::Stage1 | StageId::ExitBranch | StageId::Egress => &s1.mapping,
+            StageId::Stage2 => &s2.mapping,
+        };
+        merged.foldings[node.id] = from.foldings[node.id];
+    }
+    merged
+}
+
+/// Cache fingerprint over every input that shapes a *realized* design:
+/// network structure + profiled p, board, and the design-time toolflow
+/// options (sweep ladder + anneal schedule, buffer margin, p override).
+/// Measurement-only options — `q_values`, `batch`, `sim`, `seed` — are
+/// deliberately excluded: they are consumed exclusively by
+/// `Realized::measure`, which always re-runs, so keying on them would
+/// only defeat the cache. FNV-1a over a canonical field string; floats
+/// contribute their exact bit patterns.
+pub fn fingerprint(net: &Network, opts: &ToolflowOptions) -> String {
+    let mut s = String::new();
+    let mut push = |part: &str| {
+        s.push_str(part);
+        s.push('|');
+    };
+    let f = |x: f64| format!("{:016x}", x.to_bits());
+
+    push(&format!("schema{DESIGN_SCHEMA_VERSION}"));
+    // Board.
+    push(opts.board.name);
+    push(&format!("{}", opts.board.resources));
+    push(&f(opts.board.clock_hz));
+    // Design-time options.
+    push(&opts.p_override.map(f).unwrap_or_else(|| "none".into()));
+    for &frac in &opts.sweep.fractions {
+        push(&f(frac));
+    }
+    let a = &opts.sweep.anneal;
+    push(&format!(
+        "anneal:{}:{}:{}:{}:{}",
+        a.iterations,
+        a.restarts,
+        f(a.t0),
+        f(a.alpha),
+        a.seed
+    ));
+    push(&format!("margin{}", opts.buffer_margin));
+    // Network structure.
+    push(&net.name);
+    push(&format!("{}", net.input_shape));
+    push(&format!("classes{}", net.classes));
+    push(&f(net.c_thr));
+    push(&f(net.p_profile));
+    for (tag, group) in [
+        ("s1", &net.stage1),
+        ("exit", &net.exit_branch),
+        ("s2", &net.stage2),
+    ] {
+        for l in group {
+            push(&format!(
+                "{tag}:{}:{}:{}:{}",
+                l.op.name(),
+                l.in_shape,
+                l.out_shape,
+                l.op.weight_count(&l.in_shape)
+            ));
+        }
+    }
+
+    format!("{:016x}", fnv1a64(s.as_bytes()))
+}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::network::testnet;
+    use crate::resources::Board;
+
+    fn quick_opts() -> ToolflowOptions {
+        ToolflowOptions::quick(Board::zc706())
+    }
+
+    #[test]
+    fn staged_chain_end_to_end() {
+        // One pass through every stage transition, asserting each
+        // stage's structural contract. (run_toolflow delegates to this
+        // same chain, so its own tests cover wrapper equivalence.)
+        let net = testnet::blenet_like();
+        let opts = quick_opts();
+        let lowered = Toolflow::new(&net, &opts).unwrap();
+        assert!(lowered.ee_cdfg.nodes.len() > lowered.base_cdfg.nodes.len());
+
+        let curves = lowered.sweep().unwrap();
+        assert!(!curves.stage1_curve.is_empty() && !curves.stage2_curve.is_empty());
+        assert_eq!(curves.s1_results.len(), opts.sweep.fractions.len());
+
+        let combined = curves.combine().unwrap();
+        assert!(!combined.choices.is_empty());
+        for c in &combined.choices {
+            // Every choice links back into real sweep results.
+            assert!(c.combined.stage1.source < opts.sweep.fractions.len());
+        }
+
+        let realized = combined.realize().unwrap();
+        assert!(!realized.designs.is_empty());
+        assert!(!realized.baselines.is_empty());
+
+        let measured = realized.measure(None).unwrap().into_result();
+        assert_eq!(measured.designs.len(), realized.designs.len());
+        let best = measured.best_design().unwrap();
+        assert_eq!(best.measured.len(), opts.q_values.len());
+        assert!(best.total_resources.fits_in(&opts.board.resources));
+    }
+
+    #[test]
+    fn parallel_and_sequential_sweeps_agree() {
+        let net = testnet::blenet_like();
+        let opts = quick_opts();
+        let par = Toolflow::new(&net, &opts).unwrap().sweep().unwrap();
+        let seq = Toolflow::new(&net, &opts).unwrap().sweep_sequential().unwrap();
+        for (a, b) in [
+            (&par.baseline_curve, &seq.baseline_curve),
+            (&par.stage1_curve, &seq.stage1_curve),
+            (&par.stage2_curve, &seq.stage2_curve),
+        ] {
+            assert_eq!(a.points.len(), b.points.len());
+            for (x, y) in a.points.iter().zip(&b.points) {
+                assert_eq!(x.throughput.to_bits(), y.throughput.to_bits());
+                assert_eq!(x.resources, y.resources);
+                assert_eq!(x.source, y.source);
+            }
+        }
+    }
+
+    #[test]
+    fn recorded_buffer_depth_matches_mapping() {
+        // The margin-shrink retry must record the depth actually sized
+        // into the mapping (regression for the stale-depth bug).
+        let net = testnet::blenet_like();
+        let r = Toolflow::new(&net, &quick_opts())
+            .unwrap()
+            .sweep()
+            .unwrap()
+            .combine()
+            .unwrap()
+            .realize()
+            .unwrap();
+        for d in &r.designs {
+            assert_eq!(d.cond_buffer_depth, d.mapping.cond_buffer_depth());
+            assert_eq!(d.timing.cond_buffer_depth, d.cond_buffer_depth);
+        }
+    }
+
+    #[test]
+    fn fingerprint_sensitivity() {
+        let net = testnet::blenet_like();
+        let opts = quick_opts();
+        let base = fingerprint(&net, &opts);
+        assert_eq!(base, fingerprint(&net, &opts), "deterministic");
+
+        let mut o2 = opts.clone();
+        o2.buffer_margin += 1;
+        assert_ne!(base, fingerprint(&net, &o2), "margin must re-key");
+
+        let mut o3 = opts.clone();
+        o3.sweep.anneal.seed ^= 1;
+        assert_ne!(base, fingerprint(&net, &o3), "seed must re-key");
+
+        let mut n2 = net.clone();
+        n2.c_thr += 0.001;
+        assert_ne!(base, fingerprint(&n2, &opts), "network must re-key");
+
+        // Measurement-only options are consumed by `measure` (which
+        // always re-runs) and must NOT defeat the cache.
+        let mut o4 = opts.clone();
+        o4.q_values = vec![0.5];
+        o4.batch *= 2;
+        o4.seed ^= 0xFF;
+        o4.sim.fifo_slack += 1;
+        assert_eq!(base, fingerprint(&net, &o4), "measurement opts must not re-key");
+    }
+}

@@ -1,14 +1,23 @@
 //! The automated toolflow (paper Fig. 5): everything between "trained
 //! Early-Exit ONNX model" and "measured board results", fully automated.
+//!
+//! This module keeps the original monolithic entry point
+//! [`run_toolflow`] and its result types, but the implementation now
+//! lives in the staged pipeline (`coordinator::pipeline`): lowering →
+//! parallel TAP sweeps → Eq. 1 combination → buffer sizing/realization →
+//! simulated measurement, each stage a typed artifact. `run_toolflow` is
+//! a thin wrapper that drives the chain end to end; callers that want
+//! caching or partial reruns should use the pipeline directly.
 
-use crate::dse::{sweep_budgets, AnnealResult, ProblemKind, SweepConfig};
-use crate::hls::{generate_design, stitch, DesignManifest};
-use crate::ir::{Cdfg, Network, StageId};
 use crate::resources::{Board, ResourceVec};
-use crate::sdf::{buffering, HwMapping};
-use crate::sim::{simulate_ee, DesignTiming, SimConfig, SimMetrics};
-use crate::tap::{combine, CombinedDesign, TapCurve};
+use crate::sdf::HwMapping;
+use crate::sim::{DesignTiming, SimConfig, SimMetrics};
+use crate::tap::{CombinedDesign, TapCurve};
 use crate::util::Rng;
+use crate::{dse::SweepConfig, hls::DesignManifest};
+use crate::ir::Network;
+
+use super::pipeline::Toolflow;
 
 pub use crate::dse::annealer::AnnealResult as StageResult;
 
@@ -112,23 +121,6 @@ impl ToolflowResult {
     }
 }
 
-/// Merge per-stage annealed foldings into one full-CDFG mapping.
-fn merge_mappings(
-    cdfg: &Cdfg,
-    s1: &AnnealResult,
-    s2: &AnnealResult,
-) -> HwMapping {
-    let mut merged = HwMapping::minimal(cdfg.clone());
-    for node in &cdfg.nodes {
-        let from = match node.stage {
-            StageId::Stage1 | StageId::ExitBranch | StageId::Egress => &s1.mapping,
-            StageId::Stage2 => &s2.mapping,
-        };
-        merged.foldings[node.id] = from.foldings[node.id];
-    }
-    merged
-}
-
 /// Generate per-sample hard flags for simulated measurement when no test
 /// set is attached: exact count round(q*batch), randomly placed — the
 /// paper's sampled batches.
@@ -142,7 +134,9 @@ pub fn synthetic_hard_flags(q: f64, batch: usize, seed: u64) -> Vec<bool> {
     flags
 }
 
-/// Run the full toolflow for one network on one board.
+/// Run the full toolflow for one network on one board — a compatibility
+/// wrapper over the staged pipeline (lower → sweep → combine → realize →
+/// measure).
 ///
 /// `hard_flags_for_q`: optional provider of per-sample hard flags (the
 /// coordinator passes test-set-backed flags; None falls back to
@@ -150,111 +144,14 @@ pub fn synthetic_hard_flags(q: f64, batch: usize, seed: u64) -> Vec<bool> {
 pub fn run_toolflow(
     net: &Network,
     opts: &ToolflowOptions,
-    mut hard_flags_for_q: Option<&mut dyn FnMut(f64, usize) -> Vec<bool>>,
+    hard_flags_for_q: Option<&mut dyn FnMut(f64, usize) -> Vec<bool>>,
 ) -> anyhow::Result<ToolflowResult> {
-    let p = opts.p_override.unwrap_or(net.p_profile);
-    anyhow::ensure!(p > 0.0 && p <= 1.0, "profiled p out of range: {p}");
-    let board = &opts.board;
-
-    // ---- 1. lower ----
-    let ee_cdfg = Cdfg::lower(net, 1); // depth placeholder; sized per design
-    let base_cdfg = Cdfg::lower_baseline(net);
-
-    // ---- 2. per-stage + baseline TAP curves ----
-    let (baseline_curve, base_results) =
-        sweep_budgets(ProblemKind::Baseline, &base_cdfg, board, &opts.sweep);
-    let (stage1_curve, s1_results) =
-        sweep_budgets(ProblemKind::Stage1, &ee_cdfg, board, &opts.sweep);
-    let (stage2_curve, s2_results) =
-        sweep_budgets(ProblemKind::Stage2, &ee_cdfg, board, &opts.sweep);
-    anyhow::ensure!(
-        !stage1_curve.is_empty() && !stage2_curve.is_empty(),
-        "DSE produced no feasible stage designs"
-    );
-
-    // ---- 3. realize baseline designs (simulated measurement) ----
-    let mut baseline_designs = Vec::new();
-    for pt in &baseline_curve.points {
-        let r = &base_results[pt.source];
-        let timing = DesignTiming::from_baseline_mapping(&r.mapping);
-        let sim = crate::sim::simulate_baseline(&timing, &opts.sim, opts.batch);
-        baseline_designs.push(BaselineDesign {
-            budget_fraction: pt.budget_fraction,
-            throughput_predicted: pt.throughput,
-            mapping: r.mapping.clone(),
-            total_resources: pt.resources,
-            measured: SimMetrics::from_result(&sim, opts.sim.clock_hz),
-        });
-    }
-
-    // ---- 4. combine TAPs per budget, realize + measure EE designs ----
-    let mut designs = Vec::new();
-    for &frac in &opts.sweep.fractions {
-        let budget = board.budget(frac);
-        let Some(comb) = combine(&stage1_curve, &stage2_curve, p, &budget) else {
-            continue;
-        };
-        let s1 = &s1_results[comb.stage1.source];
-        let s2 = &s2_results[comb.stage2.source];
-        let mut mapping = merge_mappings(&ee_cdfg, s1, s2);
-
-        // Buffer sizing (Fig. 7) + robustness margin.
-        let depth = buffering::size_cond_buffer(&mut mapping, opts.buffer_margin);
-
-        // Re-check the budget with the sized buffer's BRAM; if it no
-        // longer fits, shrink the margin down to the deadlock-free
-        // minimum before giving up (the paper notes BRAM is the cost of
-        // robustness).
-        let mut total = mapping.total_resources();
-        if !total.fits_in(&budget) {
-            buffering::size_cond_buffer(&mut mapping, 0);
-            total = mapping.total_resources();
-            if !total.fits_in(&budget) {
-                continue;
-            }
-        }
-
-        let manifest = generate_design(&mapping, false);
-        let stitch_report = stitch(&manifest);
-        anyhow::ensure!(
-            stitch_report.ok(),
-            "generated design failed stitch checks: {:?}",
-            stitch_report.errors
-        );
-        let timing = DesignTiming::from_ee_mapping(&mapping);
-
-        let mut measured = Vec::new();
-        for &q in &opts.q_values {
-            let flags = match hard_flags_for_q.as_mut() {
-                Some(f) => f(q, opts.batch),
-                None => synthetic_hard_flags(q, opts.batch, opts.seed ^ (q * 1e4) as u64),
-            };
-            let sim = simulate_ee(&timing, &opts.sim, &flags);
-            measured.push((q, SimMetrics::from_result(&sim, opts.sim.clock_hz)));
-        }
-
-        designs.push(ChosenDesign {
-            budget_fraction: frac,
-            combined: comb,
-            cond_buffer_depth: depth.min(mapping.cond_buffer_depth()),
-            total_resources: total,
-            manifest,
-            timing,
-            mapping,
-            measured,
-        });
-    }
-    anyhow::ensure!(!designs.is_empty(), "no feasible combined design");
-
-    Ok(ToolflowResult {
-        network: net.name.clone(),
-        p,
-        baseline_curve,
-        stage1_curve,
-        stage2_curve,
-        baseline_designs,
-        designs,
-    })
+    Ok(Toolflow::new(net, opts)?
+        .sweep()?
+        .combine()?
+        .realize()?
+        .measure(hard_flags_for_q)?
+        .into_result())
 }
 
 #[cfg(test)]

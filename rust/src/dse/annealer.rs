@@ -11,10 +11,23 @@
 //!              decades.
 //! Schedule   : geometric cooling, multiple restarts, best-feasible kept.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use super::problem::Problem;
 use crate::sdf::folding::FoldingSpace;
 use crate::sdf::HwMapping;
 use crate::util::Rng;
+
+/// Process-wide count of [`anneal`] invocations. The pipeline's artifact
+/// cache is contractually "zero anneal calls on a warm store"; this
+/// counter lets tests (and operators, via `atheena toolflow`'s summary)
+/// verify that contract instead of trusting it.
+static ANNEAL_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Total `anneal` calls made by this process so far.
+pub fn anneal_call_count() -> u64 {
+    ANNEAL_CALLS.load(Ordering::Relaxed)
+}
 
 #[derive(Clone, Debug)]
 pub struct AnnealConfig {
@@ -161,6 +174,7 @@ fn propose(
 /// Run simulated annealing for one problem; returns the best feasible
 /// design found across all restarts (or the least-infeasible one).
 pub fn anneal(problem: &Problem, cfg: &AnnealConfig) -> AnnealResult {
+    ANNEAL_CALLS.fetch_add(1, Ordering::Relaxed);
     let mut best: Option<(f64, HwMapping)> = None; // (throughput, mapping)
     let mut best_infeasible: Option<(f64, HwMapping)> = None; // (overrun, ..)
     let mut iterations_run = 0;

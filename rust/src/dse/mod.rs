@@ -12,7 +12,10 @@ pub mod baselines;
 pub mod problem;
 pub mod sweep;
 
-pub use annealer::{anneal, AnnealConfig, AnnealResult};
+pub use annealer::{anneal, anneal_call_count, AnnealConfig, AnnealResult};
 pub use baselines::{greedy, naive_combine, random_search};
 pub use problem::{Problem, ProblemKind};
-pub use sweep::{sweep_budgets, SweepConfig};
+pub use sweep::{
+    assemble_sweep, plan_sweep, run_tasks_parallel, sweep_budgets, sweep_budgets_parallel,
+    SweepConfig, SweepTask,
+};

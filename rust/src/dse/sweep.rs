@@ -4,6 +4,17 @@
 //! constrained at different percentages in order to generate a
 //! Throughput-Area Pareto curve ... they are run ten times and the best
 //! points are chosen").
+//!
+//! A sweep is *planned* into independent [`SweepTask`]s (one anneal per
+//! budget fraction, each with its own derived seed), executed either
+//! sequentially or on scoped worker threads, and *assembled* back into a
+//! TAP curve. Because each anneal depends only on its (problem, config)
+//! pair and results are re-ordered by task index, the parallel path is
+//! bit-identical to the sequential one — the pipeline's `Curves` stage
+//! relies on this to parallelize the toolflow's dominant cost.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use super::annealer::{anneal, AnnealConfig, AnnealResult};
 use super::problem::{Problem, ProblemKind};
@@ -36,38 +47,135 @@ impl SweepConfig {
     }
 }
 
-/// Sweep one problem kind over the budget ladder, returning the TAP curve
-/// (feasible points only) plus every raw annealer result for reporting.
+/// One independent anneal of a planned sweep: a problem at one budget
+/// fraction with its derived seed.
+#[derive(Clone, Debug)]
+pub struct SweepTask {
+    pub kind: ProblemKind,
+    /// Index into the sweep's fraction ladder (drives seed derivation).
+    pub fraction_index: usize,
+    pub fraction: f64,
+    pub problem: Problem,
+    pub config: AnnealConfig,
+}
+
+/// Plan one sweep into its independent anneal tasks. Seeds follow the
+/// `seed + i * 7919` scheme so every fraction's search is decorrelated
+/// yet fully determined by the sweep config.
+pub fn plan_sweep(
+    kind: ProblemKind,
+    cdfg: &Cdfg,
+    board: &Board,
+    cfg: &SweepConfig,
+) -> Vec<SweepTask> {
+    cfg.fractions
+        .iter()
+        .enumerate()
+        .map(|(i, &frac)| {
+            let budget = board.budget(frac);
+            let problem = match kind {
+                ProblemKind::Baseline => {
+                    Problem::baseline(cdfg.clone(), budget, board.clock_hz)
+                }
+                ProblemKind::Stage1 => Problem::stage1(cdfg.clone(), budget, board.clock_hz),
+                ProblemKind::Stage2 => Problem::stage2(cdfg.clone(), budget, board.clock_hz),
+            };
+            let mut config = cfg.anneal.clone();
+            config.seed = cfg.anneal.seed.wrapping_add(i as u64 * 7919);
+            SweepTask {
+                kind,
+                fraction_index: i,
+                fraction: frac,
+                problem,
+                config,
+            }
+        })
+        .collect()
+}
+
+/// Assemble per-fraction anneal results (in ladder order) into the TAP
+/// curve (feasible points only) plus the raw results for realization.
+pub fn assemble_sweep(
+    cfg: &SweepConfig,
+    results: Vec<AnnealResult>,
+) -> (TapCurve, Vec<AnnealResult>) {
+    debug_assert_eq!(results.len(), cfg.fractions.len());
+    let mut points = Vec::new();
+    for (i, r) in results.iter().enumerate() {
+        if r.feasible {
+            points.push(TapPoint {
+                resources: r.resources,
+                throughput: r.throughput,
+                ii: r.ii,
+                budget_fraction: cfg.fractions[i],
+                source: i,
+            });
+        }
+    }
+    (TapCurve::from_points(points), results)
+}
+
+/// Run planned tasks on scoped worker threads (bounded by available
+/// parallelism), returning results in task order. Task order — not
+/// completion order — keeps the output bit-identical to a sequential run.
+pub fn run_tasks_parallel(tasks: &[SweepTask]) -> Vec<AnnealResult> {
+    let n = tasks.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(n);
+    if workers <= 1 {
+        return tasks.iter().map(|t| anneal(&t.problem, &t.config)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, AnnealResult)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = anneal(&tasks[i].problem, &tasks[i].config);
+                done.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut done = done.into_inner().unwrap();
+    done.sort_by_key(|(i, _)| *i);
+    done.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Sweep one problem kind over the budget ladder sequentially, returning
+/// the TAP curve (feasible points only) plus every raw annealer result.
 pub fn sweep_budgets(
     kind: ProblemKind,
     cdfg: &Cdfg,
     board: &Board,
     cfg: &SweepConfig,
 ) -> (TapCurve, Vec<AnnealResult>) {
-    let mut results = Vec::new();
-    let mut points = Vec::new();
-    for (i, &frac) in cfg.fractions.iter().enumerate() {
-        let budget = board.budget(frac);
-        let problem = match kind {
-            ProblemKind::Baseline => Problem::baseline(cdfg.clone(), budget, board.clock_hz),
-            ProblemKind::Stage1 => Problem::stage1(cdfg.clone(), budget, board.clock_hz),
-            ProblemKind::Stage2 => Problem::stage2(cdfg.clone(), budget, board.clock_hz),
-        };
-        let mut acfg = cfg.anneal.clone();
-        acfg.seed = cfg.anneal.seed.wrapping_add(i as u64 * 7919);
-        let r = anneal(&problem, &acfg);
-        if r.feasible {
-            points.push(TapPoint {
-                resources: r.resources,
-                throughput: r.throughput,
-                ii: r.ii,
-                budget_fraction: frac,
-                source: results.len(),
-            });
-        }
-        results.push(r);
-    }
-    (TapCurve::from_points(points), results)
+    let tasks = plan_sweep(kind, cdfg, board, cfg);
+    let results = tasks
+        .iter()
+        .map(|t| anneal(&t.problem, &t.config))
+        .collect();
+    assemble_sweep(cfg, results)
+}
+
+/// Parallel variant of [`sweep_budgets`]: same curve, computed on scoped
+/// threads (one anneal per fraction).
+pub fn sweep_budgets_parallel(
+    kind: ProblemKind,
+    cdfg: &Cdfg,
+    board: &Board,
+    cfg: &SweepConfig,
+) -> (TapCurve, Vec<AnnealResult>) {
+    let tasks = plan_sweep(kind, cdfg, board, cfg);
+    let results = run_tasks_parallel(&tasks);
+    assemble_sweep(cfg, results)
 }
 
 #[cfg(test)]
@@ -103,5 +211,34 @@ mod tests {
         let (curve, _) =
             sweep_budgets(ProblemKind::Stage2, &cdfg, &board, &SweepConfig::quick());
         assert!(!curve.points.is_empty());
+    }
+
+    #[test]
+    fn parallel_sweep_bit_identical_to_sequential() {
+        let net = testnet::blenet_like();
+        let board = Board::zc706();
+        let cfg = SweepConfig::quick();
+        for (kind, cdfg) in [
+            (ProblemKind::Baseline, Cdfg::lower_baseline(&net)),
+            (ProblemKind::Stage1, Cdfg::lower(&net, 1)),
+            (ProblemKind::Stage2, Cdfg::lower(&net, 1)),
+        ] {
+            let (seq_curve, seq_raw) = sweep_budgets(kind, &cdfg, &board, &cfg);
+            let (par_curve, par_raw) = sweep_budgets_parallel(kind, &cdfg, &board, &cfg);
+            assert_eq!(seq_curve.points.len(), par_curve.points.len());
+            for (a, b) in seq_curve.points.iter().zip(&par_curve.points) {
+                assert_eq!(a.resources, b.resources);
+                assert_eq!(a.ii, b.ii);
+                assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+                assert_eq!(a.budget_fraction.to_bits(), b.budget_fraction.to_bits());
+                assert_eq!(a.source, b.source);
+            }
+            for (a, b) in seq_raw.iter().zip(&par_raw) {
+                assert_eq!(a.ii, b.ii);
+                assert_eq!(a.resources, b.resources);
+                assert_eq!(a.feasible, b.feasible);
+                assert_eq!(a.mapping.foldings, b.mapping.foldings);
+            }
+        }
     }
 }

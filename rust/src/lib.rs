@@ -1,16 +1,46 @@
 //! # ATHEENA — A Toolflow for Hardware Early-Exit Network Automation
 //!
 //! Reproduction of Biggs, Bouganis & Constantinides (2023). The library
-//! implements the full toolflow: network IR parsing, CDFG lowering with
-//! the Early-Exit hardware layers, fpgaConvNet-style folding + resource
-//! models, simulated-annealing DSE, TAP combination (Eq. 1), Conditional
-//! Buffer sizing (Fig. 7), an event-driven streaming-dataflow simulator
-//! (the board substitute), an HLS design-manifest generator, a PJRT
-//! runtime executing the JAX/Pallas-AOT network numerics, and the batched
-//! inference / serving coordinator.
+//! implements the paper's full toolflow as a **typed, staged pipeline**
+//! (see `coordinator::pipeline`):
 //!
-//! See `DESIGN.md` for the architecture and substitution rationale and
-//! `EXPERIMENTS.md` for the paper-vs-measured record.
+//! ```text
+//! Toolflow::new(net, opts) -> Lowered -> .sweep() -> Curves
+//!     -> .combine() -> Combined -> .realize() -> Realized
+//!     -> .measure(flags) -> Measured
+//! ```
+//!
+//! * **`Lowered`** — network IR parsed and validated, then lowered into
+//!   the Early-Exit CDFG (Fig. 3) and the single-stage baseline graph.
+//! * **`Curves`** — per-stage Throughput-Area Pareto (TAP) curves from
+//!   fpgaConvNet-style simulated-annealing DSE over folding assignments.
+//!   The budget sweeps run on scoped threads, one seeded anneal per
+//!   (stage, fraction), bit-identical to the sequential path.
+//! * **`Combined`** — Eq. 1's TAP combination: the optimal
+//!   (stage-1, stage-2) resource split per budget, with the annealed
+//!   foldings merged into one full-CDFG mapping.
+//! * **`Realized`** — Conditional Buffer sizing (Fig. 7) plus margin,
+//!   budget re-check, HLS design-manifest generation and stitch checks,
+//!   pipeline-section timing extraction. This is the *cacheable*
+//!   artifact: it serializes into the `runtime::DesignCache`
+//!   (`artifacts/designs/`), so `infer`, `serve`, and `report` reuse a
+//!   previously realized design with zero anneal calls.
+//! * **`Measured`** — the event-driven streaming-dataflow simulator (the
+//!   board substitute) measures every design at the requested q ladder.
+//!
+//! The legacy monolithic entry point `coordinator::toolflow::run_toolflow`
+//! survives as a thin wrapper over this chain.
+//!
+//! Around the pipeline sit the supporting layers: network IR parsing
+//! (`ir`), folding + resource models (`sdf`, `resources`), the DSE
+//! (`dse`), TAP algebra (`tap`), the simulator (`sim`), the HLS manifest
+//! generator (`hls`), a PJRT runtime executing the JAX/Pallas-AOT network
+//! numerics (`runtime`), and the batched inference / serving coordinator
+//! (`coordinator::batch` / `coordinator::server`).
+//!
+//! See `DESIGN.md` for the architecture, the pipeline-stage contracts,
+//! and the substitution rationale, and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
 
 pub mod coordinator;
 pub mod data;

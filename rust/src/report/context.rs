@@ -1,13 +1,18 @@
 //! Shared, cached state for report generation: toolflow results are
 //! computed once per (network, board) and reused across tables/figures.
+//! Realized designs additionally persist in the on-disk design cache
+//! (`artifacts/designs/`), so re-running a report against a warm store
+//! performs zero anneal calls.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-use crate::coordinator::toolflow::{run_toolflow, ToolflowOptions, ToolflowResult};
+use crate::coordinator::pipeline::Realized;
+use crate::coordinator::toolflow::{ToolflowOptions, ToolflowResult};
 use crate::data::TestSet;
 use crate::ir::Network;
 use crate::resources::Board;
+use crate::runtime::DesignCache;
 
 pub struct ReportContext {
     pub artifacts: PathBuf,
@@ -54,14 +59,20 @@ impl ReportContext {
         }
     }
 
-    /// Toolflow result for (network, board), computed once. Simulated
-    /// measurements use test-set-backed hard flags when the artifacts'
-    /// data files are present, synthetic placement otherwise.
+    /// Toolflow result for (network, board), computed once per context
+    /// and loaded from the on-disk design cache when available (the
+    /// simulated measurement always re-runs; it is cheap and depends on
+    /// the test set). Simulated measurements use test-set-backed hard
+    /// flags when the artifacts' data files are present, synthetic
+    /// placement otherwise.
     pub fn toolflow(&mut self, name: &str, board: Board) -> anyhow::Result<&ToolflowResult> {
         let key = (name.to_string(), board.name.to_string());
         if !self.results.contains_key(&key) {
             let net = self.network(name)?;
             let opts = self.options(board);
+            let cache = DesignCache::open(self.artifacts.join("designs"))?;
+            let (realized, _cached) = Realized::load_or_run(&cache, &net, &opts)?;
+
             let ts = TestSet::load(&self.artifacts, name).ok();
             let seed = 0x51u64;
             let mut flags_fn = ts.map(|ts| {
@@ -69,13 +80,13 @@ impl ReportContext {
                     ts.batch_with_q(q, batch, seed ^ (q * 1e4) as u64).hard
                 }
             });
-            let r = run_toolflow(
-                &net,
-                &opts,
-                flags_fn
-                    .as_mut()
-                    .map(|f| f as &mut dyn FnMut(f64, usize) -> Vec<bool>),
-            )?;
+            let r = realized
+                .measure(
+                    flags_fn
+                        .as_mut()
+                        .map(|f| f as &mut dyn FnMut(f64, usize) -> Vec<bool>),
+                )?
+                .into_result();
             self.results.insert(key.clone(), r);
         }
         Ok(&self.results[&key])

@@ -123,6 +123,32 @@ impl ResourceVec {
         self.limiting(budget).1
     }
 
+    /// Serialize for design artifacts (`artifacts/designs/*.json`).
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::obj(vec![
+            ("lut", Json::num(self.lut as f64)),
+            ("ff", Json::num(self.ff as f64)),
+            ("dsp", Json::num(self.dsp as f64)),
+            ("bram", Json::num(self.bram as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &crate::util::Json) -> anyhow::Result<ResourceVec> {
+        let get = |k: &str| -> anyhow::Result<u64> {
+            v.req(k)?
+                .as_f64()
+                .map(|n| n as u64)
+                .ok_or_else(|| anyhow::anyhow!("resource '{k}' must be a number"))
+        };
+        Ok(ResourceVec {
+            lut: get("lut")?,
+            ff: get("ff")?,
+            dsp: get("dsp")?,
+            bram: get("bram")?,
+        })
+    }
+
     pub fn component(&self, kind: ResourceKind) -> u64 {
         match kind {
             ResourceKind::Lut => self.lut,

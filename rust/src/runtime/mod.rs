@@ -15,4 +15,4 @@ pub mod executor;
 pub mod store;
 
 pub use executor::{BaselineExec, Stage1Exec, Stage1Output, Stage2Exec};
-pub use store::ArtifactStore;
+pub use store::{ArtifactStore, DesignCache};

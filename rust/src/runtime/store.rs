@@ -1,10 +1,102 @@
-//! Artifact store: one PJRT client + the compiled executables per network.
+//! Artifact store: one PJRT client + the compiled executables per
+//! network, plus the file-backed [`DesignCache`] the staged pipeline
+//! saves realized designs into.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use super::executor::{BaselineExec, Stage1Exec, Stage2Exec};
 use crate::ir::Network;
+use crate::util::{json, Json};
+
+/// File-backed cache of realized toolflow designs, keyed by
+/// `(network, board, options-fingerprint)`. Deliberately independent of
+/// the PJRT client so design reuse works in builds (and on hosts) with
+/// no runtime: `infer`, `serve`, and `report` consult it before paying
+/// for a fresh DSE run.
+pub struct DesignCache {
+    pub dir: PathBuf,
+}
+
+impl DesignCache {
+    /// Open (creating if needed) a cache directory.
+    pub fn open(dir: impl Into<PathBuf>) -> anyhow::Result<DesignCache> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| anyhow::anyhow!("creating design cache {}: {e}", dir.display()))?;
+        Ok(DesignCache { dir })
+    }
+
+    /// Path a given design artifact lives at. Name components come from
+    /// untrusted network JSON, so anything outside `[A-Za-z0-9._-]` is
+    /// replaced — a name like `../evil` cannot escape the cache dir.
+    pub fn path(&self, network: &str, board: &str, fingerprint: &str) -> PathBuf {
+        let clean = |s: &str| -> String {
+            s.chars()
+                .map(|c| {
+                    if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') {
+                        c
+                    } else {
+                        '_'
+                    }
+                })
+                .collect()
+        };
+        self.dir.join(format!(
+            "{}-{}-{}.json",
+            clean(network),
+            clean(board),
+            clean(fingerprint)
+        ))
+    }
+
+    /// Store a serialized design artifact; returns the path written.
+    /// The write is atomic (temp file + rename) so a concurrent reader
+    /// can never observe a torn artifact and evict a valid entry.
+    pub fn store(
+        &self,
+        network: &str,
+        board: &str,
+        fingerprint: &str,
+        doc: &Json,
+    ) -> anyhow::Result<PathBuf> {
+        let path = self.path(network, board, fingerprint);
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        std::fs::write(&tmp, doc.to_string_pretty())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| anyhow::anyhow!("publishing {}: {e}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load a design artifact if present; `Ok(None)` on a cache miss.
+    pub fn load(
+        &self,
+        network: &str,
+        board: &str,
+        fingerprint: &str,
+    ) -> anyhow::Result<Option<Json>> {
+        let path = self.path(network, board, fingerprint);
+        if !path.is_file() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let doc = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        Ok(Some(doc))
+    }
+
+    /// Drop one cached design (used when an artifact fails validation).
+    pub fn evict(&self, network: &str, board: &str, fingerprint: &str) -> anyhow::Result<()> {
+        let path = self.path(network, board, fingerprint);
+        if path.is_file() {
+            std::fs::remove_file(&path)
+                .map_err(|e| anyhow::anyhow!("removing {}: {e}", path.display()))?;
+        }
+        Ok(())
+    }
+}
 
 /// Owns the PJRT client and every compiled executable. Compilation
 /// happens once at load; the request path only executes.
@@ -90,5 +182,11 @@ impl ArtifactStore {
         let net = self.network(name)?.clone();
         let exe = self.compile(&format!("{name}_baseline.hlo.txt"))?;
         Ok(BaselineExec::new(exe, net))
+    }
+
+    /// The design cache living under this store's artifacts directory
+    /// (`artifacts/designs/`).
+    pub fn design_cache(&self) -> anyhow::Result<DesignCache> {
+        DesignCache::open(self.artifacts_dir.join("designs"))
     }
 }

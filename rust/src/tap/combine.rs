@@ -53,6 +53,31 @@ impl CombinedDesign {
             2
         }
     }
+
+    /// Serialize for design artifacts.
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::obj(vec![
+            ("stage1", self.stage1.to_json()),
+            ("stage2", self.stage2.to_json()),
+            ("p", Json::Num(self.p)),
+            ("throughput_at_p", Json::Num(self.throughput_at_p)),
+        ])
+    }
+
+    pub fn from_json(v: &crate::util::Json) -> anyhow::Result<CombinedDesign> {
+        let num = |k: &str| -> anyhow::Result<f64> {
+            v.req(k)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("combined design '{k}' must be a number"))
+        };
+        Ok(CombinedDesign {
+            stage1: TapPoint::from_json(v.req("stage1")?)?,
+            stage2: TapPoint::from_json(v.req("stage2")?)?,
+            p: num("p")?,
+            throughput_at_p: num("throughput_at_p")?,
+        })
+    }
 }
 
 /// Eq. 1: enumerate all Pareto pairs fitting the budget and keep the

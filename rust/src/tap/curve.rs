@@ -26,6 +26,36 @@ pub struct TapPoint {
     pub source: usize,
 }
 
+impl TapPoint {
+    /// Serialize for design artifacts. `source` is preserved so a loaded
+    /// curve keeps its provenance links into the sweep that produced it.
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::obj(vec![
+            ("resources", self.resources.to_json()),
+            ("throughput", Json::Num(self.throughput)),
+            ("ii", Json::num(self.ii as f64)),
+            ("budget_fraction", Json::Num(self.budget_fraction)),
+            ("source", Json::num(self.source as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &crate::util::Json) -> anyhow::Result<TapPoint> {
+        let num = |k: &str| -> anyhow::Result<f64> {
+            v.req(k)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("tap point '{k}' must be a number"))
+        };
+        Ok(TapPoint {
+            resources: crate::resources::ResourceVec::from_json(v.req("resources")?)?,
+            throughput: num("throughput")?,
+            ii: num("ii")? as u64,
+            budget_fraction: num("budget_fraction")?,
+            source: num("source")? as usize,
+        })
+    }
+}
+
 /// A discrete TAP function: Pareto-filtered design points.
 #[derive(Clone, Debug, Default)]
 pub struct TapCurve {
@@ -74,6 +104,24 @@ impl TapCurve {
 
     pub fn max_throughput(&self) -> f64 {
         self.points.last().map(|p| p.throughput).unwrap_or(0.0)
+    }
+
+    /// Serialize the curve as its point list.
+    pub fn to_json(&self) -> crate::util::Json {
+        crate::util::Json::arr(self.points.iter().map(|p| p.to_json()))
+    }
+
+    /// Load a curve back. The stored points already went through Pareto
+    /// filtering, so they are taken verbatim (re-filtering would be a
+    /// no-op but could reorder ties).
+    pub fn from_json(v: &crate::util::Json) -> anyhow::Result<TapCurve> {
+        let points = v
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("tap curve must be an array"))?
+            .iter()
+            .map(TapPoint::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(TapCurve { points })
     }
 }
 

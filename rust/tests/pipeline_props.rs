@@ -1,0 +1,217 @@
+//! Property-style tests over the staged pipeline's invariants (bounded
+//! inputs, deterministic seeds — see the testing strategy noted in
+//! SNIPPETS.md §3): every case prints a reproducing seed on failure via
+//! the `util::proptest` harness.
+//!
+//! Invariants covered:
+//! * the TAP curves coming out of the `Curves` stage are Pareto-sound
+//!   (throughput-sorted, mutually non-dominated) and evaluate
+//!   monotonically in the budget, for randomized anneal seeds,
+//! * `synthetic_hard_flags` places an exact hard count and is a pure
+//!   permutation across seeds (seed changes placement, never count),
+//! * a `Realized` design round-trips through the design-cache
+//!   save/load path bit-identically,
+//! * measuring a cache-loaded design performs **zero** anneal calls —
+//!   the warm-store contract behind `atheena infer`/`serve`/`report`.
+
+use std::path::PathBuf;
+
+use atheena::coordinator::pipeline::{Realized, Toolflow};
+use atheena::coordinator::toolflow::{synthetic_hard_flags, ToolflowOptions};
+use atheena::dse::anneal_call_count;
+use atheena::ir::network::testnet;
+use atheena::resources::Board;
+use atheena::runtime::DesignCache;
+use atheena::util::proptest::{check, gen_range, prop_assert};
+
+/// Tests in one binary run on parallel threads, but `anneal_call_count`
+/// is process-global — serialize every anneal-running test so the
+/// zero-anneal assertion cannot observe a neighbour's DSE.
+static DSE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn dse_guard() -> std::sync::MutexGuard<'static, ()> {
+    DSE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A fast-but-real schedule: full pipeline semantics, test-sized DSE.
+fn tiny_opts(seed: u64) -> ToolflowOptions {
+    let mut opts = ToolflowOptions::quick(Board::zc706());
+    opts.sweep.anneal.iterations = 300;
+    opts.sweep.anneal.restarts = 1;
+    opts.sweep.anneal.seed = seed;
+    opts
+}
+
+fn temp_cache(tag: &str) -> (DesignCache, PathBuf) {
+    let dir = std::env::temp_dir().join(format!(
+        "atheena-pipeline-props-{tag}-{}",
+        std::process::id()
+    ));
+    let cache = DesignCache::open(&dir).expect("temp design cache");
+    (cache, dir)
+}
+
+#[test]
+fn prop_curves_stage_emits_pareto_monotone_curves() {
+    let _guard = dse_guard();
+    let net = testnet::blenet_like();
+    let board = Board::zc706();
+    check(4, |r| {
+        let curves = Toolflow::new(&net, &tiny_opts(r.next_u64()))
+            .map_err(|e| e.to_string())?
+            .sweep()
+            .map_err(|e| e.to_string())?;
+        for curve in [
+            &curves.baseline_curve,
+            &curves.stage1_curve,
+            &curves.stage2_curve,
+        ] {
+            // Sorted by throughput, mutually non-dominated.
+            for w in curve.points.windows(2) {
+                prop_assert(
+                    w[1].throughput >= w[0].throughput,
+                    "curve not throughput-sorted",
+                )?;
+            }
+            for a in &curve.points {
+                for b in &curve.points {
+                    if std::ptr::eq(a, b) {
+                        continue;
+                    }
+                    prop_assert(
+                        !(a.throughput >= b.throughput && a.resources.fits_in(&b.resources)),
+                        "dominated point survived the Curves stage",
+                    )?;
+                }
+            }
+            // The realized TAP function is monotone in the budget.
+            let mut last = 0.0;
+            for frac in [0.1, 0.25, 0.5, 0.75, 1.0] {
+                let thr = curve
+                    .eval(&board.budget(frac))
+                    .map(|p| p.throughput)
+                    .unwrap_or(0.0);
+                prop_assert(thr >= last, "TAP eval lost throughput with more budget")?;
+                last = thr;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_synthetic_flags_exact_count_and_permutation_invariant() {
+    check(300, |r| {
+        let batch = gen_range(r, 1, 4096);
+        let q = r.f64();
+        let seed_a = r.next_u64();
+        let seed_b = r.next_u64();
+        let expect = (q * batch as f64).round() as usize;
+
+        let a = synthetic_hard_flags(q, batch, seed_a);
+        prop_assert(a.len() == batch, "flag vector length")?;
+        prop_assert(
+            a.iter().filter(|&&x| x).count() == expect,
+            &format!("hard count != round(q*batch) for q={q} batch={batch}"),
+        )?;
+
+        // Different seeds permute placement but never the multiset.
+        let b = synthetic_hard_flags(q, batch, seed_b);
+        let (mut sa, mut sb) = (a.clone(), b.clone());
+        sa.sort_unstable();
+        sb.sort_unstable();
+        prop_assert(sa == sb, "seed changed the hard-flag multiset")?;
+
+        // Same seed is fully deterministic.
+        prop_assert(
+            a == synthetic_hard_flags(q, batch, seed_a),
+            "same seed produced different placement",
+        )
+    });
+}
+
+#[test]
+fn realized_design_roundtrips_through_store() {
+    let _guard = dse_guard();
+    let net = testnet::blenet_like();
+    let opts = tiny_opts(0xA7EE_0001);
+    let realized = Toolflow::new(&net, &opts)
+        .unwrap()
+        .sweep()
+        .unwrap()
+        .combine()
+        .unwrap()
+        .realize()
+        .unwrap();
+
+    let (cache, dir) = temp_cache("roundtrip");
+    realized.save(&cache).unwrap();
+    let loaded = Realized::load(&cache, &net, &opts)
+        .unwrap()
+        .expect("artifact just saved must load");
+
+    // The serialized documents are identical…
+    assert_eq!(realized.to_json(), loaded.to_json());
+    // …and so is everything reconstructed from them.
+    assert_eq!(realized.designs.len(), loaded.designs.len());
+    for (a, b) in realized.designs.iter().zip(&loaded.designs) {
+        assert_eq!(a.mapping.foldings, b.mapping.foldings);
+        assert_eq!(a.cond_buffer_depth, b.cond_buffer_depth);
+        assert_eq!(a.total_resources, b.total_resources);
+        assert_eq!(a.timing.s1_ii, b.timing.s1_ii);
+        assert_eq!(a.timing.s2_ii, b.timing.s2_ii);
+        assert_eq!(a.timing.cond_buffer_depth, b.timing.cond_buffer_depth);
+        assert_eq!(a.manifest.cores.len(), b.manifest.cores.len());
+    }
+    for (a, b) in realized.baselines.iter().zip(&loaded.baselines) {
+        assert_eq!(a.mapping.foldings, b.mapping.foldings);
+        assert_eq!(
+            a.throughput_predicted.to_bits(),
+            b.throughput_predicted.to_bits()
+        );
+    }
+
+    // Measurement of original and reload is bit-identical too.
+    let ma = realized.measure(None).unwrap().into_result();
+    let mb = loaded.measure(None).unwrap().into_result();
+    for (x, y) in ma.designs.iter().zip(&mb.designs) {
+        for ((qx, sx), (qy, sy)) in x.measured.iter().zip(&y.measured) {
+            assert_eq!(qx.to_bits(), qy.to_bits());
+            assert_eq!(sx.throughput_sps.to_bits(), sy.throughput_sps.to_bits());
+            assert_eq!(sx.total_cycles, sy.total_cycles);
+        }
+    }
+
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn warm_store_measures_with_zero_anneal_calls() {
+    let _guard = dse_guard();
+    let net = testnet::blenet_like();
+    let opts = tiny_opts(0xA7EE_0002);
+
+    let (cache, dir) = temp_cache("warm");
+    // Cold: the pipeline runs (and anneals) once, then saves.
+    let (_cold, was_cached) = Realized::load_or_run(&cache, &net, &opts).unwrap();
+    assert!(!was_cached, "store must start cold");
+
+    // Warm: loading + measuring must perform zero anneal calls.
+    let before = anneal_call_count();
+    let (warm, was_cached) = Realized::load_or_run(&cache, &net, &opts).unwrap();
+    assert!(was_cached, "second invocation must hit the cache");
+    let measured = warm.measure(None).unwrap().into_result();
+    assert!(!measured.designs.is_empty());
+    assert_eq!(
+        anneal_call_count(),
+        before,
+        "warm-store reuse must not re-run the DSE"
+    );
+
+    // Changed options must re-key (and therefore miss).
+    let mut other = opts.clone();
+    other.buffer_margin += 1;
+    assert!(Realized::load(&cache, &net, &other).unwrap().is_none());
+
+    let _ = std::fs::remove_dir_all(dir);
+}

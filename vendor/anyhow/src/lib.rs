@@ -1,0 +1,133 @@
+//! Minimal, dependency-free reimplementation of the `anyhow` surface this
+//! workspace uses: [`Error`], [`Result`], and the `anyhow!` / `bail!` /
+//! `ensure!` macros. The build is fully offline (no crates.io), so the
+//! real crate is unavailable; this vendored stand-in keeps the same
+//! semantics for the subset we rely on:
+//!
+//! * `anyhow::Result<T>` with a default error type,
+//! * `?` conversion from any `std::error::Error + Send + Sync + 'static`,
+//! * formatted ad-hoc errors via the three macros,
+//! * `Display` shows the message, `Debug` shows the message plus the
+//!   source chain (what `fn main() -> anyhow::Result<()>` prints).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A type-erased error: either an ad-hoc message or a boxed source error.
+pub struct Error {
+    msg: Option<String>,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Ad-hoc error from a message (what `anyhow!` expands to).
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error {
+            msg: Some(msg.into()),
+            source: None,
+        }
+    }
+
+    /// Wrap a concrete error (what `?` conversion does).
+    pub fn new<E: StdError + Send + Sync + 'static>(err: E) -> Error {
+        Error {
+            msg: None,
+            source: Some(Box::new(err)),
+        }
+    }
+
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match (&self.msg, &self.source) {
+            (Some(m), _) => f.write_str(m),
+            (None, Some(s)) => write!(f, "{s}"),
+            (None, None) => f.write_str("unknown error"),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")?;
+        let mut cause = self.source.as_ref().and_then(|s| s.source());
+        while let Some(c) = cause {
+            write!(f, "\n\nCaused by:\n    {c}")?;
+            cause = c.source();
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does not implement `std::error::Error`; that
+// keeps the blanket `From` below coherent (mirroring the real crate).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error::new(err)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an ad-hoc [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an ad-hoc error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is not satisfied.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let n: i32 = s.parse()?; // From<ParseIntError>
+        ensure!(n >= 0, "negative: {n}");
+        if n > 100 {
+            bail!("too big: {n}");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn conversions_and_macros() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+        assert_eq!(parse("-1").unwrap_err().to_string(), "negative: -1");
+        assert_eq!(parse("101").unwrap_err().to_string(), "too big: 101");
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(e.to_string(), "x = 7");
+    }
+
+    #[test]
+    fn debug_shows_message() {
+        let e = anyhow!("boom");
+        assert!(format!("{e:?}").contains("boom"));
+    }
+}
