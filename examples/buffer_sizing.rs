@@ -24,23 +24,23 @@ fn main() -> anyhow::Result<()> {
         .best_design()
         .ok_or_else(|| anyhow::anyhow!("no design"))?;
 
-    let min_depth = buffering::min_depth_samples(&best.mapping);
+    let min_depth = buffering::min_depth_samples(&best.mapping, 0);
     println!(
         "decision delay {} cycles / stage-1 II {} cycles -> min depth {} samples (sized: {})",
-        buffering::decision_delay_cycles(&best.mapping),
-        best.timing.s1_ii,
+        buffering::decision_delay_cycles(&best.mapping, 0),
+        best.timing.s1_ii(),
         min_depth,
-        best.cond_buffer_depth
+        best.cond_buffer_depths[0]
     );
 
     // ---- depth sweep at q = p ----
-    let p = result.p;
+    let p = result.p();
     let flags = synthetic_hard_flags(p, 1024, 0xB1F);
     println!("\ndepth sweep at q = p = {p:.2} (batch 1024):");
     println!("{:>7} {:>16} {:>12} {:>9}", "depth", "thr(samples/s)", "stalls", "status");
-    let mut timing = best.timing;
+    let mut timing = best.timing.clone();
     for depth in [0, 1, 2, 4, 8, min_depth, min_depth * 2, min_depth * 4] {
-        timing.cond_buffer_depth = depth;
+        timing.set_cond_buffer_depth(0, depth);
         let m = SimMetrics::from_result(&simulate_ee(&timing, &opts.sim, &flags), opts.sim.clock_hz);
         println!(
             "{:>7} {:>16.0} {:>12} {:>9}",
@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     println!("\nq-mismatch tolerance by margin (throughput relative to q=p):");
     println!("{:>8} {:>11} {:>11} {:>11}", "margin", "q=p", "q=p+10%", "q=p+20%");
     for margin in [0usize, 8, 24, 48, 96] {
-        timing.cond_buffer_depth = min_depth + margin;
+        timing.set_cond_buffer_depth(0, min_depth + margin);
         let base = SimMetrics::from_result(
             &simulate_ee(&timing, &opts.sim, &flags),
             opts.sim.clock_hz,

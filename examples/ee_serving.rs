@@ -43,11 +43,11 @@ fn main() -> anyhow::Result<()> {
         .best_design()
         .ok_or_else(|| anyhow::anyhow!("no design"))?;
     println!(
-        "design ({}): {:.0}% budget, buffer depth {}, predicted {:.0} samples/s at p",
+        "design ({}): {:.0}% budget, buffer depths {:?}, predicted {:.0} samples/s at p",
         if cached { "design-cache hit, no DSE" } else { "realized fresh" },
         best.budget_fraction * 100.0,
-        best.cond_buffer_depth,
-        best.combined.throughput_at_p
+        best.cond_buffer_depths,
+        best.combined.throughput_at_design
     );
 
     // ---- batched inference: PJRT numerics + simulated board timing ----
@@ -56,12 +56,12 @@ fn main() -> anyhow::Result<()> {
     let host = BatchHost {
         stage1: &s1,
         stage2: &s2,
-        timing: best.timing,
+        timing: best.timing.clone(),
         sim: opts.sim.clone(),
     };
-    let batch = ts.batch_with_q(result.p, 1024, 0xE2E);
+    let batch = ts.batch_with_q(result.p(), 1024, 0xE2E);
     let rep = host.run(&ts, &batch)?;
-    println!("\nbatched inference (1024 samples, q = p = {:.2}):", result.p);
+    println!("\nbatched inference (1024 samples, q = p = {:.2}):", result.p());
     println!("  accuracy           = {:.4}", rep.accuracy);
     println!("  measured q         = {:.4}", rep.measured_q);
     println!("  decision agreement = {:.4}", rep.flag_agreement);

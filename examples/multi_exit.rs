@@ -43,15 +43,15 @@ fn main() -> anyhow::Result<()> {
     let board = Board::zc706();
     let cfg = SweepConfig::default();
     let ee_cdfg = Cdfg::lower(&net, 1);
-    let (s1, _) = sweep_budgets(ProblemKind::Stage1, &ee_cdfg, &board, &cfg);
-    let (s2, _) = sweep_budgets(ProblemKind::Stage2, &ee_cdfg, &board, &cfg);
+    let (s1, _) = sweep_budgets(ProblemKind::Stage(0), &ee_cdfg, &board, &cfg);
+    let (s2, _) = sweep_budgets(ProblemKind::Stage(1), &ee_cdfg, &board, &cfg);
 
     // Hypothetical 3-exit split: stage2a (early sub-stage) + stage2b.
     let s2a = half_stage(&s2);
     let s2b = s2.clone();
     // Reach probabilities: all samples hit stage 1; p1 continue past
     // exit 1; of those, 40% exit at the new mid exit, so p2 = 0.6 * p1.
-    let p1 = net.p_profile;
+    let p1 = net.p_profile();
     let p2 = 0.6 * p1;
 
     println!(

@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
     ))?;
     println!(
         "network '{}': input {}, {} classes, profiled p = {:.3}, C_thr = {:.4}",
-        net.name, net.input_shape, net.classes, net.p_profile, net.c_thr
+        net.name, net.input_shape, net.classes, net.p_profile(), net.c_thr
     );
     println!(
         "  deployed accuracy (build-time profile): {:.3} (baseline {:.3})",
@@ -45,8 +45,8 @@ fn main() -> anyhow::Result<()> {
     println!(
         "[sweep]   TAP curves: baseline {} pts / stage1 {} pts / stage2 {} pts ({:.1?}, parallel)",
         curves.baseline_curve.points.len(),
-        curves.stage1_curve.points.len(),
-        curves.stage2_curve.points.len(),
+        curves.stage_curves[0].points.len(),
+        curves.stage_curves[1].points.len(),
         t1.elapsed()
     );
 
@@ -81,11 +81,14 @@ fn main() -> anyhow::Result<()> {
     println!("  resources: {}", best.total_resources);
     println!(
         "  stage-1 II {} cyc / stage-2 II {} cyc / buffer depth {}",
-        best.timing.s1_ii, best.timing.s2_ii, best.cond_buffer_depth
+        best.timing.s1_ii(),
+        best.timing.s2_ii(),
+        best.cond_buffer_depths[0]
     );
     println!(
         "  predicted {:.0} samples/s at p = {:.2}",
-        best.combined.throughput_at_p, result.p
+        best.combined.throughput_at_design,
+        result.p()
     );
     for (q, m) in &best.measured {
         println!(
@@ -105,7 +108,7 @@ fn main() -> anyhow::Result<()> {
         base.measured.throughput_sps,
         best.measured
             .iter()
-            .min_by(|(a, _), (b, _)| (a - result.p).abs().total_cmp(&(b - result.p).abs()))
+            .min_by(|(a, _), (b, _)| (a - result.p()).abs().total_cmp(&(b - result.p()).abs()))
             .map(|(_, m)| m.throughput_sps)
             .unwrap_or(0.0)
             / base.measured.throughput_sps

@@ -35,8 +35,8 @@ fn main() -> anyhow::Result<()> {
     let cfg = SweepConfig::default();
 
     let ee_cdfg = Cdfg::lower(&net, 1);
-    let (s1_curve, _) = sweep_budgets(ProblemKind::Stage1, &ee_cdfg, &board, &cfg);
-    let (s2_curve, _) = sweep_budgets(ProblemKind::Stage2, &ee_cdfg, &board, &cfg);
+    let (s1_curve, _) = sweep_budgets(ProblemKind::Stage(0), &ee_cdfg, &board, &cfg);
+    let (s2_curve, _) = sweep_budgets(ProblemKind::Stage(1), &ee_cdfg, &board, &cfg);
     println!(
         "stage-1 TAP: {} Pareto points (max {:.0} samples/s)",
         s1_curve.points.len(),
@@ -71,7 +71,7 @@ fn main() -> anyhow::Result<()> {
 
     // Runtime sensitivity: the design chosen for p, evaluated at q != p
     // (the shaded region of Fig. 4).
-    let p = net.p_profile;
+    let p = net.p_profile();
     let d = combine(&s1_curve, &s2_curve, p, &budget)
         .ok_or_else(|| anyhow::anyhow!("infeasible at p={p}"))?;
     println!("\nruntime q sensitivity of the p={p:.2} design:");

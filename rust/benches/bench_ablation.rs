@@ -65,8 +65,8 @@ fn main() {
     println!("\n== allocation ablation: Eq.1 vs naive (p = 0.25) ==");
     let ee_cdfg = Cdfg::lower(&net, 1);
     let sweep = SweepConfig::default();
-    let (f, s1_results) = sweep_budgets(ProblemKind::Stage1, &ee_cdfg, &board, &sweep);
-    let (g, _) = sweep_budgets(ProblemKind::Stage2, &ee_cdfg, &board, &sweep);
+    let (f, s1_results) = sweep_budgets(ProblemKind::Stage(0), &ee_cdfg, &board, &sweep);
+    let (g, _) = sweep_budgets(ProblemKind::Stage(1), &ee_cdfg, &board, &sweep);
     let _ = &s1_results;
     println!(
         "{:>8} {:>16} {:>16} {:>8}",
@@ -90,23 +90,23 @@ fn main() {
 
     // ---- 3. buffer-margin ablation ----
     println!("\n== buffer-margin ablation (simulated, q = p + 10%) ==");
-    let p1 = Problem::stage1(ee_cdfg.clone(), board.budget(0.85), board.clock_hz);
+    let p1 = Problem::stage(0, ee_cdfg.clone(), board.budget(0.85), board.clock_hz);
     let s1 = anneal(&p1, &AnnealConfig::default());
-    let p2 = Problem::stage2(ee_cdfg.clone(), board.budget(0.3), board.clock_hz);
+    let p2 = Problem::stage(1, ee_cdfg.clone(), board.budget(0.3), board.clock_hz);
     let s2 = anneal(&p2, &AnnealConfig::default());
     let mut mapping = s1.mapping.clone();
     for n in &mapping.cdfg.nodes.clone() {
-        if n.stage == atheena::ir::StageId::Stage2 {
+        if n.stage == atheena::ir::StageId::Backbone(1) {
             mapping.foldings[n.id] = s2.mapping.foldings[n.id];
         }
     }
-    let min_depth = buffering::min_depth_samples(&mapping);
+    let min_depth = buffering::min_depth_samples(&mapping, 0);
     println!(
         "{:>8} {:>7} {:>7} {:>16} {:>10}",
         "margin", "depth", "BRAM", "thr(samples/s)", "stalls"
     );
     for margin in [0usize, 4, 16, 48, 128] {
-        mapping.set_cond_buffer_depth(min_depth + margin);
+        mapping.set_cond_buffer_depth(0, min_depth + margin);
         let timing = DesignTiming::from_ee_mapping(&mapping);
         let flags = synthetic_hard_flags(0.35, 1024, 0xAB1A);
         let m = SimMetrics::from_result(

@@ -32,9 +32,9 @@ fn main() {
         4_000.0 * s.per_second()
     );
 
-    let p1 = Problem::stage1(ee_cdfg.clone(), board.resources, board.clock_hz);
+    let p1 = Problem::stage(0, ee_cdfg.clone(), board.resources, board.clock_hz);
     bench("anneal/stage1/4k-iters", 1, 10, || anneal(&p1, &cfg));
-    let p2 = Problem::stage2(ee_cdfg.clone(), board.resources, board.clock_hz);
+    let p2 = Problem::stage(1, ee_cdfg.clone(), board.resources, board.clock_hz);
     bench("anneal/stage2/4k-iters", 1, 10, || anneal(&p2, &cfg));
 
     // Full Fig. 9a-style sweep (default fractions ladder).
@@ -43,8 +43,8 @@ fn main() {
         sweep_budgets(ProblemKind::Baseline, &base_cdfg, &board, &sweep)
     });
     once("sweep/fig9a-stage1+stage2-curves", || {
-        let a = sweep_budgets(ProblemKind::Stage1, &ee_cdfg, &board, &sweep);
-        let b = sweep_budgets(ProblemKind::Stage2, &ee_cdfg, &board, &sweep);
+        let a = sweep_budgets(ProblemKind::Stage(0), &ee_cdfg, &board, &sweep);
+        let b = sweep_budgets(ProblemKind::Stage(1), &ee_cdfg, &board, &sweep);
         (a, b)
     });
 
@@ -54,8 +54,8 @@ fn main() {
         sweep_budgets_parallel(ProblemKind::Baseline, &base_cdfg, &board, &sweep)
     });
     once("sweep/fig9a-stage1+stage2-curves/parallel", || {
-        let a = sweep_budgets_parallel(ProblemKind::Stage1, &ee_cdfg, &board, &sweep);
-        let b = sweep_budgets_parallel(ProblemKind::Stage2, &ee_cdfg, &board, &sweep);
+        let a = sweep_budgets_parallel(ProblemKind::Stage(0), &ee_cdfg, &board, &sweep);
+        let b = sweep_budgets_parallel(ProblemKind::Stage(1), &ee_cdfg, &board, &sweep);
         (a, b)
     });
 }

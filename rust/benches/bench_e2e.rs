@@ -71,8 +71,8 @@ fn main() -> anyhow::Result<()> {
         println!(
             "  -> {} designs, best predicted {:.0} samples/s at p={:.2}",
             r.designs.len(),
-            best.combined.throughput_at_p,
-            r.p
+            best.combined.throughput_at_design,
+            r.p()
         );
     }
     Ok(())

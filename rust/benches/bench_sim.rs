@@ -49,8 +49,8 @@ fn main() {
     }
 
     // Stall-heavy regime (undersized buffer) — worst-case engine load.
-    let mut tight = timing;
-    tight.cond_buffer_depth = 1;
+    let mut tight = timing.clone();
+    tight.set_cond_buffer_depth(0, 1);
     let flags = synthetic_hard_flags(0.5, 1024, 9);
     bench("sim/ee-batch1024/depth1-stalls", 3, 30, || {
         simulate_ee(&tight, &cfg, &flags)

@@ -4,7 +4,7 @@
 //!     cargo bench --bench bench_tap
 
 use atheena::resources::ResourceVec;
-use atheena::tap::{combine, TapCurve, TapPoint};
+use atheena::tap::{combine, combine_multi, TapCurve, TapPoint};
 use atheena::util::bench::bench;
 use atheena::util::Rng;
 
@@ -46,6 +46,34 @@ fn main() {
         println!(
             "  -> {:.2} M pair-evaluations/s",
             (f.points.len() * g.points.len()) as f64 * s.per_second() / 1e6
+        );
+    }
+
+    // Multi-stage Eq. 1 (the N-exit generalization): branch-and-bound
+    // over N Pareto sets. Curve sizes match a default sweep ladder.
+    for n_stages in [3usize, 4] {
+        let curves: Vec<TapCurve> = (0..n_stages)
+            .map(|i| random_curve(30, 10 + i as u64))
+            .collect();
+        // Non-increasing reach probabilities: 1, 0.3, 0.12, 0.05…
+        let reach: Vec<f64> = (0..n_stages)
+            .map(|i| match i {
+                0 => 1.0,
+                1 => 0.3,
+                2 => 0.12,
+                _ => 0.05,
+            })
+            .collect();
+        let s = bench(
+            &format!("tap/combine-multi/{n_stages}-stages-30pts"),
+            5,
+            50,
+            || combine_multi(&curves, &reach, &budget),
+        );
+        println!(
+            "  -> {:.1} k combinations/s upper bound space {}",
+            s.per_second() / 1e3,
+            30usize.pow(n_stages as u32)
         );
     }
 

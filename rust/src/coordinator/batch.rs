@@ -18,6 +18,10 @@ use crate::sim::{simulate_ee, DesignTiming, SimConfig, SimMetrics};
 /// PJRT-backed oracle for the Early-Exit profiler: stage 1 always runs;
 /// stage 2 only for samples whose decision said "hard" (matching the
 /// hardware's conditional dataflow).
+///
+/// Two-stage only: the exported HLO artifacts currently cover one exit,
+/// so this oracle refuses deeper networks instead of silently reporting
+/// a wrong reach vector (every intermediate exit would be miscounted).
 pub struct PjrtOracle<'a> {
     pub stage1: &'a Stage1Exec,
     pub stage2: &'a Stage2Exec,
@@ -25,19 +29,22 @@ pub struct PjrtOracle<'a> {
 
 impl ExitOracle for PjrtOracle<'_> {
     fn run(&mut self, images: &[&[f32]]) -> anyhow::Result<Vec<ExitOutcome>> {
+        anyhow::ensure!(
+            self.stage1.net.n_sections() == 2,
+            "PjrtOracle covers two-stage networks; '{}' has {} sections \
+             (no intermediate-exit HLO artifacts exist yet)",
+            self.stage1.net.name,
+            self.stage1.net.n_sections()
+        );
         let mut out = Vec::with_capacity(images.len());
         for img in images {
             let s1 = self.stage1.run(img)?;
-            let pred_final = if s1.take_exit {
-                None
+            let (exit, pred) = if s1.take_exit {
+                (Some(0), s1.pred())
             } else {
-                Some(argmax(&self.stage2.run(&s1.features)?))
+                (None, argmax(&self.stage2.run(&s1.features)?))
             };
-            out.push(ExitOutcome {
-                take_exit: s1.take_exit,
-                pred_exit: s1.pred(),
-                pred_final,
-            });
+            out.push(ExitOutcome { exit, pred });
         }
         Ok(out)
     }
@@ -69,8 +76,16 @@ pub struct BatchHost<'a> {
 
 impl BatchHost<'_> {
     /// Run a batch end to end: PJRT numerics for every sample, simulator
-    /// for board timing with the measured decisions.
+    /// for board timing with the measured decisions. Two-stage only (see
+    /// [`PjrtOracle`]); deeper networks error out rather than routing
+    /// section-0 features into the wrong executable.
     pub fn run(&self, ts: &TestSet, batch: &Batch) -> anyhow::Result<BatchReport> {
+        anyhow::ensure!(
+            self.stage1.net.n_sections() == 2,
+            "BatchHost covers two-stage networks; '{}' has {} sections",
+            self.stage1.net.name,
+            self.stage1.net.n_sections()
+        );
         let start = std::time::Instant::now();
         let mut hard_measured = Vec::with_capacity(batch.indices.len());
         let mut correct = 0usize;

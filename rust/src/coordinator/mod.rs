@@ -10,8 +10,9 @@
 //! * [`batch`]    — the generated host code's batch-inference loop: DMA
 //!   model + PJRT numerics, accuracy + exit-statistics accounting.
 //! * [`server`]   — a threaded streaming-serving front end: a dynamic
-//!   batcher feeding a stage-1 worker pool with hard samples routed to a
-//!   stage-2 pool (Python never on this path).
+//!   batcher feeding a chain of stage workers, one per pipeline section,
+//!   with hard samples routed down the chain (Python never on this
+//!   path).
 
 pub mod batch;
 pub mod pipeline;
@@ -24,4 +25,7 @@ pub use pipeline::{
     RealizedBaseline, RealizedDesign, Toolflow,
 };
 pub use server::{Server, ServerConfig, ServerStats};
-pub use toolflow::{run_toolflow, ChosenDesign, ToolflowOptions, ToolflowResult};
+pub use toolflow::{
+    run_toolflow, synthetic_exit_stages, synthetic_hard_flags, ChosenDesign,
+    ToolflowOptions, ToolflowResult,
+};

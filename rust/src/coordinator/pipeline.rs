@@ -1,27 +1,37 @@
 //! The staged toolflow pipeline (paper Fig. 5) as a typed, resumable
-//! chain of artifacts:
+//! chain of artifacts, generalized to N-exit networks:
 //!
 //! ```text
 //! Toolflow::new(net, opts)         -> Lowered    (CDFG lowering)
 //!   .sweep()                       -> Curves     (per-stage TAP sweeps, parallel)
-//!   .combine()                     -> Combined   (Eq. 1 budget splits + merged mappings)
-//!   .realize()                     -> Realized   (buffer sizing, manifests, timing)
+//!   .combine()                     -> Combined   (multi-stage Eq. 1 splits + merged mappings)
+//!   .realize()                     -> Realized   (per-exit buffer sizing, manifests, timing)
 //!   .measure(flags)                -> Measured   (simulated board measurement)
 //! ```
 //!
 //! Each stage struct owns exactly the data the next stage needs and is
 //! independently constructible, so tests and partial reruns can enter
-//! the chain anywhere. `Realized` — the expensive artifact, everything
-//! downstream of the simulated-annealing DSE — serializes to and loads
-//! from the [`DesignCache`](crate::runtime::DesignCache): `infer`,
-//! `serve`, and `report` reuse a previously realized design with **zero
-//! anneal calls** instead of re-running the DSE per invocation (the
-//! contract `dse::anneal_call_count` exists to verify).
+//! the chain anywhere. The number of pipeline stages is **data**: every
+//! stage carries a `Vec` of per-section artifacts (TAP curves, anneal
+//! results, buffer depths), and the two-stage paper configuration is the
+//! `n_sections == 2` special case — same designs, same simulated
+//! metrics, byte-identical `combine_multi` selection (see
+//! `tests/pipeline_props.rs`).
+//!
+//! `Realized` — the expensive artifact, everything downstream of the
+//! simulated-annealing DSE — serializes to and loads from the
+//! [`DesignCache`](crate::runtime::DesignCache): `infer`, `serve`, and
+//! `report` reuse a previously realized design with **zero anneal
+//! calls** instead of re-running the DSE per invocation (the contract
+//! `dse::anneal_call_count` exists to verify).
 //!
 //! Cache keying: `(network, board, fingerprint)` where the fingerprint
 //! hashes every input that influences the realized design — the network
-//! structure and profiled p, the board, and all toolflow options. Any
-//! change to those inputs misses the cache and re-runs the pipeline.
+//! structure and profiled reach probabilities, the board, all toolflow
+//! options, and [`DESIGN_SCHEMA_VERSION`]. Any change to those inputs
+//! misses the cache and re-runs the pipeline; a stale-schema artifact
+//! that somehow lands at the right path is evicted and treated as a
+//! miss, never mis-deserialized.
 //!
 //! The sweeps inside [`Lowered::sweep`] are the toolflow's dominant cost
 //! and are embarrassingly parallel (each anneal is seeded per fraction
@@ -36,17 +46,21 @@ use crate::ir::{Cdfg, Network, StageId};
 use crate::resources::ResourceVec;
 use crate::runtime::DesignCache;
 use crate::sdf::{buffering, Folding, HwMapping};
-use crate::sim::{simulate_ee, DesignTiming, SimMetrics};
-use crate::tap::{combine, CombinedDesign, TapCurve};
+use crate::sim::{simulate_ee, simulate_multi, DesignTiming, SimMetrics};
+use crate::tap::{combine_multi, MultiStageDesign, TapCurve};
 use crate::util::Json;
 
 use super::toolflow::{
-    synthetic_hard_flags, BaselineDesign, ChosenDesign, ToolflowOptions, ToolflowResult,
+    synthetic_exit_stages, synthetic_hard_flags, BaselineDesign, ChosenDesign,
+    ToolflowOptions, ToolflowResult,
 };
 
-/// Bump when the serialized `Realized` layout changes; part of the cache
-/// key, so old artifacts simply miss instead of mis-parsing.
-pub const DESIGN_SCHEMA_VERSION: u32 = 1;
+/// Bump when the serialized `Realized` layout changes; part of both the
+/// document and the cache fingerprint, so old artifacts simply miss (or
+/// are evicted) instead of mis-parsing. v2: N-exit stage model —
+/// per-stage curve vectors, `MultiStageDesign` combined records, and
+/// per-exit `cond_buffer_depths`.
+pub const DESIGN_SCHEMA_VERSION: u32 = 2;
 
 /// Entry point of the staged pipeline.
 pub struct Toolflow;
@@ -62,33 +76,55 @@ impl Toolflow {
 // Stage 1: Lowered
 // ---------------------------------------------------------------------
 
-/// CDFG lowering output: the EE hardware graph (Fig. 3) and the
-/// single-stage baseline graph, plus the resolved design-time p.
+/// CDFG lowering output: the EE hardware graph (Fig. 3, N-exit form) and
+/// the single-stage baseline graph, plus the resolved design-time reach
+/// probabilities.
 pub struct Lowered {
     pub net: Network,
     pub opts: ToolflowOptions,
-    /// Design-time hard-sample probability (override or profiled).
-    pub p: f64,
-    /// EE graph; Conditional Buffer depth is a placeholder until
-    /// `realize` sizes it (Fig. 7 needs chosen foldings).
+    /// Design-time reach probabilities *past* each exit (override-scaled
+    /// or profiled); `reach[0]` is the two-stage "p".
+    pub reach: Vec<f64>,
+    /// EE graph; Conditional Buffer depths are placeholders until
+    /// `realize` sizes them (Fig. 7 needs chosen foldings).
     pub ee_cdfg: Cdfg,
     pub base_cdfg: Cdfg,
 }
 
 impl Lowered {
     pub fn new(net: &Network, opts: &ToolflowOptions) -> anyhow::Result<Lowered> {
-        let p = opts.p_override.unwrap_or(net.p_profile);
-        anyhow::ensure!(p > 0.0 && p <= 1.0, "profiled p out of range: {p}");
+        let mut reach = net.reach_profile.clone();
+        anyhow::ensure!(!reach.is_empty(), "network has no exits");
+        if let Some(p) = opts.p_override {
+            // Override the first exit's hard probability; deeper reach
+            // probabilities scale proportionally so the profile's shape
+            // is preserved.
+            anyhow::ensure!(p > 0.0 && p <= 1.0, "p override out of range: {p}");
+            let base = reach[0];
+            anyhow::ensure!(base > 0.0, "profiled p is zero; cannot scale override");
+            for r in reach.iter_mut() {
+                *r = (*r * p / base).min(1.0);
+            }
+        }
+        anyhow::ensure!(
+            reach.iter().all(|&r| r > 0.0 && r <= 1.0),
+            "design-time reach probabilities out of range: {reach:?}"
+        );
         Ok(Lowered {
             net: net.clone(),
             opts: opts.clone(),
-            p,
+            reach,
             ee_cdfg: Cdfg::lower(net, 1),
             base_cdfg: Cdfg::lower_baseline(net),
         })
     }
 
-    /// Run the three budget sweeps (baseline / stage 1 / stage 2) on
+    /// Design-time hard probability at the first exit (two-stage "p").
+    pub fn p(&self) -> f64 {
+        self.reach[0]
+    }
+
+    /// Run the budget sweeps (baseline + one per pipeline section) on
     /// scoped worker threads — one anneal task per (kind, fraction),
     /// drained by `available_parallelism` workers.
     pub fn sweep(self) -> anyhow::Result<Curves> {
@@ -103,10 +139,12 @@ impl Lowered {
     fn sweep_with(self, parallel: bool) -> anyhow::Result<Curves> {
         let board = &self.opts.board;
         let cfg = &self.opts.sweep;
+        let n_sections = self.ee_cdfg.n_sections;
         let mut tasks: Vec<SweepTask> = Vec::new();
         tasks.extend(plan_sweep(ProblemKind::Baseline, &self.base_cdfg, board, cfg));
-        tasks.extend(plan_sweep(ProblemKind::Stage1, &self.ee_cdfg, board, cfg));
-        tasks.extend(plan_sweep(ProblemKind::Stage2, &self.ee_cdfg, board, cfg));
+        for sec in 0..n_sections {
+            tasks.extend(plan_sweep(ProblemKind::Stage(sec), &self.ee_cdfg, board, cfg));
+        }
 
         let results: Vec<AnnealResult> = if parallel {
             run_tasks_parallel(&tasks)
@@ -120,27 +158,29 @@ impl Lowered {
         let per_kind = cfg.fractions.len();
         let mut it = results.into_iter();
         let base: Vec<AnnealResult> = it.by_ref().take(per_kind).collect();
-        let s1: Vec<AnnealResult> = it.by_ref().take(per_kind).collect();
-        let s2: Vec<AnnealResult> = it.collect();
-
         let (baseline_curve, base_results) = assemble_sweep(cfg, base);
-        let (stage1_curve, s1_results) = assemble_sweep(cfg, s1);
-        let (stage2_curve, s2_results) = assemble_sweep(cfg, s2);
-        anyhow::ensure!(
-            !stage1_curve.is_empty() && !stage2_curve.is_empty(),
-            "DSE produced no feasible stage designs"
-        );
+
+        let mut stage_curves = Vec::with_capacity(n_sections);
+        let mut stage_results = Vec::with_capacity(n_sections);
+        for sec in 0..n_sections {
+            let chunk: Vec<AnnealResult> = it.by_ref().take(per_kind).collect();
+            let (curve, results) = assemble_sweep(cfg, chunk);
+            anyhow::ensure!(
+                !curve.is_empty(),
+                "DSE produced no feasible designs for pipeline section {sec}"
+            );
+            stage_curves.push(curve);
+            stage_results.push(results);
+        }
         Ok(Curves {
             net: self.net,
             opts: self.opts,
-            p: self.p,
+            reach: self.reach,
             ee_cdfg: self.ee_cdfg,
             baseline_curve,
-            stage1_curve,
-            stage2_curve,
+            stage_curves,
             base_results,
-            s1_results,
-            s2_results,
+            stage_results,
         })
     }
 }
@@ -150,45 +190,58 @@ impl Lowered {
 // ---------------------------------------------------------------------
 
 /// Per-stage TAP curves plus the raw annealer results each curve point
-/// links back into (`TapPoint::source`).
+/// links back into (`TapPoint::source`). `stage_curves[i]` is pipeline
+/// section `i`'s Pareto set.
 pub struct Curves {
     pub net: Network,
     pub opts: ToolflowOptions,
-    pub p: f64,
+    pub reach: Vec<f64>,
     pub ee_cdfg: Cdfg,
     pub baseline_curve: TapCurve,
-    pub stage1_curve: TapCurve,
-    pub stage2_curve: TapCurve,
+    pub stage_curves: Vec<TapCurve>,
     pub base_results: Vec<AnnealResult>,
-    pub s1_results: Vec<AnnealResult>,
-    pub s2_results: Vec<AnnealResult>,
+    pub stage_results: Vec<Vec<AnnealResult>>,
 }
 
 /// One Eq. 1 pick: the combined design for a budget fraction plus the
-/// merged full-CDFG mapping (buffer not yet sized).
+/// merged full-CDFG mapping (buffers not yet sized).
 pub struct CombinedChoice {
     pub budget_fraction: f64,
-    pub combined: CombinedDesign,
+    pub combined: MultiStageDesign,
     pub mapping: HwMapping,
 }
 
 impl Curves {
-    /// Apply Eq. 1 at every budget fraction: pick the optimal
-    /// (stage-1, stage-2) split and merge the two annealed foldings into
-    /// one full-CDFG mapping. Fractions with no feasible pair are
-    /// skipped here (matching the monolithic flow).
+    /// Reach probabilities in `combine_multi`'s convention: probability
+    /// of a sample *reaching* each section (`[1, r_0, r_1, …]`).
+    pub fn section_reach(&self) -> Vec<f64> {
+        let mut probs = Vec::with_capacity(self.reach.len() + 1);
+        probs.push(1.0);
+        probs.extend_from_slice(&self.reach);
+        probs
+    }
+
+    /// Apply the multi-stage Eq. 1 at every budget fraction: pick the
+    /// optimal per-section resource split and merge the annealed
+    /// foldings into one full-CDFG mapping. Fractions with no feasible
+    /// split are skipped here (matching the monolithic flow).
     pub fn combine(self) -> anyhow::Result<Combined> {
         let board = &self.opts.board;
+        let section_reach = self.section_reach();
         let mut choices = Vec::new();
         for &frac in &self.opts.sweep.fractions {
             let budget = board.budget(frac);
-            let Some(comb) = combine(&self.stage1_curve, &self.stage2_curve, self.p, &budget)
+            let Some(comb) = combine_multi(&self.stage_curves, &section_reach, &budget)
             else {
                 continue;
             };
-            let s1 = &self.s1_results[comb.stage1.source];
-            let s2 = &self.s2_results[comb.stage2.source];
-            let mapping = merge_mappings(&self.ee_cdfg, s1, s2);
+            let per_stage: Vec<&AnnealResult> = comb
+                .stages
+                .iter()
+                .enumerate()
+                .map(|(sec, pt)| &self.stage_results[sec][pt.source])
+                .collect();
+            let mapping = merge_stage_mappings(&self.ee_cdfg, &per_stage);
             choices.push(CombinedChoice {
                 budget_fraction: frac,
                 combined: comb,
@@ -198,10 +251,9 @@ impl Curves {
         Ok(Combined {
             net: self.net,
             opts: self.opts,
-            p: self.p,
+            reach: self.reach,
             baseline_curve: self.baseline_curve,
-            stage1_curve: self.stage1_curve,
-            stage2_curve: self.stage2_curve,
+            stage_curves: self.stage_curves,
             base_results: self.base_results,
             choices,
         })
@@ -217,16 +269,15 @@ impl Curves {
 pub struct Combined {
     pub net: Network,
     pub opts: ToolflowOptions,
-    pub p: f64,
+    pub reach: Vec<f64>,
     pub baseline_curve: TapCurve,
-    pub stage1_curve: TapCurve,
-    pub stage2_curve: TapCurve,
+    pub stage_curves: Vec<TapCurve>,
     pub base_results: Vec<AnnealResult>,
     pub choices: Vec<CombinedChoice>,
 }
 
 impl Combined {
-    /// Size the Conditional Buffer (Fig. 7 + robustness margin),
+    /// Size every Conditional Buffer (Fig. 7 + robustness margin),
     /// re-check budgets with the sized BRAM, emit + stitch-verify the
     /// design manifests, and extract section timings. Designs that no
     /// longer fit even at the deadlock-free minimum margin are dropped.
@@ -254,17 +305,17 @@ impl Combined {
             let mut mapping = choice.mapping;
             let budget = board.budget(choice.budget_fraction);
 
-            // Buffer sizing (Fig. 7) + robustness margin.
-            let mut depth = buffering::size_cond_buffer(&mut mapping, self.opts.buffer_margin);
+            // Per-exit buffer sizing (Fig. 7) + robustness margin.
+            let mut depths = buffering::size_cond_buffers(&mut mapping, self.opts.buffer_margin);
 
-            // Re-check the budget with the sized buffer's BRAM; if it no
+            // Re-check the budget with the sized buffers' BRAM; if it no
             // longer fits, shrink the margin down to the deadlock-free
             // minimum before giving up (the paper notes BRAM is the cost
-            // of robustness). Record the depth actually sized in, not
-            // the pre-shrink one.
+            // of robustness). Record the depths actually sized in, not
+            // the pre-shrink ones.
             let mut total = mapping.total_resources();
             if !total.fits_in(&budget) {
-                depth = buffering::size_cond_buffer(&mut mapping, 0);
+                depths = buffering::size_cond_buffers(&mut mapping, 0);
                 total = mapping.total_resources();
                 if !total.fits_in(&budget) {
                     continue;
@@ -283,7 +334,7 @@ impl Combined {
             designs.push(RealizedDesign {
                 budget_fraction: choice.budget_fraction,
                 combined: choice.combined,
-                cond_buffer_depth: depth,
+                cond_buffer_depths: depths,
                 total_resources: total,
                 manifest,
                 timing,
@@ -295,10 +346,9 @@ impl Combined {
         Ok(Realized {
             net: self.net,
             opts: self.opts,
-            p: self.p,
+            reach: self.reach,
             baseline_curve: self.baseline_curve,
-            stage1_curve: self.stage1_curve,
-            stage2_curve: self.stage2_curve,
+            stage_curves: self.stage_curves,
             baselines,
             designs,
         })
@@ -323,12 +373,13 @@ pub struct RealizedBaseline {
 #[derive(Clone, Debug)]
 pub struct RealizedDesign {
     pub budget_fraction: f64,
-    pub combined: CombinedDesign,
-    /// Merged full-CDFG mapping with the buffer sized in.
+    pub combined: MultiStageDesign,
+    /// Merged full-CDFG mapping with every buffer sized in.
     pub mapping: HwMapping,
     pub manifest: DesignManifest,
     pub timing: DesignTiming,
-    pub cond_buffer_depth: usize,
+    /// Conditional Buffer depths, one per exit.
+    pub cond_buffer_depths: Vec<usize>,
     pub total_resources: ResourceVec,
 }
 
@@ -338,29 +389,35 @@ pub struct RealizedDesign {
 pub struct Realized {
     pub net: Network,
     pub opts: ToolflowOptions,
-    pub p: f64,
+    pub reach: Vec<f64>,
     pub baseline_curve: TapCurve,
-    pub stage1_curve: TapCurve,
-    pub stage2_curve: TapCurve,
+    pub stage_curves: Vec<TapCurve>,
     pub baselines: Vec<RealizedBaseline>,
     pub designs: Vec<RealizedDesign>,
 }
 
 impl Realized {
+    /// Design-time hard probability at the first exit (two-stage "p").
+    pub fn p(&self) -> f64 {
+        self.reach.first().copied().unwrap_or(0.0)
+    }
+
     /// Highest predicted-throughput design (same rule as
     /// `ToolflowResult::best_design`).
     pub fn best_design(&self) -> Option<&RealizedDesign> {
         self.designs.iter().max_by(|a, b| {
             a.combined
-                .throughput_at_p
-                .total_cmp(&b.combined.throughput_at_p)
+                .throughput_at_design
+                .total_cmp(&b.combined.throughput_at_design)
         })
     }
 
     /// Simulated board measurement (the paper's §IV-A loop): every
     /// baseline at the configured batch, every EE design at every
-    /// requested q. `hard_flags_for_q` supplies test-set-backed flags;
-    /// `None` falls back to synthetic exact-count placement.
+    /// requested q. `hard_flags_for_q` supplies test-set-backed flags
+    /// for two-stage networks; `None` (and every deeper network) falls
+    /// back to synthetic exact-count placement, with the whole reach
+    /// vector scaled by `q / reach[0]`.
     pub fn measure(
         &self,
         mut hard_flags_for_q: Option<&mut dyn FnMut(f64, usize) -> Vec<bool>>,
@@ -381,15 +438,29 @@ impl Realized {
             })
             .collect();
 
+        let two_stage = self.reach.len() == 1;
         let mut designs = Vec::new();
         for d in &self.designs {
             let mut measured = Vec::new();
             for &q in &opts.q_values {
-                let flags = match hard_flags_for_q.as_mut() {
-                    Some(f) => f(q, opts.batch),
-                    None => synthetic_hard_flags(q, opts.batch, opts.seed ^ (q * 1e4) as u64),
+                let seed = opts.seed ^ (q * 1e4) as u64;
+                let sim = if two_stage {
+                    let flags = match hard_flags_for_q.as_mut() {
+                        Some(f) => f(q, opts.batch),
+                        None => synthetic_hard_flags(q, opts.batch, seed),
+                    };
+                    simulate_ee(&d.timing, &opts.sim, &flags)
+                } else {
+                    // Scale the whole design-time reach vector so the
+                    // first exit sees hard probability q.
+                    let factor = if self.reach[0] > 0.0 { q / self.reach[0] } else { 0.0 };
+                    let mut reach_rt = self.reach.clone();
+                    for r in reach_rt.iter_mut() {
+                        *r = (*r * factor).clamp(0.0, 1.0);
+                    }
+                    let stages = synthetic_exit_stages(&reach_rt, opts.batch, seed);
+                    simulate_multi(&d.timing, &opts.sim, &stages)
                 };
-                let sim = simulate_ee(&d.timing, &opts.sim, &flags);
                 measured.push((q, SimMetrics::from_result(&sim, opts.sim.clock_hz)));
             }
             designs.push(ChosenDesign {
@@ -397,8 +468,8 @@ impl Realized {
                 combined: d.combined.clone(),
                 mapping: d.mapping.clone(),
                 manifest: d.manifest.clone(),
-                timing: d.timing,
-                cond_buffer_depth: d.cond_buffer_depth,
+                timing: d.timing.clone(),
+                cond_buffer_depths: d.cond_buffer_depths.clone(),
                 total_resources: d.total_resources,
                 measured,
             });
@@ -407,10 +478,9 @@ impl Realized {
 
         Ok(Measured {
             network: self.net.name.clone(),
-            p: self.p,
+            reach: self.reach.clone(),
             baseline_curve: self.baseline_curve.clone(),
-            stage1_curve: self.stage1_curve.clone(),
-            stage2_curve: self.stage2_curve.clone(),
+            stage_curves: self.stage_curves.clone(),
             baseline_designs,
             designs,
         })
@@ -443,7 +513,14 @@ impl Realized {
             Json::obj(vec![
                 ("budget_fraction", Json::Num(d.budget_fraction)),
                 ("combined", d.combined.to_json()),
-                ("cond_buffer_depth", Json::num(d.cond_buffer_depth as f64)),
+                (
+                    "cond_buffer_depths",
+                    Json::arr(
+                        d.cond_buffer_depths
+                            .iter()
+                            .map(|&x| Json::num(x as f64)),
+                    ),
+                ),
                 ("total_resources", d.total_resources.to_json()),
                 ("foldings", foldings(&d.mapping)),
             ])
@@ -453,13 +530,18 @@ impl Realized {
             ("network", Json::str(self.net.name.clone())),
             ("board", Json::str(self.opts.board.name)),
             ("fingerprint", Json::str(fingerprint(&self.net, &self.opts))),
-            ("p", Json::Num(self.p)),
+            (
+                "reach",
+                Json::arr(self.reach.iter().map(|&r| Json::Num(r))),
+            ),
             (
                 "curves",
                 Json::obj(vec![
                     ("baseline", self.baseline_curve.to_json()),
-                    ("stage1", self.stage1_curve.to_json()),
-                    ("stage2", self.stage2_curve.to_json()),
+                    (
+                        "stages",
+                        Json::arr(self.stage_curves.iter().map(|c| c.to_json())),
+                    ),
                 ]),
             ),
             ("baselines", Json::arr(baselines)),
@@ -479,7 +561,9 @@ impl Realized {
         };
         anyhow::ensure!(
             num(doc, "schema")? as u32 == DESIGN_SCHEMA_VERSION,
-            "design artifact schema mismatch"
+            "design artifact schema mismatch (stored {}, expected {})",
+            num(doc, "schema")? as u32,
+            DESIGN_SCHEMA_VERSION
         );
         let fp = fingerprint(net, opts);
         anyhow::ensure!(
@@ -521,6 +605,33 @@ impl Realized {
         let base_cdfg = Cdfg::lower_baseline(net);
         let curves = doc.req("curves")?;
 
+        let reach = doc
+            .req("reach")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'reach' must be an array"))?
+            .iter()
+            .map(|x| {
+                x.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("'reach' entries must be numbers"))
+            })
+            .collect::<anyhow::Result<Vec<f64>>>()?;
+        anyhow::ensure!(
+            reach.len() == net.n_exits(),
+            "design artifact reach vector does not match the network's exits"
+        );
+
+        let stage_curves = curves
+            .req("stages")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'curves.stages' must be an array"))?
+            .iter()
+            .map(TapCurve::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        anyhow::ensure!(
+            stage_curves.len() == ee_cdfg.n_sections,
+            "design artifact stage-curve count does not match the network"
+        );
+
         let mut baselines = Vec::new();
         for b in doc
             .req("baselines")?
@@ -544,8 +655,23 @@ impl Realized {
             .ok_or_else(|| anyhow::anyhow!("'designs' must be an array"))?
         {
             let mut mapping = load_foldings(d.req("foldings")?, &ee_cdfg)?;
-            let depth = num(d, "cond_buffer_depth")? as usize;
-            mapping.set_cond_buffer_depth(depth);
+            let depths = d
+                .req("cond_buffer_depths")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'cond_buffer_depths' must be an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("buffer depth must be a number"))
+                })
+                .collect::<anyhow::Result<Vec<usize>>>()?;
+            anyhow::ensure!(
+                depths.len() == ee_cdfg.n_exits(),
+                "design artifact buffer-depth count does not match the network"
+            );
+            for (e, &depth) in depths.iter().enumerate() {
+                mapping.set_cond_buffer_depth(e, depth);
+            }
             let total = ResourceVec::from_json(d.req("total_resources")?)?;
             anyhow::ensure!(
                 mapping.total_resources() == total,
@@ -559,9 +685,9 @@ impl Realized {
             );
             designs.push(RealizedDesign {
                 budget_fraction: num(d, "budget_fraction")?,
-                combined: CombinedDesign::from_json(d.req("combined")?)?,
+                combined: MultiStageDesign::from_json(d.req("combined")?)?,
                 timing: DesignTiming::from_ee_mapping(&mapping),
-                cond_buffer_depth: depth,
+                cond_buffer_depths: depths,
                 total_resources: total,
                 manifest,
                 mapping,
@@ -572,10 +698,9 @@ impl Realized {
         Ok(Realized {
             net: net.clone(),
             opts: opts.clone(),
-            p: num(doc, "p")?,
+            reach,
             baseline_curve: TapCurve::from_json(curves.req("baseline")?)?,
-            stage1_curve: TapCurve::from_json(curves.req("stage1")?)?,
-            stage2_curve: TapCurve::from_json(curves.req("stage2")?)?,
+            stage_curves,
             baselines,
             designs,
         })
@@ -641,10 +766,9 @@ impl Realized {
 /// stage, isomorphic to the legacy [`ToolflowResult`].
 pub struct Measured {
     pub network: String,
-    pub p: f64,
+    pub reach: Vec<f64>,
     pub baseline_curve: TapCurve,
-    pub stage1_curve: TapCurve,
-    pub stage2_curve: TapCurve,
+    pub stage_curves: Vec<TapCurve>,
     pub baseline_designs: Vec<BaselineDesign>,
     pub designs: Vec<ChosenDesign>,
 }
@@ -654,10 +778,9 @@ impl Measured {
     pub fn into_result(self) -> ToolflowResult {
         ToolflowResult {
             network: self.network,
-            p: self.p,
+            reach: self.reach,
             baseline_curve: self.baseline_curve,
-            stage1_curve: self.stage1_curve,
-            stage2_curve: self.stage2_curve,
+            stage_curves: self.stage_curves,
             baseline_designs: self.baseline_designs,
             designs: self.designs,
         }
@@ -668,29 +791,29 @@ impl Measured {
 // Shared helpers
 // ---------------------------------------------------------------------
 
-/// Merge per-stage annealed foldings into one full-CDFG mapping
-/// (stage-1/exit/egress foldings from the stage-1 optimum, stage-2 from
-/// the stage-2 optimum).
-pub fn merge_mappings(cdfg: &Cdfg, s1: &AnnealResult, s2: &AnnealResult) -> HwMapping {
+/// Merge per-stage annealed foldings into one full-CDFG mapping: each
+/// node takes its folding from the anneal result of the section that
+/// owns it (Egress from section 0, which hosts the full-rate front).
+pub fn merge_stage_mappings(cdfg: &Cdfg, per_stage: &[&AnnealResult]) -> HwMapping {
     let mut merged = HwMapping::minimal(cdfg.clone());
     for node in &cdfg.nodes {
-        let from = match node.stage {
-            StageId::Stage1 | StageId::ExitBranch | StageId::Egress => &s1.mapping,
-            StageId::Stage2 => &s2.mapping,
+        let sec = match node.stage {
+            StageId::Backbone(i) | StageId::ExitBranch(i) => i,
+            StageId::Egress => 0,
         };
-        merged.foldings[node.id] = from.foldings[node.id];
+        merged.foldings[node.id] = per_stage[sec].mapping.foldings[node.id];
     }
     merged
 }
 
 /// Cache fingerprint over every input that shapes a *realized* design:
-/// network structure + profiled p, board, and the design-time toolflow
-/// options (sweep ladder + anneal schedule, buffer margin, p override).
-/// Measurement-only options — `q_values`, `batch`, `sim`, `seed` — are
-/// deliberately excluded: they are consumed exclusively by
-/// `Realized::measure`, which always re-runs, so keying on them would
-/// only defeat the cache. FNV-1a over a canonical field string; floats
-/// contribute their exact bit patterns.
+/// network structure + profiled reach probabilities, board, and the
+/// design-time toolflow options (sweep ladder + anneal schedule, buffer
+/// margin, p override). Measurement-only options — `q_values`, `batch`,
+/// `sim`, `seed` — are deliberately excluded: they are consumed
+/// exclusively by `Realized::measure`, which always re-runs, so keying
+/// on them would only defeat the cache. FNV-1a over a canonical field
+/// string; floats contribute their exact bit patterns.
 pub fn fingerprint(net: &Network, opts: &ToolflowOptions) -> String {
     let mut s = String::new();
     let mut push = |part: &str| {
@@ -724,15 +847,25 @@ pub fn fingerprint(net: &Network, opts: &ToolflowOptions) -> String {
     push(&format!("{}", net.input_shape));
     push(&format!("classes{}", net.classes));
     push(&f(net.c_thr));
-    push(&f(net.p_profile));
-    for (tag, group) in [
-        ("s1", &net.stage1),
-        ("exit", &net.exit_branch),
-        ("s2", &net.stage2),
-    ] {
+    push(&format!("exits{}", net.n_exits()));
+    for &r in &net.reach_profile {
+        push(&f(r));
+    }
+    for (i, group) in net.sections.iter().enumerate() {
         for l in group {
             push(&format!(
-                "{tag}:{}:{}:{}:{}",
+                "s{i}:{}:{}:{}:{}",
+                l.op.name(),
+                l.in_shape,
+                l.out_shape,
+                l.op.weight_count(&l.in_shape)
+            ));
+        }
+    }
+    for (i, group) in net.exit_branches.iter().enumerate() {
+        for l in group {
+            push(&format!(
+                "exit{i}:{}:{}:{}:{}",
                 l.op.name(),
                 l.in_shape,
                 l.out_shape,
@@ -774,14 +907,18 @@ mod tests {
         assert!(lowered.ee_cdfg.nodes.len() > lowered.base_cdfg.nodes.len());
 
         let curves = lowered.sweep().unwrap();
-        assert!(!curves.stage1_curve.is_empty() && !curves.stage2_curve.is_empty());
-        assert_eq!(curves.s1_results.len(), opts.sweep.fractions.len());
+        assert_eq!(curves.stage_curves.len(), 2);
+        assert!(curves.stage_curves.iter().all(|c| !c.is_empty()));
+        assert_eq!(curves.stage_results[0].len(), opts.sweep.fractions.len());
 
         let combined = curves.combine().unwrap();
         assert!(!combined.choices.is_empty());
         for c in &combined.choices {
             // Every choice links back into real sweep results.
-            assert!(c.combined.stage1.source < opts.sweep.fractions.len());
+            assert_eq!(c.combined.stages.len(), 2);
+            for pt in &c.combined.stages {
+                assert!(pt.source < opts.sweep.fractions.len());
+            }
         }
 
         let realized = combined.realize().unwrap();
@@ -796,16 +933,50 @@ mod tests {
     }
 
     #[test]
+    fn three_exit_chain_end_to_end() {
+        // The N-exit capability: the full pipeline on a 3-section
+        // network — per-stage curves, multi-stage Eq. 1, per-exit
+        // buffers, simulated per-exit measurement.
+        let net = testnet::three_exit();
+        let mut opts = quick_opts();
+        opts.q_values = vec![0.3, 0.4];
+        let curves = Toolflow::new(&net, &opts).unwrap().sweep().unwrap();
+        assert_eq!(curves.stage_curves.len(), 3);
+        assert_eq!(curves.section_reach(), vec![1.0, 0.40, 0.15]);
+
+        let realized = curves.combine().unwrap().realize().unwrap();
+        for d in &realized.designs {
+            assert_eq!(d.combined.stages.len(), 3);
+            assert_eq!(d.cond_buffer_depths.len(), 2);
+            assert!(d.cond_buffer_depths.iter().all(|&x| x >= 1));
+            assert_eq!(d.timing.sections.len(), 3);
+            assert_eq!(d.timing.exits.len(), 2);
+        }
+
+        let measured = realized.measure(None).unwrap();
+        let best = measured.designs.first().unwrap();
+        for (q, m) in &best.measured {
+            assert!(m.deadlock.is_none(), "deadlock at q={q}");
+            assert!(m.throughput_sps > 0.0);
+            // Per-exit completion rates cover all three paths and sum
+            // to one.
+            assert_eq!(m.exit_rates.len(), 3);
+            let sum: f64 = m.exit_rates.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
     fn parallel_and_sequential_sweeps_agree() {
         let net = testnet::blenet_like();
         let opts = quick_opts();
         let par = Toolflow::new(&net, &opts).unwrap().sweep().unwrap();
         let seq = Toolflow::new(&net, &opts).unwrap().sweep_sequential().unwrap();
-        for (a, b) in [
-            (&par.baseline_curve, &seq.baseline_curve),
-            (&par.stage1_curve, &seq.stage1_curve),
-            (&par.stage2_curve, &seq.stage2_curve),
-        ] {
+        let mut pairs = vec![(&par.baseline_curve, &seq.baseline_curve)];
+        for (a, b) in par.stage_curves.iter().zip(&seq.stage_curves) {
+            pairs.push((a, b));
+        }
+        for (a, b) in pairs {
             assert_eq!(a.points.len(), b.points.len());
             for (x, y) in a.points.iter().zip(&b.points) {
                 assert_eq!(x.throughput.to_bits(), y.throughput.to_bits());
@@ -816,21 +987,24 @@ mod tests {
     }
 
     #[test]
-    fn recorded_buffer_depth_matches_mapping() {
-        // The margin-shrink retry must record the depth actually sized
+    fn recorded_buffer_depths_match_mapping() {
+        // The margin-shrink retry must record the depths actually sized
         // into the mapping (regression for the stale-depth bug).
-        let net = testnet::blenet_like();
-        let r = Toolflow::new(&net, &quick_opts())
-            .unwrap()
-            .sweep()
-            .unwrap()
-            .combine()
-            .unwrap()
-            .realize()
-            .unwrap();
-        for d in &r.designs {
-            assert_eq!(d.cond_buffer_depth, d.mapping.cond_buffer_depth());
-            assert_eq!(d.timing.cond_buffer_depth, d.cond_buffer_depth);
+        for net in [testnet::blenet_like(), testnet::three_exit()] {
+            let r = Toolflow::new(&net, &quick_opts())
+                .unwrap()
+                .sweep()
+                .unwrap()
+                .combine()
+                .unwrap()
+                .realize()
+                .unwrap();
+            for d in &r.designs {
+                assert_eq!(d.cond_buffer_depths, d.mapping.cond_buffer_depths());
+                for (e, &depth) in d.cond_buffer_depths.iter().enumerate() {
+                    assert_eq!(d.timing.cond_buffer_depth(e), depth);
+                }
+            }
         }
     }
 
@@ -852,6 +1026,17 @@ mod tests {
         let mut n2 = net.clone();
         n2.c_thr += 0.001;
         assert_ne!(base, fingerprint(&n2, &opts), "network must re-key");
+
+        let mut n3 = net.clone();
+        n3.reach_profile = vec![0.30];
+        assert_ne!(base, fingerprint(&n3, &opts), "reach probs must re-key");
+
+        let three = testnet::three_exit();
+        assert_ne!(
+            fingerprint(&three, &opts),
+            base,
+            "different exit count must re-key"
+        );
 
         // Measurement-only options are consumed by `measure` (which
         // always re-runs) and must NOT defeat the cache.

@@ -1,9 +1,12 @@
 //! Streaming serving front end — the deployment shape of the paper's
 //! architecture (throughput-oriented, latency-constrained, no runtime
 //! reconfiguration): requests stream in, a dynamic batcher groups them,
-//! a stage-1 worker classifies and *routes* — easy samples complete
-//! immediately (early exit), hard samples are forwarded to a stage-2
-//! worker, mirroring the Conditional Buffer's dataflow in software.
+//! and a **chain of stage workers** mirrors the N-exit hardware
+//! pipeline in software. Worker 0 classifies at the first exit and
+//! routes — easy samples complete immediately (early exit), hard
+//! samples are forwarded to the next stage worker, which exits or
+//! forwards in turn, until the final worker answers whatever is left:
+//! the Conditional Buffers' dataflow, one mpsc channel per buffer.
 //!
 //! Threading note: the vendored crate set has no tokio, and PJRT client
 //! handles are not `Send`; each worker thread therefore owns its own
@@ -45,6 +48,9 @@ pub struct Response {
     pub id: u64,
     pub pred: usize,
     pub exited_early: bool,
+    /// Pipeline section the sample completed at (exit index, or
+    /// `n_sections - 1` for the final classifier).
+    pub exit_stage: usize,
     pub latency: Duration,
 }
 
@@ -55,6 +61,8 @@ struct Request {
     resp: mpsc::Sender<Response>,
 }
 
+/// A sample forwarded past an exit: the software Conditional Buffer
+/// payload.
 struct HardSample {
     id: u64,
     features: Vec<f32>,
@@ -62,22 +70,59 @@ struct HardSample {
     resp: mpsc::Sender<Response>,
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ServerStats {
     pub served: AtomicU64,
-    pub exited_early: AtomicU64,
-    pub stage2: AtomicU64,
+    /// Completions per pipeline section (exit 0, exit 1, …, final).
+    pub completions: Vec<AtomicU64>,
     pub batches: AtomicU64,
     pub errors: AtomicU64,
 }
 
 impl ServerStats {
+    fn new(n_sections: usize) -> ServerStats {
+        ServerStats {
+            served: AtomicU64::new(0),
+            completions: (0..n_sections).map(|_| AtomicU64::new(0)).collect(),
+            batches: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+        }
+    }
+
+    fn record(&self, stage: usize) {
+        self.served.fetch_add(1, Ordering::Relaxed);
+        if let Some(c) = self.completions.get(stage) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Fraction of served samples that took *any* early exit.
     pub fn exit_rate(&self) -> f64 {
         let served = self.served.load(Ordering::Relaxed);
         if served == 0 {
             return 0.0;
         }
-        self.exited_early.load(Ordering::Relaxed) as f64 / served as f64
+        let final_n = self
+            .completions
+            .last()
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0);
+        (served - final_n) as f64 / served as f64
+    }
+
+    /// Per-section completion rates (exit 0, …, final).
+    pub fn completion_rates(&self) -> Vec<f64> {
+        let served = self.served.load(Ordering::Relaxed);
+        self.completions
+            .iter()
+            .map(|c| {
+                if served == 0 {
+                    0.0
+                } else {
+                    c.load(Ordering::Relaxed) as f64 / served as f64
+                }
+            })
+            .collect()
     }
 }
 
@@ -90,113 +135,187 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the two worker threads (each compiles its own executables on
-    /// its own PJRT client) and return the submission handle.
+    /// Start one worker thread per pipeline section (each compiles its
+    /// own executables on its own PJRT client) and return the submission
+    /// handle. Hard samples ride the channel chain downstream exactly as
+    /// they would cross the hardware's Conditional Buffers.
     pub fn start(cfg: ServerConfig) -> anyhow::Result<Server> {
-        let stats = Arc::new(ServerStats::default());
-        let (req_tx, req_rx) = mpsc::channel::<Request>();
-        let (hard_tx, hard_rx) = mpsc::channel::<HardSample>();
-
-        // Fail fast on bad config before spawning threads.
-        {
+        // Fail fast on bad config before spawning threads, and learn the
+        // pipeline depth.
+        let n_sections = {
             let probe = ArtifactStore::open(&cfg.artifacts_dir)?;
-            probe.network(&cfg.network)?;
+            probe.network(&cfg.network)?.n_sections()
+        };
+        anyhow::ensure!(n_sections >= 2, "serving needs at least one exit");
+
+        let stats = Arc::new(ServerStats::new(n_sections));
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+
+        // One forwarding channel per Conditional Buffer: worker i sends
+        // its hard samples to worker i + 1.
+        let mut hard_txs: Vec<mpsc::Sender<HardSample>> = Vec::new();
+        let mut hard_rxs: Vec<mpsc::Receiver<HardSample>> = Vec::new();
+        for _ in 0..n_sections - 1 {
+            let (tx, rx) = mpsc::channel::<HardSample>();
+            hard_txs.push(tx);
+            hard_rxs.push(rx);
+        }
+        // Consumed back-to-front so each spawned worker takes its ends.
+        let mut workers = Vec::new();
+
+        // ---- stage-0 worker: dynamic batcher + router ----
+        {
+            let stats = stats.clone();
+            let cfg = cfg.clone();
+            let downstream = hard_txs[0].clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name("atheena-stage1".into())
+                    .spawn(move || {
+                        let store = ArtifactStore::open(&cfg.artifacts_dir)
+                            .expect("stage1 worker: artifacts");
+                        let exec = store.exit_stage(&cfg.network, 0).expect("stage1 compile");
+                        let mut pending: Vec<Request> = Vec::new();
+                        loop {
+                            // Block for the first request of a batch.
+                            let first = match req_rx.recv() {
+                                Ok(r) => r,
+                                Err(_) => break, // all senders gone: shutdown
+                            };
+                            let deadline = Instant::now() + cfg.batch_timeout;
+                            pending.push(first);
+                            // Dynamic batching: gather until full or timed out.
+                            while pending.len() < cfg.max_batch {
+                                let now = Instant::now();
+                                if now >= deadline {
+                                    break;
+                                }
+                                match req_rx.recv_timeout(deadline - now) {
+                                    Ok(r) => pending.push(r),
+                                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                                }
+                            }
+                            stats.batches.fetch_add(1, Ordering::Relaxed);
+                            for req in pending.drain(..) {
+                                match exec.run(&req.image) {
+                                    Ok(out) if out.take_exit => {
+                                        stats.record(0);
+                                        let _ = req.resp.send(Response {
+                                            id: req.id,
+                                            pred: argmax(&out.exit_probs),
+                                            exited_early: true,
+                                            exit_stage: 0,
+                                            latency: req.submitted.elapsed(),
+                                        });
+                                    }
+                                    Ok(out) => {
+                                        // Route hard sample downstream.
+                                        let _ = downstream.send(HardSample {
+                                            id: req.id,
+                                            features: out.features,
+                                            submitted: req.submitted,
+                                            resp: req.resp,
+                                        });
+                                    }
+                                    Err(_) => {
+                                        stats.errors.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                }
+                            }
+                        }
+                        drop(downstream); // propagate shutdown down the chain
+                    })?,
+            );
         }
 
-        // ---- stage-1 worker: dynamic batcher + router ----
-        let s1_stats = stats.clone();
-        let s1_cfg = cfg.clone();
-        let stage1 = std::thread::Builder::new()
-            .name("atheena-stage1".into())
-            .spawn(move || {
-                let store = ArtifactStore::open(&s1_cfg.artifacts_dir)
-                    .expect("stage1 worker: artifacts");
-                let exec = store.stage1(&s1_cfg.network).expect("stage1 compile");
-                let mut pending: Vec<Request> = Vec::new();
-                loop {
-                    // Block for the first request of a batch.
-                    let first = match req_rx.recv() {
-                        Ok(r) => r,
-                        Err(_) => break, // all senders gone: shutdown
-                    };
-                    let deadline = Instant::now() + s1_cfg.batch_timeout;
-                    pending.push(first);
-                    // Dynamic batching: gather until full or timed out.
-                    while pending.len() < s1_cfg.max_batch {
-                        let now = Instant::now();
-                        if now >= deadline {
-                            break;
-                        }
-                        match req_rx.recv_timeout(deadline - now) {
-                            Ok(r) => pending.push(r),
-                            Err(mpsc::RecvTimeoutError::Timeout) => break,
-                            Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                        }
-                    }
-                    s1_stats.batches.fetch_add(1, Ordering::Relaxed);
-                    for req in pending.drain(..) {
-                        match exec.run(&req.image) {
-                            Ok(out) if out.take_exit => {
-                                s1_stats.served.fetch_add(1, Ordering::Relaxed);
-                                s1_stats.exited_early.fetch_add(1, Ordering::Relaxed);
-                                let _ = req.resp.send(Response {
-                                    id: req.id,
-                                    pred: argmax(&out.exit_probs),
-                                    exited_early: true,
-                                    latency: req.submitted.elapsed(),
-                                });
-                            }
-                            Ok(out) => {
-                                // Route hard sample to stage 2.
-                                let _ = hard_tx.send(HardSample {
-                                    id: req.id,
-                                    features: out.features,
-                                    submitted: req.submitted,
-                                    resp: req.resp,
-                                });
-                            }
-                            Err(_) => {
-                                s1_stats.errors.fetch_add(1, Ordering::Relaxed);
+        // ---- intermediate exit workers (sections 1 .. n-2) ----
+        let mut rx_iter = hard_rxs.into_iter();
+        for sec in 1..n_sections - 1 {
+            let stats = stats.clone();
+            let cfg = cfg.clone();
+            let rx = rx_iter.next().expect("one rx per buffer");
+            let downstream = hard_txs[sec].clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("atheena-stage{}", sec + 1))
+                    .spawn(move || {
+                        let store = ArtifactStore::open(&cfg.artifacts_dir)
+                            .unwrap_or_else(|e| panic!("stage{} worker: {e}", sec + 1));
+                        let exec = store
+                            .exit_stage(&cfg.network, sec)
+                            .unwrap_or_else(|e| panic!("stage{} compile: {e}", sec + 1));
+                        while let Ok(h) = rx.recv() {
+                            match exec.run(&h.features) {
+                                Ok(out) if out.take_exit => {
+                                    stats.record(sec);
+                                    let _ = h.resp.send(Response {
+                                        id: h.id,
+                                        pred: argmax(&out.exit_probs),
+                                        exited_early: true,
+                                        exit_stage: sec,
+                                        latency: h.submitted.elapsed(),
+                                    });
+                                }
+                                Ok(out) => {
+                                    let _ = downstream.send(HardSample {
+                                        id: h.id,
+                                        features: out.features,
+                                        submitted: h.submitted,
+                                        resp: h.resp,
+                                    });
+                                }
+                                Err(_) => {
+                                    stats.errors.fetch_add(1, Ordering::Relaxed);
+                                }
                             }
                         }
-                    }
-                }
-                drop(hard_tx); // propagate shutdown to stage 2
-            })?;
+                    })?,
+            );
+        }
 
-        // ---- stage-2 worker ----
-        let s2_stats = stats.clone();
-        let s2_cfg = cfg.clone();
-        let stage2 = std::thread::Builder::new()
-            .name("atheena-stage2".into())
-            .spawn(move || {
-                let store = ArtifactStore::open(&s2_cfg.artifacts_dir)
-                    .expect("stage2 worker: artifacts");
-                let exec = store.stage2(&s2_cfg.network).expect("stage2 compile");
-                while let Ok(h) = hard_rx.recv() {
-                    match exec.run(&h.features) {
-                        Ok(probs) => {
-                            s2_stats.served.fetch_add(1, Ordering::Relaxed);
-                            s2_stats.stage2.fetch_add(1, Ordering::Relaxed);
-                            let _ = h.resp.send(Response {
-                                id: h.id,
-                                pred: argmax(&probs),
-                                exited_early: false,
-                                latency: h.submitted.elapsed(),
-                            });
+        // ---- final-stage worker ----
+        {
+            let stats = stats.clone();
+            let cfg = cfg.clone();
+            let rx = rx_iter.next().expect("final rx");
+            let final_stage = n_sections - 1;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("atheena-stage{n_sections}"))
+                    .spawn(move || {
+                        let store = ArtifactStore::open(&cfg.artifacts_dir)
+                            .expect("final worker: artifacts");
+                        let exec = store.final_stage(&cfg.network).expect("final compile");
+                        while let Ok(h) = rx.recv() {
+                            match exec.run(&h.features) {
+                                Ok(probs) => {
+                                    stats.record(final_stage);
+                                    let _ = h.resp.send(Response {
+                                        id: h.id,
+                                        pred: argmax(&probs),
+                                        exited_early: false,
+                                        exit_stage: final_stage,
+                                        latency: h.submitted.elapsed(),
+                                    });
+                                }
+                                Err(_) => {
+                                    stats.errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
                         }
-                        Err(_) => {
-                            s2_stats.errors.fetch_add(1, Ordering::Relaxed);
-                        }
-                    }
-                }
-            })?;
+                    })?,
+            );
+        }
+        // Drop the original senders: each worker owns a clone, so a
+        // channel closes exactly when its upstream worker exits.
+        drop(hard_txs);
 
         Ok(Server {
             tx: req_tx,
             next_id: AtomicU64::new(0),
             stats,
-            workers: vec![stage1, stage2],
+            workers,
         })
     }
 

@@ -4,15 +4,16 @@
 //! This module keeps the original monolithic entry point
 //! [`run_toolflow`] and its result types, but the implementation now
 //! lives in the staged pipeline (`coordinator::pipeline`): lowering →
-//! parallel TAP sweeps → Eq. 1 combination → buffer sizing/realization →
-//! simulated measurement, each stage a typed artifact. `run_toolflow` is
-//! a thin wrapper that drives the chain end to end; callers that want
+//! parallel TAP sweeps → multi-stage Eq. 1 combination → per-exit buffer
+//! sizing/realization → simulated measurement, each stage a typed
+//! artifact carrying `Vec`s of per-section data. `run_toolflow` is a
+//! thin wrapper that drives the chain end to end; callers that want
 //! caching or partial reruns should use the pipeline directly.
 
 use crate::resources::{Board, ResourceVec};
 use crate::sdf::HwMapping;
 use crate::sim::{DesignTiming, SimConfig, SimMetrics};
-use crate::tap::{CombinedDesign, TapCurve};
+use crate::tap::{MultiStageDesign, TapCurve};
 use crate::util::Rng;
 use crate::{dse::SweepConfig, hls::DesignManifest};
 use crate::ir::Network;
@@ -24,15 +25,20 @@ pub use crate::dse::annealer::AnnealResult as StageResult;
 #[derive(Clone, Debug)]
 pub struct ToolflowOptions {
     pub board: Board,
-    /// Design-time hard-sample probability; None = use the profiled p
-    /// recorded in the network artifact.
+    /// Design-time hard-sample probability at the first exit; None = use
+    /// the profiled reach vector recorded in the network artifact. For
+    /// deeper networks the whole profiled reach vector is scaled
+    /// proportionally.
     pub p_override: Option<f64>,
     pub sweep: SweepConfig,
-    /// Robustness margin added to the minimum Conditional Buffer depth.
+    /// Robustness margin added to each Conditional Buffer's minimum
+    /// depth.
     pub buffer_margin: usize,
     /// Batch size for simulated measurements (the paper uses 1024).
     pub batch: usize,
-    /// q values to evaluate the chosen designs at (paper: 20/25/30%).
+    /// First-exit q values to evaluate the chosen designs at (paper:
+    /// 20/25/30%). For N-exit networks the deeper reach probabilities
+    /// are scaled by `q / p`.
     pub q_values: Vec<f64>,
     pub sim: SimConfig,
     pub seed: u64,
@@ -72,13 +78,14 @@ impl ToolflowOptions {
 #[derive(Clone, Debug)]
 pub struct ChosenDesign {
     pub budget_fraction: f64,
-    pub combined: CombinedDesign,
-    /// Merged full-CDFG mapping (stage-1 foldings from the stage-1
-    /// optimum, stage-2 from the stage-2 optimum), buffer sized.
+    pub combined: MultiStageDesign,
+    /// Merged full-CDFG mapping (each section's foldings from that
+    /// section's optimum), buffers sized.
     pub mapping: HwMapping,
     pub manifest: DesignManifest,
     pub timing: DesignTiming,
-    pub cond_buffer_depth: usize,
+    /// Conditional Buffer depths, one per exit.
+    pub cond_buffer_depths: Vec<usize>,
     pub total_resources: ResourceVec,
     /// Simulated measurement at each requested q: (q, metrics).
     pub measured: Vec<(f64, SimMetrics)>,
@@ -97,20 +104,27 @@ pub struct BaselineDesign {
 #[derive(Debug)]
 pub struct ToolflowResult {
     pub network: String,
-    pub p: f64,
+    /// Design-time reach probabilities past each exit (`reach[0]` is the
+    /// two-stage "p").
+    pub reach: Vec<f64>,
     pub baseline_curve: TapCurve,
-    pub stage1_curve: TapCurve,
-    pub stage2_curve: TapCurve,
+    /// One TAP curve per pipeline section.
+    pub stage_curves: Vec<TapCurve>,
     pub baseline_designs: Vec<BaselineDesign>,
     pub designs: Vec<ChosenDesign>,
 }
 
 impl ToolflowResult {
+    /// Design-time hard probability at the first exit (two-stage "p").
+    pub fn p(&self) -> f64 {
+        self.reach.first().copied().unwrap_or(0.0)
+    }
+
     pub fn best_design(&self) -> Option<&ChosenDesign> {
         self.designs.iter().max_by(|a, b| {
             a.combined
-                .throughput_at_p
-                .total_cmp(&b.combined.throughput_at_p)
+                .throughput_at_design
+                .total_cmp(&b.combined.throughput_at_design)
         })
     }
 
@@ -134,12 +148,36 @@ pub fn synthetic_hard_flags(q: f64, batch: usize, seed: u64) -> Vec<bool> {
     flags
 }
 
+/// Generate per-sample completion stages for an N-exit simulated
+/// measurement: `reach_past[i]` is the runtime probability of travelling
+/// past exit `i`. Exact counts `round(reach_past[i] * batch)` (made
+/// non-increasing), randomly placed. For a single exit this reduces to
+/// [`synthetic_hard_flags`] with identical placement at equal seeds.
+pub fn synthetic_exit_stages(reach_past: &[f64], batch: usize, seed: u64) -> Vec<usize> {
+    let mut past: Vec<usize> = reach_past
+        .iter()
+        .map(|&r| (r.clamp(0.0, 1.0) * batch as f64).round() as usize)
+        .collect();
+    for i in 1..past.len() {
+        past[i] = past[i].min(past[i - 1]);
+    }
+    let mut stages = vec![0usize; batch];
+    for (i, &count) in past.iter().enumerate() {
+        for s in stages.iter_mut().take(count.min(batch)) {
+            *s = i + 1;
+        }
+    }
+    Rng::new(seed).shuffle(&mut stages);
+    stages
+}
+
 /// Run the full toolflow for one network on one board — a compatibility
 /// wrapper over the staged pipeline (lower → sweep → combine → realize →
 /// measure).
 ///
-/// `hard_flags_for_q`: optional provider of per-sample hard flags (the
-/// coordinator passes test-set-backed flags; None falls back to
+/// `hard_flags_for_q`: optional provider of per-sample hard flags for
+/// two-stage networks (the coordinator passes test-set-backed flags;
+/// None — and any network with more than one exit — falls back to
 /// synthetic placement).
 pub fn run_toolflow(
     net: &Network,
@@ -168,12 +206,31 @@ mod tests {
         assert!(!r.baseline_designs.is_empty());
         let best = r.best_design().unwrap();
         assert!(best.total_resources.fits_in(&Board::zc706().resources));
-        assert!(best.cond_buffer_depth >= 1);
+        assert_eq!(best.cond_buffer_depths.len(), 1);
+        assert!(best.cond_buffer_depths[0] >= 1);
         // Simulated measurements exist for every q.
         assert_eq!(best.measured.len(), 3);
         for (q, m) in &best.measured {
             assert!(m.deadlock.is_none(), "deadlock at q={q}");
             assert!(m.throughput_sps > 0.0);
+        }
+    }
+
+    #[test]
+    fn toolflow_end_to_end_on_three_exit_testnet() {
+        let net = testnet::three_exit();
+        let mut opts = ToolflowOptions::quick(Board::zc706());
+        opts.q_values = vec![0.35, 0.45];
+        let r = run_toolflow(&net, &opts, None).unwrap();
+        assert_eq!(r.reach, vec![0.40, 0.15]);
+        assert_eq!(r.stage_curves.len(), 3);
+        let best = r.best_design().unwrap();
+        assert_eq!(best.combined.stages.len(), 3);
+        assert_eq!(best.cond_buffer_depths.len(), 2);
+        for (q, m) in &best.measured {
+            assert!(m.deadlock.is_none(), "deadlock at q={q}");
+            assert!(m.throughput_sps > 0.0);
+            assert_eq!(m.exit_rates.len(), 3, "per-exit rates at q={q}");
         }
     }
 
@@ -220,5 +277,29 @@ mod tests {
     fn synthetic_flags_have_exact_count() {
         let f = synthetic_hard_flags(0.25, 1024, 7);
         assert_eq!(f.iter().filter(|&&x| x).count(), 256);
+    }
+
+    #[test]
+    fn synthetic_exit_stages_have_exact_counts() {
+        let stages = synthetic_exit_stages(&[0.5, 0.125], 1024, 9);
+        assert_eq!(stages.len(), 1024);
+        let past0 = stages.iter().filter(|&&s| s >= 1).count();
+        let past1 = stages.iter().filter(|&&s| s >= 2).count();
+        assert_eq!(past0, 512);
+        assert_eq!(past1, 128);
+    }
+
+    #[test]
+    fn synthetic_exit_stages_single_exit_matches_hard_flags() {
+        // The N = 1 case must place hard samples exactly where
+        // synthetic_hard_flags does, so two-stage measurements are
+        // unchanged by the multi-exit generalization.
+        for (q, seed) in [(0.25, 7u64), (0.4, 99), (0.0, 3), (1.0, 12)] {
+            let flags = synthetic_hard_flags(q, 256, seed);
+            let stages = synthetic_exit_stages(&[q], 256, seed);
+            for (f, s) in flags.iter().zip(&stages) {
+                assert_eq!(usize::from(*f), *s);
+            }
+        }
     }
 }

@@ -94,9 +94,10 @@ impl EvalCache {
         let res: Vec<_> = (0..mapping.cdfg.nodes.len())
             .map(|id| mapping.node_resources(id))
             .collect();
-        let mut total_res = match problem.kind {
-            super::problem::ProblemKind::Stage2 => crate::resources::ResourceVec::ZERO,
-            _ => crate::resources::model::infrastructure(),
+        let mut total_res = if Problem::charges_infrastructure(problem.kind) {
+            crate::resources::model::infrastructure()
+        } else {
+            crate::resources::ResourceVec::ZERO
         };
         for &id in &problem.active {
             total_res += res[id];

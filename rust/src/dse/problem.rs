@@ -4,9 +4,10 @@
 //! The paper generates *separate* TAP functions for each stage of the EE
 //! network (§III-A) by giving the optimizer "limited fractions of the
 //! board resource constraints". A `Problem` captures one such sub-design:
-//! the baseline backbone, the full-rate first stage (backbone prefix +
-//! split + exit classifier + decision + merge), or the hard-sample second
-//! stage (conditional buffer + backbone suffix).
+//! the baseline backbone, or EE pipeline section `i` — its backbone
+//! nodes, its exit branch (when it has one), and (for section 0, the
+//! full-rate front) the Egress. The number of sections is data, not part
+//! of the type.
 
 use crate::ir::{Cdfg, StageId};
 use crate::resources::{model, ResourceVec};
@@ -16,10 +17,10 @@ use crate::sdf::HwMapping;
 pub enum ProblemKind {
     /// Single-stage baseline network (whole backbone, full rate).
     Baseline,
-    /// EE stage 1: everything running at the input sample rate.
-    Stage1,
-    /// EE stage 2: the section behind the Conditional Buffer.
-    Stage2,
+    /// EE pipeline section `i`: `Stage(0)` is the paper's stage 1
+    /// (everything at the input sample rate), `Stage(i)` for `i > 0` the
+    /// section behind Conditional Buffer `i - 1`.
+    Stage(usize),
 }
 
 /// One DSE instance over a node subset of a mapping.
@@ -47,22 +48,23 @@ impl Problem {
         }
     }
 
-    pub fn stage1(cdfg: Cdfg, budget: ResourceVec, clock_hz: f64) -> Problem {
+    /// The DSE problem for EE pipeline section `sec`: its backbone
+    /// nodes and exit branch, plus the Egress for the full-rate front
+    /// (section 0).
+    pub fn stage(sec: usize, cdfg: Cdfg, budget: ResourceVec, clock_hz: f64) -> Problem {
         let mapping = HwMapping::minimal(cdfg);
         let active = mapping
             .cdfg
             .nodes
             .iter()
-            .filter(|n| {
-                matches!(
-                    n.stage,
-                    StageId::Stage1 | StageId::ExitBranch | StageId::Egress
-                )
+            .filter(|n| match n.stage {
+                StageId::Backbone(i) | StageId::ExitBranch(i) => i == sec,
+                StageId::Egress => sec == 0,
             })
             .map(|n| n.id)
             .collect();
         Problem {
-            kind: ProblemKind::Stage1,
+            kind: ProblemKind::Stage(sec),
             mapping,
             active,
             budget,
@@ -70,22 +72,20 @@ impl Problem {
         }
     }
 
-    pub fn stage2(cdfg: Cdfg, budget: ResourceVec, clock_hz: f64) -> Problem {
-        let mapping = HwMapping::minimal(cdfg);
-        let active = mapping
-            .cdfg
-            .nodes
-            .iter()
-            .filter(|n| n.stage == StageId::Stage2)
-            .map(|n| n.id)
-            .collect();
-        Problem {
-            kind: ProblemKind::Stage2,
-            mapping,
-            active,
-            budget,
-            clock_hz,
+    /// Build a problem for a planned sweep kind.
+    pub fn for_kind(kind: ProblemKind, cdfg: Cdfg, budget: ResourceVec, clock_hz: f64) -> Problem {
+        match kind {
+            ProblemKind::Baseline => Problem::baseline(cdfg, budget, clock_hz),
+            ProblemKind::Stage(sec) => Problem::stage(sec, cdfg, budget, clock_hz),
         }
+    }
+
+    /// Whether this problem kind hosts the shared I/O infrastructure.
+    /// It is charged to Baseline and to Stage(0) (which own the I/O
+    /// path); later sections' shares arrive via the TAP combination's
+    /// shared-budget form.
+    pub fn charges_infrastructure(kind: ProblemKind) -> bool {
+        matches!(kind, ProblemKind::Baseline | ProblemKind::Stage(0))
     }
 
     /// II being minimized: max over the active nodes.
@@ -97,13 +97,13 @@ impl Problem {
             .unwrap_or(1)
     }
 
-    /// Resources charged to this problem. Infrastructure (DMA etc.) is
-    /// charged to Baseline and Stage1 (which host the I/O path); Stage2's
-    /// share arrives via the TAP combination's shared-budget form.
+    /// Resources charged to this problem (see
+    /// [`Problem::charges_infrastructure`]).
     pub fn resources(&self, mapping: &HwMapping) -> ResourceVec {
-        let mut total = match self.kind {
-            ProblemKind::Baseline | ProblemKind::Stage1 => model::infrastructure(),
-            ProblemKind::Stage2 => ResourceVec::ZERO,
+        let mut total = if Self::charges_infrastructure(self.kind) {
+            model::infrastructure()
+        } else {
+            ResourceVec::ZERO
         };
         for &id in &self.active {
             total += mapping.node_resources(id);
@@ -132,13 +132,37 @@ mod tests {
         let net = testnet::blenet_like();
         let board = Board::zc706();
         let cdfg = Cdfg::lower(&net, 8);
-        let p1 = Problem::stage1(cdfg.clone(), board.resources, board.clock_hz);
-        let p2 = Problem::stage2(cdfg.clone(), board.resources, board.clock_hz);
+        let p1 = Problem::stage(0, cdfg.clone(), board.resources, board.clock_hz);
+        let p2 = Problem::stage(1, cdfg.clone(), board.resources, board.clock_hz);
         // Disjoint and jointly exhaustive over the CDFG.
         for id in &p1.active {
             assert!(!p2.active.contains(id));
         }
         assert_eq!(p1.active.len() + p2.active.len(), cdfg.nodes.len());
+    }
+
+    #[test]
+    fn three_exit_stage_problems_partition() {
+        let net = testnet::three_exit();
+        let board = Board::zc706();
+        let cdfg = Cdfg::lower(&net, 4);
+        let probs: Vec<Problem> = (0..cdfg.n_sections)
+            .map(|i| Problem::stage(i, cdfg.clone(), board.resources, board.clock_hz))
+            .collect();
+        let total: usize = probs.iter().map(|p| p.active.len()).sum();
+        assert_eq!(total, cdfg.nodes.len());
+        for (i, a) in probs.iter().enumerate() {
+            for b in probs.iter().skip(i + 1) {
+                for id in &a.active {
+                    assert!(!b.active.contains(id), "node {id} owned by two stages");
+                }
+            }
+        }
+        // Infrastructure: charged exactly to baseline and section 0.
+        assert!(Problem::charges_infrastructure(ProblemKind::Baseline));
+        assert!(Problem::charges_infrastructure(ProblemKind::Stage(0)));
+        assert!(!Problem::charges_infrastructure(ProblemKind::Stage(1)));
+        assert!(!Problem::charges_infrastructure(ProblemKind::Stage(2)));
     }
 
     #[test]

@@ -73,13 +73,7 @@ pub fn plan_sweep(
         .enumerate()
         .map(|(i, &frac)| {
             let budget = board.budget(frac);
-            let problem = match kind {
-                ProblemKind::Baseline => {
-                    Problem::baseline(cdfg.clone(), budget, board.clock_hz)
-                }
-                ProblemKind::Stage1 => Problem::stage1(cdfg.clone(), budget, board.clock_hz),
-                ProblemKind::Stage2 => Problem::stage2(cdfg.clone(), budget, board.clock_hz),
-            };
+            let problem = Problem::for_kind(kind, cdfg.clone(), budget, board.clock_hz);
             let mut config = cfg.anneal.clone();
             config.seed = cfg.anneal.seed.wrapping_add(i as u64 * 7919);
             SweepTask {
@@ -209,7 +203,7 @@ mod tests {
         let board = Board::zc706();
         let cdfg = Cdfg::lower(&net, 8);
         let (curve, _) =
-            sweep_budgets(ProblemKind::Stage2, &cdfg, &board, &SweepConfig::quick());
+            sweep_budgets(ProblemKind::Stage(1), &cdfg, &board, &SweepConfig::quick());
         assert!(!curve.points.is_empty());
     }
 
@@ -220,8 +214,8 @@ mod tests {
         let cfg = SweepConfig::quick();
         for (kind, cdfg) in [
             (ProblemKind::Baseline, Cdfg::lower_baseline(&net)),
-            (ProblemKind::Stage1, Cdfg::lower(&net, 1)),
-            (ProblemKind::Stage2, Cdfg::lower(&net, 1)),
+            (ProblemKind::Stage(0), Cdfg::lower(&net, 1)),
+            (ProblemKind::Stage(1), Cdfg::lower(&net, 1)),
         ] {
             let (seq_curve, seq_raw) = sweep_budgets(kind, &cdfg, &board, &cfg);
             let (par_curve, par_raw) = sweep_budgets_parallel(kind, &cdfg, &board, &cfg);

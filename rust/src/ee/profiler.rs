@@ -1,4 +1,4 @@
-//! The Early-Exit profiler (§III-B.1).
+//! The Early-Exit profiler (§III-B.1), N-exit form.
 //!
 //! "We introduce the Early-Exit profiler which takes a profiling data set
 //! and the high-level Early-Exit ConvNet description and apportions the
@@ -9,22 +9,25 @@
 //! accuracy. The average probability of hard samples is fed into the
 //! optimizer as p."
 //!
+//! For an N-exit network the profiler measures the whole **reach
+//! vector**: `reach[i]` is the fraction of samples travelling past exit
+//! `i`, which the optimizer consumes via `tap::combine_multi`. The
+//! two-stage `p` is `reach[0]`.
+//!
 //! The inference backend is abstracted as [`ExitOracle`] so the profiler
 //! is testable without artifacts; the production implementation runs the
-//! stage-1/stage-2 HLO executables over PJRT (`coordinator::batch`).
+//! per-stage HLO executables over PJRT (`coordinator::batch`).
 
 use crate::data::TestSet;
 
 /// Per-sample inference outcome needed by the profiler.
 #[derive(Clone, Copy, Debug)]
 pub struct ExitOutcome {
-    /// Did the exit decision fire (sample exits early)?
-    pub take_exit: bool,
-    /// Early-exit classifier prediction.
-    pub pred_exit: usize,
-    /// Final classifier prediction (None if the backend short-circuits
-    /// stage 2 for exited samples — the profiler then uses pred_exit).
-    pub pred_final: Option<usize>,
+    /// Early exit taken: `Some(i)` means the sample completed at exit
+    /// `i`; `None` means it ran through to the final classifier.
+    pub exit: Option<usize>,
+    /// Prediction of the classifier the sample completed at.
+    pub pred: usize,
 }
 
 /// Inference backend over which profiling runs.
@@ -33,22 +36,30 @@ pub trait ExitOracle {
 }
 
 /// One profiling split's statistics.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct SplitStats {
     pub n: usize,
+    /// Fraction of the split travelling past each exit.
+    pub reach: Vec<f64>,
+    /// Fraction of the split that was hard at the first exit
+    /// (`reach[0]`; the two-stage p).
     pub p_hard: f64,
     pub exit_acc_on_taken: f64,
     pub deployed_acc: f64,
 }
 
-/// Aggregated profiler output: the p fed to the optimizer + accuracies.
+/// Aggregated profiler output: the reach vector fed to the optimizer +
+/// accuracies.
 #[derive(Clone, Debug, Default)]
 pub struct ProfileReport {
     pub splits: Vec<SplitStats>,
-    /// Average hard-sample probability across splits (the optimizer's p).
+    /// Average reach probability past each exit across splits (the
+    /// optimizer's reach vector).
+    pub reach: Vec<f64>,
+    /// `reach[0]` — the two-stage p fed to the optimizer.
     pub p_hard: f64,
-    /// Standard deviation of p across splits (the q-variation the design
-    /// must be robust to — drives the buffer margin).
+    /// Standard deviation of `reach[0]` across splits (the q-variation
+    /// the design must be robust to — drives the buffer margin).
     pub p_std: f64,
     pub exit_acc_on_taken: f64,
     pub deployed_acc: f64,
@@ -67,15 +78,18 @@ impl Default for Profiler {
 }
 
 impl Profiler {
-    /// Profile a test set through an oracle.
+    /// Profile a test set through an oracle for a network with
+    /// `n_exits` early exits.
     pub fn profile(
         &self,
         oracle: &mut dyn ExitOracle,
         ts: &TestSet,
         samples: usize,
+        n_exits: usize,
     ) -> anyhow::Result<ProfileReport> {
         let n = samples.min(ts.n);
         anyhow::ensure!(n >= self.splits, "need at least one sample per split");
+        anyhow::ensure!(n_exits >= 1, "network must have at least one exit");
         let per = n / self.splits;
         let mut report = ProfileReport::default();
         for split in 0..self.splits {
@@ -84,30 +98,37 @@ impl Profiler {
             let images: Vec<&[f32]> = (lo..hi).map(|i| ts.image(i)).collect();
             let outcomes = oracle.run(&images)?;
             anyhow::ensure!(outcomes.len() == hi - lo, "oracle returned wrong count");
-            let mut hard = 0usize;
+            let mut past = vec![0usize; n_exits];
             let mut taken_correct = 0usize;
             let mut taken = 0usize;
             let mut deployed_correct = 0usize;
             for (k, o) in outcomes.iter().enumerate() {
                 let label = ts.labels[lo + k] as usize;
-                if o.take_exit {
-                    taken += 1;
-                    if o.pred_exit == label {
-                        taken_correct += 1;
-                        deployed_correct += 1;
+                // A sample completing at exit e (or the final classifier,
+                // e = n_exits) travelled past exits 0..e.
+                let depth = match o.exit {
+                    Some(e) => {
+                        anyhow::ensure!(e < n_exits, "oracle reported exit {e} of {n_exits}");
+                        taken += 1;
+                        if o.pred == label {
+                            taken_correct += 1;
+                        }
+                        e
                     }
-                } else {
-                    hard += 1;
-                    let pred = o.pred_final.unwrap_or(o.pred_exit);
-                    if pred == label {
-                        deployed_correct += 1;
-                    }
+                    None => n_exits,
+                };
+                for p in past.iter_mut().take(depth) {
+                    *p += 1;
+                }
+                if o.pred == label {
+                    deployed_correct += 1;
                 }
             }
             let m = hi - lo;
             report.splits.push(SplitStats {
                 n: m,
-                p_hard: hard as f64 / m as f64,
+                reach: past.iter().map(|&c| c as f64 / m as f64).collect(),
+                p_hard: past[0] as f64 / m as f64,
                 exit_acc_on_taken: if taken > 0 {
                     taken_correct as f64 / taken as f64
                 } else {
@@ -116,8 +137,21 @@ impl Profiler {
                 deployed_acc: deployed_correct as f64 / m as f64,
             });
         }
+        // Aggregate reach vector (split-weighted means).
+        report.reach = (0..n_exits)
+            .map(|e| {
+                report
+                    .splits
+                    .iter()
+                    .map(|s| s.reach[e] * s.n as f64)
+                    .sum::<f64>()
+                    / n as f64
+            })
+            .collect();
+        // Contract: p_hard IS reach[0] (both sample-weighted); p_std
+        // measures the split-to-split spread around it.
+        report.p_hard = report.reach[0];
         let ps: Vec<f64> = report.splits.iter().map(|s| s.p_hard).collect();
-        report.p_hard = ps.iter().sum::<f64>() / ps.len() as f64;
         report.p_std = (ps
             .iter()
             .map(|p| (p - report.p_hard).powi(2))
@@ -161,10 +195,41 @@ mod tests {
                 let label = self.ts.labels[i] as usize;
                 let hard = self.ts.hard[i] != 0;
                 out.push(ExitOutcome {
-                    take_exit: !hard,
-                    pred_exit: label,
-                    pred_final: Some(if i % 5 == 0 { (label + 1) % 10 } else { label }),
+                    exit: if hard { None } else { Some(0) },
+                    pred: if hard && i % 5 == 0 {
+                        (label + 1) % 10
+                    } else {
+                        label
+                    },
                 });
+            }
+            Ok(out)
+        }
+    }
+
+    /// A three-exit mock: routes sample i past exit 0 when hard, and of
+    /// those, every other one past exit 1 as well.
+    struct MockDeepOracle<'a> {
+        ts: &'a TestSet,
+        cursor: usize,
+    }
+
+    impl ExitOracle for MockDeepOracle<'_> {
+        fn run(&mut self, images: &[&[f32]]) -> anyhow::Result<Vec<ExitOutcome>> {
+            let mut out = Vec::new();
+            for _ in images {
+                let i = self.cursor;
+                self.cursor += 1;
+                let label = self.ts.labels[i] as usize;
+                let hard = self.ts.hard[i] != 0;
+                let exit = if !hard {
+                    Some(0)
+                } else if i % 2 == 0 {
+                    Some(1)
+                } else {
+                    None
+                };
+                out.push(ExitOutcome { exit, pred: label });
             }
             Ok(out)
         }
@@ -175,7 +240,7 @@ mod tests {
         let ts = synthetic_testset(2000, 4, 0.25, 9);
         let mut oracle = MockOracle { ts: &ts, cursor: 0 };
         let report = Profiler::default()
-            .profile(&mut oracle, &ts, 2000)
+            .profile(&mut oracle, &ts, 2000, 1)
             .unwrap();
         assert_eq!(report.splits.len(), 4);
         assert!(
@@ -184,15 +249,44 @@ mod tests {
             report.p_hard,
             ts.hard_fraction()
         );
+        assert_eq!(report.reach.len(), 1);
+        assert!((report.reach[0] - report.p_hard).abs() < 1e-9);
         assert!((report.exit_acc_on_taken - 1.0).abs() < 1e-9);
         assert!(report.deployed_acc > 0.9);
         assert!(report.p_std < 0.1, "splits should be similar");
     }
 
     #[test]
+    fn profiler_measures_full_reach_vector() {
+        let ts = synthetic_testset(2000, 4, 0.4, 5);
+        let mut oracle = MockDeepOracle { ts: &ts, cursor: 0 };
+        let report = Profiler::default()
+            .profile(&mut oracle, &ts, 2000, 2)
+            .unwrap();
+        assert_eq!(report.reach.len(), 2);
+        // reach[0] ~ hard fraction; reach[1] ~ half of it.
+        assert!((report.reach[0] - ts.hard_fraction()).abs() < 0.02);
+        assert!((report.reach[1] - ts.hard_fraction() / 2.0).abs() < 0.03);
+        // Reach must be non-increasing.
+        assert!(report.reach[0] >= report.reach[1]);
+    }
+
+    #[test]
+    fn p_hard_is_reach0_even_with_uneven_splits() {
+        // 2001 samples over 4 splits (500/500/500/501): the weighted
+        // reach mean and p_hard must still agree exactly.
+        let ts = synthetic_testset(2001, 4, 0.3, 11);
+        let mut oracle = MockOracle { ts: &ts, cursor: 0 };
+        let report = Profiler::default()
+            .profile(&mut oracle, &ts, 2001, 1)
+            .unwrap();
+        assert_eq!(report.p_hard.to_bits(), report.reach[0].to_bits());
+    }
+
+    #[test]
     fn too_few_samples_rejected() {
         let ts = synthetic_testset(3, 4, 0.5, 1);
         let mut oracle = MockOracle { ts: &ts, cursor: 0 };
-        assert!(Profiler::default().profile(&mut oracle, &ts, 3).is_err());
+        assert!(Profiler::default().profile(&mut oracle, &ts, 3, 1).is_err());
     }
 }

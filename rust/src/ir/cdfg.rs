@@ -2,11 +2,12 @@
 //!
 //! fpgaConvNet models a CNN as a synchronous dataflow graph; ATHEENA
 //! extends it with pipelined control flow. This module lowers a validated
-//! [`Network`] into the hardware graph of Fig. 3: the stage-1 backbone
-//! feeds a Split layer which duplicates the stream toward (a) the
-//! early-exit classifier + Exit Decision and (b) the Conditional Buffer
-//! guarding stage 2; both exits meet at the Exit Merge in front of the
-//! output DMA.
+//! [`Network`] into the hardware graph of Fig. 3, generalized to N exits:
+//! each non-final backbone section ends in a Split layer which duplicates
+//! the stream toward (a) that section's early-exit classifier + Exit
+//! Decision and (b) the Conditional Buffer guarding the next section; all
+//! classification streams meet at the Exit Merge in front of the output
+//! DMA. The paper's two-stage presentation is the one-exit special case.
 
 use super::layer::{Layer, Op};
 use super::network::Network;
@@ -45,19 +46,38 @@ impl HwOp {
     }
 }
 
-/// Which section of the two-stage partition a node belongs to. Stage-1
-/// rate applies to everything up to and including the Conditional Buffer's
-/// write side; stage-2 nodes only see hard samples (§III-A).
+/// Which pipeline section a node belongs to — **indexed**, so the number
+/// of exits is data rather than type structure (§III-A's multi-stage
+/// generalization).
+///
+/// * `Backbone(i)` — backbone section `i` (plus its trailing Split for
+///   non-final sections, and the Conditional Buffer *feeding* section
+///   `i` for `i > 0`). Section `i` only sees samples that were hard at
+///   every earlier exit, so its rate scales by the reach probability
+///   `r_i` (`r_0 = 1`).
+/// * `ExitBranch(i)` — exit classifier + Exit Decision of exit `i`,
+///   running at section `i`'s rate.
+/// * `Egress` — Exit Merge + DMA glue (one result per sample, full
+///   result rate).
+///
+/// The paper's two-stage names map as `Stage1 = Backbone(0)`,
+/// `ExitBranch = ExitBranch(0)`, `Stage2 = Backbone(1)`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StageId {
-    /// Backbone prefix + Split (full data rate).
-    Stage1,
-    /// Early-exit classifier + Exit Decision (full data rate).
-    ExitBranch,
-    /// Backbone suffix behind the Conditional Buffer (rate scaled by p).
-    Stage2,
-    /// Merge + DMA glue (full result rate, one result per sample).
+    Backbone(usize),
+    ExitBranch(usize),
     Egress,
+}
+
+impl StageId {
+    /// Index of the backbone section whose sample rate this node sees
+    /// (Egress handles every result, i.e. section-0 rate).
+    pub fn rate_section(&self) -> usize {
+        match self {
+            StageId::Backbone(i) | StageId::ExitBranch(i) => *i,
+            StageId::Egress => 0,
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -77,20 +97,24 @@ pub struct Cdfg {
     pub network: String,
     pub nodes: Vec<CdfgNode>,
     pub edges: Vec<(usize, usize)>,
-    /// Node id of the Conditional Buffer (stage boundary).
-    pub cond_buffer: usize,
-    /// Node id of the Exit Decision layer.
-    pub exit_decision: usize,
-    /// Node id of the Exit Merge layer.
+    /// Number of backbone sections (exits + 1; 1 for the baseline).
+    pub n_sections: usize,
+    /// Node id of the Conditional Buffer guarding section `i + 1`
+    /// (one per exit).
+    pub cond_buffers: Vec<usize>,
+    /// Node id of each Exit Decision layer (one per exit).
+    pub exit_decisions: Vec<usize>,
+    /// Node id of the Exit Merge layer (`usize::MAX` for the baseline).
     pub exit_merge: usize,
 }
 
 impl Cdfg {
-    /// Lower a network into the Fig. 3 hardware topology.
+    /// Lower a network into the Fig. 3 hardware topology (N-exit form).
     ///
-    /// `cond_buffer_depth` is a placeholder depth; the toolflow re-sizes
-    /// it after folding is chosen (buffer sizing needs stage-1 IIs, Fig. 7
-    /// — see `sdf::buffering`).
+    /// `cond_buffer_depth` is a placeholder depth applied to every
+    /// Conditional Buffer; the toolflow re-sizes each buffer after
+    /// folding is chosen (buffer sizing needs per-section IIs, Fig. 7 —
+    /// see `sdf::buffering`).
     pub fn lower(net: &Network, cond_buffer_depth: usize) -> Cdfg {
         let mut nodes: Vec<CdfgNode> = Vec::new();
         let mut edges: Vec<(usize, usize)> = Vec::new();
@@ -120,111 +144,132 @@ impl Cdfg {
             id
         }
 
-        // Stage-1 backbone.
+        let n_sections = net.n_sections();
+        let mut cond_buffers = Vec::new();
+        let mut exit_decisions = Vec::new();
         let mut prev: Option<usize> = None;
-        for (i, l) in net.stage1.iter().enumerate() {
-            prev = Some(push(
+
+        for sec in 0..n_sections {
+            // Backbone section `sec`. Two-stage naming is preserved for
+            // the one-exit case (s1_*/s2_*); deeper networks use sN_*.
+            let tag = format!("s{}", sec + 1);
+            for (i, l) in net.sections[sec].iter().enumerate() {
+                prev = Some(push(
+                    &mut nodes,
+                    &mut edges,
+                    format!("{tag}_{}_{}", i, l.op.name()),
+                    HwOp::Std(l.op.clone()),
+                    l.in_shape.clone(),
+                    l.out_shape.clone(),
+                    StageId::Backbone(sec),
+                    prev,
+                ));
+            }
+            if sec + 1 == n_sections {
+                break; // final section: no split / exit / buffer
+            }
+            let sec_out = net.section_out_shape(sec).clone();
+
+            // Split duplicates the stream toward exit branch `sec` and
+            // the next section's Conditional Buffer.
+            let split_name = if net.n_exits() == 1 {
+                "split".to_string()
+            } else {
+                format!("split{sec}")
+            };
+            let split = push(
                 &mut nodes,
                 &mut edges,
-                format!("s1_{}_{}", i, l.op.name()),
-                HwOp::Std(l.op.clone()),
-                l.in_shape.clone(),
-                l.out_shape.clone(),
-                StageId::Stage1,
+                split_name,
+                HwOp::Split { ways: 2 },
+                sec_out.clone(),
+                sec_out.clone(),
+                StageId::Backbone(sec),
                 prev,
-            ));
-        }
-        let s1_out = net.stage1_out_shape().clone();
+            );
 
-        // Split duplicates the stream toward the exit branch and stage 2.
-        let split = push(
-            &mut nodes,
-            &mut edges,
-            "split".into(),
-            HwOp::Split { ways: 2 },
-            s1_out.clone(),
-            s1_out.clone(),
-            StageId::Stage1,
-            prev,
-        );
-
-        // Early-exit classifier chain.
-        let mut eprev = split;
-        for (i, l) in net.exit_branch.iter().enumerate() {
-            eprev = push(
+            // Early-exit classifier chain for exit `sec`.
+            let branch_tag = if net.n_exits() == 1 {
+                "exit".to_string()
+            } else {
+                format!("exit{sec}")
+            };
+            let mut eprev = split;
+            for (i, l) in net.exit_branches[sec].iter().enumerate() {
+                eprev = push(
+                    &mut nodes,
+                    &mut edges,
+                    format!("{branch_tag}_{}_{}", i, l.op.name()),
+                    HwOp::Std(l.op.clone()),
+                    l.in_shape.clone(),
+                    l.out_shape.clone(),
+                    StageId::ExitBranch(sec),
+                    Some(eprev),
+                );
+            }
+            let decision = push(
                 &mut nodes,
                 &mut edges,
-                format!("exit_{}_{}", i, l.op.name()),
-                HwOp::Std(l.op.clone()),
-                l.in_shape.clone(),
-                l.out_shape.clone(),
-                StageId::ExitBranch,
+                format!("{branch_tag}_decision"),
+                HwOp::ExitDecision {
+                    classes: net.classes,
+                    c_thr: net.c_thr,
+                },
+                Shape::flat(net.classes),
+                Shape::flat(net.classes),
+                StageId::ExitBranch(sec),
                 Some(eprev),
             );
-        }
-        let exit_decision = push(
-            &mut nodes,
-            &mut edges,
-            "exit_decision".into(),
-            HwOp::ExitDecision {
-                classes: net.classes,
-                c_thr: net.c_thr,
-            },
-            Shape::flat(net.classes),
-            Shape::flat(net.classes),
-            StageId::ExitBranch,
-            Some(eprev),
-        );
+            exit_decisions.push(decision);
 
-        // Conditional buffer guards stage 2; it consumes the split's other
-        // output and the decision's control signal.
-        let cond_buffer = push(
-            &mut nodes,
-            &mut edges,
-            "cond_buffer".into(),
-            HwOp::CondBuffer {
-                depth_samples: cond_buffer_depth,
-            },
-            s1_out.clone(),
-            s1_out.clone(),
-            StageId::Stage2,
-            Some(split),
-        );
-        edges.push((exit_decision, cond_buffer)); // control edge
-
-        let mut sprev = cond_buffer;
-        for (i, l) in net.stage2.iter().enumerate() {
-            sprev = push(
+            // Conditional buffer guards the next section; it consumes the
+            // split's other output and the decision's control signal.
+            let buf_name = if net.n_exits() == 1 {
+                "cond_buffer".to_string()
+            } else {
+                format!("cond_buffer{sec}")
+            };
+            let buffer = push(
                 &mut nodes,
                 &mut edges,
-                format!("s2_{}_{}", i, l.op.name()),
-                HwOp::Std(l.op.clone()),
-                l.in_shape.clone(),
-                l.out_shape.clone(),
-                StageId::Stage2,
-                Some(sprev),
+                buf_name,
+                HwOp::CondBuffer {
+                    depth_samples: cond_buffer_depth,
+                },
+                sec_out.clone(),
+                sec_out,
+                StageId::Backbone(sec + 1),
+                Some(split),
             );
+            edges.push((decision, buffer)); // control edge
+            cond_buffers.push(buffer);
+            prev = Some(buffer);
         }
 
-        // Exit merge joins both classification streams.
+        // Exit merge joins every classification stream (one per exit +
+        // the final classifier).
         let exit_merge = push(
             &mut nodes,
             &mut edges,
             "exit_merge".into(),
-            HwOp::ExitMerge { ways: 2 },
+            HwOp::ExitMerge { ways: n_sections },
             Shape::flat(net.classes),
             Shape::flat(net.classes),
             StageId::Egress,
-            Some(exit_decision),
+            exit_decisions.first().copied(),
         );
-        edges.push((sprev, exit_merge));
+        for &d in exit_decisions.iter().skip(1) {
+            edges.push((d, exit_merge));
+        }
+        edges.push((prev.expect("non-empty network"), exit_merge));
 
         Cdfg {
             network: net.name.clone(),
             nodes,
             edges,
-            cond_buffer,
-            exit_decision,
+            n_sections,
+            cond_buffers,
+            exit_decisions,
             exit_merge,
         }
     }
@@ -241,7 +286,7 @@ impl Cdfg {
                 op: HwOp::Std(l.op.clone()),
                 in_shape: l.in_shape.clone(),
                 out_shape: l.out_shape.clone(),
-                stage: StageId::Stage1,
+                stage: StageId::Backbone(0),
             });
             if i > 0 {
                 edges.push((i - 1, i));
@@ -251,10 +296,16 @@ impl Cdfg {
             network: format!("{}-baseline", net.name),
             nodes,
             edges,
-            cond_buffer: usize::MAX,
-            exit_decision: usize::MAX,
+            n_sections: 1,
+            cond_buffers: Vec::new(),
+            exit_decisions: Vec::new(),
             exit_merge: usize::MAX,
         }
+    }
+
+    /// Number of early exits in this graph.
+    pub fn n_exits(&self) -> usize {
+        self.cond_buffers.len()
     }
 
     pub fn nodes_in_stage(&self, stage: StageId) -> impl Iterator<Item = &CdfgNode> {
@@ -270,9 +321,9 @@ impl Cdfg {
             .collect()
     }
 
-    /// Total words buffered by the Conditional Buffer per sample.
-    pub fn cond_buffer_words(&self) -> usize {
-        self.nodes[self.cond_buffer].in_shape.words()
+    /// Total words buffered by Conditional Buffer `exit` per sample.
+    pub fn cond_buffer_words(&self, exit: usize) -> usize {
+        self.nodes[self.cond_buffers[exit]].in_shape.words()
     }
 }
 
@@ -287,22 +338,50 @@ mod tests {
         let g = Cdfg::lower(&net, 8);
         // 3 stage1 + split + 5 exit + decision + condbuf + 8 stage2 + merge
         assert_eq!(g.nodes.len(), 3 + 1 + 5 + 1 + 1 + 8 + 1);
-        assert_eq!(g.nodes[g.cond_buffer].op.name(), "cond_buffer");
-        assert_eq!(g.nodes[g.exit_decision].op.name(), "exit_decision");
+        assert_eq!(g.n_sections, 2);
+        assert_eq!(g.n_exits(), 1);
+        assert_eq!(g.nodes[g.cond_buffers[0]].op.name(), "cond_buffer");
+        assert_eq!(g.nodes[g.exit_decisions[0]].op.name(), "exit_decision");
         // Decision feeds both the merge and the buffer's control port.
-        let succ = g.successors(g.exit_decision);
-        assert!(succ.contains(&g.cond_buffer));
+        let succ = g.successors(g.exit_decisions[0]);
+        assert!(succ.contains(&g.cond_buffers[0]));
         assert!(succ.contains(&g.exit_merge));
         // Buffer holds the stage-1 output map.
-        assert_eq!(g.cond_buffer_words(), 8 * 14 * 14);
+        assert_eq!(g.cond_buffer_words(0), 8 * 14 * 14);
+    }
+
+    #[test]
+    fn three_exit_lowering_structure() {
+        let net = testnet::three_exit();
+        let g = Cdfg::lower(&net, 4);
+        assert_eq!(g.n_sections, 3);
+        assert_eq!(g.n_exits(), 2);
+        assert_eq!(g.cond_buffers.len(), 2);
+        assert_eq!(g.exit_decisions.len(), 2);
+        // Each decision controls its own buffer and feeds the merge.
+        for (i, &d) in g.exit_decisions.iter().enumerate() {
+            let succ = g.successors(d);
+            assert!(succ.contains(&g.cond_buffers[i]), "decision {i} -> buffer {i}");
+            assert!(succ.contains(&g.exit_merge), "decision {i} -> merge");
+        }
+        // Merge has one input stream per section.
+        if let HwOp::ExitMerge { ways } = g.nodes[g.exit_merge].op {
+            assert_eq!(ways, 3);
+        } else {
+            panic!("last node not a merge");
+        }
+        // Buffers hold the respective section outputs.
+        assert_eq!(g.cond_buffer_words(0), 8 * 14 * 14);
+        assert_eq!(g.cond_buffer_words(1), 16 * 7 * 7);
     }
 
     #[test]
     fn edges_are_topological() {
-        let net = testnet::blenet_like();
-        let g = Cdfg::lower(&net, 8);
-        for (p, c) in &g.edges {
-            assert!(p < c, "edge {p}->{c} violates construction order");
+        for net in [testnet::blenet_like(), testnet::three_exit()] {
+            let g = Cdfg::lower(&net, 8);
+            for (p, c) in &g.edges {
+                assert!(p < c, "edge {p}->{c} violates construction order");
+            }
         }
     }
 
@@ -312,15 +391,32 @@ mod tests {
         let g = Cdfg::lower_baseline(&net);
         assert!(g.nodes.iter().all(|n| !n.op.is_ee_overhead()));
         assert_eq!(g.nodes.len(), net.baseline_layers().len());
+        assert_eq!(g.n_sections, 1);
+        assert!(g.cond_buffers.is_empty());
     }
 
     #[test]
     fn stage_partition_counts() {
         let net = testnet::blenet_like();
         let g = Cdfg::lower(&net, 8);
-        assert_eq!(g.nodes_in_stage(StageId::Stage1).count(), 4); // 3 + split
-        assert_eq!(g.nodes_in_stage(StageId::ExitBranch).count(), 6);
-        assert_eq!(g.nodes_in_stage(StageId::Stage2).count(), 9); // buf + 8
+        assert_eq!(g.nodes_in_stage(StageId::Backbone(0)).count(), 4); // 3 + split
+        assert_eq!(g.nodes_in_stage(StageId::ExitBranch(0)).count(), 6);
+        assert_eq!(g.nodes_in_stage(StageId::Backbone(1)).count(), 9); // buf + 8
         assert_eq!(g.nodes_in_stage(StageId::Egress).count(), 1);
+    }
+
+    #[test]
+    fn stage_partition_exhaustive_on_three_exit() {
+        let net = testnet::three_exit();
+        let g = Cdfg::lower(&net, 8);
+        let mut counted = 0;
+        for i in 0..3 {
+            counted += g.nodes_in_stage(StageId::Backbone(i)).count();
+        }
+        for i in 0..2 {
+            counted += g.nodes_in_stage(StageId::ExitBranch(i)).count();
+        }
+        counted += g.nodes_in_stage(StageId::Egress).count();
+        assert_eq!(counted, g.nodes.len(), "stages must partition the CDFG");
     }
 }

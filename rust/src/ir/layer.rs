@@ -108,6 +108,34 @@ impl Layer {
         })
     }
 
+    /// Serialize back to the network-JSON layer format (the inverse of
+    /// [`Layer::from_json`]; used when emitting synthetic networks).
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![("op", Json::str(self.op.name().to_string()))];
+        match &self.op {
+            Op::Conv {
+                out_ch,
+                k,
+                pad,
+                stride,
+            } => {
+                fields.push(("out_ch", Json::num(*out_ch as f64)));
+                fields.push(("k", Json::num(*k as f64)));
+                fields.push(("pad", Json::num(*pad as f64)));
+                fields.push(("stride", Json::num(*stride as f64)));
+            }
+            Op::MaxPool { k, stride } => {
+                fields.push(("k", Json::num(*k as f64)));
+                fields.push(("stride", Json::num(*stride as f64)));
+            }
+            Op::Linear { out } => fields.push(("out", Json::num(*out as f64))),
+            Op::Relu | Op::Flatten => {}
+        }
+        fields.push(("in_shape", self.in_shape.to_json()));
+        fields.push(("out_shape", self.out_shape.to_json()));
+        Json::obj(fields)
+    }
+
     pub fn from_json(v: &Json) -> anyhow::Result<Layer> {
         let op_name = v
             .req("op")?

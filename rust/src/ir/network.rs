@@ -1,4 +1,11 @@
 //! Early-Exit network description parsed from `artifacts/networks/*.json`.
+//!
+//! The network model is **N-exit**: a chain of backbone *sections*
+//! separated by early exits. Section `i` (for `i < n_sections - 1`)
+//! feeds exit branch `i`; the final section ends in the final
+//! classifier. The two-stage presentation of §III-A is the
+//! `n_sections == 2` special case, and the legacy two-stage JSON format
+//! (`stage1` / `exit_branch` / `stage2`) still parses into it.
 
 use std::path::Path;
 
@@ -17,23 +24,32 @@ pub struct Accuracy {
     pub final_acc_on_hard: f64,
 }
 
-/// A two-stage Early-Exit network (§III-A's presentation form; the
-/// methodology extends to multi-stage but all three evaluated networks are
-/// two-stage).
+/// An N-exit Early-Exit network (§III-A: "it is trivial to extend the
+/// presentation to multi-stage networks"). The number of exits is data:
+/// `sections.len() - 1` exits, each guarded by its own Conditional
+/// Buffer once lowered.
 #[derive(Clone, Debug)]
 pub struct Network {
     pub name: String,
     pub input_shape: Shape,
     pub classes: usize,
-    /// Exit confidence threshold C_thr (Eq. 2), fixed after training.
+    /// Exit confidence threshold C_thr (Eq. 2), fixed after training and
+    /// shared by every exit decision.
     pub c_thr: f64,
-    /// Profiled hard-sample probability p (fraction needing stage 2).
-    pub p_profile: f64,
-    /// The probability the paper evaluated this network at (Table IV).
-    pub p_paper: f64,
-    pub stage1: Vec<Layer>,
-    pub exit_branch: Vec<Layer>,
-    pub stage2: Vec<Layer>,
+    /// Backbone sections in pipeline order (at least two). Section `i`
+    /// for `i < sections.len() - 1` feeds exit branch `i`; the last
+    /// section ends in the final classifier.
+    pub sections: Vec<Vec<Layer>>,
+    /// Exit branches, one per non-final section; each consumes its
+    /// section's output and ends in a `classes`-wide classifier.
+    pub exit_branches: Vec<Vec<Layer>>,
+    /// Profiled reach probabilities: `reach_profile[i]` is the fraction
+    /// of samples that travel *past* exit `i` into section `i + 1`.
+    /// Non-increasing; `reach_profile[0]` is the two-stage "p".
+    pub reach_profile: Vec<f64>,
+    /// The probabilities the paper evaluated at (Table IV), same
+    /// convention as `reach_profile`.
+    pub reach_paper: Vec<f64>,
     pub accuracy: Accuracy,
     pub baseline_acc: f64,
 }
@@ -45,9 +61,8 @@ impl Network {
             .as_str()
             .ok_or_else(|| anyhow::anyhow!("'name' must be a string"))?
             .to_string();
-        let parse_stage = |key: &str| -> anyhow::Result<Vec<Layer>> {
-            v.req(key)?
-                .as_arr()
+        let parse_layers = |v: &Json, key: &str| -> anyhow::Result<Vec<Layer>> {
+            v.as_arr()
                 .ok_or_else(|| anyhow::anyhow!("'{key}' must be an array"))?
                 .iter()
                 .map(Layer::from_json)
@@ -58,22 +73,69 @@ impl Network {
                 .as_f64()
                 .ok_or_else(|| anyhow::anyhow!("'{key}' must be a number"))
         };
+        let probs = |v: &Json, key: &str| -> anyhow::Result<Vec<f64>> {
+            v.as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'{key}' must be an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("'{key}' entries must be numbers"))
+                })
+                .collect()
+        };
         let acc = v.req("accuracy")?;
         let acc_num = |key: &str| -> anyhow::Result<f64> {
             acc.req(key)?
                 .as_f64()
                 .ok_or_else(|| anyhow::anyhow!("accuracy.{key} must be a number"))
         };
+
+        // New N-exit format: sections / exit_branches / reach vectors.
+        // Legacy two-stage format: stage1 / exit_branch / stage2 +
+        // scalar p_profile / p_paper.
+        let (sections, exit_branches, reach_profile, reach_paper) =
+            if v.get("sections").is_some() {
+                let sections = v
+                    .req("sections")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("'sections' must be an array"))?
+                    .iter()
+                    .map(|s| parse_layers(s, "sections"))
+                    .collect::<anyhow::Result<Vec<_>>>()?;
+                let exit_branches = v
+                    .req("exit_branches")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("'exit_branches' must be an array"))?
+                    .iter()
+                    .map(|s| parse_layers(s, "exit_branches"))
+                    .collect::<anyhow::Result<Vec<_>>>()?;
+                (
+                    sections,
+                    exit_branches,
+                    probs(v.req("reach_profile")?, "reach_profile")?,
+                    probs(v.req("reach_paper")?, "reach_paper")?,
+                )
+            } else {
+                (
+                    vec![
+                        parse_layers(v.req("stage1")?, "stage1")?,
+                        parse_layers(v.req("stage2")?, "stage2")?,
+                    ],
+                    vec![parse_layers(v.req("exit_branch")?, "exit_branch")?],
+                    vec![num("p_profile")?],
+                    vec![num("p_paper")?],
+                )
+            };
+
         let net = Network {
             name,
             input_shape: Shape::from_json(v.req("input_shape")?)?,
             classes: num("classes")? as usize,
             c_thr: num("c_thr")?,
-            p_profile: num("p_profile")?,
-            p_paper: num("p_paper")?,
-            stage1: parse_stage("stage1")?,
-            exit_branch: parse_stage("exit_branch")?,
-            stage2: parse_stage("stage2")?,
+            sections,
+            exit_branches,
+            reach_profile,
+            reach_paper,
             accuracy: Accuracy {
                 exit_acc: acc_num("exit_acc")?,
                 final_acc: acc_num("final_acc")?,
@@ -95,27 +157,75 @@ impl Network {
         Self::from_json(&v)
     }
 
-    /// Structural validation: stage chaining, exit classifier width,
-    /// probability/threshold ranges.
+    /// Number of backbone sections (exits + 1).
+    pub fn n_sections(&self) -> usize {
+        self.sections.len()
+    }
+
+    /// Number of early exits.
+    pub fn n_exits(&self) -> usize {
+        self.exit_branches.len()
+    }
+
+    /// Profiled probability that a sample is "hard" at the first exit —
+    /// the two-stage p of the paper.
+    pub fn p_profile(&self) -> f64 {
+        self.reach_profile.first().copied().unwrap_or(0.0)
+    }
+
+    /// The first-exit probability the paper evaluated at (Table IV).
+    pub fn p_paper(&self) -> f64 {
+        self.reach_paper.first().copied().unwrap_or(0.0)
+    }
+
+    /// Structural validation: section/branch chaining, classifier
+    /// widths, probability/threshold ranges.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(
-            !self.stage1.is_empty() && !self.stage2.is_empty() && !self.exit_branch.is_empty(),
-            "all three stage groups must be non-empty"
+            self.sections.len() >= 2,
+            "an Early-Exit network needs at least two backbone sections"
         );
         anyhow::ensure!(
-            self.stage1[0].in_shape == self.input_shape,
-            "stage1 input must match network input"
-        );
-        let s1_out = &self.stage1.last().unwrap().out_shape;
-        anyhow::ensure!(
-            &self.exit_branch[0].in_shape == s1_out,
-            "exit branch must consume stage1 output"
+            self.exit_branches.len() == self.sections.len() - 1,
+            "need exactly one exit branch per non-final section \
+             ({} sections, {} branches)",
+            self.sections.len(),
+            self.exit_branches.len()
         );
         anyhow::ensure!(
-            &self.stage2[0].in_shape == s1_out,
-            "stage2 must consume stage1 output"
+            self.reach_profile.len() == self.exit_branches.len()
+                && self.reach_paper.len() == self.exit_branches.len(),
+            "reach probability vectors must have one entry per exit"
         );
-        for group in [&self.stage1, &self.exit_branch, &self.stage2] {
+        anyhow::ensure!(
+            self.sections.iter().all(|s| !s.is_empty())
+                && self.exit_branches.iter().all(|b| !b.is_empty()),
+            "all sections and exit branches must be non-empty"
+        );
+        anyhow::ensure!(
+            self.sections[0][0].in_shape == self.input_shape,
+            "first section input must match network input"
+        );
+        // Sections chain into each other; each exit branch consumes its
+        // section's output.
+        for i in 0..self.sections.len() - 1 {
+            let out = &self.sections[i].last().unwrap().out_shape;
+            anyhow::ensure!(
+                &self.sections[i + 1][0].in_shape == out,
+                "section {} must consume section {i}'s output",
+                i + 1
+            );
+            anyhow::ensure!(
+                &self.exit_branches[i][0].in_shape == out,
+                "exit branch {i} must consume section {i}'s output"
+            );
+            anyhow::ensure!(
+                self.exit_branches[i].last().unwrap().out_shape == Shape::flat(self.classes),
+                "exit branch {i} must end in a {}-class classifier",
+                self.classes
+            );
+        }
+        for group in self.sections.iter().chain(self.exit_branches.iter()) {
             for pair in group.windows(2) {
                 anyhow::ensure!(
                     pair[0].out_shape == pair[1].in_shape,
@@ -126,44 +236,53 @@ impl Network {
             }
         }
         anyhow::ensure!(
-            self.exit_branch.last().unwrap().out_shape == Shape::flat(self.classes),
-            "exit branch must end in a {}-class classifier",
+            self.sections.last().unwrap().last().unwrap().out_shape
+                == Shape::flat(self.classes),
+            "final section must end in a {}-class classifier",
             self.classes
         );
-        anyhow::ensure!(
-            self.stage2.last().unwrap().out_shape == Shape::flat(self.classes),
-            "stage2 must end in a {}-class classifier",
-            self.classes
-        );
-        anyhow::ensure!(
-            (0.0..=1.0).contains(&self.p_profile) && (0.0..=1.0).contains(&self.p_paper),
-            "probabilities must be in [0,1]"
-        );
+        for probs in [&self.reach_profile, &self.reach_paper] {
+            anyhow::ensure!(
+                probs.iter().all(|p| (0.0..=1.0).contains(p)),
+                "reach probabilities must be in [0,1]"
+            );
+            anyhow::ensure!(
+                probs.windows(2).all(|w| w[0] >= w[1]),
+                "reach probabilities must be non-increasing along the pipeline"
+            );
+        }
         anyhow::ensure!(self.c_thr > 0.0, "C_thr must be positive");
         Ok(())
     }
 
     /// The single-stage baseline: "the network layers from the start of
     /// the Early-Exit network through to the end of the second stage"
-    /// (§IV-A) — i.e. the backbone without the exit branch.
+    /// (§IV-A) — i.e. the whole backbone without any exit branch.
     pub fn baseline_layers(&self) -> Vec<Layer> {
-        self.stage1
-            .iter()
-            .chain(self.stage2.iter())
-            .cloned()
-            .collect()
+        self.sections.iter().flatten().cloned().collect()
     }
 
-    /// Shape of the intermediate feature map buffered by the Conditional
-    /// Buffer (stage-1 output).
+    /// Input shape of backbone section `i`.
+    pub fn section_in_shape(&self, i: usize) -> &Shape {
+        &self.sections[i][0].in_shape
+    }
+
+    /// Output shape of backbone section `i` (the feature map buffered by
+    /// Conditional Buffer `i` when `i` is a non-final section).
+    pub fn section_out_shape(&self, i: usize) -> &Shape {
+        &self.sections[i].last().unwrap().out_shape
+    }
+
+    /// Shape of the first intermediate feature map (two-stage
+    /// compatibility name; equals `section_out_shape(0)`).
     pub fn stage1_out_shape(&self) -> &Shape {
-        &self.stage1.last().unwrap().out_shape
+        self.section_out_shape(0)
     }
 }
 
 pub mod testnet {
-    //! A self-contained B-LeNet-shaped network for tests and benches that
-    //! must not depend on `artifacts/` being built.
+    //! Self-contained networks for tests and benches that must not
+    //! depend on `artifacts/` being built.
     use super::*;
     use crate::ir::layer::Op;
 
@@ -181,6 +300,8 @@ pub mod testnet {
         out
     }
 
+    /// The B-LeNet-shaped two-stage network (the paper's evaluated
+    /// configuration).
     pub fn blenet_like() -> Network {
         let input = Shape::chw(1, 28, 28);
         let stage1 = chain(
@@ -240,11 +361,91 @@ pub mod testnet {
             input_shape: input,
             classes: 10,
             c_thr: 0.95,
-            p_profile: 0.25,
-            p_paper: 0.25,
-            stage1,
-            exit_branch,
-            stage2,
+            sections: vec![stage1, stage2],
+            exit_branches: vec![exit_branch],
+            reach_profile: vec![0.25],
+            reach_paper: vec![0.25],
+            accuracy: Accuracy::default(),
+            baseline_acc: 0.0,
+        }
+    }
+
+    /// A three-exit network (two early exits + final classifier) for the
+    /// multi-stage toolflow path: three backbone sections at 28 → 14 →
+    /// 7 → 3 resolution, exits after the first and second sections.
+    pub fn three_exit() -> Network {
+        let input = Shape::chw(1, 28, 28);
+        let section0 = chain(
+            vec![
+                Op::Conv {
+                    out_ch: 8,
+                    k: 5,
+                    pad: 2,
+                    stride: 1,
+                },
+                Op::Relu,
+                Op::MaxPool { k: 2, stride: 2 },
+            ],
+            input.clone(),
+        );
+        let s0_out = section0.last().unwrap().out_shape.clone();
+        let exit0 = chain(
+            vec![
+                Op::Conv {
+                    out_ch: 8,
+                    k: 3,
+                    pad: 1,
+                    stride: 1,
+                },
+                Op::Relu,
+                Op::MaxPool { k: 2, stride: 2 },
+                Op::Flatten,
+                Op::Linear { out: 10 },
+            ],
+            s0_out.clone(),
+        );
+        let section1 = chain(
+            vec![
+                Op::Conv {
+                    out_ch: 16,
+                    k: 5,
+                    pad: 2,
+                    stride: 1,
+                },
+                Op::Relu,
+                Op::MaxPool { k: 2, stride: 2 },
+            ],
+            s0_out,
+        );
+        let s1_out = section1.last().unwrap().out_shape.clone();
+        let exit1 = chain(
+            vec![Op::Flatten, Op::Linear { out: 10 }],
+            s1_out.clone(),
+        );
+        let section2 = chain(
+            vec![
+                Op::Conv {
+                    out_ch: 24,
+                    k: 3,
+                    pad: 1,
+                    stride: 1,
+                },
+                Op::Relu,
+                Op::MaxPool { k: 2, stride: 2 },
+                Op::Flatten,
+                Op::Linear { out: 10 },
+            ],
+            s1_out,
+        );
+        Network {
+            name: "three-exit-test".into(),
+            input_shape: input,
+            classes: 10,
+            c_thr: 0.9,
+            sections: vec![section0, section1, section2],
+            exit_branches: vec![exit0, exit1],
+            reach_profile: vec![0.40, 0.15],
+            reach_paper: vec![0.40, 0.15],
             accuracy: Accuracy::default(),
             baseline_acc: 0.0,
         }
@@ -259,15 +460,70 @@ mod tests {
     fn testnet_validates() {
         let net = testnet::blenet_like();
         net.validate().unwrap();
+        assert_eq!(net.n_sections(), 2);
+        assert_eq!(net.n_exits(), 1);
         assert_eq!(net.stage1_out_shape(), &Shape::chw(8, 14, 14));
         assert_eq!(net.baseline_layers().len(), 11);
+        assert!((net.p_profile() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn three_exit_testnet_validates() {
+        let net = testnet::three_exit();
+        net.validate().unwrap();
+        assert_eq!(net.n_sections(), 3);
+        assert_eq!(net.n_exits(), 2);
+        assert_eq!(net.section_out_shape(0), &Shape::chw(8, 14, 14));
+        assert_eq!(net.section_out_shape(1), &Shape::chw(16, 7, 7));
+        assert_eq!(net.section_out_shape(2), &Shape::flat(10));
     }
 
     #[test]
     fn broken_chaining_rejected() {
         let mut net = testnet::blenet_like();
-        net.stage2.remove(0); // stage2 now consumes the wrong shape
+        net.sections[1].remove(0); // stage2 now consumes the wrong shape
         assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn increasing_reach_probs_rejected() {
+        let mut net = testnet::three_exit();
+        net.reach_profile = vec![0.15, 0.40]; // increasing: impossible
+        assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn legacy_two_stage_json_still_parses() {
+        // The exported artifacts use the legacy keys; they must keep
+        // parsing into the 2-section form.
+        let net = testnet::blenet_like();
+        let layer_json = |l: &Layer| l.to_json();
+        let arr = |ls: &[Layer]| Json::arr(ls.iter().map(layer_json));
+        let doc = Json::obj(vec![
+            ("name", Json::str("legacy".to_string())),
+            ("input_shape", net.input_shape.to_json()),
+            ("classes", Json::num(10.0)),
+            ("c_thr", Json::Num(0.95)),
+            ("p_profile", Json::Num(0.25)),
+            ("p_paper", Json::Num(0.25)),
+            ("stage1", arr(&net.sections[0])),
+            ("exit_branch", arr(&net.exit_branches[0])),
+            ("stage2", arr(&net.sections[1])),
+            (
+                "accuracy",
+                Json::obj(vec![
+                    ("exit_acc", Json::Num(0.9)),
+                    ("final_acc", Json::Num(0.95)),
+                    ("deployed_acc", Json::Num(0.93)),
+                    ("exit_acc_on_taken", Json::Num(0.97)),
+                    ("final_acc_on_hard", Json::Num(0.9)),
+                ]),
+            ),
+            ("baseline_acc", Json::Num(0.94)),
+        ]);
+        let parsed = Network::from_json(&doc).unwrap();
+        assert_eq!(parsed.n_sections(), 2);
+        assert_eq!(parsed.reach_profile, vec![0.25]);
     }
 
     #[test]

@@ -40,6 +40,10 @@ impl Shape {
         self.0.len()
     }
 
+    pub fn to_json(&self) -> crate::util::Json {
+        crate::util::Json::arr(self.0.iter().map(|&d| crate::util::Json::num(d as f64)))
+    }
+
     pub fn from_json(v: &crate::util::Json) -> anyhow::Result<Shape> {
         let arr = v
             .as_arr()

@@ -10,33 +10,52 @@
 //!     -> .measure(flags) -> Measured
 //! ```
 //!
+//! The stage model is **N-exit throughout** (§III-A's "trivial to
+//! extend … to multi-stage networks", taken literally): a network is a
+//! chain of backbone *sections* separated by early exits, and the
+//! number of exits is data — `ir::StageId::{Backbone(i),
+//! ExitBranch(i), Egress}`, one Conditional Buffer per exit, one TAP
+//! curve per section. The paper's two-stage configuration is the
+//! one-exit special case and is bit-identical to the dedicated
+//! two-stage code it replaced.
+//!
 //! * **`Lowered`** — network IR parsed and validated, then lowered into
-//!   the Early-Exit CDFG (Fig. 3) and the single-stage baseline graph.
-//! * **`Curves`** — per-stage Throughput-Area Pareto (TAP) curves from
-//!   fpgaConvNet-style simulated-annealing DSE over folding assignments.
-//!   The budget sweeps run on scoped threads, one seeded anneal per
-//!   (stage, fraction), bit-identical to the sequential path.
-//! * **`Combined`** — Eq. 1's TAP combination: the optimal
-//!   (stage-1, stage-2) resource split per budget, with the annealed
-//!   foldings merged into one full-CDFG mapping.
-//! * **`Realized`** — Conditional Buffer sizing (Fig. 7) plus margin,
-//!   budget re-check, HLS design-manifest generation and stitch checks,
-//!   pipeline-section timing extraction. This is the *cacheable*
-//!   artifact: it serializes into the `runtime::DesignCache`
-//!   (`artifacts/designs/`), so `infer`, `serve`, and `report` reuse a
-//!   previously realized design with zero anneal calls.
-//! * **`Measured`** — the event-driven streaming-dataflow simulator (the
-//!   board substitute) measures every design at the requested q ladder.
+//!   the Early-Exit CDFG (Fig. 3, N-exit form) and the single-stage
+//!   baseline graph, with the design-time reach-probability vector
+//!   resolved.
+//! * **`Curves`** — per-section Throughput-Area Pareto (TAP) curves
+//!   from fpgaConvNet-style simulated-annealing DSE over folding
+//!   assignments. The budget sweeps run on scoped threads, one seeded
+//!   anneal per (section, fraction), bit-identical to the sequential
+//!   path.
+//! * **`Combined`** — the multi-stage Eq. 1 (`tap::combine_multi`):
+//!   the resource split maximizing `min_i f_i(x_i) / r_i` per budget,
+//!   with the annealed foldings merged into one full-CDFG mapping. At
+//!   two stages this selects exactly what the pairwise `tap::combine`
+//!   would.
+//! * **`Realized`** — per-exit Conditional Buffer sizing (Fig. 7) plus
+//!   margin, budget re-check, HLS design-manifest generation and
+//!   stitch checks, pipeline-section timing extraction. This is the
+//!   *cacheable* artifact: it serializes into the
+//!   `runtime::DesignCache` (`artifacts/designs/`) under a
+//!   schema-versioned fingerprint, so `infer`, `serve`, and `report`
+//!   reuse a previously realized design with zero anneal calls and
+//!   stale-schema artifacts are evicted, never mis-parsed.
+//! * **`Measured`** — the event-driven streaming-dataflow simulator
+//!   (the board substitute) measures every design at the requested q
+//!   ladder, reporting per-exit completion rates alongside throughput.
 //!
 //! The legacy monolithic entry point `coordinator::toolflow::run_toolflow`
 //! survives as a thin wrapper over this chain.
 //!
 //! Around the pipeline sit the supporting layers: network IR parsing
 //! (`ir`), folding + resource models (`sdf`, `resources`), the DSE
-//! (`dse`), TAP algebra (`tap`), the simulator (`sim`), the HLS manifest
-//! generator (`hls`), a PJRT runtime executing the JAX/Pallas-AOT network
-//! numerics (`runtime`), and the batched inference / serving coordinator
-//! (`coordinator::batch` / `coordinator::server`).
+//! (`dse`), TAP algebra (`tap`), the N-exit simulator (`sim`), the HLS
+//! manifest generator (`hls`), a PJRT runtime executing the
+//! JAX/Pallas-AOT network numerics (`runtime`), and the batched
+//! inference / serving coordinator (`coordinator::batch` /
+//! `coordinator::server` — the latter a chain of per-section stage
+//! workers routing hard samples downstream).
 //!
 //! See `DESIGN.md` for the architecture, the pipeline-stage contracts,
 //! and the substitution rationale, and `EXPERIMENTS.md` for the

@@ -142,31 +142,42 @@ fn cmd_toolflow(args: &Args) -> anyhow::Result<()> {
         println!("loaded realized design from cache (zero anneal calls)");
     }
     let r = realized.measure(None)?.into_result();
+    let stage_pts: Vec<String> = r
+        .stage_curves
+        .iter()
+        .enumerate()
+        .map(|(i, c)| format!("{} stage{} pts", c.points.len(), i + 1))
+        .collect();
     println!(
-        "toolflow for '{name}' on {}: {} baseline pts, {} stage1 pts, {} stage2 pts, {} combined designs (p={:.3})",
+        "toolflow for '{name}' on {}: {} baseline pts, {}, {} combined designs (reach={:?})",
         board.name,
         r.baseline_curve.points.len(),
-        r.stage1_curve.points.len(),
-        r.stage2_curve.points.len(),
+        stage_pts.join(", "),
         r.designs.len(),
-        r.p,
+        r.reach,
     );
     let best = r.best_design().ok_or_else(|| anyhow::anyhow!("no design"))?;
     println!(
-        "best design: budget {:.0}%, predicted {:.0} samples/s at p, buffer depth {}, {}",
+        "best design: budget {:.0}%, predicted {:.0} samples/s at design reach, buffer depths {:?}, {}",
         best.budget_fraction * 100.0,
-        best.combined.throughput_at_p,
-        best.cond_buffer_depth,
+        best.combined.throughput_at_design,
+        best.cond_buffer_depths,
         best.total_resources
     );
     for (q, m) in &best.measured {
+        let rates: Vec<String> = m
+            .exit_rates
+            .iter()
+            .map(|r| format!("{:.0}%", r * 100.0))
+            .collect();
         println!(
-            "  simulated q={:.0}%: {:.0} samples/s, stalls {}, peak buffer {} / {}",
+            "  simulated q={:.0}%: {:.0} samples/s, stalls {}, peak buffer {} / {:?}, per-exit rates [{}]",
             q * 100.0,
             m.throughput_sps,
             m.stall_cycles,
             m.peak_buffer_occupancy,
-            best.cond_buffer_depth
+            best.cond_buffer_depths,
+            rates.join(", ")
         );
     }
     if let Some(path) = args.get("emit") {
@@ -189,9 +200,11 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
         stage1: &s1,
         stage2: &s2,
     };
-    let report = Profiler::default().profile(&mut oracle, &ts, samples)?;
+    let n_exits = store.network(name)?.n_exits();
+    let report = Profiler::default().profile(&mut oracle, &ts, samples, n_exits)?;
     println!("Early-Exit profile of '{name}' over {samples} samples (PJRT numerics):");
     println!("  p (hard-sample probability) = {:.4} ± {:.4}", report.p_hard, report.p_std);
+    println!("  reach past each exit        = {:?}", report.reach);
     println!("  exit accuracy on taken      = {:.4}", report.exit_acc_on_taken);
     println!("  deployed accuracy           = {:.4}", report.deployed_acc);
     for (i, s) in report.splits.iter().enumerate() {
@@ -214,7 +227,7 @@ fn cmd_infer(args: &Args) -> anyhow::Result<()> {
         .get("q")
         .map(|s| s.parse())
         .transpose()?
-        .unwrap_or(net.p_profile);
+        .unwrap_or(net.p_profile());
     let ts = atheena::data::TestSet::load(&args.artifacts(), name)?;
     let board = args.board()?;
 
@@ -228,10 +241,10 @@ fn cmd_infer(args: &Args) -> anyhow::Result<()> {
         .best_design()
         .ok_or_else(|| anyhow::anyhow!("no design"))?;
     println!(
-        "design: {} (budget {:.0}%, buffer depth {})",
+        "design: {} (budget {:.0}%, buffer depths {:?})",
         if cached { "cached" } else { "freshly realized" },
         best.budget_fraction * 100.0,
-        best.cond_buffer_depth
+        best.cond_buffer_depths
     );
 
     let s1 = store.stage1(name)?;
@@ -239,7 +252,7 @@ fn cmd_infer(args: &Args) -> anyhow::Result<()> {
     let host = BatchHost {
         stage1: &s1,
         stage2: &s2,
-        timing: best.timing,
+        timing: best.timing.clone(),
         sim: opts.sim.clone(),
     };
     let batch = ts.batch_with_q(q, batch_n, 0xBA7C);
@@ -284,11 +297,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         Ok((realized, cached)) => {
             if let Some(best) = realized.best_design() {
                 println!(
-                    "board design ({}): budget {:.0}%, predicted {:.0} samples/s at p, buffer depth {}",
+                    "board design ({}): budget {:.0}%, predicted {:.0} samples/s at design reach, buffer depths {:?}",
                     if cached { "cached" } else { "realized fresh, now cached" },
                     best.budget_fraction * 100.0,
-                    best.combined.throughput_at_p,
-                    best.cond_buffer_depth
+                    best.combined.throughput_at_design,
+                    best.cond_buffer_depths
                 );
             }
         }

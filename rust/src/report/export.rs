@@ -33,7 +33,7 @@ pub fn export_fig9(ctx: &mut ReportContext, network: &str, board: Board) -> anyh
             p.resources.bram, p.throughput
         ));
     }
-    let p_hard = r.p;
+    let p_hard = r.p();
     for d in &r.designs {
         rows.push(format!(
             "atheena_predicted,{:.2},{},{},{},{},{:.1}",
@@ -42,7 +42,7 @@ pub fn export_fig9(ctx: &mut ReportContext, network: &str, board: Board) -> anyh
             d.total_resources.ff,
             d.total_resources.dsp,
             d.total_resources.bram,
-            d.combined.throughput_at(p_hard)
+            d.combined.throughput_at_first(p_hard)
         ));
         for (q, m) in &d.measured {
             rows.push(format!(
@@ -75,12 +75,12 @@ pub fn export_fig7(ctx: &mut ReportContext, network: &str) -> anyhow::Result<()>
         let opts = ctx.options(board.clone());
         let r = ctx.toolflow(network, board)?;
         let best = r.best_design().ok_or_else(|| anyhow::anyhow!("no design"))?;
-        (best.timing, r.p, opts.sim, best.cond_buffer_depth)
+        (best.timing.clone(), r.p(), opts.sim, best.cond_buffer_depths[0])
     };
     let flags = synthetic_hard_flags(p, 1024, 0xC5F);
     let mut rows = Vec::new();
     for depth in 0..=(sized * 2) {
-        timing.cond_buffer_depth = depth;
+        timing.set_cond_buffer_depth(0, depth);
         let m = SimMetrics::from_result(&simulate_ee(&timing, &sim_cfg, &flags), sim_cfg.clock_hz);
         rows.push(format!(
             "{depth},{:.1},{},{}",

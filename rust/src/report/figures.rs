@@ -12,7 +12,7 @@ use crate::sim::{simulate_ee, SimMetrics};
 pub fn fig9a(ctx: &mut ReportContext) -> anyhow::Result<()> {
     let board = Board::zc706();
     let r = ctx.toolflow("blenet", board.clone())?;
-    println!("== Fig. 9a: predicted TAP, B-LeNet on ZC706, p = {:.0}% ==", r.p * 100.0);
+    println!("== Fig. 9a: predicted TAP, B-LeNet on ZC706, p = {:.0}% ==", r.p() * 100.0);
     println!("-- baseline (fpgaConvNet) --");
     println!("{:>8} {:>10} {:>8} {:>16} {:>10}", "budget%", "LUT", "DSP", "thr(samples/s)", "limit");
     for p in &r.baseline_curve.points {
@@ -32,15 +32,15 @@ pub fn fig9a(ctx: &mut ReportContext) -> anyhow::Result<()> {
         "{:>8} {:>8} {:>16} {:>16} {:>16}",
         "budget%", "DSP", "thr@q=p-5%", "thr@q=p", "thr@q=p+5%"
     );
-    let p = r.p;
+    let p = r.p();
     for d in &r.designs {
         println!(
             "{:>8.0} {:>8} {:>16.0} {:>16.0} {:>16.0}",
             d.budget_fraction * 100.0,
             d.total_resources.dsp,
-            d.combined.throughput_at((p - 0.05).max(0.01)),
-            d.combined.throughput_at(p),
-            d.combined.throughput_at(p + 0.05),
+            d.combined.throughput_at_first((p - 0.05).max(0.01)),
+            d.combined.throughput_at_first(p),
+            d.combined.throughput_at_first(p + 0.05),
         );
     }
     Ok(())
@@ -91,24 +91,24 @@ pub fn fig7(ctx: &mut ReportContext) -> anyhow::Result<()> {
     let board = Board::zc706();
     let q = {
         let r = ctx.toolflow("blenet", board.clone())?;
-        r.p
+        r.p()
     };
     let r = ctx.toolflow("blenet", board)?;
     let best = r
         .best_design()
         .ok_or_else(|| anyhow::anyhow!("no design"))?;
-    let sized = best.cond_buffer_depth;
+    let sized = best.cond_buffer_depths[0];
     println!("== Fig. 7 ablation: Conditional Buffer sizing (B-LeNet best design) ==");
     println!("sized depth (min + margin) = {sized} samples");
     println!(
         "{:>7} {:>16} {:>12} {:>10}",
         "depth", "thr(samples/s)", "stallcycles", "status"
     );
-    let mut timing = best.timing;
+    let mut timing = best.timing.clone();
     let flags =
         crate::coordinator::toolflow::synthetic_hard_flags(q, 1024, 0xF16_7);
     for depth in [0usize, 1, 2, 3, 4, 6, 8, 12, 16, sized, sized * 2] {
-        timing.cond_buffer_depth = depth;
+        timing.set_cond_buffer_depth(0, depth);
         let sim = simulate_ee(&timing, &ctx.options(Board::zc706()).sim, &flags);
         let m = SimMetrics::from_result(&sim, 125e6);
         println!(

@@ -48,7 +48,7 @@ pub fn table1(ctx: &mut ReportContext) -> anyhow::Result<()> {
             .measured
             .iter()
             .min_by(|(qa, _), (qb, _)| {
-                (qa - r.p).abs().total_cmp(&(qb - r.p).abs())
+                (qa - r.p()).abs().total_cmp(&(qb - r.p()).abs())
             })
             .map(|(_, m)| m.throughput_sps)
             .unwrap_or(0.0);
@@ -70,7 +70,7 @@ pub fn table1(ctx: &mut ReportContext) -> anyhow::Result<()> {
         let ee_thr = ba
             .measured
             .iter()
-            .min_by(|(qa, _), (qb, _)| (qa - r.p).abs().total_cmp(&(qb - r.p).abs()))
+            .min_by(|(qa, _), (qb, _)| (qa - r.p()).abs().total_cmp(&(qb - r.p()).abs()))
             .map(|(_, m)| m.throughput_sps)
             .unwrap_or(0.0);
         println!("max ATHEENA / max baseline throughput = {:.2}x", ee_thr / base_thr);
@@ -81,7 +81,7 @@ pub fn table1(ctx: &mut ReportContext) -> anyhow::Result<()> {
             .filter(|d| {
                 d.measured
                     .iter()
-                    .min_by(|(qa, _), (qb, _)| (qa - r.p).abs().total_cmp(&(qb - r.p).abs()))
+                    .min_by(|(qa, _), (qb, _)| (qa - r.p()).abs().total_cmp(&(qb - r.p()).abs()))
                     .map(|(_, m)| m.throughput_sps >= base_thr)
                     .unwrap_or(false)
             })
@@ -157,13 +157,13 @@ pub fn table3(ctx: &mut ReportContext) -> anyhow::Result<()> {
         let ee_thr = ba
             .measured
             .iter()
-            .min_by(|(qa, _), (qb, _)| (qa - r.p).abs().total_cmp(&(qb - r.p).abs()))
+            .min_by(|(qa, _), (qb, _)| (qa - r.p()).abs().total_cmp(&(qb - r.p()).abs()))
             .map(|(_, m)| m.throughput_sps)
             .unwrap_or(0.0);
         (
             DesignTiming::from_baseline_mapping(&bb.mapping),
-            ba.timing,
-            r.p,
+            ba.timing.clone(),
+            r.p(),
             bb.measured.throughput_sps,
             ee_thr,
         )
@@ -230,7 +230,7 @@ pub fn table4(ctx: &mut ReportContext) -> anyhow::Result<()> {
         let (bk, bf) = bb.total_resources.limiting(&board.resources);
         let (ak, af) = ba.total_resources.limiting(&board.resources);
         let base_thr = bb.throughput_predicted;
-        let ee_thr = ba.combined.throughput_at(r.p);
+        let ee_thr = ba.combined.throughput_at_first(r.p());
         println!(
             "{:>11} {:>9} {:>9} {:>5.0}% {:>6} {:>16.0} {:>7}",
             name, "Baseline", bk.to_string(), bf * 100.0, "-", base_thr, "1.00x"
@@ -241,7 +241,7 @@ pub fn table4(ctx: &mut ReportContext) -> anyhow::Result<()> {
             "ATHEENA",
             ak.to_string(),
             af * 100.0,
-            r.p * 100.0,
+            r.p() * 100.0,
             ee_thr,
             ee_thr / base_thr
         );

@@ -56,21 +56,36 @@ fn to_f32s(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
         .map_err(|e| anyhow::anyhow!("literal to f32 vec: {e:?}"))
 }
 
-/// Stage 1: `(C,H,W) image -> (take, exit_probs, features)`.
+/// An exit-bearing pipeline section: `input -> (take, exit_probs,
+/// features)`. Section 0 consumes the raw image; deeper sections consume
+/// the previous section's feature map.
 pub struct Stage1Exec {
     exe: xla::PjRtLoadedExecutable,
     pub net: Network,
+    /// Index of the backbone section this executable implements.
+    pub section: usize,
     input_shape: Vec<usize>,
     pub feature_words: usize,
 }
 
 impl Stage1Exec {
     pub fn new(exe: xla::PjRtLoadedExecutable, net: Network) -> Stage1Exec {
-        let input_shape = net.input_shape.0.clone();
-        let feature_words = net.stage1_out_shape().words();
+        Stage1Exec::for_section(exe, net, 0)
+    }
+
+    /// Build the executable wrapper for backbone section `section`
+    /// (must be a non-final, exit-bearing section).
+    pub fn for_section(exe: xla::PjRtLoadedExecutable, net: Network, section: usize) -> Stage1Exec {
+        let input_shape = if section == 0 {
+            net.input_shape.0.clone()
+        } else {
+            net.section_in_shape(section).0.clone()
+        };
+        let feature_words = net.section_out_shape(section).words();
         Stage1Exec {
             exe,
             net,
+            section,
             input_shape,
             feature_words,
         }
@@ -98,7 +113,7 @@ impl Stage1Exec {
     }
 }
 
-/// Stage 2: `features -> class probabilities`.
+/// The final pipeline section: `features -> class probabilities`.
 pub struct Stage2Exec {
     exe: xla::PjRtLoadedExecutable,
     pub net: Network,
@@ -107,7 +122,7 @@ pub struct Stage2Exec {
 
 impl Stage2Exec {
     pub fn new(exe: xla::PjRtLoadedExecutable, net: Network) -> Stage2Exec {
-        let feature_shape = net.stage1_out_shape().0.clone();
+        let feature_shape = net.section_in_shape(net.n_sections() - 1).0.clone();
         Stage2Exec {
             exe,
             net,

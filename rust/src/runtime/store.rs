@@ -162,19 +162,40 @@ impl ArtifactStore {
             .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))
     }
 
-    /// Compile the stage-1 module (backbone prefix + exit classifier +
-    /// exit-decision kernel) of a network.
-    pub fn stage1(&self, name: &str) -> anyhow::Result<Stage1Exec> {
+    /// Compile the exit-bearing module for backbone section `section`
+    /// (`{name}_stage{section+1}.hlo.txt`): backbone chain + exit
+    /// classifier + exit-decision kernel. Section 0 is the paper's
+    /// stage 1.
+    pub fn exit_stage(&self, name: &str, section: usize) -> anyhow::Result<Stage1Exec> {
         let net = self.network(name)?.clone();
-        let exe = self.compile(&format!("{name}_stage1.hlo.txt"))?;
-        Ok(Stage1Exec::new(exe, net))
+        anyhow::ensure!(
+            section + 1 < net.n_sections(),
+            "section {section} of '{name}' has no exit (network has {} sections)",
+            net.n_sections()
+        );
+        let exe = self.compile(&format!("{name}_stage{}.hlo.txt", section + 1))?;
+        Ok(Stage1Exec::for_section(exe, net, section))
     }
 
-    /// Compile the stage-2 module (backbone suffix -> class probabilities).
-    pub fn stage2(&self, name: &str) -> anyhow::Result<Stage2Exec> {
+    /// Compile the final module (`{name}_stage{n}.hlo.txt`): backbone
+    /// suffix -> class probabilities.
+    pub fn final_stage(&self, name: &str) -> anyhow::Result<Stage2Exec> {
         let net = self.network(name)?.clone();
-        let exe = self.compile(&format!("{name}_stage2.hlo.txt"))?;
+        let n = net.n_sections();
+        let exe = self.compile(&format!("{name}_stage{n}.hlo.txt"))?;
         Ok(Stage2Exec::new(exe, net))
+    }
+
+    /// Compile the stage-1 module of a two-stage network (compatibility
+    /// name for [`ArtifactStore::exit_stage`] at section 0).
+    pub fn stage1(&self, name: &str) -> anyhow::Result<Stage1Exec> {
+        self.exit_stage(name, 0)
+    }
+
+    /// Compile the stage-2 module of a two-stage network (compatibility
+    /// name for [`ArtifactStore::final_stage`]).
+    pub fn stage2(&self, name: &str) -> anyhow::Result<Stage2Exec> {
+        self.final_stage(name)
     }
 
     /// Compile the single-stage baseline module.

@@ -1,52 +1,71 @@
-//! Conditional Buffer sizing (paper Fig. 7).
+//! Conditional Buffer sizing (paper Fig. 7), per exit.
 //!
 //! "The latency of the additional exit computation and exit decision
 //! layers is used to determine the minimum amount of buffering required by
 //! the conditional buffer to prevent deadlock in the design."
 //!
-//! While a sample's feature map waits in the Conditional Buffer, the exit
-//! branch is still computing its confidence. New samples keep arriving
-//! every `stage1 II` cycles. The buffer must therefore hold at least
-//! `ceil(decision_delay_cycles / stage1_ii) + 1`
+//! While a sample's feature map waits in Conditional Buffer `i`, exit
+//! branch `i` is still computing its confidence. New samples keep
+//! arriving every `section_rate_ii(i)` cycles. Buffer `i` must therefore
+//! hold at least
+//! `ceil(decision_delay_cycles(i) / section_rate_ii(i)) + 1`
 //! samples (the +1 is the sample whose decision is in flight). Below this
 //! depth the buffer fills with undecided samples, backpressure stalls the
 //! Split, the exit branch is starved *mid-sample*, and the decision that
 //! would free the buffer never completes — deadlock. The simulator
-//! reproduces exactly this failure mode (`sim::engine` + the fig7 report).
+//! reproduces exactly this failure mode per buffer (`sim::engine` + the
+//! fig7 report).
 
 use super::mapping::HwMapping;
 use crate::ir::StageId;
 
-/// Cycles from a sample entering the exit branch to its decision reaching
-/// the Conditional Buffer's control port.
-pub fn decision_delay_cycles(m: &HwMapping) -> u64 {
+/// Cycles from a sample entering exit branch `exit` to its decision
+/// reaching the corresponding Conditional Buffer's control port.
+pub fn decision_delay_cycles(m: &HwMapping, exit: usize) -> u64 {
     // Sum of latencies along the exit-branch chain (classifier layers +
     // the Exit Decision layer itself).
-    m.stage_latency(StageId::ExitBranch)
+    m.stage_latency(StageId::ExitBranch(exit))
 }
 
-/// Minimum Conditional Buffer depth (in samples) that avoids deadlock.
-pub fn min_depth_samples(m: &HwMapping) -> usize {
-    let delay = decision_delay_cycles(m);
-    let ii = m.stage1_ii().max(1);
+/// Minimum depth (in samples) of Conditional Buffer `exit` that avoids
+/// deadlock.
+pub fn min_depth_samples(m: &HwMapping, exit: usize) -> usize {
+    let delay = decision_delay_cycles(m, exit);
+    let ii = m.section_rate_ii(exit).max(1);
     (delay.div_ceil(ii) + 1) as usize
 }
 
-/// Recommended depth: the minimum plus a robustness margin for q > p
-/// bursts ("additional BRAM is added to increase robustness to variation
-/// in the hard samples' exit probability", §IV-A). The margin scales with
-/// how bursty the worst case is: a run of hard samples of length L makes
-/// stage 2 the bottleneck for L * stage2_ii cycles during which stage 1
-/// keeps producing.
-pub fn recommended_depth_samples(m: &HwMapping, margin_samples: usize) -> usize {
-    min_depth_samples(m) + margin_samples
+/// Recommended depth: the minimum plus a robustness margin for
+/// hotter-than-profiled reach probabilities ("additional BRAM is added to
+/// increase robustness to variation in the hard samples' exit
+/// probability", §IV-A). The margin scales with how bursty the worst case
+/// is: a run of hard samples of length L makes the next section the
+/// bottleneck for L * its II cycles during which this section keeps
+/// producing.
+pub fn recommended_depth_samples(m: &HwMapping, exit: usize, margin_samples: usize) -> usize {
+    min_depth_samples(m, exit) + margin_samples
 }
 
-/// Size the mapping's Conditional Buffer in place and return the depth.
+/// Size every Conditional Buffer in place with the same margin; returns
+/// the depths in exit order.
+pub fn size_cond_buffers(m: &mut HwMapping, margin_samples: usize) -> Vec<usize> {
+    let n = m.cdfg.n_exits();
+    let depths: Vec<usize> = (0..n)
+        .map(|e| recommended_depth_samples(m, e, margin_samples))
+        .collect();
+    for (e, &d) in depths.iter().enumerate() {
+        m.set_cond_buffer_depth(e, d);
+    }
+    depths
+}
+
+/// Two-stage compatibility wrapper: size every buffer and return the
+/// first exit's depth.
 pub fn size_cond_buffer(m: &mut HwMapping, margin_samples: usize) -> usize {
-    let depth = recommended_depth_samples(m, margin_samples);
-    m.set_cond_buffer_depth(depth);
-    depth
+    size_cond_buffers(m, margin_samples)
+        .first()
+        .copied()
+        .unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -62,7 +81,7 @@ mod tests {
     #[test]
     fn min_depth_positive_and_consistent() {
         let m = mapping();
-        let d = min_depth_samples(&m);
+        let d = min_depth_samples(&m, 0);
         assert!(d >= 1);
         // Faster stage 1 (smaller II) needs a deeper buffer for the same
         // decision delay.
@@ -70,9 +89,9 @@ mod tests {
         for i in 0..fast.foldings.len() {
             fast.foldings[i] = fast.spaces[i].max();
         }
-        assert!(min_depth_samples(&fast) >= 1);
-        let delay_slow = decision_delay_cycles(&m);
-        let delay_fast = decision_delay_cycles(&fast);
+        assert!(min_depth_samples(&fast, 0) >= 1);
+        let delay_slow = decision_delay_cycles(&m, 0);
+        let delay_fast = decision_delay_cycles(&fast, 0);
         assert!(delay_fast <= delay_slow);
     }
 
@@ -80,15 +99,28 @@ mod tests {
     fn sizing_updates_mapping() {
         let mut m = mapping();
         let d = size_cond_buffer(&mut m, 4);
-        assert_eq!(m.cond_buffer_depth(), d);
-        assert_eq!(d, min_depth_samples(&m) + 4);
+        assert_eq!(m.cond_buffer_depth(0), d);
+        assert_eq!(d, min_depth_samples(&m, 0) + 4);
     }
 
     #[test]
     fn depth_formula() {
         let m = mapping();
-        let d = min_depth_samples(&m);
-        let expect = decision_delay_cycles(&m).div_ceil(m.stage1_ii()) + 1;
+        let d = min_depth_samples(&m, 0);
+        let expect = decision_delay_cycles(&m, 0).div_ceil(m.section_rate_ii(0)) + 1;
         assert_eq!(d as u64, expect);
+    }
+
+    #[test]
+    fn per_exit_sizing_on_three_exit_net() {
+        let net = testnet::three_exit();
+        let mut m = HwMapping::minimal(Cdfg::lower(&net, 1));
+        let depths = size_cond_buffers(&mut m, 3);
+        assert_eq!(depths.len(), 2);
+        for (e, &d) in depths.iter().enumerate() {
+            assert_eq!(m.cond_buffer_depth(e), d);
+            assert_eq!(d, min_depth_samples(&m, e) + 3);
+            assert!(d >= 2, "depth must exceed the in-flight sample");
+        }
     }
 }

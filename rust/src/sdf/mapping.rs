@@ -1,6 +1,7 @@
 //! A design point: one folding per CDFG node, with resource/performance
 //! roll-ups. This is the object the DSE mutates and the TAP curves are
-//! built from.
+//! built from. All roll-ups are indexed by pipeline *section* so the same
+//! code serves two-stage and N-exit graphs.
 
 use super::folding::{Folding, FoldingSpace};
 use super::perf;
@@ -46,11 +47,11 @@ impl HwMapping {
     }
 
     /// Resources attributable to Early-Exit overhead (Table II): the
-    /// hardware-only EE layers plus the exit-branch classifier.
+    /// hardware-only EE layers plus every exit-branch classifier.
     pub fn ee_overhead_resources(&self) -> ResourceVec {
         let mut total = ResourceVec::ZERO;
         for node in &self.cdfg.nodes {
-            if node.op.is_ee_overhead() || node.stage == StageId::ExitBranch {
+            if node.op.is_ee_overhead() || matches!(node.stage, StageId::ExitBranch(_)) {
                 total += self.node_resources(node.id);
             }
         }
@@ -66,34 +67,34 @@ impl HwMapping {
         perf::latency_cycles(&self.cdfg.nodes[id], &self.foldings[id])
     }
 
-    /// Pipeline II (cycles/sample) of the full-rate section: stage-1
-    /// backbone, split, exit branch, decision, merge. This is the rate
-    /// every input sample must sustain.
-    pub fn stage1_ii(&self) -> u64 {
+    /// Pipeline II (cycles/sample) of everything running at section
+    /// `sec`'s sample rate: the section's backbone nodes, its exit
+    /// branch, and — for section 0 — the Egress (merge emits one result
+    /// per input sample). This is the rate every sample *reaching*
+    /// section `sec` must sustain.
+    pub fn section_rate_ii(&self, sec: usize) -> u64 {
         self.cdfg
             .nodes
             .iter()
-            .filter(|n| {
-                matches!(
-                    n.stage,
-                    StageId::Stage1 | StageId::ExitBranch | StageId::Egress
-                )
+            .filter(|n| match n.stage {
+                StageId::Backbone(i) | StageId::ExitBranch(i) => i == sec,
+                StageId::Egress => sec == 0,
             })
             .map(|n| perf::ii_cycles(n, &self.foldings[n.id]))
             .max()
             .unwrap_or(1)
     }
 
-    /// Pipeline II of the hard-sample section (stage-2 backbone behind
-    /// the Conditional Buffer). Only a fraction p of samples pass here.
+    /// Two-stage compatibility name: the full-rate section's II
+    /// (`section_rate_ii(0)`).
+    pub fn stage1_ii(&self) -> u64 {
+        self.section_rate_ii(0)
+    }
+
+    /// Two-stage compatibility name: the hard-sample section's II
+    /// (`section_rate_ii(1)`).
     pub fn stage2_ii(&self) -> u64 {
-        self.cdfg
-            .nodes
-            .iter()
-            .filter(|n| n.stage == StageId::Stage2)
-            .map(|n| perf::ii_cycles(n, &self.foldings[n.id]))
-            .max()
-            .unwrap_or(1)
+        self.section_rate_ii(1)
     }
 
     /// Pipeline fill latency (cycles) of a stage's chain.
@@ -112,14 +113,23 @@ impl HwMapping {
         clock_hz / self.stage1_ii() as f64
     }
 
-    /// Predicted throughput (samples/s) of the EE design when a fraction
-    /// `q` of samples are hard (paper Eq. 1's min form): the design
-    /// sustains the slower of the full-rate section and the hard-sample
-    /// section scaled by 1/q.
+    /// Predicted throughput (samples/s) of an N-exit design when the
+    /// runtime reach probabilities past each exit are `reach_past`
+    /// (`reach_past[i]` = fraction of samples entering section `i + 1`).
+    /// Eq. 1's min form folded over sections: section `i`'s effective
+    /// cycle cost is `section_rate_ii(i) * r_i`.
+    pub fn ee_throughput_multi(&self, clock_hz: f64, reach_past: &[f64]) -> f64 {
+        let mut worst = self.section_rate_ii(0) as f64;
+        for (i, &r) in reach_past.iter().enumerate() {
+            worst = worst.max(self.section_rate_ii(i + 1) as f64 * r);
+        }
+        clock_hz / worst
+    }
+
+    /// Two-stage form of [`HwMapping::ee_throughput_multi`]: a fraction
+    /// `q` of samples are hard at the single exit.
     pub fn ee_throughput(&self, clock_hz: f64, q: f64) -> f64 {
-        let s1 = self.stage1_ii() as f64;
-        let s2 = self.stage2_ii() as f64 * q;
-        clock_hz / s1.max(s2)
+        self.ee_throughput_multi(clock_hz, &[q])
     }
 
     /// Total MAC workload per sample (for efficiency reporting).
@@ -136,25 +146,34 @@ impl HwMapping {
             .sum()
     }
 
-    /// Set the Conditional Buffer depth (re-sizing after folding chosen).
-    pub fn set_cond_buffer_depth(&mut self, depth: usize) {
-        let id = self.cdfg.cond_buffer;
-        if id != usize::MAX {
-            if let HwOp::CondBuffer { depth_samples } = &mut self.cdfg.nodes[id].op {
-                *depth_samples = depth;
-            }
+    /// Set Conditional Buffer `exit`'s depth (re-sizing after folding
+    /// chosen). Out-of-range exits are ignored (baseline graphs).
+    pub fn set_cond_buffer_depth(&mut self, exit: usize, depth: usize) {
+        let Some(&id) = self.cdfg.cond_buffers.get(exit) else {
+            return;
+        };
+        if let HwOp::CondBuffer { depth_samples } = &mut self.cdfg.nodes[id].op {
+            *depth_samples = depth;
         }
     }
 
-    pub fn cond_buffer_depth(&self) -> usize {
-        let id = self.cdfg.cond_buffer;
-        if id == usize::MAX {
+    /// Depth of Conditional Buffer `exit` (0 if the graph has no such
+    /// buffer — baseline designs).
+    pub fn cond_buffer_depth(&self, exit: usize) -> usize {
+        let Some(&id) = self.cdfg.cond_buffers.get(exit) else {
             return 0;
-        }
+        };
         match self.cdfg.nodes[id].op {
             HwOp::CondBuffer { depth_samples } => depth_samples,
             _ => unreachable!(),
         }
+    }
+
+    /// Depths of every Conditional Buffer, in exit order.
+    pub fn cond_buffer_depths(&self) -> Vec<usize> {
+        (0..self.cdfg.n_exits())
+            .map(|e| self.cond_buffer_depth(e))
+            .collect()
     }
 }
 
@@ -239,7 +258,7 @@ mod tests {
         let clock = 125e6;
         // With a slow stage 2 (minimal folding there), smaller q helps.
         for n in m.cdfg.nodes.clone() {
-            if n.stage == StageId::Stage2 {
+            if n.stage == StageId::Backbone(1) {
                 m.foldings[n.id] = Folding::UNIT;
             }
         }
@@ -249,6 +268,20 @@ mod tests {
         // q -> 0 saturates at the stage-1 rate.
         let t0 = m.ee_throughput(clock, 1e-9);
         assert!((t0 - clock / m.stage1_ii() as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn three_exit_section_rates_cover_all_nodes() {
+        let net = testnet::three_exit();
+        let m = HwMapping::minimal(Cdfg::lower(&net, 4));
+        for sec in 0..3 {
+            assert!(m.section_rate_ii(sec) >= 1);
+        }
+        // Multi-stage throughput behaves monotonically in each reach prob.
+        let clock = 125e6;
+        let base = m.ee_throughput_multi(clock, &[0.4, 0.15]);
+        assert!(m.ee_throughput_multi(clock, &[0.4, 0.10]) >= base);
+        assert!(m.ee_throughput_multi(clock, &[0.9, 0.15]) <= base);
     }
 
     #[test]
@@ -264,9 +297,22 @@ mod tests {
     fn cond_buffer_depth_resizing() {
         let mut m = ee_mapping();
         let before = m.total_resources().bram;
-        m.set_cond_buffer_depth(64);
-        assert_eq!(m.cond_buffer_depth(), 64);
+        m.set_cond_buffer_depth(0, 64);
+        assert_eq!(m.cond_buffer_depth(0), 64);
+        assert_eq!(m.cond_buffer_depths(), vec![64]);
         assert!(m.total_resources().bram > before);
+    }
+
+    #[test]
+    fn per_exit_buffer_depths_independent() {
+        let net = testnet::three_exit();
+        let mut m = HwMapping::minimal(Cdfg::lower(&net, 2));
+        m.set_cond_buffer_depth(0, 16);
+        m.set_cond_buffer_depth(1, 5);
+        assert_eq!(m.cond_buffer_depths(), vec![16, 5]);
+        // Out-of-range exits are a no-op, not a panic.
+        m.set_cond_buffer_depth(7, 99);
+        assert_eq!(m.cond_buffer_depth(7), 0);
     }
 
     #[test]

@@ -133,7 +133,7 @@ mod tests {
     fn decision_latency_has_tree_depth() {
         let net = testnet::blenet_like();
         let g = Cdfg::lower(&net, 8);
-        let dec = &g.nodes[g.exit_decision];
+        let dec = &g.nodes[g.exit_decisions[0]];
         // 10 classes -> ceil(log2(10)) = 4 levels.
         assert_eq!(latency_cycles(dec, &Folding::UNIT), 8 + 40 + 3 + 10);
     }
@@ -142,7 +142,7 @@ mod tests {
     fn latency_at_least_ii() {
         let net = testnet::blenet_like();
         let g = Cdfg::lower(&net, 8);
-        for node in g.nodes_in_stage(StageId::Stage1) {
+        for node in g.nodes_in_stage(StageId::Backbone(0)) {
             assert!(latency_cycles(node, &Folding::UNIT) >= ii_cycles(node, &Folding::UNIT));
         }
     }

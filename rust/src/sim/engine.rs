@@ -1,69 +1,107 @@
-//! The simulation engine: per-sample timed schedules with backpressure.
+//! The simulation engine: per-sample timed schedules with backpressure,
+//! generalized to N-exit pipelines.
 //!
 //! Model
 //! -----
 //! The design is compressed into its pipeline sections (the quantities the
 //! SDF schedule is fully determined by):
 //!
-//! * stage-1 chain (backbone prefix + split):        II₁, LAT₁
-//! * exit branch (classifier + Exit Decision):       IIₑ, LATₑ
-//! * stage-2 chain (buffer read → final classifier): II₂, LAT₂
-//! * Exit Merge:                                     IIₘ per result
-//! * DMA in/out:                                     words / bus-width
+//! * backbone section *i* (chain + its trailing split): IIᵢ, LATᵢ
+//! * exit branch *i* (classifier + Exit Decision):      IIₑᵢ, LATₑᵢ
+//! * Conditional Buffer *i* (guarding section *i + 1*): depth (samples)
+//! * Exit Merge:                                        IIₘ per result
+//! * DMA in/out:                                        words / bus-width
 //!
 //! Samples advance through timed recurrences with *blocking* semantics:
-//! stage 1 may only emit sample `s` once the Conditional Buffer has a free
-//! slot; a full buffer therefore backpressures the whole front of the
-//! pipeline exactly as a full HLS stream FIFO would (§II-C "Streaming
-//! backpressure is handled by the Vivado HLS streaming interface").
+//! section *i* may only emit sample `s` once Conditional Buffer *i* has a
+//! free slot; a full buffer therefore backpressures the whole front of
+//! the pipeline exactly as a full HLS stream FIFO would (§II-C
+//! "Streaming backpressure is handled by the Vivado HLS streaming
+//! interface").
 //!
-//! The Conditional Buffer holds a sample from the moment the split writes
+//! Conditional Buffer *i* holds a sample from the moment split *i* writes
 //! it until its decision arrives (easy → dropped in one cycle via address
-//! invalidation) or stage 2 accepts it (hard). A depth of 0 cannot hold
-//! even the sample whose decision is in flight: the split stalls
-//! mid-feature-map, the exit branch is starved, the decision never fires —
-//! deadlock (Fig. 7). The engine detects and reports this.
+//! invalidation) or section *i + 1* accepts it (hard). A depth of 0
+//! cannot hold even the sample whose decision is in flight: the split
+//! stalls mid-feature-map, the exit branch is starved, the decision never
+//! fires — deadlock (Fig. 7). The engine detects and reports this **per
+//! buffer**.
+//!
+//! The paper's two-stage network is the one-exit special case
+//! ([`simulate_ee`]); the N-exit schedule reduces to it exactly.
 
 use super::config::SimConfig;
 use crate::ir::StageId;
 use crate::sdf::HwMapping;
 
-/// Pipeline-section timing extracted from a design point.
-#[derive(Clone, Copy, Debug)]
+/// Timing of one backbone section.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SectionTiming {
+    pub ii: u64,
+    pub lat: u64,
+}
+
+/// Timing of one early exit: its branch chain and the Conditional Buffer
+/// guarding the next section.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExitTiming {
+    pub ii: u64,
+    pub lat: u64,
+    pub buffer_depth: usize,
+}
+
+/// Pipeline-section timing extracted from a design point. `sections`
+/// holds one entry per backbone section; `exits` one entry per early
+/// exit (`sections.len() - 1` for EE designs, empty for baselines).
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct DesignTiming {
-    pub s1_ii: u64,
-    pub s1_lat: u64,
-    pub exit_ii: u64,
-    pub exit_lat: u64,
-    pub s2_ii: u64,
-    pub s2_lat: u64,
+    pub sections: Vec<SectionTiming>,
+    pub exits: Vec<ExitTiming>,
     pub merge_ii: u64,
-    pub cond_buffer_depth: usize,
     pub input_words: usize,
     pub output_words: usize,
 }
 
 impl DesignTiming {
-    /// Extract section timings from an EE hardware mapping.
+    /// Extract section timings from an EE hardware mapping (any number
+    /// of exits).
     pub fn from_ee_mapping(m: &HwMapping) -> DesignTiming {
-        let stage_ii = |stage: StageId| -> u64 {
+        let n_sections = m.cdfg.n_sections;
+        let backbone_ii = |sec: usize| -> u64 {
             m.cdfg
                 .nodes
                 .iter()
-                .filter(|n| n.stage == stage)
+                .filter(|n| n.stage == StageId::Backbone(sec))
                 .map(|n| m.node_ii(n.id))
                 .max()
                 .unwrap_or(1)
         };
+        let branch_ii = |exit: usize| -> u64 {
+            m.cdfg
+                .nodes
+                .iter()
+                .filter(|n| n.stage == StageId::ExitBranch(exit))
+                .map(|n| m.node_ii(n.id))
+                .max()
+                .unwrap_or(1)
+        };
+        let sections = (0..n_sections)
+            .map(|sec| SectionTiming {
+                ii: backbone_ii(sec),
+                lat: m.stage_latency(StageId::Backbone(sec)),
+            })
+            .collect();
+        let exits = (0..n_sections.saturating_sub(1))
+            .map(|e| ExitTiming {
+                ii: branch_ii(e),
+                lat: m.stage_latency(StageId::ExitBranch(e)),
+                buffer_depth: m.cond_buffer_depth(e),
+            })
+            .collect();
         DesignTiming {
-            s1_ii: stage_ii(StageId::Stage1),
-            s1_lat: m.stage_latency(StageId::Stage1),
-            exit_ii: stage_ii(StageId::ExitBranch),
-            exit_lat: m.stage_latency(StageId::ExitBranch),
-            s2_ii: stage_ii(StageId::Stage2),
-            s2_lat: m.stage_latency(StageId::Stage2),
+            sections,
+            exits,
             merge_ii: m.node_ii(m.cdfg.exit_merge),
-            cond_buffer_depth: m.cond_buffer_depth(),
             input_words: m.cdfg.nodes[0].in_shape.words(),
             output_words: m.cdfg.nodes[m.cdfg.exit_merge].out_shape.words(),
         }
@@ -71,21 +109,18 @@ impl DesignTiming {
 
     /// Extract timing for a single-stage baseline design.
     pub fn from_baseline_mapping(m: &HwMapping) -> DesignTiming {
-        let ii = m.stage1_ii();
         DesignTiming {
-            s1_ii: ii,
-            s1_lat: m.stage_latency(StageId::Stage1),
-            exit_ii: 0,
-            exit_lat: 0,
-            s2_ii: 0,
-            s2_lat: 0,
+            sections: vec![SectionTiming {
+                ii: m.stage1_ii(),
+                lat: m.stage_latency(StageId::Backbone(0)),
+            }],
+            exits: Vec::new(),
             merge_ii: m
                 .cdfg
                 .nodes
                 .last()
                 .map(|n| n.out_shape.words() as u64)
                 .unwrap_or(1),
-            cond_buffer_depth: 0,
             input_words: m.cdfg.nodes[0].in_shape.words(),
             output_words: m
                 .cdfg
@@ -93,6 +128,64 @@ impl DesignTiming {
                 .last()
                 .map(|n| n.out_shape.words())
                 .unwrap_or(1),
+        }
+    }
+
+    /// Build a two-stage timing by hand (tests, benches, ablations).
+    #[allow(clippy::too_many_arguments)]
+    pub fn two_stage(
+        s1_ii: u64,
+        s1_lat: u64,
+        exit_ii: u64,
+        exit_lat: u64,
+        s2_ii: u64,
+        s2_lat: u64,
+        merge_ii: u64,
+        cond_buffer_depth: usize,
+        input_words: usize,
+        output_words: usize,
+    ) -> DesignTiming {
+        DesignTiming {
+            sections: vec![
+                SectionTiming { ii: s1_ii, lat: s1_lat },
+                SectionTiming { ii: s2_ii, lat: s2_lat },
+            ],
+            exits: vec![ExitTiming {
+                ii: exit_ii,
+                lat: exit_lat,
+                buffer_depth: cond_buffer_depth,
+            }],
+            merge_ii,
+            input_words,
+            output_words,
+        }
+    }
+
+    /// Number of backbone sections.
+    pub fn n_sections(&self) -> usize {
+        self.sections.len()
+    }
+
+    /// First section's II (two-stage compatibility accessor).
+    pub fn s1_ii(&self) -> u64 {
+        self.sections.first().map(|s| s.ii).unwrap_or(0)
+    }
+
+    /// Second section's II (two-stage compatibility accessor; 0 for
+    /// baselines).
+    pub fn s2_ii(&self) -> u64 {
+        self.sections.get(1).map(|s| s.ii).unwrap_or(0)
+    }
+
+    /// Depth of Conditional Buffer `exit` (0 when absent).
+    pub fn cond_buffer_depth(&self, exit: usize) -> usize {
+        self.exits.get(exit).map(|e| e.buffer_depth).unwrap_or(0)
+    }
+
+    /// Set Conditional Buffer `exit`'s depth (depth-sweep ablations).
+    pub fn set_cond_buffer_depth(&mut self, exit: usize, depth: usize) {
+        if let Some(e) = self.exits.get_mut(exit) {
+            e.buffer_depth = depth;
         }
     }
 }
@@ -104,8 +197,11 @@ pub struct SampleTrace {
     pub t_in: u64,
     /// Cycle its classification left the merge.
     pub t_out: u64,
-    /// Whether it took the early exit.
+    /// Whether it took any early exit.
     pub exited_early: bool,
+    /// Index of the section the sample completed at (exit index for
+    /// early exits; `n_sections - 1` for the final classifier).
+    pub exit_stage: usize,
 }
 
 /// Outcome of simulating one batch through one design.
@@ -114,10 +210,11 @@ pub struct SimResult {
     pub traces: Vec<SampleTrace>,
     /// Total cycles from first DMA word to output-DMA idle.
     pub total_cycles: u64,
-    /// Cycles stage 1 spent blocked on a full Conditional Buffer.
-    pub s1_stall_cycles: u64,
-    /// Peak Conditional Buffer occupancy (samples).
-    pub peak_buffer_occupancy: usize,
+    /// Cycles each section spent blocked on its full Conditional Buffer
+    /// (index = exit index; empty for baselines).
+    pub stall_cycles: Vec<u64>,
+    /// Peak occupancy (samples) of each Conditional Buffer.
+    pub peak_buffer_occupancy: Vec<usize>,
     /// Number of samples completing out of batch order.
     pub out_of_order: usize,
     /// Deadlock diagnosis, if the design cannot make progress (Fig. 7
@@ -131,6 +228,16 @@ impl SimResult {
             return 0.0;
         }
         self.traces.len() as f64 * clock_hz / self.total_cycles as f64
+    }
+
+    /// Total stall cycles summed over every section.
+    pub fn total_stall_cycles(&self) -> u64 {
+        self.stall_cycles.iter().sum()
+    }
+
+    /// Deepest peak occupancy over every Conditional Buffer.
+    pub fn max_peak_occupancy(&self) -> usize {
+        self.peak_buffer_occupancy.iter().copied().max().unwrap_or(0)
     }
 }
 
@@ -159,78 +266,108 @@ impl FaultModel {
     };
 }
 
-/// Simulate a batch through an Early-Exit design. `hard[s]` is the
-/// per-sample exit decision input (from ground-truth flags or live PJRT
-/// numerics via the coordinator).
+/// Simulate a batch through a two-stage Early-Exit design. `hard[s]` is
+/// the per-sample exit decision input (from ground-truth flags or live
+/// PJRT numerics via the coordinator).
 pub fn simulate_ee(t: &DesignTiming, cfg: &SimConfig, hard: &[bool]) -> SimResult {
-    sim_core(t, cfg, hard, &FaultModel::NONE)
+    let completes: Vec<usize> = hard.iter().map(|&h| usize::from(h)).collect();
+    sim_core(t, cfg, &completes, &FaultModel::NONE)
 }
 
-/// Simulate with injected faults (robustness / failure-injection tests).
+/// Simulate a two-stage design with injected faults (robustness /
+/// failure-injection tests).
 pub fn simulate_ee_faults(
     t: &DesignTiming,
     cfg: &SimConfig,
     hard: &[bool],
     faults: &FaultModel,
 ) -> SimResult {
-    sim_core(t, cfg, hard, faults)
+    let completes: Vec<usize> = hard.iter().map(|&h| usize::from(h)).collect();
+    sim_core(t, cfg, &completes, faults)
+}
+
+/// Simulate a batch through an N-exit design. `completes_at[s]` is the
+/// index of the section sample `s` completes at: `i < n_sections - 1`
+/// means it takes early exit `i`; `n_sections - 1` means it runs through
+/// the final classifier. Values are clamped to the final section.
+pub fn simulate_multi(
+    t: &DesignTiming,
+    cfg: &SimConfig,
+    completes_at: &[usize],
+) -> SimResult {
+    sim_core(t, cfg, completes_at, &FaultModel::NONE)
+}
+
+/// Fault-injected variant of [`simulate_multi`].
+pub fn simulate_multi_faults(
+    t: &DesignTiming,
+    cfg: &SimConfig,
+    completes_at: &[usize],
+    faults: &FaultModel,
+) -> SimResult {
+    sim_core(t, cfg, completes_at, faults)
 }
 
 fn sim_core(
     t: &DesignTiming,
     cfg: &SimConfig,
-    hard: &[bool],
+    completes_at: &[usize],
     faults: &FaultModel,
 ) -> SimResult {
-    let n = hard.len();
+    let n = completes_at.len();
+    let n_sections = t.sections.len();
+    let n_exits = t.exits.len();
     let mut traces = vec![SampleTrace::default(); n];
+    let empty = |deadlock: Option<String>| SimResult {
+        traces: traces.clone(),
+        total_cycles: 0,
+        stall_cycles: vec![0; n_exits],
+        peak_buffer_occupancy: vec![0; n_exits],
+        out_of_order: 0,
+        deadlock,
+    };
     if n == 0 {
-        return SimResult {
-            traces,
-            total_cycles: 0,
-            s1_stall_cycles: 0,
-            peak_buffer_occupancy: 0,
-            out_of_order: 0,
-            deadlock: None,
-        };
+        return empty(None);
     }
-    if t.cond_buffer_depth == 0 {
-        // Fig. 7: the buffer cannot hold the sample whose decision is in
-        // flight; the split stalls mid-map and the decision never fires.
-        return SimResult {
-            traces,
-            total_cycles: 0,
-            s1_stall_cycles: 0,
-            peak_buffer_occupancy: 0,
-            out_of_order: 0,
-            deadlock: Some(
-                "conditional buffer depth 0: split stalls mid-sample, \
-                 exit decision starved (min depth is 1 + decision-delay/II₁)"
-                    .into(),
-            ),
-        };
+    for (i, e) in t.exits.iter().enumerate() {
+        if e.buffer_depth == 0 {
+            // Fig. 7: buffer i cannot hold the sample whose decision is
+            // in flight; split i stalls mid-map and the decision never
+            // fires.
+            return empty(Some(format!(
+                "conditional buffer {i} depth 0: split stalls mid-sample, \
+                 exit decision {i} starved (min depth is 1 + decision-delay/II)"
+            )));
+        }
     }
 
     let dma_in = cfg.dma_in_cycles(t.input_words);
     let dma_out = cfg.dma_in_cycles(t.output_words).max(1);
-    let depth = t.cond_buffer_depth;
 
-    // Conditional buffer: min-heap of leave times of resident samples.
-    let mut buffer: std::collections::BinaryHeap<std::cmp::Reverse<u64>> =
-        std::collections::BinaryHeap::new();
-    let mut peak_occ = 0usize;
-    let mut stall = 0u64;
+    // Conditional buffers: per exit, a min-heap of leave times of
+    // resident samples.
+    let mut buffers: Vec<std::collections::BinaryHeap<std::cmp::Reverse<u64>>> =
+        (0..n_exits).map(|_| std::collections::BinaryHeap::new()).collect();
+    let mut peak_occ = vec![0usize; n_exits];
+    let mut stall = vec![0u64; n_exits];
 
     let mut fault_rng = crate::util::Rng::new(faults.seed);
     let mut dma_skew = 0u64; // cumulative injected DMA stalls
 
-    // Rolling section state.
-    let mut s1_prev_start = 0u64; // last stage-1 issue time
-    let mut dec_prev = 0u64; // exit-branch II tracker
-    let mut s2_prev_start = 0u64; // stage-2 II tracker
-    let mut merge_arrivals: Vec<(u64, usize)> = Vec::with_capacity(n);
+    // Rolling per-section / per-exit issue state (None = never used,
+    // matching the first-sample special case of the recurrences).
+    let mut sec_prev: Vec<Option<u64>> = vec![None; n_sections];
+    let mut dec_prev: Vec<Option<u64>> = vec![None; n_exits];
+    // Per completion path (exit 0..n_exits, then final), arrival times at
+    // the merge. Each path is FIFO, so each bucket is monotone (absent
+    // injected jitter) and a k-way merge reproduces the arrival order in
+    // O(n · paths) instead of a global sort.
+    let mut path_arrivals: Vec<Vec<(u64, usize)>> =
+        (0..n_sections).map(|_| Vec::new()).collect();
 
     for s in 0..n {
+        let target = completes_at[s].min(n_sections - 1);
+
         // ---- DMA in: batch streams continuously ----
         if faults.dma_stall_prob > 0.0 && fault_rng.chance(faults.dma_stall_prob) {
             dma_skew += faults.dma_stall_cycles;
@@ -238,109 +375,136 @@ fn sim_core(
         let t_in = (s as u64 + 1) * dma_in + dma_skew;
         traces[s].t_in = t_in;
 
-        // ---- stage 1 issue: input ready + pipeline II ----
-        let mut start1 = t_in.max(if s == 0 {
-            0
-        } else {
-            s1_prev_start + t.s1_ii
-        });
+        let mut arrival = t_in;
+        let mut merge_arrival = 0u64;
+        let mut path = n_sections - 1;
 
-        // ---- conditional buffer admission (blocking) ----
-        // A slot must be free when the split finishes writing the sample
-        // (entry time = start1 + s1_lat); occupancy windows are
-        // [write, leave). A full buffer stalls the stage-1 issue.
-        loop {
-            let write = start1 + t.s1_lat;
-            while let Some(&std::cmp::Reverse(leave)) = buffer.peek() {
-                if leave <= write {
-                    buffer.pop();
-                } else {
-                    break;
+        for sec in 0..=target {
+            // ---- section issue: input ready + pipeline II ----
+            let mut start = arrival.max(match sec_prev[sec] {
+                None => 0,
+                Some(p) => p + t.sections[sec].ii,
+            });
+
+            // ---- conditional buffer admission (blocking) ----
+            // A slot in buffer `sec` must be free when split `sec`
+            // finishes writing the sample (entry time = start + lat);
+            // occupancy windows are [write, leave). A full buffer stalls
+            // the section's issue — and, transitively, every upstream
+            // buffer's drain.
+            if sec < n_exits {
+                let depth = t.exits[sec].buffer_depth;
+                loop {
+                    let write = start + t.sections[sec].lat;
+                    while let Some(&std::cmp::Reverse(leave)) = buffers[sec].peek() {
+                        if leave <= write {
+                            buffers[sec].pop();
+                        } else {
+                            break;
+                        }
+                    }
+                    if buffers[sec].len() < depth {
+                        break;
+                    }
+                    // Stall until the earliest occupant leaves.
+                    let std::cmp::Reverse(leave) = buffers[sec].pop().unwrap();
+                    stall[sec] += leave - write;
+                    start += leave - write;
                 }
             }
-            if buffer.len() < depth {
+            sec_prev[sec] = Some(start);
+
+            // Entering section `sec` drains the sample from the upstream
+            // buffer one cycle after acceptance.
+            if sec > 0 {
+                buffers[sec - 1].push(std::cmp::Reverse(start + 1));
+                peak_occ[sec - 1] = peak_occ[sec - 1].max(buffers[sec - 1].len());
+            }
+
+            if sec == n_sections - 1 {
+                // Final section: straight to the merge.
+                merge_arrival = start + t.sections[sec].lat;
+                path = sec;
                 break;
             }
-            // Stall until the earliest occupant leaves.
-            let std::cmp::Reverse(leave) = buffer.pop().unwrap();
-            stall += leave - write;
-            start1 += leave - write;
-        }
-        s1_prev_start = start1;
 
-        // Sample fully written to buffer + exit branch at:
-        let split_out = start1 + t.s1_lat;
+            // Sample fully written to buffer `sec` + exit branch at:
+            let split_out = start + t.sections[sec].lat;
 
-        // ---- exit branch / decision ----
-        let dec_start = split_out.max(if s == 0 { 0 } else { dec_prev + t.exit_ii });
-        dec_prev = dec_start;
-        let jitter = if faults.decision_jitter > 0 {
-            fault_rng.below(faults.decision_jitter as usize + 1) as u64
-        } else {
-            0
-        };
-        let t_dec = dec_start + t.exit_lat + jitter;
-
-        // ---- buffer residency + downstream path ----
-        let (leave, merge_arrival) = if !hard[s] {
-            // Easy: decision drops the buffered map in one cycle; the
-            // exit classification heads to the merge.
-            (t_dec + 1, t_dec)
-        } else {
-            // Hard: forwarded to stage 2 when both the decision has
-            // arrived and stage 2 can accept (its own II).
-            let s2_start = t_dec.max(if s2_prev_start == 0 {
-                0
-            } else {
-                s2_prev_start + t.s2_ii
+            // ---- exit branch / decision `sec` ----
+            let dec_start = split_out.max(match dec_prev[sec] {
+                None => 0,
+                Some(p) => p + t.exits[sec].ii,
             });
-            s2_prev_start = s2_start;
-            (s2_start + 1, s2_start + t.s2_lat)
-        };
-        buffer.push(std::cmp::Reverse(leave));
-        peak_occ = peak_occ.max(buffer.len());
+            dec_prev[sec] = Some(dec_start);
+            let jitter = if faults.decision_jitter > 0 {
+                fault_rng.below(faults.decision_jitter as usize + 1) as u64
+            } else {
+                0
+            };
+            let t_dec = dec_start + t.exits[sec].lat + jitter;
 
-        merge_arrivals.push((merge_arrival, s));
-        traces[s].exited_early = !hard[s];
+            if sec == target {
+                // Early exit: the decision drops the buffered map in one
+                // cycle; the exit classification heads to the merge.
+                buffers[sec].push(std::cmp::Reverse(t_dec + 1));
+                peak_occ[sec] = peak_occ[sec].max(buffers[sec].len());
+                merge_arrival = t_dec;
+                path = sec;
+                break;
+            }
+            // Hard at this exit: the next section may accept the sample
+            // only once the decision has arrived (its own II applies in
+            // the next loop iteration, which also records the buffer
+            // drain).
+            arrival = t_dec;
+        }
+
+        path_arrivals[path].push((merge_arrival, s));
+        traces[s].exit_stage = path;
+        traces[s].exited_early = path < n_sections - 1;
     }
 
     // ---- exit merge + output DMA: serve in *arrival* order ----
     // The merge arbitrates whichever path has a completed sample — this
     // is exactly how early exits overtake hard samples in the batch
     // (§III-C.4: results may return out of order; the merge keeps each
-    // sample's words contiguous, stalling the other path meanwhile).
+    // sample's words contiguous, stalling the other paths meanwhile).
     //
-    // §Perf: arrivals on each path are individually monotone (both the
-    // decision chain and stage 2 are FIFO), so instead of sorting the
-    // merged stream (O(n log n)) we two-way merge the easy and hard
-    // sub-sequences (O(n)). Injected decision jitter breaks per-path
-    // monotonicity, so the fault path keeps the sort.
+    // §Perf: arrivals on each path are individually monotone (each
+    // decision chain and each section is FIFO), so instead of sorting
+    // the merged stream (O(n log n)) we k-way merge the per-path
+    // sub-sequences (O(n · paths), paths ≤ 5). Injected decision jitter
+    // breaks per-path monotonicity, so the fault path keeps the sort.
+    let mut merge_arrivals: Vec<(u64, usize)> = Vec::with_capacity(n);
     if faults.decision_jitter > 0 {
+        for bucket in &path_arrivals {
+            merge_arrivals.extend_from_slice(bucket);
+        }
         merge_arrivals.sort_unstable();
     } else {
-        let mut easy: Vec<(u64, usize)> = Vec::with_capacity(n);
-        let mut hard_v: Vec<(u64, usize)> = Vec::new();
-        for &(t, s) in &merge_arrivals {
-            if hard[s] {
-                hard_v.push((t, s));
-            } else {
-                easy.push((t, s));
-            }
+        for bucket in &path_arrivals {
+            debug_assert!(bucket.windows(2).all(|w| w[0].0 <= w[1].0));
         }
-        debug_assert!(easy.windows(2).all(|w| w[0].0 <= w[1].0));
-        debug_assert!(hard_v.windows(2).all(|w| w[0].0 <= w[1].0));
-        merge_arrivals.clear();
-        let (mut i, mut j) = (0, 0);
-        while i < easy.len() || j < hard_v.len() {
-            let take_easy = j >= hard_v.len()
-                || (i < easy.len() && easy[i] <= hard_v[j]);
-            if take_easy {
-                merge_arrivals.push(easy[i]);
-                i += 1;
-            } else {
-                merge_arrivals.push(hard_v[j]);
-                j += 1;
+        let mut heads = vec![0usize; path_arrivals.len()];
+        loop {
+            let mut pick: Option<usize> = None;
+            for (p, bucket) in path_arrivals.iter().enumerate() {
+                if heads[p] >= bucket.len() {
+                    continue;
+                }
+                let cand = bucket[heads[p]];
+                let better = match pick {
+                    None => true,
+                    Some(q) => cand < path_arrivals[q][heads[q]],
+                };
+                if better {
+                    pick = Some(p);
+                }
             }
+            let Some(p) = pick else { break };
+            merge_arrivals.push(path_arrivals[p][heads[p]]);
+            heads[p] += 1;
         }
     }
     let mut merge_free = 0u64;
@@ -369,7 +533,7 @@ fn sim_core(
     SimResult {
         traces,
         total_cycles,
-        s1_stall_cycles: stall,
+        stall_cycles: stall,
         peak_buffer_occupancy: peak_occ,
         out_of_order,
         deadlock: None,
@@ -381,14 +545,19 @@ pub fn simulate_baseline(t: &DesignTiming, cfg: &SimConfig, n: usize) -> SimResu
     let mut traces = vec![SampleTrace::default(); n];
     let dma_in = cfg.dma_in_cycles(t.input_words);
     let dma_out = cfg.dma_in_cycles(t.output_words).max(1);
+    let (ii, lat) = t
+        .sections
+        .first()
+        .map(|s| (s.ii, s.lat))
+        .unwrap_or((1, 0));
     let mut prev_start = 0u64;
     let mut dma_out_free = 0u64;
     for s in 0..n {
         let t_in = (s as u64 + 1) * dma_in;
         traces[s].t_in = t_in;
-        let start = t_in.max(if s == 0 { 0 } else { prev_start + t.s1_ii });
+        let start = t_in.max(if s == 0 { 0 } else { prev_start + ii });
         prev_start = start;
-        let done = start + t.s1_lat;
+        let done = start + lat;
         let out_start = done.max(dma_out_free);
         dma_out_free = out_start + dma_out;
         traces[s].t_out = dma_out_free;
@@ -396,8 +565,8 @@ pub fn simulate_baseline(t: &DesignTiming, cfg: &SimConfig, n: usize) -> SimResu
     SimResult {
         total_cycles: traces.iter().map(|t| t.t_out).max().unwrap_or(0),
         traces,
-        s1_stall_cycles: 0,
-        peak_buffer_occupancy: 0,
+        stall_cycles: Vec::new(),
+        peak_buffer_occupancy: Vec::new(),
         out_of_order: 0,
         deadlock: None,
     }
@@ -409,16 +578,31 @@ mod tests {
 
     /// A hand-sized timing for arithmetic-checkable tests.
     fn toy() -> DesignTiming {
+        DesignTiming::two_stage(
+            100, 150, // s1
+            80, 120, // exit
+            300, 400, // s2
+            10,  // merge
+            4,   // buffer depth
+            400, // input words: dma_in = 100 cycles at 4 w/c
+            10,
+        )
+    }
+
+    /// A three-section timing: exits after sections 0 and 1.
+    fn toy3() -> DesignTiming {
         DesignTiming {
-            s1_ii: 100,
-            s1_lat: 150,
-            exit_ii: 80,
-            exit_lat: 120,
-            s2_ii: 300,
-            s2_lat: 400,
+            sections: vec![
+                SectionTiming { ii: 100, lat: 150 },
+                SectionTiming { ii: 200, lat: 250 },
+                SectionTiming { ii: 400, lat: 500 },
+            ],
+            exits: vec![
+                ExitTiming { ii: 80, lat: 120, buffer_depth: 4 },
+                ExitTiming { ii: 100, lat: 150, buffer_depth: 4 },
+            ],
             merge_ii: 10,
-            cond_buffer_depth: 4,
-            input_words: 400, // dma_in = 100 cycles at 4 w/c
+            input_words: 400,
             output_words: 10,
         }
     }
@@ -472,23 +656,34 @@ mod tests {
     }
 
     #[test]
-    fn zero_depth_deadlocks() {
+    fn zero_depth_deadlocks_with_buffer_index() {
         let mut t = toy();
-        t.cond_buffer_depth = 0;
+        t.set_cond_buffer_depth(0, 0);
         let r = simulate_ee(&t, &SimConfig::default(), &[false, true]);
         assert!(r.deadlock.is_some());
+        assert!(r.deadlock.as_ref().unwrap().contains("buffer 0"));
         assert_eq!(r.throughput(125e6), 0.0);
+
+        // In a 3-section design, the *second* buffer alone at depth 0
+        // deadlocks too — and is named in the diagnosis.
+        let mut t3 = toy3();
+        t3.set_cond_buffer_depth(1, 0);
+        let r3 = simulate_multi(&t3, &SimConfig::default(), &[0, 1, 2]);
+        assert!(r3.deadlock.as_ref().unwrap().contains("buffer 1"));
     }
 
     #[test]
     fn shallow_buffer_stalls_but_progresses() {
         let mut t = toy();
-        t.cond_buffer_depth = 1;
+        t.set_cond_buffer_depth(0, 1);
         let n = 256;
         let deep = simulate_ee(&toy(), &SimConfig::default(), &mixed(n, 0.5));
         let shallow = simulate_ee(&t, &SimConfig::default(), &mixed(n, 0.5));
         assert!(shallow.deadlock.is_none());
-        assert!(shallow.s1_stall_cycles > 0, "depth-1 buffer must stall");
+        assert!(
+            shallow.total_stall_cycles() > 0,
+            "depth-1 buffer must stall"
+        );
         assert!(shallow.total_cycles >= deep.total_cycles);
     }
 
@@ -518,12 +713,65 @@ mod tests {
     fn peak_occupancy_bounded_by_depth() {
         let t = toy();
         let r = simulate_ee(&t, &SimConfig::default(), &mixed(512, 0.6));
-        assert!(r.peak_buffer_occupancy <= t.cond_buffer_depth);
+        assert!(r.peak_buffer_occupancy[0] <= t.exits[0].buffer_depth);
     }
 
     #[test]
     fn empty_batch() {
         let r = simulate_ee(&toy(), &SimConfig::default(), &[]);
         assert_eq!(r.total_cycles, 0);
+    }
+
+    #[test]
+    fn three_section_pipeline_routes_and_completes() {
+        let t = toy3();
+        let cfg = SimConfig::default();
+        // Round-robin over the three completion paths.
+        let completes: Vec<usize> = (0..300).map(|i| i % 3).collect();
+        let r = simulate_multi(&t, &cfg, &completes);
+        assert!(r.deadlock.is_none());
+        assert_eq!(r.traces.len(), 300);
+        // Every trace records its path; early paths are flagged early.
+        for (s, tr) in r.traces.iter().enumerate() {
+            assert_eq!(tr.exit_stage, s % 3);
+            assert_eq!(tr.exited_early, s % 3 < 2);
+            assert!(tr.t_out > tr.t_in);
+        }
+        // Distinct completion cycles (one output-DMA writeback each).
+        let mut outs: Vec<u64> = r.traces.iter().map(|t| t.t_out).collect();
+        outs.sort_unstable();
+        outs.dedup();
+        assert_eq!(outs.len(), 300);
+        assert_eq!(r.stall_cycles.len(), 2);
+        assert_eq!(r.peak_buffer_occupancy.len(), 2);
+    }
+
+    #[test]
+    fn three_section_reach_monotonicity() {
+        // Pushing more samples deeper can only slow the batch down.
+        let t = toy3();
+        let cfg = SimConfig::default();
+        let shallow: Vec<usize> = (0..240).map(|i| if i % 4 == 0 { 1 } else { 0 }).collect();
+        let deep: Vec<usize> = (0..240).map(|i| if i % 4 == 0 { 2 } else { 0 }).collect();
+        let r_shallow = simulate_multi(&t, &cfg, &shallow);
+        let r_deep = simulate_multi(&t, &cfg, &deep);
+        assert!(r_deep.total_cycles >= r_shallow.total_cycles);
+    }
+
+    #[test]
+    fn multi_reduces_to_two_stage() {
+        // simulate_ee and simulate_multi agree bit-for-bit on a
+        // two-stage timing.
+        let t = toy();
+        let cfg = SimConfig::default();
+        let hard = mixed(128, 0.3);
+        let completes: Vec<usize> = hard.iter().map(|&h| usize::from(h)).collect();
+        let a = simulate_ee(&t, &cfg, &hard);
+        let b = simulate_multi(&t, &cfg, &completes);
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.out_of_order, b.out_of_order);
+        for (x, y) in a.traces.iter().zip(&b.traces) {
+            assert_eq!(x.t_out, y.t_out);
+        }
     }
 }

@@ -3,7 +3,8 @@
 //! the latency distribution the streaming architecture argument rests on
 //! ("the improved throughput of batch computation due to the average of
 //! the reduced latency of early exits and similar latency of later
-//! exits", §II-A).
+//! exits", §II-A). Per-exit completion rates are reported for N-exit
+//! designs.
 
 use super::engine::SimResult;
 
@@ -20,8 +21,16 @@ pub struct SimMetrics {
     /// Mean latency split by path.
     pub latency_mean_early: f64,
     pub latency_mean_hard: f64,
+    /// Fraction of samples taking *any* early exit.
     pub early_exit_rate: f64,
+    /// Fraction of samples completing at each pipeline section (exit 0,
+    /// exit 1, …, final). Sums to 1 for non-empty batches.
+    pub exit_rates: Vec<f64>,
+    /// Stall cycles summed over every section (per-section breakdown in
+    /// `SimResult::stall_cycles`).
     pub stall_cycles: u64,
+    /// Deepest Conditional Buffer peak occupancy (per-buffer breakdown
+    /// in `SimResult::peak_buffer_occupancy`).
     pub peak_buffer_occupancy: usize,
     pub out_of_order: usize,
     pub deadlock: Option<String>,
@@ -62,6 +71,19 @@ impl SimMetrics {
             .filter(|t| !t.exited_early)
             .map(|t| t.t_out.saturating_sub(t.t_in))
             .collect();
+        // Per-section completion counts. The bucket count comes from the
+        // design (one per exit + the final section), not from the
+        // workload, so the layout is stable even when some path receives
+        // zero samples in a batch.
+        let n_paths = r.stall_cycles.len() + 1;
+        let mut exit_counts = vec![0usize; n_paths];
+        for t in &r.traces {
+            exit_counts[t.exit_stage] += 1;
+        }
+        let exit_rates = exit_counts
+            .iter()
+            .map(|&c| if n == 0 { 0.0 } else { c as f64 / n as f64 })
+            .collect();
         SimMetrics {
             samples: n,
             throughput_sps: r.throughput(clock_hz),
@@ -77,8 +99,9 @@ impl SimMetrics {
             } else {
                 early.len() as f64 / n as f64
             },
-            stall_cycles: r.s1_stall_cycles,
-            peak_buffer_occupancy: r.peak_buffer_occupancy,
+            exit_rates,
+            stall_cycles: r.total_stall_cycles(),
+            peak_buffer_occupancy: r.max_peak_occupancy(),
             out_of_order: r.out_of_order,
             deadlock: r.deadlock.clone(),
         }
@@ -88,22 +111,11 @@ impl SimMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::engine::{simulate_ee, DesignTiming};
+    use crate::sim::engine::{simulate_ee, simulate_multi, DesignTiming};
     use crate::sim::SimConfig;
 
     fn toy() -> DesignTiming {
-        DesignTiming {
-            s1_ii: 100,
-            s1_lat: 150,
-            exit_ii: 80,
-            exit_lat: 120,
-            s2_ii: 300,
-            s2_lat: 400,
-            merge_ii: 10,
-            cond_buffer_depth: 4,
-            input_words: 400,
-            output_words: 10,
-        }
+        DesignTiming::two_stage(100, 150, 80, 120, 300, 400, 10, 4, 400, 10)
     }
 
     #[test]
@@ -123,6 +135,35 @@ mod tests {
         );
         assert!(m.latency_p50 <= m.latency_p99);
         assert!(m.latency_p99 <= m.latency_max);
+        // Per-path rates: 3/4 at exit 0, 1/4 at the final classifier.
+        assert_eq!(m.exit_rates.len(), 2);
+        assert!((m.exit_rates[0] - 0.75).abs() < 1e-9);
+        assert!((m.exit_rates[1] - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multi_exit_rates_sum_to_one() {
+        let t = DesignTiming {
+            sections: vec![
+                crate::sim::engine::SectionTiming { ii: 100, lat: 150 },
+                crate::sim::engine::SectionTiming { ii: 200, lat: 250 },
+                crate::sim::engine::SectionTiming { ii: 400, lat: 500 },
+            ],
+            exits: vec![
+                crate::sim::engine::ExitTiming { ii: 80, lat: 120, buffer_depth: 4 },
+                crate::sim::engine::ExitTiming { ii: 100, lat: 150, buffer_depth: 4 },
+            ],
+            merge_ii: 10,
+            input_words: 400,
+            output_words: 10,
+        };
+        let completes: Vec<usize> = (0..120).map(|i| i % 3).collect();
+        let r = simulate_multi(&t, &SimConfig::default(), &completes);
+        let m = SimMetrics::from_result(&r, 125e6);
+        assert_eq!(m.exit_rates.len(), 3);
+        let sum: f64 = m.exit_rates.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        assert!((m.early_exit_rate - 2.0 / 3.0).abs() < 1e-9);
     }
 
     #[test]
@@ -131,5 +172,19 @@ mod tests {
         let m = SimMetrics::from_result(&r, 125e6);
         assert_eq!(m.samples, 0);
         assert_eq!(m.latency_mean, 0.0);
+        // Layout stays design-shaped even for an empty batch.
+        assert_eq!(m.exit_rates, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn exit_rate_layout_is_design_shaped_not_workload_shaped() {
+        // No sample reaches the final classifier, but the final bucket
+        // must still be present (rate 0) so consumers can rely on the
+        // documented (exit 0, …, final) layout.
+        let r = simulate_ee(&toy(), &SimConfig::default(), &[false; 32]);
+        let m = SimMetrics::from_result(&r, 125e6);
+        assert_eq!(m.exit_rates.len(), 2);
+        assert!((m.exit_rates[0] - 1.0).abs() < 1e-9);
+        assert_eq!(m.exit_rates[1], 0.0);
     }
 }

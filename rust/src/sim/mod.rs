@@ -22,7 +22,8 @@ pub mod metrics;
 
 pub use config::SimConfig;
 pub use engine::{
-    simulate_baseline, simulate_ee, simulate_ee_faults, DesignTiming, FaultModel,
+    simulate_baseline, simulate_ee, simulate_ee_faults, simulate_multi,
+    simulate_multi_faults, DesignTiming, ExitTiming, FaultModel, SectionTiming,
     SimResult,
 };
 pub use metrics::SimMetrics;

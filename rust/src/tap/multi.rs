@@ -10,9 +10,18 @@
 //! stages. The discrete Pareto sets are small (tens of points) so exact
 //! enumeration with budget pruning is practical for the stage counts
 //! real Early-Exit networks use (≤ 4–5 exits).
+//!
+//! At N = 2 this is **bit-identical** to the pairwise
+//! [`combine`](crate::tap::combine): same enumeration order, same
+//! over-provision tie-break (prefer higher tail-stage throughput at
+//! equal combined throughput — "the design will be more robust",
+//! §IV-A). The staged pipeline relies on this so that the N-exit
+//! refactor leaves every two-stage design unchanged;
+//! `tests/pipeline_props.rs` holds the property test.
 
 use super::curve::{TapCurve, TapPoint};
 use crate::resources::ResourceVec;
+use crate::util::Json;
 
 /// A chosen N-stage design.
 #[derive(Clone, Debug)]
@@ -31,11 +40,26 @@ impl MultiStageDesign {
             .fold(ResourceVec::ZERO, |acc, s| acc + s.resources)
     }
 
+    /// Number of pipeline stages in the design.
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
     /// Throughput when the runtime reach probabilities are `qs`
     /// (qs[0] is conventionally 1).
-    pub fn throughput_at(&self, qs: &[f64]) -> f64 {
-        assert_eq!(qs.len(), self.stages.len());
-        self.stages
+    ///
+    /// Contract: `qs.len()` must equal `stages.len()`. A malformed
+    /// runtime probability vector returns an error instead of crashing
+    /// the serving path.
+    pub fn throughput_at(&self, qs: &[f64]) -> anyhow::Result<f64> {
+        anyhow::ensure!(
+            qs.len() == self.stages.len(),
+            "runtime probability vector has {} entries for a {}-stage design",
+            qs.len(),
+            self.stages.len()
+        );
+        Ok(self
+            .stages
             .iter()
             .zip(qs)
             .map(|(s, &q)| {
@@ -45,7 +69,23 @@ impl MultiStageDesign {
                     s.throughput / q
                 }
             })
-            .fold(f64::INFINITY, f64::min)
+            .fold(f64::INFINITY, f64::min))
+    }
+
+    /// Throughput when only the *first* exit's runtime hard probability
+    /// `q0` is known: deeper reach probabilities scale proportionally
+    /// from the design-time vector (`q_i = r_i * q0 / r_1`, capped at
+    /// the stage above). For a two-stage design this is exactly the
+    /// paper's `throughput_at(q)` deviation model of Fig. 4.
+    pub fn throughput_at_first(&self, q0: f64) -> f64 {
+        let mut qs = vec![1.0; self.stages.len()];
+        let design_q0 = self.reach_probs.get(1).copied().unwrap_or(1.0);
+        let factor = if design_q0 > 0.0 { q0 / design_q0 } else { 0.0 };
+        for i in 1..self.stages.len() {
+            qs[i] = (self.reach_probs[i] * factor).clamp(0.0, qs[i - 1]);
+        }
+        self.throughput_at(&qs)
+            .expect("qs constructed with matching length")
     }
 
     /// Index of the limiting stage at runtime probabilities `qs`.
@@ -63,10 +103,58 @@ impl MultiStageDesign {
         }
         best.0
     }
+
+    /// Serialize for design artifacts.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("stages", Json::arr(self.stages.iter().map(|s| s.to_json()))),
+            (
+                "reach_probs",
+                Json::arr(self.reach_probs.iter().map(|&p| Json::Num(p))),
+            ),
+            ("throughput_at_design", Json::Num(self.throughput_at_design)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<MultiStageDesign> {
+        let stages = v
+            .req("stages")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'stages' must be an array"))?
+            .iter()
+            .map(TapPoint::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let reach_probs = v
+            .req("reach_probs")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'reach_probs' must be an array"))?
+            .iter()
+            .map(|x| {
+                x.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("'reach_probs' entries must be numbers"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let throughput_at_design = v
+            .req("throughput_at_design")?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("'throughput_at_design' must be a number"))?;
+        anyhow::ensure!(
+            stages.len() == reach_probs.len() && !stages.is_empty(),
+            "multi-stage design stages/reach_probs length mismatch"
+        );
+        Ok(MultiStageDesign {
+            stages,
+            reach_probs,
+            throughput_at_design,
+        })
+    }
 }
 
 /// Exact multi-stage Eq. 1: exhaustive enumeration over the Pareto sets
 /// with branch-and-bound pruning on both budget and the running min.
+/// Tie-break at equal throughput: prefer over-provisioning the latest
+/// stages (compare tail stages' nominal throughput last-to-first), which
+/// at N = 2 is exactly the pairwise `combine` rule.
 pub fn combine_multi(
     curves: &[TapCurve],
     reach_probs: &[f64],
@@ -88,6 +176,34 @@ pub fn combine_multi(
     }
 
     impl Search<'_> {
+        /// Does a complete candidate beat the incumbent? Strictly higher
+        /// min-throughput wins; on an exact tie, the candidate whose
+        /// tail stages (compared from the last stage backwards, skipping
+        /// stage 0) are nominally faster wins — the robustness
+        /// preference of §IV-A.
+        fn beats_incumbent(&self, running_min: f64, picked: &[TapPoint]) -> bool {
+            match &self.best {
+                None => true,
+                Some((b, chosen)) => {
+                    if running_min > *b {
+                        return true;
+                    }
+                    if running_min < *b {
+                        return false;
+                    }
+                    for i in (1..picked.len()).rev() {
+                        if picked[i].throughput > chosen[i].throughput {
+                            return true;
+                        }
+                        if picked[i].throughput < chosen[i].throughput {
+                            return false;
+                        }
+                    }
+                    false
+                }
+            }
+        }
+
         fn recurse(
             &mut self,
             stage: usize,
@@ -96,12 +212,7 @@ pub fn combine_multi(
             picked: &mut Vec<TapPoint>,
         ) {
             if stage == self.curves.len() {
-                let better = self
-                    .best
-                    .as_ref()
-                    .map(|(b, _)| running_min > *b)
-                    .unwrap_or(true);
-                if better {
+                if self.beats_incumbent(running_min, picked) {
                     self.best = Some((running_min, picked.clone()));
                 }
                 return;
@@ -113,9 +224,10 @@ pub fn combine_multi(
                 }
                 let eff = pt.throughput / self.probs[stage];
                 let new_min = running_min.min(eff);
-                // Prune: can't beat the incumbent.
+                // Prune strictly-worse branches; equal-min branches must
+                // descend so the tie-break can consider them.
                 if let Some((b, _)) = &self.best {
-                    if new_min <= *b {
+                    if new_min < *b {
                         continue;
                     }
                 }
@@ -175,6 +287,23 @@ mod tests {
             multi.throughput_at_design,
             pairwise.throughput_at_p
         );
+        // Selection — not just objective — matches the pairwise rule.
+        assert_eq!(multi.stages[0].resources, pairwise.stage1.resources);
+        assert_eq!(multi.stages[1].resources, pairwise.stage2.resources);
+    }
+
+    #[test]
+    fn two_stage_tie_break_prefers_overprovisioned_tail() {
+        // Two stage-2 options both give min = 100 at p = 0.5 (200/0.5 =
+        // 400 and 300/0.5 = 600, both above stage 1's 100): pairwise
+        // combine keeps the faster (more robust) one when it fits.
+        let f = curve(vec![pt(100.0, 100)]);
+        let g = curve(vec![pt(200.0, 100), pt(300.0, 200)]);
+        let budget = ResourceVec::new(100_000, 150_000, 1_000, 1_000);
+        let pairwise = combine(&f, &g, 0.5, &budget).unwrap();
+        let multi = combine_multi(&[f, g], &[1.0, 0.5], &budget).unwrap();
+        assert_eq!(pairwise.stage2.throughput, 300.0);
+        assert_eq!(multi.stages[1].throughput, 300.0);
     }
 
     #[test]
@@ -200,7 +329,7 @@ mod tests {
         assert!(d.total_resources().fits_in(&budget));
         // Design-time throughput is the min of effective stage rates.
         let qs = [1.0, 0.3, 0.1];
-        assert!((d.throughput_at(&qs) - d.throughput_at_design).abs() < 1e-9);
+        assert!((d.throughput_at(&qs).unwrap() - d.throughput_at_design).abs() < 1e-9);
     }
 
     #[test]
@@ -208,11 +337,43 @@ mod tests {
         let mk = || curve(vec![pt(100.0, 100), pt(200.0, 300)]);
         let budget = ResourceVec::new(100_000, 150_000, 600, 1_000);
         let d = combine_multi(&[mk(), mk()], &[1.0, 0.5], &budget).unwrap();
-        let at_design = d.throughput_at(&[1.0, 0.5]);
+        let at_design = d.throughput_at(&[1.0, 0.5]).unwrap();
         // Fewer samples reaching stage 1 can only help.
-        assert!(d.throughput_at(&[1.0, 0.3]) >= at_design);
+        assert!(d.throughput_at(&[1.0, 0.3]).unwrap() >= at_design);
         // More samples reaching stage 1 can only hurt.
-        assert!(d.throughput_at(&[1.0, 0.8]) <= at_design);
+        assert!(d.throughput_at(&[1.0, 0.8]).unwrap() <= at_design);
+        // The first-exit deviation helper agrees for two-stage designs.
+        assert_eq!(
+            d.throughput_at_first(0.3).to_bits(),
+            d.throughput_at(&[1.0, 0.3]).unwrap().to_bits()
+        );
+    }
+
+    #[test]
+    fn malformed_runtime_probs_error_not_panic() {
+        let mk = || curve(vec![pt(100.0, 100)]);
+        let budget = ResourceVec::new(100_000, 150_000, 600, 1_000);
+        let d = combine_multi(&[mk(), mk()], &[1.0, 0.5], &budget).unwrap();
+        assert!(d.throughput_at(&[1.0]).is_err());
+        assert!(d.throughput_at(&[1.0, 0.5, 0.25]).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mk = || curve(vec![pt(100.0, 100), pt(200.0, 300)]);
+        let budget = ResourceVec::new(100_000, 150_000, 900, 1_000);
+        let d = combine_multi(&[mk(), mk(), mk()], &[1.0, 0.4, 0.2], &budget).unwrap();
+        let back = MultiStageDesign::from_json(&d.to_json()).unwrap();
+        assert_eq!(back.stages.len(), d.stages.len());
+        assert_eq!(back.reach_probs, d.reach_probs);
+        assert_eq!(
+            back.throughput_at_design.to_bits(),
+            d.throughput_at_design.to_bits()
+        );
+        for (a, b) in back.stages.iter().zip(&d.stages) {
+            assert_eq!(a.resources, b.resources);
+            assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+        }
     }
 
     #[test]

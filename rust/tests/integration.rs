@@ -34,7 +34,7 @@ fn exported_networks_parse_and_validate() {
             .unwrap_or_else(|e| panic!("{name}: {e}"));
         assert_eq!(net.name, name);
         assert!(net.accuracy.deployed_acc > 0.85, "{name} accuracy too low");
-        assert!(net.p_profile > 0.1 && net.p_profile < 0.6);
+        assert!(net.p_profile() > 0.1 && net.p_profile() < 0.6);
     }
 }
 
@@ -73,12 +73,14 @@ fn profiler_over_pjrt_matches_build_time_p() {
         stage1: &s1,
         stage2: &s2,
     };
-    let report = Profiler::default().profile(&mut oracle, &ts, 512).unwrap();
+    let report = Profiler::default()
+        .profile(&mut oracle, &ts, 512, net.n_exits())
+        .unwrap();
     assert!(
-        (report.p_hard - net.p_profile).abs() < 0.08,
+        (report.p_hard - net.p_profile()).abs() < 0.08,
         "runtime p {} vs build-time {}",
         report.p_hard,
-        net.p_profile
+        net.p_profile()
     );
     assert!(report.deployed_acc > 0.85);
 }
@@ -102,7 +104,7 @@ fn full_toolflow_on_exported_blenet() {
     let ee = best
         .measured
         .iter()
-        .min_by(|(a, _), (b, _)| (a - r.p).abs().total_cmp(&(b - r.p).abs()))
+        .min_by(|(a, _), (b, _)| (a - r.p()).abs().total_cmp(&(b - r.p()).abs()))
         .map(|(_, m)| m.throughput_sps)
         .unwrap();
     assert!(ee > base, "EE {ee} <= baseline {base}");
@@ -122,7 +124,7 @@ fn batch_host_accuracy_and_agreement() {
     let host = BatchHost {
         stage1: &s1,
         stage2: &s2,
-        timing: best.timing,
+        timing: best.timing.clone(),
         sim: opts.sim.clone(),
     };
     let batch = ts.batch_with_q(0.25, 256, 3);
@@ -184,7 +186,7 @@ fn table4_networks_show_ee_gain_under_constraint() {
         opts.sweep.fractions = vec![0.1, 0.15, 0.2, 0.3, 0.5];
         let r = run_toolflow(&net, &opts, None).unwrap();
         let base = r.best_baseline().unwrap().throughput_predicted;
-        let ee = r.best_design().unwrap().combined.throughput_at_p;
+        let ee = r.best_design().unwrap().combined.throughput_at_design;
         assert!(
             ee > base * 1.1,
             "{name}: EE {ee:.0} should beat baseline {base:.0} under constraint"

@@ -7,22 +7,29 @@
 //! * the TAP curves coming out of the `Curves` stage are Pareto-sound
 //!   (throughput-sorted, mutually non-dominated) and evaluate
 //!   monotonically in the budget, for randomized anneal seeds,
+//! * `combine_multi` at N = 2 selects the **bit-identical** design the
+//!   pairwise two-stage `combine` picks, and its combined throughput is
+//!   monotone non-increasing in every reach probability,
 //! * `synthetic_hard_flags` places an exact hard count and is a pure
 //!   permutation across seeds (seed changes placement, never count),
 //! * a `Realized` design round-trips through the design-cache
 //!   save/load path bit-identically,
 //! * measuring a cache-loaded design performs **zero** anneal calls —
-//!   the warm-store contract behind `atheena infer`/`serve`/`report`.
+//!   the warm-store contract behind `atheena infer`/`serve`/`report`,
+//! * a cached artifact with a stale schema version is evicted and
+//!   triggers a clean re-realize, never a hard error.
 
 use std::path::PathBuf;
 
-use atheena::coordinator::pipeline::{Realized, Toolflow};
+use atheena::coordinator::pipeline::{Realized, Toolflow, DESIGN_SCHEMA_VERSION};
 use atheena::coordinator::toolflow::{synthetic_hard_flags, ToolflowOptions};
 use atheena::dse::anneal_call_count;
 use atheena::ir::network::testnet;
-use atheena::resources::Board;
+use atheena::resources::{Board, ResourceVec};
 use atheena::runtime::DesignCache;
-use atheena::util::proptest::{check, gen_range, prop_assert};
+use atheena::tap::{combine, combine_multi, TapCurve, TapPoint};
+use atheena::util::proptest::{check, gen_range, gen_vec, prop_assert};
+use atheena::util::{Json, Rng};
 
 /// Tests in one binary run on parallel threads, but `anneal_call_count`
 /// is process-global — serialize every anneal-running test so the
@@ -61,11 +68,9 @@ fn prop_curves_stage_emits_pareto_monotone_curves() {
             .map_err(|e| e.to_string())?
             .sweep()
             .map_err(|e| e.to_string())?;
-        for curve in [
-            &curves.baseline_curve,
-            &curves.stage1_curve,
-            &curves.stage2_curve,
-        ] {
+        let mut all = vec![&curves.baseline_curve];
+        all.extend(curves.stage_curves.iter());
+        for curve in all {
             // Sorted by throughput, mutually non-dominated.
             for w in curve.points.windows(2) {
                 prop_assert(
@@ -94,6 +99,138 @@ fn prop_curves_stage_emits_pareto_monotone_curves() {
                 prop_assert(thr >= last, "TAP eval lost throughput with more budget")?;
                 last = thr;
             }
+        }
+        Ok(())
+    });
+}
+
+fn random_point(r: &mut Rng, idx: usize) -> TapPoint {
+    let dsp = 10 + r.below(900) as u64;
+    TapPoint {
+        resources: ResourceVec::new(
+            dsp * (50 + r.below(100) as u64),
+            dsp * (80 + r.below(150) as u64),
+            dsp,
+            5 + r.below(400) as u64,
+        ),
+        throughput: 1000.0 + 200_000.0 * r.f64(),
+        ii: 1 + r.below(100_000) as u64,
+        budget_fraction: 0.0,
+        source: idx,
+    }
+}
+
+fn random_curve(r: &mut Rng, max_pts: usize) -> TapCurve {
+    let n = 1 + r.below(max_pts);
+    let mut idx = 0;
+    TapCurve::from_points(gen_vec(r, n, |r| {
+        idx += 1;
+        random_point(r, idx - 1)
+    }))
+}
+
+#[test]
+fn prop_combine_multi_n2_bit_identical_to_pairwise_combine() {
+    // The N-exit refactor routes *every* network — including two-stage
+    // ones — through `combine_multi`. This property pins the contract
+    // that makes that safe: at N = 2 the multi-stage search picks the
+    // exact same stage points (bitwise) as the pairwise Eq. 1, for
+    // random curves, probabilities, and budgets.
+    check(300, |r| {
+        let f = random_curve(r, 25);
+        let g = random_curve(r, 25);
+        let p = 0.05 + 0.9 * r.f64();
+        let budget = ResourceVec::new(
+            (50_000 + r.below(500_000)) as u64,
+            (50_000 + r.below(900_000)) as u64,
+            (100 + r.below(2_000)) as u64,
+            (50 + r.below(3_000)) as u64,
+        );
+        let pairwise = combine(&f, &g, p, &budget);
+        let multi = combine_multi(&[f.clone(), g.clone()], &[1.0, p], &budget);
+        match (pairwise, multi) {
+            (None, None) => Ok(()),
+            (Some(_), None) | (None, Some(_)) => {
+                Err("feasibility disagreement between combine and combine_multi".into())
+            }
+            (Some(pw), Some(m)) => {
+                prop_assert(m.stages.len() == 2, "wrong stage count")?;
+                prop_assert(
+                    m.throughput_at_design.to_bits() == pw.throughput_at_p.to_bits(),
+                    &format!(
+                        "objective diverged: multi {} vs pairwise {}",
+                        m.throughput_at_design, pw.throughput_at_p
+                    ),
+                )?;
+                for (got, want) in [
+                    (&m.stages[0], &pw.stage1),
+                    (&m.stages[1], &pw.stage2),
+                ] {
+                    prop_assert(got.resources == want.resources, "stage resources diverged")?;
+                    prop_assert(
+                        got.throughput.to_bits() == want.throughput.to_bits(),
+                        "stage throughput diverged",
+                    )?;
+                    prop_assert(got.source == want.source, "stage provenance diverged")?;
+                }
+                Ok(())
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_combine_multi_monotone_in_each_reach_probability() {
+    // Combined throughput is monotone non-increasing in every reach
+    // probability: sending more samples deeper can never speed a fixed
+    // design up, and the re-optimized design can never beat the easier
+    // workload either.
+    check(150, |r| {
+        let n_stages = 2 + r.below(3); // 2..4
+        let curves: Vec<TapCurve> = (0..n_stages).map(|_| random_curve(r, 12)).collect();
+        // Random non-increasing reach vector with r_0 = 1.
+        let mut reach = vec![1.0];
+        for i in 1..n_stages {
+            let prev = reach[i - 1];
+            reach.push(prev * (0.05 + 0.95 * r.f64()));
+        }
+        let budget = ResourceVec::new(
+            (100_000 + r.below(500_000)) as u64,
+            (100_000 + r.below(900_000)) as u64,
+            (200 + r.below(2_000)) as u64,
+            (100 + r.below(3_000)) as u64,
+        );
+        let Some(design) = combine_multi(&curves, &reach, &budget) else {
+            return Ok(());
+        };
+        let base = design
+            .throughput_at(&reach)
+            .map_err(|e| e.to_string())?;
+
+        // Bump one reach probability upward (still valid: capped by the
+        // stage above) and re-evaluate the *same* design.
+        let k = 1 + r.below(n_stages - 1);
+        let mut hotter = reach.clone();
+        hotter[k] = (hotter[k] * (1.0 + r.f64())).min(hotter[k - 1]);
+        // Deeper entries must stay ≤ the bumped one.
+        for i in k + 1..n_stages {
+            hotter[i] = hotter[i].min(hotter[k]);
+        }
+        let shifted = design
+            .throughput_at(&hotter)
+            .map_err(|e| e.to_string())?;
+        prop_assert(
+            shifted <= base + 1e-9,
+            &format!("hotter reach sped the design up: {base} -> {shifted}"),
+        )?;
+
+        // And the freshly re-optimized design for the hotter workload
+        // can't beat the easier workload's optimum.
+        if let Some(redesigned) = combine_multi(&curves, &hotter, &budget) {
+            prop_assert(
+                redesigned.throughput_at_design <= design.throughput_at_design + 1e-9,
+                "re-optimized hotter workload beat the easier one",
+            )?;
         }
         Ok(())
     });
@@ -133,56 +270,55 @@ fn prop_synthetic_flags_exact_count_and_permutation_invariant() {
 #[test]
 fn realized_design_roundtrips_through_store() {
     let _guard = dse_guard();
-    let net = testnet::blenet_like();
-    let opts = tiny_opts(0xA7EE_0001);
-    let realized = Toolflow::new(&net, &opts)
-        .unwrap()
-        .sweep()
-        .unwrap()
-        .combine()
-        .unwrap()
-        .realize()
-        .unwrap();
+    for net in [testnet::blenet_like(), testnet::three_exit()] {
+        let opts = tiny_opts(0xA7EE_0001);
+        let realized = Toolflow::new(&net, &opts)
+            .unwrap()
+            .sweep()
+            .unwrap()
+            .combine()
+            .unwrap()
+            .realize()
+            .unwrap();
 
-    let (cache, dir) = temp_cache("roundtrip");
-    realized.save(&cache).unwrap();
-    let loaded = Realized::load(&cache, &net, &opts)
-        .unwrap()
-        .expect("artifact just saved must load");
+        let (cache, dir) = temp_cache(&format!("roundtrip-{}", net.n_exits()));
+        realized.save(&cache).unwrap();
+        let loaded = Realized::load(&cache, &net, &opts)
+            .unwrap()
+            .expect("artifact just saved must load");
 
-    // The serialized documents are identical…
-    assert_eq!(realized.to_json(), loaded.to_json());
-    // …and so is everything reconstructed from them.
-    assert_eq!(realized.designs.len(), loaded.designs.len());
-    for (a, b) in realized.designs.iter().zip(&loaded.designs) {
-        assert_eq!(a.mapping.foldings, b.mapping.foldings);
-        assert_eq!(a.cond_buffer_depth, b.cond_buffer_depth);
-        assert_eq!(a.total_resources, b.total_resources);
-        assert_eq!(a.timing.s1_ii, b.timing.s1_ii);
-        assert_eq!(a.timing.s2_ii, b.timing.s2_ii);
-        assert_eq!(a.timing.cond_buffer_depth, b.timing.cond_buffer_depth);
-        assert_eq!(a.manifest.cores.len(), b.manifest.cores.len());
-    }
-    for (a, b) in realized.baselines.iter().zip(&loaded.baselines) {
-        assert_eq!(a.mapping.foldings, b.mapping.foldings);
-        assert_eq!(
-            a.throughput_predicted.to_bits(),
-            b.throughput_predicted.to_bits()
-        );
-    }
-
-    // Measurement of original and reload is bit-identical too.
-    let ma = realized.measure(None).unwrap().into_result();
-    let mb = loaded.measure(None).unwrap().into_result();
-    for (x, y) in ma.designs.iter().zip(&mb.designs) {
-        for ((qx, sx), (qy, sy)) in x.measured.iter().zip(&y.measured) {
-            assert_eq!(qx.to_bits(), qy.to_bits());
-            assert_eq!(sx.throughput_sps.to_bits(), sy.throughput_sps.to_bits());
-            assert_eq!(sx.total_cycles, sy.total_cycles);
+        // The serialized documents are identical…
+        assert_eq!(realized.to_json(), loaded.to_json());
+        // …and so is everything reconstructed from them.
+        assert_eq!(realized.designs.len(), loaded.designs.len());
+        for (a, b) in realized.designs.iter().zip(&loaded.designs) {
+            assert_eq!(a.mapping.foldings, b.mapping.foldings);
+            assert_eq!(a.cond_buffer_depths, b.cond_buffer_depths);
+            assert_eq!(a.total_resources, b.total_resources);
+            assert_eq!(a.timing, b.timing);
+            assert_eq!(a.manifest.cores.len(), b.manifest.cores.len());
         }
-    }
+        for (a, b) in realized.baselines.iter().zip(&loaded.baselines) {
+            assert_eq!(a.mapping.foldings, b.mapping.foldings);
+            assert_eq!(
+                a.throughput_predicted.to_bits(),
+                b.throughput_predicted.to_bits()
+            );
+        }
 
-    let _ = std::fs::remove_dir_all(dir);
+        // Measurement of original and reload is bit-identical too.
+        let ma = realized.measure(None).unwrap().into_result();
+        let mb = loaded.measure(None).unwrap().into_result();
+        for (x, y) in ma.designs.iter().zip(&mb.designs) {
+            for ((qx, sx), (qy, sy)) in x.measured.iter().zip(&y.measured) {
+                assert_eq!(qx.to_bits(), qy.to_bits());
+                assert_eq!(sx.throughput_sps.to_bits(), sy.throughput_sps.to_bits());
+                assert_eq!(sx.total_cycles, sy.total_cycles);
+            }
+        }
+
+        let _ = std::fs::remove_dir_all(dir);
+    }
 }
 
 #[test]
@@ -212,6 +348,50 @@ fn warm_store_measures_with_zero_anneal_calls() {
     let mut other = opts.clone();
     other.buffer_margin += 1;
     assert!(Realized::load(&cache, &net, &other).unwrap().is_none());
+
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn stale_schema_cache_entry_evicted_and_rerealized() {
+    let _guard = dse_guard();
+    let net = testnet::blenet_like();
+    let opts = tiny_opts(0xA7EE_0003);
+    let (cache, dir) = temp_cache("stale-schema");
+
+    // Realize once and corrupt the stored artifact's schema version to
+    // simulate a pre-refactor (v1) entry landing at the current path.
+    let (realized, _) = Realized::load_or_run(&cache, &net, &opts).unwrap();
+    let fp = atheena::coordinator::fingerprint(&net, &opts);
+    let mut doc = realized.to_json();
+    if let Json::Obj(map) = &mut doc {
+        map.insert(
+            "schema".to_string(),
+            Json::num((DESIGN_SCHEMA_VERSION - 1) as f64),
+        );
+    } else {
+        panic!("artifact root must be an object");
+    }
+    cache
+        .store(&net.name, opts.board.name, &fp, &doc)
+        .unwrap();
+    let path = cache.path(&net.name, opts.board.name, &fp);
+    assert!(path.is_file(), "stale artifact must be on disk");
+
+    // Loading must treat the stale schema as a miss — and evict it.
+    assert!(
+        Realized::load(&cache, &net, &opts).unwrap().is_none(),
+        "stale-schema artifact must not deserialize"
+    );
+    assert!(!path.is_file(), "stale artifact must be evicted");
+
+    // load_or_run then re-realizes cleanly (anneals again) and re-saves.
+    let before = anneal_call_count();
+    let (fresh, was_cached) = Realized::load_or_run(&cache, &net, &opts).unwrap();
+    assert!(!was_cached, "stale entry must force a re-realize");
+    assert!(anneal_call_count() > before, "re-realize must re-run the DSE");
+    assert!(!fresh.designs.is_empty());
+    assert!(path.is_file(), "fresh artifact must be re-saved");
 
     let _ = std::fs::remove_dir_all(dir);
 }

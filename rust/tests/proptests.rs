@@ -28,18 +28,18 @@ use atheena::util::proptest::{check, gen_range, gen_vec, prop_assert};
 use atheena::util::Rng;
 
 fn random_timing(r: &mut Rng) -> DesignTiming {
-    DesignTiming {
-        s1_ii: 20 + r.below(500) as u64,
-        s1_lat: 50 + r.below(2000) as u64,
-        exit_ii: 10 + r.below(300) as u64,
-        exit_lat: 30 + r.below(1500) as u64,
-        s2_ii: 50 + r.below(2000) as u64,
-        s2_lat: 100 + r.below(4000) as u64,
-        merge_ii: 1 + r.below(20) as u64,
-        cond_buffer_depth: 1 + r.below(32),
-        input_words: 64 + r.below(2048),
-        output_words: 1 + r.below(32),
-    }
+    DesignTiming::two_stage(
+        20 + r.below(500) as u64,   // s1_ii
+        50 + r.below(2000) as u64,  // s1_lat
+        10 + r.below(300) as u64,   // exit_ii
+        30 + r.below(1500) as u64,  // exit_lat
+        50 + r.below(2000) as u64,  // s2_ii
+        100 + r.below(4000) as u64, // s2_lat
+        1 + r.below(20) as u64,     // merge_ii
+        1 + r.below(32),            // cond_buffer_depth
+        64 + r.below(2048),         // input_words
+        1 + r.below(32),            // output_words
+    )
 }
 
 fn random_flags(r: &mut Rng, n: usize) -> Vec<bool> {
@@ -117,16 +117,16 @@ fn prop_sim_monotone_in_buffer_depth() {
         let mut t = random_timing(r);
         let n = 200;
         let flags = random_flags(r, n);
-        t.cond_buffer_depth = 1 + r.below(8);
+        t.set_cond_buffer_depth(0, 1 + r.below(8));
         let shallow = simulate_ee(&t, &SimConfig::default(), &flags);
-        t.cond_buffer_depth += 1 + r.below(32);
+        t.set_cond_buffer_depth(0, t.cond_buffer_depth(0) + 1 + r.below(32));
         let deep = simulate_ee(&t, &SimConfig::default(), &flags);
         prop_assert(
             deep.total_cycles <= shallow.total_cycles,
             "deeper buffer slowed the design",
         )?;
         prop_assert(
-            deep.s1_stall_cycles <= shallow.s1_stall_cycles,
+            deep.total_stall_cycles() <= shallow.total_stall_cycles(),
             "deeper buffer stalled more",
         )
     });
@@ -362,18 +362,20 @@ fn prop_buffer_min_depth_formula_prevents_stall_dominance() {
         // The toolflow's stage-1 rate includes the exit branch (both run
         // at the full sample rate), so a generated design always has
         // exit_ii <= s1_ii; over-provision stage 2 relative to arrivals.
-        t.exit_ii = t.exit_ii.min(t.s1_ii);
-        t.s2_ii = t.s1_ii / 2 + 1;
-        let min_depth = (t.exit_lat.div_ceil(t.s1_ii.max(1)) + 1) as usize;
-        t.cond_buffer_depth = min_depth + gen_range(r, 2, 8);
+        t.exits[0].ii = t.exits[0].ii.min(t.sections[0].ii);
+        t.sections[1].ii = t.sections[0].ii / 2 + 1;
+        let min_depth =
+            (t.exits[0].lat.div_ceil(t.sections[0].ii.max(1)) + 1) as usize;
+        t.set_cond_buffer_depth(0, min_depth + gen_range(r, 2, 8));
         let flags = synthetic_hard_flags(0.25, 256, r.next_u64());
         let res = simulate_ee(&t, &SimConfig::default(), &flags);
         prop_assert(res.deadlock.is_none(), "deadlock with sized buffer")?;
         prop_assert(
-            res.s1_stall_cycles == 0,
+            res.total_stall_cycles() == 0,
             &format!(
                 "sized buffer (depth {}) still stalled {} cycles",
-                t.cond_buffer_depth, res.s1_stall_cycles
+                t.cond_buffer_depth(0),
+                res.total_stall_cycles()
             ),
         )
     });
@@ -387,9 +389,11 @@ fn prop_fault_injection_degrades_gracefully() {
     use atheena::sim::engine::{simulate_ee_faults, FaultModel};
     check(80, |r| {
         let mut t = random_timing(r);
-        t.exit_ii = t.exit_ii.min(t.s1_ii);
-        t.cond_buffer_depth =
-            (t.exit_lat.div_ceil(t.s1_ii.max(1)) + 3) as usize + r.below(16);
+        t.exits[0].ii = t.exits[0].ii.min(t.sections[0].ii);
+        t.set_cond_buffer_depth(
+            0,
+            (t.exits[0].lat.div_ceil(t.sections[0].ii.max(1)) + 3) as usize + r.below(16),
+        );
         let n = 128;
         let flags = random_flags(r, n);
         let clean = simulate_ee(&t, &SimConfig::default(), &flags);
