@@ -4,41 +4,54 @@
 //!
 //! Uses exported artifacts when present, else the built-in test network.
 //!
-//!     cargo bench --bench bench_e2e
+//!     cargo bench --bench bench_e2e [-- --quick] [-- --save-json]
+//!
+//! `--quick` runs the quick DSE schedule only (the CI smoke
+//! configuration); `--save-json` writes `BENCH_e2e.json` so the perf
+//! trajectory is tracked run over run.
 
 use atheena::coordinator::pipeline::Toolflow;
 use atheena::coordinator::toolflow::{run_toolflow, ToolflowOptions};
 use atheena::ir::network::testnet;
 use atheena::ir::Network;
 use atheena::resources::Board;
-use atheena::util::bench::once;
+use atheena::util::bench::BenchLog;
 
 fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let save = args.iter().any(|a| a == "--save-json");
+    let mut log = BenchLog::new();
     let artifacts = std::path::Path::new("artifacts");
 
-    // Toolflow wall time on the built-in network (no artifacts needed):
-    // both the quick (CI) and full (paper-table) schedules.
+    // Toolflow wall time on the built-in network (no artifacts needed).
     let net = testnet::blenet_like();
-    once("toolflow/testnet/quick-schedule", || {
+    log.once("toolflow/testnet/quick-schedule", || {
         run_toolflow(&net, &ToolflowOptions::quick(Board::zc706()), None).unwrap()
     });
-    once("toolflow/testnet/full-schedule", || {
-        run_toolflow(&net, &ToolflowOptions::new(Board::zc706()), None).unwrap()
-    });
+    if !quick {
+        log.once("toolflow/testnet/full-schedule", || {
+            run_toolflow(&net, &ToolflowOptions::new(Board::zc706()), None).unwrap()
+        });
+    }
 
     // Staged breakdown: where the wall time goes, and what the scoped-
     // thread sweep buys over the sequential reference path.
-    let opts = ToolflowOptions::new(Board::zc706());
-    once("pipeline/testnet/sweep-parallel", || {
+    let opts = if quick {
+        ToolflowOptions::quick(Board::zc706())
+    } else {
+        ToolflowOptions::new(Board::zc706())
+    };
+    log.once("pipeline/testnet/sweep-parallel", || {
         Toolflow::new(&net, &opts).unwrap().sweep().unwrap()
     });
-    once("pipeline/testnet/sweep-sequential", || {
+    log.once("pipeline/testnet/sweep-sequential", || {
         Toolflow::new(&net, &opts)
             .unwrap()
             .sweep_sequential()
             .unwrap()
     });
-    let (realized, _) = once("pipeline/testnet/combine+realize", || {
+    let (realized, _) = log.once("pipeline/testnet/combine+realize", || {
         Toolflow::new(&net, &opts)
             .unwrap()
             .sweep()
@@ -48,10 +61,15 @@ fn main() -> anyhow::Result<()> {
             .realize()
             .unwrap()
     });
-    once("pipeline/testnet/measure", || realized.measure(None).unwrap());
+    log.once("pipeline/testnet/measure", || realized.measure(None).unwrap());
 
-    if !artifacts.join("networks/blenet.json").exists() {
-        println!("bench_e2e: artifacts missing, exported-network benches skipped");
+    if quick || !artifacts.join("networks/blenet.json").exists() {
+        if !quick {
+            println!("bench_e2e: artifacts missing, exported-network benches skipped");
+        }
+        if save {
+            log.save("BENCH_e2e.json")?;
+        }
         return Ok(());
     }
 
@@ -64,7 +82,7 @@ fn main() -> anyhow::Result<()> {
         let net = Network::from_file(
             &artifacts.join("networks").join(format!("{name}.json")),
         )?;
-        let (r, _) = once(&format!("toolflow/{name}/{}", board.name), || {
+        let (r, _) = log.once(&format!("toolflow/{name}/{}", board.name), || {
             run_toolflow(&net, &ToolflowOptions::new(board.clone()), None).unwrap()
         });
         let best = r.best_design().unwrap();
@@ -74,6 +92,9 @@ fn main() -> anyhow::Result<()> {
             best.combined.throughput_at_design,
             r.p()
         );
+    }
+    if save {
+        log.save("BENCH_e2e.json")?;
     }
     Ok(())
 }

@@ -1,16 +1,30 @@
 //! Simulator benchmarks — the Fig. 9b / Table I measurement engine:
-//! batch-1024 simulation latency across q values and batch-size scaling.
+//! batch-1024 simulation latency across q values, batch-size scaling,
+//! and the closed-loop drift path.
 //!
-//!     cargo bench --bench bench_sim
+//!     cargo bench --bench bench_sim [-- --quick] [-- --save-json]
+//!
+//! `--quick` trims iterations/batches for CI smoke runs; `--save-json`
+//! writes the results to `BENCH_sim.json` so the perf trajectory is
+//! tracked run over run.
 
 use atheena::coordinator::toolflow::synthetic_hard_flags;
+use atheena::ee::decision::{Controller, Fixed};
 use atheena::ir::network::testnet;
 use atheena::ir::Cdfg;
 use atheena::sdf::HwMapping;
-use atheena::sim::{simulate_baseline, simulate_ee, DesignTiming, SimConfig};
-use atheena::util::bench::bench;
+use atheena::sim::{
+    design_operating_point, simulate_baseline, simulate_closed_loop, simulate_ee,
+    ClosedLoopConfig, DesignTiming, DriftScenario, SimConfig,
+};
+use atheena::util::bench::BenchLog;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let save = args.iter().any(|a| a == "--save-json");
+    let mut log = BenchLog::new();
+
     let net = testnet::blenet_like();
     let mut m = HwMapping::minimal(Cdfg::lower(&net, 16));
     // Unroll to a realistic operating point.
@@ -19,16 +33,14 @@ fn main() {
     }
     let timing = DesignTiming::from_ee_mapping(&m);
     let cfg = SimConfig::default();
+    let iters = if quick { 5 } else { 30 };
 
     // Fig. 9b inner loop: one simulated board measurement per (design, q).
     for q in [0.20, 0.25, 0.30] {
         let flags = synthetic_hard_flags(q, 1024, 42);
-        let s = bench(
-            &format!("sim/ee-batch1024/q={q:.2}"),
-            3,
-            30,
-            || simulate_ee(&timing, &cfg, &flags),
-        );
+        let s = log.bench(&format!("sim/ee-batch1024/q={q:.2}"), 3, iters, || {
+            simulate_ee(&timing, &cfg, &flags)
+        });
         println!(
             "  -> {:.1} M simulated-samples/s",
             1024.0 * s.per_second() / 1e6
@@ -36,14 +48,19 @@ fn main() {
     }
 
     // Baseline measurement (Table I's B rows).
-    bench("sim/baseline-batch1024", 3, 30, || {
+    log.bench("sim/baseline-batch1024", 3, iters, || {
         simulate_baseline(&timing, &cfg, 1024)
     });
 
     // Batch scaling (the DMA-to-idle measurement window).
-    for n in [256usize, 1024, 4096, 16384] {
+    let batches: &[usize] = if quick {
+        &[256, 1024]
+    } else {
+        &[256, 1024, 4096, 16384]
+    };
+    for &n in batches {
         let flags = synthetic_hard_flags(0.25, n, 7);
-        bench(&format!("sim/ee-batch{n}"), 2, 15, || {
+        log.bench(&format!("sim/ee-batch{n}"), 2, iters.min(15), || {
             simulate_ee(&timing, &cfg, &flags)
         });
     }
@@ -52,7 +69,30 @@ fn main() {
     let mut tight = timing.clone();
     tight.set_cond_buffer_depth(0, 1);
     let flags = synthetic_hard_flags(0.5, 1024, 9);
-    bench("sim/ee-batch1024/depth1-stalls", 3, 30, || {
+    log.bench("sim/ee-batch1024/depth1-stalls", 3, iters, || {
         simulate_ee(&tight, &cfg, &flags)
     });
+
+    // Closed-loop drift path: fixed vs controller over a step shift —
+    // the operating-point control loop's per-sample overhead.
+    let op = design_operating_point(&[0.25]);
+    let run = ClosedLoopConfig {
+        samples: if quick { 4096 } else { 16384 },
+        window: 1024,
+        seed: 0xBE7C,
+    };
+    let drift = DriftScenario::Step { at: 0.5, to: 2.0 };
+    log.bench("sim/closed-loop/fixed", 2, iters.min(15), || {
+        let mut policy = Fixed::new(op.clone());
+        simulate_closed_loop(&timing, &cfg, &mut policy, &drift, &run)
+    });
+    log.bench("sim/closed-loop/controller", 2, iters.min(15), || {
+        let mut policy = Controller::new(op.clone(), 1024);
+        simulate_closed_loop(&timing, &cfg, &mut policy, &drift, &run)
+    });
+
+    if save {
+        log.save("BENCH_sim.json")?;
+    }
+    Ok(())
 }

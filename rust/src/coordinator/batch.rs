@@ -9,11 +9,38 @@
 //! throughput are reported from the same run, like the paper's board
 //! measurements.
 
+use std::sync::mpsc;
+use std::time::Duration;
+
+use super::batcher::DynamicBatcher;
 use crate::data::{Batch, TestSet};
 use crate::ee::decision::argmax;
 use crate::ee::profiler::{ExitOracle, ExitOutcome};
 use crate::runtime::{BaselineExec, Stage1Exec, Stage2Exec};
 use crate::sim::{simulate_ee, DesignTiming, SimConfig, SimMetrics};
+
+/// PJRT dispatch burst: the host groups samples through the same
+/// dynamic batcher the serving front end uses (flush-on-count; the
+/// timeout never fires because the whole batch is enqueued up front).
+const DISPATCH_BURST: usize = 32;
+
+/// Drain `items` through the shared [`DynamicBatcher`] in submission
+/// order, calling `f` per burst.
+fn for_each_burst<T, E>(
+    items: Vec<T>,
+    mut f: impl FnMut(Vec<T>) -> Result<(), E>,
+) -> Result<(), E> {
+    let (tx, rx) = mpsc::channel();
+    for item in items {
+        let _ = tx.send(item);
+    }
+    drop(tx);
+    let batcher = DynamicBatcher::new(rx, DISPATCH_BURST, Duration::from_millis(1));
+    while let Some(burst) = batcher.next_batch() {
+        f(burst)?;
+    }
+    Ok(())
+}
 
 /// PJRT-backed oracle for the Early-Exit profiler: stage 1 always runs;
 /// stage 2 only for samples whose decision said "hard" (matching the
@@ -90,21 +117,26 @@ impl BatchHost<'_> {
         let mut hard_measured = Vec::with_capacity(batch.indices.len());
         let mut correct = 0usize;
         let mut agree = 0usize;
-        for (k, &idx) in batch.indices.iter().enumerate() {
-            let s1 = self.stage1.run(ts.image(idx))?;
-            let pred = if s1.take_exit {
-                s1.pred()
-            } else {
-                argmax(&self.stage2.run(&s1.features)?)
-            };
-            if pred == batch.labels[k] as usize {
-                correct += 1;
+        let work: Vec<(usize, usize)> =
+            batch.indices.iter().copied().enumerate().collect();
+        for_each_burst(work, |burst| -> anyhow::Result<()> {
+            for (k, idx) in burst {
+                let s1 = self.stage1.run(ts.image(idx))?;
+                let pred = if s1.take_exit {
+                    s1.pred()
+                } else {
+                    argmax(&self.stage2.run(&s1.features)?)
+                };
+                if pred == batch.labels[k] as usize {
+                    correct += 1;
+                }
+                if s1.take_exit != batch.hard[k] {
+                    agree += 1;
+                }
+                hard_measured.push(!s1.take_exit);
             }
-            if s1.take_exit != batch.hard[k] {
-                agree += 1;
-            }
-            hard_measured.push(!s1.take_exit);
-        }
+            Ok(())
+        })?;
         let host_seconds = start.elapsed().as_secs_f64();
         let n = batch.indices.len();
         let sim = simulate_ee(&self.timing, &self.sim, &hard_measured);

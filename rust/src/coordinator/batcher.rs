@@ -1,0 +1,114 @@
+//! The shared dynamic batcher: flush-on-count / flush-on-timeout
+//! request grouping over an mpsc channel.
+//!
+//! One implementation, two consumers: the serving front end's stage-0
+//! worker groups live requests with it (`coordinator::server`), and the
+//! batch-inference host drains its pre-loaded batches through the same
+//! code path (`coordinator::batch`), so the grouping semantics are
+//! defined — and tested — exactly once.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Groups items read from a channel into batches: a batch flushes when
+/// it reaches `max_batch` items or when its first item has waited
+/// `timeout`, whichever comes first.
+pub struct DynamicBatcher<T> {
+    rx: Receiver<T>,
+    max_batch: usize,
+    timeout: Duration,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(rx: Receiver<T>, max_batch: usize, timeout: Duration) -> DynamicBatcher<T> {
+        DynamicBatcher {
+            rx,
+            max_batch: max_batch.max(1),
+            timeout,
+        }
+    }
+
+    /// Block for the first item of the next batch, then gather until the
+    /// batch is full or the first item has waited `timeout`. Returns
+    /// `None` once every sender is gone and the queue is drained — the
+    /// shutdown signal.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        let first = self.rx.recv().ok()?;
+        let deadline = Instant::now() + self.timeout;
+        let mut batch = Vec::with_capacity(self.max_batch);
+        batch.push(first);
+        while batch.len() < self.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(item) => batch.push(item),
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn flushes_on_count_when_queue_is_full() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let b = DynamicBatcher::new(rx, 4, Duration::from_secs(60));
+        // Pre-queued items flush on count without waiting for the
+        // timeout; the final partial batch flushes on disconnect.
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(b.next_batch().unwrap(), vec![4, 5, 6, 7]);
+        assert_eq!(b.next_batch().unwrap(), vec![8, 9]);
+        assert!(b.next_batch().is_none(), "drained channel must end");
+    }
+
+    #[test]
+    fn flushes_on_timeout_with_a_lone_item() {
+        let (tx, rx) = mpsc::channel();
+        let b = DynamicBatcher::new(rx, 64, Duration::from_millis(20));
+        tx.send(7).unwrap();
+        let t0 = Instant::now();
+        assert_eq!(b.next_batch().unwrap(), vec![7]);
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "timeout flush took too long"
+        );
+        drop(tx);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn zero_max_batch_is_clamped() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        drop(tx);
+        let b = DynamicBatcher::new(rx, 0, Duration::from_millis(1));
+        assert_eq!(b.next_batch().unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn preserves_submission_order_across_batches() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..100 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let b = DynamicBatcher::new(rx, 7, Duration::from_millis(1));
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.len() <= 7);
+            seen.extend(batch);
+        }
+        assert_eq!(seen, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -9,22 +9,29 @@
 //!   wrapper over the pipeline, plus the shared option/result types.
 //! * [`batch`]    — the generated host code's batch-inference loop: DMA
 //!   model + PJRT numerics, accuracy + exit-statistics accounting.
-//! * [`server`]   — a threaded streaming-serving front end: a dynamic
+//! * [`batcher`]  — the shared dynamic batcher (flush-on-count /
+//!   flush-on-timeout), used by both the serving front end and the
+//!   batch host.
+//! * [`server`]   — a threaded streaming-serving front end: the dynamic
 //!   batcher feeding a chain of stage workers, one per pipeline section,
 //!   with hard samples routed down the chain (Python never on this
-//!   path).
+//!   path) and exit decisions made by a runtime `ServePolicy`
+//!   (artifact-baked, fixed host thresholds, or the closed-loop
+//!   controller).
 
 pub mod batch;
+pub mod batcher;
 pub mod pipeline;
 pub mod server;
 pub mod toolflow;
 
 pub use batch::{BatchHost, BatchReport, PjrtOracle};
+pub use batcher::DynamicBatcher;
 pub use pipeline::{
-    fingerprint, Combined, CombinedChoice, Curves, Lowered, Measured, Realized,
-    RealizedBaseline, RealizedDesign, Toolflow,
+    fingerprint, Combined, CombinedChoice, Curves, Lowered, Measured, OperatingEnvelope,
+    Realized, RealizedBaseline, RealizedDesign, Toolflow,
 };
-pub use server::{Server, ServerConfig, ServerStats};
+pub use server::{ServePolicy, Server, ServerConfig, ServerStats};
 pub use toolflow::{
     run_toolflow, synthetic_exit_stages, synthetic_hard_flags, ChosenDesign,
     ToolflowOptions, ToolflowResult,

@@ -46,7 +46,7 @@ use crate::ir::{Cdfg, Network, StageId};
 use crate::resources::ResourceVec;
 use crate::runtime::DesignCache;
 use crate::sdf::{buffering, Folding, HwMapping};
-use crate::sim::{simulate_ee, simulate_multi, DesignTiming, SimMetrics};
+use crate::sim::{simulate_ee, simulate_multi, DesignTiming, SimConfig, SimMetrics};
 use crate::tap::{combine_multi, MultiStageDesign, TapCurve};
 use crate::util::Json;
 
@@ -59,8 +59,175 @@ use super::toolflow::{
 /// document and the cache fingerprint, so old artifacts simply miss (or
 /// are evicted) instead of mis-parsing. v2: N-exit stage model —
 /// per-stage curve vectors, `MultiStageDesign` combined records, and
-/// per-exit `cond_buffer_depths`.
-pub const DESIGN_SCHEMA_VERSION: u32 = 2;
+/// per-exit `cond_buffer_depths`. v3: per-design [`OperatingEnvelope`]
+/// (the Fig. 8-style p/q-mismatch sweep) persisted with the artifact.
+pub const DESIGN_SCHEMA_VERSION: u32 = 3;
+
+// ---------------------------------------------------------------------
+// Operating envelope
+// ---------------------------------------------------------------------
+
+/// One simulated point of a design's operating envelope.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EnvelopePoint {
+    /// First-exit runtime hard probability the batch was generated at.
+    pub q: f64,
+    pub throughput_sps: f64,
+    /// Conditional-Buffer stall cycles over the swept batch (the
+    /// backpressure onset signal).
+    pub stall_cycles: u64,
+    pub deadlock: bool,
+}
+
+/// The Fig. 8-style p/q-mismatch sweep of one realized design:
+/// simulated throughput over a q-grid around the design-time p, with
+/// stall onset and the deadlock flag per point.
+///
+/// The sweep is a pure function of fingerprinted inputs — the design's
+/// timing, the design-time reach vector, and the board clock, with a
+/// fixed internal grid/batch/seed — so it is persisted inside the
+/// design artifact and can never go stale relative to its design. A
+/// warm cache therefore renders the mismatch report with zero anneal
+/// calls *and* zero fresh sweeps.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OperatingEnvelope {
+    /// Design-time first-exit hard probability the grid is centred on.
+    pub design_p: f64,
+    /// Grid points, ascending in q.
+    pub points: Vec<EnvelopePoint>,
+}
+
+impl OperatingEnvelope {
+    /// q-grid factors swept around the design p (clamped to (0, 1]).
+    pub const GRID_FACTORS: [f64; 9] = [0.25, 0.5, 0.75, 0.9, 1.0, 1.1, 1.25, 1.5, 2.0];
+    const BATCH: usize = 512;
+    const SEED: u64 = 0xE57E;
+
+    /// Sweep a design's envelope. Deeper reach probabilities scale
+    /// proportionally with q, exactly as `Realized::measure` scales
+    /// them.
+    pub fn sweep(timing: &DesignTiming, reach: &[f64], clock_hz: f64) -> OperatingEnvelope {
+        let sim_cfg = SimConfig {
+            clock_hz,
+            ..SimConfig::default()
+        };
+        let p = reach.first().copied().unwrap_or(0.0);
+        let mut points = Vec::new();
+        for &factor in &Self::GRID_FACTORS {
+            let q = (p * factor).clamp(0.0, 1.0);
+            if q <= 0.0 || points.last().map(|pt: &EnvelopePoint| pt.q == q).unwrap_or(false)
+            {
+                continue; // degenerate p or clamp-duplicated grid point
+            }
+            let scale = if p > 0.0 { q / p } else { 0.0 };
+            let mut reach_rt: Vec<f64> = reach
+                .iter()
+                .map(|&r| (r * scale).clamp(0.0, 1.0))
+                .collect();
+            for i in 1..reach_rt.len() {
+                reach_rt[i] = reach_rt[i].min(reach_rt[i - 1]);
+            }
+            let stages = synthetic_exit_stages(
+                &reach_rt,
+                Self::BATCH,
+                Self::SEED ^ (q * 1e4) as u64,
+            );
+            let sim = simulate_multi(timing, &sim_cfg, &stages);
+            points.push(EnvelopePoint {
+                q,
+                throughput_sps: sim.throughput(clock_hz),
+                stall_cycles: sim.stall_cycles.iter().sum(),
+                deadlock: sim.deadlock.is_some(),
+            });
+        }
+        OperatingEnvelope { design_p: p, points }
+    }
+
+    /// Throughput at the grid point closest to the design p.
+    pub fn throughput_at_design(&self) -> f64 {
+        self.points
+            .iter()
+            .min_by(|a, b| {
+                (a.q - self.design_p)
+                    .abs()
+                    .total_cmp(&(b.q - self.design_p).abs())
+            })
+            .map(|pt| pt.throughput_sps)
+            .unwrap_or(0.0)
+    }
+
+    /// Largest swept q still inside the safe region: every grid point
+    /// from the design p up to it is deadlock-free and within 5% of the
+    /// design-point throughput. The q just beyond is where mismatch
+    /// visibly degrades the design (Fig. 8's failure onset).
+    pub fn safe_q_max(&self) -> f64 {
+        let at_design = self.throughput_at_design();
+        let mut safe = self.design_p;
+        for pt in self.points.iter().filter(|pt| pt.q >= self.design_p) {
+            if pt.deadlock || pt.throughput_sps < 0.95 * at_design {
+                break;
+            }
+            safe = pt.q;
+        }
+        safe
+    }
+
+    /// Smallest swept q with Conditional-Buffer stalls, if any — the
+    /// backpressure onset.
+    pub fn stall_onset_q(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|pt| pt.stall_cycles > 0)
+            .map(|pt| pt.q)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("design_p", Json::Num(self.design_p)),
+            (
+                "points",
+                Json::arr(self.points.iter().map(|pt| {
+                    Json::obj(vec![
+                        ("q", Json::Num(pt.q)),
+                        ("throughput_sps", Json::Num(pt.throughput_sps)),
+                        ("stall_cycles", Json::num(pt.stall_cycles as f64)),
+                        ("deadlock", Json::Bool(pt.deadlock)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<OperatingEnvelope> {
+        let design_p = v
+            .req("design_p")?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("'design_p' must be a number"))?;
+        let mut points = Vec::new();
+        for pt in v
+            .req("points")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'points' must be an array"))?
+        {
+            let num = |k: &str| -> anyhow::Result<f64> {
+                pt.req(k)?
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("envelope '{k}' must be a number"))
+            };
+            points.push(EnvelopePoint {
+                q: num("q")?,
+                throughput_sps: num("throughput_sps")?,
+                stall_cycles: num("stall_cycles")? as u64,
+                deadlock: pt
+                    .req("deadlock")?
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("envelope 'deadlock' must be a bool"))?,
+            });
+        }
+        anyhow::ensure!(!points.is_empty(), "operating envelope holds no points");
+        Ok(OperatingEnvelope { design_p, points })
+    }
+}
 
 /// Entry point of the staged pipeline.
 pub struct Toolflow;
@@ -330,6 +497,10 @@ impl Combined {
                 stitch_report.errors
             );
             let timing = DesignTiming::from_ee_mapping(&mapping);
+            // The Fig. 8-style mismatch sweep rides with the artifact:
+            // a pure function of fingerprinted inputs, so caching it is
+            // always sound.
+            let envelope = OperatingEnvelope::sweep(&timing, &self.reach, board.clock_hz);
 
             designs.push(RealizedDesign {
                 budget_fraction: choice.budget_fraction,
@@ -338,6 +509,7 @@ impl Combined {
                 total_resources: total,
                 manifest,
                 timing,
+                envelope,
                 mapping,
             });
         }
@@ -381,6 +553,8 @@ pub struct RealizedDesign {
     /// Conditional Buffer depths, one per exit.
     pub cond_buffer_depths: Vec<usize>,
     pub total_resources: ResourceVec,
+    /// Persisted p/q-mismatch sweep (Fig. 8).
+    pub envelope: OperatingEnvelope,
 }
 
 /// Everything downstream of the DSE: the cacheable artifact. Saving and
@@ -471,6 +645,7 @@ impl Realized {
                 timing: d.timing.clone(),
                 cond_buffer_depths: d.cond_buffer_depths.clone(),
                 total_resources: d.total_resources,
+                envelope: d.envelope.clone(),
                 measured,
             });
         }
@@ -522,6 +697,7 @@ impl Realized {
                     ),
                 ),
                 ("total_resources", d.total_resources.to_json()),
+                ("envelope", d.envelope.to_json()),
                 ("foldings", foldings(&d.mapping)),
             ])
         });
@@ -689,6 +865,7 @@ impl Realized {
                 timing: DesignTiming::from_ee_mapping(&mapping),
                 cond_buffer_depths: depths,
                 total_resources: total,
+                envelope: OperatingEnvelope::from_json(d.req("envelope")?)?,
                 manifest,
                 mapping,
             });
@@ -951,6 +1128,9 @@ mod tests {
             assert!(d.cond_buffer_depths.iter().all(|&x| x >= 1));
             assert_eq!(d.timing.sections.len(), 3);
             assert_eq!(d.timing.exits.len(), 2);
+            // Every design carries its mismatch sweep.
+            assert!(d.envelope.points.len() >= 5);
+            assert!((d.envelope.design_p - 0.40).abs() < 1e-12);
         }
 
         let measured = realized.measure(None).unwrap();
@@ -1006,6 +1186,35 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn envelope_sweep_is_monotone_and_roundtrips() {
+        let net = testnet::blenet_like();
+        let r = Toolflow::new(&net, &quick_opts())
+            .unwrap()
+            .sweep()
+            .unwrap()
+            .combine()
+            .unwrap()
+            .realize()
+            .unwrap();
+        let d = r.best_design().unwrap();
+        let e = &d.envelope;
+        assert!((e.design_p - r.p()).abs() < 1e-12);
+        assert!(e.points.len() >= 5);
+        for w in e.points.windows(2) {
+            // Ascending q; more hard samples never speed the design up
+            // (within the simulator's batch-edge tolerance).
+            assert!(w[1].q > w[0].q);
+            assert!(w[1].throughput_sps <= w[0].throughput_sps * 1.02);
+        }
+        assert!(e.throughput_at_design() > 0.0);
+        assert!(e.safe_q_max() >= e.design_p);
+        assert!(e.points.iter().all(|pt| !pt.deadlock));
+        // Bit-exact JSON round trip (the cache path).
+        let back = OperatingEnvelope::from_json(&e.to_json()).unwrap();
+        assert_eq!(&back, e);
     }
 
     #[test]

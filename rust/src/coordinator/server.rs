@@ -1,12 +1,22 @@
 //! Streaming serving front end — the deployment shape of the paper's
 //! architecture (throughput-oriented, latency-constrained, no runtime
-//! reconfiguration): requests stream in, a dynamic batcher groups them,
-//! and a **chain of stage workers** mirrors the N-exit hardware
-//! pipeline in software. Worker 0 classifies at the first exit and
-//! routes — easy samples complete immediately (early exit), hard
+//! reconfiguration): requests stream in, the shared dynamic batcher
+//! groups them, and a **chain of stage workers** mirrors the N-exit
+//! hardware pipeline in software. Worker 0 classifies at the first exit
+//! and routes — easy samples complete immediately (early exit), hard
 //! samples are forwarded to the next stage worker, which exits or
 //! forwards in turn, until the final worker answers whatever is left:
 //! the Conditional Buffers' dataflow, one mpsc channel per buffer.
+//!
+//! Exit decisions are made by a [`ServePolicy`]: the default trusts the
+//! in-graph decision baked into the artifact (design-time `C_thr`,
+//! exactly the pre-refactor path), while the host-side policies treat
+//! the operating point as a runtime signal — `Fixed` applies explicit
+//! per-exit thresholds and `Controller` retunes them from observed
+//! confidences so the realized exit rates track the design reach vector
+//! under workload drift. Realized exit-rate and backpressure metrics
+//! (per-channel occupancy, the software Conditional Buffer watermark)
+//! are exported through [`ServerStats`].
 //!
 //! Threading note: the vendored crate set has no tokio, and PJRT client
 //! handles are not `Send`; each worker thread therefore owns its own
@@ -15,11 +25,31 @@
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::ee::decision::argmax;
+use super::batcher::DynamicBatcher;
+use crate::ee::decision::{argmax, Controller, Fixed, OperatingPoint, ThresholdPolicy};
+use crate::ee::profiler::ReachEstimator;
 use crate::runtime::ArtifactStore;
+
+/// How exit decisions are made at serving time.
+#[derive(Clone, Debug)]
+pub enum ServePolicy {
+    /// Trust the in-graph decision baked into the artifact (the
+    /// design-time scalar `C_thr`; the pre-refactor behavior).
+    Artifact,
+    /// Host-side thresholds, fixed at the given operating point. At a
+    /// uniform operating point equal to the network's `c_thr` this makes
+    /// the same `confidence > C_thr` comparison the kernel does.
+    Fixed(OperatingPoint),
+    /// Closed-loop control: retune each exit's threshold every `window`
+    /// observed confidences toward the target operating point.
+    Controller {
+        target: OperatingPoint,
+        window: usize,
+    },
+}
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -29,6 +59,11 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// ...or when the oldest pending request has waited this long.
     pub batch_timeout: Duration,
+    /// Exit-decision policy (default: the artifact's in-graph decision).
+    pub policy: ServePolicy,
+    /// Window of the streaming reach estimator behind
+    /// [`ServerStats::estimated_reach`].
+    pub estimator_window: usize,
 }
 
 impl ServerConfig {
@@ -38,6 +73,8 @@ impl ServerConfig {
             network: network.to_string(),
             max_batch: 32,
             batch_timeout: Duration::from_millis(2),
+            policy: ServePolicy::Artifact,
+            estimator_window: 256,
         }
     }
 }
@@ -77,15 +114,29 @@ pub struct ServerStats {
     pub completions: Vec<AtomicU64>,
     pub batches: AtomicU64,
     pub errors: AtomicU64,
+    /// Samples forwarded past each exit (software Conditional Buffer
+    /// writes).
+    pub forwarded: Vec<AtomicU64>,
+    /// Current occupancy of each forwarding channel (samples in flight
+    /// between worker i and worker i + 1).
+    pub inflight: Vec<AtomicU64>,
+    /// Peak occupancy per channel — the backpressure watermark.
+    pub peak_inflight: Vec<AtomicU64>,
+    estimator: Mutex<ReachEstimator>,
 }
 
 impl ServerStats {
-    fn new(n_sections: usize) -> ServerStats {
+    fn new(n_sections: usize, estimator_window: usize) -> ServerStats {
+        let n_exits = n_sections.saturating_sub(1);
         ServerStats {
             served: AtomicU64::new(0),
             completions: (0..n_sections).map(|_| AtomicU64::new(0)).collect(),
             batches: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            forwarded: (0..n_exits).map(|_| AtomicU64::new(0)).collect(),
+            inflight: (0..n_exits).map(|_| AtomicU64::new(0)).collect(),
+            peak_inflight: (0..n_exits).map(|_| AtomicU64::new(0)).collect(),
+            estimator: Mutex::new(ReachEstimator::windowed(n_exits, estimator_window)),
         }
     }
 
@@ -93,6 +144,29 @@ impl ServerStats {
         self.served.fetch_add(1, Ordering::Relaxed);
         if let Some(c) = self.completions.get(stage) {
             c.fetch_add(1, Ordering::Relaxed);
+        }
+        // Completion depth == section index (exits travelled past).
+        self.estimator
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .observe(stage);
+    }
+
+    /// A sample crossed software Conditional Buffer `exit`.
+    fn forward(&self, exit: usize) {
+        if let Some(f) = self.forwarded.get(exit) {
+            f.fetch_add(1, Ordering::Relaxed);
+        }
+        if let (Some(i), Some(p)) = (self.inflight.get(exit), self.peak_inflight.get(exit)) {
+            let occ = i.fetch_add(1, Ordering::Relaxed) + 1;
+            p.fetch_max(occ, Ordering::Relaxed);
+        }
+    }
+
+    /// A forwarded sample was accepted by the downstream worker.
+    fn drain(&self, exit: usize) {
+        if let Some(i) = self.inflight.get(exit) {
+            i.fetch_sub(1, Ordering::Relaxed);
         }
     }
 
@@ -124,6 +198,68 @@ impl ServerStats {
             })
             .collect()
     }
+
+    /// Realized reach vector over every served sample: the fraction
+    /// completing past each exit — the runtime q the design's p is
+    /// compared against.
+    pub fn realized_reach(&self) -> Vec<f64> {
+        let served = self.served.load(Ordering::Relaxed);
+        let counts: Vec<u64> = self
+            .completions
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        (0..counts.len().saturating_sub(1))
+            .map(|i| {
+                if served == 0 {
+                    0.0
+                } else {
+                    counts[i + 1..].iter().sum::<u64>() as f64 / served as f64
+                }
+            })
+            .collect()
+    }
+
+    /// The streaming estimator's EWMA reach (recent traffic, not the
+    /// whole history).
+    pub fn estimated_reach(&self) -> Vec<f64> {
+        self.estimator
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .reach()
+            .to_vec()
+    }
+
+    /// Backpressure snapshot per software Conditional Buffer:
+    /// `(in flight now, peak)`.
+    pub fn backpressure(&self) -> Vec<(u64, u64)> {
+        self.inflight
+            .iter()
+            .zip(&self.peak_inflight)
+            .map(|(i, p)| (i.load(Ordering::Relaxed), p.load(Ordering::Relaxed)))
+            .collect()
+    }
+}
+
+type SharedPolicy = Arc<Mutex<Box<dyn ThresholdPolicy>>>;
+
+/// Decide an exit with the shared policy if one is installed, else trust
+/// the artifact's in-graph flag.
+fn decide_exit(
+    policy: &Option<SharedPolicy>,
+    exit: usize,
+    in_graph: bool,
+    probs: &[f32],
+) -> bool {
+    match policy {
+        None => in_graph,
+        Some(p) => {
+            let conf = probs.iter().copied().fold(0.0f32, f32::max) as f64;
+            p.lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .decide(exit, conf)
+        }
+    }
 }
 
 /// Handle for submitting requests; dropping it shuts the server down.
@@ -131,6 +267,7 @@ pub struct Server {
     tx: mpsc::Sender<Request>,
     next_id: AtomicU64,
     pub stats: Arc<ServerStats>,
+    policy: Option<SharedPolicy>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -148,7 +285,42 @@ impl Server {
         };
         anyhow::ensure!(n_sections >= 2, "serving needs at least one exit");
 
-        let stats = Arc::new(ServerStats::new(n_sections));
+        // Install the host-side policy, if any; the operating point must
+        // match the pipeline's exit count.
+        let policy: Option<SharedPolicy> = match &cfg.policy {
+            ServePolicy::Artifact => None,
+            ServePolicy::Fixed(op) => {
+                op.validate()?;
+                anyhow::ensure!(
+                    op.n_exits() == n_sections - 1,
+                    "fixed operating point covers {} exits, pipeline has {}",
+                    op.n_exits(),
+                    n_sections - 1
+                );
+                let boxed: Box<dyn ThresholdPolicy> = Box::new(Fixed::new(op.clone()));
+                Some(Arc::new(Mutex::new(boxed)))
+            }
+            ServePolicy::Controller { target, window } => {
+                target.validate()?;
+                anyhow::ensure!(
+                    target.n_exits() == n_sections - 1,
+                    "controller target covers {} exits, pipeline has {}",
+                    target.n_exits(),
+                    n_sections - 1
+                );
+                // Controller::new asserts this; turn user config into a
+                // clean error instead of a panic.
+                anyhow::ensure!(
+                    *window >= 8,
+                    "controller window {window} too small to calibrate (min 8)"
+                );
+                let boxed: Box<dyn ThresholdPolicy> =
+                    Box::new(Controller::new(target.clone(), *window));
+                Some(Arc::new(Mutex::new(boxed)))
+            }
+        };
+
+        let stats = Arc::new(ServerStats::new(n_sections, cfg.estimator_window));
         let (req_tx, req_rx) = mpsc::channel::<Request>();
 
         // One forwarding channel per Conditional Buffer: worker i sends
@@ -167,6 +339,7 @@ impl Server {
         {
             let stats = stats.clone();
             let cfg = cfg.clone();
+            let policy = policy.clone();
             let downstream = hard_txs[0].clone();
             workers.push(
                 std::thread::Builder::new()
@@ -175,48 +348,39 @@ impl Server {
                         let store = ArtifactStore::open(&cfg.artifacts_dir)
                             .expect("stage1 worker: artifacts");
                         let exec = store.exit_stage(&cfg.network, 0).expect("stage1 compile");
-                        let mut pending: Vec<Request> = Vec::new();
-                        loop {
-                            // Block for the first request of a batch.
-                            let first = match req_rx.recv() {
-                                Ok(r) => r,
-                                Err(_) => break, // all senders gone: shutdown
-                            };
-                            let deadline = Instant::now() + cfg.batch_timeout;
-                            pending.push(first);
-                            // Dynamic batching: gather until full or timed out.
-                            while pending.len() < cfg.max_batch {
-                                let now = Instant::now();
-                                if now >= deadline {
-                                    break;
-                                }
-                                match req_rx.recv_timeout(deadline - now) {
-                                    Ok(r) => pending.push(r),
-                                    Err(mpsc::RecvTimeoutError::Timeout) => break,
-                                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                                }
-                            }
+                        let batcher =
+                            DynamicBatcher::new(req_rx, cfg.max_batch, cfg.batch_timeout);
+                        // `None` from the batcher means every submitter
+                        // is gone: shutdown.
+                        while let Some(batch) = batcher.next_batch() {
                             stats.batches.fetch_add(1, Ordering::Relaxed);
-                            for req in pending.drain(..) {
+                            for req in batch {
                                 match exec.run(&req.image) {
-                                    Ok(out) if out.take_exit => {
-                                        stats.record(0);
-                                        let _ = req.resp.send(Response {
-                                            id: req.id,
-                                            pred: argmax(&out.exit_probs),
-                                            exited_early: true,
-                                            exit_stage: 0,
-                                            latency: req.submitted.elapsed(),
-                                        });
-                                    }
                                     Ok(out) => {
-                                        // Route hard sample downstream.
-                                        let _ = downstream.send(HardSample {
-                                            id: req.id,
-                                            features: out.features,
-                                            submitted: req.submitted,
-                                            resp: req.resp,
-                                        });
+                                        if decide_exit(
+                                            &policy,
+                                            0,
+                                            out.take_exit,
+                                            &out.exit_probs,
+                                        ) {
+                                            stats.record(0);
+                                            let _ = req.resp.send(Response {
+                                                id: req.id,
+                                                pred: argmax(&out.exit_probs),
+                                                exited_early: true,
+                                                exit_stage: 0,
+                                                latency: req.submitted.elapsed(),
+                                            });
+                                        } else {
+                                            // Route hard sample downstream.
+                                            stats.forward(0);
+                                            let _ = downstream.send(HardSample {
+                                                id: req.id,
+                                                features: out.features,
+                                                submitted: req.submitted,
+                                                resp: req.resp,
+                                            });
+                                        }
                                     }
                                     Err(_) => {
                                         stats.errors.fetch_add(1, Ordering::Relaxed);
@@ -234,6 +398,7 @@ impl Server {
         for sec in 1..n_sections - 1 {
             let stats = stats.clone();
             let cfg = cfg.clone();
+            let policy = policy.clone();
             let rx = rx_iter.next().expect("one rx per buffer");
             let downstream = hard_txs[sec].clone();
             workers.push(
@@ -246,24 +411,32 @@ impl Server {
                             .exit_stage(&cfg.network, sec)
                             .unwrap_or_else(|e| panic!("stage{} compile: {e}", sec + 1));
                         while let Ok(h) = rx.recv() {
+                            stats.drain(sec - 1);
                             match exec.run(&h.features) {
-                                Ok(out) if out.take_exit => {
-                                    stats.record(sec);
-                                    let _ = h.resp.send(Response {
-                                        id: h.id,
-                                        pred: argmax(&out.exit_probs),
-                                        exited_early: true,
-                                        exit_stage: sec,
-                                        latency: h.submitted.elapsed(),
-                                    });
-                                }
                                 Ok(out) => {
-                                    let _ = downstream.send(HardSample {
-                                        id: h.id,
-                                        features: out.features,
-                                        submitted: h.submitted,
-                                        resp: h.resp,
-                                    });
+                                    if decide_exit(
+                                        &policy,
+                                        sec,
+                                        out.take_exit,
+                                        &out.exit_probs,
+                                    ) {
+                                        stats.record(sec);
+                                        let _ = h.resp.send(Response {
+                                            id: h.id,
+                                            pred: argmax(&out.exit_probs),
+                                            exited_early: true,
+                                            exit_stage: sec,
+                                            latency: h.submitted.elapsed(),
+                                        });
+                                    } else {
+                                        stats.forward(sec);
+                                        let _ = downstream.send(HardSample {
+                                            id: h.id,
+                                            features: out.features,
+                                            submitted: h.submitted,
+                                            resp: h.resp,
+                                        });
+                                    }
                                 }
                                 Err(_) => {
                                     stats.errors.fetch_add(1, Ordering::Relaxed);
@@ -288,6 +461,7 @@ impl Server {
                             .expect("final worker: artifacts");
                         let exec = store.final_stage(&cfg.network).expect("final compile");
                         while let Ok(h) = rx.recv() {
+                            stats.drain(final_stage - 1);
                             match exec.run(&h.features) {
                                 Ok(probs) => {
                                     stats.record(final_stage);
@@ -315,6 +489,7 @@ impl Server {
             tx: req_tx,
             next_id: AtomicU64::new(0),
             stats,
+            policy,
             workers,
         })
     }
@@ -330,6 +505,25 @@ impl Server {
             resp: tx,
         });
         rx
+    }
+
+    /// Snapshot of the live operating point, when a host-side policy is
+    /// installed (`None` under [`ServePolicy::Artifact`]).
+    pub fn operating_point(&self) -> Option<OperatingPoint> {
+        self.policy.as_ref().map(|p| {
+            p.lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .operating_point()
+                .clone()
+        })
+    }
+
+    /// Threshold retunes the policy has performed so far.
+    pub fn retunes(&self) -> u64 {
+        self.policy
+            .as_ref()
+            .map(|p| p.lock().unwrap_or_else(|e| e.into_inner()).retunes())
+            .unwrap_or(0)
     }
 
     /// Shut down: close the intake and join the workers.

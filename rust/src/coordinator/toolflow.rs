@@ -18,7 +18,7 @@ use crate::util::Rng;
 use crate::{dse::SweepConfig, hls::DesignManifest};
 use crate::ir::Network;
 
-use super::pipeline::Toolflow;
+use super::pipeline::{OperatingEnvelope, Toolflow};
 
 pub use crate::dse::annealer::AnnealResult as StageResult;
 
@@ -87,6 +87,9 @@ pub struct ChosenDesign {
     /// Conditional Buffer depths, one per exit.
     pub cond_buffer_depths: Vec<usize>,
     pub total_resources: ResourceVec,
+    /// Persisted p/q-mismatch sweep (Fig. 8), carried from the realized
+    /// design artifact.
+    pub envelope: OperatingEnvelope,
     /// Simulated measurement at each requested q: (q, metrics).
     pub measured: Vec<(f64, SimMetrics)>,
 }

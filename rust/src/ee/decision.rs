@@ -1,4 +1,5 @@
-//! Exit-decision arithmetic (paper Eq. 2–4), host-side reference.
+//! Exit-decision arithmetic (paper Eq. 2–4), host-side reference, plus
+//! the runtime operating-point abstractions built on top of it.
 //!
 //! The authoritative on-"hardware" implementation is the Pallas kernel
 //! baked into the stage-1 HLO artifact (python/compile/kernels/
@@ -6,6 +7,16 @@
 //! host: to re-derive decisions from logits, to sweep thresholds, and to
 //! cross-check the artifact's flag (integration tests assert the two
 //! agree bit-for-bit on the decision).
+//!
+//! An [`OperatingPoint`] bundles the per-exit confidence thresholds with
+//! the reach vector they are calibrated to induce. A [`ThresholdPolicy`]
+//! turns confidences into exit decisions at that operating point:
+//! [`Fixed`] applies the thresholds verbatim (bit-identical to the
+//! scalar-`c_thr` path the toolflow always used), while [`Controller`]
+//! closes the loop — it re-runs the [`threshold_for_p`] calibration over
+//! a rolling window of observed confidences so the *realized* exit rates
+//! track the design-time reach vector even when the workload difficulty
+//! drifts (the §IV p/q-mismatch failure mode, corrected at runtime).
 
 /// Numerically-stable softmax (Eq. 3).
 pub fn softmax(logits: &[f32]) -> Vec<f32> {
@@ -38,14 +49,31 @@ pub fn confidence(logits: &[f32]) -> f64 {
 
 /// Pick the threshold whose exit rate leaves a fraction `p_target` of
 /// samples hard, given per-sample confidences (the calibration step the
-/// build-time profiler performs; exposed here so the Rust profiler can
-/// re-calibrate against runtime-measured confidences).
-pub fn threshold_for_p(confidences: &mut [f64], p_target: f64) -> f64 {
-    assert!(!confidences.is_empty());
+/// build-time profiler performs; exposed here so the Rust profiler and
+/// the runtime [`Controller`] can re-calibrate against measured
+/// confidences).
+///
+/// A sample is hard when its confidence is at or below the threshold, so
+/// the returned value is the k-th smallest confidence with
+/// `k = round(p_target * n)` — the nearest achievable hard count. For
+/// `p_target` rounding to zero hard samples the threshold is 0: max-
+/// softmax confidences are strictly positive, so nothing lands at or
+/// below it.
+pub fn threshold_for_p(confidences: &mut [f64], p_target: f64) -> anyhow::Result<f64> {
+    anyhow::ensure!(
+        !confidences.is_empty(),
+        "threshold calibration needs at least one confidence sample"
+    );
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&p_target),
+        "target hard probability {p_target} outside [0, 1]"
+    );
     confidences.sort_by(|a, b| a.total_cmp(b));
-    let idx = ((p_target * confidences.len() as f64) as usize)
-        .min(confidences.len() - 1);
-    confidences[idx]
+    let k = (p_target * confidences.len() as f64).round() as usize;
+    if k == 0 {
+        return Ok(0.0);
+    }
+    Ok(confidences[(k - 1).min(confidences.len() - 1)])
 }
 
 pub fn argmax(xs: &[f32]) -> usize {
@@ -54,6 +82,200 @@ pub fn argmax(xs: &[f32]) -> usize {
         .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------
+// Runtime operating point
+// ---------------------------------------------------------------------
+
+/// A runtime operating point: one confidence threshold per exit plus the
+/// reach vector those thresholds are calibrated to induce (`reach[i]` =
+/// fraction of samples travelling *past* exit `i`). The design-time
+/// configuration — every exit at the network's scalar `c_thr`, reach
+/// equal to the profiled `reach_profile` — is [`OperatingPoint::uniform`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct OperatingPoint {
+    /// Per-exit max-softmax confidence thresholds (Eq. 2's C_thr).
+    pub thresholds: Vec<f64>,
+    /// Reach probabilities the thresholds target (non-increasing).
+    pub reach: Vec<f64>,
+}
+
+impl OperatingPoint {
+    /// The design-time point: every exit thresholds at the same `c_thr`,
+    /// targeting the profiled reach vector.
+    pub fn uniform(c_thr: f64, reach: Vec<f64>) -> OperatingPoint {
+        OperatingPoint {
+            thresholds: vec![c_thr; reach.len()],
+            reach,
+        }
+    }
+
+    /// Calibrate thresholds for confidences that are Uniform(0, 1) at
+    /// nominal difficulty — the synthetic-confidence model the closed-
+    /// loop simulator drives policies with. Under that model the
+    /// threshold inducing conditional hard probability p is exactly p.
+    pub fn for_uniform_confidence(reach: Vec<f64>) -> OperatingPoint {
+        let mut op = OperatingPoint {
+            thresholds: Vec::new(),
+            reach,
+        };
+        op.thresholds = (0..op.reach.len()).map(|i| op.conditional_p(i)).collect();
+        op
+    }
+
+    pub fn n_exits(&self) -> usize {
+        self.reach.len()
+    }
+
+    /// Conditional hard probability at exit `i`: of the samples reaching
+    /// exit `i`, the fraction that should travel past it
+    /// (`reach[i] / reach[i-1]`, with `reach[-1] = 1`).
+    pub fn conditional_p(&self, exit: usize) -> f64 {
+        let reached = if exit == 0 { 1.0 } else { self.reach[exit - 1] };
+        if reached <= 0.0 {
+            0.0
+        } else {
+            (self.reach[exit] / reached).min(1.0)
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.thresholds.len() == self.reach.len() && !self.reach.is_empty(),
+            "operating point needs one threshold per exit"
+        );
+        anyhow::ensure!(
+            self.reach.iter().all(|&r| r > 0.0 && r <= 1.0),
+            "operating-point reach probabilities out of range: {:?}",
+            self.reach
+        );
+        anyhow::ensure!(
+            self.reach.windows(2).all(|w| w[0] >= w[1]),
+            "operating-point reach probabilities must be non-increasing"
+        );
+        Ok(())
+    }
+}
+
+/// Exit-decision policy: turns the max-softmax confidence observed at an
+/// exit into the take/forward decision, optionally adapting its
+/// thresholds from what it observes. Shared by the serving front end and
+/// the closed-loop simulator.
+pub trait ThresholdPolicy: Send {
+    /// Decide whether a sample with max-softmax `confidence` takes exit
+    /// `exit`, recording the observation for any adaptive retuning.
+    /// Exits are only consulted for samples that actually reach them.
+    fn decide(&mut self, exit: usize, confidence: f64) -> bool;
+
+    /// The policy's current operating point (live thresholds).
+    fn operating_point(&self) -> &OperatingPoint;
+
+    /// Number of threshold retunes performed so far (0 for fixed
+    /// policies).
+    fn retunes(&self) -> u64 {
+        0
+    }
+}
+
+/// Fixed thresholds: apply the operating point verbatim. With a uniform
+/// operating point at the network's `c_thr` this is bit-identical to the
+/// scalar-threshold decision ([`exit_decision`] / the in-graph kernel):
+/// the same `confidence > c_thr` comparison, per exit.
+#[derive(Clone, Debug)]
+pub struct Fixed {
+    op: OperatingPoint,
+}
+
+impl Fixed {
+    pub fn new(op: OperatingPoint) -> Fixed {
+        Fixed { op }
+    }
+
+    /// The pre-refactor configuration: one scalar `c_thr` for every exit.
+    pub fn scalar(c_thr: f64, reach: Vec<f64>) -> Fixed {
+        Fixed::new(OperatingPoint::uniform(c_thr, reach))
+    }
+}
+
+impl ThresholdPolicy for Fixed {
+    fn decide(&mut self, exit: usize, confidence: f64) -> bool {
+        confidence > self.op.thresholds[exit]
+    }
+
+    fn operating_point(&self) -> &OperatingPoint {
+        &self.op
+    }
+}
+
+/// Closed-loop controller: every `window` confidences observed at an
+/// exit, re-run the [`threshold_for_p`] calibration over that window for
+/// the exit's target conditional hard probability and blend the fresh
+/// threshold in. The realized exit-rate vector then tracks the target
+/// reach vector under workload drift; at stationary difficulty the
+/// thresholds converge to the distribution's true quantiles.
+pub struct Controller {
+    target: OperatingPoint,
+    current: OperatingPoint,
+    window: usize,
+    /// Weight on the freshly calibrated threshold (1.0 = jump straight
+    /// to it; smaller values trade convergence speed for variance).
+    blend: f64,
+    buf: Vec<Vec<f64>>,
+    retunes: u64,
+}
+
+impl Controller {
+    /// A controller targeting `target`, retuning every `window`
+    /// observations per exit with the default 0.5 blend.
+    pub fn new(target: OperatingPoint, window: usize) -> Controller {
+        Controller::with_blend(target, window, 0.5)
+    }
+
+    pub fn with_blend(target: OperatingPoint, window: usize, blend: f64) -> Controller {
+        assert!(window >= 8, "controller window too small to calibrate");
+        assert!(blend > 0.0 && blend <= 1.0, "blend must be in (0, 1]");
+        let n = target.n_exits();
+        Controller {
+            current: target.clone(),
+            target,
+            window,
+            blend,
+            buf: (0..n).map(|_| Vec::new()).collect(),
+            retunes: 0,
+        }
+    }
+
+    /// The operating point this controller steers toward.
+    pub fn target(&self) -> &OperatingPoint {
+        &self.target
+    }
+}
+
+impl ThresholdPolicy for Controller {
+    fn decide(&mut self, exit: usize, confidence: f64) -> bool {
+        let take = confidence > self.current.thresholds[exit];
+        let buf = &mut self.buf[exit];
+        buf.push(confidence);
+        if buf.len() >= self.window {
+            let p = self.target.conditional_p(exit);
+            if let Ok(thr) = threshold_for_p(buf, p) {
+                let old = self.current.thresholds[exit];
+                self.current.thresholds[exit] = old + self.blend * (thr - old);
+                self.retunes += 1;
+            }
+            buf.clear();
+        }
+        take
+    }
+
+    fn operating_point(&self) -> &OperatingPoint {
+        &self.current
+    }
+
+    fn retunes(&self) -> u64 {
+        self.retunes
+    }
 }
 
 #[cfg(test)]
@@ -110,12 +332,11 @@ mod tests {
     fn threshold_calibration_hits_target_p() {
         check(50, |r| {
             let n = 200 + r.below(400);
-            let mut conf = gen_vec(r, n, |r| 0.1 + 0.9 * r.f64());
+            let conf = gen_vec(r, n, |r| 0.1 + 0.9 * r.f64());
             let p = 0.1 + 0.5 * r.f64();
-            let thr = threshold_for_p(&mut conf.clone(), p);
+            let thr = threshold_for_p(&mut conf.clone(), p).unwrap();
             // Hard = conf <= thr; fraction should be close to p.
             let hard = conf.iter().filter(|&&c| c <= thr).count() as f64 / n as f64;
-            conf.sort_by(|a, b| a.total_cmp(b));
             prop_assert(
                 close(hard, p, 0.0, 2.0 / n as f64 + 0.02),
                 &format!("calibrated hard fraction {hard} vs target {p}"),
@@ -124,8 +345,131 @@ mod tests {
     }
 
     #[test]
+    fn threshold_calibration_edge_cases() {
+        // Empty input: an error, not a panic.
+        assert!(threshold_for_p(&mut [], 0.5).is_err());
+        // Out-of-range targets rejected.
+        assert!(threshold_for_p(&mut [0.5], -0.1).is_err());
+        assert!(threshold_for_p(&mut [0.5], 1.1).is_err());
+        // Single element: p = 1 keeps it hard, p = 0 exits it.
+        assert_eq!(threshold_for_p(&mut [0.7], 1.0).unwrap(), 0.7);
+        assert_eq!(threshold_for_p(&mut [0.7], 0.0).unwrap(), 0.0);
+        // p = 0 leaves nothing at or below the threshold; p = 1 leaves
+        // everything (confidences are strictly positive).
+        let conf = vec![0.2, 0.9, 0.4, 0.6];
+        let t0 = threshold_for_p(&mut conf.clone(), 0.0).unwrap();
+        assert_eq!(conf.iter().filter(|&&c| c <= t0).count(), 0);
+        let t1 = threshold_for_p(&mut conf.clone(), 1.0).unwrap();
+        assert_eq!(conf.iter().filter(|&&c| c <= t1).count(), conf.len());
+        // Quantile rounding: nearest achievable hard count, not floor.
+        // n = 4, p = 0.4 -> round(1.6) = 2 hard samples.
+        let t = threshold_for_p(&mut conf.clone(), 0.4).unwrap();
+        assert_eq!(conf.iter().filter(|&&c| c <= t).count(), 2);
+    }
+
+    #[test]
     fn argmax_basic() {
         assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
         assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn operating_point_conditional_probabilities() {
+        let op = OperatingPoint::uniform(0.9, vec![0.4, 0.1]);
+        op.validate().unwrap();
+        assert_eq!(op.n_exits(), 2);
+        assert_eq!(op.thresholds, vec![0.9, 0.9]);
+        assert!((op.conditional_p(0) - 0.4).abs() < 1e-12);
+        assert!((op.conditional_p(1) - 0.25).abs() < 1e-12);
+
+        // The uniform-confidence calibration: thresholds equal the
+        // conditional hard probabilities.
+        let cal = OperatingPoint::for_uniform_confidence(vec![0.4, 0.1]);
+        assert!((cal.thresholds[0] - 0.4).abs() < 1e-12);
+        assert!((cal.thresholds[1] - 0.25).abs() < 1e-12);
+
+        // Malformed points rejected.
+        assert!(OperatingPoint::uniform(0.9, vec![]).validate().is_err());
+        assert!(OperatingPoint::uniform(0.9, vec![0.1, 0.4]).validate().is_err());
+        assert!(OperatingPoint::uniform(0.9, vec![0.4, 0.0]).validate().is_err());
+    }
+
+    #[test]
+    fn fixed_policy_matches_scalar_exit_decision() {
+        // The Fixed policy at a uniform operating point is bit-identical
+        // to the scalar-c_thr decision on the same confidences, at every
+        // exit.
+        check(300, |r| {
+            let n = 2 + r.below(20);
+            let logits = gen_vec(r, n, |r| (r.f64() as f32 - 0.5) * 16.0);
+            let thr = 0.05 + 0.9 * r.f64();
+            let mut fixed = Fixed::scalar(thr, vec![0.4, 0.2, 0.1]);
+            let conf = confidence(&logits);
+            for exit in 0..3 {
+                prop_assert(
+                    fixed.decide(exit, conf) == exit_decision(&logits, thr),
+                    "Fixed policy diverged from the scalar decision",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn controller_converges_to_distribution_quantile() {
+        // Stationary Uniform(0,1) confidences: the controller's
+        // threshold must settle near the target conditional quantile and
+        // the realized exit rate near the target.
+        let target = OperatingPoint::for_uniform_confidence(vec![0.3]);
+        let mut ctl = Controller::new(target.clone(), 512);
+        let mut rng = crate::util::Rng::new(0xC0117);
+        let mut hard_tail = 0usize;
+        let tail_start = 16 * 512;
+        let total = 24 * 512;
+        for s in 0..total {
+            let conf = rng.f64();
+            let take = ctl.decide(0, conf);
+            if s >= tail_start && !take {
+                hard_tail += 1;
+            }
+        }
+        assert!(ctl.retunes() >= 16);
+        let thr = ctl.operating_point().thresholds[0];
+        assert!((thr - 0.3).abs() < 0.05, "threshold {thr} far from 0.3");
+        let rate = hard_tail as f64 / (total - tail_start) as f64;
+        assert!((rate - 0.3).abs() < 0.05, "hard rate {rate} far from 0.3");
+    }
+
+    #[test]
+    fn controller_tracks_a_difficulty_shift() {
+        // After confidences compress (conf -> conf^2, harder), a fixed
+        // threshold over-selects hard samples; the controller retunes
+        // back to the target rate.
+        let target = OperatingPoint::for_uniform_confidence(vec![0.25]);
+        let mut fixed = Fixed::new(target.clone());
+        let mut ctl = Controller::new(target.clone(), 512);
+        let mut rng = crate::util::Rng::new(0x5417F);
+        let (mut hard_fixed, mut hard_ctl, mut tail) = (0usize, 0usize, 0usize);
+        let total = 24 * 512;
+        for s in 0..total {
+            let conf = rng.f64().powi(2);
+            let take_f = fixed.decide(0, conf);
+            let take_c = ctl.decide(0, conf);
+            if s >= total / 2 {
+                tail += 1;
+                if !take_f {
+                    hard_fixed += 1;
+                }
+                if !take_c {
+                    hard_ctl += 1;
+                }
+            }
+        }
+        let rate_fixed = hard_fixed as f64 / tail as f64;
+        let rate_ctl = hard_ctl as f64 / tail as f64;
+        // Fixed drifts to sqrt(0.25) = 0.5 hard; the controller holds
+        // the design rate.
+        assert!((rate_fixed - 0.5).abs() < 0.05, "fixed rate {rate_fixed}");
+        assert!((rate_ctl - 0.25).abs() < 0.04, "controlled rate {rate_ctl}");
     }
 }

@@ -1,8 +1,13 @@
-//! Early-Exit specifics: the exit-decision math (Eq. 2–4) and the
-//! Early-Exit profiler (§III-B.1).
+//! Early-Exit specifics: the exit-decision math (Eq. 2–4), the
+//! Early-Exit profiler (§III-B.1), and the runtime operating-point
+//! machinery (thresholds-as-signals: [`OperatingPoint`],
+//! [`ThresholdPolicy`], the streaming [`ReachEstimator`]).
 
 pub mod decision;
 pub mod profiler;
 
-pub use decision::{exit_decision, softmax, threshold_for_p};
-pub use profiler::{ExitOracle, ProfileReport, Profiler};
+pub use decision::{
+    exit_decision, softmax, threshold_for_p, Controller, Fixed, OperatingPoint,
+    ThresholdPolicy,
+};
+pub use profiler::{ExitOracle, ProfileReport, Profiler, ReachEstimator};

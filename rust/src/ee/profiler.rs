@@ -17,6 +17,13 @@
 //! The inference backend is abstracted as [`ExitOracle`] so the profiler
 //! is testable without artifacts; the production implementation runs the
 //! per-stage HLO executables over PJRT (`coordinator::batch`).
+//!
+//! The batch profiler measures the reach vector *offline*; its streaming
+//! sibling [`ReachEstimator`] measures the same vector *online*, one
+//! completed sample at a time, and is shared by the serving front end
+//! and the closed-loop simulator as the observation half of the
+//! operating-point control loop (estimator → policy → thresholds →
+//! realized reach).
 
 use crate::data::TestSet;
 
@@ -174,6 +181,110 @@ impl Profiler {
     }
 }
 
+// ---------------------------------------------------------------------
+// Streaming reach estimation
+// ---------------------------------------------------------------------
+
+/// Streaming estimator of the realized reach vector.
+///
+/// Each completed sample reports its completion *depth* — the pipeline
+/// section it completed at, which equals the number of exits it
+/// travelled past (exit index for early exits, `n_exits` for the final
+/// classifier; the same convention as `SampleTrace::exit_stage` and
+/// `Response::exit_stage`). The estimator maintains
+///
+/// * an EWMA estimate per exit (`alpha = 2 / (window + 1)`), the live
+///   signal a controller or operator watches, and
+/// * exact per-window counts, rolled every `window` samples, for
+///   reporting realized rates over a bounded horizon.
+#[derive(Clone, Debug)]
+pub struct ReachEstimator {
+    n_exits: usize,
+    alpha: f64,
+    window: usize,
+    n: u64,
+    ewma: Vec<f64>,
+    win_past: Vec<u64>,
+    win_n: usize,
+    last_window: Option<Vec<f64>>,
+}
+
+impl ReachEstimator {
+    /// An estimator over `window` samples (EWMA alpha = 2/(window+1)).
+    pub fn windowed(n_exits: usize, window: usize) -> ReachEstimator {
+        let window = window.max(1);
+        ReachEstimator {
+            n_exits,
+            alpha: 2.0 / (window as f64 + 1.0),
+            window,
+            n: 0,
+            ewma: vec![0.0; n_exits],
+            win_past: vec![0; n_exits],
+            win_n: 0,
+            last_window: None,
+        }
+    }
+
+    /// Record one completed sample at completion depth `depth` (exits
+    /// travelled past; values beyond `n_exits` count as the final
+    /// classifier).
+    pub fn observe(&mut self, depth: usize) {
+        let first = self.n == 0;
+        for i in 0..self.n_exits {
+            let ind = if depth > i { 1.0 } else { 0.0 };
+            if first {
+                self.ewma[i] = ind;
+            } else {
+                self.ewma[i] += self.alpha * (ind - self.ewma[i]);
+            }
+            if depth > i {
+                self.win_past[i] += 1;
+            }
+        }
+        self.n += 1;
+        self.win_n += 1;
+        if self.win_n >= self.window {
+            self.last_window = Some(
+                self.win_past
+                    .iter()
+                    .map(|&c| c as f64 / self.win_n as f64)
+                    .collect(),
+            );
+            self.win_past.iter_mut().for_each(|c| *c = 0);
+            self.win_n = 0;
+        }
+    }
+
+    /// Samples observed so far.
+    pub fn samples(&self) -> u64 {
+        self.n
+    }
+
+    /// The EWMA reach estimate (fraction past each exit).
+    pub fn reach(&self) -> &[f64] {
+        &self.ewma
+    }
+
+    /// Exact reach over the last *completed* window, if one has rolled.
+    pub fn window_reach(&self) -> Option<&[f64]> {
+        self.last_window.as_deref()
+    }
+
+    /// Largest absolute EWMA deviation from a target reach vector — the
+    /// drift signal an operator alarms on. Extra target entries are
+    /// ignored; a missing estimate counts as full deviation.
+    pub fn max_deviation(&self, target: &[f64]) -> f64 {
+        target
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| match self.ewma.get(i) {
+                Some(&e) => (e - t).abs(),
+                None => t.abs(),
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -288,5 +399,44 @@ mod tests {
         let ts = synthetic_testset(3, 4, 0.5, 1);
         let mut oracle = MockOracle { ts: &ts, cursor: 0 };
         assert!(Profiler::default().profile(&mut oracle, &ts, 3, 1).is_err());
+    }
+
+    #[test]
+    fn estimator_tracks_stationary_reach() {
+        // Depth stream with exact rates: 40% past exit 0, 10% past
+        // exit 1 (depth 0/1/2 in proportions 60/30/10).
+        let mut est = ReachEstimator::windowed(2, 100);
+        for i in 0..2000 {
+            let depth = match i % 10 {
+                0..=5 => 0,
+                6..=8 => 1,
+                _ => 2,
+            };
+            est.observe(depth);
+        }
+        assert_eq!(est.samples(), 2000);
+        let r = est.reach();
+        assert!((r[0] - 0.4).abs() < 0.05, "reach0 {}", r[0]);
+        assert!((r[1] - 0.1).abs() < 0.05, "reach1 {}", r[1]);
+        // Completed windows report the exact rates.
+        let w = est.window_reach().expect("window rolled");
+        assert!((w[0] - 0.4).abs() < 1e-9);
+        assert!((w[1] - 0.1).abs() < 1e-9);
+        assert!(est.max_deviation(&[0.4, 0.1]) < 0.05);
+    }
+
+    #[test]
+    fn estimator_reacts_to_a_rate_shift() {
+        let mut est = ReachEstimator::windowed(1, 64);
+        for _ in 0..640 {
+            est.observe(0); // nobody travels past the exit
+        }
+        assert!(est.reach()[0] < 0.01);
+        for _ in 0..640 {
+            est.observe(1); // everybody does
+        }
+        assert!(est.reach()[0] > 0.99);
+        assert!((est.window_reach().unwrap()[0] - 1.0).abs() < 1e-9);
+        assert!(est.max_deviation(&[0.5]) > 0.45);
     }
 }

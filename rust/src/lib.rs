@@ -44,9 +44,23 @@
 //! * **`Measured`** — the event-driven streaming-dataflow simulator
 //!   (the board substitute) measures every design at the requested q
 //!   ladder, reporting per-exit completion rates alongside throughput.
+//!   Each design also carries its persisted **operating envelope**
+//!   (the Fig. 8-style p/q-mismatch sweep), cached with the artifact.
 //!
 //! The legacy monolithic entry point `coordinator::toolflow::run_toolflow`
 //! survives as a thin wrapper over this chain.
+//!
+//! Beyond the design-time flow, the **reach vector is a runtime
+//! signal**: `ee::OperatingPoint` bundles per-exit thresholds with the
+//! reach they induce, `ee::decision::ThresholdPolicy` decides exits at
+//! that point (`Fixed` is bit-identical to the scalar-`c_thr` path;
+//! `Controller` retunes thresholds from observed confidences via the
+//! `threshold_for_p` calibration), and `ee::ReachEstimator` measures
+//! realized reach streamingly. `sim::drift` closes the loop in
+//! simulation — step/ramp/periodic difficulty drifts with per-window
+//! throughput and rate reports — and `coordinator::server` closes it in
+//! deployment (`ServePolicy`, realized exit-rate + backpressure
+//! metrics). See DESIGN.md §6.
 //!
 //! Around the pipeline sit the supporting layers: network IR parsing
 //! (`ir`), folding + resource models (`sdf`, `resources`), the DSE
@@ -55,7 +69,8 @@
 //! JAX/Pallas-AOT network numerics (`runtime`), and the batched
 //! inference / serving coordinator (`coordinator::batch` /
 //! `coordinator::server` — the latter a chain of per-section stage
-//! workers routing hard samples downstream).
+//! workers routing hard samples downstream, sharing one dynamic
+//! batcher implementation with the batch host).
 //!
 //! See `DESIGN.md` for the architecture, the pipeline-stage contracts,
 //! and the substitution rationale, and `EXPERIMENTS.md` for the

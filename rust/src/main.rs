@@ -15,8 +15,8 @@ use std::path::PathBuf;
 use atheena::coordinator::batch::{BatchHost, PjrtOracle};
 use atheena::coordinator::pipeline::Realized;
 use atheena::coordinator::toolflow::ToolflowOptions;
-use atheena::coordinator::{Server, ServerConfig};
-use atheena::ee::Profiler;
+use atheena::coordinator::{ServePolicy, Server, ServerConfig};
+use atheena::ee::{OperatingPoint, Profiler};
 use atheena::report::{self, ReportContext};
 use atheena::resources::Board;
 use atheena::runtime::{ArtifactStore, DesignCache};
@@ -89,11 +89,11 @@ impl Args {
 fn usage() -> ! {
     eprintln!(
         "usage: atheena <report|toolflow|profile|infer|serve> [args]\n\
-         \n  report   <fig9a|fig9b|fig7|table1..table4|all> [--artifacts DIR] [--quick]\
+         \n  report   <fig9a|fig9b|fig8|fig7|table1..table4|all> [--artifacts DIR] [--quick]\
          \n  toolflow --network NAME [--board zc706|vu440] [--emit FILE] [--quick]\
          \n  profile  --network NAME [--samples N]\
          \n  infer    --network NAME [--batch N] [--q FRAC]\
-         \n  serve    --network NAME [--requests N]"
+         \n  serve    --network NAME [--requests N] [--controller] [--window N]"
     );
     std::process::exit(2);
 }
@@ -288,6 +288,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("--network required"))?;
     let n: usize = args.get_or("requests", "256").parse()?;
     let ts = atheena::data::TestSet::load(&args.artifacts(), name)?;
+    // Best-effort: serving runs from the compiled artifacts alone; the
+    // network JSON is only needed for the controller policy and the
+    // reach telemetry.
+    let net = atheena::ir::Network::from_file(
+        &args.artifacts().join("networks").join(format!("{name}.json")),
+    )
+    .ok();
 
     // Resolve the board design this deployment corresponds to via the
     // design cache (pipeline runs once on a cold store; a warm store
@@ -308,7 +315,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         Err(e) => eprintln!("warning: no board design available ({e}); serving anyway"),
     }
 
-    let server = Server::start(ServerConfig::new(args.artifacts(), name))?;
+    let mut server_cfg = ServerConfig::new(args.artifacts(), name);
+    if args.has("controller") {
+        // Closed-loop serving: steer the realized exit rates toward the
+        // profiled reach vector by retuning thresholds at runtime.
+        let net = net.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("--controller needs networks/{name}.json for the target reach")
+        })?;
+        let window: usize = args.get_or("window", "256").parse()?;
+        server_cfg.policy = ServePolicy::Controller {
+            target: OperatingPoint::uniform(net.c_thr, net.reach_profile.clone()),
+            window,
+        };
+        println!(
+            "controller policy on: target reach {:?}, retune window {window}",
+            net.reach_profile
+        );
+    }
+    let server = Server::start(server_cfg)?;
 
     let start = std::time::Instant::now();
     let mut rng = Rng::new(0x5E7E);
@@ -341,6 +365,36 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "  batches formed = {}",
         server.stats.batches.load(std::sync::atomic::Ordering::Relaxed)
     );
+    // Runtime operating-point telemetry: realized vs profiled reach,
+    // backpressure watermarks, and the live thresholds.
+    let realized: Vec<String> = server
+        .stats
+        .realized_reach()
+        .iter()
+        .map(|r| format!("{r:.3}"))
+        .collect();
+    match &net {
+        Some(net) => println!(
+            "  realized reach = [{}] (profiled {:?})",
+            realized.join(", "),
+            net.reach_profile
+        ),
+        None => println!("  realized reach = [{}]", realized.join(", ")),
+    }
+    let bp: Vec<String> = server
+        .stats
+        .backpressure()
+        .iter()
+        .map(|(now, peak)| format!("{now}/{peak}"))
+        .collect();
+    println!("  buffer occupancy now/peak = [{}]", bp.join(", "));
+    if let Some(op) = server.operating_point() {
+        println!(
+            "  thresholds = {:?} after {} retunes",
+            op.thresholds,
+            server.retunes()
+        );
+    }
     server.shutdown();
     Ok(())
 }

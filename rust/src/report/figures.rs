@@ -1,6 +1,7 @@
 //! Figure regeneration: Fig. 9a (predicted TAP curves), Fig. 9b
-//! (simulated-"board" TAP curves at q = 20/25/30%), and the Fig. 7
-//! buffer-sizing/deadlock ablation.
+//! (simulated-"board" TAP curves at q = 20/25/30%), the Fig. 7
+//! buffer-sizing/deadlock ablation, and the Fig. 8 p/q-mismatch
+//! envelope (rendered straight from the cached design artifact).
 
 use super::context::ReportContext;
 use crate::resources::Board;
@@ -81,6 +82,49 @@ pub fn fig9b(ctx: &mut ReportContext) -> anyhow::Result<()> {
             print!(" {:>14.0}", m.throughput_sps);
         }
         println!();
+    }
+    Ok(())
+}
+
+/// Fig. 8 — the p/q-mismatch operating envelope of every chosen design:
+/// throughput over a q-grid around the design p, stall onset, and the
+/// safe operating region. The table is read from the envelope persisted
+/// inside the design artifact, so a warm cache renders it with zero
+/// anneal calls and zero fresh simulation sweeps.
+pub fn fig8(ctx: &mut ReportContext) -> anyhow::Result<()> {
+    let r = ctx.toolflow("blenet", Board::zc706())?;
+    println!(
+        "== Fig. 8: operating envelope (p/q mismatch), B-LeNet on ZC706, p = {:.0}% ==",
+        r.p() * 100.0
+    );
+    for d in &r.designs {
+        let e = &d.envelope;
+        let at_p = e.throughput_at_design();
+        println!(
+            "-- budget {:.0}%, {} DSP, safe up to q = {:.0}%{} --",
+            d.budget_fraction * 100.0,
+            d.total_resources.dsp,
+            e.safe_q_max() * 100.0,
+            match e.stall_onset_q() {
+                Some(q) => format!(", stalls from q = {:.0}%", q * 100.0),
+                None => ", stall-free across the grid".to_string(),
+            }
+        );
+        println!(
+            "{:>8} {:>8} {:>16} {:>10} {:>12} {:>10}",
+            "q%", "q/p", "thr(samples/s)", "vs design", "stallcycles", "status"
+        );
+        for pt in &e.points {
+            println!(
+                "{:>8.1} {:>8.2} {:>16.0} {:>9.0}% {:>12} {:>10}",
+                pt.q * 100.0,
+                pt.q / e.design_p,
+                pt.throughput_sps,
+                100.0 * pt.throughput_sps / at_p.max(1e-9),
+                pt.stall_cycles,
+                if pt.deadlock { "DEADLOCK" } else { "ok" }
+            );
+        }
     }
     Ok(())
 }

@@ -19,6 +19,7 @@ pub fn run(name: &str, ctx: &mut ReportContext) -> anyhow::Result<()> {
     match name {
         "fig9a" => figures::fig9a(ctx),
         "fig9b" => figures::fig9b(ctx),
+        "fig8" => figures::fig8(ctx),
         "fig7" => figures::fig7(ctx),
         "table1" => tables::table1(ctx),
         "table2" => tables::table2(ctx),
@@ -29,14 +30,16 @@ pub fn run(name: &str, ctx: &mut ReportContext) -> anyhow::Result<()> {
             export::export_fig7(ctx, "blenet")
         }
         "all" => {
-            for r in ["fig9a", "fig9b", "fig7", "table1", "table2", "table3", "table4"] {
+            for r in [
+                "fig9a", "fig9b", "fig8", "fig7", "table1", "table2", "table3", "table4",
+            ] {
                 run(r, ctx)?;
                 println!();
             }
             Ok(())
         }
         other => anyhow::bail!(
-            "unknown report '{other}' (fig9a|fig9b|fig7|table1|table2|table3|table4|csv|all)"
+            "unknown report '{other}' (fig9a|fig9b|fig8|fig7|table1|table2|table3|table4|csv|all)"
         ),
     }
 }

@@ -1,6 +1,8 @@
 //! Simulator configuration: the parts of the measurement setup that are
 //! properties of the *host interface*, not the design (§III-B.2's DMA
-//! controller with input/output FIFOs).
+//! controller with input/output FIFOs), plus the time-varying workload
+//! [`DriftScenario`]s the closed-loop simulator replays (the paper's
+//! p/q mismatch made dynamic).
 
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -31,6 +33,56 @@ impl SimConfig {
     }
 }
 
+/// Time-varying sample difficulty over a request stream — the workload
+/// half of the closed-loop simulator. A difficulty of 1.0 reproduces the
+/// profiled confidence distribution (runtime q equals design-time p);
+/// larger values compress confidences downward so more samples travel
+/// deep (q > p, the §IV mismatch regime), smaller values do the
+/// opposite.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DriftScenario {
+    /// Constant difficulty 1.0: the runtime workload matches the
+    /// profile.
+    None,
+    /// Difficulty jumps from 1.0 to `to` once fraction `at` of the
+    /// stream has been served (a sudden traffic shift).
+    Step { at: f64, to: f64 },
+    /// Difficulty ramps linearly from `from` to `to` over the stream
+    /// (gradual distribution shift).
+    Ramp { from: f64, to: f64 },
+    /// Difficulty oscillates around 1.0 with the given amplitude and
+    /// period in samples (diurnal-style load pattern).
+    Periodic { period: usize, amplitude: f64 },
+}
+
+impl DriftScenario {
+    /// Difficulty of sample `s` in a stream of `n`. Clamped away from
+    /// zero so the confidence model stays well-defined.
+    pub fn difficulty_at(&self, s: usize, n: usize) -> f64 {
+        let frac = if n <= 1 {
+            0.0
+        } else {
+            s as f64 / (n - 1) as f64
+        };
+        let d = match *self {
+            DriftScenario::None => 1.0,
+            DriftScenario::Step { at, to } => {
+                if frac < at {
+                    1.0
+                } else {
+                    to
+                }
+            }
+            DriftScenario::Ramp { from, to } => from + (to - from) * frac,
+            DriftScenario::Periodic { period, amplitude } => {
+                let w = 2.0 * std::f64::consts::PI * s as f64 / period.max(1) as f64;
+                1.0 + amplitude * w.sin()
+            }
+        };
+        d.max(0.05)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -40,5 +92,33 @@ mod tests {
         let c = SimConfig::default();
         assert_eq!(c.dma_in_cycles(784), 196);
         assert_eq!(c.dma_in_cycles(1), 1);
+    }
+
+    #[test]
+    fn drift_scenarios_shape() {
+        let n = 1000;
+        assert_eq!(DriftScenario::None.difficulty_at(0, n), 1.0);
+        assert_eq!(DriftScenario::None.difficulty_at(n - 1, n), 1.0);
+
+        let step = DriftScenario::Step { at: 0.5, to: 2.0 };
+        assert_eq!(step.difficulty_at(0, n), 1.0);
+        assert_eq!(step.difficulty_at(499, n), 1.0);
+        assert_eq!(step.difficulty_at(500, n), 2.0);
+        assert_eq!(step.difficulty_at(n - 1, n), 2.0);
+
+        let ramp = DriftScenario::Ramp { from: 1.0, to: 3.0 };
+        assert_eq!(ramp.difficulty_at(0, n), 1.0);
+        assert!((ramp.difficulty_at(n - 1, n) - 3.0).abs() < 1e-12);
+        let mid = ramp.difficulty_at(500, n);
+        assert!(mid > 1.9 && mid < 2.1);
+
+        let per = DriftScenario::Periodic { period: 100, amplitude: 0.5 };
+        assert!((per.difficulty_at(0, n) - 1.0).abs() < 1e-12);
+        assert!(per.difficulty_at(25, n) > 1.45);
+        assert!(per.difficulty_at(75, n) < 0.55);
+
+        // Difficulty never collapses to zero.
+        let hard_ramp = DriftScenario::Ramp { from: 1.0, to: -5.0 };
+        assert!(hard_ramp.difficulty_at(n - 1, n) >= 0.05);
     }
 }

@@ -1,0 +1,373 @@
+//! Closed-loop simulation: exit decisions made by a live
+//! [`ThresholdPolicy`] over a drifting workload, then timed by the
+//! dataflow engine.
+//!
+//! The paper provisions hardware for a design-time exit probability p
+//! and shows throughput degrading when the runtime rate q drifts away
+//! (§IV, Fig. 8–9). This module makes both halves of that story
+//! simulable: a [`DriftScenario`] shifts the per-sample difficulty over
+//! the stream, a policy (fixed thresholds or the retuning
+//! [`Controller`](crate::ee::decision::Controller)) decides each exit,
+//! and the standard engine replays the resulting completion pattern for
+//! timing. With the `Fixed` policy the mismatch degradation appears;
+//! with the controller the realized exit rates — and the throughput —
+//! recover.
+//!
+//! Confidence model: at difficulty 1.0 an exit's max-softmax confidence
+//! is drawn Uniform(0, 1) (so the threshold inducing conditional hard
+//! probability p is exactly p — see
+//! [`OperatingPoint::for_uniform_confidence`]); difficulty `d` maps a
+//! draw `u` to `u^d`, compressing confidences downward for `d > 1`. The
+//! hard fraction under threshold `t` is then `t^(1/d)` — analytic, so
+//! tests can pin the drifted and recovered rates exactly.
+
+use crate::ee::decision::{OperatingPoint, ThresholdPolicy};
+use crate::ee::profiler::ReachEstimator;
+use crate::util::Rng;
+
+use super::config::{DriftScenario, SimConfig};
+use super::engine::{simulate_multi, DesignTiming, SimResult};
+use super::metrics::SimMetrics;
+
+/// Shape of one closed-loop run.
+#[derive(Clone, Copy, Debug)]
+pub struct ClosedLoopConfig {
+    /// Samples streamed through the pipeline.
+    pub samples: usize,
+    /// Reporting window (samples) for per-window rates and throughput.
+    pub window: usize,
+    pub seed: u64,
+}
+
+impl Default for ClosedLoopConfig {
+    fn default() -> Self {
+        ClosedLoopConfig {
+            samples: 8192,
+            window: 1024,
+            seed: 0xD21F7,
+        }
+    }
+}
+
+/// Realized behavior over one reporting window.
+#[derive(Clone, Debug)]
+pub struct WindowReport {
+    /// Index of the first sample in the window.
+    pub start: usize,
+    pub len: usize,
+    /// Samples per second over the window (from the timed schedule).
+    pub throughput_sps: f64,
+    /// Completion fractions per path (exit 0, …, final).
+    pub exit_rates: Vec<f64>,
+    /// Realized reach past each exit within the window.
+    pub reach: Vec<f64>,
+    /// Policy thresholds at the end of the window.
+    pub thresholds: Vec<f64>,
+}
+
+/// Everything a closed-loop run produces.
+#[derive(Clone, Debug)]
+pub struct ClosedLoopReport {
+    /// Timed schedule of the whole stream.
+    pub sim: SimResult,
+    pub metrics: SimMetrics,
+    pub windows: Vec<WindowReport>,
+    /// Per-sample completion depths the policy produced.
+    pub completes_at: Vec<usize>,
+    /// Realized reach over the whole run.
+    pub realized_reach: Vec<f64>,
+    /// The streaming estimator's EWMA reach at the end of the run.
+    pub estimated_reach: Vec<f64>,
+    /// Threshold retunes the policy performed.
+    pub retunes: u64,
+}
+
+impl ClosedLoopReport {
+    /// Realized reach over the last `k` reporting windows (the
+    /// post-convergence check).
+    pub fn tail_reach(&self, k: usize) -> Vec<f64> {
+        let tail: Vec<&WindowReport> = self.windows.iter().rev().take(k.max(1)).collect();
+        let n_exits = tail.first().map(|w| w.reach.len()).unwrap_or(0);
+        let total: usize = tail.iter().map(|w| w.len).sum();
+        (0..n_exits)
+            .map(|i| {
+                tail.iter()
+                    .map(|w| w.reach[i] * w.len as f64)
+                    .sum::<f64>()
+                    / total.max(1) as f64
+            })
+            .collect()
+    }
+
+    /// Mean throughput over the last `k` reporting windows.
+    pub fn tail_throughput(&self, k: usize) -> f64 {
+        let tail: Vec<&WindowReport> = self.windows.iter().rev().take(k.max(1)).collect();
+        if tail.is_empty() {
+            return 0.0;
+        }
+        tail.iter().map(|w| w.throughput_sps).sum::<f64>() / tail.len() as f64
+    }
+}
+
+/// Run a drifting stream through a threshold policy and time the result.
+///
+/// Per sample: difficulty comes from the scenario, each reached exit
+/// draws a confidence, the policy takes or forwards, and the completion
+/// depth feeds both the streaming [`ReachEstimator`] and the timed
+/// schedule ([`simulate_multi`]). Fully deterministic for a given seed
+/// and policy.
+pub fn simulate_closed_loop(
+    t: &DesignTiming,
+    cfg: &SimConfig,
+    policy: &mut dyn ThresholdPolicy,
+    drift: &DriftScenario,
+    run: &ClosedLoopConfig,
+) -> ClosedLoopReport {
+    let n = run.samples;
+    let n_exits = t.exits.len();
+    let window = run.window.clamp(1, n.max(1));
+    let mut rng = Rng::new(run.seed);
+    let mut estimator = ReachEstimator::windowed(n_exits, window);
+
+    let mut completes_at = Vec::with_capacity(n);
+    let mut threshold_snapshots: Vec<Vec<f64>> = Vec::new();
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + window).min(n);
+        for s in start..end {
+            let d = drift.difficulty_at(s, n);
+            let mut depth = n_exits;
+            for e in 0..n_exits {
+                let u = rng.f64();
+                // d == 1.0 bypasses powf so the nominal-difficulty path
+                // is bit-identical to drawing the confidence directly.
+                let conf = if d == 1.0 { u } else { u.powf(d) };
+                if policy.decide(e, conf) {
+                    depth = e;
+                    break;
+                }
+            }
+            estimator.observe(depth);
+            completes_at.push(depth);
+        }
+        threshold_snapshots.push(policy.operating_point().thresholds.clone());
+        start = end;
+    }
+
+    let sim = simulate_multi(t, cfg, &completes_at);
+    let metrics = SimMetrics::from_result(&sim, cfg.clock_hz);
+
+    // Window reports from the timed traces: each window's span runs from
+    // the previous window's last completion to its own (window maxima
+    // are monotone even when individual samples complete out of order).
+    let mut windows = Vec::with_capacity(threshold_snapshots.len());
+    let mut prev_out = 0u64;
+    let mut start = 0usize;
+    for thresholds in threshold_snapshots {
+        let end = (start + window).min(n);
+        let len = end - start;
+        let max_out = sim.traces[start..end]
+            .iter()
+            .map(|tr| tr.t_out)
+            .max()
+            .unwrap_or(prev_out)
+            .max(prev_out);
+        let span = max_out - prev_out;
+        let throughput_sps = if span == 0 || sim.deadlock.is_some() {
+            0.0
+        } else {
+            len as f64 * cfg.clock_hz / span as f64
+        };
+        let mut counts = vec![0usize; n_exits + 1];
+        for &depth in &completes_at[start..end] {
+            counts[depth.min(n_exits)] += 1;
+        }
+        let exit_rates: Vec<f64> = counts.iter().map(|&c| c as f64 / len as f64).collect();
+        let reach: Vec<f64> = (0..n_exits)
+            .map(|i| {
+                completes_at[start..end]
+                    .iter()
+                    .filter(|&&depth| depth > i)
+                    .count() as f64
+                    / len as f64
+            })
+            .collect();
+        windows.push(WindowReport {
+            start,
+            len,
+            throughput_sps,
+            exit_rates,
+            reach,
+            thresholds,
+        });
+        prev_out = max_out;
+        start = end;
+    }
+
+    let realized_reach: Vec<f64> = (0..n_exits)
+        .map(|i| {
+            completes_at.iter().filter(|&&d| d > i).count() as f64 / n.max(1) as f64
+        })
+        .collect();
+
+    ClosedLoopReport {
+        metrics,
+        windows,
+        realized_reach,
+        estimated_reach: estimator.reach().to_vec(),
+        retunes: policy.retunes(),
+        completes_at,
+        sim,
+    }
+}
+
+/// The design operating point for the closed-loop confidence model:
+/// thresholds calibrated so that at difficulty 1.0 the realized reach
+/// equals `reach`.
+pub fn design_operating_point(reach: &[f64]) -> OperatingPoint {
+    OperatingPoint::for_uniform_confidence(reach.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ee::decision::{Controller, Fixed};
+    use crate::sim::engine::{ExitTiming, SectionTiming};
+
+    /// Three-section timing with comfortable buffers.
+    fn toy3() -> DesignTiming {
+        DesignTiming {
+            sections: vec![
+                SectionTiming { ii: 100, lat: 150 },
+                SectionTiming { ii: 200, lat: 250 },
+                SectionTiming { ii: 400, lat: 500 },
+            ],
+            exits: vec![
+                ExitTiming { ii: 80, lat: 120, buffer_depth: 8 },
+                ExitTiming { ii: 100, lat: 150, buffer_depth: 8 },
+            ],
+            merge_ii: 10,
+            input_words: 400,
+            output_words: 10,
+        }
+    }
+
+    #[test]
+    fn fixed_no_drift_realizes_design_reach() {
+        let t = toy3();
+        let reach = [0.4, 0.15];
+        let mut policy = Fixed::new(design_operating_point(&reach));
+        let run = ClosedLoopConfig {
+            samples: 8192,
+            window: 1024,
+            seed: 0xD21F7,
+        };
+        let rep = simulate_closed_loop(
+            &t,
+            &SimConfig::default(),
+            &mut policy,
+            &DriftScenario::None,
+            &run,
+        );
+        assert!(rep.metrics.deadlock.is_none());
+        assert_eq!(rep.completes_at.len(), 8192);
+        assert_eq!(rep.windows.len(), 8);
+        assert_eq!(rep.retunes, 0);
+        for (i, &target) in reach.iter().enumerate() {
+            assert!(
+                (rep.realized_reach[i] - target).abs() < 0.03,
+                "reach[{i}] {} vs {target}",
+                rep.realized_reach[i]
+            );
+            assert!((rep.estimated_reach[i] - target).abs() < 0.08);
+        }
+        // Windows tile the stream and their rates are distributions.
+        let covered: usize = rep.windows.iter().map(|w| w.len).sum();
+        assert_eq!(covered, 8192);
+        for w in &rep.windows {
+            let sum: f64 = w.exit_rates.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+            assert!(w.throughput_sps > 0.0);
+        }
+    }
+
+    #[test]
+    fn fixed_policy_reproduces_scalar_threshold_decisions() {
+        // The closed-loop harness with a Fixed policy must produce
+        // exactly the completion pattern of replaying the scalar
+        // thresholds by hand with the same RNG — and the same timing.
+        let t = toy3();
+        let op = design_operating_point(&[0.4, 0.15]);
+        let run = ClosedLoopConfig {
+            samples: 2048,
+            window: 256,
+            seed: 0xF1DE,
+        };
+        let cfg = SimConfig::default();
+        let mut policy = Fixed::new(op.clone());
+        let rep = simulate_closed_loop(&t, &cfg, &mut policy, &DriftScenario::None, &run);
+
+        let mut rng = Rng::new(run.seed);
+        let mut completes = Vec::new();
+        for _ in 0..run.samples {
+            let mut depth = 2;
+            for e in 0..2 {
+                let conf = rng.f64();
+                if conf > op.thresholds[e] {
+                    depth = e;
+                    break;
+                }
+            }
+            completes.push(depth);
+        }
+        assert_eq!(rep.completes_at, completes);
+        let reference = simulate_multi(&t, &cfg, &completes);
+        assert_eq!(rep.sim.total_cycles, reference.total_cycles);
+        assert_eq!(rep.sim.out_of_order, reference.out_of_order);
+        for (a, b) in rep.sim.traces.iter().zip(&reference.traces) {
+            assert_eq!(a.t_out, b.t_out);
+            assert_eq!(a.exit_stage, b.exit_stage);
+        }
+    }
+
+    #[test]
+    fn controller_beats_fixed_under_step_drift() {
+        let t = toy3();
+        let reach = [0.4, 0.15];
+        let op = design_operating_point(&reach);
+        let drift = DriftScenario::Step { at: 0.25, to: 2.0 };
+        let run = ClosedLoopConfig {
+            samples: 32768,
+            window: 2048,
+            seed: 0x57E9,
+        };
+        let cfg = SimConfig::default();
+
+        let mut fixed = Fixed::new(op.clone());
+        let drifted = simulate_closed_loop(&t, &cfg, &mut fixed, &drift, &run);
+        let mut ctl = Controller::new(op.clone(), 2048);
+        let recovered = simulate_closed_loop(&t, &cfg, &mut ctl, &drift, &run);
+
+        assert!(recovered.retunes > 0);
+        // Fixed thresholds over-admit once difficulty doubles: the hard
+        // rate at exit 0 drifts to 0.4^(1/2) ~ 0.632.
+        let fixed_tail = drifted.tail_reach(4);
+        assert!(
+            (fixed_tail[0] - 0.4f64.sqrt()).abs() < 0.04,
+            "fixed tail reach {} vs analytic {}",
+            fixed_tail[0],
+            0.4f64.sqrt()
+        );
+        // The controller pulls the realized rates back to target.
+        let ctl_tail = recovered.tail_reach(4);
+        for (i, &target) in reach.iter().enumerate() {
+            assert!(
+                (ctl_tail[i] - target).abs() < 0.04,
+                "controlled tail reach[{i}] {} vs {target}",
+                ctl_tail[i]
+            );
+        }
+        // And recovers throughput the fixed policy lost.
+        assert!(recovered.tail_throughput(4) > drifted.tail_throughput(4));
+    }
+}

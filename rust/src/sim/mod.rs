@@ -15,12 +15,23 @@
 //! semantics folded into per-sample write/drop/forward times (§III-C.2's
 //! single-cycle address-invalidation drop is modelled as a 1-cycle
 //! release).
+//!
+//! Beyond the paper's static batches, [`drift`] runs *closed-loop*
+//! scenarios: a [`DriftScenario`] shifts sample difficulty over the
+//! stream, a `ThresholdPolicy` (fixed or controller) makes the exit
+//! decisions, and the engine times the result — so both the p/q-mismatch
+//! degradation and its runtime recovery are measurable.
 
 pub mod config;
+pub mod drift;
 pub mod engine;
 pub mod metrics;
 
-pub use config::SimConfig;
+pub use config::{DriftScenario, SimConfig};
+pub use drift::{
+    design_operating_point, simulate_closed_loop, ClosedLoopConfig, ClosedLoopReport,
+    WindowReport,
+};
 pub use engine::{
     simulate_baseline, simulate_ee, simulate_ee_faults, simulate_multi,
     simulate_multi_faults, DesignTiming, ExitTiming, FaultModel, SectionTiming,

@@ -2,8 +2,15 @@
 //! crate set has no criterion). Provides warmup, repeated timed runs,
 //! and mean/min/max reporting in a stable, grep-able format used by the
 //! `benches/` targets and EXPERIMENTS.md §Perf.
+//!
+//! [`BenchLog`] wraps the same primitives and additionally records every
+//! result, so a bench binary can persist its numbers as JSON
+//! (`--save-json` in `bench_sim` / `bench_e2e` → `BENCH_sim.json` /
+//! `BENCH_e2e.json`) — the machine-readable perf trajectory CI tracks.
 
 use std::time::Instant;
+
+use super::json::Json;
 
 #[derive(Clone, Copy, Debug)]
 pub struct BenchStats {
@@ -69,6 +76,60 @@ pub fn once<T>(name: &str, f: impl FnOnce() -> T) -> (T, f64) {
     (out, secs)
 }
 
+/// Records every measurement it runs so the bench binary can persist a
+/// JSON snapshot next to the human-readable output.
+#[derive(Default)]
+pub struct BenchLog {
+    entries: Vec<(String, Json)>,
+}
+
+impl BenchLog {
+    pub fn new() -> BenchLog {
+        BenchLog::default()
+    }
+
+    /// [`bench`], recorded.
+    pub fn bench<T>(
+        &mut self,
+        name: &str,
+        warmup: usize,
+        iters: usize,
+        f: impl FnMut() -> T,
+    ) -> BenchStats {
+        let s = bench(name, warmup, iters, f);
+        self.entries.push((
+            name.to_string(),
+            Json::obj(vec![
+                ("iters", Json::num(s.iters as f64)),
+                ("mean_ns", Json::Num(s.mean_ns)),
+                ("min_ns", Json::Num(s.min_ns)),
+                ("max_ns", Json::Num(s.max_ns)),
+            ]),
+        ));
+        s
+    }
+
+    /// [`once`], recorded.
+    pub fn once<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> (T, f64) {
+        let (out, secs) = once(name, f);
+        self.entries.push((
+            name.to_string(),
+            Json::obj(vec![("once_s", Json::Num(secs))]),
+        ));
+        (out, secs)
+    }
+
+    /// Write every recorded entry as one JSON object keyed by bench
+    /// name.
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        let doc = Json::Obj(self.entries.iter().cloned().collect());
+        std::fs::write(path, doc.to_string_pretty())
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("bench json saved to {path}");
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,5 +146,23 @@ mod tests {
         let (v, secs) = once("quick", || 7);
         assert_eq!(v, 7);
         assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn bench_log_saves_json() {
+        let mut log = BenchLog::new();
+        log.bench("unit/a", 0, 3, || 1u64);
+        let (v, _) = log.once("unit/b", || 2u64);
+        assert_eq!(v, 2);
+        let path = std::env::temp_dir().join(format!(
+            "atheena-benchlog-{}.json",
+            std::process::id()
+        ));
+        log.save(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::parse(&text).unwrap();
+        assert!(doc.get("unit/a").and_then(|e| e.get("mean_ns")).is_some());
+        assert!(doc.get("unit/b").and_then(|e| e.get("once_s")).is_some());
+        let _ = std::fs::remove_file(path);
     }
 }

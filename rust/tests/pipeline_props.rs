@@ -13,20 +13,34 @@
 //! * `synthetic_hard_flags` places an exact hard count and is a pure
 //!   permutation across seeds (seed changes placement, never count),
 //! * a `Realized` design round-trips through the design-cache
-//!   save/load path bit-identically,
+//!   save/load path bit-identically — including the persisted
+//!   operating envelope,
 //! * measuring a cache-loaded design performs **zero** anneal calls —
 //!   the warm-store contract behind `atheena infer`/`serve`/`report`,
 //! * a cached artifact with a stale schema version is evicted and
-//!   triggers a clean re-realize, never a hard error.
+//!   triggers a clean re-realize, never a hard error,
+//! * the closed-loop simulator with the `Fixed` policy is
+//!   **bit-identical** to replaying the scalar thresholds by hand
+//!   (the pre-refactor decision path), for random seeds and reach
+//!   vectors,
+//! * under a step drift in sample difficulty, the `Controller` policy
+//!   pulls the realized exit-rate vector back to within 2% of the
+//!   design reach and recovers throughput to within 5% of the no-drift
+//!   run — while the fixed policy demonstrably degrades.
 
 use std::path::PathBuf;
 
 use atheena::coordinator::pipeline::{Realized, Toolflow, DESIGN_SCHEMA_VERSION};
 use atheena::coordinator::toolflow::{synthetic_hard_flags, ToolflowOptions};
 use atheena::dse::anneal_call_count;
+use atheena::ee::decision::{Controller, Fixed};
 use atheena::ir::network::testnet;
 use atheena::resources::{Board, ResourceVec};
 use atheena::runtime::DesignCache;
+use atheena::sim::{
+    design_operating_point, simulate_closed_loop, simulate_multi, ClosedLoopConfig,
+    DesignTiming, DriftScenario, ExitTiming, SectionTiming, SimConfig,
+};
 use atheena::tap::{combine, combine_multi, TapCurve, TapPoint};
 use atheena::util::proptest::{check, gen_range, gen_vec, prop_assert};
 use atheena::util::{Json, Rng};
@@ -297,6 +311,10 @@ fn realized_design_roundtrips_through_store() {
             assert_eq!(a.total_resources, b.total_resources);
             assert_eq!(a.timing, b.timing);
             assert_eq!(a.manifest.cores.len(), b.manifest.cores.len());
+            // The persisted operating envelope survives the cache
+            // byte-for-byte.
+            assert_eq!(a.envelope, b.envelope);
+            assert!(!b.envelope.points.is_empty());
         }
         for (a, b) in realized.baselines.iter().zip(&loaded.baselines) {
             assert_eq!(a.mapping.foldings, b.mapping.foldings);
@@ -321,6 +339,146 @@ fn realized_design_roundtrips_through_store() {
     }
 }
 
+/// Three-section reference timing for the closed-loop properties
+/// (deterministic; no DSE involved).
+fn closed_loop_timing() -> DesignTiming {
+    DesignTiming {
+        sections: vec![
+            SectionTiming { ii: 100, lat: 150 },
+            SectionTiming { ii: 200, lat: 250 },
+            SectionTiming { ii: 400, lat: 500 },
+        ],
+        exits: vec![
+            ExitTiming { ii: 80, lat: 120, buffer_depth: 8 },
+            ExitTiming { ii: 100, lat: 150, buffer_depth: 8 },
+        ],
+        merge_ii: 10,
+        input_words: 400,
+        output_words: 10,
+    }
+}
+
+#[test]
+fn prop_fixed_policy_closed_loop_bit_identical_to_scalar_path() {
+    // The closed-loop harness with the Fixed policy must reproduce, bit
+    // for bit, the pre-refactor scalar-threshold path: hand-replaying
+    // `conf > thr` per exit with the same RNG yields the same completion
+    // pattern, and the timed schedule of that pattern is identical.
+    let t = closed_loop_timing();
+    let cfg = SimConfig::default();
+    check(25, |r| {
+        let seed = r.next_u64();
+        let r0 = 0.2 + 0.5 * r.f64();
+        let r1 = r0 * (0.2 + 0.6 * r.f64());
+        let op = design_operating_point(&[r0, r1]);
+        let run = ClosedLoopConfig {
+            samples: 1024,
+            window: 256,
+            seed,
+        };
+        let mut policy = Fixed::new(op.clone());
+        let rep = simulate_closed_loop(&t, &cfg, &mut policy, &DriftScenario::None, &run);
+
+        let mut rng = Rng::new(seed);
+        let mut completes = Vec::with_capacity(run.samples);
+        for _ in 0..run.samples {
+            let mut depth = 2;
+            for (e, &thr) in op.thresholds.iter().enumerate() {
+                let conf = rng.f64();
+                if conf > thr {
+                    depth = e;
+                    break;
+                }
+            }
+            completes.push(depth);
+        }
+        prop_assert(rep.completes_at == completes, "decision streams diverged")?;
+
+        let reference = simulate_multi(&t, &cfg, &completes);
+        prop_assert(
+            rep.sim.total_cycles == reference.total_cycles,
+            "total cycles diverged",
+        )?;
+        prop_assert(
+            rep.sim.out_of_order == reference.out_of_order,
+            "ooo count diverged",
+        )?;
+        for (a, b) in rep.sim.traces.iter().zip(&reference.traces) {
+            prop_assert(
+                a.t_out == b.t_out && a.exit_stage == b.exit_stage,
+                "trace diverged",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn controller_recovers_operating_point_after_step_drift() {
+    // The headline closed-loop property: difficulty doubles a quarter of
+    // the way through the stream. Fixed thresholds drift to a hard rate
+    // of 0.4^(1/2) ~ 0.63 at the first exit and lose throughput; the
+    // controller pulls the realized exit-rate vector back to within 2%
+    // of the design reach and recovers throughput to within 5% of the
+    // no-drift run.
+    let t = closed_loop_timing();
+    let cfg = SimConfig::default();
+    let reach = [0.4, 0.15];
+    let op = design_operating_point(&reach);
+    let drift = DriftScenario::Step { at: 0.25, to: 2.0 };
+    let run = ClosedLoopConfig {
+        samples: 65536,
+        window: 4096,
+        seed: 0xA7EE_D21F,
+    };
+
+    let mut base_policy = Fixed::new(op.clone());
+    let base =
+        simulate_closed_loop(&t, &cfg, &mut base_policy, &DriftScenario::None, &run);
+    let mut fixed_policy = Fixed::new(op.clone());
+    let degraded = simulate_closed_loop(&t, &cfg, &mut fixed_policy, &drift, &run);
+    let mut ctl = Controller::new(op.clone(), 4096);
+    let recovered = simulate_closed_loop(&t, &cfg, &mut ctl, &drift, &run);
+
+    assert!(base.metrics.deadlock.is_none());
+    assert!(recovered.retunes > 0, "controller never retuned");
+
+    // The mismatch is real: the fixed policy's tail rates sit at the
+    // drifted distribution's quantiles, far from design reach...
+    let fixed_tail = degraded.tail_reach(4);
+    assert!(
+        (fixed_tail[0] - 0.4f64.sqrt()).abs() < 0.04,
+        "fixed tail reach {} should drift to ~{}",
+        fixed_tail[0],
+        0.4f64.sqrt()
+    );
+    // ...and costs throughput (the section-2 load roughly doubles).
+    assert!(
+        degraded.tail_throughput(4) < 0.9 * base.tail_throughput(4),
+        "fixed policy should lose >10% throughput under the drift \
+         (base {}, drifted {})",
+        base.tail_throughput(4),
+        degraded.tail_throughput(4)
+    );
+
+    // Acceptance: realized exit rates back within 2% of design reach.
+    let tail = recovered.tail_reach(4);
+    for (i, &target) in reach.iter().enumerate() {
+        assert!(
+            (tail[i] - target).abs() <= 0.02,
+            "controlled tail reach[{i}] = {} not within 2% of {target}",
+            tail[i]
+        );
+    }
+    // Acceptance: throughput back within 5% of the no-drift run.
+    assert!(
+        recovered.tail_throughput(4) >= 0.95 * base.tail_throughput(4),
+        "recovered throughput {} not within 5% of no-drift {}",
+        recovered.tail_throughput(4),
+        base.tail_throughput(4)
+    );
+}
+
 #[test]
 fn warm_store_measures_with_zero_anneal_calls() {
     let _guard = dse_guard();
@@ -338,6 +496,13 @@ fn warm_store_measures_with_zero_anneal_calls() {
     assert!(was_cached, "second invocation must hit the cache");
     let measured = warm.measure(None).unwrap().into_result();
     assert!(!measured.designs.is_empty());
+    // The mismatch report renders from the cached envelope: still no
+    // anneal calls, no fresh pipeline run.
+    for d in &measured.designs {
+        assert!(!d.envelope.points.is_empty());
+        assert!(d.envelope.safe_q_max() >= d.envelope.design_p);
+        assert!(d.envelope.throughput_at_design() > 0.0);
+    }
     assert_eq!(
         anneal_call_count(),
         before,
