@@ -1,0 +1,131 @@
+//! Hot-path benchmarks — the three loops this repo's search cost lives
+//! in, measured as higher-is-better throughput metrics and persisted to
+//! the perf-trajectory JSONs:
+//!
+//! * `simulate_multi` samples/s (fresh-allocation vs reused
+//!   [`SimScratch`])                      → `BENCH_sim.json`
+//! * simulated-annealing proposals/s (parallel restarts vs the
+//!   sequential reference)                → `BENCH_dse.json`
+//! * cold `run_toolflow` wall-clock on the 3-exit test network
+//!                                        → `BENCH_e2e.json`
+//!
+//!     cargo bench --bench bench_hotpath [-- --quick] [-- --save-json] [-- --check]
+//!
+//! `--check` compares this run's metrics against the committed
+//! `BENCH_*.json` baselines (25% tolerance; shared keys only) and fails
+//! on regression. The binary always verifies the warm-cache contract —
+//! a warm design store measuring with a nonzero anneal-call delta is a
+//! hard error — so CI fails if either gate breaks.
+
+use atheena::coordinator::pipeline::Realized;
+use atheena::coordinator::toolflow::{run_toolflow, synthetic_exit_stages, ToolflowOptions};
+use atheena::dse::{anneal, anneal_call_count, anneal_sequential, AnnealConfig, Problem};
+use atheena::ir::network::testnet;
+use atheena::ir::Cdfg;
+use atheena::resources::Board;
+use atheena::runtime::DesignCache;
+use atheena::sdf::HwMapping;
+use atheena::sim::{simulate_multi, DesignTiming, SimConfig, SimScratch};
+use atheena::util::bench::BenchLog;
+
+const TOLERANCE: f64 = 0.25;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let save = args.iter().any(|a| a == "--save-json");
+    let check = args.iter().any(|a| a == "--check");
+
+    let net = testnet::three_exit();
+    let board = Board::zc706();
+
+    // ---- sim hot path: simulate_multi over the 3-exit pipeline ------
+    let mut sim_log = BenchLog::new();
+    let mut m = HwMapping::minimal(Cdfg::lower(&net, 16));
+    for i in 0..m.foldings.len() {
+        m.foldings[i] = m.spaces[i].max();
+    }
+    let timing = DesignTiming::from_ee_mapping(&m);
+    let cfg = SimConfig::default();
+    let batch = if quick { 1024 } else { 4096 };
+    let iters = if quick { 10 } else { 30 };
+    let stages = synthetic_exit_stages(&[0.4, 0.15], batch, 42);
+
+    sim_log.bench(&format!("hotpath/simulate_multi/fresh-b{batch}"), 3, iters, || {
+        simulate_multi(&timing, &cfg, &stages)
+    });
+    let mut scratch = SimScratch::new();
+    let s = sim_log.bench(
+        &format!("hotpath/simulate_multi/scratch-b{batch}"),
+        3,
+        iters,
+        || scratch.simulate_multi(&timing, &cfg, &stages).total_cycles,
+    );
+    sim_log.metric(
+        "hotpath/simulate_multi/samples_per_s",
+        batch as f64 * s.per_second(),
+        "samples/s",
+    );
+
+    // ---- dse hot path: anneal proposals/s ---------------------------
+    let mut dse_log = BenchLog::new();
+    let acfg = AnnealConfig {
+        iterations: if quick { 1_000 } else { 4_000 },
+        restarts: 4,
+        ..Default::default()
+    };
+    let problem = Problem::stage(0, Cdfg::lower(&net, 1), board.resources, board.clock_hz);
+    let s = dse_log.bench("hotpath/anneal/parallel-restarts", 1, iters.min(10), || {
+        anneal(&problem, &acfg)
+    });
+    let proposals = (acfg.iterations * acfg.restarts) as f64;
+    dse_log.metric(
+        "hotpath/anneal/proposals_per_s",
+        proposals * s.per_second(),
+        "proposals/s",
+    );
+    dse_log.bench("hotpath/anneal/sequential-restarts", 1, iters.min(10), || {
+        anneal_sequential(&problem, &acfg)
+    });
+
+    // ---- e2e hot path: cold toolflow on the 3-exit testnet ----------
+    let mut e2e_log = BenchLog::new();
+    let opts = ToolflowOptions::quick(board.clone());
+    let (_, secs) = e2e_log.once("hotpath/toolflow-cold/three_exit", || {
+        run_toolflow(&net, &opts, None).unwrap()
+    });
+    e2e_log.metric(
+        "hotpath/toolflow-cold/runs_per_s",
+        1.0 / secs.max(1e-9),
+        "runs/s",
+    );
+
+    // ---- warm-cache contract: zero anneal calls ---------------------
+    let dir = std::env::temp_dir().join(format!("atheena-hotpath-{}", std::process::id()));
+    let cache = DesignCache::open(&dir)?;
+    let (_cold, was_cached) = Realized::load_or_run(&cache, &net, &opts)?;
+    anyhow::ensure!(!was_cached, "hotpath cache must start cold");
+    let before = anneal_call_count();
+    let (warm, was_cached) = Realized::load_or_run(&cache, &net, &opts)?;
+    anyhow::ensure!(was_cached, "second load_or_run must hit the cache");
+    let _ = warm.measure(None)?;
+    let warm_anneals = anneal_call_count() - before;
+    let _ = std::fs::remove_dir_all(&dir);
+    anyhow::ensure!(
+        warm_anneals == 0,
+        "warm-cache contract violated: {warm_anneals} anneal call(s) on a warm store"
+    );
+    println!("bench {:<40} ok (0 anneal calls)", "hotpath/warm-cache-contract");
+
+    if check {
+        sim_log.check_against("BENCH_sim.json", TOLERANCE)?;
+        dse_log.check_against("BENCH_dse.json", TOLERANCE)?;
+        e2e_log.check_against("BENCH_e2e.json", TOLERANCE)?;
+    }
+    if save {
+        sim_log.save("BENCH_sim.json")?;
+        dse_log.save("BENCH_dse.json")?;
+        e2e_log.save("BENCH_e2e.json")?;
+    }
+    Ok(())
+}

@@ -46,7 +46,7 @@ use crate::ir::{Cdfg, Network, StageId};
 use crate::resources::ResourceVec;
 use crate::runtime::DesignCache;
 use crate::sdf::{buffering, Folding, HwMapping};
-use crate::sim::{simulate_ee, simulate_multi, DesignTiming, SimConfig, SimMetrics};
+use crate::sim::{DesignTiming, SimConfig, SimMetrics, SimScratch};
 use crate::tap::{combine_multi, MultiStageDesign, TapCurve};
 use crate::util::Json;
 
@@ -106,40 +106,73 @@ impl OperatingEnvelope {
     /// Sweep a design's envelope. Deeper reach probabilities scale
     /// proportionally with q, exactly as `Realized::measure` scales
     /// them.
+    ///
+    /// §Perf: every grid point is an independent batch simulation, so
+    /// the q-grid is resolved first (cheap, order-dependent dedup) and
+    /// the points run on the deterministic executor, each worker reusing
+    /// one [`SimScratch`]. Bit-identical to [`Self::sweep_sequential`]
+    /// (property-tested in `tests/pipeline_props.rs`).
     pub fn sweep(timing: &DesignTiming, reach: &[f64], clock_hz: f64) -> OperatingEnvelope {
+        Self::sweep_with(timing, reach, clock_hz, true)
+    }
+
+    /// Sequential reference path for [`Self::sweep`].
+    pub fn sweep_sequential(
+        timing: &DesignTiming,
+        reach: &[f64],
+        clock_hz: f64,
+    ) -> OperatingEnvelope {
+        Self::sweep_with(timing, reach, clock_hz, false)
+    }
+
+    fn sweep_with(
+        timing: &DesignTiming,
+        reach: &[f64],
+        clock_hz: f64,
+        parallel: bool,
+    ) -> OperatingEnvelope {
         let sim_cfg = SimConfig {
             clock_hz,
             ..SimConfig::default()
         };
         let p = reach.first().copied().unwrap_or(0.0);
-        let mut points = Vec::new();
+        let mut qs: Vec<f64> = Vec::new();
         for &factor in &Self::GRID_FACTORS {
             let q = (p * factor).clamp(0.0, 1.0);
-            if q <= 0.0 || points.last().map(|pt: &EnvelopePoint| pt.q == q).unwrap_or(false)
-            {
+            if q <= 0.0 || qs.last().map(|&last| last == q).unwrap_or(false) {
                 continue; // degenerate p or clamp-duplicated grid point
             }
+            qs.push(q);
+        }
+        let eval = |scratch: &mut SimScratch, i: usize| -> EnvelopePoint {
+            let q = qs[i];
             let scale = if p > 0.0 { q / p } else { 0.0 };
             let mut reach_rt: Vec<f64> = reach
                 .iter()
                 .map(|&r| (r * scale).clamp(0.0, 1.0))
                 .collect();
-            for i in 1..reach_rt.len() {
-                reach_rt[i] = reach_rt[i].min(reach_rt[i - 1]);
+            for k in 1..reach_rt.len() {
+                reach_rt[k] = reach_rt[k].min(reach_rt[k - 1]);
             }
             let stages = synthetic_exit_stages(
                 &reach_rt,
                 Self::BATCH,
                 Self::SEED ^ (q * 1e4) as u64,
             );
-            let sim = simulate_multi(timing, &sim_cfg, &stages);
-            points.push(EnvelopePoint {
+            let sim = scratch.simulate_multi(timing, &sim_cfg, &stages);
+            EnvelopePoint {
                 q,
                 throughput_sps: sim.throughput(clock_hz),
                 stall_cycles: sim.stall_cycles.iter().sum(),
                 deadlock: sim.deadlock.is_some(),
-            });
-        }
+            }
+        };
+        let points = if parallel {
+            crate::util::exec::run_ordered_with(qs.len(), SimScratch::new, &eval)
+        } else {
+            let mut scratch = SimScratch::new();
+            (0..qs.len()).map(|i| eval(&mut scratch, i)).collect()
+        };
         OperatingEnvelope { design_p: p, points }
     }
 
@@ -613,6 +646,9 @@ impl Realized {
             .collect();
 
         let two_stage = self.reach.len() == 1;
+        // One reusable simulation scratch across every (design, q)
+        // measurement — zero steady-state allocation in the simulator.
+        let mut scratch = SimScratch::new();
         let mut designs = Vec::new();
         for d in &self.designs {
             let mut measured = Vec::new();
@@ -623,7 +659,7 @@ impl Realized {
                         Some(f) => f(q, opts.batch),
                         None => synthetic_hard_flags(q, opts.batch, seed),
                     };
-                    simulate_ee(&d.timing, &opts.sim, &flags)
+                    scratch.simulate_ee(&d.timing, &opts.sim, &flags)
                 } else {
                     // Scale the whole design-time reach vector so the
                     // first exit sees hard probability q.
@@ -633,9 +669,9 @@ impl Realized {
                         *r = (*r * factor).clamp(0.0, 1.0);
                     }
                     let stages = synthetic_exit_stages(&reach_rt, opts.batch, seed);
-                    simulate_multi(&d.timing, &opts.sim, &stages)
+                    scratch.simulate_multi(&d.timing, &opts.sim, &stages)
                 };
-                measured.push((q, SimMetrics::from_result(&sim, opts.sim.clock_hz)));
+                measured.push((q, SimMetrics::from_result(sim, opts.sim.clock_hz)));
             }
             designs.push(ChosenDesign {
                 budget_fraction: d.budget_fraction,

@@ -9,7 +9,10 @@
 //! Energy     : ln(II) + resource-overrun penalty. Log-space keeps the
 //!              acceptance rule scale-free across networks whose IIs span
 //!              decades.
-//! Schedule   : geometric cooling, multiple restarts, best-feasible kept.
+//! Schedule   : geometric cooling, multiple restarts (independent RNG
+//!              streams, run in parallel on the deterministic executor
+//!              and reduced bit-identically to the sequential loop),
+//!              best-feasible kept.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -78,12 +81,31 @@ pub struct AnnealResult {
 
 /// Incremental evaluation cache: per-node II and resources plus the
 /// running totals, so a single-node proposal costs one resource-model
-/// call and an O(active) u64 max-scan instead of re-evaluating the whole
-/// design (§Perf: this took the annealer from ~2.2M to >4M proposals/s).
+/// call and O(1) bookkeeping instead of re-evaluating the whole design
+/// (§Perf: the per-node cache took the annealer from ~2.2M to >4M
+/// proposals/s; replacing the per-proposal O(active) max-II scan with
+/// count-of-max tracking removes the last per-proposal scan — both the
+/// energy and the accept-branch throughput read the cached maximum).
+///
+/// Invariants (`debug_assert`ed in `rescan_max`):
+/// * `max_ii == max(ii[id] for id in active)` (1 when `active` is
+///   empty),
+/// * `n_at_max == |{id in active : ii[id] == max_ii}|`.
+///
+/// Updates repair the pair in O(1) except when the *unique* maximum
+/// decreases, which triggers a lazy O(active) rescan — the classic
+/// count-of-max scheme. Rejected proposals undo through the same
+/// bookkeeping, so no energy recomputation happens on the undo path.
 struct EvalCache {
     ii: Vec<u64>,
     res: Vec<crate::resources::ResourceVec>,
     total_res: crate::resources::ResourceVec,
+    /// Active node ids (the nodes `max_ii` ranges over).
+    active_ids: Vec<usize>,
+    /// Membership mask over all node ids.
+    is_active: Vec<bool>,
+    max_ii: u64,
+    n_at_max: usize,
 }
 
 impl EvalCache {
@@ -102,7 +124,60 @@ impl EvalCache {
         for &id in &problem.active {
             total_res += res[id];
         }
-        EvalCache { ii, res, total_res }
+        let mut is_active = vec![false; mapping.cdfg.nodes.len()];
+        for &id in &problem.active {
+            is_active[id] = true;
+        }
+        let mut cache = EvalCache {
+            ii,
+            res,
+            total_res,
+            active_ids: problem.active.clone(),
+            is_active,
+            max_ii: 1,
+            n_at_max: 0,
+        };
+        cache.rescan_max();
+        cache
+    }
+
+    fn rescan_max(&mut self) {
+        self.max_ii = self
+            .active_ids
+            .iter()
+            .map(|&id| self.ii[id])
+            .max()
+            .unwrap_or(1);
+        self.n_at_max = self
+            .active_ids
+            .iter()
+            .filter(|&&id| self.ii[id] == self.max_ii)
+            .count();
+    }
+
+    /// Repair (`max_ii`, `n_at_max`) after one active node's II moved
+    /// from `old_ii` to `new_ii` (already written into `self.ii`).
+    fn track(&mut self, old_ii: u64, new_ii: u64) {
+        if new_ii == old_ii {
+            return;
+        }
+        if new_ii > self.max_ii {
+            // A new, strictly larger maximum: this node is its only
+            // holder (everything else was ≤ the old max).
+            self.max_ii = new_ii;
+            self.n_at_max = 1;
+            return;
+        }
+        if new_ii == self.max_ii {
+            self.n_at_max += 1;
+        }
+        if old_ii == self.max_ii {
+            self.n_at_max -= 1;
+            if self.n_at_max == 0 {
+                // The unique maximum decreased: lazy argmax repair.
+                self.rescan_max();
+            }
+        }
     }
 
     /// Apply a single-node folding change; returns the previous (ii, res)
@@ -118,17 +193,26 @@ impl EvalCache {
         self.total_res = self.total_res.saturating_sub(&old.1) + new_res;
         self.ii[id] = new_ii;
         self.res[id] = new_res;
+        if self.is_active[id] {
+            self.track(old.0, new_ii);
+        }
         old
     }
 
     fn undo(&mut self, id: usize, old: (u64, crate::resources::ResourceVec)) {
         self.total_res = self.total_res.saturating_sub(&self.res[id]) + old.1;
+        let prev_ii = self.ii[id];
         self.ii[id] = old.0;
         self.res[id] = old.1;
+        if self.is_active[id] {
+            self.track(prev_ii, old.0);
+        }
     }
 
-    fn max_ii(&self, active: &[usize]) -> u64 {
-        active.iter().map(|&id| self.ii[id]).max().unwrap_or(1)
+    /// Maximum II over the active nodes — O(1), maintained
+    /// incrementally.
+    fn max_active_ii(&self) -> u64 {
+        self.max_ii
     }
 }
 
@@ -136,7 +220,7 @@ impl EvalCache {
 /// design exceeds the budget (lets the search traverse slightly
 /// infeasible regions without settling there).
 fn energy_cached(problem: &Problem, cache: &EvalCache) -> f64 {
-    let ii = cache.max_ii(&problem.active) as f64;
+    let ii = cache.max_active_ii() as f64;
     let over = cache.total_res.max_utilisation(&problem.budget);
     let penalty = if over > 1.0 { 8.0 * (over - 1.0) } else { 0.0 };
     ii.ln() + penalty
@@ -172,55 +256,100 @@ fn propose(
     None
 }
 
-/// Run simulated annealing for one problem; returns the best feasible
-/// design found across all restarts (or the least-infeasible one).
-pub fn anneal(problem: &Problem, cfg: &AnnealConfig) -> AnnealResult {
-    ANNEAL_CALLS.fetch_add(1, Ordering::Relaxed);
-    let mut best: Option<(f64, HwMapping)> = None; // (throughput, mapping)
-    let mut best_infeasible: Option<(f64, HwMapping)> = None; // (overrun, ..)
-    let mut iterations_run = 0;
+/// What one restart's independent search found.
+struct RestartOutcome {
+    /// Best feasible design: (throughput, mapping).
+    best: Option<(f64, HwMapping)>,
+    /// Least-infeasible design: (overrun, mapping).
+    best_infeasible: Option<(f64, HwMapping)>,
+    iterations: usize,
+}
 
-    for restart in 0..cfg.restarts {
-        let mut rng = Rng::new(cfg.seed ^ (restart as u64).wrapping_mul(0x9E37));
-        let mut mapping = problem.mapping.clone();
-        // Random warm start: a few random uphill steps diversify restarts.
-        for _ in 0..problem.active.len() * 2 {
-            let _ = propose(problem, &mut mapping, &mut rng);
-        }
-        let mut cache = EvalCache::new(problem, &mapping);
-        let mut e = energy_cached(problem, &cache);
-        let mut t = cfg.t0;
+/// One restart's full annealing schedule. Each restart derives its own
+/// RNG from (seed, restart index), so restarts are independent pure
+/// functions — the executor runs them in parallel and the reduction in
+/// [`reduce_restarts`] reproduces the sequential loop bit for bit.
+fn run_restart(problem: &Problem, cfg: &AnnealConfig, restart: usize) -> RestartOutcome {
+    let mut rng = Rng::new(cfg.seed ^ (restart as u64).wrapping_mul(0x9E37));
+    let mut mapping = problem.mapping.clone();
+    // Random warm start: a few random uphill steps diversify restarts.
+    for _ in 0..problem.active.len() * 2 {
+        let _ = propose(problem, &mut mapping, &mut rng);
+    }
+    let mut cache = EvalCache::new(problem, &mapping);
+    let mut e = energy_cached(problem, &cache);
+    let mut t = cfg.t0;
 
-        for _ in 0..cfg.iterations {
-            iterations_run += 1;
-            t *= cfg.alpha;
-            let Some((id, prev)) = propose(problem, &mut mapping, &mut rng) else {
-                continue;
-            };
-            let old_entry = cache.update(&mapping, id);
-            let e_new = energy_cached(problem, &cache);
-            let accept = e_new <= e || rng.f64() < ((e - e_new) / t.max(1e-9)).exp();
-            if accept {
-                e = e_new;
-                // Track the best *feasible* design seen anywhere.
-                if cache.total_res.fits_in(&problem.budget) {
-                    let thr = problem.clock_hz / cache.max_ii(&problem.active) as f64;
-                    if best.as_ref().map(|(b, _)| thr > *b).unwrap_or(true) {
-                        best = Some((thr, mapping.clone()));
-                    }
-                } else {
-                    let over = cache.total_res.max_utilisation(&problem.budget);
-                    if best_infeasible
-                        .as_ref()
-                        .map(|(b, _)| over < *b)
-                        .unwrap_or(true)
-                    {
-                        best_infeasible = Some((over, mapping.clone()));
-                    }
+    let mut best: Option<(f64, HwMapping)> = None;
+    let mut best_infeasible: Option<(f64, HwMapping)> = None;
+    let mut iterations = 0;
+    for _ in 0..cfg.iterations {
+        iterations += 1;
+        t *= cfg.alpha;
+        let Some((id, prev)) = propose(problem, &mut mapping, &mut rng) else {
+            continue;
+        };
+        let old_entry = cache.update(&mapping, id);
+        let e_new = energy_cached(problem, &cache);
+        let accept = e_new <= e || rng.f64() < ((e - e_new) / t.max(1e-9)).exp();
+        if accept {
+            e = e_new;
+            // Track the best *feasible* design seen in this restart.
+            if cache.total_res.fits_in(&problem.budget) {
+                let thr = problem.clock_hz / cache.max_active_ii() as f64;
+                if best.as_ref().map(|(b, _)| thr > *b).unwrap_or(true) {
+                    best = Some((thr, mapping.clone()));
                 }
             } else {
-                mapping.foldings[id] = prev; // undo
-                cache.undo(id, old_entry);
+                let over = cache.total_res.max_utilisation(&problem.budget);
+                if best_infeasible
+                    .as_ref()
+                    .map(|(b, _)| over < *b)
+                    .unwrap_or(true)
+                {
+                    best_infeasible = Some((over, mapping.clone()));
+                }
+            }
+        } else {
+            // Undo: the cached energy state is restored incrementally —
+            // no energy recomputation on the rejected path.
+            mapping.foldings[id] = prev;
+            cache.undo(id, old_entry);
+        }
+    }
+    RestartOutcome {
+        best,
+        best_infeasible,
+        iterations,
+    }
+}
+
+/// Fold per-restart outcomes (in restart order) into the final result.
+///
+/// Strict comparisons make the tie-break deterministic on
+/// (throughput, restart index): the sequential loop's global best is
+/// the first (restart, iteration) to attain the maximum throughput, and
+/// reducing per-restart bests in restart order with `>` picks exactly
+/// that restart — so the parallel path is bit-identical to the
+/// sequential one (property-tested in `tests/pipeline_props.rs`).
+fn reduce_restarts(problem: &Problem, outcomes: Vec<RestartOutcome>) -> AnnealResult {
+    let mut best: Option<(f64, HwMapping)> = None;
+    let mut best_infeasible: Option<(f64, HwMapping)> = None;
+    let mut iterations_run = 0;
+    for o in outcomes {
+        iterations_run += o.iterations;
+        if let Some((thr, m)) = o.best {
+            if best.as_ref().map(|(b, _)| thr > *b).unwrap_or(true) {
+                best = Some((thr, m));
+            }
+        }
+        if let Some((over, m)) = o.best_infeasible {
+            if best_infeasible
+                .as_ref()
+                .map(|(b, _)| over < *b)
+                .unwrap_or(true)
+            {
+                best_infeasible = Some((over, m));
             }
         }
     }
@@ -243,6 +372,32 @@ pub fn anneal(problem: &Problem, cfg: &AnnealConfig) -> AnnealResult {
         feasible,
         iterations_run,
     }
+}
+
+/// Run simulated annealing for one problem; returns the best feasible
+/// design found across all restarts (or the least-infeasible one).
+///
+/// Restarts run on the deterministic executor (sequentially when the
+/// caller is already an executor worker — e.g. inside a parallel TAP
+/// sweep — so the thread count stays bounded). The result is
+/// bit-identical to [`anneal_sequential`].
+pub fn anneal(problem: &Problem, cfg: &AnnealConfig) -> AnnealResult {
+    ANNEAL_CALLS.fetch_add(1, Ordering::Relaxed);
+    let outcomes = crate::util::exec::run_ordered(cfg.restarts, |restart| {
+        run_restart(problem, cfg, restart)
+    });
+    reduce_restarts(problem, outcomes)
+}
+
+/// Sequential reference path for [`anneal`] — the pre-parallel
+/// restart-by-restart loop, kept for the bit-identicality property
+/// tests and single-threaded debugging.
+pub fn anneal_sequential(problem: &Problem, cfg: &AnnealConfig) -> AnnealResult {
+    ANNEAL_CALLS.fetch_add(1, Ordering::Relaxed);
+    let outcomes = (0..cfg.restarts)
+        .map(|restart| run_restart(problem, cfg, restart))
+        .collect();
+    reduce_restarts(problem, outcomes)
 }
 
 #[cfg(test)]
@@ -299,6 +454,31 @@ mod tests {
         let b = anneal(&p, &cfg);
         assert_eq!(a.ii, b.ii);
         assert_eq!(a.resources, b.resources);
+    }
+
+    #[test]
+    fn parallel_restarts_bit_identical_to_sequential() {
+        let net = testnet::blenet_like();
+        let board = Board::zc706();
+        for (kind_budget, cdfg) in [
+            (board.resources, Cdfg::lower_baseline(&net)),
+            (board.budget(0.3), Cdfg::lower_baseline(&net)),
+        ] {
+            let p = Problem::baseline(cdfg, kind_budget, board.clock_hz);
+            let cfg = AnnealConfig {
+                iterations: 500,
+                restarts: 3,
+                ..Default::default()
+            };
+            let par = anneal(&p, &cfg);
+            let seq = anneal_sequential(&p, &cfg);
+            assert_eq!(par.ii, seq.ii);
+            assert_eq!(par.resources, seq.resources);
+            assert_eq!(par.feasible, seq.feasible);
+            assert_eq!(par.iterations_run, seq.iterations_run);
+            assert_eq!(par.throughput.to_bits(), seq.throughput.to_bits());
+            assert_eq!(par.mapping.foldings, seq.mapping.foldings);
+        }
     }
 
     #[test]

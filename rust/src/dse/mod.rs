@@ -12,7 +12,9 @@ pub mod baselines;
 pub mod problem;
 pub mod sweep;
 
-pub use annealer::{anneal, anneal_call_count, AnnealConfig, AnnealResult};
+pub use annealer::{
+    anneal, anneal_call_count, anneal_sequential, AnnealConfig, AnnealResult,
+};
 pub use baselines::{greedy, naive_combine, random_search};
 pub use problem::{Problem, ProblemKind};
 pub use sweep::{

@@ -13,9 +13,6 @@
 //! bit-identical to the sequential one — the pipeline's `Curves` stage
 //! relies on this to parallelize the toolflow's dominant cost.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-
 use super::annealer::{anneal, AnnealConfig, AnnealResult};
 use super::problem::{Problem, ProblemKind};
 use crate::ir::Cdfg;
@@ -109,38 +106,17 @@ pub fn assemble_sweep(
     (TapCurve::from_points(points), results)
 }
 
-/// Run planned tasks on scoped worker threads (bounded by available
-/// parallelism), returning results in task order. Task order — not
-/// completion order — keeps the output bit-identical to a sequential run.
+/// Run planned tasks on the deterministic executor
+/// ([`util::exec::run_ordered`](crate::util::exec::run_ordered)),
+/// returning results in task order. Task order — not completion order —
+/// keeps the output bit-identical to a sequential run. Anneals invoked
+/// from these workers run their restarts sequentially (the executor's
+/// nesting rule), so the thread count stays bounded by the machine's
+/// parallelism.
 pub fn run_tasks_parallel(tasks: &[SweepTask]) -> Vec<AnnealResult> {
-    let n = tasks.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let workers = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(1)
-        .min(n);
-    if workers <= 1 {
-        return tasks.iter().map(|t| anneal(&t.problem, &t.config)).collect();
-    }
-    let next = AtomicUsize::new(0);
-    let done: Mutex<Vec<(usize, AnnealResult)>> = Mutex::new(Vec::with_capacity(n));
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = anneal(&tasks[i].problem, &tasks[i].config);
-                done.lock().unwrap().push((i, r));
-            });
-        }
-    });
-    let mut done = done.into_inner().unwrap();
-    done.sort_by_key(|(i, _)| *i);
-    done.into_iter().map(|(_, r)| r).collect()
+    crate::util::exec::run_ordered(tasks.len(), |i| {
+        anneal(&tasks[i].problem, &tasks[i].config)
+    })
 }
 
 /// Sweep one problem kind over the budget ladder sequentially, returning

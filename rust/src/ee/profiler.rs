@@ -87,6 +87,12 @@ impl Default for Profiler {
 impl Profiler {
     /// Profile a test set through an oracle for a network with
     /// `n_exits` early exits.
+    ///
+    /// §Perf: oracle inference is inherently serial (the backend is
+    /// stateful and `&mut`), but the per-split reach/accuracy statistics
+    /// are pure functions of each split's outcomes — they run on the
+    /// deterministic executor after all inference completes, in split
+    /// order, so the report is bit-identical to the fused serial loop.
     pub fn profile(
         &self,
         oracle: &mut dyn ExitOracle,
@@ -99,50 +105,27 @@ impl Profiler {
         anyhow::ensure!(n_exits >= 1, "network must have at least one exit");
         let per = n / self.splits;
         let mut report = ProfileReport::default();
+
+        // Pass 1 (serial): batched inference per split.
+        let mut ranges = Vec::with_capacity(self.splits);
+        let mut split_outcomes = Vec::with_capacity(self.splits);
         for split in 0..self.splits {
             let lo = split * per;
             let hi = if split + 1 == self.splits { n } else { lo + per };
             let images: Vec<&[f32]> = (lo..hi).map(|i| ts.image(i)).collect();
             let outcomes = oracle.run(&images)?;
             anyhow::ensure!(outcomes.len() == hi - lo, "oracle returned wrong count");
-            let mut past = vec![0usize; n_exits];
-            let mut taken_correct = 0usize;
-            let mut taken = 0usize;
-            let mut deployed_correct = 0usize;
-            for (k, o) in outcomes.iter().enumerate() {
-                let label = ts.labels[lo + k] as usize;
-                // A sample completing at exit e (or the final classifier,
-                // e = n_exits) travelled past exits 0..e.
-                let depth = match o.exit {
-                    Some(e) => {
-                        anyhow::ensure!(e < n_exits, "oracle reported exit {e} of {n_exits}");
-                        taken += 1;
-                        if o.pred == label {
-                            taken_correct += 1;
-                        }
-                        e
-                    }
-                    None => n_exits,
-                };
-                for p in past.iter_mut().take(depth) {
-                    *p += 1;
-                }
-                if o.pred == label {
-                    deployed_correct += 1;
-                }
-            }
-            let m = hi - lo;
-            report.splits.push(SplitStats {
-                n: m,
-                reach: past.iter().map(|&c| c as f64 / m as f64).collect(),
-                p_hard: past[0] as f64 / m as f64,
-                exit_acc_on_taken: if taken > 0 {
-                    taken_correct as f64 / taken as f64
-                } else {
-                    0.0
-                },
-                deployed_acc: deployed_correct as f64 / m as f64,
-            });
+            ranges.push((lo, hi));
+            split_outcomes.push(outcomes);
+        }
+
+        // Pass 2 (parallel): reach-vector + accuracy measurement.
+        let stats = crate::util::exec::run_ordered(self.splits, |split| {
+            let (lo, hi) = ranges[split];
+            split_stats(&split_outcomes[split], &ts.labels[lo..hi], n_exits)
+        });
+        for s in stats {
+            report.splits.push(s?);
         }
         // Aggregate reach vector (split-weighted means).
         report.reach = (0..n_exits)
@@ -179,6 +162,54 @@ impl Profiler {
             / n as f64;
         Ok(report)
     }
+}
+
+/// One split's reach-vector + accuracy statistics from its inference
+/// outcomes (`labels[k]` corresponds to `outcomes[k]`). Pure — safe to
+/// evaluate for every split in parallel.
+fn split_stats(
+    outcomes: &[ExitOutcome],
+    labels: &[u8],
+    n_exits: usize,
+) -> anyhow::Result<SplitStats> {
+    let mut past = vec![0usize; n_exits];
+    let mut taken_correct = 0usize;
+    let mut taken = 0usize;
+    let mut deployed_correct = 0usize;
+    for (k, o) in outcomes.iter().enumerate() {
+        let label = labels[k] as usize;
+        // A sample completing at exit e (or the final classifier,
+        // e = n_exits) travelled past exits 0..e.
+        let depth = match o.exit {
+            Some(e) => {
+                anyhow::ensure!(e < n_exits, "oracle reported exit {e} of {n_exits}");
+                taken += 1;
+                if o.pred == label {
+                    taken_correct += 1;
+                }
+                e
+            }
+            None => n_exits,
+        };
+        for p in past.iter_mut().take(depth) {
+            *p += 1;
+        }
+        if o.pred == label {
+            deployed_correct += 1;
+        }
+    }
+    let m = outcomes.len();
+    Ok(SplitStats {
+        n: m,
+        reach: past.iter().map(|&c| c as f64 / m as f64).collect(),
+        p_hard: past[0] as f64 / m as f64,
+        exit_acc_on_taken: if taken > 0 {
+            taken_correct as f64 / taken as f64
+        } else {
+            0.0
+        },
+        deployed_acc: deployed_correct as f64 / m as f64,
+    })
 }
 
 // ---------------------------------------------------------------------

@@ -72,6 +72,17 @@
 //! workers routing hard samples downstream, sharing one dynamic
 //! batcher implementation with the batch host).
 //!
+//! The cold search path is driven through a crate-wide **performance
+//! layer** (DESIGN.md §7): `util::exec` is a deterministic scoped-
+//! thread executor (results in task order, bit-identical to sequential,
+//! nested calls collapse inline) running the TAP sweeps, anneal
+//! restarts, operating-envelope q-grid, drift-window statistics, and
+//! profiler split statistics; `sim::SimScratch` makes steady-state
+//! simulation allocation-free; and the annealer's `EvalCache` keeps its
+//! max-II incrementally (count-of-max with lazy argmax repair). Every
+//! optimization is property-tested bit-identical to its reference path,
+//! and `bench_hotpath` tracks the wins in `BENCH_{sim,dse,e2e}.json`.
+//!
 //! See `DESIGN.md` for the architecture, the pipeline-stage contracts,
 //! and the substitution rationale, and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.

@@ -160,38 +160,59 @@ pub fn simulate_closed_loop(
     // Window reports from the timed traces: each window's span runs from
     // the previous window's last completion to its own (window maxima
     // are monotone even when individual samples complete out of order).
-    let mut windows = Vec::with_capacity(threshold_snapshots.len());
+    //
+    // §Perf: per-window statistics (completion-time maximum, exit-rate
+    // and reach histograms) depend only on that window's slice of the
+    // traces/decisions — a pre-pass computes them all on the
+    // deterministic executor, then a cheap sequential pass threads the
+    // monotone completion frontier (`prev_out`) through the results.
+    // Bit-identical to the fused sequential loop (property-tested in
+    // `tests/pipeline_props.rs`).
+    let n_windows = threshold_snapshots.len();
+    let win_stats: Vec<(u64, Vec<f64>, Vec<f64>)> =
+        crate::util::exec::run_ordered(n_windows, |w| {
+            let start = w * window;
+            let end = (start + window).min(n);
+            let len = end - start;
+            let max_out = sim.traces[start..end]
+                .iter()
+                .map(|tr| tr.t_out)
+                .max()
+                .unwrap_or(0);
+            let mut counts = vec![0usize; n_exits + 1];
+            for &depth in &completes_at[start..end] {
+                counts[depth.min(n_exits)] += 1;
+            }
+            let exit_rates: Vec<f64> =
+                counts.iter().map(|&c| c as f64 / len as f64).collect();
+            let reach: Vec<f64> = (0..n_exits)
+                .map(|i| {
+                    completes_at[start..end]
+                        .iter()
+                        .filter(|&&depth| depth > i)
+                        .count() as f64
+                        / len as f64
+                })
+                .collect();
+            (max_out, exit_rates, reach)
+        });
+    let mut windows = Vec::with_capacity(n_windows);
     let mut prev_out = 0u64;
-    let mut start = 0usize;
-    for thresholds in threshold_snapshots {
+    for (w, (thresholds, (raw_max, exit_rates, reach))) in threshold_snapshots
+        .into_iter()
+        .zip(win_stats)
+        .enumerate()
+    {
+        let start = w * window;
         let end = (start + window).min(n);
         let len = end - start;
-        let max_out = sim.traces[start..end]
-            .iter()
-            .map(|tr| tr.t_out)
-            .max()
-            .unwrap_or(prev_out)
-            .max(prev_out);
+        let max_out = raw_max.max(prev_out);
         let span = max_out - prev_out;
         let throughput_sps = if span == 0 || sim.deadlock.is_some() {
             0.0
         } else {
             len as f64 * cfg.clock_hz / span as f64
         };
-        let mut counts = vec![0usize; n_exits + 1];
-        for &depth in &completes_at[start..end] {
-            counts[depth.min(n_exits)] += 1;
-        }
-        let exit_rates: Vec<f64> = counts.iter().map(|&c| c as f64 / len as f64).collect();
-        let reach: Vec<f64> = (0..n_exits)
-            .map(|i| {
-                completes_at[start..end]
-                    .iter()
-                    .filter(|&&depth| depth > i)
-                    .count() as f64
-                    / len as f64
-            })
-            .collect();
         windows.push(WindowReport {
             start,
             len,
@@ -201,7 +222,6 @@ pub fn simulate_closed_loop(
             thresholds,
         });
         prev_out = max_out;
-        start = end;
     }
 
     let realized_reach: Vec<f64> = (0..n_exits)

@@ -65,36 +65,44 @@ pub struct DesignTiming {
 impl DesignTiming {
     /// Extract section timings from an EE hardware mapping (any number
     /// of exits).
+    ///
+    /// §Perf: a single pass over the nodes accumulates every section's
+    /// max-II and summed latency at once (this was O(nodes · sections):
+    /// one full scan per section for the II and another per stage for
+    /// the latency). Sums run in node order, so the result is
+    /// bit-identical to the scan-per-section form.
     pub fn from_ee_mapping(m: &HwMapping) -> DesignTiming {
         let n_sections = m.cdfg.n_sections;
-        let backbone_ii = |sec: usize| -> u64 {
-            m.cdfg
-                .nodes
-                .iter()
-                .filter(|n| n.stage == StageId::Backbone(sec))
-                .map(|n| m.node_ii(n.id))
-                .max()
-                .unwrap_or(1)
-        };
-        let branch_ii = |exit: usize| -> u64 {
-            m.cdfg
-                .nodes
-                .iter()
-                .filter(|n| n.stage == StageId::ExitBranch(exit))
-                .map(|n| m.node_ii(n.id))
-                .max()
-                .unwrap_or(1)
-        };
+        let n_exits = n_sections.saturating_sub(1);
+        let mut sec_ii: Vec<Option<u64>> = vec![None; n_sections];
+        let mut sec_lat = vec![0u64; n_sections];
+        let mut exit_ii: Vec<Option<u64>> = vec![None; n_exits];
+        let mut exit_lat = vec![0u64; n_exits];
+        for node in &m.cdfg.nodes {
+            match node.stage {
+                StageId::Backbone(i) if i < n_sections => {
+                    let ii = m.node_ii(node.id);
+                    sec_ii[i] = Some(sec_ii[i].map_or(ii, |x: u64| x.max(ii)));
+                    sec_lat[i] += m.node_latency(node.id);
+                }
+                StageId::ExitBranch(i) if i < n_exits => {
+                    let ii = m.node_ii(node.id);
+                    exit_ii[i] = Some(exit_ii[i].map_or(ii, |x: u64| x.max(ii)));
+                    exit_lat[i] += m.node_latency(node.id);
+                }
+                _ => {}
+            }
+        }
         let sections = (0..n_sections)
             .map(|sec| SectionTiming {
-                ii: backbone_ii(sec),
-                lat: m.stage_latency(StageId::Backbone(sec)),
+                ii: sec_ii[sec].unwrap_or(1),
+                lat: sec_lat[sec],
             })
             .collect();
-        let exits = (0..n_sections.saturating_sub(1))
+        let exits = (0..n_exits)
             .map(|e| ExitTiming {
-                ii: branch_ii(e),
-                lat: m.stage_latency(StageId::ExitBranch(e)),
+                ii: exit_ii[e].unwrap_or(1),
+                lat: exit_lat[e],
                 buffer_depth: m.cond_buffer_depth(e),
             })
             .collect();
@@ -205,7 +213,7 @@ pub struct SampleTrace {
 }
 
 /// Outcome of simulating one batch through one design.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct SimResult {
     pub traces: Vec<SampleTrace>,
     /// Total cycles from first DMA word to output-DMA idle.
@@ -270,8 +278,9 @@ impl FaultModel {
 /// the per-sample exit decision input (from ground-truth flags or live
 /// PJRT numerics via the coordinator).
 pub fn simulate_ee(t: &DesignTiming, cfg: &SimConfig, hard: &[bool]) -> SimResult {
-    let completes: Vec<usize> = hard.iter().map(|&h| usize::from(h)).collect();
-    sim_core(t, cfg, &completes, &FaultModel::NONE)
+    let mut scratch = SimScratch::new();
+    scratch.simulate_ee_faults(t, cfg, hard, &FaultModel::NONE);
+    scratch.take_result()
 }
 
 /// Simulate a two-stage design with injected faults (robustness /
@@ -282,8 +291,9 @@ pub fn simulate_ee_faults(
     hard: &[bool],
     faults: &FaultModel,
 ) -> SimResult {
-    let completes: Vec<usize> = hard.iter().map(|&h| usize::from(h)).collect();
-    sim_core(t, cfg, &completes, faults)
+    let mut scratch = SimScratch::new();
+    scratch.simulate_ee_faults(t, cfg, hard, faults);
+    scratch.take_result()
 }
 
 /// Simulate a batch through an N-exit design. `completes_at[s]` is the
@@ -295,7 +305,9 @@ pub fn simulate_multi(
     cfg: &SimConfig,
     completes_at: &[usize],
 ) -> SimResult {
-    sim_core(t, cfg, completes_at, &FaultModel::NONE)
+    let mut scratch = SimScratch::new();
+    scratch.simulate_multi(t, cfg, completes_at);
+    scratch.take_result()
 }
 
 /// Fault-injected variant of [`simulate_multi`].
@@ -305,243 +317,412 @@ pub fn simulate_multi_faults(
     completes_at: &[usize],
     faults: &FaultModel,
 ) -> SimResult {
-    sim_core(t, cfg, completes_at, faults)
+    let mut scratch = SimScratch::new();
+    scratch.simulate_multi_faults(t, cfg, completes_at, faults);
+    scratch.take_result()
 }
 
-fn sim_core(
-    t: &DesignTiming,
-    cfg: &SimConfig,
-    completes_at: &[usize],
-    faults: &FaultModel,
-) -> SimResult {
-    let n = completes_at.len();
-    let n_sections = t.sections.len();
-    let n_exits = t.exits.len();
-    let mut traces = vec![SampleTrace::default(); n];
-    let empty = |deadlock: Option<String>| SimResult {
-        traces: traces.clone(),
-        total_cycles: 0,
-        stall_cycles: vec![0; n_exits],
-        peak_buffer_occupancy: vec![0; n_exits],
-        out_of_order: 0,
-        deadlock,
-    };
-    if n == 0 {
-        return empty(None);
-    }
-    for (i, e) in t.exits.iter().enumerate() {
-        if e.buffer_depth == 0 {
-            // Fig. 7: buffer i cannot hold the sample whose decision is
-            // in flight; split i stalls mid-map and the decision never
-            // fires.
-            return empty(Some(format!(
-                "conditional buffer {i} depth 0: split stalls mid-sample, \
-                 exit decision {i} starved (min depth is 1 + decision-delay/II)"
-            )));
-        }
+/// A Conditional Buffer's resident-sample leave times: a small sorted
+/// vec (descending, min at the tail) standing in for a
+/// `BinaryHeap<Reverse<u64>>`. Occupancy is bounded by the buffer depth
+/// (tens of samples), so insertion-by-memmove beats heap bookkeeping
+/// and — crucially for [`SimScratch`] — the backing storage is reusable
+/// across simulations. Pop order is identical to the heap's (min
+/// first; equal keys are indistinguishable `u64`s).
+#[derive(Clone, Debug, Default)]
+struct MinQueue {
+    /// Sorted descending, so the minimum is `v.last()` / `v.pop()`.
+    v: Vec<u64>,
+}
+
+impl MinQueue {
+    #[inline]
+    fn len(&self) -> usize {
+        self.v.len()
     }
 
-    let dma_in = cfg.dma_in_cycles(t.input_words);
-    let dma_out = cfg.dma_in_cycles(t.output_words).max(1);
+    #[inline]
+    fn peek_min(&self) -> Option<u64> {
+        self.v.last().copied()
+    }
 
-    // Conditional buffers: per exit, a min-heap of leave times of
-    // resident samples.
-    let mut buffers: Vec<std::collections::BinaryHeap<std::cmp::Reverse<u64>>> =
-        (0..n_exits).map(|_| std::collections::BinaryHeap::new()).collect();
-    let mut peak_occ = vec![0usize; n_exits];
-    let mut stall = vec![0u64; n_exits];
+    #[inline]
+    fn pop_min(&mut self) -> Option<u64> {
+        self.v.pop()
+    }
 
-    let mut fault_rng = crate::util::Rng::new(faults.seed);
-    let mut dma_skew = 0u64; // cumulative injected DMA stalls
+    #[inline]
+    fn push(&mut self, x: u64) {
+        let i = self.v.partition_point(|&y| y >= x);
+        self.v.insert(i, x);
+    }
 
-    // Rolling per-section / per-exit issue state (None = never used,
-    // matching the first-sample special case of the recurrences).
-    let mut sec_prev: Vec<Option<u64>> = vec![None; n_sections];
-    let mut dec_prev: Vec<Option<u64>> = vec![None; n_exits];
-    // Per completion path (exit 0..n_exits, then final), arrival times at
-    // the merge. Each path is FIFO, so each bucket is monotone (absent
-    // injected jitter) and a k-way merge reproduces the arrival order in
-    // O(n · paths) instead of a global sort.
-    let mut path_arrivals: Vec<Vec<(u64, usize)>> =
-        (0..n_sections).map(|_| Vec::new()).collect();
+    #[inline]
+    fn clear(&mut self) {
+        self.v.clear();
+    }
+}
 
-    for s in 0..n {
-        let target = completes_at[s].min(n_sections - 1);
+/// Reusable simulation state: every buffer `sim_core` needs, retained
+/// (with its capacity) across calls so steady-state simulation performs
+/// **zero allocations** once warmed up. The operating-envelope sweep,
+/// the drift harness, and `Realized::measure` run thousands of batches
+/// through one scratch each.
+///
+/// Results produced through a scratch are bit-identical to the
+/// allocating entry points ([`simulate_multi`] etc.) and independent of
+/// whatever the scratch ran before — enforced by
+/// `prop_sim_scratch_reuse_bit_identical` in `tests/pipeline_props.rs`.
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    buffers: Vec<MinQueue>,
+    sec_prev: Vec<Option<u64>>,
+    dec_prev: Vec<Option<u64>>,
+    path_arrivals: Vec<Vec<(u64, usize)>>,
+    heads: Vec<usize>,
+    merge_arrivals: Vec<(u64, usize)>,
+    completes_buf: Vec<usize>,
+    result: SimResult,
+}
 
-        // ---- DMA in: batch streams continuously ----
-        if faults.dma_stall_prob > 0.0 && fault_rng.chance(faults.dma_stall_prob) {
-            dma_skew += faults.dma_stall_cycles;
+impl SimScratch {
+    pub fn new() -> SimScratch {
+        SimScratch::default()
+    }
+
+    /// [`simulate_multi`] into this scratch; the returned reference is
+    /// valid until the next simulation reuses the buffers.
+    pub fn simulate_multi(
+        &mut self,
+        t: &DesignTiming,
+        cfg: &SimConfig,
+        completes_at: &[usize],
+    ) -> &SimResult {
+        self.core(t, cfg, completes_at, &FaultModel::NONE);
+        &self.result
+    }
+
+    /// [`simulate_multi_faults`] into this scratch.
+    pub fn simulate_multi_faults(
+        &mut self,
+        t: &DesignTiming,
+        cfg: &SimConfig,
+        completes_at: &[usize],
+        faults: &FaultModel,
+    ) -> &SimResult {
+        self.core(t, cfg, completes_at, faults);
+        &self.result
+    }
+
+    /// [`simulate_ee`] into this scratch (reuses an internal
+    /// completion-depth buffer instead of allocating one).
+    pub fn simulate_ee(
+        &mut self,
+        t: &DesignTiming,
+        cfg: &SimConfig,
+        hard: &[bool],
+    ) -> &SimResult {
+        self.simulate_ee_faults(t, cfg, hard, &FaultModel::NONE)
+    }
+
+    /// [`simulate_ee_faults`] into this scratch.
+    pub fn simulate_ee_faults(
+        &mut self,
+        t: &DesignTiming,
+        cfg: &SimConfig,
+        hard: &[bool],
+        faults: &FaultModel,
+    ) -> &SimResult {
+        let mut completes = std::mem::take(&mut self.completes_buf);
+        completes.clear();
+        completes.extend(hard.iter().map(|&h| usize::from(h)));
+        self.core(t, cfg, &completes, faults);
+        self.completes_buf = completes;
+        &self.result
+    }
+
+    /// The last simulation's result.
+    pub fn result(&self) -> &SimResult {
+        &self.result
+    }
+
+    /// Move the last result out (the scratch re-grows its buffers on
+    /// the next call; used by the one-shot entry points).
+    pub fn take_result(&mut self) -> SimResult {
+        std::mem::take(&mut self.result)
+    }
+
+    /// Reset every reused buffer for a run of `n` samples over
+    /// `n_sections` sections / `n_exits` exits. Capacity is retained.
+    fn reset(&mut self, n: usize, n_sections: usize, n_exits: usize) {
+        let r = &mut self.result;
+        r.traces.clear();
+        r.traces.resize(n, SampleTrace::default());
+        r.total_cycles = 0;
+        r.stall_cycles.clear();
+        r.stall_cycles.resize(n_exits, 0);
+        r.peak_buffer_occupancy.clear();
+        r.peak_buffer_occupancy.resize(n_exits, 0);
+        r.out_of_order = 0;
+        r.deadlock = None;
+
+        if self.buffers.len() < n_exits {
+            self.buffers.resize_with(n_exits, MinQueue::default);
         }
-        let t_in = (s as u64 + 1) * dma_in + dma_skew;
-        traces[s].t_in = t_in;
+        for b in &mut self.buffers[..n_exits] {
+            b.clear();
+        }
+        self.sec_prev.clear();
+        self.sec_prev.resize(n_sections, None);
+        self.dec_prev.clear();
+        self.dec_prev.resize(n_exits, None);
+        if self.path_arrivals.len() != n_sections {
+            self.path_arrivals.resize_with(n_sections, Vec::new);
+        }
+        for bucket in &mut self.path_arrivals {
+            bucket.clear();
+        }
+        self.heads.clear();
+        self.heads.resize(n_sections, 0);
+        // §Perf: pre-size the merge stream from n — it always receives
+        // exactly one arrival per sample.
+        self.merge_arrivals.clear();
+        self.merge_arrivals.reserve(n);
+    }
 
-        let mut arrival = t_in;
-        let mut merge_arrival = 0u64;
-        let mut path = n_sections - 1;
+    fn core(
+        &mut self,
+        t: &DesignTiming,
+        cfg: &SimConfig,
+        completes_at: &[usize],
+        faults: &FaultModel,
+    ) {
+        let n = completes_at.len();
+        let n_sections = t.sections.len();
+        let n_exits = t.exits.len();
+        self.reset(n, n_sections, n_exits);
+        if n == 0 {
+            return;
+        }
+        for (i, e) in t.exits.iter().enumerate() {
+            if e.buffer_depth == 0 {
+                // Fig. 7: buffer i cannot hold the sample whose decision
+                // is in flight; split i stalls mid-map and the decision
+                // never fires. Traces stay at their defaults (no clone —
+                // the result buffer is already in the empty state).
+                self.result.deadlock = Some(format!(
+                    "conditional buffer {i} depth 0: split stalls mid-sample, \
+                     exit decision {i} starved (min depth is 1 + decision-delay/II)"
+                ));
+                return;
+            }
+        }
 
-        for sec in 0..=target {
-            // ---- section issue: input ready + pipeline II ----
-            let mut start = arrival.max(match sec_prev[sec] {
-                None => 0,
-                Some(p) => p + t.sections[sec].ii,
-            });
+        let dma_in = cfg.dma_in_cycles(t.input_words);
+        let dma_out = cfg.dma_in_cycles(t.output_words).max(1);
 
-            // ---- conditional buffer admission (blocking) ----
-            // A slot in buffer `sec` must be free when split `sec`
-            // finishes writing the sample (entry time = start + lat);
-            // occupancy windows are [write, leave). A full buffer stalls
-            // the section's issue — and, transitively, every upstream
-            // buffer's drain.
-            if sec < n_exits {
-                let depth = t.exits[sec].buffer_depth;
-                loop {
-                    let write = start + t.sections[sec].lat;
-                    while let Some(&std::cmp::Reverse(leave)) = buffers[sec].peek() {
-                        if leave <= write {
-                            buffers[sec].pop();
-                        } else {
+        let traces = &mut self.result.traces;
+        let stall = &mut self.result.stall_cycles;
+        let peak_occ = &mut self.result.peak_buffer_occupancy;
+        let buffers = &mut self.buffers[..n_exits];
+        let sec_prev = &mut self.sec_prev;
+        let dec_prev = &mut self.dec_prev;
+        let path_arrivals = &mut self.path_arrivals;
+
+        let mut fault_rng = crate::util::Rng::new(faults.seed);
+        let mut dma_skew = 0u64; // cumulative injected DMA stalls
+
+        for s in 0..n {
+            let target = completes_at[s].min(n_sections - 1);
+
+            // ---- DMA in: batch streams continuously ----
+            if faults.dma_stall_prob > 0.0 && fault_rng.chance(faults.dma_stall_prob) {
+                dma_skew += faults.dma_stall_cycles;
+            }
+            let t_in = (s as u64 + 1) * dma_in + dma_skew;
+            traces[s].t_in = t_in;
+
+            let mut arrival = t_in;
+            let mut merge_arrival = 0u64;
+            let mut path = n_sections - 1;
+
+            for sec in 0..=target {
+                // ---- section issue: input ready + pipeline II ----
+                let mut start = arrival.max(match sec_prev[sec] {
+                    None => 0,
+                    Some(p) => p + t.sections[sec].ii,
+                });
+
+                // ---- conditional buffer admission (blocking) ----
+                // A slot in buffer `sec` must be free when split `sec`
+                // finishes writing the sample (entry time = start + lat);
+                // occupancy windows are [write, leave). A full buffer
+                // stalls the section's issue — and, transitively, every
+                // upstream buffer's drain.
+                if sec < n_exits {
+                    let depth = t.exits[sec].buffer_depth;
+                    loop {
+                        let write = start + t.sections[sec].lat;
+                        while let Some(leave) = buffers[sec].peek_min() {
+                            if leave <= write {
+                                buffers[sec].pop_min();
+                            } else {
+                                break;
+                            }
+                        }
+                        if buffers[sec].len() < depth {
                             break;
                         }
+                        // Stall until the earliest occupant leaves.
+                        let leave = buffers[sec].pop_min().unwrap();
+                        stall[sec] += leave - write;
+                        start += leave - write;
                     }
-                    if buffers[sec].len() < depth {
-                        break;
-                    }
-                    // Stall until the earliest occupant leaves.
-                    let std::cmp::Reverse(leave) = buffers[sec].pop().unwrap();
-                    stall[sec] += leave - write;
-                    start += leave - write;
                 }
+                sec_prev[sec] = Some(start);
+
+                // Entering section `sec` drains the sample from the
+                // upstream buffer one cycle after acceptance.
+                if sec > 0 {
+                    buffers[sec - 1].push(start + 1);
+                    peak_occ[sec - 1] = peak_occ[sec - 1].max(buffers[sec - 1].len());
+                }
+
+                if sec == n_sections - 1 {
+                    // Final section: straight to the merge.
+                    merge_arrival = start + t.sections[sec].lat;
+                    path = sec;
+                    break;
+                }
+
+                // Sample fully written to buffer `sec` + exit branch at:
+                let split_out = start + t.sections[sec].lat;
+
+                // ---- exit branch / decision `sec` ----
+                let dec_start = split_out.max(match dec_prev[sec] {
+                    None => 0,
+                    Some(p) => p + t.exits[sec].ii,
+                });
+                dec_prev[sec] = Some(dec_start);
+                let jitter = if faults.decision_jitter > 0 {
+                    fault_rng.below(faults.decision_jitter as usize + 1) as u64
+                } else {
+                    0
+                };
+                let t_dec = dec_start + t.exits[sec].lat + jitter;
+
+                if sec == target {
+                    // Early exit: the decision drops the buffered map in
+                    // one cycle; the exit classification heads to the
+                    // merge.
+                    buffers[sec].push(t_dec + 1);
+                    peak_occ[sec] = peak_occ[sec].max(buffers[sec].len());
+                    merge_arrival = t_dec;
+                    path = sec;
+                    break;
+                }
+                // Hard at this exit: the next section may accept the
+                // sample only once the decision has arrived (its own II
+                // applies in the next loop iteration, which also records
+                // the buffer drain).
+                arrival = t_dec;
             }
-            sec_prev[sec] = Some(start);
 
-            // Entering section `sec` drains the sample from the upstream
-            // buffer one cycle after acceptance.
-            if sec > 0 {
-                buffers[sec - 1].push(std::cmp::Reverse(start + 1));
-                peak_occ[sec - 1] = peak_occ[sec - 1].max(buffers[sec - 1].len());
-            }
-
-            if sec == n_sections - 1 {
-                // Final section: straight to the merge.
-                merge_arrival = start + t.sections[sec].lat;
-                path = sec;
-                break;
-            }
-
-            // Sample fully written to buffer `sec` + exit branch at:
-            let split_out = start + t.sections[sec].lat;
-
-            // ---- exit branch / decision `sec` ----
-            let dec_start = split_out.max(match dec_prev[sec] {
-                None => 0,
-                Some(p) => p + t.exits[sec].ii,
-            });
-            dec_prev[sec] = Some(dec_start);
-            let jitter = if faults.decision_jitter > 0 {
-                fault_rng.below(faults.decision_jitter as usize + 1) as u64
-            } else {
-                0
-            };
-            let t_dec = dec_start + t.exits[sec].lat + jitter;
-
-            if sec == target {
-                // Early exit: the decision drops the buffered map in one
-                // cycle; the exit classification heads to the merge.
-                buffers[sec].push(std::cmp::Reverse(t_dec + 1));
-                peak_occ[sec] = peak_occ[sec].max(buffers[sec].len());
-                merge_arrival = t_dec;
-                path = sec;
-                break;
-            }
-            // Hard at this exit: the next section may accept the sample
-            // only once the decision has arrived (its own II applies in
-            // the next loop iteration, which also records the buffer
-            // drain).
-            arrival = t_dec;
+            path_arrivals[path].push((merge_arrival, s));
+            traces[s].exit_stage = path;
+            traces[s].exited_early = path < n_sections - 1;
         }
 
-        path_arrivals[path].push((merge_arrival, s));
-        traces[s].exit_stage = path;
-        traces[s].exited_early = path < n_sections - 1;
-    }
-
-    // ---- exit merge + output DMA: serve in *arrival* order ----
-    // The merge arbitrates whichever path has a completed sample — this
-    // is exactly how early exits overtake hard samples in the batch
-    // (§III-C.4: results may return out of order; the merge keeps each
-    // sample's words contiguous, stalling the other paths meanwhile).
-    //
-    // §Perf: arrivals on each path are individually monotone (each
-    // decision chain and each section is FIFO), so instead of sorting
-    // the merged stream (O(n log n)) we k-way merge the per-path
-    // sub-sequences (O(n · paths), paths ≤ 5). Injected decision jitter
-    // breaks per-path monotonicity, so the fault path keeps the sort.
-    let mut merge_arrivals: Vec<(u64, usize)> = Vec::with_capacity(n);
-    if faults.decision_jitter > 0 {
-        for bucket in &path_arrivals {
-            merge_arrivals.extend_from_slice(bucket);
+        // ---- exit merge + output DMA: serve in *arrival* order ----
+        // The merge arbitrates whichever path has a completed sample —
+        // this is exactly how early exits overtake hard samples in the
+        // batch (§III-C.4: results may return out of order; the merge
+        // keeps each sample's words contiguous, stalling the other paths
+        // meanwhile).
+        //
+        // §Perf: arrivals on each path are individually monotone (each
+        // decision chain and each section is FIFO), so instead of
+        // sorting the merged stream (O(n log n)) we k-way merge the
+        // per-path sub-sequences (O(n · paths), paths ≤ 5). Injected
+        // decision jitter breaks per-path monotonicity, so the fault
+        // path keeps the sort.
+        let merge_arrivals = &mut self.merge_arrivals;
+        if faults.decision_jitter > 0 {
+            for bucket in path_arrivals.iter() {
+                merge_arrivals.extend_from_slice(bucket);
+            }
+            merge_arrivals.sort_unstable();
+        } else {
+            for bucket in path_arrivals.iter() {
+                debug_assert!(bucket.windows(2).all(|w| w[0].0 <= w[1].0));
+            }
+            let heads = &mut self.heads;
+            loop {
+                let mut pick: Option<usize> = None;
+                for (p, bucket) in path_arrivals.iter().enumerate() {
+                    if heads[p] >= bucket.len() {
+                        continue;
+                    }
+                    let cand = bucket[heads[p]];
+                    let better = match pick {
+                        None => true,
+                        Some(q) => cand < path_arrivals[q][heads[q]],
+                    };
+                    if better {
+                        pick = Some(p);
+                    }
+                }
+                let Some(p) = pick else { break };
+                merge_arrivals.push(path_arrivals[p][heads[p]]);
+                heads[p] += 1;
+            }
         }
-        merge_arrivals.sort_unstable();
-    } else {
-        for bucket in &path_arrivals {
-            debug_assert!(bucket.windows(2).all(|w| w[0].0 <= w[1].0));
+        let mut merge_free = 0u64;
+        let mut dma_out_free = 0u64;
+        let mut out_of_order = 0usize;
+        for &(arrival, s) in merge_arrivals.iter() {
+            let m_start = arrival.max(merge_free);
+            merge_free = m_start + t.merge_ii;
+            let out_start = merge_free.max(dma_out_free);
+            dma_out_free = out_start + dma_out;
+            traces[s].t_out = dma_out_free;
         }
-        let mut heads = vec![0usize; path_arrivals.len()];
-        loop {
-            let mut pick: Option<usize> = None;
-            for (p, bucket) in path_arrivals.iter().enumerate() {
-                if heads[p] >= bucket.len() {
+        // Out-of-order count: completions whose batch index goes
+        // backwards.
+        let mut max_seen: Option<usize> = None;
+        for &(_, s) in merge_arrivals.iter() {
+            if let Some(m) = max_seen {
+                if s < m {
+                    out_of_order += 1;
                     continue;
                 }
-                let cand = bucket[heads[p]];
-                let better = match pick {
-                    None => true,
-                    Some(q) => cand < path_arrivals[q][heads[q]],
-                };
-                if better {
-                    pick = Some(p);
-                }
             }
-            let Some(p) = pick else { break };
-            merge_arrivals.push(path_arrivals[p][heads[p]]);
-            heads[p] += 1;
+            max_seen = Some(max_seen.map_or(s, |m| m.max(s)));
         }
-    }
-    let mut merge_free = 0u64;
-    let mut dma_out_free = 0u64;
-    let mut out_of_order = 0usize;
-    for &(arrival, s) in &merge_arrivals {
-        let m_start = arrival.max(merge_free);
-        merge_free = m_start + t.merge_ii;
-        let out_start = merge_free.max(dma_out_free);
-        dma_out_free = out_start + dma_out;
-        traces[s].t_out = dma_out_free;
-    }
-    // Out-of-order count: completions whose batch index goes backwards.
-    let mut max_seen: Option<usize> = None;
-    for &(_, s) in &merge_arrivals {
-        if let Some(m) = max_seen {
-            if s < m {
-                out_of_order += 1;
-                continue;
-            }
-        }
-        max_seen = Some(max_seen.map_or(s, |m| m.max(s)));
-    }
 
-    let total_cycles = traces.iter().map(|t| t.t_out).max().unwrap_or(0);
-    SimResult {
-        traces,
-        total_cycles,
-        stall_cycles: stall,
-        peak_buffer_occupancy: peak_occ,
-        out_of_order,
-        deadlock: None,
+        self.result.out_of_order = out_of_order;
+        self.result.total_cycles =
+            self.result.traces.iter().map(|t| t.t_out).max().unwrap_or(0);
     }
 }
 
 /// Simulate a batch through a single-stage baseline design.
 pub fn simulate_baseline(t: &DesignTiming, cfg: &SimConfig, n: usize) -> SimResult {
+    simulate_baseline_faults(t, cfg, n, &FaultModel::NONE)
+}
+
+/// [`simulate_baseline`] under a [`FaultModel`]. Baselines have no
+/// decision datapath, so only the host-side DMA stalls apply — injected
+/// with the **same** RNG draw sequence `sim_core` uses, so robustness
+/// tests can compare a baseline and an EE design under the identical
+/// per-sample fault pattern (equal seeds, zero decision jitter ⇒ equal
+/// DMA-in skew on every sample).
+pub fn simulate_baseline_faults(
+    t: &DesignTiming,
+    cfg: &SimConfig,
+    n: usize,
+    faults: &FaultModel,
+) -> SimResult {
     let mut traces = vec![SampleTrace::default(); n];
     let dma_in = cfg.dma_in_cycles(t.input_words);
     let dma_out = cfg.dma_in_cycles(t.output_words).max(1);
@@ -550,10 +731,15 @@ pub fn simulate_baseline(t: &DesignTiming, cfg: &SimConfig, n: usize) -> SimResu
         .first()
         .map(|s| (s.ii, s.lat))
         .unwrap_or((1, 0));
+    let mut fault_rng = crate::util::Rng::new(faults.seed);
+    let mut dma_skew = 0u64;
     let mut prev_start = 0u64;
     let mut dma_out_free = 0u64;
     for s in 0..n {
-        let t_in = (s as u64 + 1) * dma_in;
+        if faults.dma_stall_prob > 0.0 && fault_rng.chance(faults.dma_stall_prob) {
+            dma_skew += faults.dma_stall_cycles;
+        }
+        let t_in = (s as u64 + 1) * dma_in + dma_skew;
         traces[s].t_in = t_in;
         let start = t_in.max(if s == 0 { 0 } else { prev_start + ii });
         prev_start = start;
@@ -756,6 +942,87 @@ mod tests {
         let r_shallow = simulate_multi(&t, &cfg, &shallow);
         let r_deep = simulate_multi(&t, &cfg, &deep);
         assert!(r_deep.total_cycles >= r_shallow.total_cycles);
+    }
+
+    #[test]
+    fn min_queue_pops_ascending_like_a_heap() {
+        let mut q = MinQueue::default();
+        for x in [7u64, 3, 9, 3, 1, 12, 5] {
+            q.push(x);
+        }
+        assert_eq!(q.len(), 7);
+        assert_eq!(q.peek_min(), Some(1));
+        let mut popped = Vec::new();
+        while let Some(x) = q.pop_min() {
+            popped.push(x);
+        }
+        assert_eq!(popped, vec![1, 3, 3, 5, 7, 9, 12]);
+    }
+
+    #[test]
+    fn scratch_reuse_bit_identical_to_fresh() {
+        // One scratch across many dissimilar batches (different sizes,
+        // section counts, stall regimes) must reproduce the allocating
+        // path bit for bit — including empty and deadlocked batches.
+        let cfg = SimConfig::default();
+        let mut scratch = SimScratch::new();
+        let mut tight = toy();
+        tight.set_cond_buffer_depth(0, 1);
+        let mut dead = toy3();
+        dead.set_cond_buffer_depth(1, 0);
+        let batches: Vec<(DesignTiming, Vec<usize>)> = vec![
+            (toy(), mixed(128, 0.3).iter().map(|&h| usize::from(h)).collect()),
+            (toy3(), (0..300).map(|i| i % 3).collect()),
+            (tight, mixed(256, 0.5).iter().map(|&h| usize::from(h)).collect()),
+            (toy(), Vec::new()),
+            (dead, vec![0, 1, 2]),
+            (toy3(), (0..64).map(|i| (i * 7) % 3).collect()),
+        ];
+        for (t, completes) in &batches {
+            let fresh = simulate_multi(t, &cfg, completes);
+            let reused = scratch.simulate_multi(t, &cfg, completes);
+            assert_eq!(fresh.total_cycles, reused.total_cycles);
+            assert_eq!(fresh.out_of_order, reused.out_of_order);
+            assert_eq!(fresh.stall_cycles, reused.stall_cycles);
+            assert_eq!(fresh.peak_buffer_occupancy, reused.peak_buffer_occupancy);
+            assert_eq!(fresh.deadlock, reused.deadlock);
+            assert_eq!(fresh.traces.len(), reused.traces.len());
+            for (a, b) in fresh.traces.iter().zip(&reused.traces) {
+                assert_eq!(a.t_in, b.t_in);
+                assert_eq!(a.t_out, b.t_out);
+                assert_eq!(a.exit_stage, b.exit_stage);
+                assert_eq!(a.exited_early, b.exited_early);
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_faults_inject_identical_dma_pattern_as_ee() {
+        // With zero decision jitter, equal seeds consume the fault RNG
+        // identically in both engines: every sample's DMA-in skew — and
+        // therefore t_in — matches, so robustness comparisons see the
+        // same injected fault stream.
+        let t = toy();
+        let cfg = SimConfig::default();
+        let faults = FaultModel {
+            decision_jitter: 0,
+            dma_stall_prob: 0.2,
+            dma_stall_cycles: 500,
+            seed: 0xFA17,
+        };
+        let n = 256;
+        let base = simulate_baseline_faults(&t, &cfg, n, &faults);
+        let ee = simulate_ee_faults(&t, &cfg, &vec![false; n], &faults);
+        for (a, b) in base.traces.iter().zip(&ee.traces) {
+            assert_eq!(a.t_in, b.t_in);
+        }
+        // And the stalls actually cost time.
+        let clean = simulate_baseline(&t, &cfg, n);
+        assert!(base.total_cycles > clean.total_cycles);
+        assert_eq!(
+            simulate_baseline_faults(&t, &cfg, n, &FaultModel::NONE).total_cycles,
+            clean.total_cycles
+        );
     }
 
     #[test]

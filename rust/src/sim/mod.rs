@@ -33,8 +33,8 @@ pub use drift::{
     WindowReport,
 };
 pub use engine::{
-    simulate_baseline, simulate_ee, simulate_ee_faults, simulate_multi,
-    simulate_multi_faults, DesignTiming, ExitTiming, FaultModel, SectionTiming,
-    SimResult,
+    simulate_baseline, simulate_baseline_faults, simulate_ee, simulate_ee_faults,
+    simulate_multi, simulate_multi_faults, DesignTiming, ExitTiming, FaultModel,
+    SectionTiming, SimResult, SimScratch,
 };
 pub use metrics::SimMetrics;

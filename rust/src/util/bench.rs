@@ -119,13 +119,84 @@ impl BenchLog {
         (out, secs)
     }
 
+    /// Record a derived, higher-is-better metric (samples/s,
+    /// proposals/s, runs/s…) so later runs can be regression-checked
+    /// against this one via [`BenchLog::check_against`].
+    pub fn metric(&mut self, name: &str, value: f64, unit: &str) {
+        println!("bench {name:<40} metric {value:>14.1} {unit}");
+        self.entries.push((
+            name.to_string(),
+            Json::obj(vec![
+                ("metric", Json::Num(value)),
+                ("unit", Json::str(unit)),
+            ]),
+        ));
+    }
+
     /// Write every recorded entry as one JSON object keyed by bench
-    /// name.
+    /// name, **merged** into any entries already present at `path`
+    /// (same-name entries are replaced, others survive) — so multiple
+    /// bench binaries can share one trajectory file and committed
+    /// baselines keep keys a given binary does not produce.
     pub fn save(&self, path: &str) -> anyhow::Result<()> {
-        let doc = Json::Obj(self.entries.iter().cloned().collect());
+        let mut map = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| super::json::parse(&text).ok())
+            .and_then(|doc| match doc {
+                Json::Obj(map) => Some(map),
+                _ => None,
+            })
+            .unwrap_or_default();
+        for (name, entry) in &self.entries {
+            map.insert(name.clone(), entry.clone());
+        }
+        let doc = Json::Obj(map);
         std::fs::write(path, doc.to_string_pretty())
             .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
         println!("bench json saved to {path}");
+        Ok(())
+    }
+
+    /// Compare this run's `metric` entries against a previously saved
+    /// baseline at `path`: any shared metric more than `tolerance`
+    /// (fraction, e.g. 0.25) below the baseline value is a regression
+    /// and fails the check. Metrics present in only one of the two runs
+    /// are skipped, so fresh baselines bootstrap gracefully.
+    pub fn check_against(&self, path: &str, tolerance: f64) -> anyhow::Result<()> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading bench baseline {path}: {e}"))?;
+        let doc = super::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing bench baseline {path}: {e}"))?;
+        let mut checked = 0usize;
+        let mut regressions = Vec::new();
+        for (name, entry) in &self.entries {
+            let Some(cur) = entry.get("metric").and_then(Json::as_f64) else {
+                continue;
+            };
+            let Some(base) = doc
+                .get(name)
+                .and_then(|e| e.get("metric"))
+                .and_then(Json::as_f64)
+            else {
+                continue;
+            };
+            checked += 1;
+            if cur < base * (1.0 - tolerance) {
+                regressions.push(format!(
+                    "{name}: {cur:.1} vs baseline {base:.1} ({:.0}% drop)",
+                    (1.0 - cur / base) * 100.0
+                ));
+            }
+        }
+        anyhow::ensure!(
+            regressions.is_empty(),
+            "bench regression vs {path}:\n  {}",
+            regressions.join("\n  ")
+        );
+        println!(
+            "bench check vs {path}: {checked} shared metric(s), none regressed >{:.0}%",
+            tolerance * 100.0
+        );
         Ok(())
     }
 }
@@ -146,6 +217,48 @@ mod tests {
         let (v, secs) = once("quick", || 7);
         assert_eq!(v, 7);
         assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn metric_merge_save_and_regression_check() {
+        let path = std::env::temp_dir().join(format!(
+            "atheena-benchmetric-{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+
+        let mut baseline = BenchLog::new();
+        baseline.metric("unit/throughput", 1000.0, "samples/s");
+        baseline.metric("unit/only-in-baseline", 5.0, "x/s");
+        baseline.save(&path).unwrap();
+
+        // A faster run passes; merge-save keeps the baseline-only key.
+        let mut fast = BenchLog::new();
+        fast.metric("unit/throughput", 1200.0, "samples/s");
+        fast.metric("unit/only-in-current", 7.0, "x/s");
+        fast.check_against(&path, 0.25).unwrap();
+        fast.save(&path).unwrap();
+        let doc = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap())
+            .unwrap();
+        assert!(doc.get("unit/only-in-baseline").is_some(), "merge keeps old keys");
+        assert!(doc.get("unit/only-in-current").is_some());
+        assert_eq!(
+            doc.get("unit/throughput")
+                .and_then(|e| e.get("metric"))
+                .and_then(Json::as_f64),
+            Some(1200.0)
+        );
+
+        // A >25% drop is a regression.
+        let mut slow = BenchLog::new();
+        slow.metric("unit/throughput", 100.0, "samples/s");
+        assert!(slow.check_against(&path, 0.25).is_err());
+        // Within tolerance passes.
+        let mut ok = BenchLog::new();
+        ok.metric("unit/throughput", 950.0, "samples/s");
+        ok.check_against(&path, 0.25).unwrap();
+
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -1,0 +1,170 @@
+//! Deterministic scoped-thread executor — the crate-wide parallelism
+//! primitive behind every hot loop (TAP sweeps, anneal restarts, the
+//! operating-envelope q-grid, drift-window statistics, profiler split
+//! statistics).
+//!
+//! Contract
+//! --------
+//! [`run_ordered`] executes `n` independent tasks and returns their
+//! results **in task order**, so a parallel run is bit-identical to the
+//! sequential `(0..n).map(task).collect()` as long as each task is a
+//! pure function of its index (no shared mutable state, no RNG sharing
+//! across tasks). Workers drain a shared atomic counter, so scheduling
+//! is dynamic but the *output* never depends on it.
+//!
+//! Nesting: a task that itself calls into the executor (e.g. an anneal
+//! whose restarts are parallelized, invoked from a parallel sweep) runs
+//! its inner tasks sequentially on the calling worker instead of
+//! spawning a second generation of threads. This keeps the thread count
+//! bounded by `available_parallelism` without changing any result —
+//! sequential execution is always a legal schedule.
+//!
+//! [`run_ordered_with`] additionally gives every worker a private,
+//! lazily-created scratch state (e.g. a
+//! [`SimScratch`](crate::sim::SimScratch)) reused across all tasks that
+//! worker runs — the zero-allocation loop pattern. The state must not
+//! influence results (it is scratch, not input), which each caller's
+//! bit-identicality property test enforces.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+thread_local! {
+    static IN_EXECUTOR: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Whether the current thread is already an executor worker (nested
+/// calls run sequentially).
+pub fn in_executor_worker() -> bool {
+    IN_EXECUTOR.with(|f| f.get())
+}
+
+/// Run `n` independent tasks, returning results in task order —
+/// bit-identical to `(0..n).map(task).collect()`.
+pub fn run_ordered<T, F>(n: usize, task: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    run_ordered_with(n, || (), |_, i| task(i))
+}
+
+/// [`run_ordered`] with a per-worker scratch state: `init` is called
+/// once per worker (or once total on the sequential path) and the state
+/// is threaded through every task that worker executes.
+pub fn run_ordered_with<S, T, I, F>(n: usize, init: I, task: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(n);
+    if workers <= 1 || n == 1 || in_executor_worker() {
+        let mut state = init();
+        return (0..n).map(|i| task(&mut state, i)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                IN_EXECUTOR.with(|f| f.set(true));
+                let mut state = init();
+                let mut local: Vec<(usize, T)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, task(&mut state, i)));
+                }
+                if !local.is_empty() {
+                    done.lock().unwrap().append(&mut local);
+                }
+            });
+        }
+    });
+    let mut done = done.into_inner().unwrap();
+    debug_assert_eq!(done.len(), n, "every task must produce a result");
+    done.sort_unstable_by_key(|&(i, _)| i);
+    done.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn work(i: usize) -> u64 {
+        // Deterministic, non-trivial per-index function.
+        let mut x = i as u64 ^ 0x9E37_79B9;
+        for _ in 0..8 {
+            x = x.wrapping_mul(0x2545_F491_4F6C_DD1D).rotate_left(17) ^ i as u64;
+        }
+        x
+    }
+
+    #[test]
+    fn zero_and_one_tasks() {
+        let none: Vec<u64> = run_ordered(0, work);
+        assert!(none.is_empty());
+        let one = run_ordered(1, work);
+        assert_eq!(one, vec![work(0)]);
+    }
+
+    #[test]
+    fn many_more_tasks_than_cores_in_order() {
+        // Tasks ≫ cores: results must land in task order, identical to
+        // the sequential map.
+        let n = 1009;
+        let par = run_ordered(n, work);
+        let seq: Vec<u64> = (0..n).map(work).collect();
+        assert_eq!(par, seq);
+    }
+
+    #[test]
+    fn per_worker_state_reused_without_changing_results() {
+        // The scratch state must not leak into results: a worker-local
+        // accumulator used as *scratch* (cleared per task) gives the same
+        // answers as the stateless path.
+        let n = 257;
+        let with_state = run_ordered_with(
+            n,
+            Vec::<u64>::new,
+            |buf, i| {
+                buf.clear();
+                buf.extend((0..=i as u64).map(|k| k * k));
+                buf.iter().sum::<u64>()
+            },
+        );
+        let stateless: Vec<u64> = (0..n)
+            .map(|i| (0..=i as u64).map(|k| k * k).sum())
+            .collect();
+        assert_eq!(with_state, stateless);
+    }
+
+    #[test]
+    fn nested_invocations_run_and_agree() {
+        // A task that itself calls the executor: the inner call takes
+        // the sequential path (no thread explosion) and the combined
+        // output is identical to a fully sequential evaluation.
+        let outer = 13;
+        let inner = 37;
+        let par = run_ordered(outer, |i| {
+            run_ordered(inner, move |j| work(i * inner + j))
+                .into_iter()
+                .sum::<u64>()
+        });
+        let seq: Vec<u64> = (0..outer)
+            .map(|i| (0..inner).map(|j| work(i * inner + j)).sum())
+            .collect();
+        assert_eq!(par, seq);
+    }
+}

@@ -1,6 +1,8 @@
-//! Offline-build utilities: PRNG, JSON, tiny property-testing harness.
+//! Offline-build utilities: PRNG, JSON, deterministic parallel
+//! executor, tiny property-testing harness.
 
 pub mod bench;
+pub mod exec;
 pub mod json;
 pub mod proptest;
 pub mod rng;

@@ -26,20 +26,31 @@
 //! * under a step drift in sample difficulty, the `Controller` policy
 //!   pulls the realized exit-rate vector back to within 2% of the
 //!   design reach and recovers throughput to within 5% of the no-drift
-//!   run — while the fixed policy demonstrably degrades.
+//!   run — while the fixed policy demonstrably degrades,
+//! * the performance layer changes nothing: parallel anneal restarts
+//!   (`anneal` vs `anneal_sequential`), the parallel operating-envelope
+//!   q-grid (`OperatingEnvelope::sweep` vs `sweep_sequential`), the
+//!   parallel drift-window pre-pass, and `SimScratch` reuse are each
+//!   **bit-identical** to their sequential / freshly-allocating
+//!   reference paths.
 
 use std::path::PathBuf;
 
-use atheena::coordinator::pipeline::{Realized, Toolflow, DESIGN_SCHEMA_VERSION};
+use atheena::coordinator::pipeline::{
+    OperatingEnvelope, Realized, Toolflow, DESIGN_SCHEMA_VERSION,
+};
 use atheena::coordinator::toolflow::{synthetic_hard_flags, ToolflowOptions};
-use atheena::dse::anneal_call_count;
+use atheena::dse::{
+    anneal, anneal_call_count, anneal_sequential, AnnealConfig, Problem, ProblemKind,
+};
 use atheena::ee::decision::{Controller, Fixed};
 use atheena::ir::network::testnet;
+use atheena::ir::Cdfg;
 use atheena::resources::{Board, ResourceVec};
 use atheena::runtime::DesignCache;
 use atheena::sim::{
     design_operating_point, simulate_closed_loop, simulate_multi, ClosedLoopConfig,
-    DesignTiming, DriftScenario, ExitTiming, SectionTiming, SimConfig,
+    DesignTiming, DriftScenario, ExitTiming, SectionTiming, SimConfig, SimScratch,
 };
 use atheena::tap::{combine, combine_multi, TapCurve, TapPoint};
 use atheena::util::proptest::{check, gen_range, gen_vec, prop_assert};
@@ -559,4 +570,201 @@ fn stale_schema_cache_entry_evicted_and_rerealized() {
     assert!(path.is_file(), "fresh artifact must be re-saved");
 
     let _ = std::fs::remove_dir_all(dir);
+}
+
+// ---------------------------------------------------------------------
+// Performance-layer bit-identicality (PR: hot search loop)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_anneal_parallel_restarts_bit_identical_to_sequential() {
+    // Parallel restarts reduce with a deterministic tie-break on
+    // (throughput, restart index): for random seeds, problem kinds, and
+    // budgets, `anneal` must reproduce `anneal_sequential` bit for bit —
+    // same chosen foldings, same II/resources, same float bits.
+    let _guard = dse_guard();
+    let board = Board::zc706();
+    check(3, |r| {
+        let net = if r.chance(0.5) {
+            testnet::blenet_like()
+        } else {
+            testnet::three_exit()
+        };
+        let kind = match r.below(3) {
+            0 => ProblemKind::Baseline,
+            1 => ProblemKind::Stage(0),
+            _ => ProblemKind::Stage(1),
+        };
+        let cdfg = match kind {
+            ProblemKind::Baseline => Cdfg::lower_baseline(&net),
+            _ => Cdfg::lower(&net, 1),
+        };
+        let budget = board.budget(0.25 + 0.75 * r.f64());
+        let problem = Problem::for_kind(kind, cdfg, budget, board.clock_hz);
+        let cfg = AnnealConfig {
+            iterations: 300,
+            restarts: 3,
+            seed: r.next_u64(),
+            ..Default::default()
+        };
+        let par = anneal(&problem, &cfg);
+        let seq = anneal_sequential(&problem, &cfg);
+        prop_assert(par.ii == seq.ii, "II diverged")?;
+        prop_assert(par.resources == seq.resources, "resources diverged")?;
+        prop_assert(par.feasible == seq.feasible, "feasibility diverged")?;
+        prop_assert(
+            par.iterations_run == seq.iterations_run,
+            "iteration counts diverged",
+        )?;
+        prop_assert(
+            par.throughput.to_bits() == seq.throughput.to_bits(),
+            "throughput bits diverged",
+        )?;
+        prop_assert(
+            par.mapping.foldings == seq.mapping.foldings,
+            "chosen foldings diverged",
+        )
+    });
+}
+
+#[test]
+fn prop_envelope_parallel_q_grid_bit_identical_to_sequential() {
+    // The operating-envelope q-grid runs each point on the executor
+    // with per-worker SimScratch reuse; for random reach vectors the
+    // result must match the sequential single-scratch reference bitwise.
+    let t = closed_loop_timing();
+    check(25, |r| {
+        let r0 = 0.05 + 0.9 * r.f64();
+        let r1 = r0 * r.f64();
+        let reach = [r0, r1];
+        let par = OperatingEnvelope::sweep(&t, &reach, 125e6);
+        let seq = OperatingEnvelope::sweep_sequential(&t, &reach, 125e6);
+        prop_assert(
+            par.design_p.to_bits() == seq.design_p.to_bits(),
+            "design_p diverged",
+        )?;
+        prop_assert(par.points.len() == seq.points.len(), "grid sizes diverged")?;
+        for (a, b) in par.points.iter().zip(&seq.points) {
+            prop_assert(a.q.to_bits() == b.q.to_bits(), "q diverged")?;
+            prop_assert(
+                a.throughput_sps.to_bits() == b.throughput_sps.to_bits(),
+                "throughput bits diverged",
+            )?;
+            prop_assert(a.stall_cycles == b.stall_cycles, "stall cycles diverged")?;
+            prop_assert(a.deadlock == b.deadlock, "deadlock flag diverged")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_drift_window_prepass_bit_identical_to_sequential() {
+    // The closed-loop window reports come from a parallel pre-pass over
+    // the per-window statistics; replaying the original fused sequential
+    // loop over the same traces/decisions must give identical reports.
+    let t = closed_loop_timing();
+    let cfg = SimConfig::default();
+    check(10, |r| {
+        let r0 = 0.2 + 0.5 * r.f64();
+        let reach = [r0, r0 * 0.4];
+        let run = ClosedLoopConfig {
+            samples: 4096,
+            window: 512,
+            seed: r.next_u64(),
+        };
+        let drift = DriftScenario::Step { at: 0.3, to: 1.8 };
+        let mut policy = Fixed::new(design_operating_point(&reach));
+        let rep = simulate_closed_loop(&t, &cfg, &mut policy, &drift, &run);
+
+        let n = run.samples;
+        let n_exits = t.exits.len();
+        let window = run.window;
+        let mut prev_out = 0u64;
+        let mut start = 0usize;
+        let mut w = 0usize;
+        while start < n {
+            let end = (start + window).min(n);
+            let len = end - start;
+            let max_out = rep.sim.traces[start..end]
+                .iter()
+                .map(|tr| tr.t_out)
+                .max()
+                .unwrap_or(prev_out)
+                .max(prev_out);
+            let span = max_out - prev_out;
+            let throughput_sps = if span == 0 || rep.sim.deadlock.is_some() {
+                0.0
+            } else {
+                len as f64 * cfg.clock_hz / span as f64
+            };
+            let mut counts = vec![0usize; n_exits + 1];
+            for &depth in &rep.completes_at[start..end] {
+                counts[depth.min(n_exits)] += 1;
+            }
+            let exit_rates: Vec<f64> =
+                counts.iter().map(|&c| c as f64 / len as f64).collect();
+            let reach_w: Vec<f64> = (0..n_exits)
+                .map(|i| {
+                    rep.completes_at[start..end]
+                        .iter()
+                        .filter(|&&depth| depth > i)
+                        .count() as f64
+                        / len as f64
+                })
+                .collect();
+
+            let got = &rep.windows[w];
+            prop_assert(got.start == start && got.len == len, "window bounds diverged")?;
+            prop_assert(
+                got.throughput_sps.to_bits() == throughput_sps.to_bits(),
+                "window throughput bits diverged",
+            )?;
+            prop_assert(
+                got.exit_rates.iter().zip(&exit_rates).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "window exit rates diverged",
+            )?;
+            prop_assert(
+                got.reach.iter().zip(&reach_w).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "window reach diverged",
+            )?;
+            prev_out = max_out;
+            start = end;
+            w += 1;
+        }
+        prop_assert(w == rep.windows.len(), "window count diverged")
+    });
+}
+
+#[test]
+fn prop_sim_scratch_reuse_bit_identical() {
+    // A single SimScratch reused across random batches (varying sizes
+    // and routing) must reproduce the allocating simulate_multi path bit
+    // for bit — history in the scratch never leaks into a result.
+    let t = closed_loop_timing();
+    let cfg = SimConfig::default();
+    let mut scratch = SimScratch::new();
+    check(50, |r| {
+        let n = gen_range(r, 0, 2048);
+        let completes: Vec<usize> = (0..n).map(|_| r.below(3)).collect();
+        let fresh = simulate_multi(&t, &cfg, &completes);
+        let reused = scratch.simulate_multi(&t, &cfg, &completes);
+        prop_assert(fresh.total_cycles == reused.total_cycles, "total cycles diverged")?;
+        prop_assert(fresh.out_of_order == reused.out_of_order, "ooo diverged")?;
+        prop_assert(fresh.stall_cycles == reused.stall_cycles, "stalls diverged")?;
+        prop_assert(
+            fresh.peak_buffer_occupancy == reused.peak_buffer_occupancy,
+            "peak occupancy diverged",
+        )?;
+        prop_assert(fresh.deadlock == reused.deadlock, "deadlock diverged")?;
+        for (a, b) in fresh.traces.iter().zip(&reused.traces) {
+            prop_assert(
+                a.t_in == b.t_in
+                    && a.t_out == b.t_out
+                    && a.exit_stage == b.exit_stage
+                    && a.exited_early == b.exited_early,
+                "trace diverged",
+            )?;
+        }
+        Ok(())
+    });
 }
