@@ -1,61 +1,113 @@
-//! DSE benchmarks — the Fig. 9a generator's cost: simulated-annealing
-//! throughput per problem kind and full TAP-sweep wall time.
+//! DSE benchmarks — the Fig. 9a generator's cost (simulated-annealing
+//! throughput per problem kind, full TAP-sweep wall time) plus the
+//! resource-budget frontier sweep of `dse::pareto`.
 //!
-//!     cargo bench --bench bench_dse
+//!     cargo bench --bench bench_dse [-- --quick] [-- --save-json] [-- --check]
+//!
+//! `--save-json` merge-saves the recorded entries (including the
+//! `dse/pareto/*` metrics) into `BENCH_dse.json` via `BenchLog`;
+//! `--check` gates shared metrics against that committed baseline with
+//! the standard 25% tolerance.
 
 use atheena::dse::{
-    anneal, sweep_budgets, sweep_budgets_parallel, AnnealConfig, Problem, ProblemKind,
-    SweepConfig,
+    anneal, sweep_budgets, sweep_budgets_parallel, sweep_frontier, AnnealConfig,
+    ParetoConfig, Problem, ProblemKind, SweepConfig,
 };
 use atheena::ir::network::testnet;
 use atheena::ir::Cdfg;
 use atheena::resources::Board;
-use atheena::util::bench::{bench, once};
+use atheena::util::bench::BenchLog;
 
-fn main() {
+const TOLERANCE: f64 = 0.25;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let save = args.iter().any(|a| a == "--save-json");
+    let check = args.iter().any(|a| a == "--check");
+
     let net = testnet::blenet_like();
     let board = Board::zc706();
+    let mut log = BenchLog::new();
 
     // Single-anneal latency per problem kind (fixed schedule).
+    let iterations = if quick { 1_000 } else { 4_000 };
     let cfg = AnnealConfig {
-        iterations: 4_000,
+        iterations,
         restarts: 1,
         ..Default::default()
     };
     let base_cdfg = Cdfg::lower_baseline(&net);
     let ee_cdfg = Cdfg::lower(&net, 8);
+    let iters = if quick { 5 } else { 10 };
 
     let p = Problem::baseline(base_cdfg.clone(), board.resources, board.clock_hz);
-    let s = bench("anneal/baseline/4k-iters", 1, 10, || anneal(&p, &cfg));
+    let s = log.bench("anneal/baseline/fixed-iters", 1, iters, || anneal(&p, &cfg));
     println!(
         "  -> {:.0} anneal-iterations/s",
-        4_000.0 * s.per_second()
+        iterations as f64 * s.per_second()
     );
 
     let p1 = Problem::stage(0, ee_cdfg.clone(), board.resources, board.clock_hz);
-    bench("anneal/stage1/4k-iters", 1, 10, || anneal(&p1, &cfg));
+    log.bench("anneal/stage1/fixed-iters", 1, iters, || anneal(&p1, &cfg));
     let p2 = Problem::stage(1, ee_cdfg.clone(), board.resources, board.clock_hz);
-    bench("anneal/stage2/4k-iters", 1, 10, || anneal(&p2, &cfg));
+    log.bench("anneal/stage2/fixed-iters", 1, iters, || anneal(&p2, &cfg));
 
-    // Full Fig. 9a-style sweep (default fractions ladder).
-    let sweep = SweepConfig::default();
-    once("sweep/fig9a-baseline-curve", || {
-        sweep_budgets(ProblemKind::Baseline, &base_cdfg, &board, &sweep)
+    // Resource-budget frontier sweep (dse::pareto): one anneal per
+    // budget scaling on the deterministic executor, dominance filter on
+    // top. The metric participates in the --check regression gate.
+    let pcfg = ParetoConfig {
+        scalings: if quick {
+            SweepConfig::quick().fractions
+        } else {
+            SweepConfig::default().fractions
+        },
+        anneal: AnnealConfig {
+            iterations,
+            restarts: 2,
+            ..Default::default()
+        },
+    };
+    let s = log.bench("dse/pareto/frontier-sweep", 1, iters.min(5), || {
+        sweep_frontier(ProblemKind::Baseline, &base_cdfg, &board, &pcfg)
     });
-    once("sweep/fig9a-stage1+stage2-curves", || {
-        let a = sweep_budgets(ProblemKind::Stage(0), &ee_cdfg, &board, &sweep);
-        let b = sweep_budgets(ProblemKind::Stage(1), &ee_cdfg, &board, &sweep);
-        (a, b)
-    });
+    log.metric(
+        "dse/pareto/anneals_per_s",
+        pcfg.scalings.len() as f64 * s.per_second(),
+        "anneals/s",
+    );
 
-    // Scoped-thread sweep (the pipeline's `Curves` stage): same curves,
-    // one anneal task per budget fraction drained by a worker pool.
-    once("sweep/fig9a-baseline-curve/parallel", || {
-        sweep_budgets_parallel(ProblemKind::Baseline, &base_cdfg, &board, &sweep)
-    });
-    once("sweep/fig9a-stage1+stage2-curves/parallel", || {
-        let a = sweep_budgets_parallel(ProblemKind::Stage(0), &ee_cdfg, &board, &sweep);
-        let b = sweep_budgets_parallel(ProblemKind::Stage(1), &ee_cdfg, &board, &sweep);
-        (a, b)
-    });
+    // Full Fig. 9a-style sweeps are the expensive reference runs; skip
+    // them in the CI smoke configuration.
+    if !quick {
+        let sweep = SweepConfig::default();
+        log.once("sweep/fig9a-baseline-curve", || {
+            sweep_budgets(ProblemKind::Baseline, &base_cdfg, &board, &sweep)
+        });
+        log.once("sweep/fig9a-stage1+stage2-curves", || {
+            let a = sweep_budgets(ProblemKind::Stage(0), &ee_cdfg, &board, &sweep);
+            let b = sweep_budgets(ProblemKind::Stage(1), &ee_cdfg, &board, &sweep);
+            (a, b)
+        });
+
+        // Scoped-thread sweep (the pipeline's `Curves` stage): same
+        // curves, one anneal task per budget fraction drained by a
+        // worker pool.
+        log.once("sweep/fig9a-baseline-curve/parallel", || {
+            sweep_budgets_parallel(ProblemKind::Baseline, &base_cdfg, &board, &sweep)
+        });
+        log.once("sweep/fig9a-stage1+stage2-curves/parallel", || {
+            let a = sweep_budgets_parallel(ProblemKind::Stage(0), &ee_cdfg, &board, &sweep);
+            let b = sweep_budgets_parallel(ProblemKind::Stage(1), &ee_cdfg, &board, &sweep);
+            (a, b)
+        });
+    }
+
+    if check {
+        log.check_against("BENCH_dse.json", TOLERANCE)?;
+    }
+    if save {
+        log.save("BENCH_dse.json")?;
+    }
+    Ok(())
 }

@@ -28,8 +28,9 @@ pub mod toolflow;
 pub use batch::{BatchHost, BatchReport, PjrtOracle};
 pub use batcher::DynamicBatcher;
 pub use pipeline::{
-    fingerprint, Combined, CombinedChoice, Curves, Lowered, Measured, OperatingEnvelope,
-    Realized, RealizedBaseline, RealizedDesign, Toolflow,
+    fingerprint, pack_designs, Combined, CombinedChoice, Curves, DesignFrontier, Lowered,
+    Measured, OperatingEnvelope, Packing, Realized, RealizedBaseline, RealizedDesign,
+    ResourceMatch, Toolflow,
 };
 pub use server::{ServePolicy, Server, ServerConfig, ServerStats};
 pub use toolflow::{

@@ -39,11 +39,12 @@
 //! bit-identical to the sequential path (`sweep_sequential`).
 
 use crate::dse::{
-    assemble_sweep, plan_sweep, run_tasks_parallel, AnnealResult, ProblemKind, SweepTask,
+    assemble_sweep, plan_sweep, run_tasks_parallel, AnnealResult, FrontierPoint,
+    ParetoFrontier, ProblemKind, SweepTask,
 };
 use crate::hls::{generate_design, stitch, DesignManifest};
 use crate::ir::{Cdfg, Network, StageId};
-use crate::resources::ResourceVec;
+use crate::resources::{Board, ResourceVec};
 use crate::runtime::DesignCache;
 use crate::sdf::{buffering, Folding, HwMapping};
 use crate::sim::{DesignTiming, SimConfig, SimMetrics, SimScratch};
@@ -61,7 +62,10 @@ use super::toolflow::{
 /// per-stage curve vectors, `MultiStageDesign` combined records, and
 /// per-exit `cond_buffer_depths`. v3: per-design [`OperatingEnvelope`]
 /// (the Fig. 8-style p/q-mismatch sweep) persisted with the artifact.
-pub const DESIGN_SCHEMA_VERSION: u32 = 3;
+/// v4: the throughput/area [`DesignFrontier`] (baseline + EE Pareto
+/// fronts, the resource-matched comparison's data) persisted with the
+/// artifact.
+pub const DESIGN_SCHEMA_VERSION: u32 = 4;
 
 // ---------------------------------------------------------------------
 // Operating envelope
@@ -259,6 +263,132 @@ impl OperatingEnvelope {
         }
         anyhow::ensure!(!points.is_empty(), "operating envelope holds no points");
         Ok(OperatingEnvelope { design_p, points })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Throughput/area frontier + co-residency packing
+// ---------------------------------------------------------------------
+
+/// The paper's Fig. 9/10 frontier data, persisted with the design
+/// artifact (schema v4): the baseline's and the combined EE designs'
+/// non-dominated (throughput, area-norm) points, both normed against
+/// the full board. Pure post-processing of already-annealed designs —
+/// computing it performs **zero** anneal calls, so the warm-cache
+/// contract extends to frontier reports unchanged.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DesignFrontier {
+    /// Frontier of the realized fpgaConvNet baselines (predicted
+    /// throughput vs area norm); `source` indexes `Realized::baselines`.
+    pub baseline: ParetoFrontier,
+    /// Frontier of the realized combined EE designs (throughput at the
+    /// design reach vs area norm); `source` indexes `Realized::designs`.
+    pub ee: ParetoFrontier,
+}
+
+/// The resource-matched comparison (the "46% of its resources" claim):
+/// the cheapest EE frontier point whose throughput is within `slack` of
+/// the baseline frontier's maximum.
+#[derive(Clone, Copy, Debug)]
+pub struct ResourceMatch<'a> {
+    pub ee: &'a FrontierPoint,
+    pub baseline: &'a FrontierPoint,
+    /// Throughput the EE point had to meet: `(1 - slack) * baseline`.
+    pub target: f64,
+    /// EE area norm over baseline area norm — the headline fraction.
+    pub fraction: f64,
+}
+
+impl DesignFrontier {
+    /// Resource-matched lookup at a throughput slack (0.05 = "within 5%
+    /// of the baseline's best"). `None` when either frontier is empty
+    /// or no EE point reaches the target.
+    pub fn resource_matched(&self, slack: f64) -> Option<ResourceMatch<'_>> {
+        let baseline = self.baseline.best_throughput()?;
+        let target = baseline.throughput * (1.0 - slack);
+        let ee = self.ee.min_area_at(target)?;
+        Some(ResourceMatch {
+            ee,
+            baseline,
+            target,
+            fraction: ee.utilization / baseline.utilization,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("baseline", self.baseline.to_json()),
+            ("ee", self.ee.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<DesignFrontier> {
+        Ok(DesignFrontier {
+            baseline: ParetoFrontier::from_json(v.req("baseline")?)?,
+            ee: ParetoFrontier::from_json(v.req("ee")?)?,
+        })
+    }
+}
+
+/// One board-level packing of multiple realized designs — the
+/// co-residency step: several operating points sharing one FPGA budget
+/// (the first real multi-tenant / sharding workload of the toolflow).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Packing {
+    pub budget: ResourceVec,
+    /// Indices into the candidate design list, in pick order.
+    pub picked: Vec<usize>,
+    pub total_resources: ResourceVec,
+    /// Sum of the residents' design-point throughputs.
+    pub total_throughput: f64,
+}
+
+impl Packing {
+    /// Fraction of the packing budget the residents occupy.
+    pub fn utilization(&self) -> f64 {
+        self.total_resources.utilization(&self.budget)
+    }
+}
+
+/// Greedy co-residency packing. Candidates are visited in descending
+/// throughput *density* (throughput per unit of area norm against the
+/// budget), tie-broken by smaller area then lower index, and each is
+/// admitted when it still fits the remaining budget. The running total
+/// uses checked arithmetic, so an adversarial candidate set can never
+/// wrap past the budget check.
+///
+/// Deterministic by construction: a pure, sequential function of
+/// `(candidates, budget)` — executor worker counts cannot affect it
+/// (property-tested in `tests/pareto_props.rs`).
+pub fn pack_designs(candidates: &[(f64, ResourceVec)], budget: &ResourceVec) -> Packing {
+    let util = |r: &ResourceVec| r.utilization(budget).max(1e-12);
+    let mut order: Vec<usize> = (0..candidates.len()).collect();
+    order.sort_by(|&a, &b| {
+        let da = candidates[a].0 / util(&candidates[a].1);
+        let db = candidates[b].0 / util(&candidates[b].1);
+        db.total_cmp(&da)
+            .then(util(&candidates[a].1).total_cmp(&util(&candidates[b].1)))
+            .then(a.cmp(&b))
+    });
+    let mut picked = Vec::new();
+    let mut total = ResourceVec::ZERO;
+    let mut total_throughput = 0.0;
+    for i in order {
+        let (thr, res) = &candidates[i];
+        let Ok(next) = total.checked_add(res) else {
+            continue;
+        };
+        if next.fits_in(budget) {
+            total = next;
+            total_throughput += *thr;
+            picked.push(i);
+        }
+    }
+    Packing {
+        budget: *budget,
+        picked,
+        total_resources: total,
+        total_throughput,
     }
 }
 
@@ -548,6 +678,7 @@ impl Combined {
         }
         anyhow::ensure!(!designs.is_empty(), "no feasible combined design");
 
+        let frontier = Combined::realize_frontier(board, &baselines, &designs);
         Ok(Realized {
             net: self.net,
             opts: self.opts,
@@ -556,7 +687,53 @@ impl Combined {
             stage_curves: self.stage_curves,
             baselines,
             designs,
+            frontier,
         })
+    }
+
+    /// Extract the throughput/area [`DesignFrontier`] from realized
+    /// designs — the resource-budget artifact persisted with schema v4.
+    /// Pure post-processing: baseline points pair predicted throughput
+    /// with the realized area norm, EE points pair the Eq. 1 design-
+    /// reach throughput with the sized design's area norm, and both
+    /// sets are dominance-filtered. Zero anneal calls, so a warm cache
+    /// keeps the zero-anneal contract for frontier reports.
+    pub fn realize_frontier(
+        board: &Board,
+        baselines: &[RealizedBaseline],
+        designs: &[RealizedDesign],
+    ) -> DesignFrontier {
+        let worst_ii = |t: &DesignTiming| -> u64 {
+            t.sections.iter().map(|s| s.ii).max().unwrap_or(1)
+        };
+        let base_pts = baselines
+            .iter()
+            .enumerate()
+            .map(|(i, b)| FrontierPoint {
+                budget_fraction: b.budget_fraction,
+                ii: worst_ii(&b.timing),
+                throughput: b.throughput_predicted,
+                resources: b.total_resources,
+                utilization: b.total_resources.utilization(&board.resources),
+                source: i,
+            })
+            .collect();
+        let ee_pts = designs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| FrontierPoint {
+                budget_fraction: d.budget_fraction,
+                ii: worst_ii(&d.timing),
+                throughput: d.combined.throughput_at_design,
+                resources: d.total_resources,
+                utilization: d.total_resources.utilization(&board.resources),
+                source: i,
+            })
+            .collect();
+        DesignFrontier {
+            baseline: ParetoFrontier::from_points(base_pts),
+            ee: ParetoFrontier::from_points(ee_pts),
+        }
     }
 }
 
@@ -601,6 +778,8 @@ pub struct Realized {
     pub stage_curves: Vec<TapCurve>,
     pub baselines: Vec<RealizedBaseline>,
     pub designs: Vec<RealizedDesign>,
+    /// Persisted throughput/area frontier (baseline + EE, schema v4).
+    pub frontier: DesignFrontier,
 }
 
 impl Realized {
@@ -617,6 +796,20 @@ impl Realized {
                 .throughput_at_design
                 .total_cmp(&b.combined.throughput_at_design)
         })
+    }
+
+    /// Greedily co-reside this artifact's realized EE designs onto one
+    /// board budget — the multi-tenant packing step behind
+    /// `atheena pack`. Candidates are the realized designs' (design-
+    /// reach throughput, sized total resources) pairs; `Packing::picked`
+    /// indexes `self.designs`.
+    pub fn pack(&self, budget: &ResourceVec) -> Packing {
+        let candidates: Vec<(f64, ResourceVec)> = self
+            .designs
+            .iter()
+            .map(|d| (d.combined.throughput_at_design, d.total_resources))
+            .collect();
+        pack_designs(&candidates, budget)
     }
 
     /// Simulated board measurement (the paper's §IV-A loop): every
@@ -694,6 +887,7 @@ impl Realized {
             stage_curves: self.stage_curves.clone(),
             baseline_designs,
             designs,
+            frontier: self.frontier.clone(),
         })
     }
 
@@ -758,6 +952,7 @@ impl Realized {
             ),
             ("baselines", Json::arr(baselines)),
             ("designs", Json::arr(designs)),
+            ("frontier", self.frontier.to_json()),
         ])
     }
 
@@ -908,6 +1103,20 @@ impl Realized {
         }
         anyhow::ensure!(!designs.is_empty(), "design artifact holds no designs");
 
+        let frontier = DesignFrontier::from_json(doc.req("frontier")?)?;
+        for p in &frontier.baseline.points {
+            anyhow::ensure!(
+                p.source < baselines.len(),
+                "frontier baseline point links outside the artifact's baselines"
+            );
+        }
+        for p in &frontier.ee.points {
+            anyhow::ensure!(
+                p.source < designs.len(),
+                "frontier EE point links outside the artifact's designs"
+            );
+        }
+
         Ok(Realized {
             net: net.clone(),
             opts: opts.clone(),
@@ -916,6 +1125,7 @@ impl Realized {
             stage_curves,
             baselines,
             designs,
+            frontier,
         })
     }
 
@@ -984,6 +1194,8 @@ pub struct Measured {
     pub stage_curves: Vec<TapCurve>,
     pub baseline_designs: Vec<BaselineDesign>,
     pub designs: Vec<ChosenDesign>,
+    /// Throughput/area frontier carried from the realized artifact.
+    pub frontier: DesignFrontier,
 }
 
 impl Measured {
@@ -996,6 +1208,7 @@ impl Measured {
             stage_curves: self.stage_curves,
             baseline_designs: self.baseline_designs,
             designs: self.designs,
+            frontier: self.frontier,
         }
     }
 }
@@ -1137,6 +1350,22 @@ mod tests {
         let realized = combined.realize().unwrap();
         assert!(!realized.designs.is_empty());
         assert!(!realized.baselines.is_empty());
+        // The throughput/area frontier rides with the artifact: non-
+        // empty, monotone in both axes, provenance links in range.
+        assert!(!realized.frontier.ee.is_empty());
+        assert!(!realized.frontier.baseline.is_empty());
+        for front in [&realized.frontier.baseline, &realized.frontier.ee] {
+            for w in front.points.windows(2) {
+                assert!(w[1].utilization > w[0].utilization);
+                assert!(w[1].throughput > w[0].throughput);
+            }
+        }
+        for p in &realized.frontier.ee.points {
+            assert_eq!(
+                realized.designs[p.source].total_resources,
+                p.resources
+            );
+        }
 
         let measured = realized.measure(None).unwrap().into_result();
         assert_eq!(measured.designs.len(), realized.designs.len());
@@ -1251,6 +1480,57 @@ mod tests {
         // Bit-exact JSON round trip (the cache path).
         let back = OperatingEnvelope::from_json(&e.to_json()).unwrap();
         assert_eq!(&back, e);
+    }
+
+    #[test]
+    fn pack_respects_budget_and_prefers_dense_designs() {
+        // Synthetic candidates: (throughput, resources). The densest
+        // designs are admitted first; the total always fits.
+        let budget = ResourceVec::new(1000, 1000, 100, 100);
+        let candidates = vec![
+            (100.0, ResourceVec::new(400, 400, 40, 40)), // density ~250
+            (90.0, ResourceVec::new(300, 300, 30, 30)),  // density 300
+            (500.0, ResourceVec::new(900, 900, 90, 90)), // density ~556
+            (10.0, ResourceVec::new(100, 100, 10, 10)),  // density 100
+        ];
+        let p = pack_designs(&candidates, &budget);
+        // Densest first: design 2 (0.9 of budget), then only design 3
+        // (0.1) still fits.
+        assert_eq!(p.picked, vec![2, 3]);
+        assert!(p.total_resources.fits_in(&budget));
+        assert!((p.total_throughput - 510.0).abs() < 1e-9);
+        assert!((p.utilization() - 1.0).abs() < 1e-9);
+
+        // An overflowing candidate can never wrap past the check.
+        let evil = vec![(1e9, ResourceVec::new(u64::MAX, 1, 1, 1))];
+        let p = pack_designs(&evil, &budget);
+        assert!(p.picked.is_empty());
+
+        // Empty candidate list packs to nothing.
+        let p = pack_designs(&[], &budget);
+        assert!(p.picked.is_empty());
+        assert_eq!(p.total_resources, ResourceVec::ZERO);
+    }
+
+    #[test]
+    fn frontier_json_roundtrip_inside_artifact() {
+        let net = testnet::blenet_like();
+        let r = Toolflow::new(&net, &quick_opts())
+            .unwrap()
+            .sweep()
+            .unwrap()
+            .combine()
+            .unwrap()
+            .realize()
+            .unwrap();
+        let back = DesignFrontier::from_json(&r.frontier.to_json()).unwrap();
+        assert_eq!(back, r.frontier);
+        // The resource-matched lookup is available straight from the
+        // artifact when any EE point reaches 95% of the baseline max.
+        if let Some(m) = r.frontier.resource_matched(0.05) {
+            assert!(m.ee.throughput >= m.target);
+            assert!(m.fraction > 0.0);
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::util::Rng;
 use crate::{dse::SweepConfig, hls::DesignManifest};
 use crate::ir::Network;
 
-use super::pipeline::{OperatingEnvelope, Toolflow};
+use super::pipeline::{DesignFrontier, OperatingEnvelope, Toolflow};
 
 pub use crate::dse::annealer::AnnealResult as StageResult;
 
@@ -115,6 +115,9 @@ pub struct ToolflowResult {
     pub stage_curves: Vec<TapCurve>,
     pub baseline_designs: Vec<BaselineDesign>,
     pub designs: Vec<ChosenDesign>,
+    /// Throughput/area frontier (baseline + EE) carried from the
+    /// realized artifact — the Fig. 9/10 resource-matched data.
+    pub frontier: DesignFrontier,
 }
 
 impl ToolflowResult {

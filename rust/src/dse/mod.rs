@@ -3,12 +3,20 @@
 //! the parser and optimizer are made to ... encompass the control-flow").
 //!
 //! * [`problem`]  — what is being optimized: a node subset of a CDFG with
-//!                  an II objective and a resource budget,
-//! * [`annealer`] — the simulated-annealing search over foldings,
-//! * [`sweep`]    — budget sweeps producing Throughput-Area Pareto points.
+//!                  a resource budget and an [`Objective`] (maximize
+//!                  throughput, minimize area at a throughput target, or
+//!                  trace the frontier),
+//! * [`annealer`] — the simulated-annealing search over foldings with an
+//!                  objective-aware energy,
+//! * [`sweep`]    — budget sweeps producing Throughput-Area Pareto points,
+//! * [`pareto`]   — budget-*scaling* sweeps producing the throughput/area
+//!                  frontier, the resource-matched lookup, and the
+//!                  area-minimizing search (the paper's "46% of the
+//!                  resources" claim).
 
 pub mod annealer;
 pub mod baselines;
+pub mod pareto;
 pub mod problem;
 pub mod sweep;
 
@@ -16,7 +24,12 @@ pub use annealer::{
     anneal, anneal_call_count, anneal_sequential, AnnealConfig, AnnealResult,
 };
 pub use baselines::{greedy, naive_combine, random_search};
-pub use problem::{Problem, ProblemKind};
+pub use pareto::{
+    assemble_frontier, min_area_design, plan_frontier, solve, sweep_frontier,
+    sweep_frontier_sequential, FrontierPoint, ObjectiveOutcome, ParetoConfig,
+    ParetoFrontier, Solution,
+};
+pub use problem::{Objective, Problem, ProblemKind};
 pub use sweep::{
     assemble_sweep, plan_sweep, run_tasks_parallel, sweep_budgets, sweep_budgets_parallel,
     SweepConfig, SweepTask,

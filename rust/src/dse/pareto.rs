@@ -1,0 +1,465 @@
+//! Resource-budget exploration: the throughput/area Pareto frontier and
+//! the area-minimizing search behind the paper's second headline claim
+//! ("ATHEENA matches the baseline's throughput with as low as 46% of
+//! its resources", Fig. 9/10's resource-matched operating points).
+//!
+//! A frontier is traced by sweeping budget *scalings* of a board — one
+//! [`anneal`] per scaling, run on the deterministic executor
+//! ([`run_tasks_parallel`] → `util::exec::run_ordered`), bit-identical
+//! to the sequential ladder — and keeping the non-dominated
+//! (throughput, area-norm) points, where the area norm is the scalar
+//! [`ResourceVec::utilization`] against the *full* board. After the
+//! dominance filter the frontier is strictly monotone in **both** axes
+//! (property-tested in `tests/pareto_props.rs`).
+//!
+//! [`Objective`](super::Objective) ties the three search modes
+//! together: `MaxThroughput` is one ladder rung, `ParetoFront` is the
+//! whole ladder (a single-rung ladder degenerates bit-identically to
+//! `MaxThroughput`), and `MinAreaAtThroughput` is answered from the
+//! frontier plus an objective-aware refinement anneal whose result is
+//! only kept when it strictly improves on the best swept point — so
+//! [`min_area_design`] is never beaten by any frontier point of lower
+//! area.
+
+use super::annealer::{anneal, AnnealConfig, AnnealResult};
+use super::problem::{Objective, Problem, ProblemKind};
+use super::sweep::{plan_sweep, run_tasks_parallel, SweepConfig, SweepTask};
+use crate::ir::Cdfg;
+use crate::resources::{Board, ResourceVec};
+use crate::util::Json;
+
+/// Budget-scaling ladder + anneal schedule for a frontier sweep.
+#[derive(Clone, Debug)]
+pub struct ParetoConfig {
+    /// Board-budget scalings to constrain the optimizer at, one anneal
+    /// per entry (seed derived per index, exactly like a TAP sweep).
+    pub scalings: Vec<f64>,
+    pub anneal: AnnealConfig,
+}
+
+impl Default for ParetoConfig {
+    fn default() -> Self {
+        ParetoConfig {
+            scalings: SweepConfig::default().fractions,
+            anneal: AnnealConfig::default(),
+        }
+    }
+}
+
+impl ParetoConfig {
+    /// Faster ladder for tests and smoke runs.
+    pub fn quick() -> ParetoConfig {
+        ParetoConfig {
+            scalings: SweepConfig::quick().fractions,
+            anneal: AnnealConfig::quick(),
+        }
+    }
+}
+
+/// One non-dominated operating point of a throughput/area frontier.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FrontierPoint {
+    /// Board-budget scaling the optimizer was constrained to.
+    pub budget_fraction: f64,
+    pub ii: u64,
+    /// Throughput in samples/s (nominal for a single problem kind,
+    /// at-design-reach for a combined EE design).
+    pub throughput: f64,
+    pub resources: ResourceVec,
+    /// Scalar area norm: [`ResourceVec::utilization`] against the full
+    /// board — the frontier's area axis.
+    pub utilization: f64,
+    /// Index into the originating design list / raw sweep results.
+    pub source: usize,
+}
+
+impl FrontierPoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("budget_fraction", Json::Num(self.budget_fraction)),
+            ("ii", Json::num(self.ii as f64)),
+            ("throughput", Json::Num(self.throughput)),
+            ("resources", self.resources.to_json()),
+            ("utilization", Json::Num(self.utilization)),
+            ("source", Json::num(self.source as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<FrontierPoint> {
+        let num = |k: &str| -> anyhow::Result<f64> {
+            v.req(k)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("frontier point '{k}' must be a number"))
+        };
+        Ok(FrontierPoint {
+            budget_fraction: num("budget_fraction")?,
+            ii: num("ii")? as u64,
+            throughput: num("throughput")?,
+            resources: ResourceVec::from_json(v.req("resources")?)?,
+            utilization: num("utilization")?,
+            source: num("source")? as usize,
+        })
+    }
+}
+
+/// A throughput/area Pareto frontier: mutually non-dominated points,
+/// strictly increasing in both utilization and throughput.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ParetoFrontier {
+    pub points: Vec<FrontierPoint>,
+}
+
+impl ParetoFrontier {
+    /// Dominance-filter raw points. Point `a` dominates `b` iff
+    /// `a.throughput >= b.throughput` and `a.utilization <=
+    /// b.utilization` (duplicates collapse to one). The survivors are
+    /// sorted ascending in utilization, which — dominance-freeness —
+    /// makes them strictly ascending in throughput too.
+    pub fn from_points(mut raw: Vec<FrontierPoint>) -> ParetoFrontier {
+        raw.sort_by(|a, b| {
+            a.throughput
+                .total_cmp(&b.throughput)
+                .then(b.utilization.total_cmp(&a.utilization))
+        });
+        let mut keep: Vec<FrontierPoint> = Vec::new();
+        for p in raw {
+            keep.retain(|q| {
+                !(p.throughput >= q.throughput && p.utilization <= q.utilization)
+            });
+            let dominated = keep
+                .iter()
+                .any(|q| q.throughput >= p.throughput && q.utilization <= p.utilization);
+            if !dominated {
+                keep.push(p);
+            }
+        }
+        keep.sort_by(|a, b| a.utilization.total_cmp(&b.utilization));
+        ParetoFrontier { points: keep }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// The cheapest frontier point meeting `target` samples/s — the
+    /// resource-matched lookup. `None` when even the fastest point
+    /// misses the target.
+    pub fn min_area_at(&self, target: f64) -> Option<&FrontierPoint> {
+        self.points.iter().find(|p| p.throughput >= target)
+    }
+
+    /// The fastest point (the frontier's max-throughput end).
+    pub fn best_throughput(&self) -> Option<&FrontierPoint> {
+        self.points.last()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.points.iter().map(|p| p.to_json()))
+    }
+
+    /// Load a frontier back. Stored points already went through the
+    /// dominance filter, so they are taken verbatim (re-filtering would
+    /// be a no-op but could reorder exact ties).
+    pub fn from_json(v: &Json) -> anyhow::Result<ParetoFrontier> {
+        let points = v
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("frontier must be an array"))?
+            .iter()
+            .map(FrontierPoint::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(ParetoFrontier { points })
+    }
+}
+
+/// Plan a frontier sweep: one anneal task per budget scaling, seeds
+/// derived per index with the same `seed + i * 7919` scheme as the TAP
+/// sweeps (so a single-scaling ladder reproduces a direct anneal bit
+/// for bit).
+pub fn plan_frontier(
+    kind: ProblemKind,
+    cdfg: &Cdfg,
+    board: &Board,
+    cfg: &ParetoConfig,
+) -> Vec<SweepTask> {
+    plan_sweep(
+        kind,
+        cdfg,
+        board,
+        &SweepConfig {
+            fractions: cfg.scalings.clone(),
+            anneal: cfg.anneal.clone(),
+        },
+    )
+}
+
+/// Turn per-scaling anneal results (in ladder order) into a frontier:
+/// feasible results only, area-normed against the full board, then
+/// dominance-filtered. `scalings[i]` is the budget scaling result `i`
+/// was annealed under.
+pub fn assemble_frontier(
+    board: &Board,
+    scalings: &[f64],
+    results: &[AnnealResult],
+) -> ParetoFrontier {
+    debug_assert_eq!(scalings.len(), results.len());
+    let raw = results
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.feasible)
+        .map(|(i, r)| FrontierPoint {
+            budget_fraction: scalings[i],
+            ii: r.ii,
+            throughput: r.throughput,
+            resources: r.resources,
+            utilization: r.resources.utilization(&board.resources),
+            source: i,
+        })
+        .collect::<Vec<_>>();
+    ParetoFrontier::from_points(raw)
+}
+
+/// Sweep the budget-scaling ladder on the deterministic executor and
+/// extract the frontier. Returns the frontier plus every raw anneal
+/// result (frontier points link back via `source`). Bit-identical to
+/// [`sweep_frontier_sequential`].
+pub fn sweep_frontier(
+    kind: ProblemKind,
+    cdfg: &Cdfg,
+    board: &Board,
+    cfg: &ParetoConfig,
+) -> (ParetoFrontier, Vec<AnnealResult>) {
+    let tasks = plan_frontier(kind, cdfg, board, cfg);
+    let results = run_tasks_parallel(&tasks);
+    (assemble_frontier(board, &cfg.scalings, &results), results)
+}
+
+/// Sequential reference path for [`sweep_frontier`].
+pub fn sweep_frontier_sequential(
+    kind: ProblemKind,
+    cdfg: &Cdfg,
+    board: &Board,
+    cfg: &ParetoConfig,
+) -> (ParetoFrontier, Vec<AnnealResult>) {
+    let tasks = plan_frontier(kind, cdfg, board, cfg);
+    let results: Vec<AnnealResult> = tasks
+        .iter()
+        .map(|t| anneal(&t.problem, &t.config))
+        .collect();
+    (assemble_frontier(board, &cfg.scalings, &results), results)
+}
+
+/// A single-design outcome of an objective search ([`min_area_design`]
+/// or `solve(MaxThroughput)`), with its frontier context.
+#[derive(Clone, Debug)]
+pub struct ObjectiveOutcome {
+    /// The chosen design (mapping, II, resources).
+    pub result: AnnealResult,
+    /// Its scalar area norm against the full board.
+    pub utilization: f64,
+    /// The budget scaling the design was found under.
+    pub budget_fraction: f64,
+    /// The frontier the pick came from (for reporting).
+    pub frontier: ParetoFrontier,
+}
+
+/// Find the cheapest design meeting `target` samples/s: sweep the
+/// frontier, take the cheapest point that meets the target, then run
+/// one objective-aware refinement anneal
+/// ([`Objective::MinAreaAtThroughput`]) at that point's budget and keep
+/// the refined design only when it meets the target, fits, and
+/// **strictly** lowers the area norm. By construction the outcome is
+/// never beaten by a frontier point of lower area (property-tested in
+/// `tests/pareto_props.rs`).
+pub fn min_area_design(
+    kind: ProblemKind,
+    cdfg: &Cdfg,
+    board: &Board,
+    cfg: &ParetoConfig,
+    target: f64,
+) -> anyhow::Result<ObjectiveOutcome> {
+    anyhow::ensure!(
+        target.is_finite() && target > 0.0,
+        "throughput target must be finite and positive, got {target}"
+    );
+    let (frontier, results) = sweep_frontier(kind, cdfg, board, cfg);
+    let picked = frontier.min_area_at(target).copied().ok_or_else(|| {
+        anyhow::anyhow!(
+            "no swept design reaches {target:.0} samples/s (frontier max {:.0})",
+            frontier
+                .best_throughput()
+                .map(|p| p.throughput)
+                .unwrap_or(0.0)
+        )
+    })?;
+    let mut outcome = ObjectiveOutcome {
+        result: results[picked.source].clone(),
+        utilization: picked.utilization,
+        budget_fraction: picked.budget_fraction,
+        frontier,
+    };
+
+    // Refinement: an area-minimizing anneal at the picked budget. The
+    // seed is decorrelated from the ladder's so the refinement explores
+    // fresh trajectories.
+    let budget = board.budget(picked.budget_fraction);
+    let problem = Problem::for_kind(kind, cdfg.clone(), budget, board.clock_hz)
+        .with_objective(Objective::MinAreaAtThroughput(target));
+    let mut rcfg = cfg.anneal.clone();
+    rcfg.seed = rcfg.seed.wrapping_mul(0x9E37_79B9).wrapping_add(0x4A3E);
+    let refined = anneal(&problem, &rcfg);
+    if refined.feasible && refined.throughput >= target {
+        let u = refined.resources.utilization(&board.resources);
+        if u < outcome.utilization {
+            outcome.result = refined;
+            outcome.utilization = u;
+        }
+    }
+    Ok(outcome)
+}
+
+/// How a solved objective comes back from [`solve`].
+#[derive(Clone, Debug)]
+pub enum Solution {
+    /// A single design (`MaxThroughput`, `MinAreaAtThroughput`).
+    Design(Box<ObjectiveOutcome>),
+    /// The whole frontier (`ParetoFront`).
+    Front(ParetoFrontier),
+}
+
+/// Dispatch an [`Objective`] over one problem kind.
+///
+/// * `MaxThroughput` — one anneal at the ladder's last scaling (the
+///   full budget in the default ladder), seeded like that ladder rung,
+///   so `solve(ParetoFront)` over a single-scaling ladder contains the
+///   bit-identical point.
+/// * `MinAreaAtThroughput` — [`min_area_design`].
+/// * `ParetoFront` — [`sweep_frontier`].
+pub fn solve(
+    objective: Objective,
+    kind: ProblemKind,
+    cdfg: &Cdfg,
+    board: &Board,
+    cfg: &ParetoConfig,
+) -> anyhow::Result<Solution> {
+    match objective {
+        Objective::MaxThroughput => {
+            anyhow::ensure!(!cfg.scalings.is_empty(), "empty budget ladder");
+            let frac = *cfg.scalings.last().unwrap();
+            let tasks = plan_frontier(kind, cdfg, board, cfg);
+            let task = tasks.last().unwrap();
+            let r = anneal(&task.problem, &task.config);
+            anyhow::ensure!(r.feasible, "no feasible design at budget {frac}");
+            let utilization = r.resources.utilization(&board.resources);
+            Ok(Solution::Design(Box::new(ObjectiveOutcome {
+                utilization,
+                budget_fraction: frac,
+                frontier: assemble_frontier(
+                    board,
+                    &cfg.scalings[cfg.scalings.len() - 1..],
+                    std::slice::from_ref(&r),
+                ),
+                result: r,
+            })))
+        }
+        Objective::MinAreaAtThroughput(target) => Ok(Solution::Design(Box::new(
+            min_area_design(kind, cdfg, board, cfg, target)?,
+        ))),
+        Objective::ParetoFront => {
+            Ok(Solution::Front(sweep_frontier(kind, cdfg, board, cfg).0))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::network::testnet;
+
+    fn pt(thr: f64, util: f64) -> FrontierPoint {
+        FrontierPoint {
+            budget_fraction: util,
+            ii: 1,
+            throughput: thr,
+            resources: ResourceVec::new(
+                (util * 1000.0) as u64,
+                (util * 2000.0) as u64,
+                (util * 100.0) as u64,
+                (util * 100.0) as u64,
+            ),
+            utilization: util,
+            source: 0,
+        }
+    }
+
+    #[test]
+    fn dominance_filter_keeps_monotone_front() {
+        let front = ParetoFrontier::from_points(vec![
+            pt(100.0, 0.5), // dominated by (120, 0.4)
+            pt(120.0, 0.4),
+            pt(80.0, 0.2),
+            pt(200.0, 0.9),
+            pt(120.0, 0.6), // dominated (same thr, more area)
+        ]);
+        assert_eq!(front.len(), 3);
+        for w in front.points.windows(2) {
+            assert!(w[1].utilization > w[0].utilization);
+            assert!(w[1].throughput > w[0].throughput);
+        }
+    }
+
+    #[test]
+    fn duplicate_points_collapse() {
+        let front =
+            ParetoFrontier::from_points(vec![pt(100.0, 0.5), pt(100.0, 0.5)]);
+        assert_eq!(front.len(), 1);
+    }
+
+    #[test]
+    fn min_area_lookup_picks_cheapest_meeting_target() {
+        let front = ParetoFrontier::from_points(vec![
+            pt(80.0, 0.2),
+            pt(120.0, 0.4),
+            pt(200.0, 0.9),
+        ]);
+        assert_eq!(front.min_area_at(100.0).unwrap().utilization, 0.4);
+        assert_eq!(front.min_area_at(50.0).unwrap().utilization, 0.2);
+        assert!(front.min_area_at(300.0).is_none());
+        assert_eq!(front.best_throughput().unwrap().throughput, 200.0);
+    }
+
+    #[test]
+    fn frontier_json_roundtrip() {
+        let front = ParetoFrontier::from_points(vec![
+            pt(80.0, 0.2),
+            pt(120.0, 0.4),
+            pt(200.0, 0.9),
+        ]);
+        let back = ParetoFrontier::from_json(&front.to_json()).unwrap();
+        assert_eq!(back, front);
+    }
+
+    #[test]
+    fn frontier_sweep_on_testnet_is_monotone() {
+        let net = testnet::blenet_like();
+        let board = Board::zc706();
+        let cfg = ParetoConfig::quick();
+        let cdfg = Cdfg::lower_baseline(&net);
+        let (front, raw) = sweep_frontier(ProblemKind::Baseline, &cdfg, &board, &cfg);
+        assert!(!front.is_empty());
+        assert_eq!(raw.len(), cfg.scalings.len());
+        for w in front.points.windows(2) {
+            assert!(w[1].throughput > w[0].throughput);
+            assert!(w[1].utilization > w[0].utilization);
+        }
+        for p in &front.points {
+            assert!(p.utilization <= 1.0 + 1e-12);
+            assert!(raw[p.source].feasible);
+            assert_eq!(raw[p.source].resources, p.resources);
+            assert!(cfg.scalings.contains(&p.budget_fraction));
+        }
+    }
+}

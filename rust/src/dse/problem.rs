@@ -23,6 +23,31 @@ pub enum ProblemKind {
     Stage(usize),
 }
 
+/// What the search optimizes (the paper reports both headline shapes:
+/// maximum throughput under a budget, Fig. 9's speedup claim, and the
+/// cheapest design matching a throughput target, the "46% of the
+/// resources" claim).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Objective {
+    /// Maximize throughput under the problem's resource budget — the
+    /// original (and default) mode.
+    MaxThroughput,
+    /// Minimize the scalar area norm
+    /// ([`ResourceVec::utilization`](crate::resources::ResourceVec::utilization)
+    /// against the budget) subject to throughput ≥ the target in
+    /// samples/s. The annealer's energy trades area for a throughput
+    /// shortfall penalty; `dse::pareto::min_area_design` wraps this with
+    /// a frontier fallback so the outcome is never worse than the best
+    /// swept point.
+    MinAreaAtThroughput(f64),
+    /// Trace the whole throughput/area frontier. A single anneal under
+    /// this objective is **bit-identical** to [`Objective::MaxThroughput`]
+    /// (the frontier mode is a sweep of per-budget max-throughput
+    /// searches — `dse::pareto::sweep_frontier` supplies the budget
+    /// ladder; property-tested in `tests/pareto_props.rs`).
+    ParetoFront,
+}
+
 /// One DSE instance over a node subset of a mapping.
 #[derive(Clone, Debug)]
 pub struct Problem {
@@ -33,6 +58,9 @@ pub struct Problem {
     pub active: Vec<usize>,
     pub budget: ResourceVec,
     pub clock_hz: f64,
+    /// What the annealer's energy rewards (default
+    /// [`Objective::MaxThroughput`]).
+    pub objective: Objective,
 }
 
 impl Problem {
@@ -45,6 +73,7 @@ impl Problem {
             active,
             budget,
             clock_hz,
+            objective: Objective::MaxThroughput,
         }
     }
 
@@ -69,6 +98,7 @@ impl Problem {
             active,
             budget,
             clock_hz,
+            objective: Objective::MaxThroughput,
         }
     }
 
@@ -78,6 +108,13 @@ impl Problem {
             ProblemKind::Baseline => Problem::baseline(cdfg, budget, clock_hz),
             ProblemKind::Stage(sec) => Problem::stage(sec, cdfg, budget, clock_hz),
         }
+    }
+
+    /// Replace the search objective (builder-style; constructors default
+    /// to [`Objective::MaxThroughput`]).
+    pub fn with_objective(mut self, objective: Objective) -> Problem {
+        self.objective = objective;
+        self
     }
 
     /// Whether this problem kind hosts the shared I/O infrastructure.

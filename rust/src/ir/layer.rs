@@ -84,8 +84,21 @@ impl Layer {
                     .as_chw()
                     .ok_or_else(|| anyhow::anyhow!("conv needs a (C,H,W) input"))?;
                 anyhow::ensure!(*stride == 1, "only stride-1 convs are generated");
-                let ho = h + 2 * pad - k + 1;
-                let wo = w + 2 * pad - k + 1;
+                // Checked geometry: untrusted JSON can carry k/pad values
+                // that would underflow or overflow the plain expression
+                // `d + 2*pad - k + 1` — malformed inputs must error, not
+                // panic (fuzzed in `tests/proptests.rs`).
+                let out_dim = |d: usize| -> Option<usize> {
+                    2usize
+                        .checked_mul(*pad)
+                        .and_then(|p2| d.checked_add(p2))
+                        .and_then(|s| s.checked_add(1))
+                        .and_then(|s| s.checked_sub(*k))
+                };
+                let (ho, wo) = match (out_dim(h), out_dim(w)) {
+                    (Some(ho), Some(wo)) => (ho, wo),
+                    _ => anyhow::bail!("conv geometry out of range (k={k}, pad={pad})"),
+                };
                 anyhow::ensure!(ho > 0 && wo > 0, "conv output collapsed");
                 Shape::chw(*out_ch, ho, wo)
             }
@@ -94,6 +107,7 @@ impl Layer {
                     .as_chw()
                     .ok_or_else(|| anyhow::anyhow!("pool needs a (C,H,W) input"))?;
                 anyhow::ensure!(k == stride, "only non-overlapping pooling");
+                anyhow::ensure!(*k > 0, "pool window must be positive");
                 Shape::chw(c, h / k, w / k)
             }
             Op::Relu => in_shape.clone(),
@@ -225,6 +239,29 @@ mod tests {
         // Wrong recorded out_shape must be rejected.
         let bad = good.replace("[8,28,28]", "[8,24,24]");
         assert!(Layer::from_json(&json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn hostile_geometry_errors_instead_of_panicking() {
+        // Oversized kernels would underflow the naive output-dim
+        // arithmetic; zero pool windows would divide by zero. Both must
+        // surface as errors from untrusted JSON.
+        let big_k = Op::Conv {
+            out_ch: 8,
+            k: 777_777,
+            pad: 0,
+            stride: 1,
+        };
+        assert!(Layer::infer_out(&big_k, &Shape::chw(1, 28, 28)).is_err());
+        let huge_pad = Op::Conv {
+            out_ch: 8,
+            k: 3,
+            pad: usize::MAX / 2 + 1,
+            stride: 1,
+        };
+        assert!(Layer::infer_out(&huge_pad, &Shape::chw(1, 28, 28)).is_err());
+        let zero_pool = Op::MaxPool { k: 0, stride: 0 };
+        assert!(Layer::infer_out(&zero_pool, &Shape::chw(1, 28, 28)).is_err());
     }
 
     #[test]

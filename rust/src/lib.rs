@@ -72,6 +72,19 @@
 //! workers routing hard samples downstream, sharing one dynamic
 //! batcher implementation with the batch host).
 //!
+//! The search itself is **objective-aware** (DESIGN.md §8):
+//! `dse::Objective` selects between maximizing throughput under a
+//! budget, minimizing the scalar area norm
+//! (`resources::ResourceVec::utilization`) at a throughput target, and
+//! tracing the whole throughput/area Pareto frontier (`dse::pareto`,
+//! budget-scaling sweeps on the deterministic executor). The realized
+//! artifact persists a `coordinator::DesignFrontier` (baseline + EE
+//! fronts, schema v4), so `atheena pareto` reproduces the paper's
+//! "same throughput at 46% of the resources" comparison from a warm
+//! cache with zero anneal calls, and `atheena pack` greedily
+//! co-resides multiple realized designs on one board budget — the
+//! first multi-tenant workload.
+//!
 //! The cold search path is driven through a crate-wide **performance
 //! layer** (DESIGN.md §7): `util::exec` is a deterministic scoped-
 //! thread executor (results in task order, bit-identical to sequential,

@@ -1,8 +1,10 @@
 //! `atheena` — CLI for the ATHEENA toolflow reproduction.
 //!
 //! Subcommands:
-//!   report   <fig9a|fig9b|fig7|table1|table2|table3|table4|all>
+//!   report   <fig9a|fig9b|fig8|fig7|pareto|table1..table4|tables|all>
 //!   toolflow --network NAME [--board zc706|vu440] [--emit FILE]
+//!   pareto   --network NAME [--board B] [--slack FRAC]
+//!   pack     --network NAME [--board B] [--budget FRAC]
 //!   profile  --network NAME [--samples N]
 //!   infer    --network NAME [--batch N] [--q FRAC]
 //!   serve    --network NAME [--requests N]
@@ -88,9 +90,11 @@ impl Args {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: atheena <report|toolflow|profile|infer|serve> [args]\n\
-         \n  report   <fig9a|fig9b|fig8|fig7|table1..table4|all> [--artifacts DIR] [--quick]\
+        "usage: atheena <report|toolflow|pareto|pack|profile|infer|serve> [args]\n\
+         \n  report   <fig9a|fig9b|fig8|fig7|pareto|table1..table4|tables|all> [--artifacts DIR] [--quick]\
          \n  toolflow --network NAME [--board zc706|vu440] [--emit FILE] [--quick]\
+         \n  pareto   --network NAME [--board zc706|vu440] [--slack FRAC] [--quick]\
+         \n  pack     --network NAME [--board zc706|vu440] [--budget FRAC] [--quick]\
          \n  profile  --network NAME [--samples N]\
          \n  infer    --network NAME [--batch N] [--q FRAC]\
          \n  serve    --network NAME [--requests N] [--controller] [--window N]"
@@ -108,11 +112,89 @@ fn main() -> anyhow::Result<()> {
     match cmd {
         "report" => cmd_report(&args),
         "toolflow" => cmd_toolflow(&args),
+        "pareto" => cmd_pareto(&args),
+        "pack" => cmd_pack(&args),
         "profile" => cmd_profile(&args),
         "infer" => cmd_infer(&args),
         "serve" => cmd_serve(&args),
         _ => usage(),
     }
+}
+
+/// Resolve the realized design artifact for a named network (cache hit
+/// = zero anneal calls; miss runs the pipeline once and saves it).
+fn resolve_realized(args: &Args) -> anyhow::Result<(Realized, bool, Board)> {
+    let name = args
+        .get("network")
+        .ok_or_else(|| anyhow::anyhow!("--network required"))?;
+    let board = args.board()?;
+    let net = atheena::ir::Network::from_file(
+        &args.artifacts().join("networks").join(format!("{name}.json")),
+    )?;
+    let opts = args.options(board.clone());
+    let cache = args.design_cache()?;
+    let (realized, cached) = Realized::load_or_run(&cache, &net, &opts)?;
+    Ok((realized, cached, board))
+}
+
+/// `atheena pareto` — the throughput/area frontier of a realized
+/// design, rendered from the artifact's persisted frontier (Fig. 9/10's
+/// resource-matched table).
+fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
+    let slack: f64 = args.get_or("slack", "0.05").parse()?;
+    anyhow::ensure!(
+        (0.0..1.0).contains(&slack),
+        "--slack must be a fraction in [0, 1)"
+    );
+    let (realized, cached, board) = resolve_realized(args)?;
+    if cached {
+        println!("frontier loaded from the design cache (zero anneal calls)");
+    }
+    print!(
+        "{}",
+        atheena::report::tables::render_frontier(&realized.frontier, board.name, slack)
+    );
+    Ok(())
+}
+
+/// `atheena pack` — greedily co-reside the artifact's realized designs
+/// onto one board budget (multi-tenant serving from a single FPGA).
+fn cmd_pack(args: &Args) -> anyhow::Result<()> {
+    let budget_frac: f64 = args.get_or("budget", "1.0").parse()?;
+    anyhow::ensure!(
+        budget_frac > 0.0 && budget_frac <= 1.0,
+        "--budget must be a fraction in (0, 1]"
+    );
+    let (realized, cached, board) = resolve_realized(args)?;
+    if cached {
+        println!("designs loaded from the design cache (zero anneal calls)");
+    }
+    let budget = board.budget(budget_frac);
+    let packing = realized.pack(&budget);
+    println!(
+        "pack onto {:.0}% of {}: {} of {} designs co-resident",
+        budget_frac * 100.0,
+        board.name,
+        packing.picked.len(),
+        realized.designs.len()
+    );
+    for &i in &packing.picked {
+        let d = &realized.designs[i];
+        println!(
+            "  design {} (budget {:.0}%): {:.0} samples/s at design reach, {}",
+            i,
+            d.budget_fraction * 100.0,
+            d.combined.throughput_at_design,
+            d.total_resources
+        );
+    }
+    println!(
+        "  total: {:.0} samples/s aggregate, {} ({:.0}% of the packing budget)",
+        packing.total_throughput,
+        packing.total_resources,
+        packing.utilization() * 100.0
+    );
+    Ok(())
 }
 
 fn cmd_report(args: &Args) -> anyhow::Result<()> {

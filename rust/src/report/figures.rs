@@ -3,7 +3,10 @@
 //! buffer-sizing/deadlock ablation, and the Fig. 8 p/q-mismatch
 //! envelope (rendered straight from the cached design artifact).
 
+use std::fmt::Write as _;
+
 use super::context::ReportContext;
+use crate::coordinator::pipeline::OperatingEnvelope;
 use crate::resources::Board;
 use crate::sim::{simulate_ee, SimMetrics};
 
@@ -98,35 +101,50 @@ pub fn fig8(ctx: &mut ReportContext) -> anyhow::Result<()> {
         r.p() * 100.0
     );
     for d in &r.designs {
-        let e = &d.envelope;
-        let at_p = e.throughput_at_design();
-        println!(
-            "-- budget {:.0}%, {} DSP, safe up to q = {:.0}%{} --",
-            d.budget_fraction * 100.0,
-            d.total_resources.dsp,
-            e.safe_q_max() * 100.0,
-            match e.stall_onset_q() {
-                Some(q) => format!(", stalls from q = {:.0}%", q * 100.0),
-                None => ", stall-free across the grid".to_string(),
-            }
+        print!(
+            "{}",
+            render_fig8_design(d.budget_fraction, d.total_resources.dsp, &d.envelope)
         );
-        println!(
-            "{:>8} {:>8} {:>16} {:>10} {:>12} {:>10}",
-            "q%", "q/p", "thr(samples/s)", "vs design", "stallcycles", "status"
-        );
-        for pt in &e.points {
-            println!(
-                "{:>8.1} {:>8.2} {:>16.0} {:>9.0}% {:>12} {:>10}",
-                pt.q * 100.0,
-                pt.q / e.design_p,
-                pt.throughput_sps,
-                100.0 * pt.throughput_sps / at_p.max(1e-9),
-                pt.stall_cycles,
-                if pt.deadlock { "DEADLOCK" } else { "ok" }
-            );
-        }
     }
     Ok(())
+}
+
+/// Render one design's Fig. 8 envelope block. Pure function of the
+/// persisted envelope — golden-tested byte-for-byte in
+/// `tests/integration.rs` (the `fig8` CLI output is these blocks under
+/// one header).
+pub fn render_fig8_design(budget_fraction: f64, dsp: u64, e: &OperatingEnvelope) -> String {
+    let mut s = String::new();
+    let at_p = e.throughput_at_design();
+    let _ = writeln!(
+        s,
+        "-- budget {:.0}%, {} DSP, safe up to q = {:.0}%{} --",
+        budget_fraction * 100.0,
+        dsp,
+        e.safe_q_max() * 100.0,
+        match e.stall_onset_q() {
+            Some(q) => format!(", stalls from q = {:.0}%", q * 100.0),
+            None => ", stall-free across the grid".to_string(),
+        }
+    );
+    let _ = writeln!(
+        s,
+        "{:>8} {:>8} {:>16} {:>10} {:>12} {:>10}",
+        "q%", "q/p", "thr(samples/s)", "vs design", "stallcycles", "status"
+    );
+    for pt in &e.points {
+        let _ = writeln!(
+            s,
+            "{:>8.1} {:>8.2} {:>16.0} {:>9.0}% {:>12} {:>10}",
+            pt.q * 100.0,
+            pt.q / e.design_p,
+            pt.throughput_sps,
+            100.0 * pt.throughput_sps / at_p.max(1e-9),
+            pt.stall_cycles,
+            if pt.deadlock { "DEADLOCK" } else { "ok" }
+        );
+    }
+    s
 }
 
 /// Fig. 7 ablation — Conditional Buffer depth sweep: throughput and stall

@@ -15,6 +15,8 @@ pub mod tables;
 pub use context::ReportContext;
 
 /// Run one named report artifact ("fig9a", "table1", ..., "all").
+/// "tables" runs Tables I–IV; "pareto" renders the throughput/area
+/// frontier table from the persisted design frontier.
 pub fn run(name: &str, ctx: &mut ReportContext) -> anyhow::Result<()> {
     match name {
         "fig9a" => figures::fig9a(ctx),
@@ -25,13 +27,22 @@ pub fn run(name: &str, ctx: &mut ReportContext) -> anyhow::Result<()> {
         "table2" => tables::table2(ctx),
         "table3" => tables::table3(ctx),
         "table4" => tables::table4(ctx),
+        "pareto" => tables::pareto(ctx),
+        "tables" => {
+            for r in ["table1", "table2", "table3", "table4"] {
+                run(r, ctx)?;
+                println!();
+            }
+            Ok(())
+        }
         "csv" => {
             export::export_fig9(ctx, "blenet", crate::resources::Board::zc706())?;
             export::export_fig7(ctx, "blenet")
         }
         "all" => {
             for r in [
-                "fig9a", "fig9b", "fig8", "fig7", "table1", "table2", "table3", "table4",
+                "fig9a", "fig9b", "fig8", "fig7", "pareto", "table1", "table2", "table3",
+                "table4",
             ] {
                 run(r, ctx)?;
                 println!();
@@ -39,7 +50,8 @@ pub fn run(name: &str, ctx: &mut ReportContext) -> anyhow::Result<()> {
             Ok(())
         }
         other => anyhow::bail!(
-            "unknown report '{other}' (fig9a|fig9b|fig8|fig7|table1|table2|table3|table4|csv|all)"
+            "unknown report '{other}' \
+             (fig9a|fig9b|fig8|fig7|pareto|table1..table4|tables|csv|all)"
         ),
     }
 }

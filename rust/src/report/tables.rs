@@ -1,7 +1,12 @@
-//! Table regeneration: Tables I–IV of §IV.
+//! Table regeneration: Tables I–IV of §IV, plus the Fig. 9/10-style
+//! throughput/area frontier table (`report pareto`) rendered straight
+//! from the frontier persisted in the design artifact.
+
+use std::fmt::Write as _;
 
 use super::context::ReportContext;
 use crate::coordinator::batch::{BatchHost, BaselineHost};
+use crate::coordinator::pipeline::DesignFrontier;
 use crate::coordinator::toolflow::{BaselineDesign, ChosenDesign};
 use crate::resources::Board;
 use crate::runtime::ArtifactStore;
@@ -16,6 +21,73 @@ fn pick3<T>(xs: &[T]) -> Vec<&T> {
         2 => vec![&xs[0], &xs[1]],
         n => vec![&xs[n / 4], &xs[n / 2], &xs[n - 1]],
     }
+}
+
+/// Render the Fig. 9/10-style throughput/area frontier table: the
+/// baseline and EE Pareto fronts (area = limiting-resource fraction of
+/// the board) plus the paper's headline resource-matched line at the
+/// given throughput `slack` (0.05 = "within 5% of the baseline's
+/// best"). Pure function of the persisted [`DesignFrontier`] —
+/// golden-tested byte-for-byte in `tests/integration.rs`.
+pub fn render_frontier(f: &DesignFrontier, board_name: &str, slack: f64) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "== Pareto frontier: throughput vs area, {board_name} =="
+    );
+    for (title, front) in [
+        ("baseline (fpgaConvNet)", &f.baseline),
+        ("ATHEENA early-exit", &f.ee),
+    ] {
+        let _ = writeln!(s, "-- {title} --");
+        let _ = writeln!(
+            s,
+            "{:>8} {:>10} {:>8} {:>8} {:>16}",
+            "budget%", "LUT", "DSP", "area%", "thr(samples/s)"
+        );
+        for p in &front.points {
+            let _ = writeln!(
+                s,
+                "{:>8.0} {:>10} {:>8} {:>8.1} {:>16.0}",
+                p.budget_fraction * 100.0,
+                p.resources.lut,
+                p.resources.dsp,
+                p.utilization * 100.0,
+                p.throughput
+            );
+        }
+    }
+    let keep = (1.0 - slack) * 100.0;
+    match f.resource_matched(slack) {
+        Some(m) => {
+            let _ = writeln!(
+                s,
+                "resource-matched: EE reaches {:.0} samples/s (>= {keep:.0}% of baseline max \
+                 {:.0}) at {:.1}% board area = {:.0}% of the baseline's area",
+                m.ee.throughput,
+                m.baseline.throughput,
+                m.ee.utilization * 100.0,
+                m.fraction * 100.0
+            );
+        }
+        None => {
+            let _ = writeln!(
+                s,
+                "resource-matched: no EE design reaches {keep:.0}% of the baseline max"
+            );
+        }
+    }
+    s
+}
+
+/// `report pareto` — the throughput/area frontier of the cached B-LeNet
+/// artifact (zero anneal calls on a warm design cache: the frontier is
+/// persisted with the artifact).
+pub fn pareto(ctx: &mut ReportContext) -> anyhow::Result<()> {
+    let board = Board::zc706();
+    let r = ctx.toolflow("blenet", board.clone())?;
+    print!("{}", render_frontier(&r.frontier, board.name, 0.05));
+    Ok(())
 }
 
 /// Table I — resource comparison, implemented baseline vs ATHEENA.

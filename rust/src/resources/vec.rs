@@ -1,6 +1,15 @@
 //! `ResourceVec` — the 4-dimensional FPGA resource vector (LUT, FF, DSP,
 //! BRAM18) the paper's TAP functions are defined over (§III-A: a TAP is
 //! `f: N^4 -> Q`).
+//!
+//! Arithmetic policy: the counts are `u64` totals that real boards keep
+//! far below the type's range, but sums of adversarial inputs (artifact
+//! JSON, fuzzed networks) must never wrap silently. The operators
+//! (`+`, `-`) therefore **saturate** component-wise — a saturated total
+//! still fails every realistic `fits_in` check instead of wrapping into
+//! a tiny "feasible" value — and `checked_add` / `checked_scaled`
+//! return `Err` for callers that want overflow surfaced (artifact
+//! validation, the packing step).
 
 use std::fmt;
 use std::ops::{Add, AddAssign, Sub};
@@ -57,15 +66,68 @@ impl ResourceVec {
     }
 
     /// Scale a budget by a fraction (used to constrain the optimizer to a
-    /// percentage of the board, §IV-A). Floors each component.
+    /// percentage of the board, §IV-A). Floors each component; a product
+    /// beyond `u64::MAX` saturates (the `f64 -> u64` cast is saturating).
     pub fn scaled(&self, frac: f64) -> ResourceVec {
-        assert!(frac >= 0.0);
+        assert!(frac >= 0.0, "budget fraction must be non-negative");
         ResourceVec {
             lut: (self.lut as f64 * frac) as u64,
             ff: (self.ff as f64 * frac) as u64,
             dsp: (self.dsp as f64 * frac) as u64,
             bram: (self.bram as f64 * frac) as u64,
         }
+    }
+
+    /// [`ResourceVec::scaled`] with the failure modes surfaced: a
+    /// non-finite or negative fraction, or a product that would exceed
+    /// `u64::MAX`, is an error instead of a panic or silent saturation.
+    pub fn checked_scaled(&self, frac: f64) -> anyhow::Result<ResourceVec> {
+        anyhow::ensure!(
+            frac.is_finite() && frac >= 0.0,
+            "budget fraction must be finite and non-negative, got {frac}"
+        );
+        let scale = |name: &str, x: u64| -> anyhow::Result<u64> {
+            let v = x as f64 * frac;
+            anyhow::ensure!(
+                v < u64::MAX as f64,
+                "scaling {name} ({x}) by {frac} overflows the resource counter"
+            );
+            Ok(v as u64)
+        };
+        Ok(ResourceVec {
+            lut: scale("LUT", self.lut)?,
+            ff: scale("FF", self.ff)?,
+            dsp: scale("DSP", self.dsp)?,
+            bram: scale("BRAM", self.bram)?,
+        })
+    }
+
+    /// Component-wise saturating addition (the `+` operator delegates
+    /// here — see the module-level arithmetic policy).
+    pub fn saturating_add(&self, other: &ResourceVec) -> ResourceVec {
+        ResourceVec {
+            lut: self.lut.saturating_add(other.lut),
+            ff: self.ff.saturating_add(other.ff),
+            dsp: self.dsp.saturating_add(other.dsp),
+            bram: self.bram.saturating_add(other.bram),
+        }
+    }
+
+    /// Component-wise addition that reports overflow as an error,
+    /// naming the overflowing component. Used where a wrapped (or even
+    /// saturated) total would corrupt a decision — e.g. the co-residency
+    /// packing step's running total.
+    pub fn checked_add(&self, other: &ResourceVec) -> anyhow::Result<ResourceVec> {
+        let add = |name: &str, a: u64, b: u64| -> anyhow::Result<u64> {
+            a.checked_add(b)
+                .ok_or_else(|| anyhow::anyhow!("{name} total {a} + {b} overflows"))
+        };
+        Ok(ResourceVec {
+            lut: add("LUT", self.lut, other.lut)?,
+            ff: add("FF", self.ff, other.ff)?,
+            dsp: add("DSP", self.dsp, other.dsp)?,
+            bram: add("BRAM", self.bram, other.bram)?,
+        })
     }
 
     /// Component-wise saturating subtraction (remaining budget).
@@ -118,9 +180,24 @@ impl ResourceVec {
         best
     }
 
-    /// Max utilisation fraction (for penalty terms in the optimizer).
+    /// Max utilisation fraction (for penalty terms in the optimizer) —
+    /// an alias of [`ResourceVec::utilization`], kept for the
+    /// optimizer-facing name.
     pub fn max_utilisation(&self, budget: &ResourceVec) -> f64 {
-        self.limiting(budget).1
+        self.utilization(budget)
+    }
+
+    /// The scalar **area norm**: the fraction of `board` this vector
+    /// occupies, taken as the limiting-resource utilisation (L∞ over the
+    /// four per-component fractions). This is the area axis of the
+    /// throughput/area Pareto frontier (`dse::pareto`) and the
+    /// denominator of the paper's "matches the baseline's throughput
+    /// with 46% of its resources" claim: a design fits a board scaling
+    /// `s` iff `utilization(board) <= s` (up to per-component flooring).
+    /// The annealer's overrun penalty reads the same norm through
+    /// [`ResourceVec::max_utilisation`], so the two can never diverge.
+    pub fn utilization(&self, board: &ResourceVec) -> f64 {
+        self.limiting(board).1
     }
 
     /// Serialize for design artifacts (`artifacts/designs/*.json`).
@@ -159,15 +236,14 @@ impl ResourceVec {
     }
 }
 
+/// Saturating by policy: resource totals must never wrap. A saturated
+/// sum keeps failing `fits_in` against any real board, which is the
+/// correct failure mode for the optimizer's running totals; callers
+/// that need overflow *reported* use [`ResourceVec::checked_add`].
 impl Add for ResourceVec {
     type Output = ResourceVec;
     fn add(self, o: ResourceVec) -> ResourceVec {
-        ResourceVec {
-            lut: self.lut + o.lut,
-            ff: self.ff + o.ff,
-            dsp: self.dsp + o.dsp,
-            bram: self.bram + o.bram,
-        }
+        self.saturating_add(&o)
     }
 }
 
@@ -177,15 +253,13 @@ impl AddAssign for ResourceVec {
     }
 }
 
+/// Saturating by policy (see [`Add`]): subtracting more than is present
+/// clamps to zero — "remaining budget" semantics — instead of the
+/// debug-panic / release-wrap of raw `u64` subtraction.
 impl Sub for ResourceVec {
     type Output = ResourceVec;
     fn sub(self, o: ResourceVec) -> ResourceVec {
-        ResourceVec {
-            lut: self.lut - o.lut,
-            ff: self.ff - o.ff,
-            dsp: self.dsp - o.dsp,
-            bram: self.bram - o.bram,
-        }
+        self.saturating_sub(&o)
     }
 }
 
@@ -243,5 +317,61 @@ mod tests {
             .utilisation(&ResourceVec::ZERO);
         assert!(u[0].is_infinite());
         assert_eq!(u[1], 0.0);
+    }
+
+    #[test]
+    fn add_saturates_at_the_boundary() {
+        let big = ResourceVec::new(u64::MAX - 1, u64::MAX, 10, 10);
+        let one = ResourceVec::new(2, 1, 1, 1);
+        let sum = big + one;
+        assert_eq!(sum.lut, u64::MAX);
+        assert_eq!(sum.ff, u64::MAX);
+        assert_eq!(sum.dsp, 11);
+        // A saturated total still fails any realistic budget check.
+        assert!(!sum.fits_in(&ResourceVec::new(218_600, 437_200, 900, 1_090)));
+    }
+
+    #[test]
+    fn sub_saturates_to_zero() {
+        let a = ResourceVec::new(5, 5, 5, 5);
+        let b = ResourceVec::new(10, 3, 10, 3);
+        assert_eq!(a - b, ResourceVec::new(0, 2, 0, 2));
+    }
+
+    #[test]
+    fn checked_add_reports_overflow_component() {
+        let big = ResourceVec::new(10, 10, u64::MAX, 10);
+        let one = ResourceVec::new(1, 1, 1, 1);
+        let err = big.checked_add(&one).unwrap_err().to_string();
+        assert!(err.contains("DSP"), "error must name the component: {err}");
+        // In-range additions succeed and match the operator.
+        let a = ResourceVec::new(10, 20, 3, 4);
+        let b = ResourceVec::new(5, 5, 1, 1);
+        assert_eq!(a.checked_add(&b).unwrap(), a + b);
+    }
+
+    #[test]
+    fn checked_scaled_boundaries() {
+        let b = ResourceVec::new(11, 11, 11, 11);
+        assert_eq!(b.checked_scaled(0.5).unwrap(), b.scaled(0.5));
+        assert_eq!(b.checked_scaled(0.0).unwrap(), ResourceVec::ZERO);
+        assert!(b.checked_scaled(-1.0).is_err());
+        assert!(b.checked_scaled(f64::NAN).is_err());
+        assert!(b.checked_scaled(f64::INFINITY).is_err());
+        assert!(ResourceVec::new(u64::MAX, 0, 0, 0)
+            .checked_scaled(2.0)
+            .is_err());
+    }
+
+    #[test]
+    fn utilization_is_the_limiting_fraction() {
+        let board = ResourceVec::new(1000, 1000, 100, 100);
+        let use_ = ResourceVec::new(100, 100, 46, 10);
+        assert!((use_.utilization(&board) - 0.46).abs() < 1e-12);
+        assert_eq!(
+            use_.utilization(&board),
+            use_.max_utilisation(&board),
+            "area norm and optimizer penalty norm must agree"
+        );
     }
 }

@@ -168,6 +168,167 @@ fn server_rejects_unknown_network() {
     assert!(Server::start(ServerConfig::new(dir, "nope")).is_err());
 }
 
+// ---------------------------------------------------------------------
+// Golden-file regression tests for report output
+// ---------------------------------------------------------------------
+//
+// Two layers of goldens (flow documented in DESIGN.md §8):
+//
+// * **Synthetic goldens** — the pure renderers (`render_frontier`,
+//   `render_fig8_design`, the frontier JSON) applied to hand-built
+//   fixtures with exact values; committed and compared byte-for-byte.
+// * **Pinned-seed testnet golden** — `report pareto` + `report fig8`
+//   bodies for `testnet::three_exit()` under a pinned anneal seed.
+//
+// `UPDATE_GOLDENS=1 cargo test` refreshes every fixture. A *missing*
+// fixture is bootstrapped (written and the test passes with a notice),
+// so fresh checkouts and toolchain-less environments stay green; the
+// regression gate is the committed file.
+
+mod goldens {
+    use std::path::{Path, PathBuf};
+
+    use atheena::coordinator::pipeline::{
+        DesignFrontier, EnvelopePoint, OperatingEnvelope, Toolflow,
+    };
+    use atheena::coordinator::toolflow::ToolflowOptions;
+    use atheena::dse::{FrontierPoint, ParetoFrontier};
+    use atheena::ir::network::testnet;
+    use atheena::report::figures::render_fig8_design;
+    use atheena::report::tables::render_frontier;
+    use atheena::resources::{Board, ResourceVec};
+
+    fn golden_path(name: &str) -> PathBuf {
+        Path::new("rust/tests/goldens").join(name)
+    }
+
+    /// Compare `actual` against the committed fixture. UPDATE_GOLDENS=1
+    /// (or a missing fixture — the bootstrap path) writes it instead.
+    fn assert_golden(name: &str, actual: &str) {
+        let path = golden_path(name);
+        let update = std::env::var("UPDATE_GOLDENS").ok().as_deref() == Some("1");
+        if update || !path.exists() {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, actual).unwrap();
+            if !update {
+                eprintln!("[golden] bootstrapped {}", path.display());
+            }
+            return;
+        }
+        let want = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            actual,
+            want,
+            "golden mismatch for {name}; refresh with UPDATE_GOLDENS=1 cargo test"
+        );
+    }
+
+    fn fp(
+        frac: f64,
+        ii: u64,
+        thr: f64,
+        res: ResourceVec,
+        util: f64,
+        source: usize,
+    ) -> FrontierPoint {
+        FrontierPoint {
+            budget_fraction: frac,
+            ii,
+            throughput: thr,
+            resources: res,
+            utilization: util,
+            source,
+        }
+    }
+
+    /// Hand-built frontier with exact, tie-free values (the rendering
+    /// fixture — not a real DSE output).
+    fn synthetic_frontier() -> DesignFrontier {
+        DesignFrontier {
+            baseline: ParetoFrontier::from_points(vec![
+                fp(0.5, 100, 500.0, ResourceVec::new(100_000, 200_000, 450, 500), 0.5, 0),
+                fp(1.0, 50, 1000.0, ResourceVec::new(190_000, 380_000, 810, 900), 0.9, 1),
+            ]),
+            ee: ParetoFrontier::from_points(vec![
+                fp(0.25, 40, 980.0, ResourceVec::new(76_000, 150_000, 315, 380), 0.35, 0),
+                fp(1.0, 20, 2000.0, ResourceVec::new(175_000, 350_000, 720, 870), 0.8, 1),
+            ]),
+        }
+    }
+
+    fn synthetic_envelope() -> OperatingEnvelope {
+        let pt = |q: f64, thr: f64, stalls: u64, deadlock: bool| EnvelopePoint {
+            q,
+            throughput_sps: thr,
+            stall_cycles: stalls,
+            deadlock,
+        };
+        OperatingEnvelope {
+            design_p: 0.4,
+            points: vec![
+                pt(0.2, 1200.0, 0, false),
+                pt(0.4, 1000.0, 0, false),
+                pt(0.6, 800.0, 5000, false),
+                pt(0.8, 400.0, 20_000, true),
+            ],
+        }
+    }
+
+    #[test]
+    fn golden_frontier_table() {
+        let table = render_frontier(&synthetic_frontier(), "zc706", 0.05);
+        // The headline fraction must be present before byte-comparing.
+        assert!(table.contains("resource-matched:"));
+        assert!(table.contains("39% of the baseline's area"));
+        assert_golden("frontier_table.txt", &table);
+    }
+
+    #[test]
+    fn golden_frontier_json() {
+        assert_golden(
+            "frontier.json",
+            &synthetic_frontier().to_json().to_string_pretty(),
+        );
+    }
+
+    #[test]
+    fn golden_fig8_design_block() {
+        let block = render_fig8_design(0.5, 450, &synthetic_envelope());
+        assert!(block.contains("DEADLOCK"));
+        assert_golden("fig8_design.txt", &block);
+    }
+
+    #[test]
+    fn golden_three_exit_reports_pinned_seed() {
+        // `report pareto` + `report fig8` bodies for the synthetic
+        // 3-exit network under a pinned anneal seed: deterministic,
+        // bootstrap-on-first-run (see module docs).
+        let net = testnet::three_exit();
+        let mut opts = ToolflowOptions::quick(Board::zc706());
+        opts.sweep.anneal.seed = 0xA7EE_601D;
+        let realized = Toolflow::new(&net, &opts)
+            .unwrap()
+            .sweep()
+            .unwrap()
+            .combine()
+            .unwrap()
+            .realize()
+            .unwrap();
+        let mut out = render_frontier(&realized.frontier, "zc706", 0.05);
+        for d in &realized.designs {
+            out.push_str(&render_fig8_design(
+                d.budget_fraction,
+                d.total_resources.dsp,
+                &d.envelope,
+            ));
+        }
+        // The acceptance surface: the resource fraction appears in the
+        // report output.
+        assert!(out.contains("resource-matched:"));
+        assert_golden("three_exit_pareto_fig8.txt", &out);
+    }
+}
+
 #[test]
 fn table4_networks_show_ee_gain_under_constraint() {
     let Some(dir) = artifacts() else { return };

@@ -1,0 +1,361 @@
+//! Property tests over the resource-budget DSE subsystem
+//! (`dse::pareto` + the pipeline's persisted [`DesignFrontier`] and the
+//! co-residency packing step). Invariants pinned here:
+//!
+//! * no frontier point dominates another, and the frontier is strictly
+//!   monotone in **both** axes (utilization and throughput),
+//! * the parallel frontier sweep is bit-identical to the sequential
+//!   ladder (the executor determinism contract, extended to `pareto`),
+//! * `MinAreaAtThroughput` meets its target and is never beaten by a
+//!   frontier point of lower area,
+//! * `ParetoFront` at a single budget degenerates **bit-identically**
+//!   to `MaxThroughput`,
+//! * `pack()` never exceeds the board budget and is deterministic — the
+//!   same picks whether computed directly or on executor workers, at
+//!   any worker count,
+//! * the schema-v4 frontier artifact survives the design cache
+//!   byte-for-byte and is served warm with **zero** anneal calls.
+
+use atheena::coordinator::pipeline::{pack_designs, Realized, Toolflow};
+use atheena::coordinator::toolflow::ToolflowOptions;
+use atheena::dse::{
+    anneal_call_count, min_area_design, solve, sweep_frontier, sweep_frontier_sequential,
+    FrontierPoint, Objective, ParetoConfig, ParetoFrontier, ProblemKind, Solution,
+};
+use atheena::ir::network::testnet;
+use atheena::ir::Cdfg;
+use atheena::resources::{Board, ResourceVec};
+use atheena::runtime::DesignCache;
+use atheena::util::exec::run_ordered;
+use atheena::util::proptest::{check, gen_range, gen_vec, prop_assert};
+use atheena::util::Rng;
+
+/// `anneal_call_count` is process-global; serialize every DSE-running
+/// test in this binary so zero-anneal assertions cannot observe a
+/// neighbour's search.
+static DSE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn dse_guard() -> std::sync::MutexGuard<'static, ()> {
+    DSE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Test-sized frontier ladder: full semantics, small anneal schedule.
+fn tiny_pareto(seed: u64) -> ParetoConfig {
+    let mut cfg = ParetoConfig::quick();
+    cfg.anneal.iterations = 300;
+    cfg.anneal.restarts = 1;
+    cfg.anneal.seed = seed;
+    cfg
+}
+
+fn random_frontier_point(r: &mut Rng) -> FrontierPoint {
+    let util = 0.01 + 0.99 * r.f64();
+    FrontierPoint {
+        budget_fraction: util,
+        ii: 1 + r.below(10_000) as u64,
+        throughput: 100.0 + 1e6 * r.f64(),
+        resources: ResourceVec::new(
+            (util * 218_600.0) as u64,
+            (util * 437_200.0) as u64,
+            (util * 900.0) as u64,
+            (util * 1_090.0) as u64,
+        ),
+        utilization: util,
+        source: r.below(64),
+    }
+}
+
+#[test]
+fn prop_frontier_non_dominated_and_monotone_both_axes() {
+    check(300, |r| {
+        let n = gen_range(r, 1, 40);
+        let raw = gen_vec(r, n, random_frontier_point);
+        let front = ParetoFrontier::from_points(raw.clone());
+        prop_assert(!front.is_empty(), "non-empty input must keep a point")?;
+        // No surviving point dominates another.
+        for a in &front.points {
+            for b in &front.points {
+                if std::ptr::eq(a, b) {
+                    continue;
+                }
+                prop_assert(
+                    !(a.throughput >= b.throughput && a.utilization <= b.utilization),
+                    "dominated point survived the frontier filter",
+                )?;
+            }
+        }
+        // Strictly monotone in both axes.
+        for w in front.points.windows(2) {
+            prop_assert(w[1].utilization > w[0].utilization, "utilization not ascending")?;
+            prop_assert(w[1].throughput > w[0].throughput, "throughput not ascending")?;
+        }
+        // Every survivor is one of the inputs, and every dropped input
+        // is dominated by some survivor (or a duplicate of one).
+        for p in &front.points {
+            prop_assert(raw.iter().any(|q| q == p), "filter invented a point")?;
+        }
+        for q in &raw {
+            let covered = front
+                .points
+                .iter()
+                .any(|p| p.throughput >= q.throughput && p.utilization <= q.utilization);
+            prop_assert(covered, "an input point is uncovered by the frontier")?;
+        }
+        // The min-area lookup agrees with a brute-force scan.
+        let target = 100.0 + 1e6 * r.f64();
+        let got = front.min_area_at(target);
+        let want = front
+            .points
+            .iter()
+            .filter(|p| p.throughput >= target)
+            .min_by(|a, b| a.utilization.total_cmp(&b.utilization));
+        prop_assert(
+            got.map(|p| p.utilization.to_bits()) == want.map(|p| p.utilization.to_bits()),
+            "min_area_at disagrees with brute force",
+        )
+    });
+}
+
+#[test]
+fn frontier_sweep_parallel_bit_identical_to_sequential() {
+    let _guard = dse_guard();
+    let net = testnet::blenet_like();
+    let board = Board::zc706();
+    for (kind, cdfg) in [
+        (ProblemKind::Baseline, Cdfg::lower_baseline(&net)),
+        (ProblemKind::Stage(0), Cdfg::lower(&net, 1)),
+    ] {
+        let cfg = tiny_pareto(0xA7EE_5001);
+        let (par, par_raw) = sweep_frontier(kind, &cdfg, &board, &cfg);
+        let (seq, seq_raw) = sweep_frontier_sequential(kind, &cdfg, &board, &cfg);
+        assert_eq!(par.len(), seq.len());
+        for (a, b) in par.points.iter().zip(&seq.points) {
+            assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+            assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+            assert_eq!(a.resources, b.resources);
+            assert_eq!(a.ii, b.ii);
+            assert_eq!(a.source, b.source);
+            assert_eq!(a.budget_fraction.to_bits(), b.budget_fraction.to_bits());
+        }
+        for (a, b) in par_raw.iter().zip(&seq_raw) {
+            assert_eq!(a.mapping.foldings, b.mapping.foldings);
+            assert_eq!(a.feasible, b.feasible);
+        }
+    }
+}
+
+#[test]
+fn min_area_meets_target_and_is_unbeaten_by_the_frontier() {
+    let _guard = dse_guard();
+    let net = testnet::blenet_like();
+    let board = Board::zc706();
+    let cdfg = Cdfg::lower_baseline(&net);
+    let cfg = tiny_pareto(0xA7EE_5002);
+    let (front, _) = sweep_frontier(ProblemKind::Baseline, &cdfg, &board, &cfg);
+    assert!(!front.is_empty());
+
+    // Targets across the frontier's reachable range.
+    let max_thr = front.best_throughput().unwrap().throughput;
+    for factor in [0.3, 0.6, 0.95] {
+        let target = max_thr * factor;
+        let out = min_area_design(ProblemKind::Baseline, &cdfg, &board, &cfg, target)
+            .unwrap();
+        assert!(out.result.feasible);
+        assert!(
+            out.result.throughput >= target,
+            "min-area result {} misses target {target}",
+            out.result.throughput
+        );
+        assert!(out.result.resources.fits_in(&board.resources));
+        assert!(
+            (out.utilization
+                - out.result.resources.utilization(&board.resources))
+            .abs()
+                < 1e-12
+        );
+        // Never beaten: no frontier point of strictly lower area also
+        // meets the target.
+        for p in &out.frontier.points {
+            assert!(
+                !(p.utilization < out.utilization && p.throughput >= target),
+                "frontier point (thr {}, util {}) beats the min-area pick (util {})",
+                p.throughput,
+                p.utilization,
+                out.utilization
+            );
+        }
+    }
+
+    // An unreachable target is an error, not a silent wrong answer.
+    assert!(min_area_design(
+        ProblemKind::Baseline,
+        &cdfg,
+        &board,
+        &cfg,
+        max_thr * 1e6
+    )
+    .is_err());
+}
+
+#[test]
+fn pareto_front_at_single_budget_degenerates_to_max_throughput() {
+    let _guard = dse_guard();
+    let net = testnet::blenet_like();
+    let board = Board::zc706();
+    let cdfg = Cdfg::lower_baseline(&net);
+    for frac in [0.4, 1.0] {
+        let mut cfg = tiny_pareto(0xA7EE_5003);
+        cfg.scalings = vec![frac];
+        let front = match solve(Objective::ParetoFront, ProblemKind::Baseline, &cdfg, &board, &cfg)
+            .unwrap()
+        {
+            Solution::Front(f) => f,
+            Solution::Design(_) => panic!("ParetoFront must return a frontier"),
+        };
+        let point = match solve(
+            Objective::MaxThroughput,
+            ProblemKind::Baseline,
+            &cdfg,
+            &board,
+            &cfg,
+        )
+        .unwrap()
+        {
+            Solution::Design(d) => d,
+            Solution::Front(_) => panic!("MaxThroughput must return a design"),
+        };
+        // The single-budget frontier is exactly the max-throughput
+        // design, bit for bit.
+        assert_eq!(front.len(), 1);
+        let fp = &front.points[0];
+        assert_eq!(fp.throughput.to_bits(), point.result.throughput.to_bits());
+        assert_eq!(fp.resources, point.result.resources);
+        assert_eq!(fp.ii, point.result.ii);
+        assert_eq!(fp.utilization.to_bits(), point.utilization.to_bits());
+        assert_eq!(fp.budget_fraction.to_bits(), point.budget_fraction.to_bits());
+    }
+}
+
+#[test]
+fn prop_pack_fits_budget_and_is_deterministic_across_workers() {
+    check(100, |r| {
+        let n = gen_range(r, 0, 24);
+        let candidates: Vec<(f64, ResourceVec)> = gen_vec(r, n, |r| {
+            let scale = 1 + r.below(500) as u64;
+            (
+                1.0 + 1e5 * r.f64(),
+                ResourceVec::new(scale * 400, scale * 800, scale * 2, scale * 2),
+            )
+        });
+        let board = Board::zc706();
+        let budget = board.budget(0.2 + 0.8 * r.f64());
+        let reference = pack_designs(&candidates, &budget);
+
+        // Budget respected, throughput totalled over the picks only.
+        prop_assert(
+            reference.total_resources.fits_in(&budget),
+            "packing exceeded the budget",
+        )?;
+        let mut total = ResourceVec::ZERO;
+        let mut thr = 0.0;
+        for &i in &reference.picked {
+            prop_assert(i < candidates.len(), "pick out of range")?;
+            total += candidates[i].1;
+            thr += candidates[i].0;
+        }
+        prop_assert(total == reference.total_resources, "pack total mismatch")?;
+        prop_assert(
+            thr.to_bits() == reference.total_throughput.to_bits(),
+            "pack throughput mismatch",
+        )?;
+        // No picked index repeats.
+        let mut seen = reference.picked.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        prop_assert(seen.len() == reference.picked.len(), "duplicate pick")?;
+
+        // Deterministic wherever it runs: recomputing on executor
+        // workers (any worker count, including nested-sequential
+        // collapse) reproduces the reference bit for bit.
+        let reruns = run_ordered(8, |_| pack_designs(&candidates, &budget));
+        for p in reruns {
+            prop_assert(p == reference, "pack diverged across executor workers")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn frontier_artifact_roundtrips_warm_with_zero_anneal_calls() {
+    let _guard = dse_guard();
+    let net = testnet::three_exit();
+    let mut opts = ToolflowOptions::quick(Board::zc706());
+    opts.sweep.fractions = vec![0.15, 0.25, 0.5, 1.0];
+    opts.sweep.anneal.seed = 0xA7EE_5004;
+
+    let dir = std::env::temp_dir().join(format!(
+        "atheena-pareto-props-{}",
+        std::process::id()
+    ));
+    let cache = DesignCache::open(&dir).unwrap();
+
+    let (cold, was_cached) = Realized::load_or_run(&cache, &net, &opts).unwrap();
+    assert!(!was_cached);
+    assert!(!cold.frontier.ee.is_empty());
+    assert!(!cold.frontier.baseline.is_empty());
+
+    // Warm: the frontier comes back byte-identical with zero anneals.
+    let before = anneal_call_count();
+    let (warm, was_cached) = Realized::load_or_run(&cache, &net, &opts).unwrap();
+    assert!(was_cached);
+    assert_eq!(warm.frontier, cold.frontier);
+    // Packing and the resource-matched report run from the warm
+    // artifact without any search.
+    let packing = warm.pack(&Board::zc706().resources);
+    assert!(!packing.picked.is_empty());
+    assert!(packing.total_resources.fits_in(&Board::zc706().resources));
+    if let Some(m) = warm.frontier.resource_matched(0.05) {
+        assert!(m.ee.throughput >= m.target);
+        assert!(
+            m.fraction < 1.0,
+            "resource-matched EE design should undercut the baseline's area \
+             (got {:.0}%)",
+            m.fraction * 100.0
+        );
+    }
+    assert_eq!(
+        anneal_call_count(),
+        before,
+        "frontier artifacts must keep the zero-anneal warm-cache contract"
+    );
+
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn pipeline_frontier_matches_standalone_extraction() {
+    // The persisted frontier is exactly what re-extracting from the
+    // realized designs yields — no hidden state.
+    let _guard = dse_guard();
+    let net = testnet::blenet_like();
+    let opts = ToolflowOptions::quick(Board::zc706());
+    let realized = Toolflow::new(&net, &opts)
+        .unwrap()
+        .sweep()
+        .unwrap()
+        .combine()
+        .unwrap()
+        .realize()
+        .unwrap();
+    let again = atheena::coordinator::pipeline::Combined::realize_frontier(
+        &opts.board,
+        &realized.baselines,
+        &realized.designs,
+    );
+    assert_eq!(again, realized.frontier);
+    // EE frontier provenance: every point's source resolves to a design
+    // with exactly those resources.
+    for p in &realized.frontier.ee.points {
+        assert_eq!(realized.designs[p.source].total_resources, p.resources);
+    }
+}

@@ -16,8 +16,8 @@
 //! * JSON round-trip over randomized documents.
 
 use atheena::coordinator::toolflow::synthetic_hard_flags;
-use atheena::ir::network::testnet;
-use atheena::ir::{Cdfg, HwOp, Op, Shape};
+use atheena::ir::network::{testnet, Accuracy, Network};
+use atheena::ir::{Cdfg, HwOp, Layer, Op, Shape};
 use atheena::resources::ResourceVec;
 use atheena::sdf::folding::{divisors, FoldingSpace};
 use atheena::sdf::perf;
@@ -347,6 +347,232 @@ fn prop_json_roundtrip_random_documents() {
             let back = json::parse(&text)
                 .map_err(|e| format!("reparse failed: {e} in {text}"))?;
             prop_assert(back == doc, "json roundtrip changed the document")?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Network-JSON round-trip fuzzing (util/json.rs + ir::Network)
+// ---------------------------------------------------------------------
+
+/// Generate a random valid N-exit network with `n_sections` backbone
+/// sections: shape-correct layer chains (via `Layer::infer_out`),
+/// Flatten+Linear exit branches and final classifier, non-increasing
+/// reach vectors. Always passes `Network::validate`.
+fn random_network_with(r: &mut Rng, n_sections: usize) -> Network {
+    let classes = 2 + r.below(15);
+    let mut shape = Shape::chw(
+        1 + r.below(3),
+        8 + 2 * r.below(5),
+        8 + 2 * r.below(5),
+    );
+    let input_shape = shape.clone();
+    let push = |layers: &mut Vec<Layer>, shape: &mut Shape, op: Op| {
+        let out = Layer::infer_out(&op, shape).expect("generated op must fit");
+        layers.push(Layer {
+            op,
+            in_shape: shape.clone(),
+            out_shape: out.clone(),
+        });
+        *shape = out;
+    };
+    let mut sections = Vec::new();
+    let mut exit_branches = Vec::new();
+    for sec in 0..n_sections {
+        let mut layers = Vec::new();
+        for _ in 0..1 + r.below(3) {
+            let (_, h, w) = shape.as_chw().expect("backbone stays CHW");
+            let op = match r.below(4) {
+                0 => Op::Conv {
+                    out_ch: 1 + r.below(8),
+                    k: 3,
+                    pad: 1,
+                    stride: 1,
+                },
+                1 => Op::Conv {
+                    out_ch: 1 + r.below(8),
+                    k: 5,
+                    pad: 2,
+                    stride: 1,
+                },
+                2 => Op::Relu,
+                _ if h >= 2 && w >= 2 => Op::MaxPool { k: 2, stride: 2 },
+                _ => Op::Relu,
+            };
+            push(&mut layers, &mut shape, op);
+        }
+        if sec + 1 == n_sections {
+            // Final classifier.
+            push(&mut layers, &mut shape, Op::Flatten);
+            push(&mut layers, &mut shape, Op::Linear { out: classes });
+        } else {
+            let mut branch = Vec::new();
+            let mut bs = shape.clone();
+            push(&mut branch, &mut bs, Op::Flatten);
+            push(&mut branch, &mut bs, Op::Linear { out: classes });
+            exit_branches.push(branch);
+        }
+        sections.push(layers);
+    }
+    let mut reach = |r: &mut Rng| -> Vec<f64> {
+        let mut probs = Vec::new();
+        let mut prev = 0.2 + 0.7 * r.f64();
+        for _ in 0..n_sections - 1 {
+            probs.push(prev);
+            prev *= 0.3 + 0.7 * r.f64();
+        }
+        probs
+    };
+    let acc = |r: &mut Rng| 0.5 + 0.5 * r.f64();
+    let net = Network {
+        name: format!("fuzz-{}", r.below(1_000_000)),
+        input_shape,
+        classes,
+        c_thr: 0.5 + 0.49 * r.f64(),
+        sections,
+        exit_branches,
+        reach_profile: reach(r),
+        reach_paper: reach(r),
+        accuracy: Accuracy {
+            exit_acc: acc(r),
+            final_acc: acc(r),
+            deployed_acc: acc(r),
+            exit_acc_on_taken: acc(r),
+            final_acc_on_hard: acc(r),
+        },
+        baseline_acc: acc(r),
+    };
+    net.validate().expect("generated network must validate");
+    net
+}
+
+fn random_network(r: &mut Rng) -> Network {
+    let n_sections = 2 + r.below(3);
+    random_network_with(r, n_sections)
+}
+
+#[test]
+fn prop_network_json_roundtrip_stable() {
+    // serialize → parse → serialize must reproduce the document (and
+    // its rendered text) bit for bit, for arbitrary generated networks.
+    check(120, |r| {
+        let net = random_network(r);
+        let doc = net.to_json();
+        let text = doc.to_string_pretty();
+        let parsed = json::parse(&text).map_err(|e| e.to_string())?;
+        prop_assert(parsed == doc, "text round trip changed the document")?;
+        let back = Network::from_json(&parsed).map_err(|e| e.to_string())?;
+        prop_assert(
+            back.to_json() == doc,
+            "serialize→parse→serialize changed the document",
+        )?;
+        prop_assert(
+            back.to_json().to_string_pretty() == text,
+            "serialized text unstable",
+        )?;
+        // Compact form round-trips too.
+        let compact = json::parse(&doc.to_string_compact()).map_err(|e| e.to_string())?;
+        prop_assert(compact == doc, "compact round trip changed the document")
+    });
+}
+
+#[test]
+fn prop_legacy_two_stage_json_matches_modern_form() {
+    // A generated two-stage network emitted in the legacy
+    // stage1/exit_branch/stage2 format must parse into exactly the
+    // network the modern format describes.
+    check(80, |r| {
+        let net = random_network_with(r, 2);
+        let arr = |ls: &[Layer]| Json::arr(ls.iter().map(|l| l.to_json()));
+        let legacy = Json::obj(vec![
+            ("name", Json::str(net.name.clone())),
+            ("input_shape", net.input_shape.to_json()),
+            ("classes", Json::num(net.classes as f64)),
+            ("c_thr", Json::Num(net.c_thr)),
+            ("p_profile", Json::Num(net.reach_profile[0])),
+            ("p_paper", Json::Num(net.reach_paper[0])),
+            ("stage1", arr(&net.sections[0])),
+            ("exit_branch", arr(&net.exit_branches[0])),
+            ("stage2", arr(&net.sections[1])),
+            (
+                "accuracy",
+                Json::obj(vec![
+                    ("exit_acc", Json::Num(net.accuracy.exit_acc)),
+                    ("final_acc", Json::Num(net.accuracy.final_acc)),
+                    ("deployed_acc", Json::Num(net.accuracy.deployed_acc)),
+                    (
+                        "exit_acc_on_taken",
+                        Json::Num(net.accuracy.exit_acc_on_taken),
+                    ),
+                    (
+                        "final_acc_on_hard",
+                        Json::Num(net.accuracy.final_acc_on_hard),
+                    ),
+                ]),
+            ),
+            ("baseline_acc", Json::Num(net.baseline_acc)),
+        ]);
+        let reparsed = json::parse(&legacy.to_string_compact())
+            .map_err(|e| e.to_string())?;
+        let parsed = Network::from_json(&reparsed).map_err(|e| e.to_string())?;
+        prop_assert(
+            parsed.to_json() == net.to_json(),
+            "legacy form diverged from the modern form",
+        )
+    });
+}
+
+#[test]
+fn prop_malformed_network_json_errors_never_panic() {
+    check(200, |r| {
+        let net = random_network(r);
+        let text = net.to_json().to_string_compact();
+
+        // Truncation at an arbitrary char boundary: parse must return
+        // (almost always Err), never panic.
+        let cut = r.below(text.chars().count());
+        let truncated: String = text.chars().take(cut).collect();
+        let _ = json::parse(&truncated);
+
+        // Single-character corruption: parse may succeed or fail; a
+        // successful parse feeds Network::from_json, which must error
+        // or succeed — never panic.
+        let mut chars: Vec<char> = text.chars().collect();
+        let idx = r.below(chars.len());
+        chars[idx] = *r.choose(&[
+            '{', '}', '[', ']', ':', ',', 'x', '"', '7', '\\', '-', ' ',
+        ]);
+        let corrupted: String = chars.into_iter().collect();
+        if let Ok(doc) = json::parse(&corrupted) {
+            let _ = Network::from_json(&doc);
+        }
+
+        // Structural damage: dropping any top-level field is an error.
+        if let Json::Obj(mut map) = net.to_json() {
+            let keys: Vec<String> = map.keys().cloned().collect();
+            let k = r.choose(&keys).clone();
+            map.remove(&k);
+            prop_assert(
+                Network::from_json(&Json::Obj(map)).is_err(),
+                &format!("missing '{k}' must be a parse error"),
+            )?;
+        }
+
+        // Type confusion and hostile values: errors, not panics.
+        for (key, val) in [
+            ("classes", Json::Str("ten".into())),
+            ("sections", Json::Num(3.0)),
+            ("reach_profile", Json::arr(vec![Json::Num(f64::NAN)])),
+            ("c_thr", Json::Num(-1.0)),
+        ] {
+            if let Json::Obj(mut map) = net.to_json() {
+                map.insert(key.to_string(), val);
+                prop_assert(
+                    Network::from_json(&Json::Obj(map)).is_err(),
+                    &format!("hostile '{key}' must be a parse error"),
+                )?;
+            }
         }
         Ok(())
     });
