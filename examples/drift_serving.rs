@@ -13,6 +13,10 @@
 //! * controller **on** (`Controller` retuning thresholds from observed
 //!   confidences): the realized rates track the target and throughput
 //!   recovers.
+//!
+//! Pass `--trace-out FILE` to record the controller-on run through the
+//! trace subsystem and write a Chrome-trace/Perfetto JSON of it
+//! (sections, buffers, retunes — open at ui.perfetto.dev).
 
 use atheena::coordinator::pipeline::Toolflow;
 use atheena::coordinator::toolflow::ToolflowOptions;
@@ -20,9 +24,10 @@ use atheena::ee::decision::{Controller, Fixed};
 use atheena::ir::network::testnet;
 use atheena::resources::Board;
 use atheena::sim::{
-    design_operating_point, simulate_closed_loop, ClosedLoopConfig, ClosedLoopReport,
-    DriftScenario,
+    design_operating_point, simulate_closed_loop, simulate_closed_loop_traced, ClosedLoopConfig,
+    ClosedLoopReport, DriftScenario,
 };
+use atheena::trace::{write_chrome_trace, Recorder, DEFAULT_RECORDER_CAPACITY};
 
 fn print_run(label: &str, rep: &ClosedLoopReport, drift: &DriftScenario, samples: usize) {
     println!("\n-- {label} --");
@@ -92,8 +97,24 @@ fn main() -> anyhow::Result<()> {
     let fixed_rep = simulate_closed_loop(&best.timing, &opts.sim, &mut off, &drift, &run);
     print_run("controller OFF (fixed design thresholds)", &fixed_rep, &drift, run.samples);
 
+    // `--trace-out FILE` records the controller-on run and exports it
+    // as a Perfetto trace; tracing leaves the sim result bit-identical.
+    let trace_out = std::env::args()
+        .skip_while(|a| a != "--trace-out")
+        .nth(1);
     let mut on = Controller::new(op.clone(), 2048);
-    let ctl_rep = simulate_closed_loop(&best.timing, &opts.sim, &mut on, &drift, &run);
+    let ctl_rep = match &trace_out {
+        Some(path) => {
+            let mut rec = Recorder::new(DEFAULT_RECORDER_CAPACITY);
+            let rep =
+                simulate_closed_loop_traced(&best.timing, &opts.sim, &mut on, &drift, &run, &mut rec);
+            let events = rec.take_events();
+            std::fs::write(path, write_chrome_trace(&events, opts.sim.clock_hz))?;
+            println!("wrote {} trace events to {path}", events.len());
+            rep
+        }
+        None => simulate_closed_loop(&best.timing, &opts.sim, &mut on, &drift, &run),
+    };
     print_run("controller ON (closed-loop retuning)", &ctl_rep, &drift, run.samples);
 
     // ---- summary ----

@@ -3,7 +3,8 @@
 //! the perf-trajectory JSONs:
 //!
 //! * `simulate_multi` samples/s (fresh-allocation vs reused
-//!   [`SimScratch`])                      → `BENCH_sim.json`
+//!   [`SimScratch`], plus traced-vs-untraced: NullSink and live
+//!   Recorder entries)                    → `BENCH_sim.json`
 //! * simulated-annealing proposals/s (parallel restarts vs the
 //!   sequential reference)                → `BENCH_dse.json`
 //! * cold `run_toolflow` wall-clock on the 3-exit test network
@@ -26,6 +27,7 @@ use atheena::resources::Board;
 use atheena::runtime::DesignCache;
 use atheena::sdf::HwMapping;
 use atheena::sim::{simulate_multi, DesignTiming, SimConfig, SimScratch};
+use atheena::trace::{NullSink, Recorder, DEFAULT_RECORDER_CAPACITY};
 use atheena::util::bench::BenchLog;
 
 const TOLERANCE: f64 = 0.25;
@@ -65,6 +67,33 @@ fn main() -> anyhow::Result<()> {
         "hotpath/simulate_multi/samples_per_s",
         batch as f64 * s.per_second(),
         "samples/s",
+    );
+    // Tracing cost on the same schedule: the NullSink entry must track
+    // the untraced scratch path (the zero-cost contract, DESIGN.md §9),
+    // and the Recorder entry prices live event capture.
+    let mut traced_scratch = SimScratch::new();
+    sim_log.bench(
+        &format!("hotpath/simulate_multi/null-sink-b{batch}"),
+        3,
+        iters,
+        || {
+            traced_scratch
+                .simulate_multi_traced(&timing, &cfg, &stages, &mut NullSink)
+                .total_cycles
+        },
+    );
+    let mut recorder = Recorder::new(DEFAULT_RECORDER_CAPACITY);
+    let mut rec_scratch = SimScratch::new();
+    sim_log.bench(
+        &format!("hotpath/simulate_multi/recorder-b{batch}"),
+        3,
+        iters,
+        || {
+            recorder.clear();
+            rec_scratch
+                .simulate_multi_traced(&timing, &cfg, &stages, &mut recorder)
+                .total_cycles
+        },
     );
 
     // ---- dse hot path: anneal proposals/s ---------------------------

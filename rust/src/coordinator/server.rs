@@ -32,6 +32,7 @@ use super::batcher::DynamicBatcher;
 use crate::ee::decision::{argmax, Controller, Fixed, OperatingPoint, ThresholdPolicy};
 use crate::ee::profiler::ReachEstimator;
 use crate::runtime::ArtifactStore;
+use crate::trace::{Recorder, TraceEvent};
 
 /// How exit decisions are made at serving time.
 #[derive(Clone, Debug)]
@@ -64,6 +65,12 @@ pub struct ServerConfig {
     /// Window of the streaming reach estimator behind
     /// [`ServerStats::estimated_reach`].
     pub estimator_window: usize,
+    /// Shared event recorder (DESIGN.md §9). When set, workers emit
+    /// `SampleAdmitted` per request, `ExitTaken` per completion, and
+    /// `BufferOccupancy` on every forwarding-channel watermark change,
+    /// timestamped in microseconds since server start (export with
+    /// `clock_hz = 1e6`). `None` costs the serving path nothing.
+    pub trace: Option<Arc<Mutex<Recorder>>>,
 }
 
 impl ServerConfig {
@@ -75,7 +82,33 @@ impl ServerConfig {
             batch_timeout: Duration::from_millis(2),
             policy: ServePolicy::Artifact,
             estimator_window: 256,
+            trace: None,
         }
+    }
+
+    /// Attach a shared trace recorder; keep a clone of the `Arc` to
+    /// export the events after shutdown.
+    pub fn with_trace(mut self, rec: Arc<Mutex<Recorder>>) -> ServerConfig {
+        self.trace = Some(rec);
+        self
+    }
+}
+
+/// A worker's handle on the shared recorder: clock epoch + sink.
+#[derive(Clone)]
+struct ServerTrace {
+    rec: Arc<Mutex<Recorder>>,
+    epoch: Instant,
+}
+
+impl ServerTrace {
+    /// Microseconds since server start (the producer tick).
+    fn now(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn emit(&self, ev: TraceEvent) {
+        self.rec.lock().unwrap_or_else(|e| e.into_inner()).record(ev);
     }
 }
 
@@ -152,21 +185,28 @@ impl ServerStats {
             .observe(stage);
     }
 
-    /// A sample crossed software Conditional Buffer `exit`.
-    fn forward(&self, exit: usize) {
+    /// A sample crossed software Conditional Buffer `exit`. Returns the
+    /// channel occupancy after the write (the watermark tracing emits).
+    fn forward(&self, exit: usize) -> u64 {
         if let Some(f) = self.forwarded.get(exit) {
             f.fetch_add(1, Ordering::Relaxed);
         }
         if let (Some(i), Some(p)) = (self.inflight.get(exit), self.peak_inflight.get(exit)) {
             let occ = i.fetch_add(1, Ordering::Relaxed) + 1;
             p.fetch_max(occ, Ordering::Relaxed);
+            occ
+        } else {
+            0
         }
     }
 
     /// A forwarded sample was accepted by the downstream worker.
-    fn drain(&self, exit: usize) {
+    /// Returns the channel occupancy after the drain.
+    fn drain(&self, exit: usize) -> u64 {
         if let Some(i) = self.inflight.get(exit) {
-            i.fetch_sub(1, Ordering::Relaxed);
+            i.fetch_sub(1, Ordering::Relaxed).saturating_sub(1)
+        } else {
+            0
         }
     }
 
@@ -321,6 +361,10 @@ impl Server {
         };
 
         let stats = Arc::new(ServerStats::new(n_sections, cfg.estimator_window));
+        let trace = cfg.trace.as_ref().map(|rec| ServerTrace {
+            rec: rec.clone(),
+            epoch: Instant::now(),
+        });
         let (req_tx, req_rx) = mpsc::channel::<Request>();
 
         // One forwarding channel per Conditional Buffer: worker i sends
@@ -340,6 +384,7 @@ impl Server {
             let stats = stats.clone();
             let cfg = cfg.clone();
             let policy = policy.clone();
+            let trace = trace.clone();
             let downstream = hard_txs[0].clone();
             workers.push(
                 std::thread::Builder::new()
@@ -355,6 +400,12 @@ impl Server {
                         while let Some(batch) = batcher.next_batch() {
                             stats.batches.fetch_add(1, Ordering::Relaxed);
                             for req in batch {
+                                if let Some(tr) = &trace {
+                                    tr.emit(TraceEvent::SampleAdmitted {
+                                        sample: req.id,
+                                        t: tr.now(),
+                                    });
+                                }
                                 match exec.run(&req.image) {
                                     Ok(out) => {
                                         if decide_exit(
@@ -364,6 +415,13 @@ impl Server {
                                             &out.exit_probs,
                                         ) {
                                             stats.record(0);
+                                            if let Some(tr) = &trace {
+                                                tr.emit(TraceEvent::ExitTaken {
+                                                    sample: req.id,
+                                                    stage: 0,
+                                                    t: tr.now(),
+                                                });
+                                            }
                                             let _ = req.resp.send(Response {
                                                 id: req.id,
                                                 pred: argmax(&out.exit_probs),
@@ -373,7 +431,14 @@ impl Server {
                                             });
                                         } else {
                                             // Route hard sample downstream.
-                                            stats.forward(0);
+                                            let occ = stats.forward(0);
+                                            if let Some(tr) = &trace {
+                                                tr.emit(TraceEvent::BufferOccupancy {
+                                                    buffer: 0,
+                                                    t: tr.now(),
+                                                    occupancy: occ as u32,
+                                                });
+                                            }
                                             let _ = downstream.send(HardSample {
                                                 id: req.id,
                                                 features: out.features,
@@ -399,6 +464,7 @@ impl Server {
             let stats = stats.clone();
             let cfg = cfg.clone();
             let policy = policy.clone();
+            let trace = trace.clone();
             let rx = rx_iter.next().expect("one rx per buffer");
             let downstream = hard_txs[sec].clone();
             workers.push(
@@ -411,7 +477,14 @@ impl Server {
                             .exit_stage(&cfg.network, sec)
                             .unwrap_or_else(|e| panic!("stage{} compile: {e}", sec + 1));
                         while let Ok(h) = rx.recv() {
-                            stats.drain(sec - 1);
+                            let occ = stats.drain(sec - 1);
+                            if let Some(tr) = &trace {
+                                tr.emit(TraceEvent::BufferOccupancy {
+                                    buffer: (sec - 1) as u32,
+                                    t: tr.now(),
+                                    occupancy: occ as u32,
+                                });
+                            }
                             match exec.run(&h.features) {
                                 Ok(out) => {
                                     if decide_exit(
@@ -421,6 +494,13 @@ impl Server {
                                         &out.exit_probs,
                                     ) {
                                         stats.record(sec);
+                                        if let Some(tr) = &trace {
+                                            tr.emit(TraceEvent::ExitTaken {
+                                                sample: h.id,
+                                                stage: sec as u32,
+                                                t: tr.now(),
+                                            });
+                                        }
                                         let _ = h.resp.send(Response {
                                             id: h.id,
                                             pred: argmax(&out.exit_probs),
@@ -429,7 +509,14 @@ impl Server {
                                             latency: h.submitted.elapsed(),
                                         });
                                     } else {
-                                        stats.forward(sec);
+                                        let occ = stats.forward(sec);
+                                        if let Some(tr) = &trace {
+                                            tr.emit(TraceEvent::BufferOccupancy {
+                                                buffer: sec as u32,
+                                                t: tr.now(),
+                                                occupancy: occ as u32,
+                                            });
+                                        }
                                         let _ = downstream.send(HardSample {
                                             id: h.id,
                                             features: out.features,
@@ -451,6 +538,7 @@ impl Server {
         {
             let stats = stats.clone();
             let cfg = cfg.clone();
+            let trace = trace.clone();
             let rx = rx_iter.next().expect("final rx");
             let final_stage = n_sections - 1;
             workers.push(
@@ -461,10 +549,24 @@ impl Server {
                             .expect("final worker: artifacts");
                         let exec = store.final_stage(&cfg.network).expect("final compile");
                         while let Ok(h) = rx.recv() {
-                            stats.drain(final_stage - 1);
+                            let occ = stats.drain(final_stage - 1);
+                            if let Some(tr) = &trace {
+                                tr.emit(TraceEvent::BufferOccupancy {
+                                    buffer: (final_stage - 1) as u32,
+                                    t: tr.now(),
+                                    occupancy: occ as u32,
+                                });
+                            }
                             match exec.run(&h.features) {
                                 Ok(probs) => {
                                     stats.record(final_stage);
+                                    if let Some(tr) = &trace {
+                                        tr.emit(TraceEvent::ExitTaken {
+                                            sample: h.id,
+                                            stage: final_stage as u32,
+                                            t: tr.now(),
+                                        });
+                                    }
                                     let _ = h.resp.send(Response {
                                         id: h.id,
                                         pred: argmax(&probs),

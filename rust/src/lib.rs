@@ -96,6 +96,20 @@
 //! optimization is property-tested bit-identical to its reference path,
 //! and `bench_hotpath` tracks the wins in `BENCH_{sim,dse,e2e}.json`.
 //!
+//! Observability is per-sample, not just aggregate (DESIGN.md §9): the
+//! `trace` subsystem captures structured events (`SampleAdmitted`,
+//! `SectionEnter/Exit`, `ExitTaken`, `BufferStalled/Drained`,
+//! `ThresholdRetuned`, `WindowStats`) from the simulator
+//! (`sim::simulate_multi_traced`), the closed-loop drift harness
+//! (`sim::drift::simulate_closed_loop_traced`), and the serving
+//! coordinator, behind the zero-cost `trace::TraceSink` contract — the
+//! default `trace::NullSink` leaves the hot paths bit-identical and
+//! allocation-free. A bounded `trace::Recorder` ring feeds the
+//! Chrome-trace/Perfetto exporter (`atheena trace` writes `trace.json`
+//! for `ui.perfetto.dev`) and the `trace::TraceSummary` aggregation
+//! (per-exit latency distributions, per-buffer stall totals,
+//! controller reconvergence time).
+//!
 //! See `DESIGN.md` for the architecture, the pipeline-stage contracts,
 //! and the substitution rationale, and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
@@ -112,4 +126,5 @@ pub mod runtime;
 pub mod sdf;
 pub mod sim;
 pub mod tap;
+pub mod trace;
 pub mod util;

@@ -7,21 +7,35 @@
 //!   pack     --network NAME [--board B] [--budget FRAC]
 //!   profile  --network NAME [--samples N]
 //!   infer    --network NAME [--batch N] [--q FRAC]
-//!   serve    --network NAME [--requests N]
+//!   serve    --network NAME [--requests N] [--trace-out FILE]
+//!   trace    [--network NAME | --testnet three_exit] [--out FILE]
+//!
+//! `trace` runs the closed-loop simulator with the event recorder
+//! attached, writes a Chrome-trace/Perfetto `trace.json` (open it at
+//! ui.perfetto.dev), and prints the aggregation table (DESIGN.md §9).
 //!
 //! Common flags: --artifacts DIR (default ./artifacts), --quick.
 //! (The vendored offline crate set has no clap; parsing is hand-rolled.)
 
 use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 
 use atheena::coordinator::batch::{BatchHost, PjrtOracle};
-use atheena::coordinator::pipeline::Realized;
+use atheena::coordinator::pipeline::{Realized, Toolflow};
 use atheena::coordinator::toolflow::ToolflowOptions;
 use atheena::coordinator::{ServePolicy, Server, ServerConfig};
+use atheena::ee::decision::{Controller, Fixed, ThresholdPolicy};
 use atheena::ee::{OperatingPoint, Profiler};
+use atheena::report::tables::render_trace_summary;
 use atheena::report::{self, ReportContext};
 use atheena::resources::Board;
 use atheena::runtime::{ArtifactStore, DesignCache};
+use atheena::sim::{
+    design_operating_point, simulate_closed_loop_traced, ClosedLoopConfig, DriftScenario,
+};
+use atheena::trace::{
+    validate_chrome_trace, write_chrome_trace, Recorder, TraceSummary, DEFAULT_RECORDER_CAPACITY,
+};
 use atheena::util::Rng;
 
 /// Minimal argument cracker: positionals + `--flag [value]` pairs.
@@ -90,14 +104,16 @@ impl Args {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: atheena <report|toolflow|pareto|pack|profile|infer|serve> [args]\n\
+        "usage: atheena <report|toolflow|pareto|pack|profile|infer|serve|trace> [args]\n\
          \n  report   <fig9a|fig9b|fig8|fig7|pareto|table1..table4|tables|all> [--artifacts DIR] [--quick]\
          \n  toolflow --network NAME [--board zc706|vu440] [--emit FILE] [--quick]\
          \n  pareto   --network NAME [--board zc706|vu440] [--slack FRAC] [--quick]\
          \n  pack     --network NAME [--board zc706|vu440] [--budget FRAC] [--quick]\
          \n  profile  --network NAME [--samples N]\
          \n  infer    --network NAME [--batch N] [--q FRAC]\
-         \n  serve    --network NAME [--requests N] [--controller] [--window N]"
+         \n  serve    --network NAME [--requests N] [--controller] [--window N] [--trace-out FILE]\
+         \n  trace    [--network NAME | --testnet three_exit] [--samples N] [--window N]\
+         \n           [--drift none|step|ramp|periodic] [--controller] [--capacity N] [--out FILE]"
     );
     std::process::exit(2);
 }
@@ -117,6 +133,7 @@ fn main() -> anyhow::Result<()> {
         "profile" => cmd_profile(&args),
         "infer" => cmd_infer(&args),
         "serve" => cmd_serve(&args),
+        "trace" => cmd_trace(&args),
         _ => usage(),
     }
 }
@@ -349,6 +366,113 @@ fn cmd_infer(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `atheena trace` — run the closed-loop simulator with the event
+/// recorder attached, write a Chrome-trace/Perfetto `trace.json`
+/// (one track per pipeline section / Conditional Buffer / control
+/// loop, flow arrows following each sample), and print the
+/// aggregation table (per-exit latency distributions, buffer stall
+/// totals, reconvergence time). DESIGN.md §9.
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    // Timing source: a cached realized network design, or the built-in
+    // pinned-seed three-exit testnet (the artifact-free / CI path).
+    let (timing, sim_cfg, reach, label) = if let Some(name) = args.get("network") {
+        let (realized, cached, _board) = resolve_realized(args)?;
+        if cached {
+            println!("design loaded from the design cache (zero anneal calls)");
+        }
+        let best = realized
+            .best_design()
+            .ok_or_else(|| anyhow::anyhow!("no design"))?;
+        (
+            best.timing.clone(),
+            realized.opts.sim.clone(),
+            realized.reach.clone(),
+            name.to_string(),
+        )
+    } else {
+        let which = args.get_or("testnet", "three_exit");
+        anyhow::ensure!(
+            which == "three_exit",
+            "unknown --testnet '{which}' (only 'three_exit' is built in)"
+        );
+        let net = atheena::ir::network::testnet::three_exit();
+        let mut opts = ToolflowOptions::quick(args.board()?);
+        // Pinned anneal seed: same design as the committed goldens.
+        opts.sweep.anneal.seed = 0xA7EE_601D;
+        let realized = Toolflow::new(&net, &opts)?.sweep()?.combine()?.realize()?;
+        let best = realized
+            .best_design()
+            .ok_or_else(|| anyhow::anyhow!("no design"))?;
+        (
+            best.timing.clone(),
+            opts.sim.clone(),
+            realized.reach.clone(),
+            "testnet::three_exit".to_string(),
+        )
+    };
+
+    let defaults = ClosedLoopConfig::default();
+    let run = ClosedLoopConfig {
+        samples: args
+            .get_or("samples", &defaults.samples.to_string())
+            .parse()?,
+        window: args.get_or("window", &defaults.window.to_string()).parse()?,
+        seed: match args.get("seed") {
+            Some(s) => s.parse()?,
+            None => defaults.seed,
+        },
+    };
+    let drift = match args.get_or("drift", "step").as_str() {
+        "none" => DriftScenario::None,
+        "step" => DriftScenario::Step { at: 0.25, to: 2.0 },
+        "ramp" => DriftScenario::Ramp { from: 1.0, to: 2.5 },
+        "periodic" => DriftScenario::Periodic {
+            period: (run.window * 4).max(1),
+            amplitude: 0.75,
+        },
+        other => anyhow::bail!("unknown --drift '{other}'"),
+    };
+    let mut policy: Box<dyn ThresholdPolicy> = if args.has("controller") {
+        Box::new(Controller::new(design_operating_point(&reach), run.window))
+    } else {
+        Box::new(Fixed::new(design_operating_point(&reach)))
+    };
+
+    let capacity: usize = args
+        .get_or("capacity", &DEFAULT_RECORDER_CAPACITY.to_string())
+        .parse()?;
+    let mut rec = Recorder::new(capacity);
+    println!(
+        "tracing {label}: {} samples, window {}, drift {:?}, {} policy",
+        run.samples,
+        run.window,
+        args.get_or("drift", "step"),
+        if args.has("controller") { "controller" } else { "fixed" }
+    );
+    let report = simulate_closed_loop_traced(&timing, &sim_cfg, policy.as_mut(), &drift, &run, &mut rec);
+
+    let dropped = rec.dropped();
+    let events = rec.take_events();
+    let clock_hz = sim_cfg.clock_hz;
+    let text = write_chrome_trace(&events, clock_hz);
+    let stats = validate_chrome_trace(&text)?;
+    let out = args.get_or("out", "trace.json");
+    std::fs::write(&out, &text)?;
+    println!(
+        "wrote {out}: {} trace events on {} tracks ({} spans, {} stall pairs, {} flows, {} counters) — open at ui.perfetto.dev",
+        stats.events, stats.tracks, stats.spans, stats.begin_end_pairs, stats.flows, stats.counters
+    );
+    println!(
+        "run: {:.0} samples/s overall, {} retunes, realized reach {:?}",
+        report.metrics.throughput_sps, report.retunes, report.realized_reach
+    );
+    print!(
+        "{}",
+        render_trace_summary(&TraceSummary::from_events(&events, clock_hz, dropped))
+    );
+    Ok(())
+}
+
 /// Load (or realize once and cache) the board design `serve` reports.
 /// A cold cache announces the one-time DSE cost before paying it.
 fn resolve_serve_design(args: &Args, name: &str) -> anyhow::Result<(Realized, bool)> {
@@ -398,6 +522,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
 
     let mut server_cfg = ServerConfig::new(args.artifacts(), name);
+    // `--trace-out FILE`: record admission / per-stage exit / buffer
+    // watermark events and export them as a Perfetto trace (timestamps
+    // are µs since server start, so the exporter clock is 1 MHz).
+    let trace_rec = args
+        .get("trace-out")
+        .map(|_| Arc::new(Mutex::new(Recorder::new(DEFAULT_RECORDER_CAPACITY))));
+    if let Some(rec) = &trace_rec {
+        server_cfg = server_cfg.with_trace(rec.clone());
+    }
     if args.has("controller") {
         // Closed-loop serving: steer the realized exit rates toward the
         // profiled reach vector by retuning thresholds at runtime.
@@ -478,5 +611,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         );
     }
     server.shutdown();
+    if let (Some(path), Some(rec)) = (args.get("trace-out"), trace_rec) {
+        let mut r = rec.lock().unwrap_or_else(|e| e.into_inner());
+        let dropped = r.dropped();
+        let events = r.take_events();
+        let text = write_chrome_trace(&events, 1e6);
+        let stats = validate_chrome_trace(&text)?;
+        std::fs::write(path, &text)?;
+        println!(
+            "wrote serving trace to {path}: {} events on {} tracks — open at ui.perfetto.dev",
+            stats.events, stats.tracks
+        );
+        print!(
+            "{}",
+            render_trace_summary(&TraceSummary::from_events(&events, 1e6, dropped))
+        );
+    }
     Ok(())
 }

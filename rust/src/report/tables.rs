@@ -1,6 +1,8 @@
 //! Table regeneration: Tables I–IV of §IV, plus the Fig. 9/10-style
 //! throughput/area frontier table (`report pareto`) rendered straight
-//! from the frontier persisted in the design artifact.
+//! from the frontier persisted in the design artifact, and the
+//! `atheena trace` aggregation table rendered from a
+//! [`TraceSummary`](crate::trace::TraceSummary).
 
 use std::fmt::Write as _;
 
@@ -11,6 +13,7 @@ use crate::coordinator::toolflow::{BaselineDesign, ChosenDesign};
 use crate::resources::Board;
 use crate::runtime::ArtifactStore;
 use crate::sim::DesignTiming;
+use crate::trace::TraceSummary;
 
 /// Pick three representative design points (low/mid/high budget) from a
 /// list sorted by budget fraction — the paper's B1–B3 / A1–A3.
@@ -75,6 +78,102 @@ pub fn render_frontier(f: &DesignFrontier, board_name: &str, slack: f64) -> Stri
                 s,
                 "resource-matched: no EE design reaches {keep:.0}% of the baseline max"
             );
+        }
+    }
+    s
+}
+
+/// Render the `atheena trace` aggregation table: per-exit latency
+/// distributions (ticks and µs at the producer clock), per-buffer
+/// stall/residency totals, and the closed-loop reconvergence span.
+/// Pure function of the [`TraceSummary`] — golden-tested
+/// byte-for-byte in `tests/trace_props.rs`.
+pub fn render_trace_summary(t: &TraceSummary) -> String {
+    let mut s = String::new();
+    let us = |ticks: f64| ticks * 1e6 / t.clock_hz;
+    let _ = writeln!(
+        s,
+        "== Trace summary: {} samples at {:.1} MHz ==",
+        t.samples,
+        t.clock_hz / 1e6
+    );
+    if t.dropped_events > 0 {
+        let _ = writeln!(
+            s,
+            "(recorder ring evicted {} oldest events; head of the run is missing)",
+            t.dropped_events
+        );
+    }
+    let _ = writeln!(s, "-- per-exit latency (admission -> retirement, ticks) --");
+    let _ = writeln!(
+        s,
+        "{:>5} {:>8} {:>7} {:>9} {:>11} {:>9} {:>9} {:>9} {:>10}",
+        "exit", "count", "rate%", "min", "mean", "p50", "p99", "max", "mean(us)"
+    );
+    for e in &t.exits {
+        let _ = writeln!(
+            s,
+            "{:>5} {:>8} {:>7.1} {:>9} {:>11.1} {:>9} {:>9} {:>9} {:>10.2}",
+            e.stage,
+            e.count,
+            e.rate * 100.0,
+            e.min,
+            e.mean,
+            e.p50,
+            e.p99,
+            e.max,
+            us(e.mean)
+        );
+    }
+    for e in &t.exits {
+        let hist: Vec<String> = e.histogram.iter().map(|c| c.to_string()).collect();
+        let _ = writeln!(
+            s,
+            "  exit {} latency histogram (log2 ticks): [{}]",
+            e.stage,
+            hist.join(", ")
+        );
+    }
+    if !t.buffers.is_empty() {
+        let _ = writeln!(s, "-- conditional buffers --");
+        let _ = writeln!(
+            s,
+            "{:>7} {:>8} {:>13} {:>9} {:>9} {:>13} {:>9}",
+            "buffer", "stalls", "stall_cycles", "drained", "dropped", "max_resident", "peak_occ"
+        );
+        for b in &t.buffers {
+            let _ = writeln!(
+                s,
+                "{:>7} {:>8} {:>13} {:>9} {:>9} {:>13} {:>9}",
+                b.buffer,
+                b.stall_events,
+                b.stall_cycles,
+                b.drained,
+                b.dropped,
+                b.max_residency,
+                b.peak_occupancy
+            );
+        }
+    }
+    if t.control.windows > 0 {
+        let c = &t.control;
+        let _ = writeln!(s, "-- closed-loop control --");
+        let _ = writeln!(
+            s,
+            "  windows {} | retunes {} | mean window throughput {:.0} samples/s",
+            c.windows, c.retunes, c.mean_throughput_sps
+        );
+        match (c.first_retune_window, c.reconverge_ticks, c.reconverge_windows) {
+            (Some(fw), Some(ticks), Some(wins)) => {
+                let _ = writeln!(
+                    s,
+                    "  first retune at window {fw}; reconverged over {wins} windows ({ticks} ticks = {:.1} us)",
+                    us(ticks as f64)
+                );
+            }
+            _ => {
+                let _ = writeln!(s, "  no retunes observed (thresholds held steady)");
+            }
         }
     }
     s

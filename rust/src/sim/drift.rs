@@ -23,10 +23,11 @@
 
 use crate::ee::decision::{OperatingPoint, ThresholdPolicy};
 use crate::ee::profiler::ReachEstimator;
+use crate::trace::{NullSink, TraceEvent, TraceSink};
 use crate::util::Rng;
 
 use super::config::{DriftScenario, SimConfig};
-use super::engine::{simulate_multi, DesignTiming, SimResult};
+use super::engine::{simulate_multi, simulate_multi_traced, DesignTiming, SimResult};
 use super::metrics::SimMetrics;
 
 /// Shape of one closed-loop run.
@@ -123,14 +124,48 @@ pub fn simulate_closed_loop(
     drift: &DriftScenario,
     run: &ClosedLoopConfig,
 ) -> ClosedLoopReport {
+    closed_loop_core(t, cfg, policy, drift, run, &mut NullSink)
+}
+
+/// [`simulate_closed_loop`] with event tracing (DESIGN.md §9): the
+/// timed schedule streams per-sample events through
+/// [`simulate_multi_traced`], and the window loop adds
+/// [`TraceEvent::WindowStats`] spans plus one
+/// [`TraceEvent::ThresholdRetuned`] per window in which the policy
+/// moved its thresholds. Decisions consume the RNG identically to the
+/// untraced run, so the report is bit-for-bit the same.
+pub fn simulate_closed_loop_traced(
+    t: &DesignTiming,
+    cfg: &SimConfig,
+    policy: &mut dyn ThresholdPolicy,
+    drift: &DriftScenario,
+    run: &ClosedLoopConfig,
+    sink: &mut dyn TraceSink,
+) -> ClosedLoopReport {
+    closed_loop_core(t, cfg, policy, drift, run, sink)
+}
+
+fn closed_loop_core(
+    t: &DesignTiming,
+    cfg: &SimConfig,
+    policy: &mut dyn ThresholdPolicy,
+    drift: &DriftScenario,
+    run: &ClosedLoopConfig,
+    sink: &mut dyn TraceSink,
+) -> ClosedLoopReport {
     let n = run.samples;
     let n_exits = t.exits.len();
     let window = run.window.clamp(1, n.max(1));
     let mut rng = Rng::new(run.seed);
     let mut estimator = ReachEstimator::windowed(n_exits, window);
 
+    let tracing = sink.enabled();
     let mut completes_at = Vec::with_capacity(n);
     let mut threshold_snapshots: Vec<Vec<f64>> = Vec::new();
+    // Cumulative policy retunes at each window boundary (traced runs
+    // only; the decision loop itself is untouched so the RNG stream —
+    // and thus every decision — matches the untraced run exactly).
+    let mut retune_marks: Vec<u64> = Vec::new();
     let mut start = 0usize;
     while start < n {
         let end = (start + window).min(n);
@@ -151,10 +186,17 @@ pub fn simulate_closed_loop(
             completes_at.push(depth);
         }
         threshold_snapshots.push(policy.operating_point().thresholds.clone());
+        if tracing {
+            retune_marks.push(policy.retunes());
+        }
         start = end;
     }
 
-    let sim = simulate_multi(t, cfg, &completes_at);
+    let sim = if tracing {
+        simulate_multi_traced(t, cfg, &completes_at, sink)
+    } else {
+        simulate_multi(t, cfg, &completes_at)
+    };
     let metrics = SimMetrics::from_result(&sim, cfg.clock_hz);
 
     // Window reports from the timed traces: each window's span runs from
@@ -213,6 +255,27 @@ pub fn simulate_closed_loop(
         } else {
             len as f64 * cfg.clock_hz / span as f64
         };
+        if tracing {
+            sink.emit(TraceEvent::WindowStats {
+                window: w as u32,
+                start_sample: start as u64,
+                len: len as u32,
+                t_start: prev_out,
+                t_end: max_out,
+                throughput_sps,
+                reach: reach.clone(),
+            });
+            let before = if w == 0 { 0 } else { retune_marks[w - 1] };
+            let delta = retune_marks[w].saturating_sub(before);
+            if delta > 0 {
+                sink.emit(TraceEvent::ThresholdRetuned {
+                    window: w as u32,
+                    t: max_out,
+                    thresholds: thresholds.clone(),
+                    retunes: delta,
+                });
+            }
+        }
         windows.push(WindowReport {
             start,
             len,
@@ -348,6 +411,49 @@ mod tests {
             assert_eq!(a.t_out, b.t_out);
             assert_eq!(a.exit_stage, b.exit_stage);
         }
+    }
+
+    #[test]
+    fn traced_closed_loop_is_bit_identical_and_emits_control_events() {
+        let t = toy3();
+        let reach = [0.4, 0.15];
+        let drift = DriftScenario::Step { at: 0.25, to: 2.0 };
+        let run = ClosedLoopConfig {
+            samples: 8192,
+            window: 1024,
+            seed: 0x57E9,
+        };
+        let cfg = SimConfig::default();
+        let mut plain_policy = Controller::new(design_operating_point(&reach), 1024);
+        let plain = simulate_closed_loop(&t, &cfg, &mut plain_policy, &drift, &run);
+        let mut traced_policy = Controller::new(design_operating_point(&reach), 1024);
+        let mut rec = crate::trace::Recorder::new(1 << 20);
+        let traced =
+            simulate_closed_loop_traced(&t, &cfg, &mut traced_policy, &drift, &run, &mut rec);
+
+        assert_eq!(plain.completes_at, traced.completes_at);
+        assert_eq!(plain.sim.total_cycles, traced.sim.total_cycles);
+        assert_eq!(plain.retunes, traced.retunes);
+        for (a, b) in plain.windows.iter().zip(&traced.windows) {
+            assert_eq!(a.throughput_sps, b.throughput_sps);
+            assert_eq!(a.thresholds, b.thresholds);
+        }
+        // One WindowStats per reporting window; retune deltas sum to
+        // the policy's total.
+        let windows = rec
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::WindowStats { .. }))
+            .count();
+        assert_eq!(windows, traced.windows.len());
+        let retune_sum: u64 = rec
+            .iter()
+            .map(|e| match e {
+                TraceEvent::ThresholdRetuned { retunes, .. } => *retunes,
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(retune_sum, traced.retunes);
+        assert!(retune_sum > 0, "step drift must force retunes");
     }
 
     #[test]

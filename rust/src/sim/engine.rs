@@ -33,6 +33,7 @@
 use super::config::SimConfig;
 use crate::ir::StageId;
 use crate::sdf::HwMapping;
+use crate::trace::{NullSink, TraceEvent, TraceSink};
 
 /// Timing of one backbone section.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -322,6 +323,20 @@ pub fn simulate_multi_faults(
     scratch.take_result()
 }
 
+/// [`simulate_multi`] with per-sample event tracing into `sink`
+/// (DESIGN.md §9). The schedule is computed identically — tracing only
+/// observes it — so the result is bit-for-bit the untraced one.
+pub fn simulate_multi_traced(
+    t: &DesignTiming,
+    cfg: &SimConfig,
+    completes_at: &[usize],
+    sink: &mut dyn TraceSink,
+) -> SimResult {
+    let mut scratch = SimScratch::new();
+    scratch.simulate_multi_traced(t, cfg, completes_at, sink);
+    scratch.take_result()
+}
+
 /// A Conditional Buffer's resident-sample leave times: a small sorted
 /// vec (descending, min at the tail) standing in for a
 /// `BinaryHeap<Reverse<u64>>`. Occupancy is bounded by the buffer depth
@@ -398,7 +413,7 @@ impl SimScratch {
         cfg: &SimConfig,
         completes_at: &[usize],
     ) -> &SimResult {
-        self.core(t, cfg, completes_at, &FaultModel::NONE);
+        self.core(t, cfg, completes_at, &FaultModel::NONE, &mut NullSink);
         &self.result
     }
 
@@ -410,7 +425,19 @@ impl SimScratch {
         completes_at: &[usize],
         faults: &FaultModel,
     ) -> &SimResult {
-        self.core(t, cfg, completes_at, faults);
+        self.core(t, cfg, completes_at, faults, &mut NullSink);
+        &self.result
+    }
+
+    /// [`simulate_multi_traced`] into this scratch.
+    pub fn simulate_multi_traced(
+        &mut self,
+        t: &DesignTiming,
+        cfg: &SimConfig,
+        completes_at: &[usize],
+        sink: &mut dyn TraceSink,
+    ) -> &SimResult {
+        self.core(t, cfg, completes_at, &FaultModel::NONE, sink);
         &self.result
     }
 
@@ -436,7 +463,7 @@ impl SimScratch {
         let mut completes = std::mem::take(&mut self.completes_buf);
         completes.clear();
         completes.extend(hard.iter().map(|&h| usize::from(h)));
-        self.core(t, cfg, &completes, faults);
+        self.core(t, cfg, &completes, faults, &mut NullSink);
         self.completes_buf = completes;
         &self.result
     }
@@ -490,12 +517,18 @@ impl SimScratch {
         self.merge_arrivals.reserve(n);
     }
 
-    fn core(
+    /// Generic over the sink so the [`NullSink`] instantiation (every
+    /// untraced entry point) statically sees `enabled() == false` and
+    /// compiles the emission sites out — tracing costs the hot path
+    /// nothing and never perturbs the schedule (the traced result is
+    /// property-tested bit-identical in `tests/trace_props.rs`).
+    fn core<S: TraceSink + ?Sized>(
         &mut self,
         t: &DesignTiming,
         cfg: &SimConfig,
         completes_at: &[usize],
         faults: &FaultModel,
+        sink: &mut S,
     ) {
         let n = completes_at.len();
         let n_sections = t.sections.len();
@@ -541,10 +574,19 @@ impl SimScratch {
             }
             let t_in = (s as u64 + 1) * dma_in + dma_skew;
             traces[s].t_in = t_in;
+            if sink.enabled() {
+                sink.emit(TraceEvent::SampleAdmitted {
+                    sample: s as u64,
+                    t: t_in,
+                });
+            }
 
             let mut arrival = t_in;
             let mut merge_arrival = 0u64;
             let mut path = n_sections - 1;
+            // Write time of the sample into the upstream Conditional
+            // Buffer (residency start for the drain event).
+            let mut last_split_out = 0u64;
 
             for sec in 0..=target {
                 // ---- section issue: input ready + pipeline II ----
@@ -575,17 +617,46 @@ impl SimScratch {
                         }
                         // Stall until the earliest occupant leaves.
                         let leave = buffers[sec].pop_min().unwrap();
+                        if sink.enabled() {
+                            sink.emit(TraceEvent::BufferStalled {
+                                buffer: sec as u32,
+                                sample: s as u64,
+                                t: write,
+                                cycles: leave - write,
+                            });
+                        }
                         stall[sec] += leave - write;
                         start += leave - write;
                     }
                 }
                 sec_prev[sec] = Some(start);
+                if sink.enabled() {
+                    sink.emit(TraceEvent::SectionEnter {
+                        sample: s as u64,
+                        section: sec as u32,
+                        t: start,
+                    });
+                    sink.emit(TraceEvent::SectionExit {
+                        sample: s as u64,
+                        section: sec as u32,
+                        t: start + t.sections[sec].lat,
+                    });
+                }
 
                 // Entering section `sec` drains the sample from the
                 // upstream buffer one cycle after acceptance.
                 if sec > 0 {
                     buffers[sec - 1].push(start + 1);
                     peak_occ[sec - 1] = peak_occ[sec - 1].max(buffers[sec - 1].len());
+                    if sink.enabled() {
+                        sink.emit(TraceEvent::BufferDrained {
+                            buffer: (sec - 1) as u32,
+                            sample: s as u64,
+                            enter: last_split_out,
+                            leave: start + 1,
+                            dropped: false,
+                        });
+                    }
                 }
 
                 if sec == n_sections - 1 {
@@ -597,6 +668,7 @@ impl SimScratch {
 
                 // Sample fully written to buffer `sec` + exit branch at:
                 let split_out = start + t.sections[sec].lat;
+                last_split_out = split_out;
 
                 // ---- exit branch / decision `sec` ----
                 let dec_start = split_out.max(match dec_prev[sec] {
@@ -617,6 +689,15 @@ impl SimScratch {
                     // merge.
                     buffers[sec].push(t_dec + 1);
                     peak_occ[sec] = peak_occ[sec].max(buffers[sec].len());
+                    if sink.enabled() {
+                        sink.emit(TraceEvent::BufferDrained {
+                            buffer: sec as u32,
+                            sample: s as u64,
+                            enter: split_out,
+                            leave: t_dec + 1,
+                            dropped: true,
+                        });
+                    }
                     merge_arrival = t_dec;
                     path = sec;
                     break;
@@ -631,6 +712,13 @@ impl SimScratch {
             path_arrivals[path].push((merge_arrival, s));
             traces[s].exit_stage = path;
             traces[s].exited_early = path < n_sections - 1;
+            if sink.enabled() {
+                sink.emit(TraceEvent::ExitTaken {
+                    sample: s as u64,
+                    stage: path as u32,
+                    t: merge_arrival,
+                });
+            }
         }
 
         // ---- exit merge + output DMA: serve in *arrival* order ----
@@ -686,6 +774,12 @@ impl SimScratch {
             let out_start = merge_free.max(dma_out_free);
             dma_out_free = out_start + dma_out;
             traces[s].t_out = dma_out_free;
+            if sink.enabled() {
+                sink.emit(TraceEvent::SampleRetired {
+                    sample: s as u64,
+                    t: dma_out_free,
+                });
+            }
         }
         // Out-of-order count: completions whose batch index goes
         // backwards.
@@ -1023,6 +1117,48 @@ mod tests {
             simulate_baseline_faults(&t, &cfg, n, &FaultModel::NONE).total_cycles,
             clean.total_cycles
         );
+    }
+
+    #[test]
+    fn traced_run_matches_untraced_and_balances_events() {
+        let t = toy3();
+        let cfg = SimConfig::default();
+        let completes: Vec<usize> = (0..120).map(|i| i % 3).collect();
+        let untraced = simulate_multi(&t, &cfg, &completes);
+        let mut rec = crate::trace::Recorder::new(1 << 16);
+        let traced = simulate_multi_traced(&t, &cfg, &completes, &mut rec);
+        assert_eq!(untraced.total_cycles, traced.total_cycles);
+        assert_eq!(untraced.stall_cycles, traced.stall_cycles);
+        for (a, b) in untraced.traces.iter().zip(&traced.traces) {
+            assert_eq!((a.t_in, a.t_out), (b.t_in, b.t_out));
+        }
+        let count = |pred: fn(&TraceEvent) -> bool| rec.iter().filter(|e| pred(e)).count();
+        let n = completes.len();
+        assert_eq!(count(|e| matches!(e, TraceEvent::SampleAdmitted { .. })), n);
+        assert_eq!(count(|e| matches!(e, TraceEvent::ExitTaken { .. })), n);
+        assert_eq!(count(|e| matches!(e, TraceEvent::SampleRetired { .. })), n);
+        // Section spans pair up; every buffer residency ends.
+        assert_eq!(
+            count(|e| matches!(e, TraceEvent::SectionEnter { .. })),
+            count(|e| matches!(e, TraceEvent::SectionExit { .. }))
+        );
+        // Each sample occupies buffer i iff it reaches section i: one
+        // residency per (sample, reached exit).
+        let residencies: usize = completes.iter().map(|&c| c.min(2)).sum::<usize>()
+            + completes.iter().filter(|&&c| c.min(2) < 2).count();
+        assert_eq!(
+            count(|e| matches!(e, TraceEvent::BufferDrained { .. })),
+            residencies
+        );
+        // Stall emissions reconcile with the aggregate stall counters.
+        let stall_total: u64 = rec
+            .iter()
+            .map(|e| match e {
+                TraceEvent::BufferStalled { cycles, .. } => *cycles,
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(stall_total, traced.total_stall_cycles());
     }
 
     #[test]

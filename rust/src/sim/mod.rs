@@ -29,12 +29,12 @@ pub mod metrics;
 
 pub use config::{DriftScenario, SimConfig};
 pub use drift::{
-    design_operating_point, simulate_closed_loop, ClosedLoopConfig, ClosedLoopReport,
-    WindowReport,
+    design_operating_point, simulate_closed_loop, simulate_closed_loop_traced,
+    ClosedLoopConfig, ClosedLoopReport, WindowReport,
 };
 pub use engine::{
     simulate_baseline, simulate_baseline_faults, simulate_ee, simulate_ee_faults,
-    simulate_multi, simulate_multi_faults, DesignTiming, ExitTiming, FaultModel,
-    SectionTiming, SimResult, SimScratch,
+    simulate_multi, simulate_multi_faults, simulate_multi_traced, DesignTiming,
+    ExitTiming, FaultModel, SectionTiming, SimResult, SimScratch,
 };
 pub use metrics::SimMetrics;

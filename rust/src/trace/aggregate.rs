@@ -1,0 +1,391 @@
+//! Span aggregation: turn a raw event stream back into the summary
+//! numbers a terminal wants — per-exit latency distributions, per-buffer
+//! stall totals, and closed-loop reconvergence time after a drift step.
+//!
+//! The aggregation works from the same flat [`TraceEvent`] stream the
+//! exporter consumes, so `atheena trace` computes both from one
+//! recorder pass. All latencies are reported in producer ticks AND in
+//! microseconds (via the producer clock), because the table is read
+//! next to Perfetto's microsecond timeline.
+
+use std::collections::BTreeMap;
+
+use super::event::TraceEvent;
+
+/// Latency distribution for one exit stage.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExitLatency {
+    /// Exit stage index (the final classifier is the last stage).
+    pub stage: u32,
+    /// Samples that completed at this stage.
+    pub count: u64,
+    /// Fraction of all completed samples.
+    pub rate: f64,
+    pub min: u64,
+    pub max: u64,
+    pub mean: f64,
+    pub p50: u64,
+    pub p99: u64,
+    /// Power-of-two latency histogram: `histogram[i]` counts samples
+    /// with latency in `[2^i, 2^(i+1))` ticks (bucket 0 is `[0, 2)`).
+    pub histogram: Vec<u64>,
+}
+
+/// Stall/residency totals for one Conditional Buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BufferSummary {
+    pub buffer: u32,
+    /// Number of producer stall episodes.
+    pub stall_events: u64,
+    /// Total cycles the producing section spent blocked on this buffer.
+    pub stall_cycles: u64,
+    /// Residency intervals that ended in a drain to the next section.
+    pub drained: u64,
+    /// Residency intervals that ended in an easy-path drop.
+    pub dropped: u64,
+    /// Longest single residency (ticks).
+    pub max_residency: u64,
+    /// Peak synthesised occupancy (from residency sweep or direct
+    /// occupancy samples).
+    pub peak_occupancy: u32,
+}
+
+/// Closed-loop control summary.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ControlSummary {
+    pub windows: u64,
+    pub retunes: u64,
+    /// Window index of the first retune, if any.
+    pub first_retune_window: Option<u32>,
+    /// Ticks from the first retune to the last — how long the
+    /// controller took to reconverge after the drift step. `Some(0)`
+    /// means a single corrective retune.
+    pub reconverge_ticks: Option<u64>,
+    /// Same span counted in windows.
+    pub reconverge_windows: Option<u32>,
+    pub mean_throughput_sps: f64,
+}
+
+/// Everything `atheena trace` prints.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceSummary {
+    /// Producer tick rate (for tick → µs conversion in rendering).
+    pub clock_hz: f64,
+    /// Samples with an `ExitTaken` event.
+    pub samples: u64,
+    pub exits: Vec<ExitLatency>,
+    pub buffers: Vec<BufferSummary>,
+    pub control: ControlSummary,
+    /// Events evicted by the recorder ring (0 unless the run
+    /// out-sized the ring; non-zero means the head of the run is
+    /// missing from the aggregation).
+    pub dropped_events: u64,
+}
+
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn log2_bucket(v: u64) -> usize {
+    (64 - v.max(1).leading_zeros() as usize).saturating_sub(1)
+}
+
+impl TraceSummary {
+    /// Aggregate a flat event stream. `dropped_events` is the
+    /// recorder's drop count (pass 0 for an unbounded capture).
+    pub fn from_events(events: &[TraceEvent], clock_hz: f64, dropped_events: u64) -> TraceSummary {
+        let mut admits: BTreeMap<u64, u64> = BTreeMap::new();
+        let mut retires: BTreeMap<u64, u64> = BTreeMap::new();
+        // sample -> (stage, exit t)
+        let mut taken: BTreeMap<u64, (u32, u64)> = BTreeMap::new();
+        let mut buffers: BTreeMap<u32, BufferSummary> = BTreeMap::new();
+        let mut occupancy_edges: BTreeMap<u32, Vec<(u64, i32)>> = BTreeMap::new();
+        let mut direct_occupancy: BTreeMap<u32, u32> = BTreeMap::new();
+        let mut control = ControlSummary::default();
+        let mut throughput_sum = 0.0;
+        let mut first_retune: Option<(u32, u64)> = None;
+        let mut last_retune: Option<(u32, u64)> = None;
+
+        let buf_entry = |m: &mut BTreeMap<u32, BufferSummary>, b: u32| {
+            m.entry(b).or_insert_with(|| BufferSummary {
+                buffer: b,
+                stall_events: 0,
+                stall_cycles: 0,
+                drained: 0,
+                dropped: 0,
+                max_residency: 0,
+                peak_occupancy: 0,
+            })
+        };
+
+        for ev in events {
+            match ev {
+                TraceEvent::SampleAdmitted { sample, t } => {
+                    admits.insert(*sample, *t);
+                }
+                TraceEvent::SampleRetired { sample, t } => {
+                    retires.insert(*sample, *t);
+                }
+                TraceEvent::ExitTaken { sample, stage, t } => {
+                    taken.insert(*sample, (*stage, *t));
+                }
+                TraceEvent::BufferStalled {
+                    buffer, cycles, ..
+                } => {
+                    let b = buf_entry(&mut buffers, *buffer);
+                    b.stall_events += 1;
+                    b.stall_cycles += cycles;
+                }
+                TraceEvent::BufferDrained {
+                    buffer,
+                    enter,
+                    leave,
+                    dropped,
+                    ..
+                } => {
+                    let b = buf_entry(&mut buffers, *buffer);
+                    if *dropped {
+                        b.dropped += 1;
+                    } else {
+                        b.drained += 1;
+                    }
+                    b.max_residency = b.max_residency.max(leave.saturating_sub(*enter));
+                    let edges = occupancy_edges.entry(*buffer).or_default();
+                    edges.push((*enter, 1));
+                    edges.push((*leave, -1));
+                }
+                TraceEvent::BufferOccupancy {
+                    buffer,
+                    occupancy,
+                    ..
+                } => {
+                    buf_entry(&mut buffers, *buffer);
+                    let peak = direct_occupancy.entry(*buffer).or_insert(0);
+                    *peak = (*peak).max(*occupancy);
+                }
+                TraceEvent::ThresholdRetuned { window, t, .. } => {
+                    if first_retune.is_none() {
+                        first_retune = Some((*window, *t));
+                    }
+                    last_retune = Some((*window, *t));
+                }
+                TraceEvent::WindowStats {
+                    throughput_sps, ..
+                } => {
+                    control.windows += 1;
+                    throughput_sum += throughput_sps;
+                }
+                TraceEvent::SectionEnter { .. } | TraceEvent::SectionExit { .. } => {}
+            }
+        }
+        // Retune count: the per-window `retunes` field is cumulative
+        // within a window; count the events themselves.
+        control.retunes = events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::ThresholdRetuned { .. }))
+            .count() as u64;
+        if let (Some((fw, ft)), Some((lw, lt))) = (first_retune, last_retune) {
+            control.first_retune_window = Some(fw);
+            control.reconverge_ticks = Some(lt.saturating_sub(ft));
+            control.reconverge_windows = Some(lw.saturating_sub(fw));
+        }
+        if control.windows > 0 {
+            control.mean_throughput_sps = throughput_sum / control.windows as f64;
+        }
+
+        // Peak occupancy: sweep residency edges (leave before enter on
+        // ties, matching the exporter), else direct samples.
+        for (buf, edges) in &mut occupancy_edges {
+            edges.sort_by_key(|&(t, delta)| (t, delta));
+            let mut level = 0i32;
+            let mut peak = 0i32;
+            for &(_, delta) in edges.iter() {
+                level += delta;
+                peak = peak.max(level);
+            }
+            if let Some(b) = buffers.get_mut(buf) {
+                b.peak_occupancy = peak.max(0) as u32;
+            }
+        }
+        for (buf, peak) in &direct_occupancy {
+            if let Some(b) = buffers.get_mut(buf) {
+                b.peak_occupancy = b.peak_occupancy.max(*peak);
+            }
+        }
+
+        // Per-exit latency: admission to retirement (simulator) or to
+        // the exit decision when no retirement was captured (server).
+        let mut per_exit: BTreeMap<u32, Vec<u64>> = BTreeMap::new();
+        for (sample, &(stage, t_exit)) in &taken {
+            let done = retires.get(sample).copied().unwrap_or(t_exit);
+            let lat = match admits.get(sample) {
+                Some(&t_in) => done.saturating_sub(t_in),
+                // Admission evicted by the ring: skip rather than
+                // fabricate a latency.
+                None => continue,
+            };
+            per_exit.entry(stage).or_default().push(lat);
+        }
+        let total: u64 = per_exit.values().map(|v| v.len() as u64).sum();
+        let exits = per_exit
+            .into_iter()
+            .map(|(stage, mut lats)| {
+                lats.sort_unstable();
+                let count = lats.len() as u64;
+                let sum: u64 = lats.iter().sum();
+                let mut histogram = vec![0u64; log2_bucket(*lats.last().unwrap()) + 1];
+                for &l in &lats {
+                    histogram[log2_bucket(l)] += 1;
+                }
+                ExitLatency {
+                    stage,
+                    count,
+                    rate: count as f64 / total.max(1) as f64,
+                    min: lats[0],
+                    max: *lats.last().unwrap(),
+                    mean: sum as f64 / count as f64,
+                    p50: percentile(&lats, 0.50),
+                    p99: percentile(&lats, 0.99),
+                    histogram,
+                }
+            })
+            .collect();
+
+        TraceSummary {
+            clock_hz,
+            samples: taken.len() as u64,
+            exits,
+            buffers: buffers.into_values().collect(),
+            control,
+            dropped_events,
+        }
+    }
+
+    /// Exit counts keyed by stage (for reconciling against
+    /// `SimMetrics::exit_rates` in tests).
+    pub fn exit_counts(&self) -> BTreeMap<u32, u64> {
+        self.exits.iter().map(|e| (e.stage, e.count)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log2_buckets() {
+        assert_eq!(log2_bucket(0), 0);
+        assert_eq!(log2_bucket(1), 0);
+        assert_eq!(log2_bucket(2), 1);
+        assert_eq!(log2_bucket(3), 1);
+        assert_eq!(log2_bucket(4), 2);
+        assert_eq!(log2_bucket(1023), 9);
+        assert_eq!(log2_bucket(1024), 10);
+    }
+
+    #[test]
+    fn aggregates_exits_and_buffers() {
+        let evs = vec![
+            TraceEvent::SampleAdmitted { sample: 0, t: 0 },
+            TraceEvent::SampleAdmitted { sample: 1, t: 5 },
+            TraceEvent::SampleAdmitted { sample: 2, t: 10 },
+            TraceEvent::ExitTaken { sample: 0, stage: 0, t: 8 },
+            TraceEvent::ExitTaken { sample: 1, stage: 1, t: 40 },
+            TraceEvent::ExitTaken { sample: 2, stage: 0, t: 20 },
+            TraceEvent::SampleRetired { sample: 0, t: 10 },
+            TraceEvent::SampleRetired { sample: 1, t: 45 },
+            TraceEvent::SampleRetired { sample: 2, t: 22 },
+            TraceEvent::BufferStalled {
+                buffer: 0,
+                sample: 1,
+                t: 6,
+                cycles: 4,
+            },
+            TraceEvent::BufferDrained {
+                buffer: 0,
+                sample: 0,
+                enter: 2,
+                leave: 9,
+                dropped: true,
+            },
+            TraceEvent::BufferDrained {
+                buffer: 0,
+                sample: 1,
+                enter: 6,
+                leave: 12,
+                dropped: false,
+            },
+        ];
+        let s = TraceSummary::from_events(&evs, 125e6, 0);
+        assert_eq!(s.samples, 3);
+        assert_eq!(s.exits.len(), 2);
+        let e0 = &s.exits[0];
+        assert_eq!((e0.stage, e0.count), (0, 2));
+        assert_eq!((e0.min, e0.max), (10, 12)); // retire - admit
+        assert!((e0.rate - 2.0 / 3.0).abs() < 1e-12);
+        let e1 = &s.exits[1];
+        assert_eq!((e1.stage, e1.count, e1.min), (1, 1, 40));
+        let b = &s.buffers[0];
+        assert_eq!(b.stall_events, 1);
+        assert_eq!(b.stall_cycles, 4);
+        assert_eq!((b.drained, b.dropped), (1, 1));
+        assert_eq!(b.max_residency, 7);
+        assert_eq!(b.peak_occupancy, 2); // [6, 9) overlap
+        assert_eq!(s.exit_counts().get(&0), Some(&2));
+    }
+
+    #[test]
+    fn reconvergence_spans_retunes() {
+        let evs = vec![
+            TraceEvent::WindowStats {
+                window: 0,
+                start_sample: 0,
+                len: 4,
+                t_start: 0,
+                t_end: 100,
+                throughput_sps: 10.0,
+                reach: vec![],
+            },
+            TraceEvent::ThresholdRetuned {
+                window: 2,
+                t: 250,
+                thresholds: vec![0.5],
+                retunes: 1,
+            },
+            TraceEvent::WindowStats {
+                window: 1,
+                start_sample: 4,
+                len: 4,
+                t_start: 100,
+                t_end: 200,
+                throughput_sps: 30.0,
+                reach: vec![],
+            },
+            TraceEvent::ThresholdRetuned {
+                window: 5,
+                t: 600,
+                thresholds: vec![0.6],
+                retunes: 1,
+            },
+        ];
+        let s = TraceSummary::from_events(&evs, 1e6, 0);
+        assert_eq!(s.control.windows, 2);
+        assert_eq!(s.control.retunes, 2);
+        assert_eq!(s.control.first_retune_window, Some(2));
+        assert_eq!(s.control.reconverge_ticks, Some(350));
+        assert_eq!(s.control.reconverge_windows, Some(3));
+        assert!((s.control.mean_throughput_sps - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_retunes_means_no_reconvergence() {
+        let s = TraceSummary::from_events(&[], 1e6, 3);
+        assert_eq!(s.control.reconverge_ticks, None);
+        assert_eq!(s.dropped_events, 3);
+        assert!(s.exits.is_empty());
+    }
+}

@@ -1,0 +1,288 @@
+//! The structured event model and the sink contract.
+//!
+//! Every per-sample observable the simulator, the closed-loop drift
+//! harness, and the serving front end produce is expressed as one
+//! [`TraceEvent`]. Producers write events through the [`TraceSink`]
+//! trait; the default [`NullSink`] reports `enabled() == false`, and
+//! every emission site is gated on that flag **before** constructing
+//! the event, so a disabled run performs no event allocation and no
+//! work beyond one predictable branch — the zero-cost-when-disabled
+//! rule (DESIGN.md §9). The [`Recorder`] is a bounded ring buffer:
+//! when full it drops the *oldest* events (keeping the tail of the
+//! run, which is where drift investigations look) and counts the
+//! drops.
+//!
+//! Timestamps are producer-relative `u64` ticks: simulator events use
+//! schedule cycles, server events use microseconds since server start.
+//! The exporter converts ticks to trace microseconds with the
+//! producer's clock (`clock_hz`; servers pass `1e6`).
+
+use std::collections::VecDeque;
+
+/// One structured trace event. Sample ids are batch indices in the
+/// simulator and request ids in the server; `stage`/`section`/`buffer`
+/// use the design's indexing (exit `i` guards Conditional Buffer `i`,
+/// the final classifier is section `n_sections - 1`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// Sample's DMA-in completed (simulator) or its request entered the
+    /// stage-0 worker (server) at `t`.
+    SampleAdmitted { sample: u64, t: u64 },
+    /// Sample issued into backbone section `section` at `t`.
+    SectionEnter { sample: u64, section: u32, t: u64 },
+    /// Sample's section `section` compute finished (split write, or the
+    /// final classifier's result) at `t`.
+    SectionExit { sample: u64, section: u32, t: u64 },
+    /// Sample completed at pipeline path `stage` (exit index; the final
+    /// classifier is `n_sections - 1`) at `t`. Exactly one per sample.
+    ExitTaken { sample: u64, stage: u32, t: u64 },
+    /// Sample's classification left the output DMA at `t` (simulator
+    /// only; server completions are the `ExitTaken` events).
+    SampleRetired { sample: u64, t: u64 },
+    /// The section feeding Conditional Buffer `buffer` stalled on a
+    /// full buffer: `cycles` cycles starting at `t`.
+    BufferStalled {
+        buffer: u32,
+        sample: u64,
+        t: u64,
+        cycles: u64,
+    },
+    /// A residency interval of Conditional Buffer `buffer` ended:
+    /// `sample` occupied a slot from `enter` to `leave`. `dropped` is
+    /// the easy-path address-invalidation drop; `!dropped` means the
+    /// sample was drained into the next section.
+    BufferDrained {
+        buffer: u32,
+        sample: u64,
+        enter: u64,
+        leave: u64,
+        dropped: bool,
+    },
+    /// Instantaneous occupancy of forwarding queue / buffer `buffer`
+    /// (server backpressure watermark; rendered as a counter track).
+    BufferOccupancy { buffer: u32, t: u64, occupancy: u32 },
+    /// A `ThresholdPolicy` retuned its thresholds during reporting
+    /// window `window`; `thresholds` is the post-retune operating
+    /// point, `retunes` how many retunes the window performed.
+    ThresholdRetuned {
+        window: u32,
+        t: u64,
+        thresholds: Vec<f64>,
+        retunes: u64,
+    },
+    /// Closed-loop reporting-window statistics (one per window).
+    WindowStats {
+        window: u32,
+        start_sample: u64,
+        len: u32,
+        t_start: u64,
+        t_end: u64,
+        throughput_sps: f64,
+        reach: Vec<f64>,
+    },
+}
+
+impl TraceEvent {
+    /// The event's timestamp in producer ticks (`t_start` for window
+    /// spans, the residency end for buffer drains).
+    pub fn timestamp(&self) -> u64 {
+        match *self {
+            TraceEvent::SampleAdmitted { t, .. }
+            | TraceEvent::SectionEnter { t, .. }
+            | TraceEvent::SectionExit { t, .. }
+            | TraceEvent::ExitTaken { t, .. }
+            | TraceEvent::SampleRetired { t, .. }
+            | TraceEvent::BufferStalled { t, .. }
+            | TraceEvent::BufferOccupancy { t, .. }
+            | TraceEvent::ThresholdRetuned { t, .. } => t,
+            TraceEvent::BufferDrained { leave, .. } => leave,
+            TraceEvent::WindowStats { t_start, .. } => t_start,
+        }
+    }
+}
+
+/// Where producers write trace events.
+///
+/// Contract: emission sites MUST gate on [`TraceSink::enabled`] before
+/// constructing an event (`if sink.enabled() { sink.emit(...) }`), so
+/// that a disabled sink costs one branch and zero allocation — the
+/// `NullSink` path of `simulate_multi` is property-tested bit-identical
+/// and allocation-free against the pre-tracing simulator.
+pub trait TraceSink {
+    /// Whether events should be constructed and emitted at all.
+    fn enabled(&self) -> bool;
+
+    /// Record one event. Only called when [`TraceSink::enabled`] is
+    /// true (callers gate; implementations need not re-check).
+    fn emit(&mut self, ev: TraceEvent);
+}
+
+/// The default sink: tracing off. `enabled()` is `false`, so no
+/// emission site ever constructs an event through it.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    #[inline(always)]
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    #[inline(always)]
+    fn emit(&mut self, _ev: TraceEvent) {}
+}
+
+/// Bounded ring-buffer sink. Holds at most `capacity` events; once
+/// full, each new event evicts the oldest (drift debugging wants the
+/// tail of the run) and increments [`Recorder::dropped`].
+#[derive(Debug)]
+pub struct Recorder {
+    capacity: usize,
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+/// Default recorder capacity (events). A traced 8k-sample three-exit
+/// closed-loop run emits ~10 events per sample, so the default holds
+/// runs an order of magnitude larger before wrapping.
+pub const DEFAULT_RECORDER_CAPACITY: usize = 1 << 20;
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Recorder::new(DEFAULT_RECORDER_CAPACITY)
+    }
+}
+
+impl Recorder {
+    /// A recorder holding at most `capacity` events (min 1).
+    pub fn new(capacity: usize) -> Recorder {
+        Recorder {
+            capacity: capacity.max(1),
+            events: VecDeque::new(),
+            dropped: 0,
+        }
+    }
+
+    /// Record one event, evicting the oldest when full.
+    pub fn record(&mut self, ev: TraceEvent) {
+        if self.events.len() == self.capacity {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+
+    /// Events currently held, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter()
+    }
+
+    /// Number of events currently held.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events evicted because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Drop every held event and reset the drop counter (capacity is
+    /// kept; used by benches re-tracing into one recorder).
+    pub fn clear(&mut self) {
+        self.events.clear();
+        self.dropped = 0;
+    }
+
+    /// Move the held events out as a contiguous, oldest-first vec.
+    pub fn take_events(&mut self) -> Vec<TraceEvent> {
+        self.events.drain(..).collect()
+    }
+
+    /// Copy of the held events, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events.iter().cloned().collect()
+    }
+}
+
+impl TraceSink for Recorder {
+    #[inline]
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    #[inline]
+    fn emit(&mut self, ev: TraceEvent) {
+        self.record(ev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_sink_is_disabled() {
+        let s = NullSink;
+        assert!(!s.enabled());
+    }
+
+    #[test]
+    fn recorder_keeps_tail_and_counts_drops() {
+        let mut r = Recorder::new(3);
+        for i in 0..5u64 {
+            r.record(TraceEvent::SampleAdmitted { sample: i, t: i });
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let kept: Vec<u64> = r
+            .iter()
+            .map(|e| match e {
+                TraceEvent::SampleAdmitted { sample, .. } => *sample,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(kept, vec![2, 3, 4], "oldest events evicted first");
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn recorder_take_preserves_order() {
+        let mut r = Recorder::new(8);
+        r.record(TraceEvent::SampleAdmitted { sample: 0, t: 10 });
+        r.record(TraceEvent::ExitTaken { sample: 0, stage: 1, t: 42 });
+        let evs = r.take_events();
+        assert_eq!(evs.len(), 2);
+        assert!(r.is_empty());
+        assert_eq!(evs[0].timestamp(), 10);
+        assert_eq!(evs[1].timestamp(), 42);
+    }
+
+    #[test]
+    fn timestamps_pick_the_track_anchor() {
+        let d = TraceEvent::BufferDrained {
+            buffer: 0,
+            sample: 1,
+            enter: 5,
+            leave: 9,
+            dropped: true,
+        };
+        assert_eq!(d.timestamp(), 9);
+        let w = TraceEvent::WindowStats {
+            window: 0,
+            start_sample: 0,
+            len: 4,
+            t_start: 100,
+            t_end: 200,
+            throughput_sps: 1.0,
+            reach: vec![0.4],
+        };
+        assert_eq!(w.timestamp(), 100);
+    }
+}

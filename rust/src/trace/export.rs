@@ -1,0 +1,763 @@
+//! Chrome-trace / Perfetto JSON export and validation.
+//!
+//! Converts a flat [`TraceEvent`] stream into the Chrome trace-event
+//! format (the JSON flavour `ui.perfetto.dev` and `chrome://tracing`
+//! both load): `{"traceEvents": [...], "displayTimeUnit": "ms"}` with
+//! timestamps in microseconds.
+//!
+//! Track layout (pid = process row, tid = thread row):
+//! - pid 0 `pipeline`: one group of lanes per backbone section. Section
+//!   occupancy is pipelined (a section holds `latency/II` samples at
+//!   once), so spans are `X` (complete) events placed on the lowest
+//!   free lane of their section — `tid = section * LANE_STRIDE + lane`.
+//!   Flow events (`s`/`t`/`f`, id = sample) link one sample's spans
+//!   across sections.
+//! - pid 1 `buffers`: per-buffer stall spans (`B`/`E`; the producing
+//!   section blocks while stalled, so these never overlap) on
+//!   `tid = buffer`, plus an occupancy counter track per buffer
+//!   (sweep-line over `BufferDrained` residency intervals, or direct
+//!   `BufferOccupancy` samples from the server).
+//! - pid 2 `samples`: whole-pipeline residency (`SampleAdmitted` →
+//!   `SampleRetired`) as lane-packed `X` spans.
+//! - pid 3 `exits`: one instant (`i`) per sample on `tid = stage`.
+//! - pid 4 `control`: closed-loop window spans, retune instants, and
+//!   `throughput_sps` / per-threshold counter tracks.
+//!
+//! The export is fully deterministic (stable sort, `BTreeMap` series)
+//! so pinned-seed traces golden-test byte-for-byte.
+
+use std::collections::BTreeMap;
+
+use super::event::TraceEvent;
+use crate::util::json::{self, Json};
+
+/// pid of the per-section pipeline lanes.
+pub const PID_PIPELINE: u32 = 0;
+/// pid of the Conditional Buffer stall/occupancy tracks.
+pub const PID_BUFFERS: u32 = 1;
+/// pid of the whole-pipeline sample-residency lanes.
+pub const PID_SAMPLES: u32 = 2;
+/// pid of the per-exit instant tracks.
+pub const PID_EXITS: u32 = 3;
+/// pid of the closed-loop control tracks.
+pub const PID_CONTROL: u32 = 4;
+
+/// tid stride between section lane groups on the pipeline process.
+/// A section never holds more than `latency` samples at once, so 4096
+/// lanes per section is far beyond any design the simulator accepts.
+pub const LANE_STRIDE: u32 = 4096;
+
+/// Convert producer ticks to trace microseconds, rounded to
+/// nanosecond precision (keeps the JSON compact and deterministic;
+/// rounding is monotone, so track ordering survives the conversion).
+fn us(ticks: u64, clock_hz: f64) -> f64 {
+    (ticks as f64 * 1e6 / clock_hz * 1000.0).round() / 1000.0
+}
+
+/// Greedy deterministic lane packing. `spans` must be sorted by
+/// `(start, end)`; returns one lane index per span such that spans
+/// sharing a lane never overlap (a lane is reusable at `end`, i.e.
+/// `[start, end)` residency).
+fn assign_lanes(spans: &[(u64, u64)]) -> Vec<u32> {
+    let mut lane_free: Vec<u64> = Vec::new();
+    let mut lanes = Vec::with_capacity(spans.len());
+    for &(start, end) in spans {
+        let lane = match lane_free.iter().position(|&free| free <= start) {
+            Some(l) => l,
+            None => {
+                lane_free.push(0);
+                lane_free.len() - 1
+            }
+        };
+        lane_free[lane] = end.max(start + 1);
+        lanes.push(lane as u32);
+    }
+    lanes
+}
+
+fn meta(pid: u32, tid: Option<u32>, which: &str, name: &str) -> Json {
+    let mut pairs = vec![
+        ("ph", Json::str("M")),
+        ("name", Json::str(which)),
+        ("pid", Json::num(pid as f64)),
+        ("ts", Json::num(0.0)),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ];
+    if let Some(tid) = tid {
+        pairs.push(("tid", Json::num(tid as f64)));
+    }
+    Json::obj(pairs)
+}
+
+fn counter(pid: u32, name: &str, ts: f64, series: Vec<(&str, f64)>) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("C")),
+        ("name", Json::str(name)),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(0.0)),
+        ("ts", Json::num(ts)),
+        (
+            "args",
+            Json::obj(series.into_iter().map(|(k, v)| (k, Json::num(v))).collect()),
+        ),
+    ])
+}
+
+/// Build the Chrome-trace JSON document for an event stream.
+/// `clock_hz` converts producer ticks to microseconds (the simulator
+/// passes the design clock; the server records ticks in microseconds
+/// already and passes `1e6`).
+pub fn export_chrome_trace(events: &[TraceEvent], clock_hz: f64) -> Json {
+    // ---- bucket the flat stream ---------------------------------------
+    // (sample, section) -> enter tick, then matched into spans.
+    let mut open_sections: BTreeMap<(u64, u32), u64> = BTreeMap::new();
+    // section -> [(start, end, sample)]
+    let mut section_spans: BTreeMap<u32, Vec<(u64, u64, u64)>> = BTreeMap::new();
+    let mut admits: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut lifetimes: Vec<(u64, u64, u64)> = Vec::new(); // (admit, retire, sample)
+    let mut exits: Vec<(u64, u32, u64)> = Vec::new(); // (sample, stage, t)
+    let mut stalls: BTreeMap<u32, Vec<(u64, u64, u64)>> = BTreeMap::new(); // buf -> (t, cycles, sample)
+    let mut drains: BTreeMap<u32, Vec<(u64, u64, u64, bool)>> = BTreeMap::new();
+    let mut occupancy: BTreeMap<u32, Vec<(u64, u32)>> = BTreeMap::new();
+    let mut retunes: Vec<(u32, u64, Vec<f64>, u64)> = Vec::new();
+    // (window, start_sample, len, t_start, t_end, throughput_sps, reach)
+    let mut windows = Vec::new();
+
+    for ev in events {
+        match ev {
+            TraceEvent::SampleAdmitted { sample, t } => {
+                admits.insert(*sample, *t);
+            }
+            TraceEvent::SectionEnter { sample, section, t } => {
+                open_sections.insert((*sample, *section), *t);
+            }
+            TraceEvent::SectionExit { sample, section, t } => {
+                // An exit without a recorded enter (ring-buffer wrap)
+                // becomes a zero-length span at the exit tick.
+                let enter = open_sections
+                    .remove(&(*sample, *section))
+                    .unwrap_or(*t);
+                section_spans
+                    .entry(*section)
+                    .or_default()
+                    .push((enter, *t, *sample));
+            }
+            TraceEvent::ExitTaken { sample, stage, t } => {
+                exits.push((*sample, *stage, *t));
+            }
+            TraceEvent::SampleRetired { sample, t } => {
+                let admit = admits.get(sample).copied().unwrap_or(*t);
+                lifetimes.push((admit, *t, *sample));
+            }
+            TraceEvent::BufferStalled {
+                buffer,
+                sample,
+                t,
+                cycles,
+            } => {
+                if *cycles > 0 {
+                    stalls.entry(*buffer).or_default().push((*t, *cycles, *sample));
+                }
+            }
+            TraceEvent::BufferDrained {
+                buffer,
+                sample,
+                enter,
+                leave,
+                dropped,
+            } => {
+                drains
+                    .entry(*buffer)
+                    .or_default()
+                    .push((*enter, *leave, *sample, *dropped));
+            }
+            TraceEvent::BufferOccupancy {
+                buffer,
+                t,
+                occupancy: occ,
+            } => {
+                occupancy.entry(*buffer).or_default().push((*t, *occ));
+            }
+            TraceEvent::ThresholdRetuned {
+                window,
+                t,
+                thresholds,
+                retunes: n,
+            } => {
+                retunes.push((*window, *t, thresholds.clone(), *n));
+            }
+            TraceEvent::WindowStats {
+                window,
+                start_sample,
+                len,
+                t_start,
+                t_end,
+                throughput_sps,
+                reach,
+            } => {
+                windows.push((
+                    *window,
+                    *start_sample,
+                    *len,
+                    *t_start,
+                    *t_end,
+                    *throughput_sps,
+                    reach.clone(),
+                ));
+            }
+        }
+    }
+
+    // Synthesise occupancy counters from residency intervals when the
+    // producer emitted drains (simulator) but no direct samples.
+    for (buf, intervals) in &drains {
+        if occupancy.contains_key(buf) {
+            continue;
+        }
+        // Sweep-line: at equal ticks apply leaves (-1) before enters
+        // (+1) so a same-cycle swap doesn't over-count the peak.
+        let mut edges: Vec<(u64, i32)> = Vec::with_capacity(intervals.len() * 2);
+        for &(enter, leave, _, _) in intervals {
+            edges.push((enter, 1));
+            edges.push((leave, -1));
+        }
+        edges.sort_by_key(|&(t, delta)| (t, delta));
+        let mut level = 0i32;
+        let mut series: Vec<(u64, u32)> = Vec::new();
+        let mut i = 0;
+        while i < edges.len() {
+            let t = edges[i].0;
+            while i < edges.len() && edges[i].0 == t {
+                level += edges[i].1;
+                i += 1;
+            }
+            series.push((t, level.max(0) as u32));
+        }
+        occupancy.insert(*buf, series);
+    }
+
+    // ---- emit ---------------------------------------------------------
+    let mut out: Vec<Json> = Vec::new();
+    out.push(meta(PID_PIPELINE, None, "process_name", "pipeline"));
+    out.push(meta(PID_BUFFERS, None, "process_name", "buffers"));
+    out.push(meta(PID_SAMPLES, None, "process_name", "samples"));
+    out.push(meta(PID_EXITS, None, "process_name", "exits"));
+    out.push(meta(PID_CONTROL, None, "process_name", "control"));
+
+    // ts-sortable body events, built unsorted then stably sorted.
+    let mut body: Vec<(f64, Json)> = Vec::new();
+
+    // Section lanes + flows.
+    // sample -> ordered (section, start, tid) for flow linkage.
+    let mut sample_hops: BTreeMap<u64, Vec<(u32, u64, u32)>> = BTreeMap::new();
+    for (section, spans) in &mut section_spans {
+        spans.sort();
+        let lanes = assign_lanes(
+            &spans.iter().map(|&(s, e, _)| (s, e)).collect::<Vec<_>>(),
+        );
+        let max_lane = lanes.iter().copied().max().unwrap_or(0);
+        for lane in 0..=max_lane {
+            out.push(meta(
+                PID_PIPELINE,
+                Some(section * LANE_STRIDE + lane),
+                "thread_name",
+                &format!("sec{section}/lane{lane}"),
+            ));
+        }
+        for (&(start, end, sample), &lane) in spans.iter().zip(&lanes) {
+            let tid = section * LANE_STRIDE + lane;
+            let ts = us(start, clock_hz);
+            body.push((
+                ts,
+                Json::obj(vec![
+                    ("ph", Json::str("X")),
+                    ("name", Json::str(format!("s{sample}"))),
+                    ("cat", Json::str("section")),
+                    ("pid", Json::num(PID_PIPELINE as f64)),
+                    ("tid", Json::num(tid as f64)),
+                    ("ts", Json::num(ts)),
+                    ("dur", Json::num(us(end, clock_hz) - ts)),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("sample", Json::num(sample as f64)),
+                            ("section", Json::num(*section as f64)),
+                        ]),
+                    ),
+                ]),
+            ));
+            sample_hops
+                .entry(sample)
+                .or_default()
+                .push((*section, start, tid));
+        }
+    }
+    for (sample, hops) in &mut sample_hops {
+        if hops.len() < 2 {
+            continue;
+        }
+        hops.sort();
+        let last = hops.len() - 1;
+        for (i, &(_, start, tid)) in hops.iter().enumerate() {
+            let ph = if i == 0 {
+                "s"
+            } else if i == last {
+                "f"
+            } else {
+                "t"
+            };
+            let ts = us(start, clock_hz);
+            let mut pairs = vec![
+                ("ph", Json::str(ph)),
+                ("name", Json::str("sample")),
+                ("cat", Json::str("flow")),
+                ("id", Json::num(*sample as f64)),
+                ("pid", Json::num(PID_PIPELINE as f64)),
+                ("tid", Json::num(tid as f64)),
+                ("ts", Json::num(ts)),
+            ];
+            if ph == "f" {
+                // Bind the flow end to the enclosing slice's start.
+                pairs.push(("bp", Json::str("e")));
+            }
+            body.push((ts, Json::obj(pairs)));
+        }
+    }
+
+    // Buffer stalls and occupancy.
+    for (buf, list) in &mut stalls {
+        out.push(meta(
+            PID_BUFFERS,
+            Some(*buf),
+            "thread_name",
+            &format!("buf{buf} stalls"),
+        ));
+        list.sort();
+        for &(t, cycles, sample) in list.iter() {
+            let ts = us(t, clock_hz);
+            let te = us(t + cycles, clock_hz);
+            body.push((
+                ts,
+                Json::obj(vec![
+                    ("ph", Json::str("B")),
+                    ("name", Json::str("stall")),
+                    ("cat", Json::str("buffer")),
+                    ("pid", Json::num(PID_BUFFERS as f64)),
+                    ("tid", Json::num(*buf as f64)),
+                    ("ts", Json::num(ts)),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("sample", Json::num(sample as f64)),
+                            ("cycles", Json::num(cycles as f64)),
+                        ]),
+                    ),
+                ]),
+            ));
+            body.push((
+                te,
+                Json::obj(vec![
+                    ("ph", Json::str("E")),
+                    ("name", Json::str("stall")),
+                    ("cat", Json::str("buffer")),
+                    ("pid", Json::num(PID_BUFFERS as f64)),
+                    ("tid", Json::num(*buf as f64)),
+                    ("ts", Json::num(te)),
+                ]),
+            ));
+        }
+    }
+    for (buf, series) in &occupancy {
+        for &(t, occ) in series {
+            body.push((
+                us(t, clock_hz),
+                counter(
+                    PID_BUFFERS,
+                    &format!("buf{buf} occupancy"),
+                    us(t, clock_hz),
+                    vec![("occupancy", occ as f64)],
+                ),
+            ));
+        }
+    }
+
+    // Whole-pipeline sample residency lanes.
+    if !lifetimes.is_empty() {
+        lifetimes.sort();
+        let lanes = assign_lanes(
+            &lifetimes.iter().map(|&(s, e, _)| (s, e)).collect::<Vec<_>>(),
+        );
+        let max_lane = lanes.iter().copied().max().unwrap_or(0);
+        for lane in 0..=max_lane {
+            out.push(meta(
+                PID_SAMPLES,
+                Some(lane),
+                "thread_name",
+                &format!("lane{lane}"),
+            ));
+        }
+        for (&(start, end, sample), &lane) in lifetimes.iter().zip(&lanes) {
+            let ts = us(start, clock_hz);
+            body.push((
+                ts,
+                Json::obj(vec![
+                    ("ph", Json::str("X")),
+                    ("name", Json::str(format!("s{sample}"))),
+                    ("cat", Json::str("lifetime")),
+                    ("pid", Json::num(PID_SAMPLES as f64)),
+                    ("tid", Json::num(lane as f64)),
+                    ("ts", Json::num(ts)),
+                    ("dur", Json::num(us(end, clock_hz) - ts)),
+                    ("args", Json::obj(vec![("sample", Json::num(sample as f64))])),
+                ]),
+            ));
+        }
+    }
+
+    // Per-exit instants.
+    let mut exit_stages: Vec<u32> = exits.iter().map(|&(_, s, _)| s).collect();
+    exit_stages.sort_unstable();
+    exit_stages.dedup();
+    for stage in &exit_stages {
+        out.push(meta(
+            PID_EXITS,
+            Some(*stage),
+            "thread_name",
+            &format!("exit{stage}"),
+        ));
+    }
+    exits.sort_by_key(|&(sample, _, t)| (t, sample));
+    for &(sample, stage, t) in &exits {
+        let ts = us(t, clock_hz);
+        body.push((
+            ts,
+            Json::obj(vec![
+                ("ph", Json::str("i")),
+                ("name", Json::str(format!("exit{stage}"))),
+                ("cat", Json::str("exit")),
+                ("s", Json::str("t")),
+                ("pid", Json::num(PID_EXITS as f64)),
+                ("tid", Json::num(stage as f64)),
+                ("ts", Json::num(ts)),
+                ("args", Json::obj(vec![("sample", Json::num(sample as f64))])),
+            ]),
+        ));
+    }
+
+    // Control: window spans, throughput counter, retune instants,
+    // threshold counters.
+    if !windows.is_empty() || !retunes.is_empty() {
+        out.push(meta(PID_CONTROL, Some(0), "thread_name", "windows"));
+    }
+    windows.sort_by_key(|w| w.0);
+    for &(window, start_sample, len, t_start, t_end, sps, ref reach) in &windows {
+        let ts = us(t_start, clock_hz);
+        body.push((
+            ts,
+            Json::obj(vec![
+                ("ph", Json::str("X")),
+                ("name", Json::str(format!("w{window}"))),
+                ("cat", Json::str("window")),
+                ("pid", Json::num(PID_CONTROL as f64)),
+                ("tid", Json::num(0.0)),
+                ("ts", Json::num(ts)),
+                ("dur", Json::num(us(t_end, clock_hz) - ts)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("window", Json::num(window as f64)),
+                        ("start_sample", Json::num(start_sample as f64)),
+                        ("len", Json::num(len as f64)),
+                        ("throughput_sps", Json::num(sps)),
+                        (
+                            "reach",
+                            Json::arr(reach.iter().map(|&r| Json::num(r))),
+                        ),
+                    ]),
+                ),
+            ]),
+        ));
+        body.push((
+            ts,
+            counter(PID_CONTROL, "throughput_sps", ts, vec![("sps", sps)]),
+        ));
+    }
+    retunes.sort_by_key(|r| (r.1, r.0));
+    for (window, t, thresholds, n) in &retunes {
+        let ts = us(*t, clock_hz);
+        body.push((
+            ts,
+            Json::obj(vec![
+                ("ph", Json::str("i")),
+                ("name", Json::str(format!("retune w{window}"))),
+                ("cat", Json::str("control")),
+                ("s", Json::str("p")),
+                ("pid", Json::num(PID_CONTROL as f64)),
+                ("tid", Json::num(0.0)),
+                ("ts", Json::num(ts)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        (
+                            "thresholds",
+                            Json::arr(thresholds.iter().map(|&v| Json::num(v))),
+                        ),
+                        ("retunes", Json::num(*n as f64)),
+                    ]),
+                ),
+            ]),
+        ));
+        let series: Vec<(String, f64)> = thresholds
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (format!("thr{i}"), v))
+            .collect();
+        body.push((
+            ts,
+            counter(
+                PID_CONTROL,
+                "thresholds",
+                ts,
+                series.iter().map(|(k, v)| (k.as_str(), *v)).collect(),
+            ),
+        ));
+    }
+
+    // Stable sort keeps same-ts events in emission order (B before its
+    // zero-length E, window span before its counter, ...).
+    body.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    out.extend(body.into_iter().map(|(_, ev)| ev));
+
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::Arr(out)),
+    ])
+}
+
+/// Serialize a trace document for `trace.json` (pretty, so goldens
+/// diff readably).
+pub fn write_chrome_trace(events: &[TraceEvent], clock_hz: f64) -> String {
+    let mut s = export_chrome_trace(events, clock_hz).to_string_pretty();
+    s.push('\n');
+    s
+}
+
+/// Summary returned by [`validate_chrome_trace`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChromeTraceStats {
+    /// All events, metadata included.
+    pub events: usize,
+    /// Distinct (pid, tid) tracks seen on non-metadata events.
+    pub tracks: usize,
+    /// `X` (complete) spans.
+    pub spans: usize,
+    /// Matched `B`/`E` pairs.
+    pub begin_end_pairs: usize,
+    /// Flow ids with a start and an end.
+    pub flows: usize,
+    /// Counter samples.
+    pub counters: usize,
+    /// Instant events.
+    pub instants: usize,
+}
+
+/// Validate Chrome-trace JSON text: well-formed JSON with a
+/// `traceEvents` array, every event carrying `ph`/`name` (plus numeric
+/// `pid`/`tid`/`ts` off the metadata path), non-decreasing timestamps
+/// per (pid, tid) track, balanced `B`/`E` spans per track, non-negative
+/// `X` durations, and every flow id opened exactly once (`s`) and
+/// closed exactly once (`f`) in order. This is the schema gate CI runs
+/// against the emitted `trace.json`.
+pub fn validate_chrome_trace(text: &str) -> anyhow::Result<ChromeTraceStats> {
+    let doc = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let events = doc
+        .req("traceEvents")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("traceEvents is not an array"))?;
+
+    let mut stats = ChromeTraceStats {
+        events: events.len(),
+        ..Default::default()
+    };
+    let mut last_ts: BTreeMap<(i64, i64), f64> = BTreeMap::new();
+    let mut depth: BTreeMap<(i64, i64), i64> = BTreeMap::new();
+    // flow id -> (starts, ends, last ts)
+    let mut flows: BTreeMap<i64, (u32, u32, f64)> = BTreeMap::new();
+
+    for (i, ev) in events.iter().enumerate() {
+        let fail = |msg: String| anyhow::anyhow!("event {i}: {msg}");
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| fail("missing ph".into()))?;
+        if ev.get("name").and_then(Json::as_str).is_none() {
+            return Err(fail("missing name".into()));
+        }
+        if ph == "M" {
+            continue;
+        }
+        let pid = ev
+            .get("pid")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| fail("missing pid".into()))? as i64;
+        let tid = ev.get("tid").and_then(Json::as_f64).unwrap_or(0.0) as i64;
+        let ts = ev
+            .get("ts")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| fail("missing ts".into()))?;
+        let track = (pid, tid);
+        if let Some(&prev) = last_ts.get(&track) {
+            if ts < prev {
+                return Err(fail(format!(
+                    "track ({pid},{tid}) timestamp regressed: {prev} -> {ts}"
+                )));
+            }
+        }
+        last_ts.insert(track, ts);
+
+        match ph {
+            "X" => {
+                let dur = ev
+                    .get("dur")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| fail("X without dur".into()))?;
+                if dur < 0.0 {
+                    return Err(fail(format!("negative dur {dur}")));
+                }
+                stats.spans += 1;
+            }
+            "B" => {
+                *depth.entry(track).or_insert(0) += 1;
+            }
+            "E" => {
+                let d = depth.entry(track).or_insert(0);
+                *d -= 1;
+                if *d < 0 {
+                    return Err(fail(format!(
+                        "track ({pid},{tid}) E without matching B"
+                    )));
+                }
+                stats.begin_end_pairs += 1;
+            }
+            "C" => stats.counters += 1,
+            "i" | "I" => stats.instants += 1,
+            "s" | "t" | "f" => {
+                let id = ev
+                    .get("id")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| fail("flow without id".into()))? as i64;
+                let entry = flows.entry(id).or_insert((0, 0, ts));
+                if ts < entry.2 {
+                    return Err(fail(format!("flow {id} timestamp regressed")));
+                }
+                entry.2 = ts;
+                match ph {
+                    "s" => entry.0 += 1,
+                    "f" => entry.1 += 1,
+                    _ => {}
+                }
+                if entry.0 > 1 || entry.1 > 1 {
+                    return Err(fail(format!("flow {id} opened/closed twice")));
+                }
+                if entry.1 == 1 && entry.0 == 0 {
+                    return Err(fail(format!("flow {id} closed before opening")));
+                }
+            }
+            other => {
+                return Err(fail(format!("unsupported phase {other:?}")));
+            }
+        }
+    }
+
+    for ((pid, tid), d) in &depth {
+        if *d != 0 {
+            anyhow::bail!("track ({pid},{tid}) has {d} unclosed B spans");
+        }
+    }
+    for (id, (s, f, _)) in &flows {
+        if *s != 1 || *f != 1 {
+            anyhow::bail!("flow {id} not balanced (starts {s}, ends {f})");
+        }
+    }
+    stats.tracks = last_ts.len();
+    stats.flows = flows.len();
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_stream() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::SampleAdmitted { sample: 0, t: 2 },
+            TraceEvent::SectionEnter { sample: 0, section: 0, t: 2 },
+            TraceEvent::SectionExit { sample: 0, section: 0, t: 10 },
+            TraceEvent::SampleAdmitted { sample: 1, t: 4 },
+            TraceEvent::SectionEnter { sample: 1, section: 0, t: 4 },
+            TraceEvent::SectionExit { sample: 1, section: 0, t: 12 },
+            TraceEvent::BufferStalled {
+                buffer: 0,
+                sample: 1,
+                t: 10,
+                cycles: 3,
+            },
+            TraceEvent::BufferDrained {
+                buffer: 0,
+                sample: 0,
+                enter: 10,
+                leave: 14,
+                dropped: false,
+            },
+            TraceEvent::SectionEnter { sample: 0, section: 1, t: 15 },
+            TraceEvent::SectionExit { sample: 0, section: 1, t: 30 },
+            TraceEvent::ExitTaken { sample: 1, stage: 0, t: 13 },
+            TraceEvent::ExitTaken { sample: 0, stage: 1, t: 30 },
+            TraceEvent::SampleRetired { sample: 1, t: 16 },
+            TraceEvent::SampleRetired { sample: 0, t: 33 },
+        ]
+    }
+
+    #[test]
+    fn export_validates() {
+        let text = write_chrome_trace(&small_stream(), 1e6);
+        let stats = validate_chrome_trace(&text).expect("valid trace");
+        // 2 sec0 spans + 1 sec1 span + 2 lifetime spans.
+        assert_eq!(stats.spans, 5);
+        assert_eq!(stats.begin_end_pairs, 1);
+        // Sample 0 crosses two sections -> one flow; sample 1 has a
+        // single hop -> no flow.
+        assert_eq!(stats.flows, 1);
+        assert_eq!(stats.instants, 2);
+        // Occupancy synthesised from the drain interval: +1 then -1.
+        assert_eq!(stats.counters, 2);
+    }
+
+    #[test]
+    fn lanes_pack_overlaps() {
+        // Two overlapping spans need two lanes; a third after both fits
+        // back on lane 0.
+        let lanes = assign_lanes(&[(0, 10), (5, 12), (12, 20)]);
+        assert_eq!(lanes, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let a = write_chrome_trace(&small_stream(), 125e6);
+        let b = write_chrome_trace(&small_stream(), 125e6);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn validator_rejects_unbalanced() {
+        let text = r#"{"traceEvents":[
+            {"ph":"B","name":"x","pid":0,"tid":0,"ts":1}
+        ]}"#;
+        assert!(validate_chrome_trace(text).is_err());
+        let text = r#"{"traceEvents":[
+            {"ph":"X","name":"x","pid":0,"tid":0,"ts":5,"dur":1},
+            {"ph":"X","name":"y","pid":0,"tid":0,"ts":4,"dur":1}
+        ]}"#;
+        assert!(validate_chrome_trace(text).is_err(), "ts regression");
+    }
+}

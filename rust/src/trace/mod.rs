@@ -1,0 +1,28 @@
+//! Per-sample event tracing: structured events from the simulator, the
+//! closed-loop drift harness, and the serving coordinator, exportable
+//! as Chrome-trace/Perfetto JSON and reducible to terminal summaries.
+//!
+//! The subsystem has three layers:
+//! - [`event`]: the [`TraceEvent`] model and the [`TraceSink`]
+//!   contract. The default [`NullSink`] is zero-cost — every emission
+//!   site gates on `sink.enabled()` before building an event, so
+//!   untraced `simulate_multi` stays bit-identical and allocation-free
+//!   (property-tested in `rust/tests/trace_props.rs`). The bounded
+//!   [`Recorder`] ring keeps the newest events and counts drops.
+//! - [`export`]: [`export_chrome_trace`] renders the stream as
+//!   Chrome-trace JSON (load `trace.json` at `ui.perfetto.dev`);
+//!   [`validate_chrome_trace`] is the schema gate CI runs on it.
+//! - [`aggregate`]: [`TraceSummary`] reduces the same stream to
+//!   per-exit latency distributions, per-buffer stall totals, and
+//!   controller reconvergence time (rendered by
+//!   `report::tables::render_trace_summary`).
+
+pub mod aggregate;
+pub mod event;
+pub mod export;
+
+pub use aggregate::{BufferSummary, ControlSummary, ExitLatency, TraceSummary};
+pub use event::{NullSink, Recorder, TraceEvent, TraceSink, DEFAULT_RECORDER_CAPACITY};
+pub use export::{
+    export_chrome_trace, validate_chrome_trace, write_chrome_trace, ChromeTraceStats,
+};

@@ -1,0 +1,379 @@
+//! Property tests for the trace subsystem (DESIGN.md §9).
+//!
+//! The tracing contract has three legs, each enforced here:
+//!
+//! * **Zero cost** — running any simulator entry point through a
+//!   [`NullSink`] is *bitwise identical* to the untraced path
+//!   (`simulate_multi`, `simulate_closed_loop`), and the steady-state
+//!   `SimScratch` path stays **allocation-free** with tracing compiled
+//!   in (measured with a counting global allocator, preserving the
+//!   PR-4 scratch contract).
+//! * **Faithfulness** — a [`Recorder`] capture of a run reconciles
+//!   exactly with the aggregate the simulator reports:
+//!   per-stage `ExitTaken` counts equal `SimMetrics::exit_rates`
+//!   times the batch size, stall-event cycles sum to the stall total.
+//! * **Exportability** — every recorded stream renders to Chrome-trace
+//!   JSON that passes the structural validator (monotone per-track
+//!   timestamps, balanced begin/end spans, well-formed flows), and the
+//!   pinned-seed `testnet::three_exit()` trace is a byte-exact golden
+//!   (bootstrap-on-missing, like the report goldens in
+//!   `tests/integration.rs`; refresh with `UPDATE_GOLDENS=1`).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::path::{Path, PathBuf};
+
+use atheena::coordinator::pipeline::Toolflow;
+use atheena::coordinator::toolflow::ToolflowOptions;
+use atheena::ee::decision::Controller;
+use atheena::ir::network::testnet;
+use atheena::resources::Board;
+use atheena::sim::{
+    design_operating_point, simulate_closed_loop, simulate_closed_loop_traced, simulate_multi,
+    simulate_multi_traced, ClosedLoopConfig, DesignTiming, DriftScenario, ExitTiming,
+    SectionTiming, SimConfig, SimMetrics, SimResult, SimScratch,
+};
+use atheena::trace::{
+    validate_chrome_trace, write_chrome_trace, NullSink, Recorder, TraceEvent, TraceSummary,
+};
+use atheena::util::proptest::{check, gen_range, gen_vec, prop_assert};
+use atheena::util::Rng;
+
+// ---- counting allocator (thread-local, so parallel tests don't bleed) ----
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Allocations observed on the calling thread since process start.
+fn allocs_on_this_thread() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(p, l, new_size)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+// ---- fixtures -----------------------------------------------------------
+
+/// Randomized N-exit design timing (2–4 sections, never the degenerate
+/// depth-0 deadlock configuration — that failure mode has its own test
+/// in `sim::engine`).
+fn rand_timing(r: &mut Rng) -> DesignTiming {
+    let n_sections = gen_range(r, 2, 4);
+    let sections = gen_vec(r, n_sections, |r| SectionTiming {
+        ii: 20 + r.below(200) as u64,
+        lat: 50 + r.below(400) as u64,
+    });
+    let exits = gen_vec(r, n_sections - 1, |r| ExitTiming {
+        ii: 10 + r.below(100) as u64,
+        lat: 20 + r.below(200) as u64,
+        buffer_depth: 1 + r.below(8),
+    });
+    DesignTiming {
+        sections,
+        exits,
+        merge_ii: 1 + r.below(20) as u64,
+        input_words: 100 + r.below(400),
+        output_words: 1 + r.below(20),
+    }
+}
+
+/// Deterministic three-section timing for the allocation test.
+fn steady_timing() -> DesignTiming {
+    DesignTiming {
+        sections: vec![
+            SectionTiming { ii: 100, lat: 150 },
+            SectionTiming { ii: 200, lat: 250 },
+            SectionTiming { ii: 400, lat: 500 },
+        ],
+        exits: vec![
+            ExitTiming { ii: 80, lat: 120, buffer_depth: 8 },
+            ExitTiming { ii: 100, lat: 150, buffer_depth: 8 },
+        ],
+        merge_ii: 10,
+        input_words: 400,
+        output_words: 10,
+    }
+}
+
+fn same_result(a: &SimResult, b: &SimResult) -> bool {
+    a.total_cycles == b.total_cycles
+        && a.stall_cycles == b.stall_cycles
+        && a.peak_buffer_occupancy == b.peak_buffer_occupancy
+        && a.out_of_order == b.out_of_order
+        && a.deadlock == b.deadlock
+        && a.traces.len() == b.traces.len()
+        && a.traces.iter().zip(&b.traces).all(|(x, y)| {
+            x.t_in == y.t_in
+                && x.t_out == y.t_out
+                && x.exited_early == y.exited_early
+                && x.exit_stage == y.exit_stage
+        })
+}
+
+// ---- zero-cost leg ------------------------------------------------------
+
+#[test]
+fn prop_null_sink_simulate_multi_bit_identical() {
+    let cfg = SimConfig::default();
+    check(40, |r| {
+        let t = rand_timing(r);
+        let n_sections = t.sections.len();
+        let n = 64 + r.below(512);
+        let completes = gen_vec(r, n, |r| r.below(n_sections));
+
+        let base = simulate_multi(&t, &cfg, &completes);
+        let traced = simulate_multi_traced(&t, &cfg, &completes, &mut NullSink);
+        prop_assert(
+            same_result(&base, &traced),
+            "NullSink simulate_multi_traced diverged from simulate_multi",
+        )?;
+
+        // The scratch path and a live Recorder must observe the same
+        // schedule too — tracing may never perturb it.
+        let mut scratch = SimScratch::new();
+        let scratched = scratch.simulate_multi_traced(&t, &cfg, &completes, &mut NullSink);
+        prop_assert(
+            same_result(&base, scratched),
+            "scratch NullSink path diverged from simulate_multi",
+        )?;
+        let mut rec = Recorder::new(1 << 20);
+        let recorded = simulate_multi_traced(&t, &cfg, &completes, &mut rec);
+        prop_assert(
+            same_result(&base, &recorded),
+            "recording the run changed the schedule",
+        )
+    });
+}
+
+#[test]
+fn prop_null_sink_closed_loop_bit_identical() {
+    let t = steady_timing();
+    let cfg = SimConfig::default();
+    let drift = DriftScenario::Step { at: 0.25, to: 2.0 };
+    check(10, |r| {
+        let seed = r.next_u64();
+        let r0 = 0.2 + 0.5 * r.f64();
+        let r1 = r0 * (0.2 + 0.6 * r.f64());
+        let op = design_operating_point(&[r0, r1]);
+        let run = ClosedLoopConfig {
+            samples: 2048,
+            window: 256,
+            seed,
+        };
+
+        let mut p_base = Controller::new(op.clone(), run.window);
+        let base = simulate_closed_loop(&t, &cfg, &mut p_base, &drift, &run);
+        let mut p_traced = Controller::new(op.clone(), run.window);
+        let traced =
+            simulate_closed_loop_traced(&t, &cfg, &mut p_traced, &drift, &run, &mut NullSink);
+
+        prop_assert(
+            base.completes_at == traced.completes_at,
+            "NullSink closed loop made different exit decisions",
+        )?;
+        prop_assert(
+            same_result(&base.sim, &traced.sim),
+            "NullSink closed loop timed a different schedule",
+        )?;
+        prop_assert(base.retunes == traced.retunes, "retune counts diverged")?;
+        prop_assert(
+            base.windows.len() == traced.windows.len()
+                && base
+                    .windows
+                    .iter()
+                    .zip(&traced.windows)
+                    .all(|(a, b)| {
+                        a.throughput_sps == b.throughput_sps && a.thresholds == b.thresholds
+                    }),
+            "per-window reports diverged under NullSink",
+        )?;
+
+        // Recording (not just the null path) must also leave the run
+        // untouched, and the capture must export to a valid trace.
+        let mut p_rec = Controller::new(op, run.window);
+        let mut rec = Recorder::new(1 << 20);
+        let recorded = simulate_closed_loop_traced(&t, &cfg, &mut p_rec, &drift, &run, &mut rec);
+        prop_assert(
+            recorded.completes_at == base.completes_at
+                && same_result(&base.sim, &recorded.sim)
+                && recorded.retunes == base.retunes,
+            "recording the closed loop changed the run",
+        )?;
+        let text = write_chrome_trace(&rec.take_events(), cfg.clock_hz);
+        match validate_chrome_trace(&text) {
+            Ok(_) => Ok(()),
+            Err(e) => Err(format!("recorded closed-loop trace failed validation: {e}")),
+        }
+    });
+}
+
+#[test]
+fn null_sink_steady_state_is_allocation_free() {
+    // PR-4 contract, extended: with the tracing hooks compiled into the
+    // core, a warmed SimScratch run through the NullSink performs zero
+    // allocations on this thread.
+    let t = steady_timing();
+    let cfg = SimConfig::default();
+    let completes: Vec<usize> = (0..512).map(|i| i % 3).collect();
+    let mut scratch = SimScratch::new();
+    // Warm-up: grows every internal buffer to its steady-state footprint.
+    scratch.simulate_multi_traced(&t, &cfg, &completes, &mut NullSink);
+
+    let before = allocs_on_this_thread();
+    scratch.simulate_multi_traced(&t, &cfg, &completes, &mut NullSink);
+    let after = allocs_on_this_thread();
+    assert_eq!(
+        after - before,
+        0,
+        "traced-core SimScratch steady state allocated {} times",
+        after - before
+    );
+}
+
+// ---- faithfulness leg ---------------------------------------------------
+
+#[test]
+fn prop_recorder_reconciles_with_sim_metrics() {
+    let cfg = SimConfig::default();
+    check(25, |r| {
+        let t = rand_timing(r);
+        let n_sections = t.sections.len();
+        let n = 64 + r.below(512);
+        let completes = gen_vec(r, n, |r| r.below(n_sections));
+
+        let mut rec = Recorder::new(1 << 20);
+        let sim = simulate_multi_traced(&t, &cfg, &completes, &mut rec);
+        let metrics = SimMetrics::from_result(&sim, cfg.clock_hz);
+        let dropped = rec.dropped();
+        prop_assert(dropped == 0, "ring evicted events in a bounded test run")?;
+        let events = rec.take_events();
+        let summary = TraceSummary::from_events(&events, cfg.clock_hz, dropped);
+
+        // Per-stage exit counts must match SimMetrics::exit_rates
+        // *exactly* (both are integer counts over the same batch, so
+        // the f64 division is bit-identical).
+        let counts = summary.exit_counts();
+        prop_assert(
+            counts.values().sum::<u64>() == n as u64,
+            "exit events lost or duplicated",
+        )?;
+        for (stage, rate) in metrics.exit_rates.iter().enumerate() {
+            let c = counts.get(&(stage as u32)).copied().unwrap_or(0);
+            prop_assert(
+                c as f64 / n as f64 == *rate,
+                "ExitTaken counts disagree with SimMetrics::exit_rates",
+            )?;
+        }
+
+        // Stall events must sum to the simulator's stall total.
+        let stalled: u64 = events
+            .iter()
+            .map(|e| match e {
+                TraceEvent::BufferStalled { cycles, .. } => *cycles,
+                _ => 0,
+            })
+            .sum();
+        prop_assert(
+            stalled == sim.total_stall_cycles(),
+            "BufferStalled cycles disagree with the stall total",
+        )?;
+
+        // And the capture must export to a structurally valid trace.
+        let text = write_chrome_trace(&events, cfg.clock_hz);
+        match validate_chrome_trace(&text) {
+            Ok(stats) => prop_assert(stats.events > 0, "empty export"),
+            Err(e) => Err(format!("exported trace failed validation: {e}")),
+        }
+    });
+}
+
+// ---- golden leg ---------------------------------------------------------
+
+fn golden_path(name: &str) -> PathBuf {
+    Path::new("rust/tests/goldens").join(name)
+}
+
+/// Same bootstrap-on-missing contract as the report goldens in
+/// `tests/integration.rs`: UPDATE_GOLDENS=1 (or a missing fixture)
+/// writes the file; otherwise compare byte-for-byte.
+fn assert_golden(name: &str, actual: &str) {
+    let path = golden_path(name);
+    let update = std::env::var("UPDATE_GOLDENS").ok().as_deref() == Some("1");
+    if update || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, actual).unwrap();
+        if !update {
+            eprintln!("[golden] bootstrapped {}", path.display());
+        }
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        actual, want,
+        "golden mismatch for {name}; refresh with UPDATE_GOLDENS=1 cargo test"
+    );
+}
+
+#[test]
+fn golden_three_exit_perfetto_trace_pinned_seed() {
+    // Realize the three-exit testnet under the same pinned anneal seed
+    // the report goldens use, stream a pinned closed-loop run through
+    // the recorder, and byte-compare the Perfetto export. Everything is
+    // deterministic: design, decisions, schedule, and JSON rendering.
+    let net = testnet::three_exit();
+    let mut opts = ToolflowOptions::quick(Board::zc706());
+    opts.sweep.anneal.seed = 0xA7EE_601D;
+    let realized = Toolflow::new(&net, &opts)
+        .unwrap()
+        .sweep()
+        .unwrap()
+        .combine()
+        .unwrap()
+        .realize()
+        .unwrap();
+    let best = realized.best_design().expect("no design");
+
+    let run = ClosedLoopConfig {
+        samples: 96,
+        window: 24,
+        seed: 0xD21F7,
+    };
+    let drift = DriftScenario::Step { at: 0.25, to: 2.0 };
+    let mut policy = Controller::new(design_operating_point(&realized.reach), run.window);
+    let mut rec = Recorder::new(1 << 20);
+    simulate_closed_loop_traced(&best.timing, &opts.sim, &mut policy, &drift, &run, &mut rec);
+
+    assert_eq!(rec.dropped(), 0);
+    let events = rec.take_events();
+    let text = write_chrome_trace(&events, opts.sim.clock_hz);
+    let stats = validate_chrome_trace(&text).expect("pinned trace must validate");
+    assert!(stats.spans > 0 && stats.counters > 0, "trace missing tracks");
+
+    // The rendered aggregation table is pinned alongside the JSON so
+    // `atheena trace` output is regression-gated too.
+    let summary = TraceSummary::from_events(&events, opts.sim.clock_hz, 0);
+    assert_golden("three_exit_trace.json", &text);
+    assert_golden(
+        "three_exit_trace_summary.txt",
+        &atheena::report::tables::render_trace_summary(&summary),
+    );
+}
