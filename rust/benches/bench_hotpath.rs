@@ -3,7 +3,8 @@
 //! the perf-trajectory JSONs:
 //!
 //! * `simulate_multi` samples/s (fresh-allocation vs reused
-//!   [`SimScratch`], plus traced-vs-untraced: NullSink and live
+//!   [`SimScratch`] vs the compiled kernel — `compiled-b{batch}`,
+//!   target ≥5× scratch — plus traced-vs-untraced: NullSink and live
 //!   Recorder entries)                    → `BENCH_sim.json`
 //! * simulated-annealing proposals/s (parallel restarts vs the
 //!   sequential reference)                → `BENCH_dse.json`
@@ -26,7 +27,9 @@ use atheena::ir::Cdfg;
 use atheena::resources::Board;
 use atheena::runtime::DesignCache;
 use atheena::sdf::HwMapping;
-use atheena::sim::{simulate_multi, DesignTiming, SimConfig, SimScratch};
+use atheena::sim::{
+    simulate_multi, CompiledDesign, CompiledScratch, DesignTiming, SimConfig, SimScratch,
+};
 use atheena::trace::{NullSink, Recorder, DEFAULT_RECORDER_CAPACITY};
 use atheena::util::bench::BenchLog;
 
@@ -66,6 +69,29 @@ fn main() -> anyhow::Result<()> {
     sim_log.metric(
         "hotpath/simulate_multi/samples_per_s",
         batch as f64 * s.per_second(),
+        "samples/s",
+    );
+    // Compiled core over the identical batch (lower once, run many) —
+    // the DESIGN.md §10 fast path. Target: ≥5× the interpreted scratch
+    // samples/s (tracked in BENCH_sim.json `_meta`). Bit-equality with
+    // the oracle is asserted before timing so a drifted kernel can
+    // never post a number.
+    let compiled = CompiledDesign::lower(&timing, &cfg);
+    let mut cscratch = CompiledScratch::new();
+    anyhow::ensure!(
+        compiled.run(&mut cscratch, &stages).total_cycles
+            == simulate_multi(&timing, &cfg, &stages).total_cycles,
+        "compiled kernel diverged from simulate_multi on the bench batch"
+    );
+    let sc = sim_log.bench(
+        &format!("hotpath/simulate_multi/compiled-b{batch}"),
+        3,
+        iters,
+        || compiled.run(&mut cscratch, &stages).total_cycles,
+    );
+    sim_log.metric(
+        "hotpath/simulate_multi/compiled_samples_per_s",
+        batch as f64 * sc.per_second(),
         "samples/s",
     );
     // Tracing cost on the same schedule: the NullSink entry must track

@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
 
     // Stall-heavy regime (undersized buffer) — worst-case engine load.
     let mut tight = timing.clone();
-    tight.set_cond_buffer_depth(0, 1);
+    tight.set_cond_buffer_depth(0, 1)?;
     let flags = synthetic_hard_flags(0.5, 1024, 9);
     log.bench("sim/ee-batch1024/depth1-stalls", 3, iters, || {
         simulate_ee(&tight, &cfg, &flags)

@@ -47,7 +47,10 @@ use crate::ir::{Cdfg, Network, StageId};
 use crate::resources::{Board, ResourceVec};
 use crate::runtime::DesignCache;
 use crate::sdf::{buffering, Folding, HwMapping};
-use crate::sim::{DesignTiming, SimConfig, SimMetrics, SimScratch};
+use crate::sim::{
+    CompiledDesign, CompiledScratch, DesignTiming, SimBackend, SimConfig, SimMetrics,
+    SimScratch,
+};
 use crate::tap::{combine_multi, MultiStageDesign, TapCurve};
 use crate::util::Json;
 
@@ -114,19 +117,34 @@ impl OperatingEnvelope {
     /// §Perf: every grid point is an independent batch simulation, so
     /// the q-grid is resolved first (cheap, order-dependent dedup) and
     /// the points run on the deterministic executor, each worker reusing
-    /// one [`SimScratch`]. Bit-identical to [`Self::sweep_sequential`]
-    /// (property-tested in `tests/pipeline_props.rs`).
+    /// one scratch. The design is lowered **once** and the compiled
+    /// table shared by reference across workers (DESIGN.md §10).
+    /// Bit-identical to [`Self::sweep_sequential`] — which pins the
+    /// interpreted oracle — so the existing parallel-vs-sequential
+    /// property test doubles as a compiled-vs-interpreted differential
+    /// gate (`tests/pipeline_props.rs`).
     pub fn sweep(timing: &DesignTiming, reach: &[f64], clock_hz: f64) -> OperatingEnvelope {
-        Self::sweep_with(timing, reach, clock_hz, true)
+        Self::sweep_with(timing, reach, clock_hz, true, SimBackend::Compiled)
     }
 
-    /// Sequential reference path for [`Self::sweep`].
+    /// [`Self::sweep`] with an explicit backend (`--backend`).
+    pub fn sweep_backend(
+        timing: &DesignTiming,
+        reach: &[f64],
+        clock_hz: f64,
+        backend: SimBackend,
+    ) -> OperatingEnvelope {
+        Self::sweep_with(timing, reach, clock_hz, true, backend)
+    }
+
+    /// Sequential reference path for [`Self::sweep`]: one worker, the
+    /// interpreted oracle.
     pub fn sweep_sequential(
         timing: &DesignTiming,
         reach: &[f64],
         clock_hz: f64,
     ) -> OperatingEnvelope {
-        Self::sweep_with(timing, reach, clock_hz, false)
+        Self::sweep_with(timing, reach, clock_hz, false, SimBackend::Interpreted)
     }
 
     fn sweep_with(
@@ -134,9 +152,11 @@ impl OperatingEnvelope {
         reach: &[f64],
         clock_hz: f64,
         parallel: bool,
+        backend: SimBackend,
     ) -> OperatingEnvelope {
         let sim_cfg = SimConfig {
             clock_hz,
+            backend,
             ..SimConfig::default()
         };
         let p = reach.first().copied().unwrap_or(0.0);
@@ -148,7 +168,20 @@ impl OperatingEnvelope {
             }
             qs.push(q);
         }
-        let eval = |scratch: &mut SimScratch, i: usize| -> EnvelopePoint {
+        // Lower once per design; `None` keeps the interpreted oracle.
+        let compiled = match backend {
+            SimBackend::Compiled => Some(CompiledDesign::lower(timing, &sim_cfg)),
+            SimBackend::Interpreted => None,
+        };
+        enum Scratch {
+            Interp(SimScratch),
+            Comp(CompiledScratch),
+        }
+        let init = || match backend {
+            SimBackend::Interpreted => Scratch::Interp(SimScratch::new()),
+            SimBackend::Compiled => Scratch::Comp(CompiledScratch::new()),
+        };
+        let eval = |scratch: &mut Scratch, i: usize| -> EnvelopePoint {
             let q = qs[i];
             let scale = if p > 0.0 { q / p } else { 0.0 };
             let mut reach_rt: Vec<f64> = reach
@@ -163,7 +196,11 @@ impl OperatingEnvelope {
                 Self::BATCH,
                 Self::SEED ^ (q * 1e4) as u64,
             );
-            let sim = scratch.simulate_multi(timing, &sim_cfg, &stages);
+            let sim = match (scratch, &compiled) {
+                (Scratch::Interp(s), _) => s.simulate_multi(timing, &sim_cfg, &stages),
+                (Scratch::Comp(s), Some(c)) => c.run(s, &stages),
+                (Scratch::Comp(_), None) => unreachable!("compiled scratch without table"),
+            };
             EnvelopePoint {
                 q,
                 throughput_sps: sim.throughput(clock_hz),
@@ -172,9 +209,9 @@ impl OperatingEnvelope {
             }
         };
         let points = if parallel {
-            crate::util::exec::run_ordered_with(qs.len(), SimScratch::new, &eval)
+            crate::util::exec::run_ordered_with(qs.len(), init, &eval)
         } else {
-            let mut scratch = SimScratch::new();
+            let mut scratch = init();
             (0..qs.len()).map(|i| eval(&mut scratch, i)).collect()
         };
         OperatingEnvelope { design_p: p, points }
@@ -662,8 +699,14 @@ impl Combined {
             let timing = DesignTiming::from_ee_mapping(&mapping);
             // The Fig. 8-style mismatch sweep rides with the artifact:
             // a pure function of fingerprinted inputs, so caching it is
-            // always sound.
-            let envelope = OperatingEnvelope::sweep(&timing, &self.reach, board.clock_hz);
+            // always sound (both backends produce the identical
+            // envelope, so the cache key need not mention the backend).
+            let envelope = OperatingEnvelope::sweep_backend(
+                &timing,
+                &self.reach,
+                board.clock_hz,
+                self.opts.sim.backend,
+            );
 
             designs.push(RealizedDesign {
                 budget_fraction: choice.budget_fraction,
@@ -841,9 +884,17 @@ impl Realized {
         let two_stage = self.reach.len() == 1;
         // One reusable simulation scratch across every (design, q)
         // measurement — zero steady-state allocation in the simulator.
+        // Under the compiled backend each design is lowered once and
+        // run across the whole q ladder (DESIGN.md §10); baselines stay
+        // on the dedicated interpreted path above either way.
         let mut scratch = SimScratch::new();
+        let mut cscratch = CompiledScratch::new();
         let mut designs = Vec::new();
         for d in &self.designs {
+            let compiled = match opts.sim.backend {
+                SimBackend::Compiled => Some(CompiledDesign::lower(&d.timing, &opts.sim)),
+                SimBackend::Interpreted => None,
+            };
             let mut measured = Vec::new();
             for &q in &opts.q_values {
                 let seed = opts.seed ^ (q * 1e4) as u64;
@@ -852,7 +903,10 @@ impl Realized {
                         Some(f) => f(q, opts.batch),
                         None => synthetic_hard_flags(q, opts.batch, seed),
                     };
-                    scratch.simulate_ee(&d.timing, &opts.sim, &flags)
+                    match &compiled {
+                        Some(c) => c.run_ee(&mut cscratch, &flags),
+                        None => scratch.simulate_ee(&d.timing, &opts.sim, &flags),
+                    }
                 } else {
                     // Scale the whole design-time reach vector so the
                     // first exit sees hard probability q.
@@ -862,7 +916,10 @@ impl Realized {
                         *r = (*r * factor).clamp(0.0, 1.0);
                     }
                     let stages = synthetic_exit_stages(&reach_rt, opts.batch, seed);
-                    scratch.simulate_multi(&d.timing, &opts.sim, &stages)
+                    match &compiled {
+                        Some(c) => c.run(&mut cscratch, &stages),
+                        None => scratch.simulate_multi(&d.timing, &opts.sim, &stages),
+                    }
                 };
                 measured.push((q, SimMetrics::from_result(sim, opts.sim.clock_hz)));
             }
@@ -1447,7 +1504,7 @@ mod tests {
             for d in &r.designs {
                 assert_eq!(d.cond_buffer_depths, d.mapping.cond_buffer_depths());
                 for (e, &depth) in d.cond_buffer_depths.iter().enumerate() {
-                    assert_eq!(d.timing.cond_buffer_depth(e), depth);
+                    assert_eq!(d.timing.cond_buffer_depth(e).unwrap(), depth);
                 }
             }
         }

@@ -96,6 +96,24 @@
 //! optimization is property-tested bit-identical to its reference path,
 //! and `bench_hotpath` tracks the wins in `BENCH_{sim,dse,e2e}.json`.
 //!
+//! The simulator itself is **compiled** (DESIGN.md §10): a one-time
+//! lowering pass (`sim::lower`) flattens a `DesignTiming` +
+//! `SimConfig` into a branch-minimal flat op table executed by
+//! `sim::CompiledDesign` over structure-of-arrays sample state in a
+//! reusable `sim::CompiledScratch`. The interpreted `simulate_multi`
+//! stays untouched as the bit-identical reference oracle
+//! (property-tested in `tests/compiled_props.rs`, fault RNG stream
+//! included); `sim::SimBackend` selects the core per run — the compiled
+//! path is the default for the envelope q-grid, `Realized::measure`,
+//! and the untraced closed-loop drift windows, and `--backend
+//! interpreted` switches any CLI run back to the oracle. Traced runs
+//! always interpret (the compiled kernel carries no sink hooks). A
+//! `DesignTiming::generation` counter invalidates compiled tables
+//! lowered from a since-mutated timing. `atheena trace diff A.json
+//! B.json` aligns two pinned-seed trace streams per track and reports
+//! the first diverging event — the debugging instrument for exactly
+//! this kind of dual-core work.
+//!
 //! Observability is per-sample, not just aggregate (DESIGN.md §9): the
 //! `trace` subsystem captures structured events (`SampleAdmitted`,
 //! `SectionEnter/Exit`, `ExitTaken`, `BufferStalled/Drained`,

@@ -9,12 +9,18 @@
 //!   infer    --network NAME [--batch N] [--q FRAC]
 //!   serve    --network NAME [--requests N] [--trace-out FILE]
 //!   trace    [--network NAME | --testnet three_exit] [--out FILE]
+//!   trace    diff A.json B.json
 //!
 //! `trace` runs the closed-loop simulator with the event recorder
 //! attached, writes a Chrome-trace/Perfetto `trace.json` (open it at
 //! ui.perfetto.dev), and prints the aggregation table (DESIGN.md §9).
+//! `trace diff` aligns two exported traces by track and reports the
+//! first diverging event (exit 1 on divergence, like `diff(1)`).
 //!
-//! Common flags: --artifacts DIR (default ./artifacts), --quick.
+//! Common flags: --artifacts DIR (default ./artifacts), --quick, and
+//! --backend interpreted|compiled to pick the simulator core
+//! (DESIGN.md §10; the default is the compiled kernel, `interpreted`
+//! pins the reference interpreter).
 //! (The vendored offline crate set has no clap; parsing is hand-rolled.)
 
 use std::path::PathBuf;
@@ -32,9 +38,11 @@ use atheena::resources::Board;
 use atheena::runtime::{ArtifactStore, DesignCache};
 use atheena::sim::{
     design_operating_point, simulate_closed_loop_traced, ClosedLoopConfig, DriftScenario,
+    SimBackend,
 };
 use atheena::trace::{
-    validate_chrome_trace, write_chrome_trace, Recorder, TraceSummary, DEFAULT_RECORDER_CAPACITY,
+    diff_chrome_traces, validate_chrome_trace, write_chrome_trace, Recorder, TraceSummary,
+    DEFAULT_RECORDER_CAPACITY,
 };
 use atheena::util::Rng;
 
@@ -88,12 +96,22 @@ impl Args {
         DesignCache::open(self.artifacts().join("designs"))
     }
 
-    fn options(&self, board: Board) -> ToolflowOptions {
-        if self.has("quick") {
+    /// `--backend interpreted|compiled` (None when the flag is absent:
+    /// keep the config default, the compiled kernel).
+    fn backend(&self) -> anyhow::Result<Option<SimBackend>> {
+        self.get("backend").map(SimBackend::parse).transpose()
+    }
+
+    fn options(&self, board: Board) -> anyhow::Result<ToolflowOptions> {
+        let mut opts = if self.has("quick") {
             ToolflowOptions::quick(board)
         } else {
             ToolflowOptions::new(board)
+        };
+        if let Some(b) = self.backend()? {
+            opts.sim.backend = b;
         }
+        Ok(opts)
     }
 
     fn board(&self) -> anyhow::Result<Board> {
@@ -113,7 +131,10 @@ fn usage() -> ! {
          \n  infer    --network NAME [--batch N] [--q FRAC]\
          \n  serve    --network NAME [--requests N] [--controller] [--window N] [--trace-out FILE]\
          \n  trace    [--network NAME | --testnet three_exit] [--samples N] [--window N]\
-         \n           [--drift none|step|ramp|periodic] [--controller] [--capacity N] [--out FILE]"
+         \n           [--drift none|step|ramp|periodic] [--controller] [--capacity N] [--out FILE]\
+         \n  trace    diff A.json B.json   (first diverging event; exit 1 on divergence)\
+         \n\
+         \ncommon: --artifacts DIR, --quick, --backend interpreted|compiled (simulator core)"
     );
     std::process::exit(2);
 }
@@ -148,7 +169,7 @@ fn resolve_realized(args: &Args) -> anyhow::Result<(Realized, bool, Board)> {
     let net = atheena::ir::Network::from_file(
         &args.artifacts().join("networks").join(format!("{name}.json")),
     )?;
-    let opts = args.options(board.clone());
+    let opts = args.options(board.clone())?;
     let cache = args.design_cache()?;
     let (realized, cached) = Realized::load_or_run(&cache, &net, &opts)?;
     Ok((realized, cached, board))
@@ -232,7 +253,7 @@ fn cmd_toolflow(args: &Args) -> anyhow::Result<()> {
     let net = atheena::ir::Network::from_file(
         &args.artifacts().join("networks").join(format!("{name}.json")),
     )?;
-    let opts = args.options(board.clone());
+    let opts = args.options(board.clone())?;
     // Staged pipeline: the realized design is cached so later `infer` /
     // `serve` / `report` invocations skip the DSE entirely.
     let cache = args.design_cache()?;
@@ -333,7 +354,7 @@ fn cmd_infer(args: &Args) -> anyhow::Result<()> {
     // Fetch the realized design for board timing: cache hit reuses the
     // stored artifact with zero anneal calls; miss runs the pipeline
     // once and saves it for every later invocation.
-    let opts = args.options(board);
+    let opts = args.options(board)?;
     let cache = args.design_cache()?;
     let (realized, cached) = Realized::load_or_run(&cache, &net, &opts)?;
     let best = realized
@@ -372,7 +393,35 @@ fn cmd_infer(args: &Args) -> anyhow::Result<()> {
 /// loop, flow arrows following each sample), and print the
 /// aggregation table (per-exit latency distributions, buffer stall
 /// totals, reconvergence time). DESIGN.md §9.
+/// `atheena trace diff A.json B.json` — align two exported traces by
+/// (pid, tid) track and report the first diverging event. Exit code
+/// follows `diff(1)`: 0 identical, nonzero on divergence or error.
+fn cmd_trace_diff(args: &Args) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        args.positional.len() == 3,
+        "usage: atheena trace diff A.json B.json"
+    );
+    let (pa, pb) = (&args.positional[1], &args.positional[2]);
+    let ta = std::fs::read_to_string(pa)
+        .map_err(|e| anyhow::anyhow!("cannot read {pa}: {e}"))?;
+    let tb = std::fs::read_to_string(pb)
+        .map_err(|e| anyhow::anyhow!("cannot read {pb}: {e}"))?;
+    match diff_chrome_traces(&ta, &tb)? {
+        None => {
+            println!("traces identical: {pa} == {pb}");
+            Ok(())
+        }
+        Some(d) => {
+            print!("{}", d.render());
+            std::process::exit(1);
+        }
+    }
+}
+
 fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    if args.positional.first().map(String::as_str) == Some("diff") {
+        return cmd_trace_diff(args);
+    }
     // Timing source: a cached realized network design, or the built-in
     // pinned-seed three-exit testnet (the artifact-free / CI path).
     let (timing, sim_cfg, reach, label) = if let Some(name) = args.get("network") {
@@ -399,6 +448,9 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
         let mut opts = ToolflowOptions::quick(args.board()?);
         // Pinned anneal seed: same design as the committed goldens.
         opts.sweep.anneal.seed = 0xA7EE_601D;
+        if let Some(b) = args.backend()? {
+            opts.sim.backend = b;
+        }
         let realized = Toolflow::new(&net, &opts)?.sweep()?.combine()?.realize()?;
         let best = realized
             .best_design()
@@ -479,7 +531,7 @@ fn resolve_serve_design(args: &Args, name: &str) -> anyhow::Result<(Realized, bo
     let net = atheena::ir::Network::from_file(
         &args.artifacts().join("networks").join(format!("{name}.json")),
     )?;
-    let opts = args.options(args.board()?);
+    let opts = args.options(args.board()?)?;
     let cache = args.design_cache()?;
     if let Some(r) = Realized::load(&cache, &net, &opts)? {
         return Ok((r, true));

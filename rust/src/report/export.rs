@@ -80,7 +80,7 @@ pub fn export_fig7(ctx: &mut ReportContext, network: &str) -> anyhow::Result<()>
     let flags = synthetic_hard_flags(p, 1024, 0xC5F);
     let mut rows = Vec::new();
     for depth in 0..=(sized * 2) {
-        timing.set_cond_buffer_depth(0, depth);
+        timing.set_cond_buffer_depth(0, depth)?;
         let m = SimMetrics::from_result(&simulate_ee(&timing, &sim_cfg, &flags), sim_cfg.clock_hz);
         rows.push(format!(
             "{depth},{:.1},{},{}",

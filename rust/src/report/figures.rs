@@ -170,7 +170,7 @@ pub fn fig7(ctx: &mut ReportContext) -> anyhow::Result<()> {
     let flags =
         crate::coordinator::toolflow::synthetic_hard_flags(q, 1024, 0xF16_7);
     for depth in [0usize, 1, 2, 3, 4, 6, 8, 12, 16, sized, sized * 2] {
-        timing.set_cond_buffer_depth(0, depth);
+        timing.set_cond_buffer_depth(0, depth)?;
         let sim = simulate_ee(&timing, &ctx.options(Board::zc706()).sim, &flags);
         let m = SimMetrics::from_result(&sim, 125e6);
         println!(

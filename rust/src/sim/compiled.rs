@@ -1,0 +1,550 @@
+//! The compiled simulator core: a batch kernel over the lowered
+//! [`OpTable`], with structure-of-arrays sample state (DESIGN.md §10).
+//!
+//! Contract
+//! --------
+//! `simulate_multi` (the interpreted `SimScratch::core`) is the
+//! reference oracle. For any well-formed timing, batch, and fault
+//! model, [`CompiledDesign::run`] / [`run_faults`] /
+//! [`run_ee`](CompiledDesign::run_ee) reproduce its [`SimResult`]
+//! **byte for byte**: every trace field, total cycles, per-buffer stall
+//! cycles and peak occupancy, out-of-order count, deadlock diagnosis,
+//! and the fault RNG draw *sequence* (one `chance` draw per sample when
+//! DMA stalls are enabled, then one `below` draw per reached non-final
+//! exit when jitter is enabled — in that order). The equivalence is
+//! property-tested across random designs and hardness streams in
+//! `tests/compiled_props.rs`, the same way `anneal_sequential` anchors
+//! the parallel annealer.
+//!
+//! What makes it faster than the (already allocation-free) scratch
+//! interpreter:
+//!
+//! * the per-sample loop walks a flat `Vec<SectionOp>` of baked
+//!   constants instead of three parallel `Vec`s behind `DesignTiming`,
+//! * the data-dependent exit dispatch is hoisted out of the section
+//!   body (forward ops vs. one completing op, see `sim/lower.rs`),
+//! * section/decision occupancy uses plain `u64` next-free columns
+//!   instead of `Option<u64>` tags (`max` with 0 is the identity, so
+//!   "never used" needs no sentinel),
+//! * per-sample outputs land in contiguous SoA columns
+//!   (`t_in`/`merge arrival`/`path`) and are scattered into the
+//!   AoS `SampleTrace`s once, after the batch.
+//!
+//! Tracing deliberately has no hook here: traced runs
+//! (`simulate_multi_traced`) always use the interpreted core, which is
+//! itself property-tested bit-identical to untraced interpretation.
+//!
+//! Staleness: the design caches `DesignTiming::generation` at lower
+//! time. Mutating the timing afterwards (e.g.
+//! `set_cond_buffer_depth`) bumps the counter, and
+//! [`CompiledDesign::is_stale`] reports the table must be re-lowered.
+
+use super::config::SimConfig;
+use super::engine::{DesignTiming, FaultModel, MinQueue, SampleTrace, SimResult};
+use super::lower::{lower, OpTable};
+
+/// A design lowered for the compiled kernel: the immutable flat op
+/// table plus the source timing's generation. Lower once per design,
+/// run many batches; the table is `Sync`, so parallel sweeps share one
+/// lowered design across workers (each worker brings its own
+/// [`CompiledScratch`]).
+#[derive(Clone, Debug)]
+pub struct CompiledDesign {
+    table: OpTable,
+    generation: u64,
+}
+
+impl CompiledDesign {
+    /// Lower `t` under host config `cfg` (DMA bus width is baked into
+    /// the table, so a table is specific to the config it was lowered
+    /// with).
+    pub fn lower(t: &DesignTiming, cfg: &SimConfig) -> CompiledDesign {
+        CompiledDesign {
+            table: lower(t, cfg),
+            generation: t.generation(),
+        }
+    }
+
+    /// The lowered op table.
+    pub fn table(&self) -> &OpTable {
+        &self.table
+    }
+
+    /// Generation of the timing this design was lowered from.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Whether `t` has been structurally mutated since this design was
+    /// lowered from it (in which case the table no longer describes the
+    /// timing and must be re-lowered).
+    pub fn is_stale(&self, t: &DesignTiming) -> bool {
+        t.generation() != self.generation
+    }
+
+    /// Compiled [`simulate_multi`](super::simulate_multi): run a batch
+    /// through the lowered table into `scratch`. The returned reference
+    /// is valid until the scratch's next run.
+    pub fn run<'a>(
+        &self,
+        scratch: &'a mut CompiledScratch,
+        completes_at: &[usize],
+    ) -> &'a SimResult {
+        scratch.run(&self.table, completes_at, &FaultModel::NONE);
+        &scratch.result
+    }
+
+    /// Compiled [`simulate_multi_faults`](super::simulate_multi_faults).
+    pub fn run_faults<'a>(
+        &self,
+        scratch: &'a mut CompiledScratch,
+        completes_at: &[usize],
+        faults: &FaultModel,
+    ) -> &'a SimResult {
+        scratch.run(&self.table, completes_at, faults);
+        &scratch.result
+    }
+
+    /// Compiled [`simulate_ee`](super::simulate_ee) (two-stage hardness
+    /// flags; reuses the scratch's completion buffer).
+    pub fn run_ee<'a>(
+        &self,
+        scratch: &'a mut CompiledScratch,
+        hard: &[bool],
+    ) -> &'a SimResult {
+        self.run_ee_faults(scratch, hard, &FaultModel::NONE)
+    }
+
+    /// Compiled [`simulate_ee_faults`](super::simulate_ee_faults).
+    pub fn run_ee_faults<'a>(
+        &self,
+        scratch: &'a mut CompiledScratch,
+        hard: &[bool],
+        faults: &FaultModel,
+    ) -> &'a SimResult {
+        let mut completes = std::mem::take(&mut scratch.completes_buf);
+        completes.clear();
+        completes.extend(hard.iter().map(|&h| usize::from(h)));
+        scratch.run(&self.table, &completes, faults);
+        scratch.completes_buf = completes;
+        &scratch.result
+    }
+}
+
+/// Reusable execution state for the compiled kernel — the counterpart
+/// of [`SimScratch`](super::SimScratch), with the same guarantee:
+/// capacity is retained across runs, so steady-state execution performs
+/// **zero allocations** once warmed (checked with the counting
+/// allocator in `tests/compiled_props.rs`), and results are independent
+/// of whatever the scratch ran before.
+#[derive(Debug, Default)]
+pub struct CompiledScratch {
+    /// Conditional Buffer resident leave-times, one queue per exit.
+    buffers: Vec<MinQueue>,
+    /// Next cycle each section may issue (`prev start + II`; 0 = never
+    /// used — no sentinel needed, `max(arrival, 0) = arrival`).
+    sec_free: Vec<u64>,
+    /// Next cycle each exit decision may issue.
+    dec_free: Vec<u64>,
+    // SoA sample-state columns, filled by the per-sample kernel and
+    // consumed by the bucket/merge/scatter phases.
+    /// DMA-in completion cycle per sample.
+    col_t_in: Vec<u64>,
+    /// Merge-arrival cycle per sample.
+    col_merge: Vec<u64>,
+    /// Completion path (section index) per sample.
+    col_path: Vec<u32>,
+    /// Per-path arrival buckets for the k-way merge.
+    path_arrivals: Vec<Vec<(u64, usize)>>,
+    /// K-way merge cursors.
+    heads: Vec<usize>,
+    /// Merged arrival stream (one entry per sample).
+    merge_arrivals: Vec<(u64, usize)>,
+    /// Reused hardness→completion-depth buffer for the `run_ee` entry.
+    completes_buf: Vec<usize>,
+    result: SimResult,
+}
+
+impl CompiledScratch {
+    pub fn new() -> CompiledScratch {
+        CompiledScratch::default()
+    }
+
+    /// The last run's result.
+    pub fn result(&self) -> &SimResult {
+        &self.result
+    }
+
+    /// Move the last result out (the scratch re-grows its buffers on
+    /// the next run).
+    pub fn take_result(&mut self) -> SimResult {
+        std::mem::take(&mut self.result)
+    }
+
+    /// Reset every reused buffer for a run of `n` samples. Mirrors
+    /// `SimScratch::reset`; capacity is retained.
+    fn reset(&mut self, n: usize, n_sections: usize, n_exits: usize) {
+        let r = &mut self.result;
+        r.traces.clear();
+        r.traces.resize(n, SampleTrace::default());
+        r.total_cycles = 0;
+        r.stall_cycles.clear();
+        r.stall_cycles.resize(n_exits, 0);
+        r.peak_buffer_occupancy.clear();
+        r.peak_buffer_occupancy.resize(n_exits, 0);
+        r.out_of_order = 0;
+        r.deadlock = None;
+
+        if self.buffers.len() < n_exits {
+            self.buffers.resize_with(n_exits, MinQueue::default);
+        }
+        for b in &mut self.buffers[..n_exits] {
+            b.clear();
+        }
+        self.sec_free.clear();
+        self.sec_free.resize(n_sections, 0);
+        self.dec_free.clear();
+        self.dec_free.resize(n_exits, 0);
+        self.col_t_in.clear();
+        self.col_t_in.resize(n, 0);
+        self.col_merge.clear();
+        self.col_merge.resize(n, 0);
+        self.col_path.clear();
+        self.col_path.resize(n, 0);
+        if self.path_arrivals.len() != n_sections {
+            self.path_arrivals.resize_with(n_sections, Vec::new);
+        }
+        for bucket in &mut self.path_arrivals {
+            bucket.clear();
+        }
+        self.heads.clear();
+        self.heads.resize(n_sections, 0);
+        self.merge_arrivals.clear();
+        self.merge_arrivals.reserve(n);
+    }
+
+    /// The batch kernel. Phase structure (each phase streams through
+    /// contiguous columns):
+    ///
+    /// 1. per-sample walk over the op table → `col_t_in` / `col_merge`
+    ///    / `col_path` (+ stall/occupancy accumulators),
+    /// 2. bucket merge arrivals by path, in sample order (identical
+    ///    push order to the interpreted core),
+    /// 3. k-way merge (or sort, under decision jitter) + merge/DMA-out
+    ///    recurrence → `t_out`,
+    /// 4. scatter the SoA columns into the AoS `SampleTrace`s.
+    fn run(&mut self, table: &OpTable, completes_at: &[usize], faults: &FaultModel) {
+        let n = completes_at.len();
+        let n_sections = table.ops.len();
+        let n_exits = table.n_exits;
+        self.reset(n, n_sections, n_exits);
+        if n == 0 {
+            return;
+        }
+        if let Some(msg) = &table.deadlock {
+            // Fig. 7, pre-diagnosed at lower time (see sim/lower.rs).
+            self.result.deadlock = Some(msg.clone());
+            return;
+        }
+
+        let last = table.last;
+        let dma_in = table.dma_in;
+        let dma_out = table.dma_out;
+        let inject_dma = faults.dma_stall_prob > 0.0;
+        let jitter_max = faults.decision_jitter;
+        let mut fault_rng = crate::util::Rng::new(faults.seed);
+        let mut dma_skew = 0u64;
+
+        // ---- phase 1: per-sample kernel over the op table ----
+        {
+            let ops = &table.ops[..];
+            let buffers = &mut self.buffers[..n_exits];
+            let sec_free = &mut self.sec_free[..];
+            let dec_free = &mut self.dec_free[..];
+            let stall = &mut self.result.stall_cycles[..];
+            let peak_occ = &mut self.result.peak_buffer_occupancy[..];
+            let col_t_in = &mut self.col_t_in[..];
+            let col_merge = &mut self.col_merge[..];
+            let col_path = &mut self.col_path[..];
+
+            for s in 0..n {
+                let target = completes_at[s].min(last);
+                if inject_dma && fault_rng.chance(faults.dma_stall_prob) {
+                    dma_skew += faults.dma_stall_cycles;
+                }
+                let t_in = (s as u64 + 1) * dma_in + dma_skew;
+                col_t_in[s] = t_in;
+                let mut arrival = t_in;
+
+                // Forward ops: every section before the target — admit,
+                // issue, decide "hard", forward. No exit dispatch.
+                for (sec, op) in ops[..target].iter().enumerate() {
+                    let mut start = arrival.max(sec_free[sec]);
+                    if op.has_exit {
+                        loop {
+                            let write = start + op.lat;
+                            while let Some(leave) = buffers[sec].peek_min() {
+                                if leave <= write {
+                                    buffers[sec].pop_min();
+                                } else {
+                                    break;
+                                }
+                            }
+                            if buffers[sec].len() < op.depth {
+                                break;
+                            }
+                            let leave = buffers[sec].pop_min().unwrap();
+                            stall[sec] += leave - write;
+                            start += leave - write;
+                        }
+                    }
+                    sec_free[sec] = start + op.ii;
+                    if sec > 0 {
+                        buffers[sec - 1].push(start + 1);
+                        peak_occ[sec - 1] =
+                            peak_occ[sec - 1].max(buffers[sec - 1].len());
+                    }
+                    let split_out = start + op.lat;
+                    let dec_start = split_out.max(dec_free[sec]);
+                    dec_free[sec] = dec_start + op.exit_ii;
+                    let jitter = if jitter_max > 0 {
+                        fault_rng.below(jitter_max as usize + 1) as u64
+                    } else {
+                        0
+                    };
+                    arrival = dec_start + op.exit_lat + jitter;
+                }
+
+                // Completing op: the target section — final-merge or
+                // early-exit-drop, selected by the baked `last` index.
+                let op = ops[target];
+                let mut start = arrival.max(sec_free[target]);
+                if op.has_exit {
+                    loop {
+                        let write = start + op.lat;
+                        while let Some(leave) = buffers[target].peek_min() {
+                            if leave <= write {
+                                buffers[target].pop_min();
+                            } else {
+                                break;
+                            }
+                        }
+                        if buffers[target].len() < op.depth {
+                            break;
+                        }
+                        let leave = buffers[target].pop_min().unwrap();
+                        stall[target] += leave - write;
+                        start += leave - write;
+                    }
+                }
+                sec_free[target] = start + op.ii;
+                if target > 0 {
+                    buffers[target - 1].push(start + 1);
+                    peak_occ[target - 1] =
+                        peak_occ[target - 1].max(buffers[target - 1].len());
+                }
+                col_merge[s] = if target == last {
+                    start + op.lat
+                } else {
+                    let split_out = start + op.lat;
+                    let dec_start = split_out.max(dec_free[target]);
+                    dec_free[target] = dec_start + op.exit_ii;
+                    let jitter = if jitter_max > 0 {
+                        fault_rng.below(jitter_max as usize + 1) as u64
+                    } else {
+                        0
+                    };
+                    let t_dec = dec_start + op.exit_lat + jitter;
+                    // Early exit: decision drops the buffered map in one
+                    // cycle.
+                    buffers[target].push(t_dec + 1);
+                    peak_occ[target] = peak_occ[target].max(buffers[target].len());
+                    t_dec
+                };
+                col_path[s] = target as u32;
+            }
+        }
+
+        // ---- phase 2: bucket arrivals by path, in sample order ----
+        for s in 0..n {
+            let p = self.col_path[s] as usize;
+            let m = self.col_merge[s];
+            self.path_arrivals[p].push((m, s));
+        }
+
+        // ---- phase 3: merge + output DMA, in arrival order ----
+        // Same structure as the interpreted core: per-path streams are
+        // monotone, so a k-way merge replaces the sort — except under
+        // injected decision jitter, which breaks monotonicity.
+        {
+            let path_arrivals = &self.path_arrivals;
+            let merge_arrivals = &mut self.merge_arrivals;
+            if jitter_max > 0 {
+                for bucket in path_arrivals.iter() {
+                    merge_arrivals.extend_from_slice(bucket);
+                }
+                merge_arrivals.sort_unstable();
+            } else {
+                let heads = &mut self.heads;
+                loop {
+                    let mut pick: Option<usize> = None;
+                    for (p, bucket) in path_arrivals.iter().enumerate() {
+                        if heads[p] >= bucket.len() {
+                            continue;
+                        }
+                        let cand = bucket[heads[p]];
+                        let better = match pick {
+                            None => true,
+                            Some(q) => cand < path_arrivals[q][heads[q]],
+                        };
+                        if better {
+                            pick = Some(p);
+                        }
+                    }
+                    let Some(p) = pick else { break };
+                    merge_arrivals.push(path_arrivals[p][heads[p]]);
+                    heads[p] += 1;
+                }
+            }
+        }
+        let traces = &mut self.result.traces[..];
+        let mut merge_free = 0u64;
+        let mut dma_out_free = 0u64;
+        for &(arrival, s) in self.merge_arrivals.iter() {
+            let m_start = arrival.max(merge_free);
+            merge_free = m_start + table.merge_ii;
+            let out_start = merge_free.max(dma_out_free);
+            dma_out_free = out_start + dma_out;
+            traces[s].t_out = dma_out_free;
+        }
+        let mut out_of_order = 0usize;
+        let mut max_seen: Option<usize> = None;
+        for &(_, s) in self.merge_arrivals.iter() {
+            if let Some(m) = max_seen {
+                if s < m {
+                    out_of_order += 1;
+                    continue;
+                }
+            }
+            max_seen = Some(max_seen.map_or(s, |m| m.max(s)));
+        }
+
+        // ---- phase 4: scatter SoA columns into the AoS traces ----
+        for (s, tr) in traces.iter_mut().enumerate() {
+            tr.t_in = self.col_t_in[s];
+            let path = self.col_path[s] as usize;
+            tr.exit_stage = path;
+            tr.exited_early = path < n_sections - 1;
+        }
+        self.result.out_of_order = out_of_order;
+        self.result.total_cycles = traces.iter().map(|t| t.t_out).max().unwrap_or(0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::{
+        simulate_ee, simulate_multi, simulate_multi_faults, ExitTiming, SectionTiming,
+    };
+
+    fn toy3() -> DesignTiming {
+        DesignTiming {
+            sections: vec![
+                SectionTiming { ii: 100, lat: 150 },
+                SectionTiming { ii: 200, lat: 250 },
+                SectionTiming { ii: 400, lat: 500 },
+            ],
+            exits: vec![
+                ExitTiming { ii: 80, lat: 120, buffer_depth: 4 },
+                ExitTiming { ii: 100, lat: 150, buffer_depth: 4 },
+            ],
+            merge_ii: 10,
+            input_words: 400,
+            output_words: 10,
+            generation: 0,
+        }
+    }
+
+    fn assert_same(a: &SimResult, b: &SimResult) {
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.out_of_order, b.out_of_order);
+        assert_eq!(a.stall_cycles, b.stall_cycles);
+        assert_eq!(a.peak_buffer_occupancy, b.peak_buffer_occupancy);
+        assert_eq!(a.deadlock, b.deadlock);
+        assert_eq!(a.traces.len(), b.traces.len());
+        for (x, y) in a.traces.iter().zip(&b.traces) {
+            assert_eq!(x.t_in, y.t_in);
+            assert_eq!(x.t_out, y.t_out);
+            assert_eq!(x.exit_stage, y.exit_stage);
+            assert_eq!(x.exited_early, y.exited_early);
+        }
+    }
+
+    #[test]
+    fn matches_interpreted_on_three_section_round_robin() {
+        let t = toy3();
+        let cfg = SimConfig::default();
+        let completes: Vec<usize> = (0..300).map(|i| i % 3).collect();
+        let oracle = simulate_multi(&t, &cfg, &completes);
+        let compiled = CompiledDesign::lower(&t, &cfg);
+        let mut scratch = CompiledScratch::new();
+        assert_same(&oracle, compiled.run(&mut scratch, &completes));
+    }
+
+    #[test]
+    fn matches_interpreted_under_faults() {
+        let t = toy3();
+        let cfg = SimConfig::default();
+        let completes: Vec<usize> = (0..200).map(|i| (i * 7) % 3).collect();
+        let faults = FaultModel {
+            decision_jitter: 9,
+            dma_stall_prob: 0.15,
+            dma_stall_cycles: 700,
+            seed: 0xFA17,
+        };
+        let oracle = simulate_multi_faults(&t, &cfg, &completes, &faults);
+        let compiled = CompiledDesign::lower(&t, &cfg);
+        let mut scratch = CompiledScratch::new();
+        assert_same(&oracle, compiled.run_faults(&mut scratch, &completes, &faults));
+    }
+
+    #[test]
+    fn ee_entry_matches_interpreted_and_handles_empty() {
+        let t = DesignTiming::two_stage(100, 150, 80, 120, 300, 400, 10, 4, 400, 10);
+        let cfg = SimConfig::default();
+        let hard: Vec<bool> = (0..128).map(|i| i % 3 == 0).collect();
+        let compiled = CompiledDesign::lower(&t, &cfg);
+        let mut scratch = CompiledScratch::new();
+        assert_same(&simulate_ee(&t, &cfg, &hard), compiled.run_ee(&mut scratch, &hard));
+        assert_same(&simulate_ee(&t, &cfg, &[]), compiled.run_ee(&mut scratch, &[]));
+    }
+
+    #[test]
+    fn replays_deadlock_diagnosis() {
+        let mut t = toy3();
+        t.set_cond_buffer_depth(1, 0).unwrap();
+        let cfg = SimConfig::default();
+        let compiled = CompiledDesign::lower(&t, &cfg);
+        let mut scratch = CompiledScratch::new();
+        let r = compiled.run(&mut scratch, &[0, 1, 2]);
+        assert_same(&simulate_multi(&t, &cfg, &[0, 1, 2]), r);
+        // Empty batches return before the deadlock check, like the
+        // interpreted core.
+        let empty = compiled.run(&mut scratch, &[]);
+        assert!(empty.deadlock.is_none());
+    }
+
+    #[test]
+    fn staleness_tracks_timing_generation() {
+        let mut t = toy3();
+        let cfg = SimConfig::default();
+        let compiled = CompiledDesign::lower(&t, &cfg);
+        assert!(!compiled.is_stale(&t));
+        t.set_cond_buffer_depth(0, 2).unwrap();
+        assert!(compiled.is_stale(&t));
+        let relowered = CompiledDesign::lower(&t, &cfg);
+        assert!(!relowered.is_stale(&t));
+        assert_eq!(relowered.generation(), t.generation());
+    }
+}

@@ -4,6 +4,36 @@
 //! [`DriftScenario`]s the closed-loop simulator replays (the paper's
 //! p/q mismatch made dynamic).
 
+/// Which simulator core executes untraced batch runs.
+///
+/// Both produce bit-identical [`SimResult`](super::SimResult)s — the
+/// interpreted core is the reference oracle, the compiled core
+/// ([`CompiledDesign`](super::CompiledDesign)) is the fast path lowered
+/// from it (DESIGN.md §10; equivalence is property-tested in
+/// `tests/compiled_props.rs`). Traced runs always interpret: the
+/// compiled kernel has no sink hooks by construction.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SimBackend {
+    /// The reference `SimScratch::core` interpreter.
+    Interpreted,
+    /// The lowered flat-op-table kernel (default).
+    #[default]
+    Compiled,
+}
+
+impl SimBackend {
+    /// Parse a `--backend` CLI value.
+    pub fn parse(s: &str) -> anyhow::Result<SimBackend> {
+        match s {
+            "interpreted" => Ok(SimBackend::Interpreted),
+            "compiled" => Ok(SimBackend::Compiled),
+            other => anyhow::bail!(
+                "unknown backend '{other}' (expected 'interpreted' or 'compiled')"
+            ),
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct SimConfig {
     /// Streaming words moved per cycle by each DMA direction (64-bit AXI
@@ -14,6 +44,8 @@ pub struct SimConfig {
     /// Extra sample-slots of FIFO slack between pipeline sections
     /// (Vivado HLS stream interfaces default to small FIFOs).
     pub fifo_slack: usize,
+    /// Simulator core for untraced batch runs (`--backend`).
+    pub backend: SimBackend,
 }
 
 impl Default for SimConfig {
@@ -22,6 +54,7 @@ impl Default for SimConfig {
             dma_words_per_cycle: 4,
             clock_hz: 125.0e6,
             fifo_slack: 2,
+            backend: SimBackend::default(),
         }
     }
 }
@@ -92,6 +125,17 @@ mod tests {
         let c = SimConfig::default();
         assert_eq!(c.dma_in_cycles(784), 196);
         assert_eq!(c.dma_in_cycles(1), 1);
+    }
+
+    #[test]
+    fn backend_parses_and_defaults_compiled() {
+        assert_eq!(
+            SimBackend::parse("interpreted").unwrap(),
+            SimBackend::Interpreted
+        );
+        assert_eq!(SimBackend::parse("compiled").unwrap(), SimBackend::Compiled);
+        assert!(SimBackend::parse("jit").is_err());
+        assert_eq!(SimConfig::default().backend, SimBackend::Compiled);
     }
 
     #[test]

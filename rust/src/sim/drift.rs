@@ -26,7 +26,8 @@ use crate::ee::profiler::ReachEstimator;
 use crate::trace::{NullSink, TraceEvent, TraceSink};
 use crate::util::Rng;
 
-use super::config::{DriftScenario, SimConfig};
+use super::compiled::{CompiledDesign, CompiledScratch};
+use super::config::{DriftScenario, SimBackend, SimConfig};
 use super::engine::{simulate_multi, simulate_multi_traced, DesignTiming, SimResult};
 use super::metrics::SimMetrics;
 
@@ -192,10 +193,21 @@ fn closed_loop_core(
         start = end;
     }
 
+    // Traced runs always interpret (the compiled kernel has no sink
+    // hooks); untraced runs honor the configured backend. Both cores
+    // are bit-identical, so the report does not depend on the choice.
     let sim = if tracing {
         simulate_multi_traced(t, cfg, &completes_at, sink)
     } else {
-        simulate_multi(t, cfg, &completes_at)
+        match cfg.backend {
+            SimBackend::Interpreted => simulate_multi(t, cfg, &completes_at),
+            SimBackend::Compiled => {
+                let compiled = CompiledDesign::lower(t, cfg);
+                let mut scratch = CompiledScratch::new();
+                compiled.run(&mut scratch, &completes_at);
+                scratch.take_result()
+            }
+        }
     };
     let metrics = SimMetrics::from_result(&sim, cfg.clock_hz);
 
@@ -332,6 +344,7 @@ mod tests {
             merge_ii: 10,
             input_words: 400,
             output_words: 10,
+            generation: 0,
         }
     }
 

@@ -54,14 +54,38 @@ pub struct ExitTiming {
 /// Pipeline-section timing extracted from a design point. `sections`
 /// holds one entry per backbone section; `exits` one entry per early
 /// exit (`sections.len() - 1` for EE designs, empty for baselines).
-#[derive(Clone, Debug, PartialEq, Eq)]
+///
+/// `generation` counts structural mutations (currently:
+/// [`DesignTiming::set_cond_buffer_depth`]). A
+/// [`CompiledDesign`](super::CompiledDesign) records the generation it
+/// was lowered from, so a compiled table can detect that its source
+/// timing changed underneath it (`is_stale`). The counter is bookkeeping,
+/// not identity: it is ignored by `PartialEq`/`Eq` and never serialized.
+#[derive(Clone, Debug)]
 pub struct DesignTiming {
     pub sections: Vec<SectionTiming>,
     pub exits: Vec<ExitTiming>,
     pub merge_ii: u64,
     pub input_words: usize,
     pub output_words: usize,
+    /// Mutation counter for compiled-design invalidation. Set to 0 in
+    /// literal constructions; bumped by the structural setters.
+    pub generation: u64,
 }
+
+impl PartialEq for DesignTiming {
+    fn eq(&self, other: &DesignTiming) -> bool {
+        // `generation` tracks *mutations of this value*, not what the
+        // timing describes — two timings with equal schedules are equal.
+        self.sections == other.sections
+            && self.exits == other.exits
+            && self.merge_ii == other.merge_ii
+            && self.input_words == other.input_words
+            && self.output_words == other.output_words
+    }
+}
+
+impl Eq for DesignTiming {}
 
 impl DesignTiming {
     /// Extract section timings from an EE hardware mapping (any number
@@ -113,6 +137,7 @@ impl DesignTiming {
             merge_ii: m.node_ii(m.cdfg.exit_merge),
             input_words: m.cdfg.nodes[0].in_shape.words(),
             output_words: m.cdfg.nodes[m.cdfg.exit_merge].out_shape.words(),
+            generation: 0,
         }
     }
 
@@ -137,6 +162,7 @@ impl DesignTiming {
                 .last()
                 .map(|n| n.out_shape.words())
                 .unwrap_or(1),
+            generation: 0,
         }
     }
 
@@ -167,6 +193,7 @@ impl DesignTiming {
             merge_ii,
             input_words,
             output_words,
+            generation: 0,
         }
     }
 
@@ -186,16 +213,50 @@ impl DesignTiming {
         self.sections.get(1).map(|s| s.ii).unwrap_or(0)
     }
 
-    /// Depth of Conditional Buffer `exit` (0 when absent).
-    pub fn cond_buffer_depth(&self, exit: usize) -> usize {
-        self.exits.get(exit).map(|e| e.buffer_depth).unwrap_or(0)
+    /// Depth of Conditional Buffer `exit`.
+    ///
+    /// Out-of-range indices used to resolve to a silent depth of 0 —
+    /// indistinguishable from a real Fig. 7 deadlock configuration.
+    /// Like `throughput_at`, they are now a reportable error.
+    pub fn cond_buffer_depth(&self, exit: usize) -> anyhow::Result<usize> {
+        self.exits
+            .get(exit)
+            .map(|e| e.buffer_depth)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "conditional buffer {exit} out of range: design has {} exits",
+                    self.exits.len()
+                )
+            })
     }
 
     /// Set Conditional Buffer `exit`'s depth (depth-sweep ablations).
-    pub fn set_cond_buffer_depth(&mut self, exit: usize, depth: usize) {
-        if let Some(e) = self.exits.get_mut(exit) {
-            e.buffer_depth = depth;
-        }
+    ///
+    /// Out-of-range indices used to be a silent no-op (the sweep would
+    /// quietly measure the unmodified design); they now error. A
+    /// successful set bumps [`generation`](DesignTiming::generation) so
+    /// any [`CompiledDesign`](super::CompiledDesign) lowered from this
+    /// timing reports itself stale.
+    pub fn set_cond_buffer_depth(
+        &mut self,
+        exit: usize,
+        depth: usize,
+    ) -> anyhow::Result<()> {
+        let n_exits = self.exits.len();
+        let e = self.exits.get_mut(exit).ok_or_else(|| {
+            anyhow::anyhow!(
+                "conditional buffer {exit} out of range: design has {n_exits} exits"
+            )
+        })?;
+        e.buffer_depth = depth;
+        self.generation += 1;
+        Ok(())
+    }
+
+    /// Mutation counter (see the struct docs); compared by
+    /// [`CompiledDesign::is_stale`](super::CompiledDesign::is_stale).
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 }
 
@@ -345,35 +406,35 @@ pub fn simulate_multi_traced(
 /// across simulations. Pop order is identical to the heap's (min
 /// first; equal keys are indistinguishable `u64`s).
 #[derive(Clone, Debug, Default)]
-struct MinQueue {
+pub(crate) struct MinQueue {
     /// Sorted descending, so the minimum is `v.last()` / `v.pop()`.
     v: Vec<u64>,
 }
 
 impl MinQueue {
     #[inline]
-    fn len(&self) -> usize {
+    pub(crate) fn len(&self) -> usize {
         self.v.len()
     }
 
     #[inline]
-    fn peek_min(&self) -> Option<u64> {
+    pub(crate) fn peek_min(&self) -> Option<u64> {
         self.v.last().copied()
     }
 
     #[inline]
-    fn pop_min(&mut self) -> Option<u64> {
+    pub(crate) fn pop_min(&mut self) -> Option<u64> {
         self.v.pop()
     }
 
     #[inline]
-    fn push(&mut self, x: u64) {
+    pub(crate) fn push(&mut self, x: u64) {
         let i = self.v.partition_point(|&y| y >= x);
         self.v.insert(i, x);
     }
 
     #[inline]
-    fn clear(&mut self) {
+    pub(crate) fn clear(&mut self) {
         self.v.clear();
     }
 }
@@ -884,6 +945,7 @@ mod tests {
             merge_ii: 10,
             input_words: 400,
             output_words: 10,
+            generation: 0,
         }
     }
 
@@ -938,7 +1000,7 @@ mod tests {
     #[test]
     fn zero_depth_deadlocks_with_buffer_index() {
         let mut t = toy();
-        t.set_cond_buffer_depth(0, 0);
+        t.set_cond_buffer_depth(0, 0).unwrap();
         let r = simulate_ee(&t, &SimConfig::default(), &[false, true]);
         assert!(r.deadlock.is_some());
         assert!(r.deadlock.as_ref().unwrap().contains("buffer 0"));
@@ -947,7 +1009,7 @@ mod tests {
         // In a 3-section design, the *second* buffer alone at depth 0
         // deadlocks too — and is named in the diagnosis.
         let mut t3 = toy3();
-        t3.set_cond_buffer_depth(1, 0);
+        t3.set_cond_buffer_depth(1, 0).unwrap();
         let r3 = simulate_multi(&t3, &SimConfig::default(), &[0, 1, 2]);
         assert!(r3.deadlock.as_ref().unwrap().contains("buffer 1"));
     }
@@ -955,7 +1017,7 @@ mod tests {
     #[test]
     fn shallow_buffer_stalls_but_progresses() {
         let mut t = toy();
-        t.set_cond_buffer_depth(0, 1);
+        t.set_cond_buffer_depth(0, 1).unwrap();
         let n = 256;
         let deep = simulate_ee(&toy(), &SimConfig::default(), &mixed(n, 0.5));
         let shallow = simulate_ee(&t, &SimConfig::default(), &mixed(n, 0.5));
@@ -1054,6 +1116,25 @@ mod tests {
     }
 
     #[test]
+    fn depth_accessors_reject_out_of_range_exits() {
+        let mut t = toy(); // one exit
+        assert_eq!(t.cond_buffer_depth(0).unwrap(), 4);
+        assert!(t.cond_buffer_depth(1).is_err());
+        let g = t.generation();
+        assert!(t.set_cond_buffer_depth(1, 3).is_err());
+        assert_eq!(t.generation(), g, "failed set must not bump generation");
+        t.set_cond_buffer_depth(0, 3).unwrap();
+        assert_eq!(t.generation(), g + 1);
+        assert_eq!(t.cond_buffer_depth(0).unwrap(), 3);
+        // generation is bookkeeping, not identity.
+        let mut u = toy();
+        u.set_cond_buffer_depth(0, 3).unwrap();
+        u.set_cond_buffer_depth(0, 3).unwrap();
+        assert_eq!(t, u);
+        assert_ne!(t.generation(), u.generation());
+    }
+
+    #[test]
     fn scratch_reuse_bit_identical_to_fresh() {
         // One scratch across many dissimilar batches (different sizes,
         // section counts, stall regimes) must reproduce the allocating
@@ -1061,9 +1142,9 @@ mod tests {
         let cfg = SimConfig::default();
         let mut scratch = SimScratch::new();
         let mut tight = toy();
-        tight.set_cond_buffer_depth(0, 1);
+        tight.set_cond_buffer_depth(0, 1).unwrap();
         let mut dead = toy3();
-        dead.set_cond_buffer_depth(1, 0);
+        dead.set_cond_buffer_depth(1, 0).unwrap();
         let batches: Vec<(DesignTiming, Vec<usize>)> = vec![
             (toy(), mixed(128, 0.3).iter().map(|&h| usize::from(h)).collect()),
             (toy3(), (0..300).map(|i| i % 3).collect()),

@@ -1,0 +1,183 @@
+//! Lowering pass: [`DesignTiming`] + [`SimConfig`] → a flat,
+//! topologically-scheduled op table (DESIGN.md §10).
+//!
+//! The interpreted core re-reads `DesignTiming`'s nested `Vec`s and
+//! re-derives the same per-section facts (DMA cycle counts, buffer
+//! depths, "is this the final section?", "does a buffer guard it?") for
+//! every sample of every batch. This pass hoists all of that out of the
+//! per-sample loop, once per design:
+//!
+//! * **Static section order.** Sections are already topologically
+//!   ordered in `DesignTiming`; the table keeps that order and fuses
+//!   each section with the exit branch and Conditional Buffer that
+//!   follow it into one [`SectionOp`] — a single contiguous `Vec` of
+//!   `Copy` records the kernel walks front to back.
+//! * **Precomputed constants.** Per-exit buffer depths, decision
+//!   II/latency, the DMA-in/DMA-out cycle counts (folding the
+//!   `SimConfig` bus width in at lower time), the merge II, and the
+//!   final-section index are all baked into the table.
+//! * **Exit dispatch baked in.** The only data-dependent control in the
+//!   interpreted core is "which section does sample `s` complete at".
+//!   The kernel splits each sample's walk into `target` identical
+//!   *forward* ops (always: admit, issue, decide, forward) followed by
+//!   one *completing* op (issue, then either final-merge or
+//!   early-exit-drop — selected by the precomputed `last` index), so
+//!   the per-section body has no per-sample branch on exit structure.
+//! * **Deadlock pre-diagnosis.** Fig. 7's zero-depth condition is a
+//!   static property of the timing; the diagnosis string is built once
+//!   here and replayed by every run instead of re-scanning the exits.
+//!
+//! The table is *schedule-free*: it holds no per-sample or per-batch
+//! state, so one lowered table serves any number of concurrent
+//! [`CompiledScratch`](super::CompiledScratch)es (it is `Sync` and
+//! shared by reference across the envelope sweep's workers).
+//!
+//! Well-formedness: like the interpreted core, the kernel requires
+//! every non-final section a sample passes through to have an exit
+//! branch (`exits.len() >= sections.len() - 1` for any reachable
+//! section). Timings produced by `from_ee_mapping`, `two_stage`, and
+//! `from_baseline_mapping` always satisfy this.
+
+use super::config::SimConfig;
+use super::engine::DesignTiming;
+
+/// One scheduled backbone section fused with the exit branch and
+/// Conditional Buffer that follow it. `Copy`, 48 bytes, walked
+/// sequentially — the whole table for a realistic design fits in a
+/// cache line or two.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SectionOp {
+    /// Section initiation interval.
+    pub ii: u64,
+    /// Section latency.
+    pub lat: u64,
+    /// Exit-decision initiation interval (0 when `!has_exit`).
+    pub exit_ii: u64,
+    /// Exit-decision latency (0 when `!has_exit`).
+    pub exit_lat: u64,
+    /// Depth of the Conditional Buffer guarding the next section
+    /// (0 when `!has_exit`).
+    pub depth: usize,
+    /// Whether an exit branch + buffer follow this section (false only
+    /// for the final section of a well-formed timing).
+    pub has_exit: bool,
+}
+
+/// The lowered program: everything [`CompiledScratch::run`]
+/// (`super::CompiledScratch`) needs, flattened out of `DesignTiming` +
+/// `SimConfig`. Built once per design by [`lower`]; immutable
+/// afterwards.
+#[derive(Clone, Debug)]
+pub struct OpTable {
+    /// One op per backbone section, in pipeline order.
+    pub ops: Vec<SectionOp>,
+    /// Number of exits (= number of Conditional Buffers).
+    pub n_exits: usize,
+    /// Index of the final section (`ops.len() - 1`).
+    pub last: usize,
+    /// Exit-merge initiation interval.
+    pub merge_ii: u64,
+    /// DMA-in cycles per sample (bus width already folded in).
+    pub dma_in: u64,
+    /// DMA-out cycles per sample (bus width folded in, min 1).
+    pub dma_out: u64,
+    /// Pre-diagnosed Fig. 7 deadlock (first zero-depth buffer), if any.
+    /// Replayed verbatim by every non-empty run.
+    pub deadlock: Option<String>,
+}
+
+/// Lower a timing + host config into a flat op table. This is the only
+/// place the compiled path reads `DesignTiming`; the kernel never
+/// touches it again.
+pub fn lower(t: &DesignTiming, cfg: &SimConfig) -> OpTable {
+    let n_sections = t.sections.len();
+    let n_exits = t.exits.len();
+    let ops = t
+        .sections
+        .iter()
+        .enumerate()
+        .map(|(sec, s)| {
+            let e = (sec < n_exits).then(|| t.exits[sec]);
+            SectionOp {
+                ii: s.ii,
+                lat: s.lat,
+                exit_ii: e.map_or(0, |e| e.ii),
+                exit_lat: e.map_or(0, |e| e.lat),
+                depth: e.map_or(0, |e| e.buffer_depth),
+                has_exit: e.is_some(),
+            }
+        })
+        .collect();
+    // Same scan order as the interpreted core: the *first* zero-depth
+    // buffer is the one diagnosed.
+    let deadlock = t.exits.iter().enumerate().find_map(|(i, e)| {
+        (e.buffer_depth == 0).then(|| {
+            format!(
+                "conditional buffer {i} depth 0: split stalls mid-sample, \
+                 exit decision {i} starved (min depth is 1 + decision-delay/II)"
+            )
+        })
+    });
+    OpTable {
+        ops,
+        n_exits,
+        last: n_sections.saturating_sub(1),
+        merge_ii: t.merge_ii,
+        dma_in: cfg.dma_in_cycles(t.input_words),
+        dma_out: cfg.dma_in_cycles(t.output_words).max(1),
+        deadlock,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::SectionTiming;
+
+    #[test]
+    fn lowers_two_stage_shape() {
+        let t = DesignTiming::two_stage(100, 150, 80, 120, 300, 400, 10, 4, 400, 10);
+        let table = lower(&t, &SimConfig::default());
+        assert_eq!(table.ops.len(), 2);
+        assert_eq!(table.n_exits, 1);
+        assert_eq!(table.last, 1);
+        assert_eq!(table.merge_ii, 10);
+        assert_eq!(table.dma_in, 100); // 400 words at 4 w/c
+        assert_eq!(table.dma_out, 3); // ceil(10 / 4)
+        assert!(table.deadlock.is_none());
+        let op0 = table.ops[0];
+        assert!(op0.has_exit);
+        assert_eq!((op0.ii, op0.lat), (100, 150));
+        assert_eq!((op0.exit_ii, op0.exit_lat, op0.depth), (80, 120, 4));
+        let op1 = table.ops[1];
+        assert!(!op1.has_exit);
+        assert_eq!((op1.ii, op1.lat), (300, 400));
+    }
+
+    #[test]
+    fn lowers_baseline_without_exits() {
+        let t = DesignTiming {
+            sections: vec![SectionTiming { ii: 7, lat: 30 }],
+            exits: Vec::new(),
+            merge_ii: 3,
+            input_words: 8,
+            output_words: 1,
+            generation: 0,
+        };
+        let table = lower(&t, &SimConfig::default());
+        assert_eq!(table.ops.len(), 1);
+        assert_eq!(table.n_exits, 0);
+        assert_eq!(table.last, 0);
+        assert!(!table.ops[0].has_exit);
+        assert_eq!(table.dma_out, 1); // .max(1) floor
+    }
+
+    #[test]
+    fn prediagnoses_first_zero_depth_buffer() {
+        let mut t = DesignTiming::two_stage(10, 10, 5, 5, 10, 10, 1, 2, 4, 4);
+        t.set_cond_buffer_depth(0, 0).unwrap();
+        let table = lower(&t, &SimConfig::default());
+        let msg = table.deadlock.expect("zero depth must pre-diagnose");
+        assert!(msg.contains("buffer 0"));
+    }
+}

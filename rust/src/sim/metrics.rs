@@ -156,6 +156,7 @@ mod tests {
             merge_ii: 10,
             input_words: 400,
             output_words: 10,
+            generation: 0,
         };
         let completes: Vec<usize> = (0..120).map(|i| i % 3).collect();
         let r = simulate_multi(&t, &SimConfig::default(), &completes);

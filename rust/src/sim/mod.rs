@@ -22,12 +22,22 @@
 //! decisions, and the engine times the result — so both the p/q-mismatch
 //! degradation and its runtime recovery are measurable.
 
+//!
+//! Two cores execute the same schedule (DESIGN.md §10): the interpreted
+//! [`SimScratch`] is the reference oracle; the compiled
+//! [`CompiledDesign`] (lowered flat op table + SoA batch kernel) is the
+//! fast path, property-tested bit-identical and selected per run by
+//! [`SimBackend`] (`--backend` on the CLI).
+
+pub mod compiled;
 pub mod config;
 pub mod drift;
 pub mod engine;
+pub mod lower;
 pub mod metrics;
 
-pub use config::{DriftScenario, SimConfig};
+pub use compiled::{CompiledDesign, CompiledScratch};
+pub use config::{DriftScenario, SimBackend, SimConfig};
 pub use drift::{
     design_operating_point, simulate_closed_loop, simulate_closed_loop_traced,
     ClosedLoopConfig, ClosedLoopReport, WindowReport,
@@ -37,4 +47,5 @@ pub use engine::{
     simulate_multi, simulate_multi_faults, simulate_multi_traced, DesignTiming,
     ExitTiming, FaultModel, SectionTiming, SimResult, SimScratch,
 };
+pub use lower::{OpTable, SectionOp};
 pub use metrics::SimMetrics;

@@ -16,12 +16,18 @@
 //!   per-exit latency distributions, per-buffer stall totals, and
 //!   controller reconvergence time (rendered by
 //!   `report::tables::render_trace_summary`).
+//! - [`diff`]: [`first_divergence`] aligns two pinned-seed streams by
+//!   logical track and reports the first event where they disagree
+//!   ([`diff_chrome_traces`] does the same over exported Chrome JSON;
+//!   CLI: `atheena trace diff A.json B.json`).
 
 pub mod aggregate;
+pub mod diff;
 pub mod event;
 pub mod export;
 
 pub use aggregate::{BufferSummary, ControlSummary, ExitLatency, TraceSummary};
+pub use diff::{diff_chrome_traces, first_divergence, Divergence};
 pub use event::{NullSink, Recorder, TraceEvent, TraceSink, DEFAULT_RECORDER_CAPACITY};
 pub use export::{
     export_chrome_trace, validate_chrome_trace, write_chrome_trace, ChromeTraceStats,

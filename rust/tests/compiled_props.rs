@@ -1,0 +1,341 @@
+//! Differential property suite for the compiled simulator core
+//! (DESIGN.md §10).
+//!
+//! `simulate_multi` (the interpreted `SimScratch` core) is the
+//! reference oracle; the lowered [`CompiledDesign`] kernel must
+//! reproduce its [`SimResult`] **bit for bit** — schedule, stall
+//! cycles, peak occupancies, out-of-order count, deadlock diagnosis,
+//! and the fault RNG draw sequence — across random designs (including
+//! zero-capacity deadlock configurations), random hardness streams,
+//! and random fault models. One [`CompiledScratch`] is reused across
+//! every design and batch, so the suite also proves results are
+//! independent of whatever the scratch ran before.
+//!
+//! Consumer-level equivalence rides on top: the operating-envelope
+//! q-grid sweep and the closed-loop drift harness must produce
+//! identical outputs under `SimBackend::Interpreted` and
+//! `SimBackend::Compiled`. And the steady-state kernel must stay
+//! **allocation-free** once warmed (counting global allocator, the
+//! same harness `trace_props.rs` uses for the interpreted scratch).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use atheena::coordinator::pipeline::OperatingEnvelope;
+use atheena::ee::decision::Controller;
+use atheena::sim::{
+    design_operating_point, simulate_closed_loop, simulate_ee, simulate_ee_faults,
+    simulate_multi, simulate_multi_faults, ClosedLoopConfig, CompiledDesign, CompiledScratch,
+    DesignTiming, DriftScenario, ExitTiming, FaultModel, SectionTiming, SimBackend, SimConfig,
+    SimResult,
+};
+use atheena::util::proptest::{check, gen_range, gen_vec, prop_assert};
+use atheena::util::Rng;
+
+// ---- counting allocator (thread-local, so parallel tests don't bleed) ----
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Allocations observed on the calling thread since process start.
+fn allocs_on_this_thread() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(p, l, new_size)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+// ---- fixtures -----------------------------------------------------------
+
+/// Randomized N-exit design timing (2–4 sections). Unlike the trace
+/// fixtures this one *does* include the degenerate depth-0 deadlock
+/// configuration (about one design in six): the compiled core must
+/// replay the interpreted deadlock diagnosis verbatim, zero-capacity
+/// buffers included.
+fn rand_timing(r: &mut Rng) -> DesignTiming {
+    let n_sections = gen_range(r, 2, 4);
+    let sections = gen_vec(r, n_sections, |r| SectionTiming {
+        ii: 20 + r.below(200) as u64,
+        lat: 50 + r.below(400) as u64,
+    });
+    let mut exits = gen_vec(r, n_sections - 1, |r| ExitTiming {
+        ii: 10 + r.below(100) as u64,
+        lat: 20 + r.below(200) as u64,
+        buffer_depth: 1 + r.below(8),
+    });
+    if r.below(6) == 0 {
+        let victim = r.below(exits.len());
+        exits[victim].buffer_depth = 0; // Fig. 7 deadlock configuration
+    }
+    DesignTiming {
+        sections,
+        exits,
+        merge_ii: 1 + r.below(20) as u64,
+        input_words: 100 + r.below(400),
+        output_words: 1 + r.below(20),
+        generation: 0,
+    }
+}
+
+fn rand_faults(r: &mut Rng) -> FaultModel {
+    FaultModel {
+        decision_jitter: r.below(12) as u64, // 0 keeps the jitter-free k-way merge path
+        dma_stall_prob: if r.below(3) == 0 { 0.0 } else { 0.4 * r.f64() },
+        dma_stall_cycles: 50 + r.below(1000) as u64,
+        seed: r.next_u64(),
+    }
+}
+
+/// Deterministic three-section timing for the allocation test.
+fn steady_timing() -> DesignTiming {
+    DesignTiming {
+        sections: vec![
+            SectionTiming { ii: 100, lat: 150 },
+            SectionTiming { ii: 200, lat: 250 },
+            SectionTiming { ii: 400, lat: 500 },
+        ],
+        exits: vec![
+            ExitTiming { ii: 80, lat: 120, buffer_depth: 8 },
+            ExitTiming { ii: 100, lat: 150, buffer_depth: 8 },
+        ],
+        merge_ii: 10,
+        input_words: 400,
+        output_words: 10,
+        generation: 0,
+    }
+}
+
+fn same_result(a: &SimResult, b: &SimResult) -> bool {
+    a.total_cycles == b.total_cycles
+        && a.stall_cycles == b.stall_cycles
+        && a.peak_buffer_occupancy == b.peak_buffer_occupancy
+        && a.out_of_order == b.out_of_order
+        && a.deadlock == b.deadlock
+        && a.traces.len() == b.traces.len()
+        && a.traces.iter().zip(&b.traces).all(|(x, y)| {
+            x.t_in == y.t_in
+                && x.t_out == y.t_out
+                && x.exited_early == y.exited_early
+                && x.exit_stage == y.exit_stage
+        })
+}
+
+// ---- kernel-level differential -----------------------------------------
+
+#[test]
+fn prop_compiled_bit_identical_to_interpreted() {
+    let cfg = SimConfig::default();
+    // ONE scratch for the whole run: every iteration sees a different
+    // design and batch size, so bit-equality here also proves run
+    // results are independent of the scratch's history.
+    let mut scratch = CompiledScratch::new();
+    check(60, |r| {
+        let t = rand_timing(r);
+        let n_sections = t.sections.len();
+        let n = if r.below(12) == 0 { 0 } else { 32 + r.below(400) };
+        let completes = gen_vec(r, n, |r| r.below(n_sections));
+
+        let oracle = simulate_multi(&t, &cfg, &completes);
+        let compiled = CompiledDesign::lower(&t, &cfg);
+        let got = compiled.run(&mut scratch, &completes);
+        prop_assert(
+            same_result(&oracle, got),
+            "compiled run diverged from simulate_multi",
+        )
+    });
+}
+
+#[test]
+fn prop_compiled_faults_bit_identical_to_interpreted() {
+    let cfg = SimConfig::default();
+    let mut scratch = CompiledScratch::new();
+    check(60, |r| {
+        let t = rand_timing(r);
+        let n_sections = t.sections.len();
+        let n = 32 + r.below(300);
+        let completes = gen_vec(r, n, |r| r.below(n_sections));
+        let faults = rand_faults(r);
+
+        let oracle = simulate_multi_faults(&t, &cfg, &completes, &faults);
+        let compiled = CompiledDesign::lower(&t, &cfg);
+        let got = compiled.run_faults(&mut scratch, &completes, &faults);
+        prop_assert(
+            same_result(&oracle, got),
+            "compiled fault run diverged (RNG draw sequence or schedule)",
+        )
+    });
+}
+
+#[test]
+fn prop_compiled_ee_entry_bit_identical_to_interpreted() {
+    let cfg = SimConfig::default();
+    let mut scratch = CompiledScratch::new();
+    check(40, |r| {
+        let t = rand_timing(r);
+        let n = 32 + r.below(300);
+        let q = r.f64();
+        let hard = gen_vec(r, n, |r| r.chance(q));
+        let faults = rand_faults(r);
+
+        let compiled = CompiledDesign::lower(&t, &cfg);
+        prop_assert(
+            same_result(&simulate_ee(&t, &cfg, &hard), compiled.run_ee(&mut scratch, &hard)),
+            "compiled run_ee diverged from simulate_ee",
+        )?;
+        prop_assert(
+            same_result(
+                &simulate_ee_faults(&t, &cfg, &hard, &faults),
+                compiled.run_ee_faults(&mut scratch, &hard, &faults),
+            ),
+            "compiled run_ee_faults diverged from simulate_ee_faults",
+        )
+    });
+}
+
+#[test]
+fn relowered_design_after_depth_mutation_matches_oracle() {
+    // The generation counter's whole point: a depth mutation must not
+    // be silently served by a stale table. Re-lowering after the bump
+    // restores the oracle contract.
+    let mut t = steady_timing();
+    let cfg = SimConfig::default();
+    let completes: Vec<usize> = (0..200).map(|i| (i * 5) % 3).collect();
+    let mut scratch = CompiledScratch::new();
+
+    let compiled = CompiledDesign::lower(&t, &cfg);
+    assert!(!compiled.is_stale(&t));
+    t.set_cond_buffer_depth(0, 1).unwrap();
+    assert!(
+        compiled.is_stale(&t),
+        "depth mutation must invalidate the lowered table"
+    );
+    let relowered = CompiledDesign::lower(&t, &cfg);
+    assert!(!relowered.is_stale(&t));
+    assert!(
+        same_result(
+            &simulate_multi(&t, &cfg, &completes),
+            relowered.run(&mut scratch, &completes)
+        ),
+        "re-lowered design diverged from the oracle on the mutated timing"
+    );
+}
+
+// ---- allocation-freedom -------------------------------------------------
+
+#[test]
+fn compiled_steady_state_is_allocation_free() {
+    // The CompiledScratch counterpart of the PR-4 SimScratch contract:
+    // once warmed, batch runs (plain and the run_ee entry) perform zero
+    // allocations on this thread.
+    let t = steady_timing();
+    let cfg = SimConfig::default();
+    let completes: Vec<usize> = (0..512).map(|i| i % 3).collect();
+    let hard: Vec<bool> = (0..512).map(|i| i % 4 == 0).collect();
+    let compiled = CompiledDesign::lower(&t, &cfg);
+    let mut scratch = CompiledScratch::new();
+    // Warm-up: grows every internal buffer to its steady-state footprint.
+    compiled.run(&mut scratch, &completes);
+    compiled.run_ee(&mut scratch, &hard);
+
+    let before = allocs_on_this_thread();
+    compiled.run(&mut scratch, &completes);
+    compiled.run_ee(&mut scratch, &hard);
+    let after = allocs_on_this_thread();
+    assert_eq!(
+        after - before,
+        0,
+        "warmed CompiledScratch allocated {} times in steady state",
+        after - before
+    );
+}
+
+// ---- consumer-level differential ---------------------------------------
+
+#[test]
+fn prop_envelope_sweep_identical_across_backends() {
+    check(15, |r| {
+        let t = rand_timing(r);
+        let r0 = 0.05 + 0.8 * r.f64();
+        let reach: Vec<f64> = (0..t.exits.len())
+            .scan(r0, |acc, _| {
+                let v = *acc;
+                *acc *= 0.3 + 0.6 * r.f64();
+                Some(v)
+            })
+            .collect();
+        let interp = OperatingEnvelope::sweep_backend(&t, &reach, 125e6, SimBackend::Interpreted);
+        let comp = OperatingEnvelope::sweep_backend(&t, &reach, 125e6, SimBackend::Compiled);
+        prop_assert(
+            interp == comp,
+            "envelope q-grid sweep differs between backends",
+        )
+    });
+}
+
+#[test]
+fn prop_closed_loop_identical_across_backends() {
+    let t = steady_timing();
+    let drift = DriftScenario::Step { at: 0.25, to: 2.0 };
+    let cfg_i = SimConfig {
+        backend: SimBackend::Interpreted,
+        ..SimConfig::default()
+    };
+    let cfg_c = SimConfig {
+        backend: SimBackend::Compiled,
+        ..SimConfig::default()
+    };
+    check(8, |r| {
+        let seed = r.next_u64();
+        let r0 = 0.2 + 0.5 * r.f64();
+        let r1 = r0 * (0.2 + 0.6 * r.f64());
+        let op = design_operating_point(&[r0, r1]);
+        let run = ClosedLoopConfig {
+            samples: 2048,
+            window: 256,
+            seed,
+        };
+
+        let mut p_i = Controller::new(op.clone(), run.window);
+        let interp = simulate_closed_loop(&t, &cfg_i, &mut p_i, &drift, &run);
+        let mut p_c = Controller::new(op, run.window);
+        let comp = simulate_closed_loop(&t, &cfg_c, &mut p_c, &drift, &run);
+
+        prop_assert(
+            interp.completes_at == comp.completes_at,
+            "backends made different exit decisions",
+        )?;
+        prop_assert(
+            same_result(&interp.sim, &comp.sim),
+            "backends timed different schedules",
+        )?;
+        prop_assert(interp.retunes == comp.retunes, "retune counts diverged")?;
+        prop_assert(
+            interp.windows.len() == comp.windows.len()
+                && interp.windows.iter().zip(&comp.windows).all(|(a, b)| {
+                    a.throughput_sps == b.throughput_sps
+                        && a.thresholds == b.thresholds
+                        && a.reach == b.reach
+                }),
+            "per-window reports diverged between backends",
+        )
+    });
+}

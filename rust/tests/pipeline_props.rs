@@ -366,6 +366,7 @@ fn closed_loop_timing() -> DesignTiming {
         merge_ii: 10,
         input_words: 400,
         output_words: 10,
+        generation: 0,
     }
 }
 

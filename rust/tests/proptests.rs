@@ -117,9 +117,10 @@ fn prop_sim_monotone_in_buffer_depth() {
         let mut t = random_timing(r);
         let n = 200;
         let flags = random_flags(r, n);
-        t.set_cond_buffer_depth(0, 1 + r.below(8));
+        t.set_cond_buffer_depth(0, 1 + r.below(8)).unwrap();
         let shallow = simulate_ee(&t, &SimConfig::default(), &flags);
-        t.set_cond_buffer_depth(0, t.cond_buffer_depth(0) + 1 + r.below(32));
+        t.set_cond_buffer_depth(0, t.cond_buffer_depth(0).unwrap() + 1 + r.below(32))
+            .unwrap();
         let deep = simulate_ee(&t, &SimConfig::default(), &flags);
         prop_assert(
             deep.total_cycles <= shallow.total_cycles,
@@ -592,7 +593,8 @@ fn prop_buffer_min_depth_formula_prevents_stall_dominance() {
         t.sections[1].ii = t.sections[0].ii / 2 + 1;
         let min_depth =
             (t.exits[0].lat.div_ceil(t.sections[0].ii.max(1)) + 1) as usize;
-        t.set_cond_buffer_depth(0, min_depth + gen_range(r, 2, 8));
+        t.set_cond_buffer_depth(0, min_depth + gen_range(r, 2, 8))
+            .unwrap();
         let flags = synthetic_hard_flags(0.25, 256, r.next_u64());
         let res = simulate_ee(&t, &SimConfig::default(), &flags);
         prop_assert(res.deadlock.is_none(), "deadlock with sized buffer")?;
@@ -600,7 +602,7 @@ fn prop_buffer_min_depth_formula_prevents_stall_dominance() {
             res.total_stall_cycles() == 0,
             &format!(
                 "sized buffer (depth {}) still stalled {} cycles",
-                t.cond_buffer_depth(0),
+                t.cond_buffer_depth(0).unwrap(),
                 res.total_stall_cycles()
             ),
         )
@@ -619,7 +621,8 @@ fn prop_fault_injection_degrades_gracefully() {
         t.set_cond_buffer_depth(
             0,
             (t.exits[0].lat.div_ceil(t.sections[0].ii.max(1)) + 3) as usize + r.below(16),
-        );
+        )
+        .unwrap();
         let n = 128;
         let flags = random_flags(r, n);
         let clean = simulate_ee(&t, &SimConfig::default(), &flags);

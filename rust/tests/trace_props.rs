@@ -93,6 +93,7 @@ fn rand_timing(r: &mut Rng) -> DesignTiming {
         merge_ii: 1 + r.below(20) as u64,
         input_words: 100 + r.below(400),
         output_words: 1 + r.below(20),
+        generation: 0,
     }
 }
 
@@ -111,6 +112,7 @@ fn steady_timing() -> DesignTiming {
         merge_ii: 10,
         input_words: 400,
         output_words: 10,
+        generation: 0,
     }
 }
 
