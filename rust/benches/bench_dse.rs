@@ -67,9 +67,11 @@ fn main() -> anyhow::Result<()> {
             restarts: 2,
             ..Default::default()
         },
+        ..Default::default()
     };
     let s = log.bench("dse/pareto/frontier-sweep", 1, iters.min(5), || {
         sweep_frontier(ProblemKind::Baseline, &base_cdfg, &board, &pcfg)
+            .expect("frontier sweep")
     });
     log.metric(
         "dse/pareto/anneals_per_s",

@@ -48,10 +48,10 @@ use crate::resources::{Board, ResourceVec};
 use crate::runtime::DesignCache;
 use crate::sdf::{buffering, Folding, HwMapping};
 use crate::sim::{
-    CompiledDesign, CompiledScratch, DesignTiming, SimBackend, SimConfig, SimMetrics,
-    SimScratch,
+    CompiledDesign, CompiledScratch, DesignTiming, SharedArena, SimBackend, SimConfig,
+    SimMetrics, SimScratch,
 };
-use crate::tap::{combine_multi, MultiStageDesign, TapCurve};
+use crate::tap::{combine_multi_with_bounds, MultiStageDesign, SuffixBounds, TapCurve};
 use crate::util::Json;
 
 use super::toolflow::{
@@ -124,7 +124,7 @@ impl OperatingEnvelope {
     /// property test doubles as a compiled-vs-interpreted differential
     /// gate (`tests/pipeline_props.rs`).
     pub fn sweep(timing: &DesignTiming, reach: &[f64], clock_hz: f64) -> OperatingEnvelope {
-        Self::sweep_with(timing, reach, clock_hz, true, SimBackend::Compiled)
+        Self::sweep_with(timing, reach, clock_hz, true, SimBackend::Compiled, None)
     }
 
     /// [`Self::sweep`] with an explicit backend (`--backend`).
@@ -134,7 +134,20 @@ impl OperatingEnvelope {
         clock_hz: f64,
         backend: SimBackend,
     ) -> OperatingEnvelope {
-        Self::sweep_with(timing, reach, clock_hz, true, backend)
+        Self::sweep_with(timing, reach, clock_hz, true, backend, None)
+    }
+
+    /// [`Self::sweep_backend`] routed through a shared lowering arena:
+    /// a design already memoized there (frontier realization, a prior
+    /// sweep, `Realized::measure`) is not re-lowered (DESIGN.md §11).
+    pub fn sweep_backend_arena(
+        timing: &DesignTiming,
+        reach: &[f64],
+        clock_hz: f64,
+        backend: SimBackend,
+        arena: &SharedArena,
+    ) -> OperatingEnvelope {
+        Self::sweep_with(timing, reach, clock_hz, true, backend, Some(arena))
     }
 
     /// Sequential reference path for [`Self::sweep`]: one worker, the
@@ -144,7 +157,7 @@ impl OperatingEnvelope {
         reach: &[f64],
         clock_hz: f64,
     ) -> OperatingEnvelope {
-        Self::sweep_with(timing, reach, clock_hz, false, SimBackend::Interpreted)
+        Self::sweep_with(timing, reach, clock_hz, false, SimBackend::Interpreted, None)
     }
 
     fn sweep_with(
@@ -153,6 +166,7 @@ impl OperatingEnvelope {
         clock_hz: f64,
         parallel: bool,
         backend: SimBackend,
+        arena: Option<&SharedArena>,
     ) -> OperatingEnvelope {
         let sim_cfg = SimConfig {
             clock_hz,
@@ -168,9 +182,13 @@ impl OperatingEnvelope {
             }
             qs.push(q);
         }
-        // Lower once per design; `None` keeps the interpreted oracle.
+        // Lower once per design — through the arena when one is shared
+        // with the caller; `None` keeps the interpreted oracle.
         let compiled = match backend {
-            SimBackend::Compiled => Some(CompiledDesign::lower(timing, &sim_cfg)),
+            SimBackend::Compiled => Some(match arena {
+                Some(a) => a.get_or_lower(timing, &sim_cfg),
+                None => std::sync::Arc::new(CompiledDesign::lower(timing, &sim_cfg)),
+            }),
             SimBackend::Interpreted => None,
         };
         enum Scratch {
@@ -595,10 +613,15 @@ impl Curves {
     pub fn combine(self) -> anyhow::Result<Combined> {
         let board = &self.opts.board;
         let section_reach = self.section_reach();
+        // The suffix-bound tables depend only on (curves, reach), so one
+        // set prunes the branch-and-bound at every budget fraction of
+        // the ladder (DESIGN.md §11).
+        let bounds = SuffixBounds::new(&self.stage_curves, &section_reach);
         let mut choices = Vec::new();
         for &frac in &self.opts.sweep.fractions {
             let budget = board.budget(frac);
-            let Some(comb) = combine_multi(&self.stage_curves, &section_reach, &budget)
+            let Some(comb) =
+                combine_multi_with_bounds(&self.stage_curves, &section_reach, &budget, &bounds)
             else {
                 continue;
             };
@@ -650,6 +673,9 @@ impl Combined {
     /// longer fit even at the deadlock-free minimum margin are dropped.
     pub fn realize(self) -> anyhow::Result<Realized> {
         let board = &self.opts.board;
+        // One lowering arena for the whole artifact: envelope sweeps
+        // below and every later `measure` share memoized lowerings.
+        let arena = SharedArena::new();
 
         let baselines: Vec<RealizedBaseline> = self
             .baseline_curve
@@ -701,11 +727,12 @@ impl Combined {
             // a pure function of fingerprinted inputs, so caching it is
             // always sound (both backends produce the identical
             // envelope, so the cache key need not mention the backend).
-            let envelope = OperatingEnvelope::sweep_backend(
+            let envelope = OperatingEnvelope::sweep_backend_arena(
                 &timing,
                 &self.reach,
                 board.clock_hz,
                 self.opts.sim.backend,
+                &arena,
             );
 
             designs.push(RealizedDesign {
@@ -731,6 +758,7 @@ impl Combined {
             baselines,
             designs,
             frontier,
+            arena,
         })
     }
 
@@ -823,6 +851,11 @@ pub struct Realized {
     pub designs: Vec<RealizedDesign>,
     /// Persisted throughput/area frontier (baseline + EE, schema v4).
     pub frontier: DesignFrontier,
+    /// Shared lowering arena (DESIGN.md §11): realization seeds it,
+    /// `measure` reuses it, so a design is lowered once per artifact
+    /// lifetime. Not serialized — a reloaded artifact starts with an
+    /// empty arena and repopulates it on first use.
+    pub arena: SharedArena,
 }
 
 impl Realized {
@@ -891,8 +924,20 @@ impl Realized {
         let mut cscratch = CompiledScratch::new();
         let mut designs = Vec::new();
         for d in &self.designs {
+            // Route lowering through the artifact's arena: the same
+            // design measured across q ladders (or already lowered by
+            // realization's envelope sweep) is never re-lowered. The
+            // arena contract makes the handed-out table fresh for
+            // `d.timing` by construction.
             let compiled = match opts.sim.backend {
-                SimBackend::Compiled => Some(CompiledDesign::lower(&d.timing, &opts.sim)),
+                SimBackend::Compiled => {
+                    let c = self.arena.get_or_lower(&d.timing, &opts.sim);
+                    assert!(
+                        !c.is_stale(&d.timing),
+                        "arena returned a stale lowering for a measured design"
+                    );
+                    Some(c)
+                }
                 SimBackend::Interpreted => None,
             };
             let mut measured = Vec::new();
@@ -1183,6 +1228,7 @@ impl Realized {
             baselines,
             designs,
             frontier,
+            arena: SharedArena::new(),
         })
     }
 

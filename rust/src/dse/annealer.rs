@@ -90,6 +90,12 @@ pub struct AnnealResult {
     /// folded; tight targets can be unreachable even at full budget).
     pub feasible: bool,
     pub iterations_run: usize,
+    /// Proposals accepted across all restarts (Metropolis acceptances,
+    /// including downhill moves). `accepted / iterations_run` is the
+    /// acceptance rate the perf benches record alongside the warm-start
+    /// speedup — a chain whose warm seeds are good accepts fewer uphill
+    /// repairs.
+    pub accepted: usize,
 }
 
 /// Incremental evaluation cache: per-node II and resources plus the
@@ -327,6 +333,7 @@ struct RestartOutcome {
     /// Closest non-qualifying design: (infeasibility, mapping).
     best_infeasible: Option<(f64, HwMapping)>,
     iterations: usize,
+    accepted: usize,
 }
 
 /// One restart's full annealing schedule. Each restart derives its own
@@ -334,11 +341,33 @@ struct RestartOutcome {
 /// functions — the executor runs them in parallel and the reduction in
 /// [`reduce_restarts`] reproduces the sequential loop bit for bit.
 fn run_restart(problem: &Problem, cfg: &AnnealConfig, restart: usize) -> RestartOutcome {
+    run_restart_seeded(problem, cfg, restart, None)
+}
+
+/// [`run_restart`] with an optional **warm seed**: when `warm` is
+/// `Some`, the trajectory starts from that mapping verbatim (no random
+/// diversification steps) and the seed state itself is recorded as the
+/// initial best before the first proposal — so a warm-started restart
+/// can never return a design worse (under the objective score) than the
+/// seed it was given. When `warm` is `None` this is byte-for-byte the
+/// original cold restart: same RNG draws, same warm-up proposals, same
+/// trajectory.
+fn run_restart_seeded(
+    problem: &Problem,
+    cfg: &AnnealConfig,
+    restart: usize,
+    warm: Option<&HwMapping>,
+) -> RestartOutcome {
     let mut rng = Rng::new(cfg.seed ^ (restart as u64).wrapping_mul(0x9E37));
-    let mut mapping = problem.mapping.clone();
-    // Random warm start: a few random uphill steps diversify restarts.
-    for _ in 0..problem.active.len() * 2 {
-        let _ = propose(problem, &mut mapping, &mut rng);
+    let mut mapping = match warm {
+        Some(seed) => seed.clone(),
+        None => problem.mapping.clone(),
+    };
+    if warm.is_none() {
+        // Random warm start: a few random uphill steps diversify restarts.
+        for _ in 0..problem.active.len() * 2 {
+            let _ = propose(problem, &mut mapping, &mut rng);
+        }
     }
     let mut cache = EvalCache::new(problem, &mapping);
     let mut e = energy_cached(problem, &cache);
@@ -346,7 +375,21 @@ fn run_restart(problem: &Problem, cfg: &AnnealConfig, restart: usize) -> Restart
 
     let mut best: Option<(f64, HwMapping)> = None;
     let mut best_infeasible: Option<(f64, HwMapping)> = None;
+    if warm.is_some() {
+        // The clipped seed is a real candidate, not just a start state:
+        // recording it up front is the exact floor the warm-start
+        // dominance property stands on.
+        match if cache.total_res.fits_in(&problem.budget) {
+            objective_score(problem, &cache)
+        } else {
+            None
+        } {
+            Some(score) => best = Some((score, mapping.clone())),
+            None => best_infeasible = Some((infeasibility(problem, &cache), mapping.clone())),
+        }
+    }
     let mut iterations = 0;
+    let mut accepted = 0;
     for _ in 0..cfg.iterations {
         iterations += 1;
         t *= cfg.alpha;
@@ -357,6 +400,7 @@ fn run_restart(problem: &Problem, cfg: &AnnealConfig, restart: usize) -> Restart
         let e_new = energy_cached(problem, &cache);
         let accept = e_new <= e || rng.f64() < ((e - e_new) / t.max(1e-9)).exp();
         if accept {
+            accepted += 1;
             e = e_new;
             // Track the best *qualifying* design seen in this restart
             // (budget-feasible, and — for MinAreaAtThroughput — meeting
@@ -394,6 +438,7 @@ fn run_restart(problem: &Problem, cfg: &AnnealConfig, restart: usize) -> Restart
         best,
         best_infeasible,
         iterations,
+        accepted,
     }
 }
 
@@ -409,8 +454,10 @@ fn reduce_restarts(problem: &Problem, outcomes: Vec<RestartOutcome>) -> AnnealRe
     let mut best: Option<(f64, HwMapping)> = None;
     let mut best_infeasible: Option<(f64, HwMapping)> = None;
     let mut iterations_run = 0;
+    let mut accepted = 0;
     for o in outcomes {
         iterations_run += o.iterations;
+        accepted += o.accepted;
         if let Some((score, m)) = o.best {
             if best.as_ref().map(|(b, _)| score > *b).unwrap_or(true) {
                 best = Some((score, m));
@@ -444,6 +491,7 @@ fn reduce_restarts(problem: &Problem, outcomes: Vec<RestartOutcome>) -> AnnealRe
         mapping,
         feasible,
         iterations_run,
+        accepted,
     }
 }
 
@@ -470,6 +518,34 @@ pub fn anneal_sequential(problem: &Problem, cfg: &AnnealConfig) -> AnnealResult 
     let outcomes = (0..cfg.restarts)
         .map(|restart| run_restart(problem, cfg, restart))
         .collect();
+    reduce_restarts(problem, outcomes)
+}
+
+/// Warm-started anneal: restart 0 runs the full schedule from
+/// `seed_mapping` (recorded as the initial best, so the result's
+/// objective score can never fall below the seed's), and restarts ≥ 1 —
+/// if the config asks for any — replay the *cold* restart streams of
+/// the same config exactly (`run_restart(problem, cfg, r)`), keeping a
+/// diversification escape hatch whose trajectories are bit-identical to
+/// the corresponding cold-anneal restarts.
+///
+/// This is the warm-start contract `dse::pareto`'s budget-ladder
+/// chaining relies on (DESIGN.md §11): a deterministic *seed* change,
+/// never a silent result change — the search itself is the same
+/// annealer, the reduction the same [`reduce_restarts`].
+pub fn anneal_seeded(
+    problem: &Problem,
+    cfg: &AnnealConfig,
+    seed_mapping: &HwMapping,
+) -> AnnealResult {
+    ANNEAL_CALLS.fetch_add(1, Ordering::Relaxed);
+    let outcomes = crate::util::exec::run_ordered(cfg.restarts.max(1), |restart| {
+        if restart == 0 {
+            run_restart_seeded(problem, cfg, 0, Some(seed_mapping))
+        } else {
+            run_restart(problem, cfg, restart)
+        }
+    });
     reduce_restarts(problem, outcomes)
 }
 
@@ -618,6 +694,59 @@ mod tests {
         .with_objective(Objective::MinAreaAtThroughput(f64::INFINITY));
         let r = anneal(&p, &AnnealConfig::quick());
         assert!(!r.feasible, "an infinite target can never qualify");
+    }
+
+    #[test]
+    fn seeded_anneal_never_scores_below_its_seed() {
+        // Clip-free version of the pareto warm-start floor: seed the
+        // anneal with a known-good design and check the result's
+        // throughput is at least the seed's (the seed is recorded as the
+        // initial best before any proposal).
+        let net = testnet::blenet_like();
+        let board = Board::zc706();
+        let cfg = AnnealConfig::quick();
+        let p = Problem::baseline(
+            Cdfg::lower_baseline(&net),
+            board.resources,
+            board.clock_hz,
+        );
+        let cold = anneal(&p, &cfg);
+        assert!(cold.feasible);
+        let warm_cfg = AnnealConfig {
+            restarts: 1,
+            ..cfg.clone()
+        };
+        let warm = anneal_seeded(&p, &warm_cfg, &cold.mapping);
+        assert!(warm.feasible, "a feasible seed must stay feasible");
+        assert!(
+            warm.throughput >= cold.throughput,
+            "seeded anneal fell below its seed: {} < {}",
+            warm.throughput,
+            cold.throughput
+        );
+    }
+
+    #[test]
+    fn seeded_anneal_deterministic_and_counts_acceptances() {
+        let net = testnet::blenet_like();
+        let board = Board::zc706();
+        let cfg = AnnealConfig::quick();
+        let p = Problem::baseline(
+            Cdfg::lower_baseline(&net),
+            board.budget(0.4),
+            board.clock_hz,
+        );
+        let seed = anneal(&p, &cfg);
+        let a = anneal_seeded(&p, &cfg, &seed.mapping);
+        let b = anneal_seeded(&p, &cfg, &seed.mapping);
+        assert_eq!(a.ii, b.ii);
+        assert_eq!(a.resources, b.resources);
+        assert_eq!(a.mapping.foldings, b.mapping.foldings);
+        assert_eq!(a.accepted, b.accepted);
+        assert!(a.accepted <= a.iterations_run);
+        assert!(seed.accepted <= seed.iterations_run);
+        // The quick schedule on this net always accepts something.
+        assert!(seed.accepted > 0);
     }
 
     #[test]

@@ -73,6 +73,7 @@ pub fn greedy(problem: &Problem) -> AnnealResult {
         ii,
         mapping,
         iterations_run: iterations,
+        accepted: 0,
     }
 }
 
@@ -111,6 +112,7 @@ pub fn random_search(problem: &Problem, cfg: &AnnealConfig) -> AnnealResult {
         ii,
         mapping,
         iterations_run: evals,
+        accepted: 0,
     }
 }
 

@@ -21,13 +21,13 @@ pub mod problem;
 pub mod sweep;
 
 pub use annealer::{
-    anneal, anneal_call_count, anneal_sequential, AnnealConfig, AnnealResult,
+    anneal, anneal_call_count, anneal_seeded, anneal_sequential, AnnealConfig, AnnealResult,
 };
 pub use baselines::{greedy, naive_combine, random_search};
 pub use pareto::{
     assemble_frontier, min_area_design, plan_frontier, solve, sweep_frontier,
     sweep_frontier_sequential, FrontierPoint, ObjectiveOutcome, ParetoConfig,
-    ParetoFrontier, Solution,
+    ParetoFrontier, Solution, WarmStart,
 };
 pub use problem::{Objective, Problem, ProblemKind};
 pub use sweep::{

@@ -3,14 +3,21 @@
 //! ("ATHEENA matches the baseline's throughput with as low as 46% of
 //! its resources", Fig. 9/10's resource-matched operating points).
 //!
-//! A frontier is traced by sweeping budget *scalings* of a board — one
-//! [`anneal`] per scaling, run on the deterministic executor
-//! ([`run_tasks_parallel`] → `util::exec::run_ordered`), bit-identical
-//! to the sequential ladder — and keeping the non-dominated
-//! (throughput, area-norm) points, where the area norm is the scalar
-//! [`ResourceVec::utilization`] against the *full* board. After the
-//! dominance filter the frontier is strictly monotone in **both** axes
-//! (property-tested in `tests/pareto_props.rs`).
+//! A frontier is traced by sweeping budget *scalings* of a board and
+//! keeping the non-dominated (throughput, area-norm) points, where the
+//! area norm is the scalar [`ResourceVec::utilization`] against the
+//! *full* board. Since PR 8 the ladder is **incremental** (DESIGN.md
+//! §11): [`sweep_frontier`] visits rungs in descending budget order in
+//! independent chains (wave-scheduled on `util::exec::run_ordered`),
+//! cold-annealing each chain's anchor and seeding every other rung from
+//! its neighbour's result clipped into the smaller budget
+//! ([`Problem::clip_into_budget`] → [`anneal_seeded`]). The cold
+//! one-full-[`anneal`]-per-rung ladder survives as
+//! [`sweep_frontier_sequential`], the reference oracle; the warm
+//! frontier is property-tested to never be dominated by it at any
+//! budget point. After the dominance filter the frontier is strictly
+//! monotone in **both** axes (property-tested in
+//! `tests/pareto_props.rs`).
 //!
 //! [`Objective`](super::Objective) ties the three search modes
 //! together: `MaxThroughput` is one ladder rung, `ParetoFront` is the
@@ -21,12 +28,47 @@
 //! [`min_area_design`] is never beaten by any frontier point of lower
 //! area.
 
-use super::annealer::{anneal, AnnealConfig, AnnealResult};
+use super::annealer::{anneal, anneal_seeded, AnnealConfig, AnnealResult};
 use super::problem::{Objective, Problem, ProblemKind};
-use super::sweep::{plan_sweep, run_tasks_parallel, SweepConfig, SweepTask};
+use super::sweep::{plan_sweep, SweepConfig, SweepTask};
 use crate::ir::Cdfg;
 use crate::resources::{Board, ResourceVec};
+use crate::sdf::HwMapping;
 use crate::util::Json;
+
+/// Warm-start chaining parameters for the incremental budget ladder
+/// (DESIGN.md §11). Rungs are swept in descending budget order in
+/// chains of `chain_len`; each chain's first rung ("anchor") is a full
+/// cold anneal — bit-identical to the cold ladder's rung, same task
+/// seed — and each subsequent rung is seeded from its neighbour's
+/// result clipped into the smaller budget
+/// ([`Problem::clip_into_budget`]) via
+/// [`anneal_seeded`](super::annealer::anneal_seeded) with `restarts`
+/// restarts. Interior rungs doing less restart work than the cold
+/// ladder is where the `warm_speedup` comes from; the clipped seed
+/// recorded as the initial best is the exact floor the
+/// never-dominated-by-cold property stands on.
+#[derive(Clone, Debug)]
+pub struct WarmStart {
+    /// Rungs per independent chain (wave scheduling: chains run in
+    /// parallel on the deterministic executor, rungs within a chain are
+    /// sequential because each seeds the next). `1` degenerates every
+    /// rung to a cold anchor — the cold ladder exactly.
+    pub chain_len: usize,
+    /// Restarts for warm-seeded (non-anchor) rungs. Restart 0 runs from
+    /// the clipped seed; restarts ≥ 1 replay the cold anneal's restart
+    /// streams bit for bit (diversification escape hatch).
+    pub restarts: usize,
+}
+
+impl Default for WarmStart {
+    fn default() -> Self {
+        WarmStart {
+            chain_len: 5,
+            restarts: 1,
+        }
+    }
+}
 
 /// Budget-scaling ladder + anneal schedule for a frontier sweep.
 #[derive(Clone, Debug)]
@@ -35,6 +77,9 @@ pub struct ParetoConfig {
     /// per entry (seed derived per index, exactly like a TAP sweep).
     pub scalings: Vec<f64>,
     pub anneal: AnnealConfig,
+    /// Warm-start chaining for [`sweep_frontier`]; the cold reference
+    /// [`sweep_frontier_sequential`] ignores it.
+    pub warm: WarmStart,
 }
 
 impl Default for ParetoConfig {
@@ -42,6 +87,7 @@ impl Default for ParetoConfig {
         ParetoConfig {
             scalings: SweepConfig::default().fractions,
             anneal: AnnealConfig::default(),
+            warm: WarmStart::default(),
         }
     }
 }
@@ -52,6 +98,7 @@ impl ParetoConfig {
         ParetoConfig {
             scalings: SweepConfig::quick().fractions,
             anneal: AnnealConfig::quick(),
+            warm: WarmStart::default(),
         }
     }
 }
@@ -199,13 +246,20 @@ pub fn plan_frontier(
 /// Turn per-scaling anneal results (in ladder order) into a frontier:
 /// feasible results only, area-normed against the full board, then
 /// dominance-filtered. `scalings[i]` is the budget scaling result `i`
-/// was annealed under.
+/// was annealed under. Errors (in every build profile) when the two
+/// slices disagree in length — a malformed sweep must not silently
+/// mis-attribute budget fractions.
 pub fn assemble_frontier(
     board: &Board,
     scalings: &[f64],
     results: &[AnnealResult],
-) -> ParetoFrontier {
-    debug_assert_eq!(scalings.len(), results.len());
+) -> anyhow::Result<ParetoFrontier> {
+    anyhow::ensure!(
+        scalings.len() == results.len(),
+        "frontier assembly: {} scalings vs {} anneal results",
+        scalings.len(),
+        results.len()
+    );
     let raw = results
         .iter()
         .enumerate()
@@ -219,37 +273,85 @@ pub fn assemble_frontier(
             source: i,
         })
         .collect::<Vec<_>>();
-    ParetoFrontier::from_points(raw)
+    Ok(ParetoFrontier::from_points(raw))
 }
 
-/// Sweep the budget-scaling ladder on the deterministic executor and
-/// extract the frontier. Returns the frontier plus every raw anneal
-/// result (frontier points link back via `source`). Bit-identical to
-/// [`sweep_frontier_sequential`].
+/// Sweep the budget-scaling ladder **incrementally** and extract the
+/// frontier. Returns the frontier plus every raw anneal result in
+/// ladder order (frontier points link back via `source`).
+///
+/// Rungs are visited in descending budget order in chains of
+/// `cfg.warm.chain_len` (independent chains run in parallel on the
+/// deterministic executor — wave scheduling). Each chain's anchor rung
+/// is a full cold [`anneal`] — bit-identical to the same rung of the
+/// cold [`sweep_frontier_sequential`] ladder, same per-index task seed
+/// — and every subsequent rung seeds [`anneal_seeded`] with the
+/// neighbour's result clipped into the smaller budget. Warm-start is a
+/// deterministic *seed* change, never a silent result change: the
+/// quality gate (`tests/pareto_props.rs`) checks the warm frontier is
+/// never dominated by the cold frontier at any budget point.
 pub fn sweep_frontier(
     kind: ProblemKind,
     cdfg: &Cdfg,
     board: &Board,
     cfg: &ParetoConfig,
-) -> (ParetoFrontier, Vec<AnnealResult>) {
+) -> anyhow::Result<(ParetoFrontier, Vec<AnnealResult>)> {
     let tasks = plan_frontier(kind, cdfg, board, cfg);
-    let results = run_tasks_parallel(&tasks);
-    (assemble_frontier(board, &cfg.scalings, &results), results)
+    // Descending budget order (ties: ladder index) — chains seed
+    // downward into tighter budgets, where a clipped good design is a
+    // meaningful floor.
+    let mut order: Vec<usize> = (0..tasks.len()).collect();
+    order.sort_by(|&a, &b| cfg.scalings[b].total_cmp(&cfg.scalings[a]).then(a.cmp(&b)));
+    let chains: Vec<&[usize]> = order.chunks(cfg.warm.chain_len.max(1)).collect();
+    let per_chain: Vec<Vec<(usize, AnnealResult)>> =
+        crate::util::exec::run_ordered(chains.len(), |c| {
+            let mut out = Vec::with_capacity(chains[c].len());
+            let mut prev: Option<HwMapping> = None;
+            for &i in chains[c] {
+                let task = &tasks[i];
+                let r = match &prev {
+                    None => anneal(&task.problem, &task.config),
+                    Some(neighbour) => {
+                        let clipped = task.problem.clip_into_budget(neighbour);
+                        let mut wcfg = task.config.clone();
+                        wcfg.restarts = cfg.warm.restarts.max(1);
+                        anneal_seeded(&task.problem, &wcfg, &clipped)
+                    }
+                };
+                prev = Some(r.mapping.clone());
+                out.push((i, r));
+            }
+            out
+        });
+    let mut slots: Vec<Option<AnnealResult>> = vec![None; tasks.len()];
+    for chain in per_chain {
+        for (i, r) in chain {
+            slots[i] = Some(r);
+        }
+    }
+    let results: Vec<AnnealResult> = slots
+        .into_iter()
+        .map(|r| r.ok_or_else(|| anyhow::anyhow!("a ladder rung was never annealed")))
+        .collect::<anyhow::Result<_>>()?;
+    Ok((assemble_frontier(board, &cfg.scalings, &results)?, results))
 }
 
-/// Sequential reference path for [`sweep_frontier`].
+/// Sequential **cold** reference path for [`sweep_frontier`] — one full
+/// cold anneal per rung in ladder order, no warm-start chaining (the
+/// repo-idiom oracle, cf. `anneal_sequential`). The warm sweep's
+/// quality gate compares against this ladder.
 pub fn sweep_frontier_sequential(
     kind: ProblemKind,
     cdfg: &Cdfg,
     board: &Board,
     cfg: &ParetoConfig,
-) -> (ParetoFrontier, Vec<AnnealResult>) {
+) -> anyhow::Result<(ParetoFrontier, Vec<AnnealResult>)> {
     let tasks = plan_frontier(kind, cdfg, board, cfg);
     let results: Vec<AnnealResult> = tasks
         .iter()
         .map(|t| anneal(&t.problem, &t.config))
         .collect();
-    (assemble_frontier(board, &cfg.scalings, &results), results)
+    Ok((assemble_frontier(board, &cfg.scalings, &results)?, results))
 }
 
 /// A single-design outcome of an objective search ([`min_area_design`]
@@ -285,7 +387,7 @@ pub fn min_area_design(
         target.is_finite() && target > 0.0,
         "throughput target must be finite and positive, got {target}"
     );
-    let (frontier, results) = sweep_frontier(kind, cdfg, board, cfg);
+    let (frontier, results) = sweep_frontier(kind, cdfg, board, cfg)?;
     let picked = frontier.min_area_at(target).copied().ok_or_else(|| {
         anyhow::anyhow!(
             "no swept design reaches {target:.0} samples/s (frontier max {:.0})",
@@ -361,7 +463,7 @@ pub fn solve(
                     board,
                     &cfg.scalings[cfg.scalings.len() - 1..],
                     std::slice::from_ref(&r),
-                ),
+                )?,
                 result: r,
             })))
         }
@@ -369,7 +471,7 @@ pub fn solve(
             min_area_design(kind, cdfg, board, cfg, target)?,
         ))),
         Objective::ParetoFront => {
-            Ok(Solution::Front(sweep_frontier(kind, cdfg, board, cfg).0))
+            Ok(Solution::Front(sweep_frontier(kind, cdfg, board, cfg)?.0))
         }
     }
 }
@@ -443,12 +545,78 @@ mod tests {
     }
 
     #[test]
+    fn empty_ladder_sweeps_to_empty_frontier() {
+        let net = testnet::blenet_like();
+        let board = Board::zc706();
+        let cfg = ParetoConfig {
+            scalings: vec![],
+            ..ParetoConfig::quick()
+        };
+        let cdfg = Cdfg::lower_baseline(&net);
+        let (front, raw) =
+            sweep_frontier(ProblemKind::Baseline, &cdfg, &board, &cfg).unwrap();
+        assert!(front.is_empty());
+        assert!(raw.is_empty());
+        let (cold, _) =
+            sweep_frontier_sequential(ProblemKind::Baseline, &cdfg, &board, &cfg).unwrap();
+        assert!(cold.is_empty());
+    }
+
+    #[test]
+    fn all_infeasible_ladder_gives_empty_frontier() {
+        // Budget scalings so small even the minimal mapping (plus
+        // infrastructure) overflows: every rung reports infeasible and
+        // the frontier is empty rather than an error.
+        let net = testnet::blenet_like();
+        let board = Board::zc706();
+        let cfg = ParetoConfig {
+            scalings: vec![1e-6, 2e-6],
+            anneal: AnnealConfig {
+                iterations: 50,
+                restarts: 1,
+                ..Default::default()
+            },
+            ..ParetoConfig::quick()
+        };
+        let cdfg = Cdfg::lower_baseline(&net);
+        let (front, raw) =
+            sweep_frontier(ProblemKind::Baseline, &cdfg, &board, &cfg).unwrap();
+        assert!(raw.iter().all(|r| !r.feasible));
+        assert!(front.is_empty());
+    }
+
+    #[test]
+    fn single_scaling_ladder_gives_single_point_frontier() {
+        let net = testnet::blenet_like();
+        let board = Board::zc706();
+        let cfg = ParetoConfig {
+            scalings: vec![1.0],
+            ..ParetoConfig::quick()
+        };
+        let cdfg = Cdfg::lower_baseline(&net);
+        let (front, raw) =
+            sweep_frontier(ProblemKind::Baseline, &cdfg, &board, &cfg).unwrap();
+        assert_eq!(raw.len(), 1);
+        assert_eq!(front.len(), 1);
+        assert_eq!(front.points[0].source, 0);
+    }
+
+    #[test]
+    fn assemble_frontier_length_mismatch_errors_in_release_too() {
+        let board = Board::zc706();
+        let err = assemble_frontier(&board, &[0.5, 1.0], &[]).unwrap_err();
+        assert!(err.to_string().contains("2 scalings vs 0"));
+        assert!(assemble_frontier(&board, &[], &[]).unwrap().is_empty());
+    }
+
+    #[test]
     fn frontier_sweep_on_testnet_is_monotone() {
         let net = testnet::blenet_like();
         let board = Board::zc706();
         let cfg = ParetoConfig::quick();
         let cdfg = Cdfg::lower_baseline(&net);
-        let (front, raw) = sweep_frontier(ProblemKind::Baseline, &cdfg, &board, &cfg);
+        let (front, raw) =
+            sweep_frontier(ProblemKind::Baseline, &cdfg, &board, &cfg).unwrap();
         assert!(!front.is_empty());
         assert_eq!(raw.len(), cfg.scalings.len());
         for w in front.points.windows(2) {

@@ -156,6 +156,55 @@ impl Problem {
     pub fn throughput(&self, mapping: &HwMapping) -> f64 {
         self.clock_hz / self.ii(mapping) as f64
     }
+
+    /// Clip a mapping found under a *larger* budget into this problem's
+    /// budget: while the charged resources overflow, step down one
+    /// folding axis of the most area-hungry steppable active node
+    /// (first-max in id order breaks ties). A pure function of
+    /// (mapping, budget) — no RNG — so the warm-start chains in
+    /// `dse::pareto::sweep_frontier` are reproducible. Parallelism
+    /// strictly decreases every step, so the loop terminates; if the
+    /// mapping is fully stepped down and still overflows (infrastructure
+    /// alone can exceed a tiny budget) the minimal mapping is returned
+    /// as-is and the annealer's overrun penalty takes it from there.
+    pub fn clip_into_budget(&self, mapping: &HwMapping) -> HwMapping {
+        use crate::sdf::folding::FoldingSpace;
+        use crate::sdf::Folding;
+        let mut m = mapping.clone();
+        loop {
+            if self.resources(&m).fits_in(&self.budget) {
+                return m;
+            }
+            let mut pick: Option<(f64, usize)> = None;
+            for &id in &self.active {
+                let f = m.foldings[id];
+                let space = &m.spaces[id];
+                let can_step = FoldingSpace::step(&space.coarse_out, f.coarse_out, false)
+                    .is_some()
+                    || FoldingSpace::step(&space.coarse_in, f.coarse_in, false).is_some()
+                    || FoldingSpace::step(&space.fine, f.fine, false).is_some();
+                if !can_step {
+                    continue;
+                }
+                let u = m.node_resources(id).max_utilisation(&self.budget);
+                if pick.as_ref().map(|(b, _)| u > *b).unwrap_or(true) {
+                    pick = Some((u, id));
+                }
+            }
+            let Some((_, id)) = pick else {
+                return m;
+            };
+            let f = m.foldings[id];
+            let space = &m.spaces[id];
+            if let Some(v) = FoldingSpace::step(&space.coarse_out, f.coarse_out, false) {
+                m.foldings[id] = Folding { coarse_out: v, ..f };
+            } else if let Some(v) = FoldingSpace::step(&space.coarse_in, f.coarse_in, false) {
+                m.foldings[id] = Folding { coarse_in: v, ..f };
+            } else if let Some(v) = FoldingSpace::step(&space.fine, f.fine, false) {
+                m.foldings[id] = Folding { fine: v, ..f };
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -213,6 +262,38 @@ mod tests {
         );
         assert!(p.feasible(&p.mapping));
         assert!(p.throughput(&p.mapping) > 0.0);
+    }
+
+    #[test]
+    fn clip_into_budget_is_deterministic_and_feasible_when_possible() {
+        let net = testnet::blenet_like();
+        let board = Board::zc706();
+        // A fully-unfolded mapping under the full board…
+        let big = Problem::baseline(
+            Cdfg::lower_baseline(&net),
+            board.resources,
+            board.clock_hz,
+        );
+        let mut fat = big.mapping.clone();
+        for i in 0..fat.foldings.len() {
+            fat.foldings[i] = fat.spaces[i].max();
+        }
+        // …clipped into a quarter of the board.
+        let small = Problem::baseline(
+            Cdfg::lower_baseline(&net),
+            board.budget(0.25),
+            board.clock_hz,
+        );
+        let a = small.clip_into_budget(&fat);
+        let b = small.clip_into_budget(&fat);
+        assert_eq!(a.foldings, b.foldings, "clip must be deterministic");
+        assert!(
+            small.resources(&a).fits_in(&small.budget),
+            "minimal mapping fits 25% of the board, so the clip must too"
+        );
+        // A mapping already inside the budget is returned untouched.
+        let inside = small.clip_into_budget(&small.mapping);
+        assert_eq!(inside.foldings, small.mapping.foldings);
     }
 
     #[test]

@@ -114,6 +114,22 @@
 //! the first diverging event — the debugging instrument for exactly
 //! this kind of dual-core work.
 //!
+//! The DSE is **incremental** (DESIGN.md §11): the budget-scaling
+//! ladder chains warm starts — rungs sweep descending, each seeded
+//! from the adjacent larger budget's accepted mapping clipped into the
+//! smaller budget (`dse::WarmStart`, `dse::anneal_seeded`,
+//! `Problem::clip_into_budget`), with the cold
+//! `sweep_frontier_sequential` kept as the reference oracle and a
+//! property gate pinning that the warm frontier is never dominated by
+//! the cold one at any budget point. The Eq. 1 multi-stage search
+//! prunes with precomputed per-suffix admissible bounds
+//! (`tap::SuffixBounds`, reusable across a whole budget ladder) while
+//! staying bit-identical to the unpruned `tap::combine_multi_reference`.
+//! And a content-addressed lowering arena (`sim::CompiledArena` /
+//! `sim::SharedArena`, keyed on timing content + DMA width, generation
+//! drift re-stamped) memoizes compiled-simulator lowerings across
+//! `Realized::measure`, frontier realization, and envelope sweeps.
+//!
 //! Observability is per-sample, not just aggregate (DESIGN.md §9): the
 //! `trace` subsystem captures structured events (`SampleAdmitted`,
 //! `SectionEnter/Exit`, `ExitTaken`, `BufferStalled/Drained`,

@@ -21,6 +21,13 @@
 //! --backend interpreted|compiled to pick the simulator core
 //! (DESIGN.md §10; the default is the compiled kernel, `interpreted`
 //! pins the reference interpreter).
+//!
+//! Cold runs that trace the budget ladder (`toolflow`, `pareto`,
+//! `report fig9a`) go through the incremental DSE of DESIGN.md §11:
+//! warm-start anneal chaining down the ladder, suffix-bound-pruned
+//! Eq. 1 combination, and a shared lowering arena — all bit- or
+//! dominance-gated against their cold reference paths, so CLI output
+//! is unchanged apart from wall time.
 //! (The vendored offline crate set has no clap; parsing is hand-rolled.)
 
 use std::path::PathBuf;

@@ -67,7 +67,7 @@ pub struct SectionOp {
 /// (`super::CompiledScratch`) needs, flattened out of `DesignTiming` +
 /// `SimConfig`. Built once per design by [`lower`]; immutable
 /// afterwards.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct OpTable {
     /// One op per backbone section, in pipeline order.
     pub ops: Vec<SectionOp>,

@@ -36,7 +36,7 @@ pub mod engine;
 pub mod lower;
 pub mod metrics;
 
-pub use compiled::{CompiledDesign, CompiledScratch};
+pub use compiled::{CompiledArena, CompiledDesign, CompiledScratch, SharedArena};
 pub use config::{DriftScenario, SimBackend, SimConfig};
 pub use drift::{
     design_operating_point, simulate_closed_loop, simulate_closed_loop_traced,

@@ -7,4 +7,7 @@ pub mod multi;
 
 pub use combine::{combine, CombinedDesign};
 pub use curve::{TapCurve, TapPoint};
-pub use multi::{combine_multi, MultiStageDesign};
+pub use multi::{
+    combine_multi, combine_multi_reference, combine_multi_with_bounds, MultiStageDesign,
+    SuffixBounds,
+};

@@ -150,15 +150,167 @@ impl MultiStageDesign {
     }
 }
 
-/// Exact multi-stage Eq. 1: exhaustive enumeration over the Pareto sets
-/// with branch-and-bound pruning on both budget and the running min.
-/// Tie-break at equal throughput: prefer over-provisioning the latest
-/// stages (compare tail stages' nominal throughput last-to-first), which
-/// at N = 2 is exactly the pairwise `combine` rule.
-pub fn combine_multi(
+/// Admissible suffix bounds for the Eq. 1 branch-and-bound, computed
+/// once per curve set and reusable across every budget point of a
+/// scaling ladder (the tables are budget-independent).
+///
+/// Two tables, both indexed by stage `s` with a sentinel at `N`:
+///
+/// * `eff[s]` — an upper bound on the min-effective-throughput any
+///   completion of stages `s..N` can contribute under *any* budget:
+///   `min_{i ≥ s} max_throughput(curve_i) / r_i` (`+∞` at `N`). Each
+///   stage's chosen point is at most its curve's fastest point, so the
+///   true suffix min never exceeds this — the bound is admissible, and
+///   pruning only when the optimistic completion is *strictly* below the
+///   incumbent preserves equal-min descent (and hence the §IV-A
+///   tie-break) exactly.
+/// * `min_res[s]` — a lower bound on what any completion of `s..N` must
+///   consume: the component-wise per-curve minima summed over the
+///   suffix (`ZERO` at `N`). Every chosen point is component-wise at
+///   least its curve's minimum, so if `used + min_res[s]` exceeds the
+///   budget no leaf exists below this branch and skipping it cannot
+///   change the result.
+///
+/// Both prunes cut only branches that provably cannot beat *or tie* the
+/// incumbent (or reach a leaf at all), so the pruned search is
+/// bit-identical to [`combine_multi_reference`] — property-tested in
+/// `tests/pipeline_props.rs`.
+#[derive(Clone, Debug)]
+pub struct SuffixBounds {
+    eff: Vec<f64>,
+    min_res: Vec<ResourceVec>,
+}
+
+impl SuffixBounds {
+    pub fn new(curves: &[TapCurve], reach_probs: &[f64]) -> SuffixBounds {
+        assert_eq!(curves.len(), reach_probs.len());
+        let n = curves.len();
+        let mut eff = vec![f64::INFINITY; n + 1];
+        let mut min_res = vec![ResourceVec::ZERO; n + 1];
+        for s in (0..n).rev() {
+            let best = if reach_probs[s] > 0.0 {
+                curves[s].max_throughput() / reach_probs[s]
+            } else {
+                f64::INFINITY
+            };
+            eff[s] = best.min(eff[s + 1]);
+            let mut floor = ResourceVec::ZERO;
+            for (i, p) in curves[s].points.iter().enumerate() {
+                if i == 0 {
+                    floor = p.resources;
+                } else {
+                    floor.lut = floor.lut.min(p.resources.lut);
+                    floor.ff = floor.ff.min(p.resources.ff);
+                    floor.dsp = floor.dsp.min(p.resources.dsp);
+                    floor.bram = floor.bram.min(p.resources.bram);
+                }
+            }
+            min_res[s] = floor.saturating_add(&min_res[s + 1]);
+        }
+        SuffixBounds { eff, min_res }
+    }
+
+    /// Number of stages the bounds were built for.
+    pub fn n_stages(&self) -> usize {
+        self.eff.len() - 1
+    }
+}
+
+struct Search<'a> {
+    curves: &'a [TapCurve],
+    probs: &'a [f64],
+    budget: ResourceVec,
+    bounds: Option<&'a SuffixBounds>,
+    best: Option<(f64, Vec<TapPoint>)>,
+}
+
+impl Search<'_> {
+    /// Does a complete candidate beat the incumbent? Strictly higher
+    /// min-throughput wins; on an exact tie, the candidate whose
+    /// tail stages (compared from the last stage backwards, skipping
+    /// stage 0) are nominally faster wins — the robustness
+    /// preference of §IV-A.
+    fn beats_incumbent(&self, running_min: f64, picked: &[TapPoint]) -> bool {
+        match &self.best {
+            None => true,
+            Some((b, chosen)) => {
+                if running_min > *b {
+                    return true;
+                }
+                if running_min < *b {
+                    return false;
+                }
+                for i in (1..picked.len()).rev() {
+                    if picked[i].throughput > chosen[i].throughput {
+                        return true;
+                    }
+                    if picked[i].throughput < chosen[i].throughput {
+                        return false;
+                    }
+                }
+                false
+            }
+        }
+    }
+
+    fn recurse(
+        &mut self,
+        stage: usize,
+        used: ResourceVec,
+        running_min: f64,
+        picked: &mut Vec<TapPoint>,
+    ) {
+        if stage == self.curves.len() {
+            if self.beats_incumbent(running_min, picked) {
+                self.best = Some((running_min, picked.clone()));
+            }
+            return;
+        }
+        for pt in &self.curves[stage].points {
+            let total = used + pt.resources;
+            if !total.fits_in(&self.budget) {
+                continue;
+            }
+            if let Some(bounds) = self.bounds {
+                // Suffix-resource floor: if even the cheapest completion
+                // of the remaining stages cannot fit, no leaf exists
+                // below this branch.
+                if !total
+                    .saturating_add(&bounds.min_res[stage + 1])
+                    .fits_in(&self.budget)
+                {
+                    continue;
+                }
+            }
+            let eff = pt.throughput / self.probs[stage];
+            let new_min = running_min.min(eff);
+            // Prune strictly-worse branches; equal-min branches must
+            // descend so the tie-break can consider them. With bounds,
+            // fold in the optimistic suffix completion — still strict,
+            // so potential ties always descend.
+            if let Some((b, _)) = &self.best {
+                let optimistic = match self.bounds {
+                    Some(bounds) => new_min.min(bounds.eff[stage + 1]),
+                    None => new_min,
+                };
+                if optimistic < *b {
+                    continue;
+                }
+            }
+            // `new_min` itself (not the optimistic value) flows down:
+            // deeper stages re-apply their own suffix bounds.
+            picked.push(*pt);
+            self.recurse(stage + 1, total, new_min, picked);
+            picked.pop();
+        }
+    }
+}
+
+fn run_search(
     curves: &[TapCurve],
     reach_probs: &[f64],
     budget: &ResourceVec,
+    bounds: Option<&SuffixBounds>,
 ) -> Option<MultiStageDesign> {
     assert_eq!(curves.len(), reach_probs.len());
     assert!(!curves.is_empty());
@@ -167,81 +319,19 @@ pub fn combine_multi(
         "reach probabilities must be non-increasing"
     );
     assert!(reach_probs.iter().all(|&p| p > 0.0));
-
-    struct Search<'a> {
-        curves: &'a [TapCurve],
-        probs: &'a [f64],
-        budget: ResourceVec,
-        best: Option<(f64, Vec<TapPoint>)>,
-    }
-
-    impl Search<'_> {
-        /// Does a complete candidate beat the incumbent? Strictly higher
-        /// min-throughput wins; on an exact tie, the candidate whose
-        /// tail stages (compared from the last stage backwards, skipping
-        /// stage 0) are nominally faster wins — the robustness
-        /// preference of §IV-A.
-        fn beats_incumbent(&self, running_min: f64, picked: &[TapPoint]) -> bool {
-            match &self.best {
-                None => true,
-                Some((b, chosen)) => {
-                    if running_min > *b {
-                        return true;
-                    }
-                    if running_min < *b {
-                        return false;
-                    }
-                    for i in (1..picked.len()).rev() {
-                        if picked[i].throughput > chosen[i].throughput {
-                            return true;
-                        }
-                        if picked[i].throughput < chosen[i].throughput {
-                            return false;
-                        }
-                    }
-                    false
-                }
-            }
-        }
-
-        fn recurse(
-            &mut self,
-            stage: usize,
-            used: ResourceVec,
-            running_min: f64,
-            picked: &mut Vec<TapPoint>,
-        ) {
-            if stage == self.curves.len() {
-                if self.beats_incumbent(running_min, picked) {
-                    self.best = Some((running_min, picked.clone()));
-                }
-                return;
-            }
-            for pt in &self.curves[stage].points {
-                let total = used + pt.resources;
-                if !total.fits_in(&self.budget) {
-                    continue;
-                }
-                let eff = pt.throughput / self.probs[stage];
-                let new_min = running_min.min(eff);
-                // Prune strictly-worse branches; equal-min branches must
-                // descend so the tie-break can consider them.
-                if let Some((b, _)) = &self.best {
-                    if new_min < *b {
-                        continue;
-                    }
-                }
-                picked.push(*pt);
-                self.recurse(stage + 1, total, new_min, picked);
-                picked.pop();
-            }
-        }
+    if let Some(b) = bounds {
+        assert_eq!(
+            b.n_stages(),
+            curves.len(),
+            "suffix bounds built for a different stage count"
+        );
     }
 
     let mut search = Search {
         curves,
         probs: reach_probs,
         budget: *budget,
+        bounds,
         best: None,
     };
     search.recurse(0, ResourceVec::ZERO, f64::INFINITY, &mut Vec::new());
@@ -250,6 +340,48 @@ pub fn combine_multi(
         reach_probs: reach_probs.to_vec(),
         throughput_at_design: thr,
     })
+}
+
+/// Exact multi-stage Eq. 1: exhaustive enumeration over the Pareto sets
+/// with branch-and-bound pruning on both budget and the running min,
+/// accelerated by admissible [`SuffixBounds`] (built internally here;
+/// use [`combine_multi_with_bounds`] to amortize the tables across a
+/// budget ladder). Tie-break at equal throughput: prefer
+/// over-provisioning the latest stages (compare tail stages' nominal
+/// throughput last-to-first), which at N = 2 is exactly the pairwise
+/// `combine` rule. Bit-identical to [`combine_multi_reference`].
+pub fn combine_multi(
+    curves: &[TapCurve],
+    reach_probs: &[f64],
+    budget: &ResourceVec,
+) -> Option<MultiStageDesign> {
+    let bounds = SuffixBounds::new(curves, reach_probs);
+    run_search(curves, reach_probs, budget, Some(&bounds))
+}
+
+/// [`combine_multi`] with caller-supplied [`SuffixBounds`] — the tables
+/// depend only on (curves, reach probabilities), so one set serves every
+/// budget point of a scaling ladder.
+pub fn combine_multi_with_bounds(
+    curves: &[TapCurve],
+    reach_probs: &[f64],
+    budget: &ResourceVec,
+    bounds: &SuffixBounds,
+) -> Option<MultiStageDesign> {
+    run_search(curves, reach_probs, budget, Some(bounds))
+}
+
+/// The unpruned reference search — the repo-idiom oracle (cf.
+/// `anneal_sequential`, `sweep_frontier_sequential`) that the
+/// suffix-bounded [`combine_multi`] is property-tested bit-identical
+/// against. Same enumeration order, same incumbent rule, no suffix
+/// tables.
+pub fn combine_multi_reference(
+    curves: &[TapCurve],
+    reach_probs: &[f64],
+    budget: &ResourceVec,
+) -> Option<MultiStageDesign> {
+    run_search(curves, reach_probs, budget, None)
 }
 
 #[cfg(test)]
@@ -373,6 +505,51 @@ mod tests {
         for (a, b) in back.stages.iter().zip(&d.stages) {
             assert_eq!(a.resources, b.resources);
             assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+        }
+    }
+
+    #[test]
+    fn bounds_reused_across_a_budget_ladder_match_fresh_and_reference() {
+        let mk = || {
+            curve(vec![
+                pt(50.0, 80),
+                pt(100.0, 160),
+                pt(200.0, 320),
+                pt(400.0, 640),
+            ])
+        };
+        let curves = [mk(), mk(), mk()];
+        let probs = [1.0, 0.3, 0.1];
+        let bounds = SuffixBounds::new(&curves, &probs);
+        assert_eq!(bounds.n_stages(), 3);
+        for frac in [0.1_f64, 0.25, 0.5, 1.0] {
+            let budget = ResourceVec::new(
+                (100_000.0 * frac) as u64,
+                (150_000.0 * frac) as u64,
+                (900.0 * frac) as u64,
+                (1_000.0 * frac) as u64,
+            );
+            let shared = combine_multi_with_bounds(&curves, &probs, &budget, &bounds);
+            let fresh = combine_multi(&curves, &probs, &budget);
+            let oracle = combine_multi_reference(&curves, &probs, &budget);
+            match (&shared, &fresh, &oracle) {
+                (None, None, None) => {}
+                (Some(a), Some(b), Some(c)) => {
+                    assert_eq!(
+                        a.throughput_at_design.to_bits(),
+                        c.throughput_at_design.to_bits()
+                    );
+                    assert_eq!(
+                        b.throughput_at_design.to_bits(),
+                        c.throughput_at_design.to_bits()
+                    );
+                    for i in 0..3 {
+                        assert_eq!(a.stages[i].resources, c.stages[i].resources);
+                        assert_eq!(b.stages[i].resources, c.stages[i].resources);
+                    }
+                }
+                _ => panic!("pruned/fresh/reference feasibility disagreed at {frac}"),
+            }
         }
     }
 

@@ -25,9 +25,9 @@ use atheena::coordinator::pipeline::OperatingEnvelope;
 use atheena::ee::decision::Controller;
 use atheena::sim::{
     design_operating_point, simulate_closed_loop, simulate_ee, simulate_ee_faults,
-    simulate_multi, simulate_multi_faults, ClosedLoopConfig, CompiledDesign, CompiledScratch,
-    DesignTiming, DriftScenario, ExitTiming, FaultModel, SectionTiming, SimBackend, SimConfig,
-    SimResult,
+    simulate_multi, simulate_multi_faults, ClosedLoopConfig, CompiledArena, CompiledDesign,
+    CompiledScratch, DesignTiming, DriftScenario, ExitTiming, FaultModel, SectionTiming,
+    SharedArena, SimBackend, SimConfig, SimResult,
 };
 use atheena::util::proptest::{check, gen_range, gen_vec, prop_assert};
 use atheena::util::Rng;
@@ -237,6 +237,86 @@ fn relowered_design_after_depth_mutation_matches_oracle() {
         ),
         "re-lowered design diverged from the oracle on the mutated timing"
     );
+}
+
+// ---- lowering arena -----------------------------------------------------
+
+#[test]
+fn prop_arena_lowering_bit_identical_to_fresh() {
+    // The arena is a pure memoizer: for random timings — including
+    // repeats, which exercise the hit path — the design it hands out
+    // must carry the bit-identical op table a fresh `lower` builds, and
+    // running both on the same batch must agree bit for bit.
+    let cfg = SimConfig::default();
+    let mut arena = CompiledArena::new();
+    let mut scratch = CompiledScratch::new();
+    let mut prior: Vec<DesignTiming> = Vec::new();
+    check(40, |r| {
+        // One request in three replays an earlier timing verbatim, so
+        // the property covers hits as well as misses.
+        let t = if !prior.is_empty() && r.below(3) == 0 {
+            prior[r.below(prior.len())].clone()
+        } else {
+            let t = rand_timing(r);
+            prior.push(t.clone());
+            t
+        };
+        let fresh = CompiledDesign::lower(&t, &cfg);
+        let cached = arena.get_or_lower(&t, &cfg);
+        prop_assert(
+            *cached.table() == *fresh.table(),
+            "arena op table diverged from a fresh lowering",
+        )?;
+        prop_assert(!cached.is_stale(&t), "arena handed out a stale design")?;
+
+        let n_sections = t.sections.len();
+        let completes = gen_vec(r, 64 + r.below(200), |r| r.below(n_sections));
+        let want = fresh.run(&mut scratch, &completes).clone();
+        let got = cached.run(&mut scratch, &completes);
+        prop_assert(
+            same_result(&want, got),
+            "arena-served design ran differently from the fresh lowering",
+        )
+    });
+    let (hits, misses) = arena.stats();
+    assert_eq!((hits + misses) as usize, 40, "every request is a hit or a miss");
+    assert_eq!(misses as usize, arena.len(), "every miss inserts exactly one entry");
+}
+
+#[test]
+fn arena_counts_hits_and_restamps_generation_drift() {
+    // Invalidation rules: identical content hits; a depth mutation is a
+    // genuine miss; reverting the depth hits again even though the
+    // generation counter kept climbing — the arena re-stamps the entry
+    // so the handed-out design is not stale for the *current* counter.
+    let cfg = SimConfig::default();
+    let mut t = steady_timing();
+    let arena = SharedArena::new();
+
+    let a = arena.get_or_lower(&t, &cfg);
+    let b = arena.get_or_lower(&t, &cfg);
+    assert_eq!(arena.stats(), (1, 1), "second identical request must hit");
+    assert!(std::sync::Arc::ptr_eq(&a, &b), "hit must return the cached Arc");
+
+    t.set_cond_buffer_depth(0, 1).unwrap();
+    let c = arena.get_or_lower(&t, &cfg);
+    assert_eq!(arena.stats(), (1, 2), "content change must miss");
+    assert!(!c.is_stale(&t));
+    assert_ne!(*c.table(), *a.table());
+
+    // Revert to the original depth: content matches the first entry
+    // again, but the generation counter has advanced twice.
+    t.set_cond_buffer_depth(0, 8).unwrap();
+    let d = arena.get_or_lower(&t, &cfg);
+    assert_eq!(arena.stats(), (2, 2), "reverted content must hit, not re-lower");
+    assert!(
+        !d.is_stale(&t),
+        "hit under generation drift must be re-stamped to the current counter"
+    );
+    assert_eq!(d.generation(), t.generation());
+    assert_eq!(*d.table(), *a.table(), "re-stamped entry must keep the same table");
+    // The originally handed-out Arc is never mutated retroactively.
+    assert_eq!(a.generation(), 0);
 }
 
 // ---- allocation-freedom -------------------------------------------------

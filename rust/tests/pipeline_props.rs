@@ -10,6 +10,10 @@
 //! * `combine_multi` at N = 2 selects the **bit-identical** design the
 //!   pairwise two-stage `combine` picks, and its combined throughput is
 //!   monotone non-increasing in every reach probability,
+//! * suffix-bound pruning (`combine_multi` / `combine_multi_with_bounds`,
+//!   with the bound table reused across a budget ladder) is
+//!   **bit-identical** to the unpruned `combine_multi_reference` oracle
+//!   on random curve sets up to N = 4,
 //! * `synthetic_hard_flags` places an exact hard count and is a pure
 //!   permutation across seeds (seed changes placement, never count),
 //! * a `Realized` design round-trips through the design-cache
@@ -52,7 +56,10 @@ use atheena::sim::{
     design_operating_point, simulate_closed_loop, simulate_multi, ClosedLoopConfig,
     DesignTiming, DriftScenario, ExitTiming, SectionTiming, SimConfig, SimScratch,
 };
-use atheena::tap::{combine, combine_multi, TapCurve, TapPoint};
+use atheena::tap::{
+    combine, combine_multi, combine_multi_reference, combine_multi_with_bounds,
+    SuffixBounds, TapCurve, TapPoint,
+};
 use atheena::util::proptest::{check, gen_range, gen_vec, prop_assert};
 use atheena::util::{Json, Rng};
 
@@ -201,6 +208,69 @@ fn prop_combine_multi_n2_bit_identical_to_pairwise_combine() {
                 Ok(())
             }
         }
+    });
+}
+
+#[test]
+fn prop_combine_multi_suffix_bounds_bit_identical_to_reference() {
+    // The pruned Eq. 1 search must be a pure speedup: for random curve
+    // sets up to N = 4, random reach vectors, and a small budget ladder,
+    // the suffix-bounded search — both the self-building `combine_multi`
+    // and `combine_multi_with_bounds` reusing ONE bound table across
+    // every ladder point — returns the bit-identical design the
+    // unpruned `combine_multi_reference` oracle finds, or agrees that
+    // none is feasible.
+    check(300, |r| {
+        let n_stages = 1 + r.below(4); // 1..=4
+        let curves: Vec<TapCurve> = (0..n_stages).map(|_| random_curve(r, 10)).collect();
+        let mut reach = vec![1.0];
+        for i in 1..n_stages {
+            let prev = reach[i - 1];
+            reach.push(prev * (0.05 + 0.95 * r.f64()));
+        }
+        let bounds = SuffixBounds::new(&curves, &reach);
+        let full = ResourceVec::new(
+            (50_000 + r.below(900_000)) as u64,
+            (50_000 + r.below(1_500_000)) as u64,
+            (100 + r.below(3_000)) as u64,
+            (50 + r.below(4_000)) as u64,
+        );
+        for frac in [0.15, 0.4, 1.0] {
+            let budget = full.scaled(frac);
+            let oracle = combine_multi_reference(&curves, &reach, &budget);
+            let pruned = combine_multi(&curves, &reach, &budget);
+            let shared = combine_multi_with_bounds(&curves, &reach, &budget, &bounds);
+            for (name, got) in [("pruned", &pruned), ("shared-bounds", &shared)] {
+                match (&oracle, got) {
+                    (None, None) => {}
+                    (Some(_), None) | (None, Some(_)) => {
+                        return Err(format!(
+                            "{name} search disagreed with the oracle on feasibility"
+                        ));
+                    }
+                    (Some(want), Some(have)) => {
+                        prop_assert(
+                            have.throughput_at_design.to_bits()
+                                == want.throughput_at_design.to_bits(),
+                            &format!("{name} objective bits diverged"),
+                        )?;
+                        prop_assert(
+                            have.stages.len() == want.stages.len(),
+                            &format!("{name} stage count diverged"),
+                        )?;
+                        for (a, b) in have.stages.iter().zip(&want.stages) {
+                            prop_assert(
+                                a.resources == b.resources
+                                    && a.throughput.to_bits() == b.throughput.to_bits()
+                                    && a.source == b.source,
+                                &format!("{name} stage selection diverged"),
+                            )?;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
     });
 }
 
