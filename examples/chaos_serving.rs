@@ -1,0 +1,186 @@
+//! Chaos serving — the degradation-aware server under a pinned fault
+//! schedule (DESIGN.md §12):
+//!
+//!     cargo run --release --example chaos_serving [-- --trace-out FILE]
+//!
+//! A four-section pipeline served by the deterministic synthetic
+//! engines takes a seeded `ServeFaultPlan` on the chin: two injected
+//! stage-1 worker crashes (each caught by the supervisor, the worker
+//! respawned, the in-flight sample preserved), one 40 ms worker stall,
+//! one 32-sample input burst on the submission side, and 200 µs of
+//! decision jitter. Admission control runs watermark shedding with
+//! `ShedPolicy::ForceEarlyExit` plus a 2 ms deadline, so overload
+//! degrades *accuracy* (samples forced out at the first exit) instead
+//! of latency — and every admitted sample is still classified.
+//!
+//! The run asserts the recovery invariants and prints one grep-able
+//! summary line:
+//!
+//!     chaos: admitted=… served=… shed=… failed=… restarts=2 lost=0
+//!
+//! With `--trace-out FILE` the run records `SampleShed`,
+//! `DeadlineForcedExit`, `WorkerStalled`, and `WorkerRestarted` events
+//! alongside the serving stream and writes a validated
+//! Chrome-trace/Perfetto JSON (open at ui.perfetto.dev).
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use atheena::coordinator::{
+    AdmissionConfig, BurstFault, CrashFault, ServeFaultPlan, Server, ServerConfig,
+    ShedPolicy, StallFault, SubmitOutcome, SyntheticEngineFactory,
+};
+use atheena::trace::{
+    validate_chrome_trace, write_chrome_trace, Recorder, TraceSummary,
+    DEFAULT_RECORDER_CAPACITY,
+};
+use atheena::util::Rng;
+
+const N_SECTIONS: usize = 4;
+const REQUESTS: usize = 256;
+const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+fn pinned_plan() -> ServeFaultPlan {
+    ServeFaultPlan {
+        seed: 0xC4A0_5,
+        decision_jitter_us: 200,
+        dma_stall_prob: 0.0,
+        dma_stall_cycles: 0,
+        // Stage 1 (section 0) processes every admitted sample, so both
+        // crashes and the stall fire deterministically.
+        stalls: vec![StallFault { stage: 0, at_sample: 30, millis: 40 }],
+        crashes: vec![
+            CrashFault { stage: 0, at_sample: 10 },
+            CrashFault { stage: 0, at_sample: 40 },
+        ],
+        bursts: vec![BurstFault { at_sample: 16, extra: 32 }],
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let trace_out = std::env::args()
+        .skip_while(|a| a != "--trace-out")
+        .nth(1);
+
+    let plan = pinned_plan();
+    plan.validate()?;
+    println!(
+        "fault plan (seed {:#x}): {} crashes, {} stall(s), {} burst(s), jitter {}us",
+        plan.seed,
+        plan.crash_count(),
+        plan.stalls.len(),
+        plan.bursts.len(),
+        plan.decision_jitter_us
+    );
+
+    let admission = AdmissionConfig {
+        deadline: Some(Duration::from_millis(2)),
+        shed: ShedPolicy::ForceEarlyExit,
+        high_watermark: 8,
+        low_watermark: 4,
+    };
+    let mut cfg = ServerConfig::new("unused-artifacts", "synthetic")
+        .with_faults(plan.clone())
+        .with_admission(admission);
+    let rec = trace_out
+        .as_ref()
+        .map(|_| Arc::new(Mutex::new(Recorder::new(DEFAULT_RECORDER_CAPACITY))));
+    if let Some(rec) = &rec {
+        cfg = cfg.with_trace(rec.clone());
+    }
+
+    let server =
+        Server::start_with_engine(cfg, Arc::new(SyntheticEngineFactory::new(N_SECTIONS)))?;
+    let stats = server.stats.clone();
+
+    // Submission side: the plan's burst schedule piles `extra`
+    // immediate submissions on top of its trigger sample.
+    let mut rng = Rng::new(0x5E7E);
+    let mut rxs = Vec::new();
+    let mut submitted = 0u64;
+    for _ in 0..REQUESTS {
+        let extra = plan.burst_extra(submitted);
+        for _ in 0..=extra {
+            let image: Vec<f32> = (0..32).map(|_| rng.f64() as f32).collect();
+            submitted += 1;
+            match server.try_submit(image) {
+                SubmitOutcome::Enqueued(rx) => rxs.push(rx),
+                // ForceEarlyExit admits everything; only Reject sheds
+                // outright.
+                SubmitOutcome::Shed { id } => {
+                    anyhow::bail!("ForceEarlyExit must not reject (id {id})")
+                }
+            }
+        }
+    }
+
+    let mut answered = 0u64;
+    let mut early = 0u64;
+    for rx in rxs {
+        let resp = rx
+            .recv_timeout(RECV_TIMEOUT)
+            .map_err(|e| anyhow::anyhow!("sample lost under chaos: {e}"))?;
+        answered += 1;
+        if resp.exited_early {
+            early += 1;
+        }
+    }
+
+    let snap = stats.snapshot();
+    let (admitted, accounted) = stats.conservation();
+    let lost = admitted - accounted;
+    let report = server.shutdown();
+
+    println!(
+        "answered {answered}/{submitted} (early-exit {:.2}, forced {}, stalls {}, \
+         deepest-channel peak {:?})",
+        early as f64 / answered.max(1) as f64,
+        snap.forced_exits,
+        snap.worker_stalls,
+        snap.peak_inflight
+    );
+    println!(
+        "chaos: admitted={} served={} shed={} failed={} restarts={} lost={lost}",
+        snap.admitted, snap.served, snap.shed, snap.failed, report.restarts
+    );
+
+    // Recovery invariants (the CI chaos smoke gates on the line above).
+    assert_eq!(lost, 0, "conservation: every admitted sample accounted for");
+    assert_eq!(
+        report.restarts,
+        plan.crash_count(),
+        "one supervised restart per injected crash"
+    );
+    assert!(report.is_clean(), "restart budget must absorb the plan");
+    assert_eq!(snap.worker_stalls, 1, "the scheduled stall fired once");
+    assert_eq!(snap.failed, 0, "no degraded drains");
+    assert_eq!(answered, snap.admitted, "every admitted sample classified");
+
+    if let (Some(path), Some(rec)) = (trace_out, rec) {
+        let mut r = rec.lock().unwrap_or_else(|e| e.into_inner());
+        let dropped = r.dropped();
+        let events = r.take_events();
+        let text = write_chrome_trace(&events, 1e6);
+        let stats = validate_chrome_trace(&text)?;
+        std::fs::write(&path, &text)?;
+        println!(
+            "wrote chaos trace to {path}: {} events on {} tracks",
+            stats.events, stats.tracks
+        );
+        let summary = TraceSummary::from_events(&events, 1e6, dropped);
+        assert!(
+            !summary.degradation.is_clean(),
+            "chaos run must surface degradation events"
+        );
+        println!(
+            "trace degradation: shed {} forced {} stalls {} restarts {}",
+            summary.degradation.shed,
+            summary.degradation.forced_exits,
+            summary.degradation.worker_stalls,
+            summary.degradation.worker_restarts
+        );
+    }
+
+    println!("ok: recovered from every injected fault with zero lost samples");
+    Ok(())
+}

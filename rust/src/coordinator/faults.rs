@@ -1,0 +1,541 @@
+//! Deterministic fault-injection plans for the serving layer.
+//!
+//! A [`ServeFaultPlan`] is a seeded, replayable chaos schedule: per-stage
+//! worker stalls and crashes keyed on the stage's *k-th processed sample*
+//! (a monotone per-stage counter, so each fault fires exactly once, even
+//! across supervisor restarts), decision-latency jitter, DMA-fault
+//! parameters reusing [`crate::sim::FaultModel`] semantics, and
+//! input-burst load spikes for the submission driver. The same plan is
+//! injectable into the real threaded server
+//! ([`crate::coordinator::Server`]) and into `sim/drift.rs`'s
+//! closed-loop virtual-time harness
+//! (`sim::drift::simulate_closed_loop_chaos`), so every chaos scenario
+//! is cheap to sweep in simulation before it is replayed against live
+//! threads. DESIGN.md §12.
+//!
+//! This module also hosts the admission-control vocabulary: per-sample
+//! deadlines and inflight watermarks drive a [`ShedPolicy`] deciding
+//! what happens to samples the server cannot serve in time, and
+//! [`DegradedReason`] / [`ShutdownReport`] carry the structured partial
+//! outcome when a supervisor exhausts its restart budget. The
+//! system-wide accounting contract is the conservation law
+//! `admitted == retired + shed + failed`, checked in every path.
+
+use std::path::Path;
+use std::time::Duration;
+
+use crate::sim::FaultModel;
+use crate::util::json::{self, Json};
+
+/// A scheduled worker stall: stage `stage` sleeps `millis` before
+/// processing its `at_sample`-th sample (0-based per-stage counter).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StallFault {
+    pub stage: usize,
+    pub at_sample: u64,
+    pub millis: u64,
+}
+
+/// A scheduled worker crash: stage `stage` panics instead of processing
+/// its `at_sample`-th sample. The supervisor catches the panic and
+/// respawns the worker; the per-stage counter is monotone across
+/// restarts so the crash fires exactly once.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CrashFault {
+    pub stage: usize,
+    pub at_sample: u64,
+}
+
+/// A scheduled input-burst load spike: when the submission driver sends
+/// its `at_sample`-th request it immediately sends `extra` more.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BurstFault {
+    pub at_sample: u64,
+    pub extra: usize,
+}
+
+/// A seeded, deterministic chaos schedule for the serving layer.
+///
+/// `decision_jitter_us`, `dma_stall_prob`, `dma_stall_cycles`, and
+/// `seed` mirror [`FaultModel`] (see [`ServeFaultPlan::fault_model`]):
+/// in the real server the jitter becomes a seeded pre-decision sleep;
+/// in the virtual-time harness the whole tuple feeds the simulator's
+/// fault RNG unchanged.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeFaultPlan {
+    /// Seed for the jitter RNG (mixed with the stage index per worker).
+    pub seed: u64,
+    /// Uniform decision-latency jitter bound, microseconds (0 = none).
+    pub decision_jitter_us: u64,
+    /// Per-sample DMA stall probability in [0, 1] (virtual-time runs).
+    pub dma_stall_prob: f64,
+    /// DMA stall penalty, cycles (virtual-time runs).
+    pub dma_stall_cycles: u64,
+    /// Scheduled worker stalls.
+    pub stalls: Vec<StallFault>,
+    /// Scheduled worker crashes.
+    pub crashes: Vec<CrashFault>,
+    /// Scheduled input-burst load spikes.
+    pub bursts: Vec<BurstFault>,
+}
+
+impl ServeFaultPlan {
+    /// The no-faults plan: a server configured with it is bit-identical
+    /// to one configured with no plan at all (property-tested in
+    /// `tests/server_props.rs`).
+    pub const NONE: ServeFaultPlan = ServeFaultPlan {
+        seed: 0,
+        decision_jitter_us: 0,
+        dma_stall_prob: 0.0,
+        dma_stall_cycles: 0,
+        stalls: Vec::new(),
+        crashes: Vec::new(),
+        bursts: Vec::new(),
+    };
+
+    /// True when the plan injects nothing (jitter, DMA faults, and all
+    /// schedules empty) — the fast paths skip fault bookkeeping.
+    pub fn is_none(&self) -> bool {
+        self.decision_jitter_us == 0
+            && self.dma_stall_prob == 0.0
+            && self.dma_stall_cycles == 0
+            && self.stalls.is_empty()
+            && self.crashes.is_empty()
+            && self.bursts.is_empty()
+    }
+
+    /// Bounds-check the plan. Rejects out-of-range probabilities,
+    /// unreasonable stall/jitter magnitudes (which would wedge the
+    /// chaos harness rather than degrade it), and oversized schedules.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.dma_stall_prob.is_finite() && (0.0..=1.0).contains(&self.dma_stall_prob),
+            "ServeFaultPlan: dma_stall_prob {} outside [0, 1]",
+            self.dma_stall_prob
+        );
+        anyhow::ensure!(
+            self.dma_stall_cycles <= u32::MAX as u64,
+            "ServeFaultPlan: dma_stall_cycles {} overflows the cycle budget",
+            self.dma_stall_cycles
+        );
+        anyhow::ensure!(
+            self.decision_jitter_us <= 1_000_000,
+            "ServeFaultPlan: decision_jitter_us {} > 1s per decision",
+            self.decision_jitter_us
+        );
+        for s in &self.stalls {
+            anyhow::ensure!(
+                s.millis <= 60_000,
+                "ServeFaultPlan: stall of {}ms at stage {} exceeds the 60s bound",
+                s.millis,
+                s.stage
+            );
+        }
+        for b in &self.bursts {
+            anyhow::ensure!(
+                b.extra <= 1 << 20,
+                "ServeFaultPlan: burst of {} extra samples is unreasonably large",
+                b.extra
+            );
+        }
+        anyhow::ensure!(
+            self.stalls.len() + self.crashes.len() + self.bursts.len() <= 4096,
+            "ServeFaultPlan: more than 4096 scheduled faults"
+        );
+        Ok(())
+    }
+
+    /// Total scheduled crashes (the CI gate compares this against the
+    /// supervisor's restart count).
+    pub fn crash_count(&self) -> u64 {
+        self.crashes.len() as u64
+    }
+
+    /// Scheduled crashes hitting `stage` (restart budgets must exceed
+    /// this per stage for the plan to be survivable).
+    pub fn crash_count_for(&self, stage: usize) -> u64 {
+        self.crashes.iter().filter(|c| c.stage == stage).count() as u64
+    }
+
+    /// Does stage `stage` crash instead of processing its `k`-th sample?
+    pub fn crashes_at(&self, stage: usize, k: u64) -> bool {
+        self.crashes
+            .iter()
+            .any(|c| c.stage == stage && c.at_sample == k)
+    }
+
+    /// Stall duration (ms) before stage `stage` processes its `k`-th
+    /// sample, if one is scheduled. Multiple matching stalls sum.
+    pub fn stall_at(&self, stage: usize, k: u64) -> Option<u64> {
+        let ms: u64 = self
+            .stalls
+            .iter()
+            .filter(|s| s.stage == stage && s.at_sample == k)
+            .map(|s| s.millis)
+            .sum();
+        (ms > 0).then_some(ms)
+    }
+
+    /// Extra requests the submission driver injects right after sending
+    /// its `k`-th request (load-spike schedule; multiple bursts sum).
+    pub fn burst_extra(&self, k: u64) -> usize {
+        self.bursts
+            .iter()
+            .filter(|b| b.at_sample == k)
+            .map(|b| b.extra)
+            .sum()
+    }
+
+    /// The simulator-side view of this plan: the virtual-time harness
+    /// feeds this straight into the fault-aware engine entry points, so
+    /// DMA-fault semantics are shared between the two worlds.
+    pub fn fault_model(&self) -> FaultModel {
+        FaultModel {
+            decision_jitter: self.decision_jitter_us,
+            dma_stall_prob: self.dma_stall_prob,
+            dma_stall_cycles: self.dma_stall_cycles,
+            seed: self.seed,
+        }
+    }
+
+    /// Serialize to the `plan.json` schema (DESIGN.md §12).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("decision_jitter_us", Json::num(self.decision_jitter_us as f64)),
+            ("dma_stall_prob", Json::num(self.dma_stall_prob)),
+            ("dma_stall_cycles", Json::num(self.dma_stall_cycles as f64)),
+            (
+                "stalls",
+                Json::arr(self.stalls.iter().map(|s| {
+                    Json::obj(vec![
+                        ("stage", Json::num(s.stage as f64)),
+                        ("at_sample", Json::num(s.at_sample as f64)),
+                        ("millis", Json::num(s.millis as f64)),
+                    ])
+                })),
+            ),
+            (
+                "crashes",
+                Json::arr(self.crashes.iter().map(|c| {
+                    Json::obj(vec![
+                        ("stage", Json::num(c.stage as f64)),
+                        ("at_sample", Json::num(c.at_sample as f64)),
+                    ])
+                })),
+            ),
+            (
+                "bursts",
+                Json::arr(self.bursts.iter().map(|b| {
+                    Json::obj(vec![
+                        ("at_sample", Json::num(b.at_sample as f64)),
+                        ("extra", Json::num(b.extra as f64)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Parse a plan from its JSON document. Missing fields default to
+    /// the `NONE` values, so a partial plan ("just two crashes") stays
+    /// terse; the parsed plan is validated before it is returned.
+    pub fn from_json(doc: &Json) -> anyhow::Result<ServeFaultPlan> {
+        let num_or = |key: &str, default: f64| -> anyhow::Result<f64> {
+            match doc.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("fault plan: '{key}' is not a number")),
+            }
+        };
+        let u64_field = |v: &Json, key: &str| -> anyhow::Result<u64> {
+            let n = v
+                .req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("fault plan: '{key}' is not a number"))?;
+            anyhow::ensure!(
+                n >= 0.0 && n.fract() == 0.0,
+                "fault plan: '{key}' must be a non-negative integer, got {n}"
+            );
+            Ok(n as u64)
+        };
+        let mut plan = ServeFaultPlan {
+            seed: num_or("seed", 0.0)? as u64,
+            decision_jitter_us: num_or("decision_jitter_us", 0.0)? as u64,
+            dma_stall_prob: num_or("dma_stall_prob", 0.0)?,
+            dma_stall_cycles: num_or("dma_stall_cycles", 0.0)? as u64,
+            stalls: Vec::new(),
+            crashes: Vec::new(),
+            bursts: Vec::new(),
+        };
+        if let Some(arr) = doc.get("stalls").and_then(Json::as_arr) {
+            for s in arr {
+                plan.stalls.push(StallFault {
+                    stage: u64_field(s, "stage")? as usize,
+                    at_sample: u64_field(s, "at_sample")?,
+                    millis: u64_field(s, "millis")?,
+                });
+            }
+        }
+        if let Some(arr) = doc.get("crashes").and_then(Json::as_arr) {
+            for c in arr {
+                plan.crashes.push(CrashFault {
+                    stage: u64_field(c, "stage")? as usize,
+                    at_sample: u64_field(c, "at_sample")?,
+                });
+            }
+        }
+        if let Some(arr) = doc.get("bursts").and_then(Json::as_arr) {
+            for b in arr {
+                plan.bursts.push(BurstFault {
+                    at_sample: u64_field(b, "at_sample")?,
+                    extra: u64_field(b, "extra")? as usize,
+                });
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Load and validate a plan from a `plan.json` file.
+    pub fn from_file(path: &Path) -> anyhow::Result<ServeFaultPlan> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read fault plan {}: {e}", path.display()))?;
+        let doc = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("fault plan {}: {e}", path.display()))?;
+        ServeFaultPlan::from_json(&doc)
+    }
+}
+
+/// What happens to a sample the admission controller cannot serve in
+/// time (deadline already busted at submit, or the high inflight
+/// watermark is breached).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Refuse admission: the sample is counted shed and never enters
+    /// the pipeline (bounded loss, zero extra work).
+    Reject,
+    /// Admit, but force the sample out at the first exit decision —
+    /// the early-exit network's built-in graceful-degradation knob:
+    /// accuracy degrades to exit-1 quality instead of latency growing
+    /// without bound. Every admitted sample still gets a classification.
+    ForceEarlyExit,
+    /// Route the sample to a dedicated baseline (single-exit) worker
+    /// outside the staged pipeline, trading pipeline backlog for one
+    /// full-network evaluation.
+    SpillToBaseline,
+}
+
+impl ShedPolicy {
+    /// Parse the CLI spelling (`--shed reject|force-exit|spill`).
+    pub fn parse(s: &str) -> anyhow::Result<ShedPolicy> {
+        match s {
+            "reject" => Ok(ShedPolicy::Reject),
+            "force-exit" => Ok(ShedPolicy::ForceEarlyExit),
+            "spill" => Ok(ShedPolicy::SpillToBaseline),
+            other => anyhow::bail!("unknown shed policy '{other}' (reject|force-exit|spill)"),
+        }
+    }
+}
+
+/// Admission-control configuration: a per-sample deadline plus
+/// high/low inflight watermarks with hysteresis. Overload (inflight ≥
+/// `high_watermark`) turns shedding on; it stays on until inflight
+/// drains to ≤ `low_watermark`.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// Per-sample deadline from submission. A sample still in the
+    /// pipeline past its deadline is forced out at the next exit
+    /// decision (`DeadlineForcedExit`); a sample that would be admitted
+    /// while shedding is on goes through [`ShedPolicy`] instead.
+    pub deadline: Option<Duration>,
+    pub shed: ShedPolicy,
+    pub high_watermark: u64,
+    pub low_watermark: u64,
+}
+
+impl AdmissionConfig {
+    /// Deadline-only admission (no watermark shedding).
+    pub fn deadline_us(us: u64, shed: ShedPolicy) -> AdmissionConfig {
+        AdmissionConfig {
+            deadline: Some(Duration::from_micros(us)),
+            shed,
+            high_watermark: u64::MAX,
+            low_watermark: u64::MAX,
+        }
+    }
+
+    /// Watermark shedding with hysteresis at `high` / `high/2`.
+    pub fn watermarks(high: u64, shed: ShedPolicy) -> AdmissionConfig {
+        AdmissionConfig {
+            deadline: None,
+            shed,
+            high_watermark: high.max(1),
+            low_watermark: (high / 2).max(1),
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.low_watermark <= self.high_watermark,
+            "admission: low watermark {} above high watermark {}",
+            self.low_watermark,
+            self.high_watermark
+        );
+        anyhow::ensure!(
+            self.high_watermark > 0,
+            "admission: high watermark must be positive"
+        );
+        Ok(())
+    }
+}
+
+/// Why a stage ended up degraded: its supervisor exhausted the restart
+/// budget and drained the stage instead of serving it.
+#[derive(Clone, Debug)]
+pub struct DegradedReason {
+    /// Pipeline stage (0-based section index).
+    pub stage: usize,
+    /// Restarts consumed before giving up.
+    pub restarts: u64,
+    /// The final panic/error message.
+    pub message: String,
+}
+
+/// Structured shutdown outcome: total supervisor restarts plus one
+/// [`DegradedReason`] per stage that exhausted its budget. An empty
+/// `degraded` list with zero restarts is a clean run.
+#[derive(Clone, Debug, Default)]
+pub struct ShutdownReport {
+    pub restarts: u64,
+    pub degraded: Vec<DegradedReason>,
+}
+
+impl ShutdownReport {
+    pub fn is_clean(&self) -> bool {
+        self.degraded.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pinned_plan() -> ServeFaultPlan {
+        ServeFaultPlan {
+            seed: 0xC4A0_5,
+            decision_jitter_us: 200,
+            dma_stall_prob: 0.1,
+            dma_stall_cycles: 64,
+            stalls: vec![StallFault {
+                stage: 1,
+                at_sample: 30,
+                millis: 40,
+            }],
+            crashes: vec![
+                CrashFault {
+                    stage: 1,
+                    at_sample: 10,
+                },
+                CrashFault {
+                    stage: 2,
+                    at_sample: 20,
+                },
+            ],
+            bursts: vec![BurstFault {
+                at_sample: 16,
+                extra: 32,
+            }],
+        }
+    }
+
+    #[test]
+    fn none_plan_is_none_and_valid() {
+        assert!(ServeFaultPlan::NONE.is_none());
+        ServeFaultPlan::NONE.validate().unwrap();
+        assert_eq!(ServeFaultPlan::NONE.crash_count(), 0);
+        assert_eq!(ServeFaultPlan::NONE.fault_model(), FaultModel::NONE);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_plan() {
+        let plan = pinned_plan();
+        plan.validate().unwrap();
+        let doc = plan.to_json();
+        let back = ServeFaultPlan::from_json(&json::parse(&doc.to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn partial_plan_defaults_to_none_fields() {
+        let doc = json::parse(r#"{"crashes": [{"stage": 1, "at_sample": 4}]}"#).unwrap();
+        let plan = ServeFaultPlan::from_json(&doc).unwrap();
+        assert_eq!(plan.crash_count(), 1);
+        assert!(plan.crashes_at(1, 4));
+        assert!(!plan.crashes_at(1, 5));
+        assert_eq!(plan.decision_jitter_us, 0);
+        assert_eq!(plan.dma_stall_prob, 0.0);
+    }
+
+    #[test]
+    fn validate_rejects_bad_plans() {
+        let mut p = ServeFaultPlan::NONE.clone();
+        p.dma_stall_prob = 1.5;
+        assert!(p.validate().is_err());
+        p.dma_stall_prob = f64::NAN;
+        assert!(p.validate().is_err());
+        let mut p = ServeFaultPlan::NONE.clone();
+        p.stalls = vec![StallFault {
+            stage: 0,
+            at_sample: 0,
+            millis: 120_000,
+        }];
+        assert!(p.validate().is_err());
+        let mut p = ServeFaultPlan::NONE.clone();
+        p.decision_jitter_us = 2_000_000;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn schedule_lookups_sum_duplicates() {
+        let mut p = pinned_plan();
+        p.stalls.push(StallFault {
+            stage: 1,
+            at_sample: 30,
+            millis: 10,
+        });
+        assert_eq!(p.stall_at(1, 30), Some(50));
+        assert_eq!(p.stall_at(1, 31), None);
+        assert_eq!(p.burst_extra(16), 32);
+        assert_eq!(p.burst_extra(17), 0);
+        assert_eq!(p.crash_count_for(1), 1);
+        assert_eq!(p.crash_count_for(0), 0);
+    }
+
+    #[test]
+    fn shed_policy_parses_cli_spellings() {
+        assert_eq!(ShedPolicy::parse("reject").unwrap(), ShedPolicy::Reject);
+        assert_eq!(
+            ShedPolicy::parse("force-exit").unwrap(),
+            ShedPolicy::ForceEarlyExit
+        );
+        assert_eq!(ShedPolicy::parse("spill").unwrap(), ShedPolicy::SpillToBaseline);
+        assert!(ShedPolicy::parse("drop").is_err());
+    }
+
+    #[test]
+    fn admission_watermarks_have_hysteresis() {
+        let a = AdmissionConfig::watermarks(64, ShedPolicy::Reject);
+        assert_eq!(a.high_watermark, 64);
+        assert_eq!(a.low_watermark, 32);
+        a.validate().unwrap();
+        let bad = AdmissionConfig {
+            deadline: None,
+            shed: ShedPolicy::Reject,
+            high_watermark: 8,
+            low_watermark: 16,
+        };
+        assert!(bad.validate().is_err());
+    }
+}

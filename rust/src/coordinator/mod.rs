@@ -17,10 +17,16 @@
 //!   with hard samples routed down the chain (Python never on this
 //!   path) and exit decisions made by a runtime `ServePolicy`
 //!   (artifact-baked, fixed host thresholds, or the closed-loop
-//!   controller).
+//!   controller). Workers run supervised (bounded restarts, graceful
+//!   degradation) per DESIGN.md §12.
+//! * [`faults`]   — degradation-aware serving inputs: deterministic
+//!   fault-injection plans (`ServeFaultPlan`), admission control
+//!   (`AdmissionConfig` + `ShedPolicy`), and the structured degradation
+//!   report (`DegradedReason`, `ShutdownReport`).
 
 pub mod batch;
 pub mod batcher;
+pub mod faults;
 pub mod pipeline;
 pub mod server;
 pub mod toolflow;
@@ -32,7 +38,14 @@ pub use pipeline::{
     Measured, OperatingEnvelope, Packing, Realized, RealizedBaseline, RealizedDesign,
     ResourceMatch, Toolflow,
 };
-pub use server::{ServePolicy, Server, ServerConfig, ServerStats};
+pub use faults::{
+    AdmissionConfig, BurstFault, CrashFault, DegradedReason, ServeFaultPlan, ShedPolicy,
+    ShutdownReport, StallFault,
+};
+pub use server::{
+    EngineFactory, ExitEngine, FinalEngine, PjrtEngineFactory, Response, ServePolicy, Server,
+    ServerConfig, ServerStats, StatsSnapshot, SubmitOutcome, SyntheticEngineFactory,
+};
 pub use toolflow::{
     run_toolflow, synthetic_exit_stages, synthetic_hard_flags, ChosenDesign,
     ToolflowOptions, ToolflowResult,

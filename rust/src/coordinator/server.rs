@@ -18,21 +18,56 @@
 //! (per-channel occupancy, the software Conditional Buffer watermark)
 //! are exported through [`ServerStats`].
 //!
+//! **Degradation-aware serving (DESIGN.md §12).** Every stage worker
+//! runs under a supervisor: a worker panic (or an engine build/run
+//! failure escaping the per-sample path) is caught, the in-flight
+//! sample is preserved, and the stage is restarted with a fresh engine
+//! under a bounded restart budget with exponential backoff. When the
+//! budget is exhausted the stage drains gracefully — queued samples are
+//! accounted as `failed` (their submitters observe a disconnected
+//! receiver, never a hang) and a structured [`DegradedReason`] is
+//! surfaced by [`Server::shutdown`]. Deterministic fault plans
+//! ([`ServeFaultPlan`]) inject per-stage stalls, crashes, and
+//! decision-latency jitter for chaos testing; admission control
+//! ([`AdmissionConfig`]) adds per-sample deadlines and watermark-driven
+//! overload shedding ([`ShedPolicy`]: reject, force the next early
+//! exit, or spill to the baseline model). The conservation contract
+//! `admitted == served + spilled + shed + errors + failed` holds at
+//! quiescence on every path (property-tested in
+//! `rust/tests/server_props.rs`).
+//!
 //! Threading note: the vendored crate set has no tokio, and PJRT client
 //! handles are not `Send`; each worker thread therefore owns its own
-//! PJRT client + executables (compiled at startup), communicating over
-//! std mpsc channels. Python is never on this path.
+//! PJRT client + executables (built by an [`EngineFactory`] inside the
+//! worker thread, rebuilt on every supervised restart), communicating
+//! over std mpsc channels. Python is never on this path.
 
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use super::batcher::DynamicBatcher;
+use super::faults::{
+    AdmissionConfig, DegradedReason, ServeFaultPlan, ShedPolicy, ShutdownReport,
+};
 use crate::ee::decision::{argmax, Controller, Fixed, OperatingPoint, ThresholdPolicy};
 use crate::ee::profiler::ReachEstimator;
-use crate::runtime::ArtifactStore;
+use crate::runtime::{ArtifactStore, Stage1Output};
 use crate::trace::{Recorder, TraceEvent};
+use crate::util::Rng;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+/// All server state guarded by mutexes (recorder, policy, estimator,
+/// degraded-reason list) stays valid across a poisoned unlock: each
+/// critical section either completes its update or leaves the value
+/// readable, so the supervisor's restart path can keep serving instead
+/// of propagating the poison.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// How exit decisions are made at serving time.
 #[derive(Clone, Debug)]
@@ -68,9 +103,23 @@ pub struct ServerConfig {
     /// Shared event recorder (DESIGN.md §9). When set, workers emit
     /// `SampleAdmitted` per request, `ExitTaken` per completion, and
     /// `BufferOccupancy` on every forwarding-channel watermark change,
-    /// timestamped in microseconds since server start (export with
-    /// `clock_hz = 1e6`). `None` costs the serving path nothing.
+    /// plus the degradation events (`SampleShed`, `DeadlineForcedExit`,
+    /// `WorkerStalled`, `WorkerRestarted`) when faults or shedding are
+    /// active, timestamped in microseconds since server start (export
+    /// with `clock_hz = 1e6`). `None` costs the serving path nothing.
     pub trace: Option<Arc<Mutex<Recorder>>>,
+    /// Deterministic fault-injection plan (DESIGN.md §12). The default
+    /// [`ServeFaultPlan::NONE`] injects nothing and leaves the serving
+    /// path bit-identical to a server built without the field.
+    pub faults: ServeFaultPlan,
+    /// Admission control: per-sample deadlines and watermark-driven
+    /// overload shedding. `None` admits everything unconditionally.
+    pub admission: Option<AdmissionConfig>,
+    /// Supervised restarts allowed per stage before it degrades.
+    pub restart_budget: usize,
+    /// Base delay of the supervisor's exponential backoff (doubles per
+    /// consecutive restart, capped at 200ms).
+    pub restart_backoff: Duration,
 }
 
 impl ServerConfig {
@@ -83,6 +132,10 @@ impl ServerConfig {
             policy: ServePolicy::Artifact,
             estimator_window: 256,
             trace: None,
+            faults: ServeFaultPlan::NONE,
+            admission: None,
+            restart_budget: 8,
+            restart_backoff: Duration::from_millis(5),
         }
     }
 
@@ -90,6 +143,19 @@ impl ServerConfig {
     /// export the events after shutdown.
     pub fn with_trace(mut self, rec: Arc<Mutex<Recorder>>) -> ServerConfig {
         self.trace = Some(rec);
+        self
+    }
+
+    /// Install a fault-injection plan (validate it first; `Server::start`
+    /// rejects invalid plans).
+    pub fn with_faults(mut self, plan: ServeFaultPlan) -> ServerConfig {
+        self.faults = plan;
+        self
+    }
+
+    /// Install admission control (deadlines + shedding watermarks).
+    pub fn with_admission(mut self, admission: AdmissionConfig) -> ServerConfig {
+        self.admission = Some(admission);
         self
     }
 }
@@ -108,7 +174,7 @@ impl ServerTrace {
     }
 
     fn emit(&self, ev: TraceEvent) {
-        self.rec.lock().unwrap_or_else(|e| e.into_inner()).record(ev);
+        relock(&self.rec).record(ev);
     }
 }
 
@@ -122,12 +188,21 @@ pub struct Response {
     /// `n_sections - 1` for the final classifier).
     pub exit_stage: usize,
     pub latency: Duration,
+    /// True when the sample was shed out of the staged pipeline and
+    /// answered by the baseline model ([`ShedPolicy::SpillToBaseline`]).
+    pub spilled: bool,
 }
 
 struct Request {
     id: u64,
     image: Vec<f32>,
     submitted: Instant,
+    /// Answer-by instant; once passed, the sample is forced out at the
+    /// next exit decision.
+    deadline: Option<Instant>,
+    /// Admitted under [`ShedPolicy::ForceEarlyExit`] while shedding:
+    /// take the first exit regardless of confidence.
+    forced: bool,
     resp: mpsc::Sender<Response>,
 }
 
@@ -137,15 +212,207 @@ struct HardSample {
     id: u64,
     features: Vec<f32>,
     submitted: Instant,
+    deadline: Option<Instant>,
     resp: mpsc::Sender<Response>,
 }
 
+// ---------------------------------------------------------------------
+// Engine abstraction
+// ---------------------------------------------------------------------
+
+/// One exit stage's numerics: feature extractor + exit head. Engines
+/// are built *inside* their worker thread (PJRT handles are not `Send`)
+/// and rebuilt from the factory on every supervised restart.
+pub trait ExitEngine {
+    fn run(&mut self, input: &[f32]) -> anyhow::Result<Stage1Output>;
+}
+
+/// A classifier tail — the final stage (features in) or the baseline
+/// model (image in): class probabilities out.
+pub trait FinalEngine {
+    fn run(&mut self, input: &[f32]) -> anyhow::Result<Vec<f32>>;
+}
+
+/// Builds per-stage engines for the server's workers. The factory is
+/// shared across threads; the engines it returns are thread-local.
+pub trait EngineFactory: Send + Sync {
+    /// Pipeline depth (used to size the worker chain; called once at
+    /// startup, so it should fail fast on a bad configuration).
+    fn n_sections(&self) -> anyhow::Result<usize>;
+    fn exit_engine(&self, section: usize) -> anyhow::Result<Box<dyn ExitEngine>>;
+    fn final_engine(&self) -> anyhow::Result<Box<dyn FinalEngine>>;
+    /// The single-shot baseline model ([`ShedPolicy::SpillToBaseline`]'s
+    /// overflow lane).
+    fn baseline_engine(&self) -> anyhow::Result<Box<dyn FinalEngine>>;
+}
+
+/// The production factory: loads AOT artifacts and compiles them on a
+/// per-thread PJRT client ([`ArtifactStore`] semantics, unchanged).
+pub struct PjrtEngineFactory {
+    pub artifacts_dir: PathBuf,
+    pub network: String,
+}
+
+struct PjrtExit(crate::runtime::Stage1Exec);
+struct PjrtFinal(crate::runtime::Stage2Exec);
+struct PjrtBaseline(crate::runtime::BaselineExec);
+
+impl ExitEngine for PjrtExit {
+    fn run(&mut self, input: &[f32]) -> anyhow::Result<Stage1Output> {
+        self.0.run(input)
+    }
+}
+
+impl FinalEngine for PjrtFinal {
+    fn run(&mut self, input: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.0.run(input)
+    }
+}
+
+impl FinalEngine for PjrtBaseline {
+    fn run(&mut self, input: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.0.run(input)
+    }
+}
+
+impl EngineFactory for PjrtEngineFactory {
+    fn n_sections(&self) -> anyhow::Result<usize> {
+        let store = ArtifactStore::open(&self.artifacts_dir)?;
+        Ok(store.network(&self.network)?.n_sections())
+    }
+
+    fn exit_engine(&self, section: usize) -> anyhow::Result<Box<dyn ExitEngine>> {
+        let store = ArtifactStore::open(&self.artifacts_dir)?;
+        Ok(Box::new(PjrtExit(store.exit_stage(&self.network, section)?)))
+    }
+
+    fn final_engine(&self) -> anyhow::Result<Box<dyn FinalEngine>> {
+        let store = ArtifactStore::open(&self.artifacts_dir)?;
+        Ok(Box::new(PjrtFinal(store.final_stage(&self.network)?)))
+    }
+
+    fn baseline_engine(&self) -> anyhow::Result<Box<dyn FinalEngine>> {
+        let store = ArtifactStore::open(&self.artifacts_dir)?;
+        Ok(Box::new(PjrtBaseline(store.baseline(&self.network)?)))
+    }
+}
+
+/// A deterministic, dependency-free engine set for chaos tests and the
+/// `chaos_serving` example: confidence and class are FNV-1a hashes of
+/// the input (stable across platforms), features pass through, so the
+/// whole pipeline is reproducible without artifacts or a PJRT client.
+#[derive(Clone, Debug)]
+pub struct SyntheticEngineFactory {
+    pub n_sections: usize,
+    /// An exit is taken in-graph when the hashed confidence exceeds
+    /// this (host-side policies see the same confidence as max-prob).
+    pub exit_threshold: f64,
+    pub n_classes: usize,
+}
+
+impl SyntheticEngineFactory {
+    pub fn new(n_sections: usize) -> SyntheticEngineFactory {
+        SyntheticEngineFactory {
+            n_sections,
+            exit_threshold: 0.5,
+            n_classes: 10,
+        }
+    }
+}
+
+fn fnv_hash(seed: u64, data: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ seed.wrapping_mul(0x0100_0000_01b3);
+    for v in data {
+        h = (h ^ u64::from(v.to_bits())).wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// Map a hash to [0, 1) with 53 bits of mantissa.
+fn hash_unit(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+struct SyntheticExit {
+    section: usize,
+    threshold: f64,
+    classes: usize,
+}
+
+impl ExitEngine for SyntheticExit {
+    fn run(&mut self, input: &[f32]) -> anyhow::Result<Stage1Output> {
+        let classes = self.classes.max(1);
+        let h = fnv_hash(self.section as u64 + 1, input);
+        let conf = hash_unit(h);
+        let mut probs = vec![0.0f32; classes];
+        probs[(h % classes as u64) as usize] = conf as f32;
+        Ok(Stage1Output {
+            take_exit: conf > self.threshold,
+            exit_probs: probs,
+            features: input.to_vec(),
+        })
+    }
+}
+
+struct SyntheticFinal {
+    salt: u64,
+    classes: usize,
+}
+
+impl FinalEngine for SyntheticFinal {
+    fn run(&mut self, input: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let classes = self.classes.max(1);
+        let h = fnv_hash(self.salt, input);
+        let mut probs = vec![0.0f32; classes];
+        probs[(h % classes as u64) as usize] = 0.5 + hash_unit(h) as f32 * 0.5;
+        Ok(probs)
+    }
+}
+
+impl EngineFactory for SyntheticEngineFactory {
+    fn n_sections(&self) -> anyhow::Result<usize> {
+        anyhow::ensure!(self.n_sections >= 2, "synthetic pipeline needs >= 2 sections");
+        Ok(self.n_sections)
+    }
+
+    fn exit_engine(&self, section: usize) -> anyhow::Result<Box<dyn ExitEngine>> {
+        Ok(Box::new(SyntheticExit {
+            section,
+            threshold: self.exit_threshold,
+            classes: self.n_classes,
+        }))
+    }
+
+    fn final_engine(&self) -> anyhow::Result<Box<dyn FinalEngine>> {
+        Ok(Box::new(SyntheticFinal {
+            salt: 0xF1AA ^ self.n_sections as u64,
+            classes: self.n_classes,
+        }))
+    }
+
+    fn baseline_engine(&self) -> anyhow::Result<Box<dyn FinalEngine>> {
+        Ok(Box::new(SyntheticFinal {
+            salt: 0xBA5E,
+            classes: self.n_classes,
+        }))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stats & accounting
+// ---------------------------------------------------------------------
+
 #[derive(Debug)]
 pub struct ServerStats {
+    /// Samples presented to the server (`submit` + `try_submit`),
+    /// including ones later shed.
+    pub admitted: AtomicU64,
+    /// Samples answered by the staged pipeline.
     pub served: AtomicU64,
     /// Completions per pipeline section (exit 0, exit 1, …, final).
     pub completions: Vec<AtomicU64>,
     pub batches: AtomicU64,
+    /// Samples dropped on an engine run error (no response is sent).
     pub errors: AtomicU64,
     /// Samples forwarded past each exit (software Conditional Buffer
     /// writes).
@@ -155,13 +422,60 @@ pub struct ServerStats {
     pub inflight: Vec<AtomicU64>,
     /// Peak occupancy per channel — the backpressure watermark.
     pub peak_inflight: Vec<AtomicU64>,
+    /// Samples rejected by [`ShedPolicy::Reject`] (never enqueued).
+    pub shed: AtomicU64,
+    /// Samples answered by the baseline spill lane.
+    pub spilled: AtomicU64,
+    /// Exit decisions overridden by a blown deadline or a forced
+    /// admission ([`ShedPolicy::ForceEarlyExit`]).
+    pub forced_exits: AtomicU64,
+    /// Samples dropped by a degraded stage's drain (restart budget
+    /// exhausted; their submitters see a disconnected receiver).
+    pub failed: AtomicU64,
+    /// Supervised worker restarts across all stages.
+    pub restarts: AtomicU64,
+    /// Injected stall faults taken (see [`ServeFaultPlan::stalls`]).
+    pub worker_stalls: AtomicU64,
+    /// Samples admitted into some lane and not yet settled (the
+    /// admission watermarks' load signal).
+    pub inflight_total: AtomicU64,
+    /// Hysteresis latch: sheds from `high_watermark` until occupancy
+    /// falls back to `low_watermark`.
+    shedding: AtomicBool,
     estimator: Mutex<ReachEstimator>,
+}
+
+/// A plain-data copy of every counter, for equality assertions
+/// (`ServeFaultPlan::NONE` bit-identity) and reports. Live channel
+/// occupancy is excluded — it is only meaningfully comparable at
+/// quiescence, where it is zero.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatsSnapshot {
+    pub admitted: u64,
+    pub served: u64,
+    pub completions: Vec<u64>,
+    pub batches: u64,
+    pub errors: u64,
+    pub forwarded: Vec<u64>,
+    pub peak_inflight: Vec<u64>,
+    pub shed: u64,
+    pub spilled: u64,
+    pub forced_exits: u64,
+    pub failed: u64,
+    pub restarts: u64,
+    pub worker_stalls: u64,
+    pub estimated_reach: Vec<f64>,
+}
+
+fn ld(a: &AtomicU64) -> u64 {
+    a.load(Ordering::Relaxed)
 }
 
 impl ServerStats {
     fn new(n_sections: usize, estimator_window: usize) -> ServerStats {
         let n_exits = n_sections.saturating_sub(1);
         ServerStats {
+            admitted: AtomicU64::new(0),
             served: AtomicU64::new(0),
             completions: (0..n_sections).map(|_| AtomicU64::new(0)).collect(),
             batches: AtomicU64::new(0),
@@ -169,6 +483,14 @@ impl ServerStats {
             forwarded: (0..n_exits).map(|_| AtomicU64::new(0)).collect(),
             inflight: (0..n_exits).map(|_| AtomicU64::new(0)).collect(),
             peak_inflight: (0..n_exits).map(|_| AtomicU64::new(0)).collect(),
+            shed: AtomicU64::new(0),
+            spilled: AtomicU64::new(0),
+            forced_exits: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+            worker_stalls: AtomicU64::new(0),
+            inflight_total: AtomicU64::new(0),
+            shedding: AtomicBool::new(false),
             estimator: Mutex::new(ReachEstimator::windowed(n_exits, estimator_window)),
         }
     }
@@ -179,10 +501,13 @@ impl ServerStats {
             c.fetch_add(1, Ordering::Relaxed);
         }
         // Completion depth == section index (exits travelled past).
-        self.estimator
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
-            .observe(stage);
+        relock(&self.estimator).observe(stage);
+    }
+
+    /// One admitted sample left the system (response sent, engine
+    /// error, or degraded drain): release its admission slot.
+    fn settle(&self) {
+        self.inflight_total.fetch_sub(1, Ordering::Relaxed);
     }
 
     /// A sample crossed software Conditional Buffer `exit`. Returns the
@@ -212,28 +537,24 @@ impl ServerStats {
 
     /// Fraction of served samples that took *any* early exit.
     pub fn exit_rate(&self) -> f64 {
-        let served = self.served.load(Ordering::Relaxed);
+        let served = ld(&self.served);
         if served == 0 {
             return 0.0;
         }
-        let final_n = self
-            .completions
-            .last()
-            .map(|c| c.load(Ordering::Relaxed))
-            .unwrap_or(0);
+        let final_n = self.completions.last().map(ld).unwrap_or(0);
         (served - final_n) as f64 / served as f64
     }
 
     /// Per-section completion rates (exit 0, …, final).
     pub fn completion_rates(&self) -> Vec<f64> {
-        let served = self.served.load(Ordering::Relaxed);
+        let served = ld(&self.served);
         self.completions
             .iter()
             .map(|c| {
                 if served == 0 {
                     0.0
                 } else {
-                    c.load(Ordering::Relaxed) as f64 / served as f64
+                    ld(c) as f64 / served as f64
                 }
             })
             .collect()
@@ -243,12 +564,8 @@ impl ServerStats {
     /// completing past each exit — the runtime q the design's p is
     /// compared against.
     pub fn realized_reach(&self) -> Vec<f64> {
-        let served = self.served.load(Ordering::Relaxed);
-        let counts: Vec<u64> = self
-            .completions
-            .iter()
-            .map(|c| c.load(Ordering::Relaxed))
-            .collect();
+        let served = ld(&self.served);
+        let counts: Vec<u64> = self.completions.iter().map(ld).collect();
         (0..counts.len().saturating_sub(1))
             .map(|i| {
                 if served == 0 {
@@ -263,11 +580,7 @@ impl ServerStats {
     /// The streaming estimator's EWMA reach (recent traffic, not the
     /// whole history).
     pub fn estimated_reach(&self) -> Vec<f64> {
-        self.estimator
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
-            .reach()
-            .to_vec()
+        relock(&self.estimator).reach().to_vec()
     }
 
     /// Backpressure snapshot per software Conditional Buffer:
@@ -279,51 +592,192 @@ impl ServerStats {
             .map(|(i, p)| (i.load(Ordering::Relaxed), p.load(Ordering::Relaxed)))
             .collect()
     }
+
+    /// Copy every counter into plain data.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            admitted: ld(&self.admitted),
+            served: ld(&self.served),
+            completions: self.completions.iter().map(ld).collect(),
+            batches: ld(&self.batches),
+            errors: ld(&self.errors),
+            forwarded: self.forwarded.iter().map(ld).collect(),
+            peak_inflight: self.peak_inflight.iter().map(ld).collect(),
+            shed: ld(&self.shed),
+            spilled: ld(&self.spilled),
+            forced_exits: ld(&self.forced_exits),
+            failed: ld(&self.failed),
+            restarts: ld(&self.restarts),
+            worker_stalls: ld(&self.worker_stalls),
+            estimated_reach: self.estimated_reach(),
+        }
+    }
+
+    /// The conservation contract's two sides at this instant:
+    /// `(admitted, served + spilled + shed + errors + failed)`. Equal at
+    /// quiescence; `admitted` may lead while samples are in flight.
+    pub fn conservation(&self) -> (u64, u64) {
+        let s = self.snapshot();
+        (
+            s.admitted,
+            s.served + s.spilled + s.shed + s.errors + s.failed,
+        )
+    }
+
+    /// True when every admitted sample is accounted for (DESIGN.md §12).
+    pub fn conservation_ok(&self) -> bool {
+        let (admitted, settled) = self.conservation();
+        admitted == settled
+    }
+}
+
+// ---------------------------------------------------------------------
+// Supervision
+// ---------------------------------------------------------------------
+
+/// Human-readable panic payload (panics carry `&str` or `String`).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+/// Run a stage body under panic supervision (DESIGN.md §12's state
+/// machine). `body` is re-entered after every caught panic or error —
+/// it must rebuild its engine on entry and resume from the sample its
+/// caller parked in its slot. Returns `None` on a clean exit (input
+/// channel closed), or `Some((last_error, restarts_used))` once the
+/// restart budget is exhausted; the caller then records the
+/// [`DegradedReason`] and drains its queue.
+fn supervise_loop(
+    stage: usize,
+    budget: usize,
+    backoff: Duration,
+    stats: &ServerStats,
+    trace: &Option<ServerTrace>,
+    mut body: impl FnMut() -> anyhow::Result<()>,
+) -> Option<(String, u64)> {
+    let mut restarts: u64 = 0;
+    loop {
+        let message = match catch_unwind(AssertUnwindSafe(&mut body)) {
+            Ok(Ok(())) => return None,
+            Ok(Err(e)) => format!("{e}"),
+            Err(payload) => panic_message(payload.as_ref()),
+        };
+        if restarts >= budget as u64 {
+            return Some((message, restarts));
+        }
+        restarts += 1;
+        stats.restarts.fetch_add(1, Ordering::Relaxed);
+        if let Some(tr) = trace {
+            tr.emit(TraceEvent::WorkerRestarted {
+                stage: stage as u32,
+                t: tr.now(),
+                restarts,
+            });
+        }
+        // Exponential backoff: base, 2x, 4x, ... capped at 200ms so a
+        // crash-looping stage cannot stall its queue indefinitely.
+        let factor = 1u32 << (restarts - 1).min(5) as u32;
+        std::thread::sleep(
+            backoff
+                .saturating_mul(factor)
+                .min(Duration::from_millis(200)),
+        );
+    }
+}
+
+/// Account a sample dropped during a degraded drain: it never gets a
+/// response (the submitter's receiver disconnects instead of hanging).
+fn fail_sample(stats: &ServerStats) {
+    stats.failed.fetch_add(1, Ordering::Relaxed);
+    stats.settle();
 }
 
 type SharedPolicy = Arc<Mutex<Box<dyn ThresholdPolicy>>>;
 
 /// Decide an exit with the shared policy if one is installed, else trust
-/// the artifact's in-graph flag.
+/// the artifact's in-graph flag. `forced` (blown deadline or
+/// force-early-exit shedding) overrides the verdict while still feeding
+/// the observation to adaptive policies
+/// ([`ThresholdPolicy::decide_forced`]).
 fn decide_exit(
     policy: &Option<SharedPolicy>,
     exit: usize,
     in_graph: bool,
     probs: &[f32],
+    forced: bool,
 ) -> bool {
     match policy {
-        None => in_graph,
+        None => forced || in_graph,
         Some(p) => {
             let conf = probs.iter().copied().fold(0.0f32, f32::max) as f64;
-            p.lock()
-                .unwrap_or_else(|e| e.into_inner())
-                .decide(exit, conf)
+            let mut guard = relock(p);
+            if forced {
+                guard.decide_forced(exit, conf)
+            } else {
+                guard.decide(exit, conf)
+            }
         }
     }
+}
+
+/// Outcome of [`Server::try_submit`] under admission control.
+#[derive(Debug)]
+pub enum SubmitOutcome {
+    /// Admitted into a lane; await the response on the receiver.
+    Enqueued(mpsc::Receiver<Response>),
+    /// Rejected by [`ShedPolicy::Reject`]; no classification will
+    /// arrive for this id.
+    Shed { id: u64 },
 }
 
 /// Handle for submitting requests; dropping it shuts the server down.
 pub struct Server {
     tx: mpsc::Sender<Request>,
+    spill_tx: Option<mpsc::Sender<Request>>,
     next_id: AtomicU64,
     pub stats: Arc<ServerStats>,
     policy: Option<SharedPolicy>,
+    admission: Option<AdmissionConfig>,
+    trace: Option<ServerTrace>,
+    degraded: Arc<Mutex<Vec<DegradedReason>>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Start one worker thread per pipeline section (each compiles its
-    /// own executables on its own PJRT client) and return the submission
-    /// handle. Hard samples ride the channel chain downstream exactly as
-    /// they would cross the hardware's Conditional Buffers.
+    /// Start one worker thread per pipeline section against the
+    /// production PJRT engines (each compiles its own executables on
+    /// its own PJRT client) and return the submission handle. Hard
+    /// samples ride the channel chain downstream exactly as they would
+    /// cross the hardware's Conditional Buffers.
     pub fn start(cfg: ServerConfig) -> anyhow::Result<Server> {
+        let factory = Arc::new(PjrtEngineFactory {
+            artifacts_dir: cfg.artifacts_dir.clone(),
+            network: cfg.network.clone(),
+        });
+        Server::start_with_engine(cfg, factory)
+    }
+
+    /// [`Server::start`] with an explicit engine factory — the seam the
+    /// chaos tests use to serve deterministic synthetic engines
+    /// ([`SyntheticEngineFactory`]) without artifacts.
+    pub fn start_with_engine(
+        cfg: ServerConfig,
+        factory: Arc<dyn EngineFactory>,
+    ) -> anyhow::Result<Server> {
         // Fail fast on bad config before spawning threads, and learn the
         // pipeline depth.
-        let n_sections = {
-            let probe = ArtifactStore::open(&cfg.artifacts_dir)?;
-            probe.network(&cfg.network)?.n_sections()
-        };
+        let n_sections = factory.n_sections()?;
         anyhow::ensure!(n_sections >= 2, "serving needs at least one exit");
+        cfg.faults.validate()?;
+        if let Some(adm) = &cfg.admission {
+            adm.validate()?;
+        }
 
         // Install the host-side policy, if any; the operating point must
         // match the pipeline's exit count.
@@ -365,6 +819,7 @@ impl Server {
             rec: rec.clone(),
             epoch: Instant::now(),
         });
+        let degraded: Arc<Mutex<Vec<DegradedReason>>> = Arc::new(Mutex::new(Vec::new()));
         let (req_tx, req_rx) = mpsc::channel::<Request>();
 
         // One forwarding channel per Conditional Buffer: worker i sends
@@ -376,7 +831,6 @@ impl Server {
             hard_txs.push(tx);
             hard_rxs.push(rx);
         }
-        // Consumed back-to-front so each spawned worker takes its ends.
         let mut workers = Vec::new();
 
         // ---- stage-0 worker: dynamic batcher + router ----
@@ -385,34 +839,102 @@ impl Server {
             let cfg = cfg.clone();
             let policy = policy.clone();
             let trace = trace.clone();
+            let factory = factory.clone();
+            let degraded = degraded.clone();
             let downstream = hard_txs[0].clone();
             workers.push(
                 std::thread::Builder::new()
                     .name("atheena-stage1".into())
                     .spawn(move || {
-                        let store = ArtifactStore::open(&cfg.artifacts_dir)
-                            .expect("stage1 worker: artifacts");
-                        let exec = store.exit_stage(&cfg.network, 0).expect("stage1 compile");
+                        let plan = &cfg.faults;
                         let batcher =
                             DynamicBatcher::new(req_rx, cfg.max_batch, cfg.batch_timeout);
-                        // `None` from the batcher means every submitter
-                        // is gone: shutdown.
-                        while let Some(batch) = batcher.next_batch() {
-                            stats.batches.fetch_add(1, Ordering::Relaxed);
-                            for req in batch {
-                                if let Some(tr) = &trace {
-                                    tr.emit(TraceEvent::SampleAdmitted {
-                                        sample: req.id,
-                                        t: tr.now(),
-                                    });
+                        // Supervisor-owned state: survives restarts so no
+                        // sample is lost when the body panics. `slot`
+                        // parks the sample being processed; `processed`
+                        // keys the fault schedule (monotone across
+                        // restarts, so each scheduled fault fires once).
+                        let mut pending: VecDeque<Request> = VecDeque::new();
+                        let mut slot: Option<Request> = None;
+                        let mut processed: u64 = 0;
+                        let mut jitter_rng = Rng::new(jitter_seed(plan.seed, 0));
+                        let mut body = || -> anyhow::Result<()> {
+                            let mut engine = factory.exit_engine(0)?;
+                            loop {
+                                if slot.is_none() {
+                                    // Refill from the local queue, then
+                                    // the batcher. `None` from the
+                                    // batcher means every submitter is
+                                    // gone: shutdown.
+                                    match pending.pop_front() {
+                                        Some(r) => slot = Some(r),
+                                        None => match batcher.next_batch() {
+                                            Some(batch) => {
+                                                stats.batches.fetch_add(1, Ordering::Relaxed);
+                                                pending.extend(batch);
+                                                continue;
+                                            }
+                                            None => return Ok(()),
+                                        },
+                                    }
                                 }
-                                match exec.run(&req.image) {
+                                let k = processed;
+                                processed += 1;
+                                if let Some(ms) = plan.stall_at(0, k) {
+                                    stats.worker_stalls.fetch_add(1, Ordering::Relaxed);
+                                    if let Some(tr) = &trace {
+                                        tr.emit(TraceEvent::WorkerStalled {
+                                            stage: 0,
+                                            t: tr.now(),
+                                            millis: ms,
+                                        });
+                                    }
+                                    std::thread::sleep(Duration::from_millis(ms));
+                                }
+                                if plan.crashes_at(0, k) {
+                                    panic!("injected fault: stage 1 crash at sample #{k}");
+                                }
+                                // Borrow the sample out of the slot for
+                                // the run: a panic inside the engine
+                                // leaves it parked for the restart.
+                                let ran = {
+                                    let req = slot.as_ref().expect("in-flight sample");
+                                    if let Some(tr) = &trace {
+                                        tr.emit(TraceEvent::SampleAdmitted {
+                                            sample: req.id,
+                                            t: tr.now(),
+                                        });
+                                    }
+                                    engine.run(&req.image)
+                                };
+                                match ran {
                                     Ok(out) => {
+                                        let req = slot.take().expect("in-flight sample");
+                                        if plan.decision_jitter_us > 0 {
+                                            let us = jitter_rng
+                                                .below(plan.decision_jitter_us as usize + 1);
+                                            std::thread::sleep(Duration::from_micros(us as u64));
+                                        }
+                                        let forced = req.forced
+                                            || req
+                                                .deadline
+                                                .is_some_and(|d| Instant::now() >= d);
+                                        if forced {
+                                            stats.forced_exits.fetch_add(1, Ordering::Relaxed);
+                                            if let Some(tr) = &trace {
+                                                tr.emit(TraceEvent::DeadlineForcedExit {
+                                                    sample: req.id,
+                                                    stage: 0,
+                                                    t: tr.now(),
+                                                });
+                                            }
+                                        }
                                         if decide_exit(
                                             &policy,
                                             0,
                                             out.take_exit,
                                             &out.exit_probs,
+                                            forced,
                                         ) {
                                             stats.record(0);
                                             if let Some(tr) = &trace {
@@ -428,7 +950,9 @@ impl Server {
                                                 exited_early: true,
                                                 exit_stage: 0,
                                                 latency: req.submitted.elapsed(),
+                                                spilled: false,
                                             });
+                                            stats.settle();
                                         } else {
                                             // Route hard sample downstream.
                                             let occ = stats.forward(0);
@@ -443,13 +967,45 @@ impl Server {
                                                 id: req.id,
                                                 features: out.features,
                                                 submitted: req.submitted,
+                                                deadline: req.deadline,
                                                 resp: req.resp,
                                             });
                                         }
                                     }
                                     Err(_) => {
+                                        slot = None;
                                         stats.errors.fetch_add(1, Ordering::Relaxed);
+                                        stats.settle();
                                     }
+                                }
+                            }
+                        };
+                        let outcome = supervise_loop(
+                            0,
+                            cfg.restart_budget,
+                            cfg.restart_backoff,
+                            &stats,
+                            &trace,
+                            &mut body,
+                        );
+                        if let Some((message, restarts)) = outcome {
+                            relock(&degraded).push(DegradedReason {
+                                stage: 0,
+                                restarts,
+                                message,
+                            });
+                            // Graceful degraded drain: fail everything
+                            // queued (and everything still arriving)
+                            // until the intake closes.
+                            if slot.take().is_some() {
+                                fail_sample(&stats);
+                            }
+                            while pending.pop_front().is_some() {
+                                fail_sample(&stats);
+                            }
+                            while let Some(batch) = batcher.next_batch() {
+                                for _req in batch {
+                                    fail_sample(&stats);
                                 }
                             }
                         }
@@ -465,71 +1021,154 @@ impl Server {
             let cfg = cfg.clone();
             let policy = policy.clone();
             let trace = trace.clone();
+            let factory = factory.clone();
+            let degraded = degraded.clone();
             let rx = rx_iter.next().expect("one rx per buffer");
             let downstream = hard_txs[sec].clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("atheena-stage{}", sec + 1))
                     .spawn(move || {
-                        let store = ArtifactStore::open(&cfg.artifacts_dir)
-                            .unwrap_or_else(|e| panic!("stage{} worker: {e}", sec + 1));
-                        let exec = store
-                            .exit_stage(&cfg.network, sec)
-                            .unwrap_or_else(|e| panic!("stage{} compile: {e}", sec + 1));
-                        while let Ok(h) = rx.recv() {
-                            let occ = stats.drain(sec - 1);
-                            if let Some(tr) = &trace {
-                                tr.emit(TraceEvent::BufferOccupancy {
-                                    buffer: (sec - 1) as u32,
-                                    t: tr.now(),
-                                    occupancy: occ as u32,
-                                });
-                            }
-                            match exec.run(&h.features) {
-                                Ok(out) => {
-                                    if decide_exit(
-                                        &policy,
-                                        sec,
-                                        out.take_exit,
-                                        &out.exit_probs,
-                                    ) {
-                                        stats.record(sec);
-                                        if let Some(tr) = &trace {
-                                            tr.emit(TraceEvent::ExitTaken {
-                                                sample: h.id,
-                                                stage: sec as u32,
-                                                t: tr.now(),
-                                            });
+                        let plan = &cfg.faults;
+                        let mut slot: Option<HardSample> = None;
+                        let mut processed: u64 = 0;
+                        let mut jitter_rng = Rng::new(jitter_seed(plan.seed, sec));
+                        let mut body = || -> anyhow::Result<()> {
+                            let mut engine = factory.exit_engine(sec)?;
+                            loop {
+                                if slot.is_none() {
+                                    match rx.recv() {
+                                        Ok(h) => {
+                                            let occ = stats.drain(sec - 1);
+                                            if let Some(tr) = &trace {
+                                                tr.emit(TraceEvent::BufferOccupancy {
+                                                    buffer: (sec - 1) as u32,
+                                                    t: tr.now(),
+                                                    occupancy: occ as u32,
+                                                });
+                                            }
+                                            slot = Some(h);
                                         }
-                                        let _ = h.resp.send(Response {
-                                            id: h.id,
-                                            pred: argmax(&out.exit_probs),
-                                            exited_early: true,
-                                            exit_stage: sec,
-                                            latency: h.submitted.elapsed(),
-                                        });
-                                    } else {
-                                        let occ = stats.forward(sec);
-                                        if let Some(tr) = &trace {
-                                            tr.emit(TraceEvent::BufferOccupancy {
-                                                buffer: sec as u32,
-                                                t: tr.now(),
-                                                occupancy: occ as u32,
-                                            });
-                                        }
-                                        let _ = downstream.send(HardSample {
-                                            id: h.id,
-                                            features: out.features,
-                                            submitted: h.submitted,
-                                            resp: h.resp,
-                                        });
+                                        Err(_) => return Ok(()),
                                     }
                                 }
-                                Err(_) => {
-                                    stats.errors.fetch_add(1, Ordering::Relaxed);
+                                let k = processed;
+                                processed += 1;
+                                if let Some(ms) = plan.stall_at(sec, k) {
+                                    stats.worker_stalls.fetch_add(1, Ordering::Relaxed);
+                                    if let Some(tr) = &trace {
+                                        tr.emit(TraceEvent::WorkerStalled {
+                                            stage: sec as u32,
+                                            t: tr.now(),
+                                            millis: ms,
+                                        });
+                                    }
+                                    std::thread::sleep(Duration::from_millis(ms));
+                                }
+                                if plan.crashes_at(sec, k) {
+                                    panic!(
+                                        "injected fault: stage {} crash at sample #{k}",
+                                        sec + 1
+                                    );
+                                }
+                                let ran = {
+                                    let h = slot.as_ref().expect("in-flight sample");
+                                    engine.run(&h.features)
+                                };
+                                match ran {
+                                    Ok(out) => {
+                                        let h = slot.take().expect("in-flight sample");
+                                        if plan.decision_jitter_us > 0 {
+                                            let us = jitter_rng
+                                                .below(plan.decision_jitter_us as usize + 1);
+                                            std::thread::sleep(Duration::from_micros(us as u64));
+                                        }
+                                        let forced = h
+                                            .deadline
+                                            .is_some_and(|d| Instant::now() >= d);
+                                        if forced {
+                                            stats.forced_exits.fetch_add(1, Ordering::Relaxed);
+                                            if let Some(tr) = &trace {
+                                                tr.emit(TraceEvent::DeadlineForcedExit {
+                                                    sample: h.id,
+                                                    stage: sec as u32,
+                                                    t: tr.now(),
+                                                });
+                                            }
+                                        }
+                                        if decide_exit(
+                                            &policy,
+                                            sec,
+                                            out.take_exit,
+                                            &out.exit_probs,
+                                            forced,
+                                        ) {
+                                            stats.record(sec);
+                                            if let Some(tr) = &trace {
+                                                tr.emit(TraceEvent::ExitTaken {
+                                                    sample: h.id,
+                                                    stage: sec as u32,
+                                                    t: tr.now(),
+                                                });
+                                            }
+                                            let _ = h.resp.send(Response {
+                                                id: h.id,
+                                                pred: argmax(&out.exit_probs),
+                                                exited_early: true,
+                                                exit_stage: sec,
+                                                latency: h.submitted.elapsed(),
+                                                spilled: false,
+                                            });
+                                            stats.settle();
+                                        } else {
+                                            let occ = stats.forward(sec);
+                                            if let Some(tr) = &trace {
+                                                tr.emit(TraceEvent::BufferOccupancy {
+                                                    buffer: sec as u32,
+                                                    t: tr.now(),
+                                                    occupancy: occ as u32,
+                                                });
+                                            }
+                                            let _ = downstream.send(HardSample {
+                                                id: h.id,
+                                                features: out.features,
+                                                submitted: h.submitted,
+                                                deadline: h.deadline,
+                                                resp: h.resp,
+                                            });
+                                        }
+                                    }
+                                    Err(_) => {
+                                        slot = None;
+                                        stats.errors.fetch_add(1, Ordering::Relaxed);
+                                        stats.settle();
+                                    }
                                 }
                             }
+                        };
+                        let outcome = supervise_loop(
+                            sec,
+                            cfg.restart_budget,
+                            cfg.restart_backoff,
+                            &stats,
+                            &trace,
+                            &mut body,
+                        );
+                        if let Some((message, restarts)) = outcome {
+                            relock(&degraded).push(DegradedReason {
+                                stage: sec,
+                                restarts,
+                                message,
+                            });
+                            if slot.take().is_some() {
+                                fail_sample(&stats);
+                            }
+                            while rx.recv().is_ok() {
+                                stats.drain(sec - 1);
+                                fail_sample(&stats);
+                            }
                         }
+                        drop(downstream);
                     })?,
             );
         }
@@ -539,45 +1178,107 @@ impl Server {
             let stats = stats.clone();
             let cfg = cfg.clone();
             let trace = trace.clone();
+            let factory = factory.clone();
+            let degraded = degraded.clone();
             let rx = rx_iter.next().expect("final rx");
             let final_stage = n_sections - 1;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("atheena-stage{n_sections}"))
                     .spawn(move || {
-                        let store = ArtifactStore::open(&cfg.artifacts_dir)
-                            .expect("final worker: artifacts");
-                        let exec = store.final_stage(&cfg.network).expect("final compile");
-                        while let Ok(h) = rx.recv() {
-                            let occ = stats.drain(final_stage - 1);
-                            if let Some(tr) = &trace {
-                                tr.emit(TraceEvent::BufferOccupancy {
-                                    buffer: (final_stage - 1) as u32,
-                                    t: tr.now(),
-                                    occupancy: occ as u32,
-                                });
-                            }
-                            match exec.run(&h.features) {
-                                Ok(probs) => {
-                                    stats.record(final_stage);
+                        let plan = &cfg.faults;
+                        let mut slot: Option<HardSample> = None;
+                        let mut processed: u64 = 0;
+                        let mut body = || -> anyhow::Result<()> {
+                            let mut engine = factory.final_engine()?;
+                            loop {
+                                if slot.is_none() {
+                                    match rx.recv() {
+                                        Ok(h) => {
+                                            let occ = stats.drain(final_stage - 1);
+                                            if let Some(tr) = &trace {
+                                                tr.emit(TraceEvent::BufferOccupancy {
+                                                    buffer: (final_stage - 1) as u32,
+                                                    t: tr.now(),
+                                                    occupancy: occ as u32,
+                                                });
+                                            }
+                                            slot = Some(h);
+                                        }
+                                        Err(_) => return Ok(()),
+                                    }
+                                }
+                                let k = processed;
+                                processed += 1;
+                                if let Some(ms) = plan.stall_at(final_stage, k) {
+                                    stats.worker_stalls.fetch_add(1, Ordering::Relaxed);
                                     if let Some(tr) = &trace {
-                                        tr.emit(TraceEvent::ExitTaken {
-                                            sample: h.id,
+                                        tr.emit(TraceEvent::WorkerStalled {
                                             stage: final_stage as u32,
                                             t: tr.now(),
+                                            millis: ms,
                                         });
                                     }
-                                    let _ = h.resp.send(Response {
-                                        id: h.id,
-                                        pred: argmax(&probs),
-                                        exited_early: false,
-                                        exit_stage: final_stage,
-                                        latency: h.submitted.elapsed(),
-                                    });
+                                    std::thread::sleep(Duration::from_millis(ms));
                                 }
-                                Err(_) => {
-                                    stats.errors.fetch_add(1, Ordering::Relaxed);
+                                if plan.crashes_at(final_stage, k) {
+                                    panic!(
+                                        "injected fault: stage {n_sections} crash at sample #{k}"
+                                    );
                                 }
+                                let ran = {
+                                    let h = slot.as_ref().expect("in-flight sample");
+                                    engine.run(&h.features)
+                                };
+                                match ran {
+                                    Ok(probs) => {
+                                        let h = slot.take().expect("in-flight sample");
+                                        stats.record(final_stage);
+                                        if let Some(tr) = &trace {
+                                            tr.emit(TraceEvent::ExitTaken {
+                                                sample: h.id,
+                                                stage: final_stage as u32,
+                                                t: tr.now(),
+                                            });
+                                        }
+                                        let _ = h.resp.send(Response {
+                                            id: h.id,
+                                            pred: argmax(&probs),
+                                            exited_early: false,
+                                            exit_stage: final_stage,
+                                            latency: h.submitted.elapsed(),
+                                            spilled: false,
+                                        });
+                                        stats.settle();
+                                    }
+                                    Err(_) => {
+                                        slot = None;
+                                        stats.errors.fetch_add(1, Ordering::Relaxed);
+                                        stats.settle();
+                                    }
+                                }
+                            }
+                        };
+                        let outcome = supervise_loop(
+                            final_stage,
+                            cfg.restart_budget,
+                            cfg.restart_backoff,
+                            &stats,
+                            &trace,
+                            &mut body,
+                        );
+                        if let Some((message, restarts)) = outcome {
+                            relock(&degraded).push(DegradedReason {
+                                stage: final_stage,
+                                restarts,
+                                message,
+                            });
+                            if slot.take().is_some() {
+                                fail_sample(&stats);
+                            }
+                            while rx.recv().is_ok() {
+                                stats.drain(final_stage - 1);
+                                fail_sample(&stats);
                             }
                         }
                     })?,
@@ -587,52 +1288,239 @@ impl Server {
         // channel closes exactly when its upstream worker exits.
         drop(hard_txs);
 
+        // ---- baseline spill worker (only under SpillToBaseline) ----
+        let spill_tx = if matches!(
+            cfg.admission.map(|a| a.shed),
+            Some(ShedPolicy::SpillToBaseline)
+        ) {
+            let (stx, srx) = mpsc::channel::<Request>();
+            let stats = stats.clone();
+            let cfg_w = cfg.clone();
+            let trace_w = trace.clone();
+            let factory = factory.clone();
+            let degraded = degraded.clone();
+            let final_stage = n_sections - 1;
+            // Pseudo stage index for supervision events: one past the
+            // pipeline (the overflow lane is not a pipeline section).
+            let spill_stage = n_sections;
+            workers.push(
+                std::thread::Builder::new()
+                    .name("atheena-spill".into())
+                    .spawn(move || {
+                        let mut slot: Option<Request> = None;
+                        let mut body = || -> anyhow::Result<()> {
+                            let mut engine = factory.baseline_engine()?;
+                            loop {
+                                if slot.is_none() {
+                                    match srx.recv() {
+                                        Ok(r) => slot = Some(r),
+                                        Err(_) => return Ok(()),
+                                    }
+                                }
+                                let ran = {
+                                    let req = slot.as_ref().expect("in-flight sample");
+                                    engine.run(&req.image)
+                                };
+                                match ran {
+                                    Ok(probs) => {
+                                        let req = slot.take().expect("in-flight sample");
+                                        stats.spilled.fetch_add(1, Ordering::Relaxed);
+                                        let _ = req.resp.send(Response {
+                                            id: req.id,
+                                            pred: argmax(&probs),
+                                            exited_early: false,
+                                            exit_stage: final_stage,
+                                            latency: req.submitted.elapsed(),
+                                            spilled: true,
+                                        });
+                                        stats.settle();
+                                    }
+                                    Err(_) => {
+                                        slot = None;
+                                        stats.errors.fetch_add(1, Ordering::Relaxed);
+                                        stats.settle();
+                                    }
+                                }
+                            }
+                        };
+                        let outcome = supervise_loop(
+                            spill_stage,
+                            cfg_w.restart_budget,
+                            cfg_w.restart_backoff,
+                            &stats,
+                            &trace_w,
+                            &mut body,
+                        );
+                        if let Some((message, restarts)) = outcome {
+                            relock(&degraded).push(DegradedReason {
+                                stage: spill_stage,
+                                restarts,
+                                message,
+                            });
+                            if slot.take().is_some() {
+                                fail_sample(&stats);
+                            }
+                            while srx.recv().is_ok() {
+                                fail_sample(&stats);
+                            }
+                        }
+                    })?,
+            );
+            Some(stx)
+        } else {
+            None
+        };
+
         Ok(Server {
             tx: req_tx,
+            spill_tx,
             next_id: AtomicU64::new(0),
             stats,
             policy,
+            admission: cfg.admission,
+            trace,
+            degraded,
             workers,
         })
     }
 
-    /// Submit one image; returns the receiver for its response.
-    pub fn submit(&self, image: Vec<f32>) -> mpsc::Receiver<Response> {
+    fn enqueue(
+        &self,
+        id: u64,
+        image: Vec<f32>,
+        deadline: Option<Instant>,
+        forced: bool,
+    ) -> mpsc::Receiver<Response> {
         let (tx, rx) = mpsc::channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.stats.inflight_total.fetch_add(1, Ordering::Relaxed);
         let _ = self.tx.send(Request {
             id,
             image,
             submitted: Instant::now(),
+            deadline,
+            forced,
             resp: tx,
         });
         rx
     }
 
+    fn deadline_from_now(&self) -> Option<Instant> {
+        self.admission
+            .and_then(|a| a.deadline)
+            .map(|d| Instant::now() + d)
+    }
+
+    /// Submit one image unconditionally (no shedding; the configured
+    /// deadline, if any, still applies); returns the receiver for its
+    /// response.
+    pub fn submit(&self, image: Vec<f32>) -> mpsc::Receiver<Response> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.stats.admitted.fetch_add(1, Ordering::Relaxed);
+        self.enqueue(id, image, self.deadline_from_now(), false)
+    }
+
+    /// Submit under admission control. With no [`AdmissionConfig`] this
+    /// is [`Server::submit`]. With one, total in-flight occupancy is
+    /// compared against the watermarks (shed from `high_watermark`,
+    /// recover at `low_watermark`) and overload is handled per the
+    /// configured [`ShedPolicy`]: reject the sample, admit it with a
+    /// forced first exit, or route it to the baseline spill lane.
+    pub fn try_submit(&self, image: Vec<f32>) -> SubmitOutcome {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.stats.admitted.fetch_add(1, Ordering::Relaxed);
+        let Some(adm) = self.admission else {
+            return SubmitOutcome::Enqueued(self.enqueue(id, image, None, false));
+        };
+        let occ = self.stats.inflight_total.load(Ordering::Relaxed);
+        let shedding = if self.stats.shedding.load(Ordering::Relaxed) {
+            if occ <= adm.low_watermark {
+                self.stats.shedding.store(false, Ordering::Relaxed);
+                false
+            } else {
+                true
+            }
+        } else if occ >= adm.high_watermark {
+            self.stats.shedding.store(true, Ordering::Relaxed);
+            true
+        } else {
+            false
+        };
+        let deadline = adm.deadline.map(|d| Instant::now() + d);
+        if !shedding {
+            return SubmitOutcome::Enqueued(self.enqueue(id, image, deadline, false));
+        }
+        match adm.shed {
+            ShedPolicy::Reject => {
+                self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                if let Some(tr) = &self.trace {
+                    tr.emit(TraceEvent::SampleShed { sample: id, t: tr.now() });
+                }
+                SubmitOutcome::Shed { id }
+            }
+            ShedPolicy::ForceEarlyExit => {
+                SubmitOutcome::Enqueued(self.enqueue(id, image, deadline, true))
+            }
+            ShedPolicy::SpillToBaseline => match &self.spill_tx {
+                Some(spill) => {
+                    if let Some(tr) = &self.trace {
+                        tr.emit(TraceEvent::SampleShed { sample: id, t: tr.now() });
+                    }
+                    let (tx, rx) = mpsc::channel();
+                    self.stats.inflight_total.fetch_add(1, Ordering::Relaxed);
+                    let _ = spill.send(Request {
+                        id,
+                        image,
+                        submitted: Instant::now(),
+                        deadline,
+                        forced: false,
+                        resp: tx,
+                    });
+                    SubmitOutcome::Enqueued(rx)
+                }
+                // Unreachable in practice (the spill worker is spawned
+                // whenever the policy is SpillToBaseline); degrade to a
+                // normal admission rather than dropping the sample.
+                None => SubmitOutcome::Enqueued(self.enqueue(id, image, deadline, false)),
+            },
+        }
+    }
+
     /// Snapshot of the live operating point, when a host-side policy is
     /// installed (`None` under [`ServePolicy::Artifact`]).
     pub fn operating_point(&self) -> Option<OperatingPoint> {
-        self.policy.as_ref().map(|p| {
-            p.lock()
-                .unwrap_or_else(|e| e.into_inner())
-                .operating_point()
-                .clone()
-        })
+        self.policy
+            .as_ref()
+            .map(|p| relock(p).operating_point().clone())
     }
 
     /// Threshold retunes the policy has performed so far.
     pub fn retunes(&self) -> u64 {
-        self.policy
-            .as_ref()
-            .map(|p| p.lock().unwrap_or_else(|e| e.into_inner()).retunes())
-            .unwrap_or(0)
+        self.policy.as_ref().map(|p| relock(p).retunes()).unwrap_or(0)
     }
 
-    /// Shut down: close the intake and join the workers.
-    pub fn shutdown(self) {
+    /// Stages that have exhausted their restart budget so far (empty on
+    /// a healthy server). [`Server::shutdown`] returns the final list.
+    pub fn degraded(&self) -> Vec<DegradedReason> {
+        relock(&self.degraded).clone()
+    }
+
+    /// Shut down: close the intake, join the workers, and report the
+    /// supervision outcome (total restarts + any degraded stages).
+    pub fn shutdown(self) -> ShutdownReport {
         drop(self.tx);
+        drop(self.spill_tx);
         for w in self.workers {
             let _ = w.join();
         }
+        ShutdownReport {
+            restarts: ld(&self.stats.restarts),
+            degraded: relock(&self.degraded).clone(),
+        }
     }
+}
+
+/// Per-stage decision-jitter stream: decorrelate stages while keeping
+/// the whole schedule a pure function of the plan seed.
+fn jitter_seed(seed: u64, stage: usize) -> u64 {
+    seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(stage as u64 + 1)
 }

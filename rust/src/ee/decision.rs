@@ -176,6 +176,18 @@ pub trait ThresholdPolicy: Send {
     fn retunes(&self) -> u64 {
         0
     }
+
+    /// Degradation override hook (DESIGN.md §12): record the
+    /// observation exactly as [`ThresholdPolicy::decide`] would — so an
+    /// adaptive policy's confidence windows stay faithful to the
+    /// traffic — but force the exit to be taken regardless of the
+    /// verdict. The serving layer calls this for samples past their
+    /// deadline and for admissions shed via
+    /// `ShedPolicy::ForceEarlyExit`.
+    fn decide_forced(&mut self, exit: usize, confidence: f64) -> bool {
+        let _ = self.decide(exit, confidence);
+        true
+    }
 }
 
 /// Fixed thresholds: apply the operating point verbatim. With a uniform

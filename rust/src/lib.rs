@@ -144,6 +144,25 @@
 //! (per-exit latency distributions, per-buffer stall totals,
 //! controller reconvergence time).
 //!
+//! Serving is **degradation-aware** (DESIGN.md §12): a seeded
+//! `coordinator::ServeFaultPlan` schedules deterministic worker
+//! crashes, stalls, decision jitter, and input bursts against either
+//! the real threaded server or the closed-loop harness
+//! (`sim::simulate_closed_loop_chaos`) — one fault schedule, both
+//! substrates. Stage workers run under a supervisor
+//! (`catch_unwind` + bounded restarts with exponential backoff) that
+//! preserves the in-flight sample across respawns and, on budget
+//! exhaustion, drains the stage gracefully into a structured
+//! `coordinator::ShutdownReport`. Admission control
+//! (`coordinator::AdmissionConfig`) adds per-sample deadlines and
+//! high/low inflight watermarks with a `coordinator::ShedPolicy` —
+//! reject, force the next exit (`ThresholdPolicy::decide_forced`), or
+//! spill to a dedicated baseline worker — under the conservation law
+//! `admitted == served + spilled + shed + errors + failed`, checked by
+//! `ServerStats::conservation` and property-tested in
+//! `tests/server_props.rs` with the deterministic
+//! `coordinator::SyntheticEngineFactory`.
+//!
 //! See `DESIGN.md` for the architecture, the pipeline-stage contracts,
 //! and the substitution rationale, and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.

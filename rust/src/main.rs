@@ -8,6 +8,8 @@
 //!   profile  --network NAME [--samples N]
 //!   infer    --network NAME [--batch N] [--q FRAC]
 //!   serve    --network NAME [--requests N] [--trace-out FILE]
+//!            [--faults plan.json] [--deadline-us N] [--shed POLICY]
+//!            [--watermark N] [--synthetic]
 //!   trace    [--network NAME | --testnet three_exit] [--out FILE]
 //!   trace    diff A.json B.json
 //!
@@ -36,7 +38,10 @@ use std::sync::{Arc, Mutex};
 use atheena::coordinator::batch::{BatchHost, PjrtOracle};
 use atheena::coordinator::pipeline::{Realized, Toolflow};
 use atheena::coordinator::toolflow::ToolflowOptions;
-use atheena::coordinator::{ServePolicy, Server, ServerConfig};
+use atheena::coordinator::{
+    AdmissionConfig, ServeFaultPlan, ServePolicy, Server, ServerConfig, ShedPolicy,
+    SubmitOutcome, SyntheticEngineFactory,
+};
 use atheena::ee::decision::{Controller, Fixed, ThresholdPolicy};
 use atheena::ee::{OperatingPoint, Profiler};
 use atheena::report::tables::render_trace_summary;
@@ -137,6 +142,8 @@ fn usage() -> ! {
          \n  profile  --network NAME [--samples N]\
          \n  infer    --network NAME [--batch N] [--q FRAC]\
          \n  serve    --network NAME [--requests N] [--controller] [--window N] [--trace-out FILE]\
+         \n           [--faults plan.json] [--deadline-us N] [--shed reject|force-exit|spill]\
+         \n           [--watermark N] [--synthetic]  (DESIGN.md §12: chaos + admission control)\
          \n  trace    [--network NAME | --testnet three_exit] [--samples N] [--window N]\
          \n           [--drift none|step|ramp|periodic] [--controller] [--capacity N] [--out FILE]\
          \n  trace    diff A.json B.json   (first diverging event; exit 1 on divergence)\
@@ -548,39 +555,110 @@ fn resolve_serve_design(args: &Args, name: &str) -> anyhow::Result<(Realized, bo
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    let name = args
-        .get("network")
-        .ok_or_else(|| anyhow::anyhow!("--network required"))?;
+    // `--synthetic`: serve from the deterministic in-process engine
+    // (no PJRT artifacts needed) — the chaos/degradation demo path.
+    let synthetic = args.has("synthetic");
+    let name = match args.get("network") {
+        Some(n) => n.to_string(),
+        None if synthetic => "synthetic".to_string(),
+        None => anyhow::bail!("--network required (or --synthetic)"),
+    };
+    let name = name.as_str();
     let n: usize = args.get_or("requests", "256").parse()?;
-    let ts = atheena::data::TestSet::load(&args.artifacts(), name)?;
+    let ts = if synthetic {
+        None
+    } else {
+        Some(atheena::data::TestSet::load(&args.artifacts(), name)?)
+    };
     // Best-effort: serving runs from the compiled artifacts alone; the
     // network JSON is only needed for the controller policy and the
     // reach telemetry.
-    let net = atheena::ir::Network::from_file(
-        &args.artifacts().join("networks").join(format!("{name}.json")),
-    )
-    .ok();
+    let net = if synthetic {
+        None
+    } else {
+        atheena::ir::Network::from_file(
+            &args.artifacts().join("networks").join(format!("{name}.json")),
+        )
+        .ok()
+    };
 
     // Resolve the board design this deployment corresponds to via the
     // design cache (pipeline runs once on a cold store; a warm store
     // serves with zero anneal calls). Best-effort: a design problem
     // must never keep the serving path down.
-    match resolve_serve_design(args, name) {
-        Ok((realized, cached)) => {
-            if let Some(best) = realized.best_design() {
-                println!(
-                    "board design ({}): budget {:.0}%, predicted {:.0} samples/s at design reach, buffer depths {:?}",
-                    if cached { "cached" } else { "realized fresh, now cached" },
-                    best.budget_fraction * 100.0,
-                    best.combined.throughput_at_design,
-                    best.cond_buffer_depths
-                );
+    if !synthetic {
+        match resolve_serve_design(args, name) {
+            Ok((realized, cached)) => {
+                if let Some(best) = realized.best_design() {
+                    println!(
+                        "board design ({}): budget {:.0}%, predicted {:.0} samples/s at design reach, buffer depths {:?}",
+                        if cached { "cached" } else { "realized fresh, now cached" },
+                        best.budget_fraction * 100.0,
+                        best.combined.throughput_at_design,
+                        best.cond_buffer_depths
+                    );
+                }
             }
+            Err(e) => eprintln!("warning: no board design available ({e}); serving anyway"),
         }
-        Err(e) => eprintln!("warning: no board design available ({e}); serving anyway"),
     }
 
     let mut server_cfg = ServerConfig::new(args.artifacts(), name);
+
+    // Degradation-aware serving (DESIGN.md §12): a seeded fault plan
+    // plus deadline/watermark admission control with a shed policy.
+    let plan = match args.get("faults") {
+        Some(f) => ServeFaultPlan::from_file(std::path::Path::new(f))?,
+        None => ServeFaultPlan::NONE,
+    };
+    if !plan.is_none() {
+        println!(
+            "fault plan: {} crashes, {} stalls, {} bursts, jitter {}us (seed {:#x})",
+            plan.crash_count(),
+            plan.stalls.len(),
+            plan.bursts.len(),
+            plan.decision_jitter_us,
+            plan.seed
+        );
+    }
+    let shed = args.get("shed").map(ShedPolicy::parse).transpose()?;
+    let deadline_us: Option<u64> = args
+        .get("deadline-us")
+        .map(|v| v.parse())
+        .transpose()
+        .map_err(|e| anyhow::anyhow!("--deadline-us: {e}"))?;
+    let watermark: Option<u64> = args
+        .get("watermark")
+        .map(|v| v.parse())
+        .transpose()
+        .map_err(|e| anyhow::anyhow!("--watermark: {e}"))?;
+    let admission = if shed.is_some() || deadline_us.is_some() || watermark.is_some() {
+        let shed = shed.unwrap_or(ShedPolicy::ForceEarlyExit);
+        let mut adm = match watermark {
+            Some(w) => AdmissionConfig::watermarks(w, shed),
+            None => AdmissionConfig {
+                deadline: None,
+                shed,
+                high_watermark: u64::MAX,
+                low_watermark: u64::MAX,
+            },
+        };
+        if let Some(us) = deadline_us {
+            adm.deadline = Some(std::time::Duration::from_micros(us));
+        }
+        println!(
+            "admission control: deadline {:?}, shed {:?}, watermarks {}/{}",
+            adm.deadline, adm.shed, adm.high_watermark, adm.low_watermark
+        );
+        Some(adm)
+    } else {
+        None
+    };
+    let submit_plan = plan.clone();
+    server_cfg = server_cfg.with_faults(plan);
+    if let Some(adm) = admission {
+        server_cfg = server_cfg.with_admission(adm);
+    }
     // `--trace-out FILE`: record admission / per-stage exit / buffer
     // watermark events and export them as a Perfetto trace (timestamps
     // are µs since server start, so the exporter clock is 1 MHz).
@@ -606,35 +684,99 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             net.reach_profile
         );
     }
-    let server = Server::start(server_cfg)?;
+    let use_admission = server_cfg.admission.is_some();
+    let server = if synthetic {
+        let sections: usize = args.get_or("sections", "3").parse()?;
+        Server::start_with_engine(server_cfg, Arc::new(SyntheticEngineFactory::new(sections)))?
+    } else {
+        Server::start(server_cfg)?
+    };
 
     let start = std::time::Instant::now();
     let mut rng = Rng::new(0x5E7E);
-    let mut rxs = Vec::with_capacity(n);
-    let mut labels = Vec::with_capacity(n);
+    let mut rxs = Vec::new();
+    let mut labels = Vec::new();
+    let mut shed_count = 0usize;
+    let mut next_sample = |rng: &mut Rng| -> (Vec<f32>, usize) {
+        match &ts {
+            Some(ts) => {
+                let idx = rng.below(ts.n);
+                (ts.image(idx).to_vec(), ts.labels[idx] as usize)
+            }
+            // Synthetic serving: random inputs, labels meaningless.
+            None => ((0..64).map(|_| rng.f64() as f32).collect(), 0),
+        }
+    };
+    let mut submitted = 0u64;
     for _ in 0..n {
-        let idx = rng.below(ts.n);
-        labels.push(ts.labels[idx] as usize);
-        rxs.push(server.submit(ts.image(idx).to_vec()));
+        // The fault plan's bursts drive the submission side: the k-th
+        // request brings `extra` immediate extras (load spike).
+        let extra = submit_plan.burst_extra(submitted);
+        for _ in 0..=extra {
+            let (image, label) = next_sample(&mut rng);
+            submitted += 1;
+            if use_admission {
+                match server.try_submit(image) {
+                    SubmitOutcome::Enqueued(rx) => {
+                        labels.push(label);
+                        rxs.push(rx);
+                    }
+                    SubmitOutcome::Shed { .. } => shed_count += 1,
+                }
+            } else {
+                labels.push(label);
+                rxs.push(server.submit(image));
+            }
+        }
     }
+    let answered = rxs.len();
     let mut correct = 0usize;
     let mut early = 0usize;
+    let mut spilled = 0usize;
     let mut lat_sum = std::time::Duration::ZERO;
+    let mut dropped = 0usize;
     for (rx, label) in rxs.into_iter().zip(labels) {
-        let resp = rx.recv()?;
+        // A degraded stage drains its queue without responding; the
+        // dropped sender shows up here as a recv error, and the sample
+        // is accounted under `failed` rather than lost.
+        let Ok(resp) = rx.recv() else {
+            dropped += 1;
+            continue;
+        };
         if resp.pred == label {
             correct += 1;
         }
         if resp.exited_early {
             early += 1;
         }
+        if resp.spilled {
+            spilled += 1;
+        }
         lat_sum += resp.latency;
     }
+    let answered = answered - dropped;
     let wall = start.elapsed().as_secs_f64();
-    println!("served {n} requests in {wall:.3}s ({:.0} req/s)", n as f64 / wall);
-    println!("  accuracy   = {:.4}", correct as f64 / n as f64);
-    println!("  early-exit = {:.4}", early as f64 / n as f64);
-    println!("  mean latency = {:.2}ms", lat_sum.as_secs_f64() * 1e3 / n as f64);
+    println!(
+        "served {answered} of {submitted} requests in {wall:.3}s ({:.0} req/s)",
+        answered as f64 / wall
+    );
+    if dropped > 0 {
+        println!("  unanswered (degraded drain) = {dropped}");
+    }
+    if !synthetic {
+        println!("  accuracy   = {:.4}", correct as f64 / answered.max(1) as f64);
+    }
+    println!("  early-exit = {:.4}", early as f64 / answered.max(1) as f64);
+    if spilled > 0 {
+        println!("  spilled to baseline = {spilled}");
+    }
+    if shed_count > 0 {
+        println!("  shed at admission = {shed_count}");
+    }
+    println!(
+        "  mean latency = {:.2}ms",
+        lat_sum.as_secs_f64() * 1e3 / answered.max(1) as f64
+    );
     println!(
         "  batches formed = {}",
         server.stats.batches.load(std::sync::atomic::Ordering::Relaxed)
@@ -669,7 +811,29 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             server.retunes()
         );
     }
-    server.shutdown();
+    // Degradation telemetry + the conservation law (DESIGN.md §12):
+    // every admitted sample is served, spilled, shed, errored, or
+    // failed in a degraded drain — nothing is lost.
+    let snap = server.stats.snapshot();
+    println!(
+        "  degradation: shed={} spilled={} forced_exits={} failed={} restarts={} stalls={}",
+        snap.shed, snap.spilled, snap.forced_exits, snap.failed, snap.restarts,
+        snap.worker_stalls
+    );
+    let (admitted, accounted) = server.stats.conservation();
+    println!(
+        "  conservation: admitted {admitted} == served+spilled+shed+errors+failed {accounted} ({})",
+        if admitted == accounted { "ok" } else { "VIOLATED" }
+    );
+    let report = server.shutdown();
+    if !report.is_clean() {
+        for d in &report.degraded {
+            eprintln!(
+                "  degraded stage {} after {} restarts: {}",
+                d.stage, d.restarts, d.message
+            );
+        }
+    }
     if let (Some(path), Some(rec)) = (args.get("trace-out"), trace_rec) {
         let mut r = rec.lock().unwrap_or_else(|e| e.into_inner());
         let dropped = r.dropped();

@@ -176,6 +176,17 @@ pub fn render_trace_summary(t: &TraceSummary) -> String {
             }
         }
     }
+    // Degradation section (DESIGN.md §12): omitted entirely on a clean
+    // run so fault-free summaries stay byte-identical to the goldens.
+    if !t.degradation.is_clean() {
+        let d = &t.degradation;
+        let _ = writeln!(s, "-- degradation --");
+        let _ = writeln!(
+            s,
+            "  shed {} | forced exits {} | worker stalls {} ({} ms) | restarts {}",
+            d.shed, d.forced_exits, d.worker_stalls, d.stall_millis, d.worker_restarts
+        );
+    }
     s
 }
 

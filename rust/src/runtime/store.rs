@@ -70,6 +70,12 @@ impl DesignCache {
     }
 
     /// Load a design artifact if present; `Ok(None)` on a cache miss.
+    ///
+    /// A corrupt artifact — unreadable, unparsable, or not a JSON
+    /// object — is quarantined (renamed to `<artifact>.corrupt`, kept
+    /// for post-mortem) and reported as a miss, so one torn or
+    /// hand-mangled file can never wedge `infer`/`serve` behind a
+    /// cache entry the pipeline could simply recompute.
     pub fn load(
         &self,
         network: &str,
@@ -80,11 +86,33 @@ impl DesignCache {
         if !path.is_file() {
             return Ok(None);
         }
-        let text = std::fs::read_to_string(&path)
-            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
-        let doc = json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
-        Ok(Some(doc))
+        let parsed = std::fs::read_to_string(&path)
+            .map_err(|e| format!("reading: {e}"))
+            .and_then(|text| json::parse(&text).map_err(|e| format!("parsing: {e}")))
+            .and_then(|doc| match doc {
+                Json::Obj(_) => Ok(doc),
+                _ => Err("artifact is not a JSON object".to_string()),
+            });
+        match parsed {
+            Ok(doc) => Ok(Some(doc)),
+            Err(why) => {
+                self.quarantine(&path, &why);
+                Ok(None)
+            }
+        }
+    }
+
+    /// Move a corrupt artifact aside (best effort: removed outright if
+    /// the rename fails) so the next `load` is a clean miss.
+    fn quarantine(&self, path: &Path, why: &str) {
+        let dest = path.with_extension("json.corrupt");
+        if std::fs::rename(path, &dest).is_err() {
+            let _ = std::fs::remove_file(path);
+        }
+        eprintln!(
+            "design cache: quarantined corrupt artifact {} ({why})",
+            path.display()
+        );
     }
 
     /// Drop one cached design (used when an artifact fails validation).
@@ -209,5 +237,66 @@ impl ArtifactStore {
     /// (`artifacts/designs/`).
     pub fn design_cache(&self) -> anyhow::Result<DesignCache> {
         DesignCache::open(self.artifacts_dir.join("designs"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch_cache(tag: &str) -> DesignCache {
+        let dir = std::env::temp_dir().join(format!(
+            "atheena-store-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        DesignCache::open(&dir).unwrap()
+    }
+
+    fn obj(k: &str, v: f64) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert(k.to_string(), Json::Num(v));
+        Json::Obj(m)
+    }
+
+    #[test]
+    fn round_trip_still_loads() {
+        let cache = scratch_cache("roundtrip");
+        cache.store("net", "zc706", "abc", &obj("ii", 7.0)).unwrap();
+        let loaded = cache.load("net", "zc706", "abc").unwrap();
+        assert_eq!(loaded, Some(obj("ii", 7.0)));
+        let _ = std::fs::remove_dir_all(&cache.dir);
+    }
+
+    #[test]
+    fn corrupt_artifacts_are_quarantined_not_fatal() {
+        let cache = scratch_cache("corrupt");
+        let cases: &[(&str, &str, &str)] = &[
+            ("garbage", "f1", "\u{7f}\u{1}not json at all"),
+            ("truncated", "f2", "{\"design\": {\"ii\": 7"),
+            ("nonobject", "f3", "[1, 2, 3]"),
+        ];
+        for (net, fp, text) in cases {
+            let path = cache.path(net, "zc706", fp);
+            std::fs::write(&path, text).unwrap();
+            let loaded = cache.load(net, "zc706", fp).unwrap();
+            assert_eq!(loaded, None, "{net}: corrupt artifact must read as a miss");
+            assert!(!path.is_file(), "{net}: artifact must be moved aside");
+            assert!(
+                path.with_extension("json.corrupt").is_file(),
+                "{net}: quarantine file must exist"
+            );
+            // The slot is reusable: a fresh store publishes cleanly.
+            cache.store(net, "zc706", fp, &obj("ii", 3.0)).unwrap();
+            assert_eq!(cache.load(net, "zc706", fp).unwrap(), Some(obj("ii", 3.0)));
+        }
+        let _ = std::fs::remove_dir_all(&cache.dir);
+    }
+
+    #[test]
+    fn missing_artifact_is_a_plain_miss() {
+        let cache = scratch_cache("miss");
+        assert_eq!(cache.load("net", "zc706", "nope").unwrap(), None);
+        let _ = std::fs::remove_dir_all(&cache.dir);
     }
 }

@@ -95,14 +95,16 @@ impl CompiledDesign {
     }
 
     /// Compiled [`simulate_multi_faults`](super::simulate_multi_faults).
+    /// Fails on an invalid [`FaultModel`] (nothing is simulated).
     pub fn run_faults<'a>(
         &self,
         scratch: &'a mut CompiledScratch,
         completes_at: &[usize],
         faults: &FaultModel,
-    ) -> &'a SimResult {
+    ) -> anyhow::Result<&'a SimResult> {
+        faults.validate()?;
         scratch.run(&self.table, completes_at, faults);
-        &scratch.result
+        Ok(&scratch.result)
     }
 
     /// Compiled [`simulate_ee`](super::simulate_ee) (two-stage hardness
@@ -112,11 +114,24 @@ impl CompiledDesign {
         scratch: &'a mut CompiledScratch,
         hard: &[bool],
     ) -> &'a SimResult {
-        self.run_ee_faults(scratch, hard, &FaultModel::NONE)
+        self.ee_with_faults(scratch, hard, &FaultModel::NONE)
     }
 
     /// Compiled [`simulate_ee_faults`](super::simulate_ee_faults).
+    /// Fails on an invalid [`FaultModel`] (nothing is simulated).
     pub fn run_ee_faults<'a>(
+        &self,
+        scratch: &'a mut CompiledScratch,
+        hard: &[bool],
+        faults: &FaultModel,
+    ) -> anyhow::Result<&'a SimResult> {
+        faults.validate()?;
+        Ok(self.ee_with_faults(scratch, hard, faults))
+    }
+
+    /// Shared two-stage body (no validation — callers pass `NONE` or an
+    /// already-validated model).
+    fn ee_with_faults<'a>(
         &self,
         scratch: &'a mut CompiledScratch,
         hard: &[bool],
@@ -660,10 +675,15 @@ mod tests {
             dma_stall_cycles: 700,
             seed: 0xFA17,
         };
-        let oracle = simulate_multi_faults(&t, &cfg, &completes, &faults);
+        let oracle = simulate_multi_faults(&t, &cfg, &completes, &faults).unwrap();
         let compiled = CompiledDesign::lower(&t, &cfg);
         let mut scratch = CompiledScratch::new();
-        assert_same(&oracle, compiled.run_faults(&mut scratch, &completes, &faults));
+        assert_same(
+            &oracle,
+            compiled
+                .run_faults(&mut scratch, &completes, &faults)
+                .unwrap(),
+        );
     }
 
     #[test]

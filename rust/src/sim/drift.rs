@@ -21,6 +21,7 @@
 //! hard fraction under threshold `t` is then `t^(1/d)` — analytic, so
 //! tests can pin the drifted and recovered rates exactly.
 
+use crate::coordinator::faults::ServeFaultPlan;
 use crate::ee::decision::{OperatingPoint, ThresholdPolicy};
 use crate::ee::profiler::ReachEstimator;
 use crate::trace::{NullSink, TraceEvent, TraceSink};
@@ -28,7 +29,10 @@ use crate::util::Rng;
 
 use super::compiled::{CompiledDesign, CompiledScratch};
 use super::config::{DriftScenario, SimBackend, SimConfig};
-use super::engine::{simulate_multi, simulate_multi_traced, DesignTiming, SimResult};
+use super::engine::{
+    simulate_multi, simulate_multi_faults, simulate_multi_traced, DesignTiming, FaultModel,
+    SimResult,
+};
 use super::metrics::SimMetrics;
 
 /// Shape of one closed-loop run.
@@ -323,6 +327,213 @@ pub fn design_operating_point(reach: &[f64]) -> OperatingPoint {
     OperatingPoint::for_uniform_confidence(reach.to_vec())
 }
 
+/// A chaos closed-loop run: the drift report plus what the injected
+/// [`ServeFaultPlan`] did to it (DESIGN.md §12).
+#[derive(Clone, Debug)]
+pub struct ChaosLoopReport {
+    pub report: ClosedLoopReport,
+    /// Supervised restarts: one per injected crash whose stage the
+    /// sample actually reached.
+    pub restarts: u64,
+    /// Scheduled worker stalls taken.
+    pub worker_stalls: u64,
+    /// Samples forced shallower by overload + deadline depth.
+    pub forced_exits: u64,
+    /// Peak synthetic backlog reached during input bursts.
+    pub burst_backlog_peak: u64,
+}
+
+fn decide_once(
+    policy: &mut dyn ThresholdPolicy,
+    rng: &mut Rng,
+    d: f64,
+    n_exits: usize,
+) -> usize {
+    let mut depth = n_exits;
+    for e in 0..n_exits {
+        let u = rng.f64();
+        // d == 1.0 bypasses powf so the nominal-difficulty path is
+        // bit-identical to drawing the confidence directly.
+        let conf = if d == 1.0 { u } else { u.powf(d) };
+        if policy.decide(e, conf) {
+            depth = e;
+            break;
+        }
+    }
+    depth
+}
+
+/// [`simulate_closed_loop`] under a [`ServeFaultPlan`] — the same plan
+/// the threaded server injects, replayed against the closed-loop
+/// harness so both halves of DESIGN.md §12 see one fault schedule:
+///
+/// * **crashes** at `(stage, sample)` fire when the sample's decision
+///   path reaches that stage: the "respawned worker" re-processes the
+///   in-flight sample with a fresh decision pass (one per crash), and
+///   the hit counts as a restart;
+/// * **stalls** fire on the same reached-stage condition and are
+///   counted (the cycle-accurate schedule models timing noise through
+///   the plan's [`FaultModel`] — decision jitter + DMA stalls — which
+///   perturbs the timed replay below);
+/// * **bursts** add synthetic backlog; while backlog drains (one unit
+///   per sample), the stream is overloaded and `deadline_depth`
+///   (mirroring the server's deadline forcing) caps the completion
+///   depth, counting a forced exit when it bites.
+///
+/// With [`ServeFaultPlan::NONE`] and `deadline_depth = None` the
+/// decision stream, RNG consumption, and report are bit-identical to
+/// [`simulate_closed_loop`] (tested below). Fails on an invalid plan.
+pub fn simulate_closed_loop_chaos(
+    t: &DesignTiming,
+    cfg: &SimConfig,
+    policy: &mut dyn ThresholdPolicy,
+    drift: &DriftScenario,
+    run: &ClosedLoopConfig,
+    plan: &ServeFaultPlan,
+    deadline_depth: Option<usize>,
+) -> anyhow::Result<ChaosLoopReport> {
+    plan.validate()?;
+    let n = run.samples;
+    let n_exits = t.exits.len();
+    let window = run.window.clamp(1, n.max(1));
+    let mut rng = Rng::new(run.seed);
+    let mut estimator = ReachEstimator::windowed(n_exits, window);
+
+    let mut completes_at = Vec::with_capacity(n);
+    let mut threshold_snapshots: Vec<Vec<f64>> = Vec::new();
+    let mut restarts = 0u64;
+    let mut worker_stalls = 0u64;
+    let mut forced_exits = 0u64;
+    let mut backlog = 0u64;
+    let mut backlog_peak = 0u64;
+
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + window).min(n);
+        for s in start..end {
+            let k = s as u64;
+            let d = drift.difficulty_at(s, n);
+            backlog += plan.burst_extra(k) as u64;
+            backlog_peak = backlog_peak.max(backlog);
+
+            let mut depth = decide_once(policy, &mut rng, d, n_exits);
+            // Injected crashes: each scheduled hit on a stage the
+            // sample reached restarts that worker, which re-processes
+            // the preserved in-flight sample.
+            for st in 0..=n_exits {
+                if st <= depth && plan.crashes_at(st, k) {
+                    restarts += 1;
+                    depth = decide_once(policy, &mut rng, d, n_exits);
+                }
+            }
+            for st in 0..=n_exits {
+                if st <= depth && plan.stall_at(st, k).is_some() {
+                    worker_stalls += 1;
+                }
+            }
+            if backlog > 0 {
+                if let Some(dd) = deadline_depth {
+                    if depth > dd {
+                        depth = dd;
+                        forced_exits += 1;
+                    }
+                }
+                backlog -= 1;
+            }
+            estimator.observe(depth);
+            completes_at.push(depth);
+        }
+        threshold_snapshots.push(policy.operating_point().thresholds.clone());
+        start = end;
+    }
+
+    // Timed replay: the plan's timing-noise half (decision jitter, DMA
+    // stalls) perturbs the schedule; a null model takes the standard
+    // fault-free path so a NONE plan stays bit-identical.
+    let fm = plan.fault_model();
+    let sim = if fm == FaultModel::NONE {
+        match cfg.backend {
+            SimBackend::Interpreted => simulate_multi(t, cfg, &completes_at),
+            SimBackend::Compiled => {
+                let compiled = CompiledDesign::lower(t, cfg);
+                let mut scratch = CompiledScratch::new();
+                compiled.run(&mut scratch, &completes_at);
+                scratch.take_result()
+            }
+        }
+    } else {
+        simulate_multi_faults(t, cfg, &completes_at, &fm)?
+    };
+    let metrics = SimMetrics::from_result(&sim, cfg.clock_hz);
+
+    // Window reports: same arithmetic as the fault-free core.
+    let n_windows = threshold_snapshots.len();
+    let mut windows = Vec::with_capacity(n_windows);
+    let mut prev_out = 0u64;
+    for (w, thresholds) in threshold_snapshots.into_iter().enumerate() {
+        let ws = w * window;
+        let end = (ws + window).min(n);
+        let len = end - ws;
+        let raw_max = sim.traces[ws..end]
+            .iter()
+            .map(|tr| tr.t_out)
+            .max()
+            .unwrap_or(0);
+        let mut counts = vec![0usize; n_exits + 1];
+        for &depth in &completes_at[ws..end] {
+            counts[depth.min(n_exits)] += 1;
+        }
+        let exit_rates: Vec<f64> = counts.iter().map(|&c| c as f64 / len as f64).collect();
+        let reach: Vec<f64> = (0..n_exits)
+            .map(|i| {
+                completes_at[ws..end]
+                    .iter()
+                    .filter(|&&depth| depth > i)
+                    .count() as f64
+                    / len as f64
+            })
+            .collect();
+        let max_out = raw_max.max(prev_out);
+        let span = max_out - prev_out;
+        let throughput_sps = if span == 0 || sim.deadlock.is_some() {
+            0.0
+        } else {
+            len as f64 * cfg.clock_hz / span as f64
+        };
+        windows.push(WindowReport {
+            start: ws,
+            len,
+            throughput_sps,
+            exit_rates,
+            reach,
+            thresholds,
+        });
+        prev_out = max_out;
+    }
+
+    let realized_reach: Vec<f64> = (0..n_exits)
+        .map(|i| {
+            completes_at.iter().filter(|&&d| d > i).count() as f64 / n.max(1) as f64
+        })
+        .collect();
+
+    Ok(ChaosLoopReport {
+        report: ClosedLoopReport {
+            metrics,
+            windows,
+            realized_reach,
+            estimated_reach: estimator.reach().to_vec(),
+            retunes: policy.retunes(),
+            completes_at,
+            sim,
+        },
+        restarts,
+        worker_stalls,
+        forced_exits,
+        burst_backlog_peak: backlog_peak,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -467,6 +678,113 @@ mod tests {
             .sum();
         assert_eq!(retune_sum, traced.retunes);
         assert!(retune_sum > 0, "step drift must force retunes");
+    }
+
+    #[test]
+    fn chaos_with_none_plan_matches_simulate_closed_loop() {
+        let t = toy3();
+        let op = design_operating_point(&[0.4, 0.15]);
+        let run = ClosedLoopConfig::default();
+        let cfg = SimConfig::default();
+        let mut plain_policy = Fixed::new(op.clone());
+        let plain =
+            simulate_closed_loop(&t, &cfg, &mut plain_policy, &DriftScenario::None, &run);
+        let mut chaos_policy = Fixed::new(op);
+        let chaos = simulate_closed_loop_chaos(
+            &t,
+            &cfg,
+            &mut chaos_policy,
+            &DriftScenario::None,
+            &run,
+            &ServeFaultPlan::NONE,
+            None,
+        )
+        .unwrap();
+        assert_eq!(chaos.restarts, 0);
+        assert_eq!(chaos.worker_stalls, 0);
+        assert_eq!(chaos.forced_exits, 0);
+        assert_eq!(chaos.burst_backlog_peak, 0);
+        assert_eq!(plain.completes_at, chaos.report.completes_at);
+        assert_eq!(plain.sim.total_cycles, chaos.report.sim.total_cycles);
+        assert_eq!(plain.realized_reach, chaos.report.realized_reach);
+        assert_eq!(plain.estimated_reach, chaos.report.estimated_reach);
+        assert_eq!(plain.retunes, chaos.report.retunes);
+        assert_eq!(plain.windows.len(), chaos.report.windows.len());
+        for (a, b) in plain.windows.iter().zip(&chaos.report.windows) {
+            assert_eq!(a.throughput_sps, b.throughput_sps);
+            assert_eq!(a.exit_rates, b.exit_rates);
+            assert_eq!(a.reach, b.reach);
+            assert_eq!(a.thresholds, b.thresholds);
+        }
+    }
+
+    #[test]
+    fn pinned_chaos_plan_reports_injected_degradation() {
+        use crate::coordinator::faults::{BurstFault, CrashFault, StallFault};
+        let t = toy3();
+        let op = design_operating_point(&[0.4, 0.15]);
+        let run = ClosedLoopConfig {
+            samples: 2048,
+            window: 256,
+            seed: 0xC4A05,
+        };
+        let cfg = SimConfig::default();
+        let plan = ServeFaultPlan {
+            seed: 0xC4A05,
+            decision_jitter_us: 0,
+            dma_stall_prob: 0.05,
+            dma_stall_cycles: 200,
+            // Stage 0 is reached by every sample, so these fire exactly
+            // once each regardless of the decision stream.
+            stalls: vec![StallFault { stage: 0, at_sample: 30, millis: 40 }],
+            crashes: vec![
+                CrashFault { stage: 0, at_sample: 10 },
+                CrashFault { stage: 0, at_sample: 20 },
+            ],
+            bursts: vec![BurstFault { at_sample: 16, extra: 32 }],
+        };
+        let mut policy = Fixed::new(op);
+        let chaos = simulate_closed_loop_chaos(
+            &t,
+            &cfg,
+            &mut policy,
+            &DriftScenario::None,
+            &run,
+            &plan,
+            Some(0),
+        )
+        .unwrap();
+        assert_eq!(chaos.restarts, 2, "one restart per reached crash");
+        assert_eq!(chaos.worker_stalls, 1);
+        assert_eq!(chaos.burst_backlog_peak, 32);
+        assert!(
+            chaos.forced_exits > 0,
+            "overloaded samples must be forced to the deadline depth"
+        );
+        assert_eq!(chaos.report.completes_at.len(), run.samples);
+        assert!(chaos.report.sim.deadlock.is_none());
+        // Forced samples completed at depth 0, never deeper.
+        for (s, &depth) in chaos.report.completes_at.iter().enumerate() {
+            if (16..48).contains(&s) {
+                assert_eq!(depth, 0, "sample {s} inside the burst window");
+            }
+        }
+        // An invalid plan is rejected up front.
+        let bad = ServeFaultPlan {
+            dma_stall_prob: 2.0,
+            ..ServeFaultPlan::NONE
+        };
+        let mut p2 = Fixed::new(design_operating_point(&[0.4, 0.15]));
+        assert!(simulate_closed_loop_chaos(
+            &t,
+            &cfg,
+            &mut p2,
+            &DriftScenario::None,
+            &run,
+            &bad,
+            None,
+        )
+        .is_err());
     }
 
     #[test]

@@ -316,7 +316,7 @@ impl SimResult {
 /// fp32 exp unit variability / resource contention on the decision
 /// datapath) and host-side DMA hiccups. Used by the robustness tests to
 /// verify the schedule degrades gracefully rather than deadlocking.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct FaultModel {
     /// Max extra cycles added (uniformly) to each sample's decision.
     pub decision_jitter: u64,
@@ -334,6 +334,31 @@ impl FaultModel {
         dma_stall_cycles: 0,
         seed: 0,
     };
+
+    /// Reject physically meaningless or overflow-prone fault
+    /// parameters. Every public `*_faults` entry point calls this; the
+    /// fault-free fast paths bypass it (`NONE` is valid by
+    /// construction).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.dma_stall_prob.is_finite() && (0.0..=1.0).contains(&self.dma_stall_prob),
+            "fault model: dma_stall_prob {} outside [0, 1]",
+            self.dma_stall_prob
+        );
+        anyhow::ensure!(
+            self.decision_jitter <= u64::from(u32::MAX),
+            "fault model: decision_jitter {} cycles would overflow the schedule (max {})",
+            self.decision_jitter,
+            u32::MAX
+        );
+        anyhow::ensure!(
+            self.dma_stall_cycles <= u64::from(u32::MAX),
+            "fault model: dma_stall_cycles {} would overflow the schedule (max {})",
+            self.dma_stall_cycles,
+            u32::MAX
+        );
+        Ok(())
+    }
 }
 
 /// Simulate a batch through a two-stage Early-Exit design. `hard[s]` is
@@ -341,21 +366,21 @@ impl FaultModel {
 /// PJRT numerics via the coordinator).
 pub fn simulate_ee(t: &DesignTiming, cfg: &SimConfig, hard: &[bool]) -> SimResult {
     let mut scratch = SimScratch::new();
-    scratch.simulate_ee_faults(t, cfg, hard, &FaultModel::NONE);
+    scratch.simulate_ee(t, cfg, hard);
     scratch.take_result()
 }
 
 /// Simulate a two-stage design with injected faults (robustness /
-/// failure-injection tests).
+/// failure-injection tests). Fails on an invalid [`FaultModel`].
 pub fn simulate_ee_faults(
     t: &DesignTiming,
     cfg: &SimConfig,
     hard: &[bool],
     faults: &FaultModel,
-) -> SimResult {
+) -> anyhow::Result<SimResult> {
     let mut scratch = SimScratch::new();
-    scratch.simulate_ee_faults(t, cfg, hard, faults);
-    scratch.take_result()
+    scratch.simulate_ee_faults(t, cfg, hard, faults)?;
+    Ok(scratch.take_result())
 }
 
 /// Simulate a batch through an N-exit design. `completes_at[s]` is the
@@ -372,16 +397,17 @@ pub fn simulate_multi(
     scratch.take_result()
 }
 
-/// Fault-injected variant of [`simulate_multi`].
+/// Fault-injected variant of [`simulate_multi`]. Fails on an invalid
+/// [`FaultModel`].
 pub fn simulate_multi_faults(
     t: &DesignTiming,
     cfg: &SimConfig,
     completes_at: &[usize],
     faults: &FaultModel,
-) -> SimResult {
+) -> anyhow::Result<SimResult> {
     let mut scratch = SimScratch::new();
-    scratch.simulate_multi_faults(t, cfg, completes_at, faults);
-    scratch.take_result()
+    scratch.simulate_multi_faults(t, cfg, completes_at, faults)?;
+    Ok(scratch.take_result())
 }
 
 /// [`simulate_multi`] with per-sample event tracing into `sink`
@@ -478,16 +504,18 @@ impl SimScratch {
         &self.result
     }
 
-    /// [`simulate_multi_faults`] into this scratch.
+    /// [`simulate_multi_faults`] into this scratch. Fails on an
+    /// invalid [`FaultModel`] (nothing is simulated in that case).
     pub fn simulate_multi_faults(
         &mut self,
         t: &DesignTiming,
         cfg: &SimConfig,
         completes_at: &[usize],
         faults: &FaultModel,
-    ) -> &SimResult {
+    ) -> anyhow::Result<&SimResult> {
+        faults.validate()?;
         self.core(t, cfg, completes_at, faults, &mut NullSink);
-        &self.result
+        Ok(&self.result)
     }
 
     /// [`simulate_multi_traced`] into this scratch.
@@ -510,11 +538,26 @@ impl SimScratch {
         cfg: &SimConfig,
         hard: &[bool],
     ) -> &SimResult {
-        self.simulate_ee_faults(t, cfg, hard, &FaultModel::NONE)
+        self.ee_with_faults(t, cfg, hard, &FaultModel::NONE)
     }
 
-    /// [`simulate_ee_faults`] into this scratch.
+    /// [`simulate_ee_faults`] into this scratch. Fails on an invalid
+    /// [`FaultModel`] (nothing is simulated in that case).
     pub fn simulate_ee_faults(
+        &mut self,
+        t: &DesignTiming,
+        cfg: &SimConfig,
+        hard: &[bool],
+        faults: &FaultModel,
+    ) -> anyhow::Result<&SimResult> {
+        faults.validate()?;
+        Ok(self.ee_with_faults(t, cfg, hard, faults))
+    }
+
+    /// Shared two-stage body: map hard flags to completion depths and
+    /// run the core (no validation — internal callers pass `NONE` or a
+    /// plan that already passed [`FaultModel::validate`]).
+    fn ee_with_faults(
         &mut self,
         t: &DesignTiming,
         cfg: &SimConfig,
@@ -863,21 +906,26 @@ impl SimScratch {
 
 /// Simulate a batch through a single-stage baseline design.
 pub fn simulate_baseline(t: &DesignTiming, cfg: &SimConfig, n: usize) -> SimResult {
-    simulate_baseline_faults(t, cfg, n, &FaultModel::NONE)
+    baseline_core(t, cfg, n, &FaultModel::NONE)
 }
 
-/// [`simulate_baseline`] under a [`FaultModel`]. Baselines have no
-/// decision datapath, so only the host-side DMA stalls apply — injected
-/// with the **same** RNG draw sequence `sim_core` uses, so robustness
-/// tests can compare a baseline and an EE design under the identical
-/// per-sample fault pattern (equal seeds, zero decision jitter ⇒ equal
-/// DMA-in skew on every sample).
+/// [`simulate_baseline`] under a [`FaultModel`]. Fails on an invalid
+/// model. Baselines have no decision datapath, so only the host-side
+/// DMA stalls apply — injected with the **same** RNG draw sequence
+/// `sim_core` uses, so robustness tests can compare a baseline and an
+/// EE design under the identical per-sample fault pattern (equal
+/// seeds, zero decision jitter ⇒ equal DMA-in skew on every sample).
 pub fn simulate_baseline_faults(
     t: &DesignTiming,
     cfg: &SimConfig,
     n: usize,
     faults: &FaultModel,
-) -> SimResult {
+) -> anyhow::Result<SimResult> {
+    faults.validate()?;
+    Ok(baseline_core(t, cfg, n, faults))
+}
+
+fn baseline_core(t: &DesignTiming, cfg: &SimConfig, n: usize, faults: &FaultModel) -> SimResult {
     let mut traces = vec![SampleTrace::default(); n];
     let dma_in = cfg.dma_in_cycles(t.input_words);
     let dma_out = cfg.dma_in_cycles(t.output_words).max(1);
@@ -1186,8 +1234,8 @@ mod tests {
             seed: 0xFA17,
         };
         let n = 256;
-        let base = simulate_baseline_faults(&t, &cfg, n, &faults);
-        let ee = simulate_ee_faults(&t, &cfg, &vec![false; n], &faults);
+        let base = simulate_baseline_faults(&t, &cfg, n, &faults).unwrap();
+        let ee = simulate_ee_faults(&t, &cfg, &vec![false; n], &faults).unwrap();
         for (a, b) in base.traces.iter().zip(&ee.traces) {
             assert_eq!(a.t_in, b.t_in);
         }
@@ -1195,9 +1243,45 @@ mod tests {
         let clean = simulate_baseline(&t, &cfg, n);
         assert!(base.total_cycles > clean.total_cycles);
         assert_eq!(
-            simulate_baseline_faults(&t, &cfg, n, &FaultModel::NONE).total_cycles,
+            simulate_baseline_faults(&t, &cfg, n, &FaultModel::NONE)
+                .unwrap()
+                .total_cycles,
             clean.total_cycles
         );
+    }
+
+    #[test]
+    fn fault_model_validation_rejects_bad_parameters() {
+        let t = toy();
+        let cfg = SimConfig::default();
+        let bad_prob = FaultModel {
+            dma_stall_prob: 1.5,
+            ..FaultModel::NONE
+        };
+        let nan_prob = FaultModel {
+            dma_stall_prob: f64::NAN,
+            ..FaultModel::NONE
+        };
+        let huge_jitter = FaultModel {
+            decision_jitter: u64::MAX,
+            ..FaultModel::NONE
+        };
+        let huge_stall = FaultModel {
+            dma_stall_cycles: u64::from(u32::MAX) + 1,
+            ..FaultModel::NONE
+        };
+        for bad in [bad_prob, nan_prob, huge_jitter, huge_stall] {
+            assert!(bad.validate().is_err());
+            assert!(simulate_ee_faults(&t, &cfg, &[false, true], &bad).is_err());
+            assert!(simulate_multi_faults(&t, &cfg, &[0, 1], &bad).is_err());
+            assert!(simulate_baseline_faults(&t, &cfg, 4, &bad).is_err());
+            let mut scratch = SimScratch::new();
+            assert!(scratch.simulate_ee_faults(&t, &cfg, &[false], &bad).is_err());
+            assert!(scratch.simulate_multi_faults(&t, &cfg, &[0], &bad).is_err());
+        }
+        // The null model and in-range parameters pass.
+        assert!(FaultModel::NONE.validate().is_ok());
+        assert!(simulate_multi_faults(&t, &cfg, &[0, 1], &FaultModel::NONE).is_ok());
     }
 
     #[test]

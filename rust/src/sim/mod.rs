@@ -21,6 +21,9 @@
 //! stream, a `ThresholdPolicy` (fixed or controller) makes the exit
 //! decisions, and the engine times the result — so both the p/q-mismatch
 //! degradation and its runtime recovery are measurable.
+//! [`simulate_closed_loop_chaos`] replays a serving
+//! [`ServeFaultPlan`](crate::coordinator::faults::ServeFaultPlan)
+//! (DESIGN.md §12) against the same harness.
 
 //!
 //! Two cores execute the same schedule (DESIGN.md §10): the interpreted
@@ -39,8 +42,9 @@ pub mod metrics;
 pub use compiled::{CompiledArena, CompiledDesign, CompiledScratch, SharedArena};
 pub use config::{DriftScenario, SimBackend, SimConfig};
 pub use drift::{
-    design_operating_point, simulate_closed_loop, simulate_closed_loop_traced,
-    ClosedLoopConfig, ClosedLoopReport, WindowReport,
+    design_operating_point, simulate_closed_loop, simulate_closed_loop_chaos,
+    simulate_closed_loop_traced, ChaosLoopReport, ClosedLoopConfig, ClosedLoopReport,
+    WindowReport,
 };
 pub use engine::{
     simulate_baseline, simulate_baseline_faults, simulate_ee, simulate_ee_faults,

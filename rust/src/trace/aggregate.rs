@@ -66,6 +66,34 @@ pub struct ControlSummary {
     pub mean_throughput_sps: f64,
 }
 
+/// Degradation totals (DESIGN.md §12): admission shedding, deadline
+/// forced exits, and supervisor activity. All-zero on a healthy run —
+/// the renderer omits the section entirely then, keeping fault-free
+/// summaries byte-identical to the pre-degradation format.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DegradationSummary {
+    /// Samples shed by admission control (rejected or spilled).
+    pub shed: u64,
+    /// Samples forced out at an earlier exit by their deadline.
+    pub forced_exits: u64,
+    /// Worker stall episodes.
+    pub worker_stalls: u64,
+    /// Total stalled milliseconds across all workers.
+    pub stall_millis: u64,
+    /// Supervisor worker restarts.
+    pub worker_restarts: u64,
+}
+
+impl DegradationSummary {
+    /// True when nothing degraded (the renderer's omission gate).
+    pub fn is_clean(&self) -> bool {
+        self.shed == 0
+            && self.forced_exits == 0
+            && self.worker_stalls == 0
+            && self.worker_restarts == 0
+    }
+}
+
 /// Everything `atheena trace` prints.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TraceSummary {
@@ -76,6 +104,9 @@ pub struct TraceSummary {
     pub exits: Vec<ExitLatency>,
     pub buffers: Vec<BufferSummary>,
     pub control: ControlSummary,
+    /// Shedding / forced-exit / supervisor totals (all-zero when the
+    /// run was healthy).
+    pub degradation: DegradationSummary,
     /// Events evicted by the recorder ring (0 unless the run
     /// out-sized the ring; non-zero means the head of the run is
     /// missing from the aggregation).
@@ -106,6 +137,7 @@ impl TraceSummary {
         let mut occupancy_edges: BTreeMap<u32, Vec<(u64, i32)>> = BTreeMap::new();
         let mut direct_occupancy: BTreeMap<u32, u32> = BTreeMap::new();
         let mut control = ControlSummary::default();
+        let mut degradation = DegradationSummary::default();
         let mut throughput_sum = 0.0;
         let mut first_retune: Option<(u32, u64)> = None;
         let mut last_retune: Option<(u32, u64)> = None;
@@ -178,6 +210,19 @@ impl TraceSummary {
                 } => {
                     control.windows += 1;
                     throughput_sum += throughput_sps;
+                }
+                TraceEvent::SampleShed { .. } => {
+                    degradation.shed += 1;
+                }
+                TraceEvent::DeadlineForcedExit { .. } => {
+                    degradation.forced_exits += 1;
+                }
+                TraceEvent::WorkerStalled { millis, .. } => {
+                    degradation.worker_stalls += 1;
+                    degradation.stall_millis += millis;
+                }
+                TraceEvent::WorkerRestarted { .. } => {
+                    degradation.worker_restarts += 1;
                 }
                 TraceEvent::SectionEnter { .. } | TraceEvent::SectionExit { .. } => {}
             }
@@ -261,6 +306,7 @@ impl TraceSummary {
             exits,
             buffers: buffers.into_values().collect(),
             control,
+            degradation,
             dropped_events,
         }
     }
@@ -387,5 +433,25 @@ mod tests {
         assert_eq!(s.control.reconverge_ticks, None);
         assert_eq!(s.dropped_events, 3);
         assert!(s.exits.is_empty());
+        assert!(s.degradation.is_clean());
+    }
+
+    #[test]
+    fn degradation_events_are_totalled() {
+        let evs = vec![
+            TraceEvent::SampleShed { sample: 3, t: 10 },
+            TraceEvent::DeadlineForcedExit { sample: 4, stage: 0, t: 20 },
+            TraceEvent::DeadlineForcedExit { sample: 5, stage: 1, t: 25 },
+            TraceEvent::WorkerStalled { stage: 1, t: 30, millis: 40 },
+            TraceEvent::WorkerRestarted { stage: 1, t: 70, restarts: 1 },
+            TraceEvent::WorkerRestarted { stage: 2, t: 90, restarts: 1 },
+        ];
+        let s = TraceSummary::from_events(&evs, 1e6, 0);
+        let d = &s.degradation;
+        assert_eq!(d.shed, 1);
+        assert_eq!(d.forced_exits, 2);
+        assert_eq!((d.worker_stalls, d.stall_millis), (1, 40));
+        assert_eq!(d.worker_restarts, 2);
+        assert!(!d.is_clean());
     }
 }

@@ -15,6 +15,11 @@
 //! - `buffer/{i}`: [`TraceEvent::BufferStalled`] / [`TraceEvent::BufferDrained`]
 //!   / [`TraceEvent::BufferOccupancy`]
 //! - `control`: [`TraceEvent::ThresholdRetuned`] / [`TraceEvent::WindowStats`]
+//!   / [`TraceEvent::WorkerStalled`] / [`TraceEvent::WorkerRestarted`]
+//!
+//! (Degradation sample events join their sample's track:
+//! [`TraceEvent::SampleShed`] → `samples`,
+//! [`TraceEvent::DeadlineForcedExit`] → `exit/{stage}`.)
 //!
 //! — then compared element-wise per track (producers emit each track in
 //! deterministic order, so index `k` of a track in run A corresponds to
@@ -87,6 +92,11 @@ fn track_key(ev: &TraceEvent) -> String {
         | TraceEvent::BufferDrained { buffer, .. }
         | TraceEvent::BufferOccupancy { buffer, .. } => format!("buffer/{buffer}"),
         TraceEvent::ThresholdRetuned { .. } | TraceEvent::WindowStats { .. } => {
+            "control".to_string()
+        }
+        TraceEvent::SampleShed { .. } => "samples".to_string(),
+        TraceEvent::DeadlineForcedExit { stage, .. } => format!("exit/{stage}"),
+        TraceEvent::WorkerStalled { .. } | TraceEvent::WorkerRestarted { .. } => {
             "control".to_string()
         }
     }

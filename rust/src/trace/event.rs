@@ -80,6 +80,18 @@ pub enum TraceEvent {
         throughput_sps: f64,
         reach: Vec<f64>,
     },
+    /// Admission control shed a sample at `t` (rejected at submit or
+    /// spilled to the baseline path; never entered the staged pipeline).
+    SampleShed { sample: u64, t: u64 },
+    /// A sample past its deadline was forced out at exit `stage`'s
+    /// decision point at `t` (overload shedding via forced early exit).
+    DeadlineForcedExit { sample: u64, stage: u32, t: u64 },
+    /// Stage `stage`'s worker stalled for `millis` ms starting at `t`
+    /// (injected by a `ServeFaultPlan`, or observed pathology).
+    WorkerStalled { stage: u32, t: u64, millis: u64 },
+    /// Stage `stage`'s supervisor caught a worker panic and respawned
+    /// it at `t`; `restarts` is the stage's cumulative restart count.
+    WorkerRestarted { stage: u32, t: u64, restarts: u64 },
 }
 
 impl TraceEvent {
@@ -94,7 +106,11 @@ impl TraceEvent {
             | TraceEvent::SampleRetired { t, .. }
             | TraceEvent::BufferStalled { t, .. }
             | TraceEvent::BufferOccupancy { t, .. }
-            | TraceEvent::ThresholdRetuned { t, .. } => t,
+            | TraceEvent::ThresholdRetuned { t, .. }
+            | TraceEvent::SampleShed { t, .. }
+            | TraceEvent::DeadlineForcedExit { t, .. }
+            | TraceEvent::WorkerStalled { t, .. }
+            | TraceEvent::WorkerRestarted { t, .. } => t,
             TraceEvent::BufferDrained { leave, .. } => leave,
             TraceEvent::WindowStats { t_start, .. } => t_start,
         }

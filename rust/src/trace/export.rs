@@ -21,7 +21,9 @@
 //!   `SampleRetired`) as lane-packed `X` spans.
 //! - pid 3 `exits`: one instant (`i`) per sample on `tid = stage`.
 //! - pid 4 `control`: closed-loop window spans, retune instants, and
-//!   `throughput_sps` / per-threshold counter tracks.
+//!   `throughput_sps` / per-threshold counter tracks, plus (tid 1,
+//!   only when present) a `degradation` lane of shed / forced-exit /
+//!   worker-stall / worker-restart instants.
 //!
 //! The export is fully deterministic (stable sort, `BTreeMap` series)
 //! so pinned-seed traces golden-test byte-for-byte.
@@ -122,6 +124,8 @@ pub fn export_chrome_trace(events: &[TraceEvent], clock_hz: f64) -> Json {
     let mut retunes: Vec<(u32, u64, Vec<f64>, u64)> = Vec::new();
     // (window, start_sample, len, t_start, t_end, throughput_sps, reach)
     let mut windows = Vec::new();
+    // Degradation instants: (t, name, arg-name, arg-value).
+    let mut degradation: Vec<(u64, String, &'static str, f64)> = Vec::new();
 
     for ev in events {
         match ev {
@@ -203,6 +207,33 @@ pub fn export_chrome_trace(events: &[TraceEvent], clock_hz: f64) -> Json {
                     *t_end,
                     *throughput_sps,
                     reach.clone(),
+                ));
+            }
+            TraceEvent::SampleShed { sample, t } => {
+                degradation.push((*t, "shed".to_string(), "sample", *sample as f64));
+            }
+            TraceEvent::DeadlineForcedExit { sample, stage, t } => {
+                degradation.push((
+                    *t,
+                    format!("forced-exit{stage}"),
+                    "sample",
+                    *sample as f64,
+                ));
+            }
+            TraceEvent::WorkerStalled { stage, t, millis } => {
+                degradation.push((
+                    *t,
+                    format!("stall stage{stage}"),
+                    "millis",
+                    *millis as f64,
+                ));
+            }
+            TraceEvent::WorkerRestarted { stage, t, restarts } => {
+                degradation.push((
+                    *t,
+                    format!("restart stage{stage}"),
+                    "restarts",
+                    *restarts as f64,
                 ));
             }
         }
@@ -521,6 +552,31 @@ pub fn export_chrome_trace(events: &[TraceEvent], clock_hz: f64) -> Json {
                 series.iter().map(|(k, v)| (k.as_str(), *v)).collect(),
             ),
         ));
+    }
+
+    // Degradation instants (shed / forced exits / worker stalls and
+    // restarts) on their own control-process lane. The meta row is
+    // emitted only when degradation happened, so fault-free exports
+    // stay byte-identical to the pre-degradation format.
+    if !degradation.is_empty() {
+        out.push(meta(PID_CONTROL, Some(1), "thread_name", "degradation"));
+        degradation.sort_by(|a, b| (a.0, &a.1).cmp(&(b.0, &b.1)));
+        for (t, name, arg, value) in &degradation {
+            let ts = us(*t, clock_hz);
+            body.push((
+                ts,
+                Json::obj(vec![
+                    ("ph", Json::str("i")),
+                    ("name", Json::str(name.clone())),
+                    ("cat", Json::str("degradation")),
+                    ("s", Json::str("t")),
+                    ("pid", Json::num(PID_CONTROL as f64)),
+                    ("tid", Json::num(1.0)),
+                    ("ts", Json::num(ts)),
+                    ("args", Json::obj(vec![(*arg, Json::num(*value))])),
+                ]),
+            ));
+        }
     }
 
     // Stable sort keeps same-ts events in emission order (B before its

@@ -26,7 +26,9 @@ pub mod diff;
 pub mod event;
 pub mod export;
 
-pub use aggregate::{BufferSummary, ControlSummary, ExitLatency, TraceSummary};
+pub use aggregate::{
+    BufferSummary, ControlSummary, DegradationSummary, ExitLatency, TraceSummary,
+};
 pub use diff::{diff_chrome_traces, first_divergence, Divergence};
 pub use event::{NullSink, Recorder, TraceEvent, TraceSink, DEFAULT_RECORDER_CAPACITY};
 pub use export::{

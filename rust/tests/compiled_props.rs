@@ -175,9 +175,9 @@ fn prop_compiled_faults_bit_identical_to_interpreted() {
         let completes = gen_vec(r, n, |r| r.below(n_sections));
         let faults = rand_faults(r);
 
-        let oracle = simulate_multi_faults(&t, &cfg, &completes, &faults);
+        let oracle = simulate_multi_faults(&t, &cfg, &completes, &faults).unwrap();
         let compiled = CompiledDesign::lower(&t, &cfg);
-        let got = compiled.run_faults(&mut scratch, &completes, &faults);
+        let got = compiled.run_faults(&mut scratch, &completes, &faults).unwrap();
         prop_assert(
             same_result(&oracle, got),
             "compiled fault run diverged (RNG draw sequence or schedule)",
@@ -203,8 +203,8 @@ fn prop_compiled_ee_entry_bit_identical_to_interpreted() {
         )?;
         prop_assert(
             same_result(
-                &simulate_ee_faults(&t, &cfg, &hard, &faults),
-                compiled.run_ee_faults(&mut scratch, &hard, &faults),
+                &simulate_ee_faults(&t, &cfg, &hard, &faults).unwrap(),
+                compiled.run_ee_faults(&mut scratch, &hard, &faults).unwrap(),
             ),
             "compiled run_ee_faults diverged from simulate_ee_faults",
         )

@@ -632,7 +632,7 @@ fn prop_fault_injection_degrades_gracefully() {
             dma_stall_cycles: r.below(1000) as u64,
             seed: r.next_u64(),
         };
-        let faulty = simulate_ee_faults(&t, &SimConfig::default(), &flags, &faults);
+        let faulty = simulate_ee_faults(&t, &SimConfig::default(), &flags, &faults).unwrap();
         prop_assert(faulty.deadlock.is_none(), "faults caused deadlock")?;
         prop_assert(faulty.traces.len() == n, "faults lost samples")?;
         prop_assert(

@@ -1,0 +1,257 @@
+//! Property tests for the degradation-aware server (DESIGN.md §12):
+//! randomized fault plans and shed policies against the deterministic
+//! [`SyntheticEngineFactory`], checking the three serving invariants —
+//!
+//! * **no deadlock**: every enqueued sample resolves (response or
+//!   disconnect) within a bounded wait;
+//! * **conservation**: `admitted == served + spilled + shed + errors +
+//!   failed` at quiescence, on every policy and every fault schedule;
+//! * **ForceEarlyExit answers everything**: shedding by forced exit
+//!   still classifies every admitted sample;
+//!
+//! plus bit-identity of the `ServeFaultPlan::NONE` path (a server
+//! configured with the empty plan produces the same `StatsSnapshot`
+//! as one never told about faults at all) and the supervisor's two
+//! endpoints (restart preserves the in-flight sample; an exhausted
+//! budget drains gracefully into a structured `ShutdownReport`).
+
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
+use std::time::Duration;
+
+use atheena::coordinator::{
+    AdmissionConfig, BurstFault, CrashFault, ServeFaultPlan, Server, ServerConfig,
+    ShedPolicy, StallFault, StatsSnapshot, SubmitOutcome, SyntheticEngineFactory,
+};
+use atheena::util::Rng;
+
+/// Long enough to never false-positive on a loaded CI box, short
+/// enough that a genuine deadlock fails the suite instead of hanging.
+const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+fn image(rng: &mut Rng) -> Vec<f32> {
+    (0..32).map(|_| rng.f64() as f32).collect()
+}
+
+/// Synthetic serving needs no artifacts; the path is never opened.
+fn synthetic_cfg() -> ServerConfig {
+    ServerConfig::new("unused-artifacts", "synthetic")
+}
+
+fn random_plan(rng: &mut Rng, n_sections: usize, n_samples: usize) -> ServeFaultPlan {
+    let mut plan = ServeFaultPlan {
+        seed: 0x5EED ^ rng.below(1 << 16) as u64,
+        decision_jitter_us: rng.below(50) as u64,
+        ..ServeFaultPlan::NONE
+    };
+    for _ in 0..rng.below(3) {
+        plan.crashes.push(CrashFault {
+            stage: rng.below(n_sections),
+            at_sample: rng.below(n_samples) as u64,
+        });
+    }
+    for _ in 0..rng.below(2) {
+        plan.stalls.push(StallFault {
+            stage: rng.below(n_sections),
+            at_sample: rng.below(n_samples) as u64,
+            millis: rng.below(5) as u64,
+        });
+    }
+    if rng.chance(0.5) {
+        plan.bursts.push(BurstFault {
+            at_sample: rng.below(n_samples) as u64,
+            extra: rng.below(8),
+        });
+    }
+    plan
+}
+
+#[test]
+fn random_chaos_serving_conserves_and_terminates() {
+    let mut rng = Rng::new(0x5EED_0001);
+    let policies = [
+        ShedPolicy::Reject,
+        ShedPolicy::ForceEarlyExit,
+        ShedPolicy::SpillToBaseline,
+    ];
+    for trial in 0..6 {
+        let n_sections = 2 + rng.below(3);
+        let n = 64usize;
+        let plan = random_plan(&mut rng, n_sections, n);
+        let mut adm = AdmissionConfig::watermarks(8, policies[trial % policies.len()]);
+        if rng.chance(0.5) {
+            adm.deadline = Some(Duration::from_micros(500));
+        }
+        let cfg = synthetic_cfg().with_faults(plan.clone()).with_admission(adm);
+        let server =
+            Server::start_with_engine(cfg, Arc::new(SyntheticEngineFactory::new(n_sections)))
+                .unwrap();
+        let stats = server.stats.clone();
+        let mut rxs = Vec::new();
+        for _ in 0..n {
+            match server.try_submit(image(&mut rng)) {
+                SubmitOutcome::Enqueued(rx) => rxs.push(rx),
+                SubmitOutcome::Shed { .. } => {}
+            }
+        }
+        for rx in rxs {
+            match rx.recv_timeout(RECV_TIMEOUT) {
+                Ok(_) => {}
+                // Degraded drain or engine error: the sample is
+                // accounted under failed/errors, not answered.
+                Err(RecvTimeoutError::Disconnected) => {}
+                Err(RecvTimeoutError::Timeout) => {
+                    panic!("trial {trial}: deadlock — response never delivered")
+                }
+            }
+        }
+        let report = server.shutdown();
+        assert!(
+            stats.conservation_ok(),
+            "trial {trial}: conservation violated {:?} (plan {plan:?})",
+            stats.conservation()
+        );
+        // A crash only fires when its stage reaches the scheduled
+        // per-stage sample count, so restarts never exceed the plan.
+        assert!(
+            report.restarts <= plan.crash_count(),
+            "trial {trial}: {} restarts for {} scheduled crashes",
+            report.restarts,
+            plan.crash_count()
+        );
+    }
+}
+
+#[test]
+fn force_early_exit_classifies_every_admitted_sample() {
+    // A zero deadline forces every sample out at the first decision:
+    // nothing is rejected, everything is answered at exit 0.
+    let n = 96usize;
+    let cfg = synthetic_cfg()
+        .with_admission(AdmissionConfig::deadline_us(0, ShedPolicy::ForceEarlyExit));
+    let server =
+        Server::start_with_engine(cfg, Arc::new(SyntheticEngineFactory::new(3))).unwrap();
+    let stats = server.stats.clone();
+    let mut rng = Rng::new(0xF0CE);
+    let mut rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        match server.try_submit(image(&mut rng)) {
+            SubmitOutcome::Enqueued(rx) => rxs.push(rx),
+            SubmitOutcome::Shed { id } => {
+                panic!("ForceEarlyExit must never reject outright (id {id})")
+            }
+        }
+    }
+    for rx in rxs {
+        let resp = rx
+            .recv_timeout(RECV_TIMEOUT)
+            .expect("every admitted sample must be classified");
+        assert!(resp.exited_early, "forced samples take the first exit");
+        assert_eq!(resp.exit_stage, 0);
+        assert!(!resp.spilled);
+    }
+    server.shutdown();
+    let snap = stats.snapshot();
+    assert_eq!(snap.admitted, n as u64);
+    assert_eq!(snap.served, n as u64);
+    assert_eq!(snap.forced_exits, n as u64);
+    assert_eq!(snap.shed, 0);
+    assert_eq!(snap.failed, 0);
+    assert!(stats.conservation_ok());
+}
+
+/// Sequential submit-and-wait so batch formation (and thus every
+/// counter) is deterministic; returns the final snapshot.
+fn run_sequential(cfg: ServerConfig, n: usize, seed: u64) -> StatsSnapshot {
+    let server =
+        Server::start_with_engine(cfg, Arc::new(SyntheticEngineFactory::new(3))).unwrap();
+    let stats = server.stats.clone();
+    let mut rng = Rng::new(seed);
+    for _ in 0..n {
+        let rx = server.submit(image(&mut rng));
+        rx.recv_timeout(RECV_TIMEOUT).unwrap();
+    }
+    let report = server.shutdown();
+    assert!(report.is_clean());
+    stats.snapshot()
+}
+
+#[test]
+fn none_plan_is_bit_identical_on_stats() {
+    let plain = run_sequential(synthetic_cfg(), 96, 0xB171D);
+    let with_none = run_sequential(synthetic_cfg().with_faults(ServeFaultPlan::NONE), 96, 0xB171D);
+    assert_eq!(plain, with_none);
+}
+
+#[test]
+fn supervised_restart_preserves_the_inflight_sample() {
+    // One injected crash mid-stream: the supervisor respawns the worker
+    // and the parked sample is still answered — nothing is lost.
+    let n = 16usize;
+    let plan = ServeFaultPlan {
+        crashes: vec![CrashFault { stage: 0, at_sample: 5 }],
+        ..ServeFaultPlan::NONE
+    };
+    let cfg = synthetic_cfg().with_faults(plan);
+    let server =
+        Server::start_with_engine(cfg, Arc::new(SyntheticEngineFactory::new(3))).unwrap();
+    let stats = server.stats.clone();
+    let mut rng = Rng::new(0xC8A5);
+    let rxs: Vec<_> = (0..n).map(|_| server.submit(image(&mut rng))).collect();
+    for rx in rxs {
+        rx.recv_timeout(RECV_TIMEOUT)
+            .expect("restart must preserve every in-flight sample");
+    }
+    let report = server.shutdown();
+    assert_eq!(report.restarts, 1, "exactly the injected crash");
+    assert!(report.is_clean(), "budget not exhausted: no degradation");
+    let snap = stats.snapshot();
+    assert_eq!(snap.served, n as u64);
+    assert_eq!(snap.failed, 0);
+    assert!(stats.conservation_ok());
+}
+
+#[test]
+fn exhausted_restart_budget_drains_gracefully() {
+    // Budget 0: the first crash degrades stage 0, which drains its
+    // queue — submitters see disconnects, every sample lands in
+    // `failed`, and the shutdown report says why.
+    let n = 16usize;
+    let plan = ServeFaultPlan {
+        crashes: vec![CrashFault { stage: 0, at_sample: 4 }],
+        ..ServeFaultPlan::NONE
+    };
+    let mut cfg = synthetic_cfg().with_faults(plan);
+    cfg.restart_budget = 0;
+    let server =
+        Server::start_with_engine(cfg, Arc::new(SyntheticEngineFactory::new(3))).unwrap();
+    let stats = server.stats.clone();
+    let mut rng = Rng::new(0xDE6D);
+    let rxs: Vec<_> = (0..n).map(|_| server.submit(image(&mut rng))).collect();
+    let mut answered = 0u64;
+    let mut dropped = 0u64;
+    for rx in rxs {
+        match rx.recv_timeout(RECV_TIMEOUT) {
+            Ok(_) => answered += 1,
+            Err(RecvTimeoutError::Disconnected) => dropped += 1,
+            Err(RecvTimeoutError::Timeout) => panic!("degraded drain must not hang"),
+        }
+    }
+    let report = server.shutdown();
+    assert_eq!(report.restarts, 0, "budget 0 allows no restarts");
+    assert_eq!(report.degraded.len(), 1);
+    assert_eq!(report.degraded[0].stage, 0);
+    assert!(
+        report.degraded[0].message.contains("injected fault"),
+        "degraded message carries the panic: {}",
+        report.degraded[0].message
+    );
+    // The first four samples beat the crash; everything else failed —
+    // but nothing is unaccounted for.
+    assert_eq!(answered, 4);
+    assert_eq!(dropped, n as u64 - 4);
+    let snap = stats.snapshot();
+    assert_eq!(snap.served, 4);
+    assert_eq!(snap.failed, n as u64 - 4);
+    assert!(stats.conservation_ok(), "{:?}", stats.conservation());
+}
