@@ -1,6 +1,7 @@
 //! DSE benchmarks — the Fig. 9a generator's cost (simulated-annealing
-//! throughput per problem kind, full TAP-sweep wall time) plus the
-//! resource-budget frontier sweep of `dse::pareto`.
+//! throughput per problem kind, full TAP-sweep wall time), the
+//! resource-budget frontier sweep of `dse::pareto`, and the certified
+//! optimality pass (`Realized::certify_frontier`, DESIGN.md §13).
 //!
 //!     cargo bench --bench bench_dse [-- --quick] [-- --save-json] [-- --check]
 //!
@@ -9,9 +10,11 @@
 //! `--check` gates shared metrics against that committed baseline with
 //! the standard 25% tolerance.
 
+use atheena::coordinator::pipeline::{CertifySummary, Toolflow};
+use atheena::coordinator::toolflow::ToolflowOptions;
 use atheena::dse::{
     anneal, sweep_budgets, sweep_budgets_parallel, sweep_frontier, AnnealConfig,
-    ParetoConfig, Problem, ProblemKind, SweepConfig,
+    ExactConfig, ParetoConfig, Problem, ProblemKind, SweepConfig,
 };
 use atheena::ir::network::testnet;
 use atheena::ir::Cdfg;
@@ -78,6 +81,27 @@ fn main() -> anyhow::Result<()> {
         pcfg.scalings.len() as f64 * s.per_second(),
         "anneals/s",
     );
+
+    // Certified-optimality pass (DESIGN.md §13): realize the quick
+    // pipeline once under a pinned seed, then time the exact
+    // branch-and-bound certification of every frontier point. The mean
+    // gap is deterministic (pinned anneal seed, deterministic oracle),
+    // so it participates in the --check regression gate.
+    let mut topts = ToolflowOptions::quick(Board::zc706());
+    topts.sweep.anneal.seed = 0xA7EE_BE9C;
+    let mut realized = Toolflow::new(&net, &topts)?
+        .sweep()?
+        .combine()?
+        .realize()?;
+    let mut summary = CertifySummary::default();
+    log.once("dse/exact/certify_ms", || {
+        summary = realized.certify_frontier(&ExactConfig::default());
+    });
+    println!(
+        "  -> certified {} frontier points ({} skipped), max gap {:.3}%",
+        summary.certified, summary.skipped, summary.max_gap_pct
+    );
+    log.metric("dse/exact/mean_gap_pct", summary.mean_gap_pct, "%");
 
     // Full Fig. 9a-style sweeps are the expensive reference runs; skip
     // them in the CI smoke configuration.

@@ -34,8 +34,8 @@ pub mod toolflow;
 pub use batch::{BatchHost, BatchReport, PjrtOracle};
 pub use batcher::DynamicBatcher;
 pub use pipeline::{
-    fingerprint, pack_designs, Combined, CombinedChoice, Curves, DesignFrontier, Lowered,
-    Measured, OperatingEnvelope, Packing, Realized, RealizedBaseline, RealizedDesign,
+    fingerprint, pack_designs, CertifySummary, Combined, CombinedChoice, Curves, DesignFrontier,
+    Lowered, Measured, OperatingEnvelope, Packing, Realized, RealizedBaseline, RealizedDesign,
     ResourceMatch, Toolflow,
 };
 pub use faults::{

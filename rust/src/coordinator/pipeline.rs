@@ -39,8 +39,8 @@
 //! bit-identical to the sequential path (`sweep_sequential`).
 
 use crate::dse::{
-    assemble_sweep, plan_sweep, run_tasks_parallel, AnnealResult, FrontierPoint,
-    ParetoFrontier, ProblemKind, SweepTask,
+    assemble_sweep, exact_seeded, plan_sweep, run_tasks_parallel, AnnealResult, ExactConfig,
+    FrontierPoint, ParetoFrontier, Problem, ProblemKind, SeededOutcome, SweepTask,
 };
 use crate::hls::{generate_design, stitch, DesignManifest};
 use crate::ir::{Cdfg, Network, StageId};
@@ -67,8 +67,11 @@ use super::toolflow::{
 /// (the Fig. 8-style p/q-mismatch sweep) persisted with the artifact.
 /// v4: the throughput/area [`DesignFrontier`] (baseline + EE Pareto
 /// fronts, the resource-matched comparison's data) persisted with the
-/// artifact.
-pub const DESIGN_SCHEMA_VERSION: u32 = 4;
+/// artifact. v5: per-frontier-point certified optimality gap
+/// (`FrontierPoint::gap_pct`, `None` until `atheena pareto --certify`
+/// runs the exact branch-and-bound oracle — uncertified designs
+/// round-trip unchanged).
+pub const DESIGN_SCHEMA_VERSION: u32 = 5;
 
 // ---------------------------------------------------------------------
 // Operating envelope
@@ -326,7 +329,7 @@ impl OperatingEnvelope {
 // ---------------------------------------------------------------------
 
 /// The paper's Fig. 9/10 frontier data, persisted with the design
-/// artifact (schema v4): the baseline's and the combined EE designs'
+/// artifact (since schema v4): the baseline's and the combined EE designs'
 /// non-dominated (throughput, area-norm) points, both normed against
 /// the full board. Pure post-processing of already-annealed designs —
 /// computing it performs **zero** anneal calls, so the warm-cache
@@ -763,7 +766,7 @@ impl Combined {
     }
 
     /// Extract the throughput/area [`DesignFrontier`] from realized
-    /// designs — the resource-budget artifact persisted with schema v4.
+    /// designs — the resource-budget artifact persisted since schema v4.
     /// Pure post-processing: baseline points pair predicted throughput
     /// with the realized area norm, EE points pair the Eq. 1 design-
     /// reach throughput with the sized design's area norm, and both
@@ -787,6 +790,7 @@ impl Combined {
                 resources: b.total_resources,
                 utilization: b.total_resources.utilization(&board.resources),
                 source: i,
+                gap_pct: None,
             })
             .collect();
         let ee_pts = designs
@@ -799,6 +803,7 @@ impl Combined {
                 resources: d.total_resources,
                 utilization: d.total_resources.utilization(&board.resources),
                 source: i,
+                gap_pct: None,
             })
             .collect();
         DesignFrontier {
@@ -849,7 +854,8 @@ pub struct Realized {
     pub stage_curves: Vec<TapCurve>,
     pub baselines: Vec<RealizedBaseline>,
     pub designs: Vec<RealizedDesign>,
-    /// Persisted throughput/area frontier (baseline + EE, schema v4).
+    /// Persisted throughput/area frontier (baseline + EE, since schema
+    /// v4; schema v5 adds per-point certified optimality gaps).
     pub frontier: DesignFrontier,
     /// Shared lowering arena (DESIGN.md §11): realization seeds it,
     /// `measure` reuses it, so a design is lowered once per artifact
@@ -858,10 +864,129 @@ pub struct Realized {
     pub arena: SharedArena,
 }
 
+/// Summary of one certification pass over the persisted frontier
+/// ([`Realized::certify_frontier`]): how many points received a
+/// certified optimality gap, how many were skipped because their exact
+/// problem exceeded the size budget, and the gap statistics the
+/// `--max-gap` CI gate checks.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CertifySummary {
+    pub certified: usize,
+    pub skipped: usize,
+    /// Largest certified gap in percent (0 when nothing certified).
+    pub max_gap_pct: f64,
+    /// Mean certified gap in percent (0 when nothing certified).
+    pub mean_gap_pct: f64,
+}
+
 impl Realized {
     /// Design-time hard probability at the first exit (two-stage "p").
     pub fn p(&self) -> f64 {
         self.reach.first().copied().unwrap_or(0.0)
+    }
+
+    /// Certify the persisted frontier against the exact branch-and-bound
+    /// oracle (DESIGN.md §13): every frontier point's recorded
+    /// throughput is compared to the provably optimal throughput of the
+    /// problem it was annealed under, and the optimality gap (percent,
+    /// `>= 0`) is written into `FrontierPoint::gap_pct`.
+    ///
+    /// Baseline points re-pose the baseline problem at the point's
+    /// budget fraction. EE points certify each pipeline section's TAP
+    /// pick at that pick's own budget fraction and combine the certified
+    /// stage throughputs through Eq. 1's min over
+    /// `exact_thr_s / reach_s` — the gap is against the best the
+    /// *recorded split* could have achieved. Every exact search is
+    /// seeded with the recorded design's (II, utilization), so a point
+    /// whose design is already optimal certifies as `SeedOptimal` with a
+    /// gap of exactly 0, and the seeds are sound (achieved by real
+    /// designs), so gaps can never be negative.
+    ///
+    /// Points whose exact problem exceeds `ecfg`'s size budget are
+    /// skipped (their `gap_pct` stays `None`). Performs **zero** anneal
+    /// calls, so certification composes with the warm-cache zero-anneal
+    /// contract; stage picks shared between frontier points are
+    /// certified once (memoized per `(section, source)`).
+    pub fn certify_frontier(&mut self, ecfg: &ExactConfig) -> CertifySummary {
+        use std::collections::HashMap;
+        let board = &self.opts.board;
+        let base_cdfg = Cdfg::lower_baseline(&self.net);
+        let ee_cdfg = Cdfg::lower(&self.net, 1);
+        let mut section_reach = Vec::with_capacity(self.reach.len() + 1);
+        section_reach.push(1.0);
+        section_reach.extend_from_slice(&self.reach);
+
+        let mut summary = CertifySummary::default();
+        let mut gaps: Vec<f64> = Vec::new();
+
+        for p in self.frontier.baseline.points.iter_mut() {
+            let problem = Problem::baseline(
+                base_cdfg.clone(),
+                board.budget(p.budget_fraction),
+                board.clock_hz,
+            );
+            let seed_util = p.resources.max_utilisation(&problem.budget);
+            let gap = match exact_seeded(&problem, ecfg, p.ii, seed_util) {
+                SeededOutcome::TooLarge => None,
+                SeededOutcome::SeedOptimal { .. } => Some(0.0),
+                SeededOutcome::Better(r) => {
+                    Some(((1.0 - p.throughput / r.throughput) * 100.0).max(0.0))
+                }
+            };
+            match gap {
+                Some(g) => {
+                    p.gap_pct = Some(g);
+                    gaps.push(g);
+                }
+                None => summary.skipped += 1,
+            }
+        }
+
+        // Certified stage throughput per (section, sweep source); `None`
+        // caches a TooLarge verdict so it is not retried per point.
+        let mut stage_memo: HashMap<(usize, usize), Option<f64>> = HashMap::new();
+        for p in self.frontier.ee.points.iter_mut() {
+            let d = &self.designs[p.source];
+            let mut certified: f64 = f64::INFINITY;
+            let mut too_large = false;
+            for (sec, pt) in d.combined.stages.iter().enumerate() {
+                let thr = *stage_memo.entry((sec, pt.source)).or_insert_with(|| {
+                    let problem = Problem::stage(
+                        sec,
+                        ee_cdfg.clone(),
+                        board.budget(pt.budget_fraction),
+                        board.clock_hz,
+                    );
+                    let seed_util = pt.resources.max_utilisation(&problem.budget);
+                    match exact_seeded(&problem, ecfg, pt.ii, seed_util) {
+                        SeededOutcome::TooLarge => None,
+                        SeededOutcome::SeedOptimal { .. } => Some(pt.throughput),
+                        SeededOutcome::Better(r) => Some(r.throughput),
+                    }
+                });
+                match thr {
+                    Some(t) => certified = certified.min(t / section_reach[sec]),
+                    None => {
+                        too_large = true;
+                        break;
+                    }
+                }
+            }
+            if too_large || !certified.is_finite() || certified <= 0.0 {
+                summary.skipped += 1;
+                continue;
+            }
+            let g = ((1.0 - p.throughput / certified) * 100.0).max(0.0);
+            p.gap_pct = Some(g);
+            gaps.push(g);
+        }
+
+        summary.certified = gaps.len();
+        if !gaps.is_empty() {
+            summary.max_gap_pct = gaps.iter().copied().fold(0.0, f64::max);
+            summary.mean_gap_pct = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        }
+        summary
     }
 
     /// Highest predicted-throughput design (same rule as
@@ -1062,7 +1187,11 @@ impl Realized {
     /// supplies the same network and options the artifact was built
     /// from (enforced via the fingerprint); CDFGs are re-lowered and
     /// manifests/timings regenerated from the stored foldings.
-    pub fn from_json(net: &Network, opts: &ToolflowOptions, doc: &Json) -> anyhow::Result<Realized> {
+    pub fn from_json(
+        net: &Network,
+        opts: &ToolflowOptions,
+        doc: &Json,
+    ) -> anyhow::Result<Realized> {
         let num = |v: &Json, k: &str| -> anyhow::Result<f64> {
             v.req(k)?
                 .as_f64()

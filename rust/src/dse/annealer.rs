@@ -115,10 +115,15 @@ pub struct AnnealResult {
 /// decreases, which triggers a lazy O(active) rescan — the classic
 /// count-of-max scheme. Rejected proposals undo through the same
 /// bookkeeping, so no energy recomputation happens on the undo path.
-struct EvalCache {
+///
+/// Crate-visible: `dse::exact` reuses the same cache as its leaf
+/// evaluator (assign-candidate / undo around each branch-and-bound
+/// descent), so the exact oracle and the annealer score leaves through
+/// identical bookkeeping.
+pub(crate) struct EvalCache {
     ii: Vec<u64>,
     res: Vec<crate::resources::ResourceVec>,
-    total_res: crate::resources::ResourceVec,
+    pub(crate) total_res: crate::resources::ResourceVec,
     /// Active node ids (the nodes `max_ii` ranges over).
     active_ids: Vec<usize>,
     /// Membership mask over all node ids.
@@ -128,7 +133,7 @@ struct EvalCache {
 }
 
 impl EvalCache {
-    fn new(problem: &Problem, mapping: &HwMapping) -> EvalCache {
+    pub(crate) fn new(problem: &Problem, mapping: &HwMapping) -> EvalCache {
         let ii: Vec<u64> = (0..mapping.cdfg.nodes.len())
             .map(|id| mapping.node_ii(id))
             .collect();
@@ -201,7 +206,7 @@ impl EvalCache {
 
     /// Apply a single-node folding change; returns the previous (ii, res)
     /// for undo.
-    fn update(
+    pub(crate) fn update(
         &mut self,
         mapping: &HwMapping,
         id: usize,
@@ -218,7 +223,7 @@ impl EvalCache {
         old
     }
 
-    fn undo(&mut self, id: usize, old: (u64, crate::resources::ResourceVec)) {
+    pub(crate) fn undo(&mut self, id: usize, old: (u64, crate::resources::ResourceVec)) {
         self.total_res = self.total_res.saturating_sub(&self.res[id]) + old.1;
         let prev_ii = self.ii[id];
         self.ii[id] = old.0;
@@ -230,7 +235,7 @@ impl EvalCache {
 
     /// Maximum II over the active nodes — O(1), maintained
     /// incrementally.
-    fn max_active_ii(&self) -> u64 {
+    pub(crate) fn max_active_ii(&self) -> u64 {
         self.max_ii
     }
 }

@@ -201,6 +201,88 @@ mod tests {
     }
 
     #[test]
+    fn greedy_is_deterministic() {
+        let p = problem(0.5);
+        let a = greedy(&p);
+        let b = greedy(&p);
+        assert_eq!(a.mapping.foldings, b.mapping.foldings);
+        assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+        assert_eq!(a.ii, b.ii);
+        assert_eq!(a.resources, b.resources);
+    }
+
+    #[test]
+    fn random_search_is_seed_deterministic_and_feasible() {
+        let p = problem(0.4);
+        let cfg = AnnealConfig::quick();
+        let a = random_search(&p, &cfg);
+        let b = random_search(&p, &cfg);
+        assert_eq!(a.mapping.foldings, b.mapping.foldings, "same seed, same search");
+        assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+        assert!(a.feasible);
+        assert!(a.resources.fits_in(&p.budget));
+        // The evaluation budget is the annealer's (iterations × restarts).
+        assert_eq!(a.iterations_run, cfg.iterations * cfg.restarts);
+        // A budget too small even for the minimal mapping falls back to
+        // the minimal mapping and reports it infeasible, not a panic.
+        let mut starved = problem(0.4);
+        starved.budget = ResourceVec::new(10, 10, 1, 1);
+        let f = random_search(&starved, &cfg);
+        assert!(!f.feasible);
+        assert_eq!(f.mapping.foldings, starved.mapping.foldings);
+    }
+
+    #[test]
+    fn heuristic_baselines_never_beat_the_exact_oracle() {
+        // The ablation ordering behind the paper's comparison tables:
+        // every heuristic is bounded by the certified optimum
+        // (DESIGN.md §13) on a problem small enough to solve exactly.
+        use crate::dse::exact::{exact, ExactConfig, ExactOutcome};
+        let mut p = problem(0.5);
+        p.active.truncate(3);
+        let ExactOutcome::Optimal(opt) = exact(&p, &ExactConfig::default()) else {
+            panic!("truncated baseline problem must be exactly solvable");
+        };
+        let gr = greedy(&p);
+        let rs = random_search(&p, &AnnealConfig::quick());
+        for (name, r) in [("greedy", &gr), ("random", &rs)] {
+            if r.feasible {
+                assert!(
+                    r.ii >= opt.ii,
+                    "{name} beat the exact oracle: {} < {}",
+                    r.ii,
+                    opt.ii
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn naive_combine_fits_budget_or_reports_none() {
+        let pt = |thr: f64, dsp: u64| TapPoint {
+            resources: ResourceVec::new(dsp * 10, dsp * 10, dsp, 10),
+            throughput: thr,
+            ii: 1,
+            budget_fraction: 0.0,
+            source: 0,
+        };
+        let f = TapCurve::from_points(vec![pt(100.0, 100), pt(390.0, 650)]);
+        let g = TapCurve::from_points(vec![pt(90.0, 90), pt(400.0, 650)]);
+        // A budget that fits the cheap pair: the pick fits, ignores p
+        // (the strawman's defining shape), and rates at the stage min.
+        let budget = ResourceVec::new(4_000, 4_000, 250, 1_000);
+        let d = naive_combine(&f, &g, &budget).unwrap();
+        assert!((d.stage1.resources + d.stage2.resources).fits_in(&budget));
+        assert_eq!(d.p, 1.0, "naive allocation is blind to p");
+        assert_eq!(
+            d.throughput_at_p,
+            d.stage1.throughput.min(d.stage2.throughput)
+        );
+        // Nothing fits: no silent wrong answer.
+        assert!(naive_combine(&f, &g, &ResourceVec::new(10, 10, 1, 1)).is_none());
+    }
+
+    #[test]
     fn naive_combine_ignores_p_and_loses() {
         // Construct curves where probability-aware allocation wins: the
         // second stage can be 4x under-provisioned at p=0.25.

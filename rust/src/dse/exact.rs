@@ -1,0 +1,666 @@
+//! Exact branch-and-bound oracle over the folding ladder (DESIGN.md
+//! §13). For problems within a configurable size budget this returns
+//! the *provably optimal* mapping under either [`Objective`] arm —
+//! the certification instrument behind `atheena pareto --certify` and
+//! the differential anchor the annealer is property-tested against.
+//!
+//! Search space : per active node, the cartesian product of its
+//!                [`FoldingSpace`] axes (coarse_in × coarse_out ×
+//!                fine), pre-filtered by weak dominance — a candidate
+//!                survives only if no other candidate is at least as
+//!                fast *and* at least as small (ties keep the
+//!                lexicographically earliest). Every dropped point has
+//!                a kept dominator, so the filtered optimum equals the
+//!                full-ladder optimum in (II, area) value.
+//! Leaf rule    : the same [`EvalCache`] bookkeeping the annealer
+//!                scores with — II from `max_active_ii`, resources
+//!                from `total_res`, feasibility from `fits_in`, the
+//!                `MinAreaAtThroughput` target checked with the
+//!                identical float expression.
+//! Bounds       : nodes below the current depth sit at their minimum-
+//!                II candidate, so the cache's running max-II is an
+//!                admissible II lower bound; an assigned-prefix total
+//!                plus a per-suffix componentwise-minimum table is an
+//!                admissible resource floor. Both bounds are monotone
+//!                under the objective's `improves` order, so pruning
+//!                never discards a strictly improving leaf and the
+//!                pruned search is bit-identical to the unpruned
+//!                [`exact_exhaustive`] reference (first-optimal-in-
+//!                lex-order wins in both).
+//! Certification: [`exact_seeded`] installs an *achieved* (II, area)
+//!                value as a virtual incumbent; if nothing beats it
+//!                the seed was optimal (gap 0), otherwise the search
+//!                returns exactly the canonical unseeded optimum.
+//!                [`certify`] wraps an anneal with that check and
+//!                reports the optimality gap in percent.
+
+use super::annealer::{anneal, AnnealConfig, AnnealResult, EvalCache};
+use super::problem::{Objective, Problem};
+use crate::resources::ResourceVec;
+use crate::sdf::{Folding, HwMapping};
+
+/// Size budget for the exact search. Problems beyond it report
+/// [`ExactOutcome::TooLarge`] instead of running unbounded.
+#[derive(Clone, Debug)]
+pub struct ExactConfig {
+    /// Maximum number of active nodes.
+    pub max_nodes: usize,
+    /// Maximum product of per-node candidate-list lengths (after
+    /// dominance filtering).
+    pub max_leaves: u128,
+    /// Hard cap on search steps (candidate assignments); exceeding it
+    /// mid-search aborts to `TooLarge` rather than running away.
+    pub max_visits: u64,
+}
+
+impl Default for ExactConfig {
+    fn default() -> Self {
+        ExactConfig {
+            max_nodes: 16,
+            max_leaves: 200_000_000,
+            max_visits: 2_000_000,
+        }
+    }
+}
+
+impl ExactConfig {
+    /// Tight budget for inline pipeline use (the `min_area_design`
+    /// polish): small problems still get certified, oversized ones fall
+    /// through to `TooLarge` quickly instead of stalling a search the
+    /// caller treats as optional.
+    pub fn polish() -> ExactConfig {
+        ExactConfig {
+            max_nodes: 12,
+            max_leaves: 250_000,
+            max_visits: 500_000,
+        }
+    }
+}
+
+/// A provably optimal design.
+#[derive(Clone, Debug)]
+pub struct ExactResult {
+    pub mapping: HwMapping,
+    pub ii: u64,
+    pub throughput: f64,
+    pub resources: ResourceVec,
+    /// Scalar area norm against the problem budget
+    /// ([`ResourceVec::max_utilisation`]).
+    pub utilization: f64,
+    /// Search steps taken (candidate assignments + leaf evaluations).
+    pub visits: u64,
+}
+
+/// What the exact solver concluded.
+#[derive(Clone, Debug)]
+pub enum ExactOutcome {
+    /// The problem exceeds the [`ExactConfig`] size budget; nothing
+    /// was proved.
+    TooLarge,
+    /// No qualifying design exists: nothing fits the budget (or, under
+    /// `MinAreaAtThroughput`, nothing meets the target within it).
+    Infeasible,
+    Optimal(ExactResult),
+}
+
+/// Outcome of a seeded search ([`exact_seeded`]).
+#[derive(Clone, Debug)]
+pub enum SeededOutcome {
+    TooLarge,
+    /// No design strictly improves on the seed value — the seed is
+    /// certified optimal.
+    SeedOptimal { visits: u64 },
+    /// A strictly better design exists; it is the canonical optimum
+    /// (identical to what the unseeded [`exact`] returns).
+    Better(ExactResult),
+}
+
+/// A heuristic result certified against the exact optimum.
+#[derive(Clone, Debug)]
+pub struct CertifiedGap {
+    pub exact: ExactResult,
+    pub anneal: AnnealResult,
+    /// Optimality gap in percent, `>= 0` by construction: throughput
+    /// shortfall for `MaxThroughput`/`ParetoFront`, area excess for
+    /// `MinAreaAtThroughput`. `0.0` means the heuristic was optimal.
+    pub gap_pct: f64,
+}
+
+/// One ladder point of one node, with its precomputed cost.
+#[derive(Clone, Copy)]
+struct Candidate {
+    folding: Folding,
+    ii: u64,
+    res: ResourceVec,
+}
+
+/// Enumerate a node's ladder in lexicographic axis order (coarse_in
+/// outermost, fine innermost), probing II/resources through the same
+/// mapping calls the annealer's cache uses.
+fn node_candidates(mapping: &mut HwMapping, id: usize) -> Vec<Candidate> {
+    let saved = mapping.foldings[id];
+    let space = mapping.spaces[id].clone();
+    let mut out =
+        Vec::with_capacity(space.coarse_in.len() * space.coarse_out.len() * space.fine.len());
+    for &coarse_in in &space.coarse_in {
+        for &coarse_out in &space.coarse_out {
+            for &fine in &space.fine {
+                let folding = Folding {
+                    coarse_in,
+                    coarse_out,
+                    fine,
+                };
+                mapping.foldings[id] = folding;
+                out.push(Candidate {
+                    folding,
+                    ii: mapping.node_ii(id),
+                    res: mapping.node_resources(id),
+                });
+            }
+        }
+    }
+    mapping.foldings[id] = saved;
+    out
+}
+
+/// Weak-dominance filter preserving enumeration order. Candidate `j`
+/// is dropped iff some `i != j` is at least as fast and at least as
+/// small, with the tie-break `(i < j || strictly better)` keeping
+/// exactly the first of any equal pair. Transitivity guarantees every
+/// dropped candidate has a *kept* dominator, so the optimal (II, area)
+/// value is preserved.
+fn dominance_filter(cands: &[Candidate]) -> Vec<Candidate> {
+    let mut keep = Vec::with_capacity(cands.len());
+    'outer: for (j, c) in cands.iter().enumerate() {
+        for (i, d) in cands.iter().enumerate() {
+            if i != j
+                && d.ii <= c.ii
+                && d.res.fits_in(&c.res)
+                && (i < j || d.ii < c.ii || d.res != c.res)
+            {
+                continue 'outer;
+            }
+        }
+        keep.push(*c);
+    }
+    keep
+}
+
+/// "Strictly better under the objective" — the total order both the
+/// incumbent rule and the bound-pruning rule share. Antitone in both
+/// arguments, which is what makes pruning on (II lower bound, area
+/// lower bound) safe: a leaf can only be worse-or-equal to its
+/// branch's bound, so a bound that fails to improve proves the whole
+/// branch fails to improve.
+fn improves(objective: Objective, ii: u64, util: f64, inc_ii: u64, inc_util: f64) -> bool {
+    match objective {
+        Objective::MinAreaAtThroughput(_) => util < inc_util || (util == inc_util && ii < inc_ii),
+        Objective::MaxThroughput | Objective::ParetoFront => {
+            ii < inc_ii || (ii == inc_ii && util < inc_util)
+        }
+    }
+}
+
+/// Best leaf found so far (values + folding snapshot of the path).
+struct Incumbent {
+    ii: u64,
+    util: f64,
+    /// `None` for a virtual (seeded) incumbent: the value gates the
+    /// search but carries no design of its own.
+    best: Option<(HwMapping, ResourceVec)>,
+}
+
+struct Search<'a> {
+    problem: &'a Problem,
+    cands: &'a [Vec<Candidate>],
+    /// `suffix_min[k]` = Σ over depths ≥ k of the componentwise
+    /// minimum resource vector of that node's candidates (sentinel
+    /// `ZERO` at depth n).
+    suffix_min: &'a [ResourceVec],
+    mapping: HwMapping,
+    cache: EvalCache,
+    /// Infrastructure (when charged) + resources of the assigned
+    /// prefix — the exact part of the resource floor.
+    partial: ResourceVec,
+    prune: bool,
+    visits: u64,
+    max_visits: u64,
+    aborted: bool,
+    incumbent: Option<Incumbent>,
+}
+
+impl Search<'_> {
+    fn descend(&mut self, depth: usize) {
+        if depth == self.cands.len() {
+            self.visits += 1;
+            if self.visits > self.max_visits {
+                self.aborted = true;
+                return;
+            }
+            let ii = self.cache.max_active_ii();
+            let total = self.cache.total_res;
+            if !total.fits_in(&self.problem.budget) {
+                return;
+            }
+            if let Objective::MinAreaAtThroughput(target) = self.problem.objective {
+                // Identical float expression to the annealer's
+                // objective_score, so "meets the target" can never
+                // disagree between the two searches.
+                let thr = self.problem.clock_hz / ii as f64;
+                if thr < target {
+                    return;
+                }
+            }
+            let util = total.max_utilisation(&self.problem.budget);
+            let better = match &self.incumbent {
+                None => true,
+                Some(inc) => improves(self.problem.objective, ii, util, inc.ii, inc.util),
+            };
+            if better {
+                self.incumbent = Some(Incumbent {
+                    ii,
+                    util,
+                    best: Some((self.mapping.clone(), total)),
+                });
+            }
+            return;
+        }
+        let id = self.problem.active[depth];
+        let init = self.mapping.foldings[id];
+        for c in &self.cands[depth] {
+            self.visits += 1;
+            if self.visits > self.max_visits {
+                self.aborted = true;
+                return;
+            }
+            self.mapping.foldings[id] = c.folding;
+            let old = self.cache.update(&self.mapping, id);
+            let saved_partial = self.partial;
+            self.partial += c.res;
+            let mut skip = false;
+            if self.prune {
+                let floor = self.partial + self.suffix_min[depth + 1];
+                if !floor.fits_in(&self.problem.budget) {
+                    // No completion of this prefix fits the budget.
+                    skip = true;
+                } else {
+                    let bound_ii = self.cache.max_active_ii();
+                    if let Objective::MinAreaAtThroughput(target) = self.problem.objective {
+                        if self.problem.clock_hz / bound_ii as f64 < target {
+                            // Even the optimistic completion misses
+                            // the throughput target.
+                            skip = true;
+                        }
+                    }
+                    if !skip {
+                        if let Some(inc) = &self.incumbent {
+                            let bound_util = floor.max_utilisation(&self.problem.budget);
+                            if !improves(
+                                self.problem.objective,
+                                bound_ii,
+                                bound_util,
+                                inc.ii,
+                                inc.util,
+                            ) {
+                                skip = true;
+                            }
+                        }
+                    }
+                }
+            }
+            if !skip {
+                self.descend(depth + 1);
+            }
+            self.partial = saved_partial;
+            self.cache.undo(id, old);
+            self.mapping.foldings[id] = init;
+            if self.aborted {
+                return;
+            }
+        }
+    }
+}
+
+enum RawOutcome {
+    TooLarge,
+    /// Search completed without improving on the (possibly virtual)
+    /// incumbent.
+    NoImprovement { visits: u64 },
+    Found(ExactResult),
+}
+
+fn run(problem: &Problem, cfg: &ExactConfig, prune: bool, seed: Option<(u64, f64)>) -> RawOutcome {
+    let n = problem.active.len();
+    if n > cfg.max_nodes {
+        return RawOutcome::TooLarge;
+    }
+    let mut mapping = problem.mapping.clone();
+    let mut cands = Vec::with_capacity(n);
+    let mut leaves: u128 = 1;
+    for &id in &problem.active {
+        let list = dominance_filter(&node_candidates(&mut mapping, id));
+        leaves = leaves.saturating_mul(list.len() as u128);
+        cands.push(list);
+    }
+    if leaves > cfg.max_leaves {
+        return RawOutcome::TooLarge;
+    }
+
+    // Initialize every active node at its *first* minimum-II candidate
+    // (explicit first-min loop: unassigned suffix nodes must sit at
+    // their fastest point for the cache's max-II to be an admissible
+    // lower bound).
+    for (k, &id) in problem.active.iter().enumerate() {
+        let list = &cands[k];
+        let mut best = 0;
+        for (i, c) in list.iter().enumerate() {
+            if c.ii < list[best].ii {
+                best = i;
+            }
+        }
+        mapping.foldings[id] = list[best].folding;
+    }
+
+    // Per-suffix componentwise-minimum resource table (admissible
+    // floor for the unassigned tail).
+    let mut suffix_min = vec![ResourceVec::ZERO; n + 1];
+    for k in (0..n).rev() {
+        let mut m = cands[k][0].res;
+        for c in &cands[k][1..] {
+            m = ResourceVec::new(
+                m.lut.min(c.res.lut),
+                m.ff.min(c.res.ff),
+                m.dsp.min(c.res.dsp),
+                m.bram.min(c.res.bram),
+            );
+        }
+        suffix_min[k] = m + suffix_min[k + 1];
+    }
+
+    let cache = EvalCache::new(problem, &mapping);
+    let partial = if Problem::charges_infrastructure(problem.kind) {
+        crate::resources::model::infrastructure()
+    } else {
+        ResourceVec::ZERO
+    };
+    let mut search = Search {
+        problem,
+        cands: &cands,
+        suffix_min: &suffix_min,
+        mapping,
+        cache,
+        partial,
+        prune,
+        visits: 0,
+        max_visits: cfg.max_visits,
+        aborted: false,
+        incumbent: seed.map(|(ii, util)| Incumbent {
+            ii,
+            util,
+            best: None,
+        }),
+    };
+    search.descend(0);
+    if search.aborted {
+        return RawOutcome::TooLarge;
+    }
+    let visits = search.visits;
+    match search.incumbent {
+        Some(Incumbent {
+            ii,
+            util,
+            best: Some((mapping, resources)),
+        }) => RawOutcome::Found(ExactResult {
+            throughput: problem.clock_hz / ii as f64,
+            mapping,
+            ii,
+            resources,
+            utilization: util,
+            visits,
+        }),
+        _ => RawOutcome::NoImprovement { visits },
+    }
+}
+
+/// Provably optimal mapping for `problem` under its objective, by
+/// bounded branch-and-bound. Deterministic: ties resolve to the first
+/// optimum in candidate-lex order, identically to
+/// [`exact_exhaustive`].
+pub fn exact(problem: &Problem, cfg: &ExactConfig) -> ExactOutcome {
+    match run(problem, cfg, true, None) {
+        RawOutcome::TooLarge => ExactOutcome::TooLarge,
+        RawOutcome::NoImprovement { .. } => ExactOutcome::Infeasible,
+        RawOutcome::Found(r) => ExactOutcome::Optimal(r),
+    }
+}
+
+/// Unpruned reference oracle: identical candidate lists, enumeration
+/// order, leaf rule, and tie-break as [`exact`], with every leaf
+/// visited. The property suite pins the two bit-identical.
+pub fn exact_exhaustive(problem: &Problem, cfg: &ExactConfig) -> ExactOutcome {
+    match run(problem, cfg, false, None) {
+        RawOutcome::TooLarge => ExactOutcome::TooLarge,
+        RawOutcome::NoImprovement { .. } => ExactOutcome::Infeasible,
+        RawOutcome::Found(r) => ExactOutcome::Optimal(r),
+    }
+}
+
+/// Branch-and-bound with a virtual incumbent at an *achieved*
+/// `(seed_ii, seed_util)` value (e.g. an annealed design's). If no
+/// design strictly improves on the seed under the objective, the seed
+/// is optimal; otherwise the returned design is exactly the canonical
+/// unseeded optimum (the first optimal leaf in lex order survives the
+/// seeded pruning too, because pruning only removes branches whose
+/// bound fails to improve on a value the optimum strictly beats).
+pub fn exact_seeded(
+    problem: &Problem,
+    cfg: &ExactConfig,
+    seed_ii: u64,
+    seed_util: f64,
+) -> SeededOutcome {
+    match run(problem, cfg, true, Some((seed_ii, seed_util))) {
+        RawOutcome::TooLarge => SeededOutcome::TooLarge,
+        RawOutcome::NoImprovement { visits } => SeededOutcome::SeedOptimal { visits },
+        RawOutcome::Found(r) => SeededOutcome::Better(r),
+    }
+}
+
+/// Anneal `problem`, then certify the result against the exact
+/// optimum. `None` when the problem exceeds the exact-size budget or
+/// the anneal found nothing feasible to certify.
+pub fn certify(
+    problem: &Problem,
+    acfg: &AnnealConfig,
+    ecfg: &ExactConfig,
+) -> Option<CertifiedGap> {
+    let annealed = anneal(problem, acfg);
+    certify_result(problem, &annealed, ecfg)
+}
+
+/// Certify an already-computed anneal result (the zero-extra-anneal
+/// path `Realized::certify_frontier` uses on cached artifacts).
+pub fn certify_result(
+    problem: &Problem,
+    annealed: &AnnealResult,
+    ecfg: &ExactConfig,
+) -> Option<CertifiedGap> {
+    if !annealed.feasible {
+        return None;
+    }
+    let seed_util = annealed.resources.max_utilisation(&problem.budget);
+    match exact_seeded(problem, ecfg, annealed.ii, seed_util) {
+        SeededOutcome::TooLarge => None,
+        SeededOutcome::SeedOptimal { visits } => Some(CertifiedGap {
+            exact: ExactResult {
+                mapping: annealed.mapping.clone(),
+                ii: annealed.ii,
+                throughput: annealed.throughput,
+                resources: annealed.resources,
+                utilization: seed_util,
+                visits,
+            },
+            anneal: annealed.clone(),
+            gap_pct: 0.0,
+        }),
+        SeededOutcome::Better(exact) => {
+            let gap_pct = gap_percent(problem.objective, annealed, &exact, seed_util);
+            Some(CertifiedGap {
+                exact,
+                anneal: annealed.clone(),
+                gap_pct,
+            })
+        }
+    }
+}
+
+/// Optimality gap in percent — throughput shortfall for the
+/// throughput objectives, area excess for min-area. Clamped at 0 to
+/// absorb float round-off; a genuinely negative gap would mean the
+/// oracle is wrong and is what `tests/exact_props.rs` hunts for.
+fn gap_percent(
+    objective: Objective,
+    annealed: &AnnealResult,
+    exact: &ExactResult,
+    seed_util: f64,
+) -> f64 {
+    let gap = match objective {
+        Objective::MinAreaAtThroughput(_) => {
+            if exact.utilization > 0.0 {
+                (seed_util / exact.utilization - 1.0) * 100.0
+            } else {
+                0.0
+            }
+        }
+        Objective::MaxThroughput | Objective::ParetoFront => {
+            (1.0 - annealed.throughput / exact.throughput) * 100.0
+        }
+    };
+    gap.max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::network::testnet;
+    use crate::ir::Cdfg;
+    use crate::resources::Board;
+
+    fn tiny_problem(n_active: usize, frac: f64) -> Problem {
+        let net = testnet::blenet_like();
+        let board = Board::zc706();
+        let mut p = Problem::baseline(
+            Cdfg::lower_baseline(&net),
+            board.budget(frac),
+            board.clock_hz,
+        );
+        p.active.truncate(n_active);
+        p
+    }
+
+    #[test]
+    fn pruned_matches_exhaustive_on_tiny_problem() {
+        let cfg = ExactConfig::default();
+        for objective in [
+            Objective::MaxThroughput,
+            Objective::MinAreaAtThroughput(1_000.0),
+        ] {
+            let p = tiny_problem(3, 0.5).with_objective(objective);
+            let (a, b) = (exact(&p, &cfg), exact_exhaustive(&p, &cfg));
+            match (a, b) {
+                (ExactOutcome::Optimal(x), ExactOutcome::Optimal(y)) => {
+                    assert_eq!(x.ii, y.ii);
+                    assert_eq!(x.resources, y.resources);
+                    assert_eq!(x.mapping.foldings, y.mapping.foldings);
+                    assert_eq!(x.throughput.to_bits(), y.throughput.to_bits());
+                    assert_eq!(x.utilization.to_bits(), y.utilization.to_bits());
+                    assert!(x.visits <= y.visits, "pruning never adds work");
+                }
+                other => panic!("expected Optimal from both, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn optimal_fits_budget_and_dominates_minimal() {
+        let p = tiny_problem(3, 0.5);
+        let ExactOutcome::Optimal(r) = exact(&p, &ExactConfig::default()) else {
+            panic!("tiny problem must be solvable");
+        };
+        assert!(r.resources.fits_in(&p.budget));
+        assert!(r.ii <= p.ii(&p.mapping), "optimum no slower than minimal");
+        assert!(r.visits > 0);
+    }
+
+    #[test]
+    fn size_budget_reports_too_large() {
+        let net = testnet::blenet_like();
+        let board = Board::zc706();
+        let p = Problem::baseline(
+            Cdfg::lower_baseline(&net),
+            board.resources,
+            board.clock_hz,
+        );
+        // The full baseline ladder is far beyond two leaves.
+        let cfg = ExactConfig {
+            max_leaves: 2,
+            ..ExactConfig::default()
+        };
+        assert!(matches!(exact(&p, &cfg), ExactOutcome::TooLarge));
+        let cfg = ExactConfig {
+            max_nodes: 1,
+            ..ExactConfig::default()
+        };
+        assert!(matches!(exact(&p, &cfg), ExactOutcome::TooLarge));
+        let cfg = ExactConfig {
+            max_visits: 3,
+            ..ExactConfig::default()
+        };
+        let small = tiny_problem(3, 0.5);
+        assert!(matches!(exact(&small, &cfg), ExactOutcome::TooLarge));
+    }
+
+    #[test]
+    fn empty_budget_is_infeasible() {
+        // Baseline problems charge infrastructure, which can never fit
+        // a zero budget.
+        let p = tiny_problem(2, 0.0);
+        assert!(matches!(
+            exact(&p, &ExactConfig::default()),
+            ExactOutcome::Infeasible
+        ));
+    }
+
+    #[test]
+    fn seeded_search_is_consistent_with_unseeded() {
+        let cfg = ExactConfig::default();
+        let p = tiny_problem(3, 0.5);
+        let ExactOutcome::Optimal(opt) = exact(&p, &cfg) else {
+            panic!("tiny problem must be solvable");
+        };
+        // Seeding with the optimum itself: nothing strictly better.
+        match exact_seeded(&p, &cfg, opt.ii, opt.utilization) {
+            SeededOutcome::SeedOptimal { .. } => {}
+            other => panic!("optimal seed must certify, got {other:?}"),
+        }
+        // Seeding with a strictly worse value returns the canonical
+        // optimum, bit for bit.
+        match exact_seeded(&p, &cfg, opt.ii + 7, opt.utilization) {
+            SeededOutcome::Better(r) => {
+                assert_eq!(r.ii, opt.ii);
+                assert_eq!(r.resources, opt.resources);
+                assert_eq!(r.mapping.foldings, opt.mapping.foldings);
+            }
+            other => panic!("worse seed must be beaten, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn certify_reports_nonnegative_gap() {
+        let p = tiny_problem(3, 0.5);
+        let g = certify(&p, &AnnealConfig::quick(), &ExactConfig::default())
+            .expect("tiny problem must certify");
+        assert!(g.gap_pct >= 0.0);
+        assert!(g.anneal.ii >= g.exact.ii, "annealer can never beat exact");
+        assert!(g.exact.resources.fits_in(&p.budget));
+    }
+}

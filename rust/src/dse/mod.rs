@@ -12,10 +12,16 @@
 //! * [`pareto`]   — budget-*scaling* sweeps producing the throughput/area
 //!                  frontier, the resource-matched lookup, and the
 //!                  area-minimizing search (the paper's "46% of the
-//!                  resources" claim).
+//!                  resources" claim),
+//! * [`exact`]    — the certified optimization layer (DESIGN.md §13): a
+//!                  deterministic branch-and-bound oracle returning
+//!                  provably optimal mappings for size-bounded problems,
+//!                  with seeded certification producing the per-design
+//!                  optimality gap `atheena pareto --certify` reports.
 
 pub mod annealer;
 pub mod baselines;
+pub mod exact;
 pub mod pareto;
 pub mod problem;
 pub mod sweep;
@@ -24,6 +30,10 @@ pub use annealer::{
     anneal, anneal_call_count, anneal_seeded, anneal_sequential, AnnealConfig, AnnealResult,
 };
 pub use baselines::{greedy, naive_combine, random_search};
+pub use exact::{
+    certify, certify_result, exact, exact_exhaustive, exact_seeded, CertifiedGap, ExactConfig,
+    ExactOutcome, ExactResult, SeededOutcome,
+};
 pub use pareto::{
     assemble_frontier, min_area_design, plan_frontier, solve, sweep_frontier,
     sweep_frontier_sequential, FrontierPoint, ObjectiveOutcome, ParetoConfig,

@@ -118,18 +118,31 @@ pub struct FrontierPoint {
     pub utilization: f64,
     /// Index into the originating design list / raw sweep results.
     pub source: usize,
+    /// Certified optimality gap in percent (`atheena pareto
+    /// --certify`, DESIGN.md §13): how far this point's heuristic
+    /// design sits from the exact branch-and-bound optimum at its
+    /// budget. `None` until certification runs (or when the point's
+    /// problem exceeds the exact-size budget) — uncertified artifacts
+    /// round-trip unchanged, byte for byte.
+    pub gap_pct: Option<f64>,
 }
 
 impl FrontierPoint {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("budget_fraction", Json::Num(self.budget_fraction)),
             ("ii", Json::num(self.ii as f64)),
             ("throughput", Json::Num(self.throughput)),
             ("resources", self.resources.to_json()),
             ("utilization", Json::Num(self.utilization)),
             ("source", Json::num(self.source as f64)),
-        ])
+        ];
+        if let Some(gap) = self.gap_pct {
+            // Serialized only when present: schema-v5 artifacts without
+            // certification stay byte-identical to their v4 bodies.
+            fields.push(("gap_pct", Json::Num(gap)));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(v: &Json) -> anyhow::Result<FrontierPoint> {
@@ -145,6 +158,7 @@ impl FrontierPoint {
             resources: ResourceVec::from_json(v.req("resources")?)?,
             utilization: num("utilization")?,
             source: num("source")? as usize,
+            gap_pct: v.get("gap_pct").and_then(|g| g.as_f64()),
         })
     }
 }
@@ -271,6 +285,7 @@ pub fn assemble_frontier(
             resources: r.resources,
             utilization: r.resources.utilization(&board.resources),
             source: i,
+            gap_pct: None,
         })
         .collect::<Vec<_>>();
     Ok(ParetoFrontier::from_points(raw))
@@ -373,9 +388,12 @@ pub struct ObjectiveOutcome {
 /// one objective-aware refinement anneal
 /// ([`Objective::MinAreaAtThroughput`]) at that point's budget and keep
 /// the refined design only when it meets the target, fits, and
-/// **strictly** lowers the area norm. By construction the outcome is
-/// never beaten by a frontier point of lower area (property-tested in
-/// `tests/pareto_props.rs`).
+/// **strictly** lowers the area norm. When the problem fits the
+/// exact-size budget a final seeded branch-and-bound polish
+/// ([`exact_seeded`](super::exact::exact_seeded)) replaces the
+/// heuristic pick with the *provably* area-minimal design at that
+/// budget. By construction the outcome is never beaten by a frontier
+/// point of lower area (property-tested in `tests/pareto_props.rs`).
 pub fn min_area_design(
     kind: ProblemKind,
     cdfg: &Cdfg,
@@ -417,6 +435,36 @@ pub fn min_area_design(
         let u = refined.resources.utilization(&board.resources);
         if u < outcome.utilization {
             outcome.result = refined;
+            outcome.utilization = u;
+        }
+    }
+
+    // Exact polish: seed the branch-and-bound oracle with the best
+    // heuristic value so far; if a provably smaller qualifying design
+    // exists within the size budget, take it. `polish()` keeps the
+    // worst-case visit count small enough for the inline pipeline path;
+    // oversized problems fall through with the heuristic pick intact.
+    let seed_util = outcome
+        .result
+        .resources
+        .max_utilisation(&problem.budget);
+    if let super::exact::SeededOutcome::Better(r) = super::exact::exact_seeded(
+        &problem,
+        &super::exact::ExactConfig::polish(),
+        outcome.result.ii,
+        seed_util,
+    ) {
+        let u = r.resources.utilization(&board.resources);
+        if u < outcome.utilization {
+            outcome.result = AnnealResult {
+                throughput: r.throughput,
+                ii: r.ii,
+                resources: r.resources,
+                mapping: r.mapping,
+                feasible: true,
+                iterations_run: outcome.result.iterations_run,
+                accepted: outcome.result.accepted,
+            };
             outcome.utilization = u;
         }
     }
@@ -494,6 +542,7 @@ mod tests {
             ),
             utilization: util,
             source: 0,
+            gap_pct: None,
         }
     }
 

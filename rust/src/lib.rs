@@ -79,7 +79,7 @@
 //! tracing the whole throughput/area Pareto frontier (`dse::pareto`,
 //! budget-scaling sweeps on the deterministic executor). The realized
 //! artifact persists a `coordinator::DesignFrontier` (baseline + EE
-//! fronts, schema v4), so `atheena pareto` reproduces the paper's
+//! fronts, schema v5), so `atheena pareto` reproduces the paper's
 //! "same throughput at 46% of the resources" comparison from a warm
 //! cache with zero anneal calls, and `atheena pack` greedily
 //! co-resides multiple realized designs on one board budget — the
@@ -129,6 +129,24 @@
 //! `sim::SharedArena`, keyed on timing content + DMA width, generation
 //! drift re-stamped) memoizes compiled-simulator lowerings across
 //! `Realized::measure`, frontier realization, and envelope sweeps.
+//!
+//! The DSE is also **certified** (DESIGN.md §13): `dse::exact` is a
+//! deterministic branch-and-bound over the per-node folding ladder —
+//! dominance-filtered candidates, admissible II/resource bounds,
+//! property-tested **bit-identical** to its unpruned
+//! `dse::exact_exhaustive` reference on small problems — exact under
+//! both objective arms, with an explicit `dse::ExactConfig` size
+//! budget (`TooLarge`, never unbounded search). `dse::exact_seeded`
+//! certifies a recorded design from a virtual incumbent (gap 0 is
+//! proved, not sampled), `dse::certify` wraps an anneal into a
+//! `dse::CertifiedGap`, and `Realized::certify_frontier` stamps a
+//! per-point optimality gap into the schema-v5 frontier with zero
+//! anneal calls — surfaced as `atheena pareto --certify [--max-gap]`
+//! ("%cert-opt" column) and gated in CI at a 5% max gap on the
+//! pinned-seed testnet. `tap::combine_multi_min_area` adds the dual
+//! Eq. 1 combination (min total resources at a throughput target,
+//! bit-identical to its brute-force reference) and polishes
+//! `min_area_design`'s refinement.
 //!
 //! Observability is per-sample, not just aggregate (DESIGN.md §9): the
 //! `trace` subsystem captures structured events (`SampleAdmitted`,

@@ -4,6 +4,7 @@
 //!   report   <fig9a|fig9b|fig8|fig7|pareto|table1..table4|tables|all>
 //!   toolflow --network NAME [--board zc706|vu440] [--emit FILE]
 //!   pareto   --network NAME [--board B] [--slack FRAC]
+//!            [--certify [--max-gap PCT]] [--testnet three_exit]
 //!   pack     --network NAME [--board B] [--budget FRAC]
 //!   profile  --network NAME [--samples N]
 //!   infer    --network NAME [--batch N] [--q FRAC]
@@ -138,6 +139,7 @@ fn usage() -> ! {
          \n  report   <fig9a|fig9b|fig8|fig7|pareto|table1..table4|tables|all> [--artifacts DIR] [--quick]\
          \n  toolflow --network NAME [--board zc706|vu440] [--emit FILE] [--quick]\
          \n  pareto   --network NAME [--board zc706|vu440] [--slack FRAC] [--quick]\
+         \n           [--certify [--max-gap PCT]] [--testnet three_exit]  (DESIGN.md §13)\
          \n  pack     --network NAME [--board zc706|vu440] [--budget FRAC] [--quick]\
          \n  profile  --network NAME [--samples N]\
          \n  infer    --network NAME [--batch N] [--q FRAC]\
@@ -191,16 +193,64 @@ fn resolve_realized(args: &Args) -> anyhow::Result<(Realized, bool, Board)> {
 
 /// `atheena pareto` — the throughput/area frontier of a realized
 /// design, rendered from the artifact's persisted frontier (Fig. 9/10's
-/// resource-matched table).
+/// resource-matched table). `--certify` runs the exact branch-and-bound
+/// oracle over every frontier point (DESIGN.md §13) and appends the
+/// "% of certified optimum" column; `--max-gap PCT` turns the run into
+/// a gate that fails when any certified gap exceeds the threshold (or
+/// when nothing could be certified). `--testnet three_exit` certifies
+/// the built-in pinned-seed testnet instead of a cached artifact — the
+/// artifact-free CI path.
 fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
     let slack: f64 = args.get_or("slack", "0.05").parse()?;
     anyhow::ensure!(
         (0.0..1.0).contains(&slack),
         "--slack must be a fraction in [0, 1)"
     );
-    let (realized, cached, board) = resolve_realized(args)?;
+    let (mut realized, cached, board) = if args.has("testnet") {
+        let which = args.get_or("testnet", "three_exit");
+        anyhow::ensure!(
+            which == "three_exit",
+            "unknown --testnet '{which}' (only 'three_exit' is built in)"
+        );
+        let net = atheena::ir::network::testnet::three_exit();
+        let board = args.board()?;
+        let mut opts = ToolflowOptions::quick(board.clone());
+        // Pinned anneal seed: same design as the committed goldens.
+        opts.sweep.anneal.seed = 0xA7EE_601D;
+        if let Some(b) = args.backend()? {
+            opts.sim.backend = b;
+        }
+        let realized = Toolflow::new(&net, &opts)?.sweep()?.combine()?.realize()?;
+        (realized, false, board)
+    } else {
+        resolve_realized(args)?
+    };
     if cached {
         println!("frontier loaded from the design cache (zero anneal calls)");
+    }
+    if args.has("certify") {
+        let summary =
+            realized.certify_frontier(&atheena::dse::ExactConfig::default());
+        println!(
+            "certified {} frontier points against the exact oracle ({} skipped: over the size budget)",
+            summary.certified, summary.skipped
+        );
+        println!(
+            "optimality gap: max {:.3}%, mean {:.3}%",
+            summary.max_gap_pct, summary.mean_gap_pct
+        );
+        if let Some(gate) = args.get("max-gap") {
+            let gate: f64 = gate.parse()?;
+            anyhow::ensure!(
+                summary.certified > 0,
+                "--max-gap: no frontier point could be certified"
+            );
+            anyhow::ensure!(
+                summary.max_gap_pct <= gate,
+                "certified optimality gap {:.3}% exceeds --max-gap {gate}%",
+                summary.max_gap_pct
+            );
+        }
     }
     print!(
         "{}",

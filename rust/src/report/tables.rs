@@ -32,7 +32,18 @@ fn pick3<T>(xs: &[T]) -> Vec<&T> {
 /// given throughput `slack` (0.05 = "within 5% of the baseline's
 /// best"). Pure function of the persisted [`DesignFrontier`] —
 /// golden-tested byte-for-byte in `tests/integration.rs`.
+///
+/// When any point carries a certified optimality gap (an
+/// `atheena pareto --certify` run, DESIGN.md §13) a "% of certified
+/// optimum" column is appended; uncertified frontiers render exactly as
+/// before, keeping the pre-certification goldens byte-identical.
 pub fn render_frontier(f: &DesignFrontier, board_name: &str, slack: f64) -> String {
+    let certified = f
+        .baseline
+        .points
+        .iter()
+        .chain(f.ee.points.iter())
+        .any(|p| p.gap_pct.is_some());
     let mut s = String::new();
     let _ = writeln!(
         s,
@@ -43,13 +54,17 @@ pub fn render_frontier(f: &DesignFrontier, board_name: &str, slack: f64) -> Stri
         ("ATHEENA early-exit", &f.ee),
     ] {
         let _ = writeln!(s, "-- {title} --");
-        let _ = writeln!(
+        let _ = write!(
             s,
             "{:>8} {:>10} {:>8} {:>8} {:>16}",
             "budget%", "LUT", "DSP", "area%", "thr(samples/s)"
         );
+        if certified {
+            let _ = write!(s, " {:>9}", "%cert-opt");
+        }
+        let _ = writeln!(s);
         for p in &front.points {
-            let _ = writeln!(
+            let _ = write!(
                 s,
                 "{:>8.0} {:>10} {:>8} {:>8.1} {:>16.0}",
                 p.budget_fraction * 100.0,
@@ -58,6 +73,17 @@ pub fn render_frontier(f: &DesignFrontier, board_name: &str, slack: f64) -> Stri
                 p.utilization * 100.0,
                 p.throughput
             );
+            if certified {
+                match p.gap_pct {
+                    Some(g) => {
+                        let _ = write!(s, " {:>9.2}", 100.0 - g);
+                    }
+                    None => {
+                        let _ = write!(s, " {:>9}", "-");
+                    }
+                }
+            }
+            let _ = writeln!(s);
         }
     }
     let keep = (1.0 - slack) * 100.0;

@@ -8,6 +8,6 @@ pub mod multi;
 pub use combine::{combine, CombinedDesign};
 pub use curve::{TapCurve, TapPoint};
 pub use multi::{
-    combine_multi, combine_multi_reference, combine_multi_with_bounds, MultiStageDesign,
-    SuffixBounds,
+    combine_multi, combine_multi_min_area, combine_multi_min_area_reference,
+    combine_multi_reference, combine_multi_with_bounds, MultiStageDesign, SuffixBounds,
 };

@@ -384,6 +384,213 @@ pub fn combine_multi_reference(
     run_search(curves, reach_probs, budget, None)
 }
 
+// ---------------------------------------------------------------------
+// Min-area Eq. 1 — the dual combination
+// ---------------------------------------------------------------------
+
+struct MinAreaSearch<'a> {
+    curves: &'a [TapCurve],
+    probs: &'a [f64],
+    budget: ResourceVec,
+    target: f64,
+    /// Dual bound table: `dual_min[s]` is the componentwise-minimum
+    /// resource vector over each suffix stage's *target-eligible*
+    /// points (those with `thr / r_i >= target`), summed over stages
+    /// `s..N` (`ZERO` at `N`). Every qualifying completion must pick an
+    /// eligible point per stage, so `used + dual_min[s]` is an
+    /// admissible floor on any qualifying leaf's total — tighter than
+    /// [`SuffixBounds::min_res`], which also counts points the target
+    /// rules out.
+    dual_min: &'a [ResourceVec],
+    /// Incumbent: (area norm, min effective throughput, chosen points).
+    best: Option<(f64, f64, Vec<TapPoint>)>,
+}
+
+impl MinAreaSearch<'_> {
+    fn recurse(
+        &mut self,
+        stage: usize,
+        used: ResourceVec,
+        running_min: f64,
+        picked: &mut Vec<TapPoint>,
+    ) {
+        if stage == self.curves.len() {
+            let util = used.max_utilisation(&self.budget);
+            // Strict improvement, first-wins: the first minimal-area
+            // qualifying leaf in enumeration order is the answer in
+            // both this search and the brute-force reference.
+            if self.best.as_ref().map(|(b, _, _)| util < *b).unwrap_or(true) {
+                self.best = Some((util, running_min, picked.clone()));
+            }
+            return;
+        }
+        for pt in &self.curves[stage].points {
+            let eff = pt.throughput / self.probs[stage];
+            if eff < self.target {
+                // Ineligible: Eq. 1's min over stages can never be
+                // compensated by the others.
+                continue;
+            }
+            let total = used + pt.resources;
+            let floor = total.saturating_add(&self.dual_min[stage + 1]);
+            if !floor.fits_in(&self.budget) {
+                continue;
+            }
+            if let Some((b, _, _)) = &self.best {
+                // The floor's area norm lower-bounds every qualifying
+                // completion; only strictly smaller leaves replace.
+                if floor.max_utilisation(&self.budget) >= *b {
+                    continue;
+                }
+            }
+            picked.push(*pt);
+            self.recurse(stage + 1, total, running_min.min(eff), picked);
+            picked.pop();
+        }
+    }
+}
+
+/// The **dual** of Eq. 1: minimize the total-resource area norm
+/// (`ResourceVec::max_utilisation` against `budget`) subject to the
+/// combined effective throughput `min_i f_i(x_i) / r_i` meeting
+/// `target` and the total fitting `budget`. This is what a
+/// resource-matched point actually asks for — "reach the baseline's
+/// throughput with the least area" — rather than the primal "go as
+/// fast as possible within this ladder rung".
+///
+/// Reuses [`SuffixBounds`] for the feasibility early-out (if even the
+/// fully-unrolled suffix cannot reach `target`, no design exists) and
+/// prunes with a dual bound table over target-eligible points. The
+/// tie-break is strict-improvement first-wins in the same enumeration
+/// order as [`combine_multi_min_area_reference`], so the two are
+/// bit-identical (property-tested in `tests/exact_props.rs`).
+pub fn combine_multi_min_area(
+    curves: &[TapCurve],
+    reach_probs: &[f64],
+    target: f64,
+    budget: &ResourceVec,
+) -> Option<MultiStageDesign> {
+    check_min_area_inputs(curves, reach_probs);
+    let bounds = SuffixBounds::new(curves, reach_probs);
+    if bounds.eff[0] < target {
+        // Some stage cannot reach the target even fully unrolled.
+        return None;
+    }
+    let n = curves.len();
+    let mut dual_min = vec![ResourceVec::ZERO; n + 1];
+    for s in (0..n).rev() {
+        let mut floor: Option<ResourceVec> = None;
+        for p in &curves[s].points {
+            if p.throughput / reach_probs[s] < target {
+                continue;
+            }
+            floor = Some(match floor {
+                None => p.resources,
+                Some(m) => ResourceVec::new(
+                    m.lut.min(p.resources.lut),
+                    m.ff.min(p.resources.ff),
+                    m.dsp.min(p.resources.dsp),
+                    m.bram.min(p.resources.bram),
+                ),
+            });
+        }
+        // eff[0] >= target guarantees every stage has an eligible point.
+        dual_min[s] = floor.expect("suffix eff bound admitted an empty stage") + dual_min[s + 1];
+    }
+    let mut search = MinAreaSearch {
+        curves,
+        probs: reach_probs,
+        budget: *budget,
+        target,
+        dual_min: &dual_min,
+        best: None,
+    };
+    search.recurse(0, ResourceVec::ZERO, f64::INFINITY, &mut Vec::new());
+    search.best.map(|(_, thr, stages)| MultiStageDesign {
+        stages,
+        reach_probs: reach_probs.to_vec(),
+        throughput_at_design: thr,
+    })
+}
+
+/// Brute-force reference for [`combine_multi_min_area`]: enumerate
+/// every point combination in the same order, check everything at the
+/// leaf (budget fit, target met), keep the first strictly-smaller area
+/// norm. No eligibility skip, no bound tables — the oracle the pruned
+/// search is differentially tested against.
+pub fn combine_multi_min_area_reference(
+    curves: &[TapCurve],
+    reach_probs: &[f64],
+    target: f64,
+    budget: &ResourceVec,
+) -> Option<MultiStageDesign> {
+    check_min_area_inputs(curves, reach_probs);
+    fn descend(
+        curves: &[TapCurve],
+        probs: &[f64],
+        budget: &ResourceVec,
+        target: f64,
+        stage: usize,
+        used: ResourceVec,
+        running_min: f64,
+        picked: &mut Vec<TapPoint>,
+        best: &mut Option<(f64, f64, Vec<TapPoint>)>,
+    ) {
+        if stage == curves.len() {
+            if !used.fits_in(budget) || running_min < target {
+                return;
+            }
+            let util = used.max_utilisation(budget);
+            if best.as_ref().map(|(b, _, _)| util < *b).unwrap_or(true) {
+                *best = Some((util, running_min, picked.clone()));
+            }
+            return;
+        }
+        for pt in &curves[stage].points {
+            picked.push(*pt);
+            descend(
+                curves,
+                probs,
+                budget,
+                target,
+                stage + 1,
+                used + pt.resources,
+                running_min.min(pt.throughput / probs[stage]),
+                picked,
+                best,
+            );
+            picked.pop();
+        }
+    }
+    let mut best = None;
+    descend(
+        curves,
+        reach_probs,
+        budget,
+        target,
+        0,
+        ResourceVec::ZERO,
+        f64::INFINITY,
+        &mut Vec::new(),
+        &mut best,
+    );
+    best.map(|(_, thr, stages)| MultiStageDesign {
+        stages,
+        reach_probs: reach_probs.to_vec(),
+        throughput_at_design: thr,
+    })
+}
+
+fn check_min_area_inputs(curves: &[TapCurve], reach_probs: &[f64]) {
+    assert_eq!(curves.len(), reach_probs.len());
+    assert!(!curves.is_empty());
+    assert!(
+        reach_probs.windows(2).all(|w| w[0] >= w[1]) && reach_probs[0] <= 1.0,
+        "reach probabilities must be non-increasing"
+    );
+    assert!(reach_probs.iter().all(|&p| p > 0.0));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -572,6 +779,82 @@ mod tests {
             &[c.clone(), c],
             &[0.5, 0.9],
             &ResourceVec::new(100, 100, 100, 10),
+        );
+    }
+
+    #[test]
+    fn min_area_meets_target_with_least_area() {
+        let mk = || {
+            curve(vec![
+                pt(50.0, 80),
+                pt(100.0, 160),
+                pt(200.0, 320),
+                pt(400.0, 640),
+            ])
+        };
+        let curves = [mk(), mk(), mk()];
+        let probs = [1.0, 0.3, 0.1];
+        let budget = ResourceVec::new(100_000, 150_000, 900, 1_000);
+        let primal = combine_multi(&curves, &probs, &budget).unwrap();
+        // Asking for the primal optimum's throughput must be feasible
+        // and never cost more area than the primal design paid.
+        let dual =
+            combine_multi_min_area(&curves, &probs, primal.throughput_at_design, &budget)
+                .unwrap();
+        assert!(dual.throughput_at_design >= primal.throughput_at_design);
+        assert!(
+            dual.total_resources().max_utilisation(&budget)
+                <= primal.total_resources().max_utilisation(&budget) + 1e-12
+        );
+        assert!(dual.total_resources().fits_in(&budget));
+        // A modest target sheds area vs the primal design.
+        let cheap = combine_multi_min_area(&curves, &probs, 50.0, &budget).unwrap();
+        assert!(cheap.throughput_at_design >= 50.0);
+        assert!(
+            cheap.total_resources().max_utilisation(&budget)
+                < primal.total_resources().max_utilisation(&budget)
+        );
+    }
+
+    #[test]
+    fn min_area_matches_reference_across_targets() {
+        let mk = |scale: u64| {
+            curve(vec![
+                pt(40.0, 60 * scale),
+                pt(90.0, 150 * scale),
+                pt(210.0, 310 * scale),
+            ])
+        };
+        let curves = [mk(1), mk(2), mk(1)];
+        let probs = [1.0, 0.4, 0.15];
+        let budget = ResourceVec::new(100_000, 150_000, 900, 1_000);
+        for target in [10.0, 40.0, 90.0, 200.0, 500.0, 5_000.0] {
+            let fast = combine_multi_min_area(&curves, &probs, target, &budget);
+            let oracle = combine_multi_min_area_reference(&curves, &probs, target, &budget);
+            match (&fast, &oracle) {
+                (None, None) => {}
+                (Some(a), Some(b)) => {
+                    assert_eq!(
+                        a.throughput_at_design.to_bits(),
+                        b.throughput_at_design.to_bits()
+                    );
+                    for (x, y) in a.stages.iter().zip(&b.stages) {
+                        assert_eq!(x.resources, y.resources);
+                        assert_eq!(x.throughput.to_bits(), y.throughput.to_bits());
+                    }
+                }
+                _ => panic!("pruned/reference feasibility disagreed at target {target}"),
+            }
+        }
+    }
+
+    #[test]
+    fn min_area_unreachable_target_is_none() {
+        let c = curve(vec![pt(100.0, 100)]);
+        let budget = ResourceVec::new(100_000, 150_000, 900, 1_000);
+        // Stage 1's best effective throughput is 100/0.5 = 200.
+        assert!(
+            combine_multi_min_area(&[c.clone(), c], &[1.0, 0.5], 201.0, &budget).is_none()
         );
     }
 }

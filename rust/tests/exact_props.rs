@@ -1,0 +1,261 @@
+//! Property tests over the certified-optimization layer (DESIGN.md
+//! §13): the exact branch-and-bound oracle (`dse::exact`), the seeded
+//! certification path, and the min-area Eq. 1 combination. Invariants
+//! pinned here:
+//!
+//! * the pruned branch-and-bound is **bit-identical** to the unpruned
+//!   exhaustive enumeration on random ≤4-node problems, under both
+//!   objective arms, and never visits more states,
+//! * the annealer can never beat the certified optimum — every
+//!   certified gap is `>= 0`,
+//! * `tap::combine_multi_min_area` matches its brute-force reference
+//!   bitwise on random ≤4-stage curve sets (selection, per-stage picks,
+//!   and feasibility verdicts all agree),
+//! * `MinAreaAtThroughput` certification meets its target with no more
+//!   area than the max-throughput optimum at the same budget,
+//! * `Problem::clip_into_budget` always lands inside the budget when
+//!   the minimal mapping fits, is a fixed point on its own output, and
+//!   returns already-feasible mappings untouched.
+
+use atheena::dse::{
+    certify, exact, exact_exhaustive, AnnealConfig, ExactConfig, ExactOutcome, Objective,
+    Problem,
+};
+use atheena::ir::network::testnet;
+use atheena::ir::Cdfg;
+use atheena::resources::{Board, ResourceVec};
+use atheena::sdf::Folding;
+use atheena::tap::{
+    combine_multi_min_area, combine_multi_min_area_reference, TapCurve, TapPoint,
+};
+use atheena::util::proptest::{check, gen_range, prop_assert};
+use atheena::util::Rng;
+
+/// Truncated baseline problem — the same shape the in-module unit
+/// tests use, sized so both searches finish instantly.
+fn tiny_problem(n_active: usize, frac: f64) -> Problem {
+    let net = testnet::blenet_like();
+    let board = Board::zc706();
+    let mut p = Problem::baseline(
+        Cdfg::lower_baseline(&net),
+        board.budget(frac),
+        board.clock_hz,
+    );
+    p.active.truncate(n_active);
+    p
+}
+
+#[test]
+fn prop_branch_and_bound_bit_identical_to_exhaustive() {
+    let net = testnet::blenet_like();
+    let board = Board::zc706();
+    let base_cdfg = Cdfg::lower_baseline(&net);
+    let ee_cdfg = Cdfg::lower(&net, 1);
+    // A modest leaf cap keeps every exhaustive enumeration fast; cases
+    // beyond it report TooLarge from *both* searches (the cap is
+    // checked before either descends) and are skipped.
+    let cfg = ExactConfig {
+        max_leaves: 20_000,
+        ..ExactConfig::default()
+    };
+    check(60, |r| {
+        let budget = board.budget(0.2 + 0.8 * r.f64());
+        let mut p = match r.below(3) {
+            0 => Problem::baseline(base_cdfg.clone(), budget, board.clock_hz),
+            1 => Problem::stage(0, ee_cdfg.clone(), budget, board.clock_hz),
+            _ => Problem::stage(1, ee_cdfg.clone(), budget, board.clock_hz),
+        };
+        // Random ≤4-node window of the problem's active set.
+        let k = gen_range(r, 1, 4).min(p.active.len());
+        let start = r.below(p.active.len() - k + 1);
+        p.active = p.active[start..start + k].to_vec();
+        if r.chance(0.5) {
+            // Target around the minimal mapping's rate: sometimes met,
+            // sometimes infeasible — both verdicts must agree.
+            let base_thr = p.throughput(&p.mapping);
+            p.objective = Objective::MinAreaAtThroughput(base_thr * (0.5 + 2.0 * r.f64()));
+        }
+        match (exact(&p, &cfg), exact_exhaustive(&p, &cfg)) {
+            (ExactOutcome::TooLarge, ExactOutcome::TooLarge) => Ok(()),
+            (ExactOutcome::Infeasible, ExactOutcome::Infeasible) => Ok(()),
+            (ExactOutcome::Optimal(a), ExactOutcome::Optimal(b)) => {
+                prop_assert(a.ii == b.ii, "II mismatch vs exhaustive")?;
+                prop_assert(a.resources == b.resources, "resource mismatch vs exhaustive")?;
+                prop_assert(
+                    a.mapping.foldings == b.mapping.foldings,
+                    "folding mismatch vs exhaustive",
+                )?;
+                prop_assert(
+                    a.throughput.to_bits() == b.throughput.to_bits(),
+                    "throughput bits mismatch vs exhaustive",
+                )?;
+                prop_assert(
+                    a.utilization.to_bits() == b.utilization.to_bits(),
+                    "utilization bits mismatch vs exhaustive",
+                )?;
+                prop_assert(a.visits <= b.visits, "pruning added work")
+            }
+            _ => Err("pruned and exhaustive searches disagree on the outcome".to_string()),
+        }
+    });
+}
+
+#[test]
+fn annealer_never_beats_certified_optimum() {
+    let ecfg = ExactConfig::default();
+    let mut acfg = AnnealConfig::quick();
+    acfg.iterations = 400;
+    acfg.restarts = 1;
+    for (i, (n_active, frac)) in [(2usize, 0.4), (3, 0.6), (3, 0.9)].into_iter().enumerate() {
+        acfg.seed = 0xA7EE_6E00 + i as u64;
+        let p = tiny_problem(n_active, frac);
+        let g = certify(&p, &acfg, &ecfg).expect("tiny problem must certify");
+        assert!(g.gap_pct >= 0.0, "negative gap: the oracle lost to the annealer");
+        assert!(g.anneal.ii >= g.exact.ii, "annealer beat the certified optimum II");
+        assert!(g.exact.resources.fits_in(&p.budget));
+        assert!(g.exact.throughput >= g.anneal.throughput);
+    }
+}
+
+#[test]
+fn min_area_certification_meets_target_with_no_more_area_than_max_throughput() {
+    let ecfg = ExactConfig::default();
+    let base = tiny_problem(3, 0.6);
+    let ExactOutcome::Optimal(best) = exact(&base, &ecfg) else {
+        panic!("tiny problem must be solvable");
+    };
+    let target = best.throughput * 0.5;
+    let p = base.clone().with_objective(Objective::MinAreaAtThroughput(target));
+    let ExactOutcome::Optimal(r) = exact(&p, &ecfg) else {
+        panic!("a target below the certified maximum must be feasible");
+    };
+    assert!(r.throughput >= target, "min-area optimum misses its target");
+    assert!(r.resources.fits_in(&p.budget));
+    // The max-throughput optimum also meets the target, so the cheapest
+    // qualifying design can never cost more.
+    assert!(
+        r.utilization <= best.resources.max_utilisation(&p.budget),
+        "min-area optimum costs more than the max-throughput design"
+    );
+    // Certify an anneal under the same objective: gap >= 0, and the
+    // oracle's pick still meets the target.
+    let mut acfg = AnnealConfig::quick();
+    acfg.seed = 0xA7EE_6E10;
+    let g = certify(&p, &acfg, &ecfg).expect("min-area certification must complete");
+    assert!(g.gap_pct >= 0.0);
+    assert!(g.exact.throughput >= target);
+    assert!(
+        g.exact.utilization
+            <= g.anneal.resources.max_utilisation(&p.budget) + 1e-12,
+        "annealer found less area than the certified min-area optimum"
+    );
+}
+
+fn random_curve(r: &mut Rng, stage: usize) -> TapCurve {
+    let n = gen_range(r, 1, 5);
+    let pts = (0..n)
+        .map(|i| {
+            let scale = 1 + r.below(60) as u64;
+            TapPoint {
+                resources: ResourceVec::new(scale * 700, scale * 1400, scale * 3, scale * 4),
+                throughput: 50.0 + 5_000.0 * r.f64(),
+                ii: 1 + r.below(1_000) as u64,
+                budget_fraction: 0.1 * (stage + 1) as f64,
+                source: i,
+            }
+        })
+        .collect();
+    TapCurve::from_points(pts)
+}
+
+#[test]
+fn prop_min_area_combination_matches_brute_force() {
+    let board = Board::zc706();
+    check(150, |r| {
+        let n = gen_range(r, 1, 4);
+        let curves: Vec<TapCurve> = (0..n).map(|s| random_curve(r, s)).collect();
+        let mut probs = Vec::with_capacity(n);
+        let mut prev = 1.0;
+        for _ in 0..n {
+            probs.push(prev);
+            prev *= 0.1 + 0.9 * r.f64();
+        }
+        let budget = board.budget(0.05 + 0.95 * r.f64());
+        let target = 10.0 + 5_000.0 * r.f64();
+        let got = combine_multi_min_area(&curves, &probs, target, &budget);
+        let want = combine_multi_min_area_reference(&curves, &probs, target, &budget);
+        match (&got, &want) {
+            (None, None) => Ok(()),
+            (Some(a), Some(b)) => {
+                prop_assert(
+                    a.throughput_at_design.to_bits() == b.throughput_at_design.to_bits(),
+                    "combined throughput bits mismatch vs brute force",
+                )?;
+                prop_assert(a.stages.len() == b.stages.len(), "stage count mismatch")?;
+                for (x, y) in a.stages.iter().zip(&b.stages) {
+                    prop_assert(x.source == y.source, "stage pick mismatch vs brute force")?;
+                    prop_assert(x.ii == y.ii, "stage II mismatch vs brute force")?;
+                    prop_assert(x.resources == y.resources, "stage resource mismatch")?;
+                    prop_assert(
+                        x.throughput.to_bits() == y.throughput.to_bits(),
+                        "stage throughput bits mismatch",
+                    )?;
+                }
+                // The selection both agree on actually qualifies.
+                let mut total = ResourceVec::ZERO;
+                for pt in &a.stages {
+                    total += pt.resources;
+                }
+                prop_assert(total.fits_in(&budget), "min-area pick overflows the budget")?;
+                prop_assert(
+                    a.throughput_at_design >= target,
+                    "min-area pick misses its target",
+                )
+            }
+            _ => Err("min-area dual disagrees with brute force on feasibility".to_string()),
+        }
+    });
+}
+
+#[test]
+fn prop_clip_into_budget_fits_and_is_fixed_point() {
+    let net = testnet::blenet_like();
+    let board = Board::zc706();
+    let base_cdfg = Cdfg::lower_baseline(&net);
+    check(120, |r| {
+        let p = Problem::baseline(
+            base_cdfg.clone(),
+            board.budget(0.1 + 0.9 * r.f64()),
+            board.clock_hz,
+        );
+        // A random (typically oversized) mapping across the full spaces.
+        let mut fat = p.mapping.clone();
+        for id in 0..fat.foldings.len() {
+            let s = fat.spaces[id].clone();
+            fat.foldings[id] = Folding {
+                coarse_in: s.coarse_in[r.below(s.coarse_in.len())],
+                coarse_out: s.coarse_out[r.below(s.coarse_out.len())],
+                fine: s.fine[r.below(s.fine.len())],
+            };
+        }
+        let clipped = p.clip_into_budget(&fat);
+        if p.resources(&p.mapping).fits_in(&p.budget) {
+            prop_assert(
+                p.resources(&clipped).fits_in(&p.budget),
+                "clip overflows a budget the minimal mapping fits",
+            )?;
+        }
+        let again = p.clip_into_budget(&clipped);
+        prop_assert(
+            again.foldings == clipped.foldings,
+            "clip is not a fixed point on its own output",
+        )?;
+        if p.resources(&fat).fits_in(&p.budget) {
+            prop_assert(
+                clipped.foldings == fat.foldings,
+                "an already-feasible mapping must be returned untouched",
+            )?;
+        }
+        Ok(())
+    });
+}

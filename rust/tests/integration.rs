@@ -238,6 +238,7 @@ mod goldens {
             resources: res,
             utilization: util,
             source,
+            gap_pct: None,
         }
     }
 
@@ -281,6 +282,32 @@ mod goldens {
         assert!(table.contains("resource-matched:"));
         assert!(table.contains("39% of the baseline's area"));
         assert_golden("frontier_table.txt", &table);
+    }
+
+    #[test]
+    fn golden_certified_frontier_table() {
+        // The certified variant of the same fixture: exact gap values
+        // hand-planted on every point, so the `%cert-opt` column and
+        // its formatting are pinned byte-for-byte. One point is left
+        // uncertified to pin the `-` placeholder too.
+        let mut f = synthetic_frontier();
+        let gaps = [Some(0.0), Some(2.5), Some(12.75), None];
+        for (p, g) in f
+            .baseline
+            .points
+            .iter_mut()
+            .chain(f.ee.points.iter_mut())
+            .zip(gaps)
+        {
+            p.gap_pct = g;
+        }
+        let table = render_frontier(&f, "zc706", 0.05);
+        assert!(table.contains("%cert-opt"));
+        assert!(table.contains("100.00"), "a zero gap renders as 100%");
+        // The uncertified variant must not grow the column at all.
+        assert!(!render_frontier(&synthetic_frontier(), "zc706", 0.05)
+            .contains("%cert-opt"));
+        assert_golden("frontier_table_certified.txt", &table);
     }
 
     #[test]

@@ -16,8 +16,11 @@
 //! * `pack()` never exceeds the board budget and is deterministic — the
 //!   same picks whether computed directly or on executor workers, at
 //!   any worker count,
-//! * the schema-v4 frontier artifact survives the design cache
-//!   byte-for-byte and is served warm with **zero** anneal calls.
+//! * the persisted frontier artifact survives the design cache
+//!   byte-for-byte and is served warm with **zero** anneal calls,
+//! * `FrontierPoint` serialization round-trips bit-exactly, omitting
+//!   the schema-v5 `gap_pct` field when uncertified so v4-shaped
+//!   bodies stay byte-identical.
 
 use atheena::coordinator::pipeline::{pack_designs, Realized, Toolflow};
 use atheena::coordinator::toolflow::ToolflowOptions;
@@ -65,6 +68,7 @@ fn random_frontier_point(r: &mut Rng) -> FrontierPoint {
         ),
         utilization: util,
         source: r.below(64),
+        gap_pct: if r.chance(0.5) { Some(25.0 * r.f64()) } else { None },
     }
 }
 
@@ -115,6 +119,35 @@ fn prop_frontier_non_dominated_and_monotone_both_axes() {
         prop_assert(
             got.map(|p| p.utilization.to_bits()) == want.map(|p| p.utilization.to_bits()),
             "min_area_at disagrees with brute force",
+        )
+    });
+}
+
+#[test]
+fn prop_frontier_point_json_roundtrip_omits_gap_until_certified() {
+    // Schema-v5 contract: `gap_pct` is serialized only when present, so
+    // uncertified points keep their v4 byte layout, and a certified gap
+    // survives parse -> rebuild bit-exactly.
+    check(200, |r| {
+        let p = random_frontier_point(r);
+        let text = p.to_json().to_string_pretty();
+        prop_assert(
+            text.contains("gap_pct") == p.gap_pct.is_some(),
+            "gap_pct must appear in the JSON exactly when certified",
+        )?;
+        let parsed = atheena::util::json::parse(&text).map_err(|e| e.to_string())?;
+        let back = FrontierPoint::from_json(&parsed).map_err(|e| e.to_string())?;
+        prop_assert(
+            back.gap_pct.map(f64::to_bits) == p.gap_pct.map(f64::to_bits),
+            "gap_pct did not round-trip bit-exactly",
+        )?;
+        prop_assert(
+            back.throughput.to_bits() == p.throughput.to_bits()
+                && back.utilization.to_bits() == p.utilization.to_bits()
+                && back.resources == p.resources
+                && back.ii == p.ii
+                && back.source == p.source,
+            "frontier point did not round-trip",
         )
     });
 }

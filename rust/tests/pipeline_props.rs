@@ -23,6 +23,10 @@
 //!   the warm-store contract behind `atheena infer`/`serve`/`report`,
 //! * a cached artifact with a stale schema version is evicted and
 //!   triggers a clean re-realize, never a hard error,
+//! * frontier certification (`Realized::certify_frontier`) performs
+//!   **zero** anneal calls, leaves uncertified points' gap fields
+//!   `None` (so v4-shaped bodies round-trip byte-identically), and
+//!   persisted gaps survive the design cache bit-for-bit,
 //! * the closed-loop simulator with the `Fixed` policy is
 //!   **bit-identical** to replaying the scalar thresholds by hand
 //!   (the pre-refactor decision path), for random seeds and reach
@@ -45,7 +49,8 @@ use atheena::coordinator::pipeline::{
 };
 use atheena::coordinator::toolflow::{synthetic_hard_flags, ToolflowOptions};
 use atheena::dse::{
-    anneal, anneal_call_count, anneal_sequential, AnnealConfig, Problem, ProblemKind,
+    anneal, anneal_call_count, anneal_sequential, AnnealConfig, ExactConfig, Problem,
+    ProblemKind,
 };
 use atheena::ee::decision::{Controller, Fixed};
 use atheena::ir::network::testnet;
@@ -418,6 +423,93 @@ fn realized_design_roundtrips_through_store() {
 
         let _ = std::fs::remove_dir_all(dir);
     }
+}
+
+#[test]
+fn certify_frontier_is_anneal_free_and_gaps_round_trip() {
+    let _guard = dse_guard();
+    let net = testnet::blenet_like();
+    let opts = tiny_opts(0xA7EE_0C01);
+    let mut realized = Toolflow::new(&net, &opts)
+        .unwrap()
+        .sweep()
+        .unwrap()
+        .combine()
+        .unwrap()
+        .realize()
+        .unwrap();
+
+    // Uncertified artifacts carry no gap field at all — the schema-v5
+    // body is byte-identical to its v4 shape until `--certify` runs.
+    let n_points =
+        realized.frontier.baseline.points.len() + realized.frontier.ee.points.len();
+    assert!(n_points > 0);
+    assert!(realized
+        .frontier
+        .baseline
+        .points
+        .iter()
+        .chain(realized.frontier.ee.points.iter())
+        .all(|p| p.gap_pct.is_none()));
+    assert!(!realized.to_json().to_string_pretty().contains("gap_pct"));
+
+    // Certification consults only the exact oracle: zero anneal calls,
+    // every point either certified (gap >= 0) or skipped (gap stays
+    // None), and the summary accounts for all of them. A tightened
+    // size budget keeps oversized points on the fast TooLarge path.
+    let ecfg = ExactConfig {
+        max_visits: 400_000,
+        ..ExactConfig::default()
+    };
+    let before = anneal_call_count();
+    let summary = realized.certify_frontier(&ecfg);
+    assert_eq!(
+        anneal_call_count(),
+        before,
+        "certification must never re-run the annealer"
+    );
+    assert_eq!(summary.certified + summary.skipped, n_points);
+    let gaps: Vec<f64> = realized
+        .frontier
+        .baseline
+        .points
+        .iter()
+        .chain(realized.frontier.ee.points.iter())
+        .filter_map(|p| p.gap_pct)
+        .collect();
+    assert_eq!(gaps.len(), summary.certified);
+    assert!(gaps.iter().all(|&g| g >= 0.0), "negative certified gap");
+    if !gaps.is_empty() {
+        let max = gaps.iter().copied().fold(0.0, f64::max);
+        assert_eq!(max.to_bits(), summary.max_gap_pct.to_bits());
+    }
+
+    // Persisted gaps survive the design cache bit-for-bit — including a
+    // hand-planted one, so the round-trip is exercised even when every
+    // point of this tiny run lands on the skip path.
+    realized.frontier.baseline.points[0].gap_pct = Some(1.25);
+    assert!(realized.to_json().to_string_pretty().contains("gap_pct"));
+    let (cache, dir) = temp_cache("certify-roundtrip");
+    realized.save(&cache).unwrap();
+    let loaded = Realized::load(&cache, &net, &opts)
+        .unwrap()
+        .expect("artifact just saved must load");
+    assert_eq!(realized.to_json(), loaded.to_json());
+    for (a, b) in realized
+        .frontier
+        .baseline
+        .points
+        .iter()
+        .chain(realized.frontier.ee.points.iter())
+        .zip(loaded.frontier.baseline.points.iter().chain(loaded.frontier.ee.points.iter()))
+    {
+        assert_eq!(
+            a.gap_pct.map(f64::to_bits),
+            b.gap_pct.map(f64::to_bits),
+            "gap field did not survive the cache"
+        );
+    }
+    let _ = std::fs::remove_dir_all(dir);
 }
 
 /// Three-section reference timing for the closed-loop properties
